@@ -1,0 +1,122 @@
+//! Attack-and-defend demo (Fig. 9 / Fig. 10 in miniature): run the DLG
+//! gradient-inversion attack against a client update with and without
+//! Selective Parameter Encryption, and the token-recovery attack against the
+//! transformer, printing the recovery quality under each defense.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example attack_defense
+//! ```
+
+use fedml_he::attacks::dlg::{run_dlg, DlgConfig};
+use fedml_he::attacks::nlp::{recover_tokens, score_recovery};
+use fedml_he::crypto::prng::ChaChaRng;
+use fedml_he::fl::data::{synthetic_images, synthetic_tokens};
+use fedml_he::he_agg::EncryptionMask;
+use fedml_he::runtime::executor::{Arg, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))?;
+
+    // ---------------- DLG on LeNet ----------------
+    println!("== DLG gradient inversion on LeNet ==");
+    let params = rt.manifest.load_init_params("lenet")?;
+    let d = synthetic_images(0, 8, (1, 28, 28), 10, 0.9, 7);
+    let (x1, y1) = d.batch(0, 1);
+    let b = rt.manifest.train_batch;
+    let (mut xb, mut yb) = (Vec::new(), Vec::new());
+    for _ in 0..b {
+        xb.extend_from_slice(&x1);
+        yb.extend_from_slice(&y1);
+    }
+    let grad = rt.execute(
+        "lenet_grad",
+        &[
+            Arg::F32(&params, vec![params.len() as i64]),
+            Arg::F32(&xb, vec![b as i64, 1, 28, 28]),
+            Arg::I32(&yb, vec![b as i64]),
+        ],
+    )?[0]
+        .to_vec::<f32>()?;
+    let k = rt.manifest.sens_batch;
+    let (sx, sy) = d.batch(0, k);
+    let sens = rt.execute(
+        "lenet_sens",
+        &[
+            Arg::F32(&params, vec![params.len() as i64]),
+            Arg::F32(&sx, vec![k as i64, 1, 28, 28]),
+            Arg::I32(&sy, vec![k as i64]),
+        ],
+    )?[0]
+        .to_vec::<f32>()?;
+
+    let cfg = DlgConfig::default();
+    for (name, mask) in [
+        ("no protection", EncryptionMask::empty(params.len())),
+        ("top-10% selective", EncryptionMask::top_p(&sens, 0.1)),
+    ] {
+        let mut rng = ChaChaRng::from_seed(1, 0);
+        let out = run_dlg(&rt, "lenet", &params, &x1, &grad, &mask, &cfg, &mut rng)?;
+        println!(
+            "  {name:<18}: recovered-image MSE {:.4}  PSNR {:.2} dB  SSIM {:.4}",
+            out.similarity.mse, out.similarity.psnr, out.similarity.ssim
+        );
+    }
+
+    // ---------------- Token recovery on tinybert ----------------
+    println!("\n== Embedding-gradient token recovery on tinybert ==");
+    let meta = rt.manifest.models["tinybert"].clone();
+    let params = rt.manifest.load_init_params("tinybert")?;
+    let data = synthetic_tokens(0, 64, meta.seq_len.unwrap(), meta.vocab.unwrap(), 3);
+    // single-sentence victim batch (replicated to the fixed artifact batch)
+    let (x1, y1) = data.batch(0, 1);
+    let (mut x, mut y) = (Vec::new(), Vec::new());
+    for _ in 0..b {
+        x.extend_from_slice(&x1);
+        y.extend_from_slice(&y1);
+    }
+    let grad = rt.execute(
+        "tinybert_grad",
+        &[
+            Arg::F32(&params, vec![params.len() as i64]),
+            Arg::I32(&x, vec![b as i64, meta.seq_len.unwrap() as i64]),
+            Arg::I32(&y, vec![b as i64, meta.seq_len.unwrap() as i64]),
+        ],
+    )?[0]
+        .to_vec::<f32>()?;
+    let (sx, sy) = data.batch(0, k);
+    let sens = rt.execute(
+        "tinybert_sens",
+        &[
+            Arg::F32(&params, vec![params.len() as i64]),
+            Arg::I32(&sx, vec![k as i64, meta.seq_len.unwrap() as i64]),
+            Arg::I32(&sy, vec![k as i64, meta.seq_len.unwrap() as i64]),
+        ],
+    )?[0]
+        .to_vec::<f32>()?;
+
+    // Empirical Selection Recipe (§4.2.2): top-30% sensitive + the first
+    // (embedding) and last (LM head) layers.
+    let vocab = meta.vocab.unwrap();
+    let d_model = 32usize;
+    let embed = 0..vocab * d_model;
+    let head = params.len() - (d_model * vocab + vocab)..params.len();
+    for (name, mask) in [
+        ("no protection".to_string(), EncryptionMask::empty(params.len())),
+        ("top-30% selective".to_string(), EncryptionMask::top_p(&sens, 0.3)),
+        (
+            "recipe: top-30% + first/last layers".to_string(),
+            EncryptionMask::recipe(&sens, 0.3, embed, head),
+        ),
+    ] {
+        let rec = recover_tokens(&grad, &mask, vocab, d_model, 1e-4);
+        let s = score_recovery(&rec, &x1);
+        println!(
+            "  {name:<18}: token recall {:.1}%  ({} false positives)",
+            100.0 * s.recall,
+            s.false_positives
+        );
+    }
+    println!("\nSelective Parameter Encryption collapses both attacks while encrypting a");
+    println!("fraction of the update — the paper's §4.2.2 result.");
+    Ok(())
+}

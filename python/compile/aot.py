@@ -1,0 +1,134 @@
+"""AOT pipeline: lower every L2 graph to HLO text + write the manifest.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(behind the rust `xla` crate) rejects; the text parser reassigns ids.
+See /opt/xla-example/README.md.
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--models lenet,mlp,...]
+Outputs:
+  artifacts/<name>.hlo.txt      one module per graph
+  artifacts/manifest.json       graph -> file, arg shapes/dtypes, metadata
+  artifacts/crypto_params.json  the CKKS context (cross-checked by Rust)
+  artifacts/init/<model>.f32    deterministic initial flat parameters
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import crypto, model, models
+
+# Fleet-wide static shapes for the aggregation artifacts.
+AGG_CLIENTS = 8
+AGG_CHUNK = 8
+PLAIN_BLOCK = 65536
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _arg_spec(args):
+    out = []
+    for a in args:
+        out.append({"shape": list(a.shape), "dtype": str(np.dtype(a.dtype))})
+    return out
+
+
+def lower_graph(name, fn, example_args, out_dir, manifest, extra=None):
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    entry = {"file": f"{name}.hlo.txt", "args": _arg_spec(example_args)}
+    if extra:
+        entry.update(extra)
+    manifest["graphs"][name] = entry
+    print(f"  {name}: {len(text)} chars")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--models", default="lenet,mlp,cnn,tinybert")
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    os.makedirs(os.path.join(out_dir, "init"), exist_ok=True)
+
+    params = crypto.CryptoParams()
+    manifest = {
+        "version": 1,
+        "crypto": params.to_dict(),
+        "agg_clients": AGG_CLIENTS,
+        "agg_chunk": AGG_CHUNK,
+        "plain_block": PLAIN_BLOCK,
+        "train_batch": model.TRAIN_BATCH,
+        "sens_batch": model.SENS_BATCH,
+        "models": {},
+        "graphs": {},
+    }
+
+    # Aggregation artifacts (model independent)
+    print("lowering aggregation graphs")
+    fn, ex = model.build_he_agg(AGG_CLIENTS, params.num_limbs, params.n, params.moduli)
+    lower_graph("he_agg", fn, ex, out_dir, manifest)
+    fn, ex = model.build_he_agg_batched(
+        AGG_CLIENTS, AGG_CHUNK, params.num_limbs, params.n, params.moduli
+    )
+    lower_graph("he_agg_batched", fn, ex, out_dir, manifest)
+    fn, ex = model.build_plain_agg(AGG_CLIENTS, PLAIN_BLOCK)
+    lower_graph("plain_agg", fn, ex, out_dir, manifest)
+
+    for m in args.models.split(","):
+        m = m.strip()
+        print(f"lowering graphs for model '{m}'")
+        meta = {
+            "param_count": models.param_count(m),
+            "input_shape": list(models.INPUT_SHAPES.get(m, ())),
+            "num_classes": models.NUM_CLASSES if m != "tinybert" else models.VOCAB,
+            "seq_len": models.SEQ_LEN if m == "tinybert" else None,
+            "vocab": models.VOCAB if m == "tinybert" else None,
+        }
+        manifest["models"][m] = meta
+
+        fn, ex = model.build_train_step(m)
+        lower_graph(f"{m}_train", fn, ex, out_dir, manifest)
+        fn, ex = model.build_evaluate(m)
+        lower_graph(f"{m}_eval", fn, ex, out_dir, manifest)
+        fn, ex = model.build_grad(m)
+        lower_graph(f"{m}_grad", fn, ex, out_dir, manifest)
+        fn, ex = model.build_sensitivity(m)
+        lower_graph(f"{m}_sens", fn, ex, out_dir, manifest)
+        if m in ("lenet", "cnn"):
+            fn, ex = model.build_dlg_step(m)
+            lower_graph(f"{m}_dlg", fn, ex, out_dir, manifest)
+
+        # deterministic initial parameters for reproducible FL runs
+        init = models.init_flat(m, seed=0)
+        init.tofile(os.path.join(out_dir, "init", f"{m}.f32"))
+
+    with open(os.path.join(out_dir, "crypto_params.json"), "w") as f:
+        json.dump(params.to_dict(), f, indent=1)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(manifest['graphs'])} graphs to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

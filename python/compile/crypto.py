@@ -1,0 +1,91 @@
+"""Crypto parameters shared with the Rust CKKS substrate.
+
+The Rust side (rust/src/ckks/params.rs) generates RNS moduli by a
+deterministic descending scan from 2^31 for primes ≡ 1 (mod 2^14). This
+module reproduces the identical scan so that the L1 Pallas kernel bakes the
+exact same moduli into the AOT artifact — no cross-language data file is
+needed at build time, and `aot.py` emits `artifacts/crypto_params.json`
+purely as a consistency check (validated by pytest and by the Rust runtime
+at artifact load).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+# Must match rust/src/ckks/params.rs
+WEIGHT_BITS = 20
+ROOT_ORDER_LOG2 = 14  # q ≡ 1 mod 2^14
+DEFAULT_N = 8192
+DEFAULT_LIMBS = 4
+DEFAULT_SCALING_BITS = 52
+
+_MR_WITNESSES = (2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37)
+
+
+def is_prime(n: int) -> bool:
+    """Deterministic Miller–Rabin for 64-bit integers (same witness set as
+    the Rust implementation)."""
+    if n < 2:
+        return False
+    for p in _MR_WITNESSES:
+        if n % p == 0:
+            return n == p
+    d, r = n - 1, 0
+    while d % 2 == 0:
+        d //= 2
+        r += 1
+    for a in _MR_WITNESSES:
+        x = pow(a, d, n)
+        if x in (1, n - 1):
+            continue
+        for _ in range(r - 1):
+            x = x * x % n
+            if x == n - 1:
+                break
+        else:
+            return False
+    return True
+
+
+def generate_ntt_primes(count: int) -> list[int]:
+    """First `count` primes < 2^31 with q ≡ 1 mod 2^14, scanning downward."""
+    step = 1 << ROOT_ORDER_LOG2
+    cand = (2**31 // step) * step + 1
+    while cand >= 2**31:
+        cand -= step
+    primes: list[int] = []
+    while len(primes) < count:
+        if is_prime(cand):
+            primes.append(cand)
+        cand -= step
+        assert cand > 2**30, "ran out of 31-bit NTT primes"
+    return primes
+
+
+@dataclasses.dataclass(frozen=True)
+class CryptoParams:
+    """The crypto context distributed to all parties."""
+
+    n: int = DEFAULT_N
+    num_limbs: int = DEFAULT_LIMBS
+    scaling_bits: int = DEFAULT_SCALING_BITS
+
+    @property
+    def moduli(self) -> list[int]:
+        return generate_ntt_primes(self.num_limbs)
+
+    @property
+    def batch(self) -> int:
+        """Packed values per ciphertext (paper's 'HE packing batch size')."""
+        return self.n // 2
+
+    def to_dict(self) -> dict:
+        return {
+            "n": self.n,
+            "num_limbs": self.num_limbs,
+            "scaling_bits": self.scaling_bits,
+            "weight_bits": WEIGHT_BITS,
+            "moduli": self.moduli,
+            "batch": self.batch,
+        }

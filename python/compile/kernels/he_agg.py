@@ -1,0 +1,118 @@
+"""L1 Pallas kernel: homomorphic weighted aggregation over RNS limbs.
+
+The server hot path of Algorithm 1 — `[[W_glob]] = Σ_i α_i [[W_i]]` — reduces
+to a modular multiply–accumulate over the raw ciphertext limbs:
+
+    out[p, l, j] = Σ_i ( ct[i, p, l, j] · w[i, l] mod q_l )  mod q_l
+
+with `p ∈ {0,1}` the ciphertext polynomial, `l` the RNS limb and `j` the
+coefficient. Weights are the per-limb residues of round(α_i · 2^WEIGHT_BITS).
+
+Hardware adaptation (DESIGN.md §6): limbs are 31-bit so every product fits
+uint64 — exact integer arithmetic on the VPU, no MXU involvement. The grid
+tiles (poly, limb, coeff-block); each block streams all N clients' residues
+through VMEM once and accumulates in registers. Lazy reduction: products are
+reduced once (`% q`, keeping terms < 2^31) and the N-term sum is folded with
+a single final `% q` (valid for N < 2^33).
+
+interpret=True is mandatory: the CPU PJRT client cannot execute Mosaic
+custom-calls (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Coefficient-block width: 2048 × u64 accumulators + N client rows keeps the
+# working set comfortably inside a 16 MiB VMEM budget for N ≤ 64.
+BLOCK_N_COEFF = 2048
+
+
+def _kernel(x_ref, w_ref, q_ref, o_ref):
+    """One (poly, limb, coeff-block) tile.
+
+    x_ref: uint32[N, 1, 1, bn]  — client ciphertext residues
+    w_ref: uint32[N, 1]         — encoded weights for this limb
+    q_ref: uint32[1]            — the limb modulus
+    o_ref: uint32[1, 1, bn]     — aggregated residues
+    """
+    q = q_ref[0].astype(jnp.uint64)
+    x = x_ref[...].astype(jnp.uint64)
+    w = w_ref[...].astype(jnp.uint64)  # [N, 1]
+    prod = (x * w[:, :, None, None]) % q  # per-term reduction: < 2^31
+    acc = prod.sum(axis=0) % q  # lazy N-term accumulation
+    o_ref[...] = acc.astype(jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def he_aggregate(cts: jax.Array, weights: jax.Array, moduli: jax.Array, *, block_n: int = BLOCK_N_COEFF):
+    """Aggregate N clients' ciphertexts.
+
+    cts:     uint32[N, 2, L, n]
+    weights: uint32[N, L]
+    moduli:  uint32[L]
+    returns  uint32[2, L, n]
+    """
+    n_clients, polys, limbs, n = cts.shape
+    assert polys == 2
+    assert weights.shape == (n_clients, limbs)
+    assert moduli.shape == (limbs,)
+    bn = min(block_n, n)
+    assert n % bn == 0
+    grid = (2, limbs, n // bn)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_clients, 1, 1, bn), lambda p, l, b: (0, p, l, b)),
+            pl.BlockSpec((n_clients, 1), lambda p, l, b: (0, l)),
+            pl.BlockSpec((1,), lambda p, l, b: (l,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bn), lambda p, l, b: (p, l, b)),
+        out_shape=jax.ShapeDtypeStruct((2, limbs, n), jnp.uint32),
+        interpret=True,
+    )(cts, weights, moduli)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def he_aggregate_batched(
+    cts: jax.Array, weights: jax.Array, moduli: jax.Array, *, block_n: int = BLOCK_N_COEFF
+):
+    """Batched variant: aggregate C ciphertexts per call (amortizes PJRT
+    dispatch overhead on long models — the §Perf batching lever).
+
+    cts:     uint32[N, C, 2, L, n]
+    weights: uint32[N, L]
+    moduli:  uint32[L]
+    returns  uint32[C, 2, L, n]
+    """
+    n_clients, chunk, polys, limbs, n = cts.shape
+    assert polys == 2
+    bn = min(block_n, n)
+    assert n % bn == 0
+    grid = (chunk, 2, limbs, n // bn)
+    return pl.pallas_call(
+        _kernel_batched,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_clients, 1, 1, 1, bn), lambda c, p, l, b: (0, c, p, l, b)),
+            pl.BlockSpec((n_clients, 1), lambda c, p, l, b: (0, l)),
+            pl.BlockSpec((1,), lambda c, p, l, b: (l,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, bn), lambda c, p, l, b: (c, p, l, b)),
+        out_shape=jax.ShapeDtypeStruct((chunk, 2, limbs, n), jnp.uint32),
+        interpret=True,
+    )(cts, weights, moduli)
+
+
+def _kernel_batched(x_ref, w_ref, q_ref, o_ref):
+    q = q_ref[0].astype(jnp.uint64)
+    x = x_ref[...].astype(jnp.uint64)  # [N, 1, 1, 1, bn]
+    w = w_ref[...].astype(jnp.uint64)  # [N, 1]
+    prod = (x * w[:, :, None, None, None]) % q
+    acc = prod.sum(axis=0) % q
+    o_ref[...] = acc.astype(jnp.uint32)

@@ -1,0 +1,48 @@
+"""L1 Pallas kernel: plaintext weighted aggregation.
+
+The unencrypted half of selective aggregation —
+`Σ_i α_i ((1−M) ⊙ W_i)` — is a dense f32 weighted sum. Blocked over the
+parameter axis so each tile streams N client rows through VMEM once.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_PARAMS = 8192
+
+
+def _kernel(x_ref, w_ref, o_ref):
+    """x_ref: f32[N, bp]; w_ref: f32[N]; o_ref: f32[bp]."""
+    x = x_ref[...]
+    w = w_ref[...]
+    o_ref[...] = (x * w[:, None]).sum(axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_p",))
+def plain_aggregate(xs: jax.Array, weights: jax.Array, *, block_p: int = BLOCK_PARAMS):
+    """Weighted sum of N plaintext parameter blocks.
+
+    xs:      f32[N, B]
+    weights: f32[N]
+    returns  f32[B]
+    """
+    n_clients, b = xs.shape
+    assert weights.shape == (n_clients,)
+    bp = min(block_p, b)
+    assert b % bp == 0
+    return pl.pallas_call(
+        _kernel,
+        grid=(b // bp,),
+        in_specs=[
+            pl.BlockSpec((n_clients, bp), lambda i: (0, i)),
+            pl.BlockSpec((n_clients,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bp,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,
+    )(xs, weights)

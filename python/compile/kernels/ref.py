@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for the L1 kernels (the build-time correctness signal).
+
+These are deliberately written with independent, obvious numpy-style code —
+no pallas, no blocking — so a kernel bug cannot be mirrored here.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def he_aggregate_ref(cts, weights, moduli):
+    """Modular weighted aggregation, direct translation of the math.
+
+    cts: uint32[N, 2, L, n]; weights: uint32[N, L]; moduli: uint32[L]
+    → uint32[2, L, n]
+    """
+    x = cts.astype(jnp.uint64)
+    w = weights.astype(jnp.uint64)
+    q = moduli.astype(jnp.uint64)
+    prod = (x * w[:, None, :, None]) % q[None, None, :, None]
+    acc = prod.sum(axis=0) % q[None, :, None]
+    return acc.astype(jnp.uint32)
+
+
+def he_aggregate_batched_ref(cts, weights, moduli):
+    """cts: uint32[N, C, 2, L, n] → uint32[C, 2, L, n]."""
+    x = cts.astype(jnp.uint64)
+    w = weights.astype(jnp.uint64)
+    q = moduli.astype(jnp.uint64)
+    prod = (x * w[:, None, None, :, None]) % q[None, None, None, :, None]
+    acc = prod.sum(axis=0) % q[None, None, :, None]
+    return acc.astype(jnp.uint32)
+
+
+def plain_aggregate_ref(xs, weights):
+    """xs: f32[N, B]; weights: f32[N] → f32[B]."""
+    return (xs * weights[:, None]).sum(axis=0)

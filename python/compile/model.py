@@ -1,0 +1,189 @@
+"""L2 graph builders: the JAX compute graphs that get AOT-lowered to HLO.
+
+Each builder returns (fn, example_args) pairs ready for `jax.jit(fn).lower`.
+All graphs speak the flat f32[P] parameter layout of `models.py`, so the Rust
+coordinator never needs to know tensor shapes.
+
+Graphs per trainable model:
+  * train_step   — one SGD step on cross-entropy: (W, x, y, lr) → (W', loss)
+  * evaluate     — (W, x, y) → (loss, #correct)
+  * grad         — (W, x, y) → flat gradient (attack target + FedSGD mode)
+  * sensitivity  — (W, x, y) → per-parameter privacy sensitivity (§2.4):
+                   S_m = (1/K) Σ_k |∂/∂y_k (∂ℓ/∂w_m)|. With ℓ = Σ_k t_k ℓ_k
+                   linear in the per-sample label weights t (evaluated at
+                   t = 1), the mixed derivative is the per-sample gradient,
+                   so S = mean_k |grad ℓ_k| — computed with one vmapped
+                   backward pass.
+  * dlg_step     — gradient-inversion attack step (Zhu et al. DLG, Fig. 9):
+                   gradient-matching loss descent on (dummy_x, dummy_y).
+
+Aggregation graphs (model-independent, call the L1 Pallas kernels):
+  * he_agg / he_agg_batched — modular weighted sum over ciphertext limbs
+  * plain_agg               — f32 weighted sum
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import models
+from .kernels import he_agg as he_agg_kernel
+from .kernels import plain_agg as plain_agg_kernel
+
+TRAIN_BATCH = 32
+SENS_BATCH = 8
+DLG_BATCH = 1
+
+
+def _cross_entropy(logits, y):
+    """Mean CE over the batch; y int32 labels."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, y[..., None], axis=-1).mean()
+
+
+def _loss_flat(name, flat, x, y):
+    logits = models.forward_flat(name, flat, x)
+    if name == "tinybert":
+        # next-token LM loss: predict y[b, t] from prefix
+        return _cross_entropy(logits, y)
+    return _cross_entropy(logits, y)
+
+
+def _input_example(name, batch):
+    if name == "tinybert":
+        x = jax.ShapeDtypeStruct((batch, models.SEQ_LEN), jnp.int32)
+        y = jax.ShapeDtypeStruct((batch, models.SEQ_LEN), jnp.int32)
+    else:
+        shape = models.INPUT_SHAPES[name]
+        x = jax.ShapeDtypeStruct((batch, *shape), jnp.float32)
+        y = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    return x, y
+
+
+def build_train_step(name):
+    p = models.param_count(name)
+
+    def train_step(flat, x, y, lr):
+        loss, g = jax.value_and_grad(lambda f: _loss_flat(name, f, x, y))(flat)
+        return flat - lr * g, loss
+
+    w = jax.ShapeDtypeStruct((p,), jnp.float32)
+    x, y = _input_example(name, TRAIN_BATCH)
+    lr = jax.ShapeDtypeStruct((), jnp.float32)
+    return train_step, (w, x, y, lr)
+
+
+def build_evaluate(name):
+    p = models.param_count(name)
+
+    def evaluate(flat, x, y):
+        logits = models.forward_flat(name, flat, x)
+        loss = _cross_entropy(logits, y)
+        correct = (logits.argmax(-1) == y).sum().astype(jnp.float32)
+        return loss, correct
+
+    w = jax.ShapeDtypeStruct((p,), jnp.float32)
+    x, y = _input_example(name, TRAIN_BATCH)
+    return evaluate, (w, x, y)
+
+
+def build_grad(name, batch=TRAIN_BATCH):
+    p = models.param_count(name)
+
+    def grad(flat, x, y):
+        return (jax.grad(lambda f: _loss_flat(name, f, x, y))(flat),)
+
+    w = jax.ShapeDtypeStruct((p,), jnp.float32)
+    x, y = _input_example(name, batch)
+    return grad, (w, x, y)
+
+
+def build_sensitivity(name):
+    """Per-parameter privacy sensitivity over a K-sample batch."""
+    p = models.param_count(name)
+
+    def sensitivity(flat, x, y):
+        def per_sample_grad(xi, yi):
+            return jax.grad(
+                lambda f: _loss_flat(name, f, xi[None], yi[None])
+            )(flat)
+
+        grads = jax.vmap(per_sample_grad)(x, y)  # [K, P]
+        return (jnp.abs(grads).mean(axis=0),)
+
+    w = jax.ShapeDtypeStruct((p,), jnp.float32)
+    x, y = _input_example(name, SENS_BATCH)
+    return sensitivity, (w, x, y)
+
+
+def build_dlg_step(name):
+    """One DLG attack step (image models only).
+
+    Matching loss L = ||∇_W ℓ(x̂, softmax(ŷ)) − g*||²; descend on x̂ and ŷ.
+    The observed gradient g* may be masked (selective encryption): a binary
+    mask m zeroes the protected coordinates in *both* gradients, modeling an
+    attacker who only sees the plaintext part.
+    """
+    p = models.param_count(name)
+    shape = models.INPUT_SHAPES[name]
+
+    def soft_loss(flat, x, y_soft):
+        logits = models.forward_flat(name, flat, x)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -(y_soft * logp).sum(-1).mean()
+
+    def dlg_step(flat, target_grad, mask, dummy_x, dummy_y_logits, lr):
+        def match(dx, dy):
+            y_soft = jax.nn.softmax(dy, axis=-1)
+            g = jax.grad(lambda f: soft_loss(f, dx, y_soft))(flat)
+            diff = (g - target_grad) * mask
+            return (diff * diff).sum()
+
+        loss, (gx, gy) = jax.value_and_grad(match, argnums=(0, 1))(
+            dummy_x, dummy_y_logits
+        )
+        # normalized gradient descent — robust across scales
+        nx = gx / (jnp.abs(gx).mean() + 1e-12)
+        ny = gy / (jnp.abs(gy).mean() + 1e-12)
+        return dummy_x - lr * nx, dummy_y_logits - lr * ny, loss
+
+    w = jax.ShapeDtypeStruct((p,), jnp.float32)
+    g = jax.ShapeDtypeStruct((p,), jnp.float32)
+    m = jax.ShapeDtypeStruct((p,), jnp.float32)
+    dx = jax.ShapeDtypeStruct((DLG_BATCH, *shape), jnp.float32)
+    dy = jax.ShapeDtypeStruct((DLG_BATCH, models.NUM_CLASSES), jnp.float32)
+    lr = jax.ShapeDtypeStruct((), jnp.float32)
+    return dlg_step, (w, g, m, dx, dy, lr)
+
+
+def build_he_agg(n_clients, num_limbs, n, moduli):
+    moduli_arr = jnp.asarray(np.array(moduli, dtype=np.uint32))
+
+    def agg(cts, weights):
+        return (he_agg_kernel.he_aggregate(cts, weights, moduli_arr),)
+
+    cts = jax.ShapeDtypeStruct((n_clients, 2, num_limbs, n), jnp.uint32)
+    w = jax.ShapeDtypeStruct((n_clients, num_limbs), jnp.uint32)
+    return agg, (cts, w)
+
+
+def build_he_agg_batched(n_clients, chunk, num_limbs, n, moduli):
+    moduli_arr = jnp.asarray(np.array(moduli, dtype=np.uint32))
+
+    def agg(cts, weights):
+        return (he_agg_kernel.he_aggregate_batched(cts, weights, moduli_arr),)
+
+    cts = jax.ShapeDtypeStruct((n_clients, chunk, 2, num_limbs, n), jnp.uint32)
+    w = jax.ShapeDtypeStruct((n_clients, num_limbs), jnp.uint32)
+    return agg, (cts, w)
+
+
+def build_plain_agg(n_clients, block):
+    def agg(xs, weights):
+        return (plain_agg_kernel.plain_aggregate(xs, weights),)
+
+    xs = jax.ShapeDtypeStruct((n_clients, block), jnp.float32)
+    w = jax.ShapeDtypeStruct((n_clients,), jnp.float32)
+    return agg, (xs, w)

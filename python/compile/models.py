@@ -1,0 +1,227 @@
+"""L2 model zoo in raw JAX (no flax offline) with a flat-parameter interface.
+
+Every model exposes:
+  * ``spec(name)``        — ordered list of (param_name, shape) pairs
+  * ``param_count(name)`` — total flat parameter count P
+  * ``init_flat(name, seed)`` — deterministic He-style init as f32[P]
+  * ``forward(name, params_dict, x)`` — logits
+
+The flat f32[P] layout is the cross-layer contract: the Rust coordinator
+moves models exclusively as flat vectors (encrypting slices of them), and the
+AOT graphs unflatten internally. Ordering is the ``spec`` order, row-major.
+
+Models mirror the paper's trainable workloads:
+  * ``lenet``   — LeNet-5-style CNN (Fig. 5 privacy map, Fig. 9 DLG defense)
+  * ``mlp``     — "MLP (2 FC)" row of Table 4 (79,510 params exactly)
+  * ``cnn``     — "CNN (2 Conv + 2 FC)" row of Table 4 (~1.66 M params)
+  * ``tinybert``— miniature transformer encoder (Fig. 10 NLP inversion analog)
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Model metadata
+
+# (C, H, W) inputs per image model; mlp takes flat 784.
+INPUT_SHAPES = {
+    "lenet": (1, 28, 28),
+    "mlp": (784,),
+    "cnn": (3, 32, 32),
+}
+NUM_CLASSES = 10
+
+# tinybert config
+VOCAB = 128
+SEQ_LEN = 16
+D_MODEL = 32
+N_HEADS = 2
+D_FF = 64
+
+
+def spec(name: str) -> list[tuple[str, tuple[int, ...]]]:
+    """Ordered parameter spec; the flat layout contract."""
+    if name == "lenet":
+        return [
+            ("conv1_w", (6, 1, 5, 5)),
+            ("conv1_b", (6,)),
+            ("conv2_w", (16, 6, 5, 5)),
+            ("conv2_b", (16,)),
+            ("fc1_w", (256, 120)),
+            ("fc1_b", (120,)),
+            ("fc2_w", (120, 84)),
+            ("fc2_b", (84,)),
+            ("fc3_w", (84, 10)),
+            ("fc3_b", (10,)),
+        ]
+    if name == "mlp":
+        return [
+            ("fc1_w", (784, 100)),
+            ("fc1_b", (100,)),
+            ("fc2_w", (100, 10)),
+            ("fc2_b", (10,)),
+        ]
+    if name == "cnn":
+        return [
+            ("conv1_w", (32, 3, 5, 5)),
+            ("conv1_b", (32,)),
+            ("conv2_w", (64, 32, 5, 5)),
+            ("conv2_b", (64,)),
+            # 3×32×32 → conv(5) 28 → pool 14 → conv(5) 10 → pool 5 → 64·25
+            ("fc1_w", (1600, 1000)),
+            ("fc1_b", (1000,)),
+            ("fc2_w", (1000, 10)),
+            ("fc2_b", (10,)),
+        ]
+    if name == "tinybert":
+        return [
+            ("embed", (VOCAB, D_MODEL)),
+            ("pos", (SEQ_LEN, D_MODEL)),
+            ("wq", (D_MODEL, D_MODEL)),
+            ("wk", (D_MODEL, D_MODEL)),
+            ("wv", (D_MODEL, D_MODEL)),
+            ("wo", (D_MODEL, D_MODEL)),
+            ("ln1_g", (D_MODEL,)),
+            ("ln1_b", (D_MODEL,)),
+            ("ff1_w", (D_MODEL, D_FF)),
+            ("ff1_b", (D_FF,)),
+            ("ff2_w", (D_FF, D_MODEL)),
+            ("ff2_b", (D_MODEL,)),
+            ("ln2_g", (D_MODEL,)),
+            ("ln2_b", (D_MODEL,)),
+            ("head_w", (D_MODEL, VOCAB)),
+            ("head_b", (VOCAB,)),
+        ]
+    raise ValueError(f"unknown model '{name}'")
+
+
+MODEL_NAMES = ("lenet", "mlp", "cnn", "tinybert")
+
+
+def param_count(name: str) -> int:
+    return sum(int(np.prod(s)) for _, s in spec(name))
+
+
+def unflatten(name: str, flat: jax.Array) -> dict[str, jax.Array]:
+    params = {}
+    off = 0
+    for pname, shape in spec(name):
+        size = int(np.prod(shape))
+        params[pname] = flat[off : off + size].reshape(shape)
+        off += size
+    return params
+
+
+def flatten(name: str, params: dict[str, jax.Array]) -> jax.Array:
+    return jnp.concatenate([params[p].reshape(-1) for p, _ in spec(name)])
+
+
+def init_flat(name: str, seed: int = 0) -> np.ndarray:
+    """Deterministic He-normal init (numpy; build-time only)."""
+    rng = np.random.default_rng(seed)
+    chunks = []
+    for pname, shape in spec(name):
+        if pname.endswith("_b") or pname in ("ln1_b", "ln2_b", "pos"):
+            chunks.append(np.zeros(shape, np.float32).reshape(-1))
+        elif pname in ("ln1_g", "ln2_g"):
+            chunks.append(np.ones(shape, np.float32).reshape(-1))
+        else:
+            fan_in = int(np.prod(shape[:-1])) if len(shape) > 1 else shape[0]
+            std = math.sqrt(2.0 / max(fan_in, 1))
+            chunks.append(rng.normal(0.0, std, size=int(np.prod(shape))).astype(np.float32))
+    return np.concatenate(chunks)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+
+
+def _conv(x, w, b):
+    """NCHW valid conv."""
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return y + b[None, :, None, None]
+
+
+def _pool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+    )
+
+
+def _image_forward_lenet(p, x):
+    h = jnp.tanh(_conv(x, p["conv1_w"], p["conv1_b"]))  # [B,6,24,24]
+    h = _pool2(h)  # 12
+    h = jnp.tanh(_conv(h, p["conv2_w"], p["conv2_b"]))  # [B,16,8,8]
+    h = _pool2(h)  # 4
+    h = h.reshape(h.shape[0], -1)  # 256
+    h = jnp.tanh(h @ p["fc1_w"] + p["fc1_b"])
+    h = jnp.tanh(h @ p["fc2_w"] + p["fc2_b"])
+    return h @ p["fc3_w"] + p["fc3_b"]
+
+
+def _image_forward_cnn(p, x):
+    h = jax.nn.relu(_conv(x, p["conv1_w"], p["conv1_b"]))  # [B,32,28,28]
+    h = _pool2(h)  # 14
+    h = jax.nn.relu(_conv(h, p["conv2_w"], p["conv2_b"]))  # [B,64,10,10]
+    h = _pool2(h)  # [B,64,5,5]
+    h = h.reshape(h.shape[0], -1)  # 1600
+    h = jax.nn.relu(h @ p["fc1_w"] + p["fc1_b"])
+    return h @ p["fc2_w"] + p["fc2_b"]
+
+
+def _mlp_forward(p, x):
+    h = jax.nn.relu(x @ p["fc1_w"] + p["fc1_b"])
+    return h @ p["fc2_w"] + p["fc2_b"]
+
+
+def _tinybert_forward(p, tokens):
+    """tokens: int32[B, T] → logits f32[B, T, VOCAB] (next-token style)."""
+    h = p["embed"][tokens] + p["pos"][None, :, :]  # [B,T,D]
+
+    def ln(x, g, b):
+        mu = x.mean(-1, keepdims=True)
+        var = ((x - mu) ** 2).mean(-1, keepdims=True)
+        return (x - mu) / jnp.sqrt(var + 1e-5) * g + b
+
+    # single-block encoder with causal attention
+    q = h @ p["wq"]
+    k = h @ p["wk"]
+    v = h @ p["wv"]
+    b, t, d = q.shape
+    hd = d // N_HEADS
+    q = q.reshape(b, t, N_HEADS, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, t, N_HEADS, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, t, N_HEADS, hd).transpose(0, 2, 1, 3)
+    att = (q @ k.transpose(0, 1, 3, 2)) / math.sqrt(hd)  # [B,H,T,T]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    att = jnp.where(mask[None, None], att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    o = (att @ v).transpose(0, 2, 1, 3).reshape(b, t, d) @ p["wo"]
+    h = ln(h + o, p["ln1_g"], p["ln1_b"])
+    ff = jax.nn.relu(h @ p["ff1_w"] + p["ff1_b"]) @ p["ff2_w"] + p["ff2_b"]
+    h = ln(h + ff, p["ln2_g"], p["ln2_b"])
+    return h @ p["head_w"] + p["head_b"]
+
+
+def forward(name: str, params: dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    if name == "lenet":
+        return _image_forward_lenet(params, x)
+    if name == "cnn":
+        return _image_forward_cnn(params, x)
+    if name == "mlp":
+        return _mlp_forward(params, x)
+    if name == "tinybert":
+        return _tinybert_forward(params, x)
+    raise ValueError(f"unknown model '{name}'")
+
+
+def forward_flat(name: str, flat: jax.Array, x: jax.Array) -> jax.Array:
+    return forward(name, unflatten(name, flat), x)

@@ -1,0 +1,29 @@
+"""AOT lowering sanity: graphs lower to parseable HLO text."""
+
+import jax
+import numpy as np
+
+from compile import aot, crypto, model
+
+
+def test_plain_agg_lowers_to_hlo_text():
+    fn, ex = model.build_plain_agg(4, 1024)
+    text = aot.to_hlo_text(jax.jit(fn).lower(*ex))
+    assert text.startswith("HloModule")
+    assert "f32[4,1024]" in text
+
+
+def test_he_agg_lowers_to_hlo_text():
+    p = crypto.CryptoParams(n=256, num_limbs=2)
+    fn, ex = model.build_he_agg(4, p.num_limbs, p.n, p.moduli)
+    text = aot.to_hlo_text(jax.jit(fn).lower(*ex))
+    assert text.startswith("HloModule")
+    assert "u32[4,2,2,256]" in text
+
+
+def test_train_graph_lowers():
+    fn, ex = model.build_train_step("mlp")
+    text = aot.to_hlo_text(jax.jit(fn).lower(*ex))
+    assert text.startswith("HloModule")
+    # two outputs: params' and loss
+    assert "f32[79510]" in text

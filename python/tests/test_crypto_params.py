@@ -1,0 +1,51 @@
+"""Cross-language crypto parameter contract.
+
+The Rust side hardcodes the same expectations in
+rust/src/ckks/params.rs::tests and rust/tests/ integration tests; if either
+side changes the scan these pinned values catch the divergence.
+"""
+
+from compile import crypto
+
+# Pinned output of the deterministic descending scan (also pinned in Rust).
+KNOWN_PRIMES = [
+    2147352577,
+    2147205121,
+    2147074049,
+    2146959361,
+    2146713601,
+    2146418689,
+    2146336769,
+    2146091009,
+]
+
+
+def test_prime_scan_is_pinned():
+    assert crypto.generate_ntt_primes(8) == KNOWN_PRIMES
+
+
+def test_primes_are_ntt_friendly():
+    for q in crypto.generate_ntt_primes(8):
+        assert q < 2**31
+        assert q > 2**30
+        assert (q - 1) % (1 << crypto.ROOT_ORDER_LOG2) == 0
+        assert crypto.is_prime(q)
+
+
+def test_default_params():
+    p = crypto.CryptoParams()
+    assert p.n == 8192
+    assert p.batch == 4096  # the paper's default packing batch size
+    assert p.num_limbs == 4
+    assert p.scaling_bits == 52
+    d = p.to_dict()
+    assert d["moduli"] == KNOWN_PRIMES[:4]
+    assert d["weight_bits"] == 20
+
+
+def test_miller_rabin_edge_cases():
+    assert not crypto.is_prime(0)
+    assert not crypto.is_prime(1)
+    assert crypto.is_prime(2)
+    assert crypto.is_prime((1 << 61) - 1)
+    assert not crypto.is_prime(3215031751)  # strong pseudoprime to small bases

@@ -1,0 +1,117 @@
+"""L1 Pallas kernels vs pure-jnp oracles (the core correctness signal)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import crypto
+from compile.kernels import he_agg, plain_agg, ref
+
+MODULI8 = crypto.generate_ntt_primes(8)
+
+
+def _random_case(rng, n_clients, limbs, n):
+    moduli = np.array(MODULI8[:limbs], dtype=np.uint32)
+    cts = np.empty((n_clients, 2, limbs, n), dtype=np.uint32)
+    for l, q in enumerate(moduli):
+        cts[:, :, l, :] = rng.integers(0, q, size=(n_clients, 2, n), dtype=np.uint64)
+    w = np.empty((n_clients, limbs), dtype=np.uint32)
+    for l, q in enumerate(moduli):
+        w[:, l] = rng.integers(0, q, size=n_clients, dtype=np.uint64)
+    return cts, w, moduli
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_clients=st.integers(1, 8),
+    limbs=st.integers(1, 4),
+    log_n=st.integers(3, 8),
+    seed=st.integers(0, 2**31),
+)
+def test_he_agg_matches_ref(n_clients, limbs, log_n, seed):
+    rng = np.random.default_rng(seed)
+    cts, w, moduli = _random_case(rng, n_clients, limbs, 1 << log_n)
+    got = he_agg.he_aggregate(jnp.asarray(cts), jnp.asarray(w), jnp.asarray(moduli))
+    want = ref.he_aggregate_ref(jnp.asarray(cts), jnp.asarray(w), jnp.asarray(moduli))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_he_agg_default_shape():
+    """The exact artifact shape: N=8, L=4, n=8192."""
+    rng = np.random.default_rng(0)
+    cts, w, moduli = _random_case(rng, 8, 4, 8192)
+    got = he_agg.he_aggregate(jnp.asarray(cts), jnp.asarray(w), jnp.asarray(moduli))
+    want = ref.he_aggregate_ref(jnp.asarray(cts), jnp.asarray(w), jnp.asarray(moduli))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert got.shape == (2, 4, 8192)
+    assert got.dtype == jnp.uint32
+
+
+def test_he_agg_extreme_values():
+    """Max residues and max weights must not overflow."""
+    limbs = 4
+    n = 64
+    moduli = np.array(MODULI8[:limbs], dtype=np.uint32)
+    cts = np.tile((moduli - 1)[None, None, :, None], (8, 2, 1, n)).astype(np.uint32)
+    w = np.tile((moduli - 1)[None, :], (8, 1)).astype(np.uint32)
+    got = he_agg.he_aggregate(jnp.asarray(cts), jnp.asarray(w), jnp.asarray(moduli))
+    want = ref.he_aggregate_ref(jnp.asarray(cts), jnp.asarray(w), jnp.asarray(moduli))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # analytic check on one limb: ((q-1)^2 mod q) * 8 mod q = 8 mod q
+    q = int(moduli[0])
+    assert int(np.asarray(got)[0, 0, 0]) == (8 % q)
+
+
+def test_he_agg_zero_weights_zero_output():
+    rng = np.random.default_rng(1)
+    cts, w, moduli = _random_case(rng, 4, 2, 128)
+    w[:] = 0
+    got = he_agg.he_aggregate(jnp.asarray(cts), jnp.asarray(w), jnp.asarray(moduli))
+    assert int(np.asarray(got).max()) == 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n_clients=st.integers(1, 8),
+    chunk=st.integers(1, 4),
+    limbs=st.integers(1, 4),
+    seed=st.integers(0, 2**31),
+)
+def test_he_agg_batched_matches_ref(n_clients, chunk, limbs, seed):
+    rng = np.random.default_rng(seed)
+    n = 128
+    moduli = np.array(MODULI8[:limbs], dtype=np.uint32)
+    cts = np.empty((n_clients, chunk, 2, limbs, n), dtype=np.uint32)
+    for l, q in enumerate(moduli):
+        cts[:, :, :, l, :] = rng.integers(0, q, size=(n_clients, chunk, 2, n), dtype=np.uint64)
+    w = np.empty((n_clients, limbs), dtype=np.uint32)
+    for l, q in enumerate(moduli):
+        w[:, l] = rng.integers(0, q, size=n_clients, dtype=np.uint64)
+    got = he_agg.he_aggregate_batched(jnp.asarray(cts), jnp.asarray(w), jnp.asarray(moduli))
+    want = ref.he_aggregate_batched_ref(jnp.asarray(cts), jnp.asarray(w), jnp.asarray(moduli))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_clients=st.integers(1, 8),
+    log_b=st.integers(4, 12),
+    seed=st.integers(0, 2**31),
+)
+def test_plain_agg_matches_ref(n_clients, log_b, seed):
+    rng = np.random.default_rng(seed)
+    b = 1 << log_b
+    xs = rng.normal(size=(n_clients, b)).astype(np.float32)
+    w = rng.uniform(0, 1, size=n_clients).astype(np.float32)
+    got = plain_agg.plain_aggregate(jnp.asarray(xs), jnp.asarray(w))
+    want = ref.plain_aggregate_ref(jnp.asarray(xs), jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+def test_plain_agg_fedavg_mean():
+    """Equal weights 1/N recover the mean."""
+    xs = np.stack([np.full(64, 2.0), np.full(64, 4.0)]).astype(np.float32)
+    w = np.array([0.5, 0.5], dtype=np.float32)
+    got = plain_agg.plain_aggregate(jnp.asarray(xs), jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(got), np.full(64, 3.0), rtol=1e-7)

@@ -1,0 +1,162 @@
+"""L2 model and graph-builder tests: shapes, training signal, sensitivity
+properties, DLG attack step behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, models
+
+
+@pytest.mark.parametrize("name", models.MODEL_NAMES)
+def test_flatten_unflatten_roundtrip(name):
+    flat = jnp.asarray(models.init_flat(name, seed=3))
+    assert flat.shape == (models.param_count(name),)
+    params = models.unflatten(name, flat)
+    again = models.flatten(name, params)
+    np.testing.assert_array_equal(np.asarray(flat), np.asarray(again))
+
+
+def test_mlp_matches_paper_param_count():
+    # Table 4 row "MLP (2 FC)": 79,510 parameters.
+    assert models.param_count("mlp") == 79510
+
+
+def test_cnn_param_count_near_paper():
+    # Table 4 row "CNN (2 Conv + 2 FC)": 1,663,370; ours is within 0.1%.
+    ours = models.param_count("cnn")
+    assert abs(ours - 1663370) / 1663370 < 2e-3, ours
+
+
+def _example_batch(name, batch, seed=0):
+    rng = np.random.default_rng(seed)
+    if name == "tinybert":
+        x = rng.integers(0, models.VOCAB, size=(batch, models.SEQ_LEN)).astype(np.int32)
+        y = rng.integers(0, models.VOCAB, size=(batch, models.SEQ_LEN)).astype(np.int32)
+    else:
+        x = rng.normal(size=(batch, *models.INPUT_SHAPES[name])).astype(np.float32)
+        y = rng.integers(0, models.NUM_CLASSES, size=batch).astype(np.int32)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+@pytest.mark.parametrize("name", models.MODEL_NAMES)
+def test_forward_shapes(name):
+    flat = jnp.asarray(models.init_flat(name))
+    x, _ = _example_batch(name, 4)
+    logits = models.forward_flat(name, flat, x)
+    if name == "tinybert":
+        assert logits.shape == (4, models.SEQ_LEN, models.VOCAB)
+    else:
+        assert logits.shape == (4, models.NUM_CLASSES)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("name", ["mlp", "lenet"])
+def test_train_step_reduces_loss(name):
+    fn, _ = model.build_train_step(name)
+    fn = jax.jit(fn)
+    flat = jnp.asarray(models.init_flat(name))
+    x, y = _example_batch(name, model.TRAIN_BATCH)
+    losses = []
+    for _ in range(20):
+        flat, loss = fn(flat, x, y, jnp.float32(0.1))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.8, losses[::5]
+
+
+def test_evaluate_counts_correct():
+    fn, _ = model.build_evaluate("mlp")
+    fn = jax.jit(fn)
+    flat = jnp.asarray(models.init_flat("mlp"))
+    x, y = _example_batch("mlp", model.TRAIN_BATCH)
+    loss, correct = fn(flat, x, y)
+    assert 0 <= float(correct) <= model.TRAIN_BATCH
+    assert float(loss) > 0
+
+
+def test_grad_matches_train_step_direction():
+    gfn, _ = model.build_grad("mlp")
+    tfn, _ = model.build_train_step("mlp")
+    flat = jnp.asarray(models.init_flat("mlp"))
+    x, y = _example_batch("mlp", model.TRAIN_BATCH)
+    (g,) = jax.jit(gfn)(flat, x, y)
+    new_flat, _ = jax.jit(tfn)(flat, x, y, jnp.float32(0.5))
+    np.testing.assert_allclose(
+        np.asarray(new_flat), np.asarray(flat - 0.5 * g), rtol=1e-5, atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("name", ["mlp", "lenet"])
+def test_sensitivity_properties(name):
+    fn, _ = model.build_sensitivity(name)
+    fn = jax.jit(fn)
+    flat = jnp.asarray(models.init_flat(name))
+    x, y = _example_batch(name, model.SENS_BATCH)
+    (s,) = fn(flat, x, y)
+    s = np.asarray(s)
+    assert s.shape == (models.param_count(name),)
+    assert (s >= 0).all()
+    assert s.max() > 0
+    # Sensitivity is imbalanced (Fig. 5): top decile carries much more mass
+    # than the bottom decile.
+    srt = np.sort(s)
+    top = srt[-len(s) // 10 :].sum()
+    bottom = srt[: len(s) // 10].sum()
+    assert top > 10 * (bottom + 1e-12)
+
+
+def test_sensitivity_equals_mean_abs_per_sample_grad():
+    """The mixed-derivative identity behind the implementation."""
+    name = "mlp"
+    fn, _ = model.build_sensitivity(name)
+    flat = jnp.asarray(models.init_flat(name))
+    x, y = _example_batch(name, model.SENS_BATCH)
+    (s,) = jax.jit(fn)(flat, x, y)
+
+    def loss_single(f, xi, yi):
+        logits = models.forward_flat(name, f, xi[None])
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -logp[0, yi]
+
+    grads = np.stack(
+        [np.asarray(jax.grad(loss_single)(flat, x[i], y[i])) for i in range(x.shape[0])]
+    )
+    np.testing.assert_allclose(np.asarray(s), np.abs(grads).mean(0), rtol=1e-4, atol=1e-7)
+
+
+def test_dlg_step_reduces_matching_loss():
+    name = "lenet"
+    fn, _ = model.build_dlg_step(name)
+    fn = jax.jit(fn)
+    flat = jnp.asarray(models.init_flat(name))
+    # target gradient from a "victim" sample
+    rng = np.random.default_rng(5)
+    vx = jnp.asarray(rng.normal(size=(1, *models.INPUT_SHAPES[name])).astype(np.float32))
+    vy = jnp.asarray(np.array([3], dtype=np.int32))
+    gfn, _ = model.build_grad(name, batch=1)
+    (target,) = jax.jit(gfn)(flat, vx, vy)
+    mask = jnp.ones_like(target)
+    dx = jnp.asarray(rng.normal(size=vx.shape).astype(np.float32))
+    dy = jnp.zeros((1, models.NUM_CLASSES), jnp.float32)
+    losses = []
+    for _ in range(30):
+        dx, dy, ml = fn(flat, target, mask, dx, dy, jnp.float32(0.03))
+        losses.append(float(ml))
+    assert losses[-1] < losses[0] * 0.7, losses[::10]
+
+
+def test_dlg_mask_blocks_signal():
+    """With everything masked the matching loss is identically zero — the
+    attacker has no signal (full encryption)."""
+    name = "lenet"
+    fn, _ = model.build_dlg_step(name)
+    fn = jax.jit(fn)
+    flat = jnp.asarray(models.init_flat(name))
+    rng = np.random.default_rng(6)
+    target = jnp.asarray(rng.normal(size=models.param_count(name)).astype(np.float32))
+    mask = jnp.zeros_like(target)
+    dx = jnp.asarray(rng.normal(size=(1, *models.INPUT_SHAPES[name])).astype(np.float32))
+    dy = jnp.zeros((1, models.NUM_CLASSES), jnp.float32)
+    _, _, ml = fn(flat, target, mask, dx, dy, jnp.float32(0.1))
+    assert float(ml) == 0.0

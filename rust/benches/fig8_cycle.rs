@@ -1,0 +1,78 @@
+//! Fig. 8 reproduction: time distribution of one ResNet-50 training cycle at
+//! a single-AWS-region bandwidth of 200 MB/s — plaintext FL vs HE without
+//! optimization vs HE with optimization (DoubleSqueeze k=1,000,000 + 30%
+//! selective encryption, the paper's setup).
+//!
+//! Local-training time is modeled from our measured per-parameter f32 SGD
+//! cost scaled to ResNet-50's parameter count (the paper's absolute GPU
+//! train time is testbed-specific; the reproduction target is the *relative
+//! composition* of the cycle).
+
+use fedml_he::bench_support::{measure_selective, time_iters};
+use fedml_he::ckks::CkksContext;
+use fedml_he::crypto::prng::ChaChaRng;
+use fedml_he::fl::model_meta::{lookup, plaintext_bytes};
+use fedml_he::netsim::FIG8_REGION;
+use fedml_he::util::{human_secs, table::Table};
+
+fn main() {
+    let ctx = CkksContext::default_paper().unwrap();
+    let mut rng = ChaChaRng::from_seed(8, 0);
+    let m = lookup("resnet50").unwrap();
+    let bw = FIG8_REGION;
+
+    // local training cost model: measured f32 MAC throughput × a 3-local-
+    // epoch ResNet-50 step budget (≈ 20 flops/param/sample × 128 samples)
+    let probe: Vec<f32> = (0..1 << 20).map(|i| i as f32 * 1e-6).collect();
+    let mut acc = 0.0f32;
+    let per_mac = time_iters(4, || {
+        acc = probe.iter().fold(acc, |a, &x| a + x * 1.000001);
+    }) / (1 << 20) as f64;
+    std::hint::black_box(acc);
+    let train_secs = per_mac * m.params as f64 * 20.0 * 128.0;
+
+    let pt_bytes = plaintext_bytes(m.params);
+    // DoubleSqueeze k=1M then 30% mask over the compressed update
+    let k = 1_000_000u64;
+    let opt_cost = measure_selective(&ctx, 3, k, 0.30, 16, &mut rng);
+    let full_cost = measure_selective(&ctx, 3, m.params, 1.0, 16, &mut rng);
+
+    let rows = [
+        (
+            "Plaintext FL",
+            train_secs,
+            0.0,
+            bw.transfer_secs(2 * pt_bytes),
+        ),
+        (
+            "HE w/o optimization",
+            train_secs,
+            full_cost.he_secs(),
+            bw.transfer_secs(2 * full_cost.ct_bytes),
+        ),
+        (
+            "HE w/ optimization (DoubleSqueeze k=1M + 30% mask)",
+            train_secs,
+            opt_cost.he_secs() + opt_cost.plain_secs,
+            bw.transfer_secs(2 * opt_cost.ct_bytes),
+        ),
+    ];
+    let mut t = Table::new(
+        "Fig. 8 — ResNet-50 training-cycle composition @ 200 MB/s",
+        &["Setup", "Local Train", "HE Ops", "Comm", "Total", "Comm+HE %"],
+    );
+    for (name, tr, he, comm) in rows {
+        let total = tr + he + comm;
+        t.row(vec![
+            name.to_string(),
+            human_secs(tr),
+            human_secs(he),
+            human_secs(comm),
+            human_secs(total),
+            format!("{:.1}%", 100.0 * (he + comm) / total),
+        ]);
+    }
+    t.print();
+    println!("\nShape check: unoptimized HE shifts a large share of the cycle into");
+    println!("aggregation-related steps; the optimized setup restores a near-plaintext profile.");
+}

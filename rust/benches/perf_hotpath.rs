@@ -1,0 +1,118 @@
+//! §Perf harness: microbenchmarks of every hot path across the three layers.
+//!
+//! L1/L3 aggregation: native Rust vs the XLA Pallas artifact (single and
+//! batched), in ciphertexts/second. L3 crypto: NTT, encrypt, decrypt,
+//! weighted-sum throughput. Results feed EXPERIMENTS.md §Perf.
+
+use fedml_he::bench_support::time_iters;
+use fedml_he::ckks::{encrypt, ops, CkksContext};
+use fedml_he::crypto::prng::ChaChaRng;
+use fedml_he::he_agg::{selective::SelectiveCodec, xla::XlaAggregator, EncryptionMask};
+use fedml_he::util::table::Table;
+
+fn main() {
+    let ctx = CkksContext::default_paper().unwrap();
+    let mut rng = ChaChaRng::from_seed(99, 0);
+    let (pk, sk) = ctx.keygen(&mut rng);
+    let values: Vec<f64> = (0..ctx.batch()).map(|i| (i as f64) * 1e-4).collect();
+
+    let mut t = Table::new("§Perf — crypto primitive microbenchmarks (n=8192, L=4)", &[
+        "Primitive", "Time", "Throughput",
+    ]);
+
+    // NTT
+    let mut poly = fedml_he::ckks::RnsPoly::sample_uniform(&ctx.params, &mut rng);
+    let ntt_s = time_iters(50, || {
+        poly.to_ntt(&ctx.params);
+        poly.from_ntt(&ctx.params);
+    }) / 2.0;
+    t.row(vec![
+        "NTT (4 limbs, one direction)".into(),
+        fedml_he::util::human_secs(ntt_s),
+        format!("{:.1} MB/s limbs", 4.0 * 8192.0 * 8.0 / ntt_s / 1e6),
+    ]);
+
+    // encrypt / decrypt
+    let pt = ctx.encoder.encode(&values);
+    let enc_s = time_iters(20, || {
+        std::hint::black_box(encrypt::encrypt(&ctx.params, &pk, &pt, values.len(), &mut rng));
+    });
+    let ct = encrypt::encrypt(&ctx.params, &pk, &pt, values.len(), &mut rng);
+    let dec_s = time_iters(20, || {
+        std::hint::black_box(encrypt::decrypt(&ctx.params, &sk, &ct));
+    });
+    t.row(vec![
+        "Encrypt (1 ct = 4096 values)".into(),
+        fedml_he::util::human_secs(enc_s),
+        format!("{:.2} Mvalues/s", 4096.0 / enc_s / 1e6),
+    ]);
+    t.row(vec![
+        "Decrypt".into(),
+        fedml_he::util::human_secs(dec_s),
+        format!("{:.2} Mvalues/s", 4096.0 / dec_s / 1e6),
+    ]);
+
+    // native weighted sum, 8 clients
+    let n_clients = 8;
+    let cts: Vec<_> = (0..n_clients)
+        .map(|_| encrypt::encrypt(&ctx.params, &pk, &pt, values.len(), &mut rng))
+        .collect();
+    let alphas = vec![1.0 / n_clients as f64; n_clients];
+    let agg_s = time_iters(20, || {
+        std::hint::black_box(ops::weighted_sum(&cts, &alphas, &ctx.params));
+    });
+    t.row(vec![
+        format!("Native weighted-sum ({n_clients} clients, 1 ct)"),
+        fedml_he::util::human_secs(agg_s),
+        format!("{:.1} ct/s", 1.0 / agg_s),
+    ]);
+    t.print();
+
+    // XLA kernel path vs native over a multi-ciphertext model
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        let rt = fedml_he::runtime::Runtime::new(dir).unwrap();
+        let codec = SelectiveCodec::new(ctx);
+        let total = 16 * codec.ctx.batch(); // 16 ciphertexts
+        let models: Vec<Vec<f32>> = (0..n_clients)
+            .map(|c| (0..total).map(|i| ((i + c) as f32) * 1e-5).collect())
+            .collect();
+        let mask = EncryptionMask::full(total);
+        let updates: Vec<_> = models
+            .iter()
+            .map(|m| codec.encrypt_update(m, &mask, &pk, &mut rng))
+            .collect();
+        let agg = XlaAggregator::new(&rt, codec.ctx.params.clone()).unwrap();
+
+        let mut t = Table::new(
+            "§Perf — aggregation backends (8 clients, 16 ciphertexts = 64k params)",
+            &["Backend", "Time", "ct/s"],
+        );
+        let native_s = time_iters(5, || {
+            std::hint::black_box(fedml_he::he_agg::native::aggregate(
+                &updates,
+                &alphas,
+                &codec.ctx.params,
+            ));
+        });
+        t.row(vec![
+            "Native Rust".into(),
+            fedml_he::util::human_secs(native_s),
+            format!("{:.1}", 16.0 / native_s),
+        ]);
+        let xla_s = time_iters(5, || {
+            std::hint::black_box(agg.aggregate(&updates, &alphas).unwrap());
+        });
+        t.row(vec![
+            "XLA (Pallas he_agg via PJRT)".into(),
+            fedml_he::util::human_secs(xla_s),
+            format!("{:.1}", 16.0 / xla_s),
+        ]);
+        t.print();
+        println!(
+            "\nnative/xla ratio: {:.2} (interpret-mode Pallas on CPU is a correctness \
+             backend; TPU perf is estimated analytically in DESIGN.md §6)",
+            xla_s / native_s
+        );
+    }
+}

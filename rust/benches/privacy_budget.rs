@@ -1,0 +1,67 @@
+//! §3 Remarks 3.12–3.14 reproduction: privacy budgets of full-DP, random
+//! selection and sensitivity selection — analytic U(0,1) forms plus the
+//! empirical budget on a real measured LeNet sensitivity map.
+
+use fedml_he::crypto::prng::ChaChaRng;
+use fedml_he::he_agg::EncryptionMask;
+use fedml_he::privacy::budget::{budget_full_dp, budget_with_mask, expected_budgets};
+use fedml_he::util::table::Table;
+
+fn main() {
+    let n = 100_000usize;
+    let b = 1.0;
+    let mut rng = ChaChaRng::from_seed(3, 0);
+    let sens: Vec<f32> = (0..n).map(|_| rng.uniform_f64() as f32).collect();
+    let j = budget_full_dp(&sens, b);
+
+    let mut t = Table::new(
+        "Remarks 3.12-3.14 — privacy budget (Δf ~ U(0,1), n = 100k, b = 1)",
+        &["p", "J (full DP)", "random (1-p)J", "selective (1-p)^2 J", "empirical selective"],
+    );
+    for p in [0.1, 0.3, 0.5, 0.7, 0.9] {
+        let (ja, ra, sa) = expected_budgets(n, p, b);
+        let emp = budget_with_mask(&sens, &EncryptionMask::top_p(&sens, p), b);
+        t.row(vec![
+            format!("{p:.1}"),
+            format!("{ja:.0}"),
+            format!("{ra:.0}"),
+            format!("{sa:.0}"),
+            format!("{emp:.0}"),
+        ]);
+    }
+    t.print();
+    println!("\nJ measured: {j:.0}; key observation: selective needs (1-p)x less budget");
+    println!("than random at the same ratio (Remark 3.14).");
+
+    // empirical budget on a real sensitivity map if artifacts are present
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        use fedml_he::runtime::executor::{Arg, Runtime};
+        let rt = Runtime::new(dir).unwrap();
+        let params = rt.manifest.load_init_params("lenet").unwrap();
+        let d = fedml_he::fl::data::synthetic_images(0, 8, (1, 28, 28), 10, 0.5, 5);
+        let k = rt.manifest.sens_batch;
+        let (x, y) = d.batch(0, k);
+        let s = rt
+            .execute(
+                "lenet_sens",
+                &[
+                    Arg::F32(&params, vec![params.len() as i64]),
+                    Arg::F32(&x, vec![k as i64, 1, 28, 28]),
+                    Arg::I32(&y, vec![k as i64]),
+                ],
+            )
+            .unwrap()[0]
+            .to_vec::<f32>()
+            .unwrap();
+        let jl = budget_full_dp(&s, b);
+        let sel = budget_with_mask(&s, &EncryptionMask::top_p(&s, 0.3), b);
+        let mut rng = ChaChaRng::from_seed(4, 0);
+        let rnd = budget_with_mask(&s, &EncryptionMask::random(s.len(), 0.3, &mut rng), b);
+        println!("\nMeasured LeNet map: J = {jl:.3}; random-30% = {rnd:.3}; selective-30% = {sel:.3}");
+        println!(
+            "selective/random budget ratio = {:.3} (real maps are heavier-tailed than U(0,1), so the gain exceeds (1-p))",
+            sel / rnd
+        );
+    }
+}

@@ -1,0 +1,231 @@
+//! Gradient-inversion attack driver (DLG, Zhu et al. 2019 — Fig. 9).
+//!
+//! The adversarial server observes a client's *visible* gradient — only the
+//! unencrypted coordinates under Selective Parameter Encryption — and
+//! descends a gradient-matching loss on dummy data. The optimization step is
+//! an AOT JAX graph (`<model>_dlg`); this module drives restarts and
+//! iterations from Rust and scores recoveries with [`super::metrics`].
+
+use super::metrics::{similarity, Similarity};
+use crate::crypto::prng::ChaChaRng;
+use crate::he_agg::EncryptionMask;
+use crate::runtime::executor::{Arg, Runtime};
+
+/// Attack configuration.
+#[derive(Debug, Clone)]
+pub struct DlgConfig {
+    pub iters: usize,
+    pub restarts: usize,
+    pub lr: f32,
+}
+
+impl Default for DlgConfig {
+    fn default() -> Self {
+        DlgConfig {
+            iters: 60,
+            restarts: 3,
+            lr: 0.05,
+        }
+    }
+}
+
+/// Result of an attack run.
+#[derive(Debug, Clone)]
+pub struct DlgOutcome {
+    /// Best recovered image (by final matching loss), flat CHW.
+    pub recovered: Vec<f32>,
+    pub final_match_loss: f32,
+    /// Similarity of the recovery vs the victim image.
+    pub similarity: Similarity,
+}
+
+/// Run DLG against a victim gradient.
+///
+/// * `model` — "lenet" or "cnn" (models with a `_dlg` artifact);
+/// * `victim_x` — the ground-truth image (for scoring only);
+/// * `target_grad` — the full gradient the client computed;
+/// * `mask` — the encryption mask; masked coordinates are zeroed in the
+///   attacker's view (it cannot see ciphertext contents — Theorem 3.9).
+pub fn run_dlg(
+    rt: &Runtime,
+    model: &str,
+    params: &[f32],
+    victim_x: &[f32],
+    target_grad: &[f32],
+    mask: &EncryptionMask,
+    cfg: &DlgConfig,
+    rng: &mut ChaChaRng,
+) -> anyhow::Result<DlgOutcome> {
+    let meta = rt
+        .manifest
+        .models
+        .get(model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{model}'"))?;
+    let num_classes = meta.num_classes;
+    let x_len: usize = meta.input_shape.iter().product();
+    anyhow::ensure!(victim_x.len() == x_len, "victim image length mismatch");
+    let graph = format!("{model}_dlg");
+
+    // Attacker's view: visible gradient with protected coordinates zeroed,
+    // and a float mask that also zeroes the dummy gradient inside the graph.
+    let dense = mask.to_dense();
+    let mask_f: Vec<f32> = dense.iter().map(|&b| if b { 0.0 } else { 1.0 }).collect();
+    let visible_grad: Vec<f32> = target_grad
+        .iter()
+        .zip(dense.iter())
+        .map(|(&g, &enc)| if enc { 0.0 } else { g })
+        .collect();
+
+    let mut x_dims = vec![1i64];
+    x_dims.extend(meta.input_shape.iter().map(|&d| d as i64));
+
+    let mut best: Option<(f32, Vec<f32>)> = None;
+    for _ in 0..cfg.restarts {
+        let mut dx: Vec<f32> = (0..x_len).map(|_| rng.normal_f64() as f32 * 0.5).collect();
+        let mut dy: Vec<f32> = vec![0.0; num_classes];
+        let mut last_loss = f32::INFINITY;
+        for _ in 0..cfg.iters {
+            let out = rt.execute(
+                &graph,
+                &[
+                    Arg::F32(params, vec![params.len() as i64]),
+                    Arg::F32(&visible_grad, vec![visible_grad.len() as i64]),
+                    Arg::F32(&mask_f, vec![mask_f.len() as i64]),
+                    Arg::F32(&dx, x_dims.clone()),
+                    Arg::F32(&dy, vec![1, num_classes as i64]),
+                    Arg::ScalarF32(cfg.lr),
+                ],
+            )?;
+            dx = out[0].to_vec::<f32>()?;
+            dy = out[1].to_vec::<f32>()?;
+            last_loss = out[2].to_vec::<f32>()?[0];
+        }
+        if best.as_ref().map(|(l, _)| last_loss < *l).unwrap_or(true) {
+            best = Some((last_loss, dx));
+        }
+    }
+    let (final_match_loss, recovered) = best.unwrap();
+    let channels = meta.input_shape.first().copied().unwrap_or(1);
+    Ok(DlgOutcome {
+        similarity: similarity(victim_x, &recovered, channels),
+        recovered,
+        final_match_loss,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::data::synthetic_images;
+    use std::path::PathBuf;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(Runtime::new(dir).unwrap())
+    }
+
+    /// The Fig. 9 qualitative claim: unprotected gradients leak a lot more
+    /// than top-10%-protected gradients.
+    #[test]
+    fn selective_protection_degrades_recovery() {
+        let Some(rt) = runtime() else { return };
+        let model = "lenet";
+        let params = rt.manifest.load_init_params(model).unwrap();
+        let d = synthetic_images(0, 4, (1, 28, 28), 10, 0.9, 31);
+        let (x, y) = d.batch(0, 1);
+
+        // victim gradient on the single sample via the grad artifact —
+        // batch is fixed at 32, so replicate the sample (gradient direction
+        // is identical for replicated samples).
+        let (xb, yb) = {
+            let mut xb = Vec::new();
+            let mut yb = Vec::new();
+            for _ in 0..rt.manifest.train_batch {
+                xb.extend_from_slice(&x);
+                yb.extend_from_slice(&y);
+            }
+            (xb, yb)
+        };
+        let out = rt
+            .execute(
+                "lenet_grad",
+                &[
+                    Arg::F32(&params, vec![params.len() as i64]),
+                    Arg::F32(&xb, vec![rt.manifest.train_batch as i64, 1, 28, 28]),
+                    Arg::I32(&yb, vec![rt.manifest.train_batch as i64]),
+                ],
+            )
+            .unwrap();
+        let grad = out[0].to_vec::<f32>().unwrap();
+
+        // sensitivity-based mask from the victim's own data distribution
+        let sens_out = rt
+            .execute(
+                "lenet_sens",
+                &[
+                    Arg::F32(&params, vec![params.len() as i64]),
+                    Arg::F32(
+                        &d.batch(0, rt.manifest.sens_batch).0,
+                        vec![rt.manifest.sens_batch as i64, 1, 28, 28],
+                    ),
+                    Arg::I32(
+                        &d.batch(0, rt.manifest.sens_batch).1,
+                        vec![rt.manifest.sens_batch as i64],
+                    ),
+                ],
+            )
+            .unwrap();
+        let sens = sens_out[0].to_vec::<f32>().unwrap();
+
+        let cfg = DlgConfig {
+            iters: 120,
+            restarts: 2,
+            lr: 0.05,
+        };
+        let mut rng = ChaChaRng::from_seed(5, 0);
+        let open = run_dlg(
+            &rt,
+            model,
+            &params,
+            &x,
+            &grad,
+            &EncryptionMask::empty(params.len()),
+            &cfg,
+            &mut rng,
+        )
+        .unwrap();
+        let mut rng = ChaChaRng::from_seed(5, 0);
+        let protected = run_dlg(
+            &rt,
+            model,
+            &params,
+            &x,
+            &grad,
+            &EncryptionMask::top_p(&sens, 0.5),
+            &cfg,
+            &mut rng,
+        )
+        .unwrap();
+
+        // Recovery quality: with full gradient visibility the attack gets
+        // substantially closer to the victim image than when the top-50%
+        // sensitive coordinates are encrypted. (Matching loss itself is not
+        // comparable across masks — it sums over fewer visible terms.)
+        eprintln!(
+            "open: mse {:.4} ssim {:.4} | protected: mse {:.4} ssim {:.4}",
+            open.similarity.mse,
+            open.similarity.ssim,
+            protected.similarity.mse,
+            protected.similarity.ssim
+        );
+        assert!(
+            open.similarity.mse < protected.similarity.mse,
+            "open mse {} vs protected mse {}",
+            open.similarity.mse,
+            protected.similarity.mse
+        );
+    }
+}

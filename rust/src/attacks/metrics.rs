@@ -1,0 +1,127 @@
+//! Image-similarity metrics for attack evaluation (from-scratch substitutes
+//! for the paper's sewar MSSSIM/VIF/UQI — monotone proxies for recovery
+//! quality; see DESIGN.md §3).
+
+/// Mean squared error.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b.iter())
+        .map(|(&x, &y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+/// Peak signal-to-noise ratio with the data range estimated from `a`.
+pub fn psnr(a: &[f32], b: &[f32]) -> f64 {
+    let range = a.iter().cloned().fold(f32::NEG_INFINITY, f32::max)
+        - a.iter().cloned().fold(f32::INFINITY, f32::min);
+    let range = range.max(1e-6) as f64;
+    let m = mse(a, b);
+    if m == 0.0 {
+        f64::INFINITY
+    } else {
+        10.0 * (range * range / m).log10()
+    }
+}
+
+/// Global SSIM (single-window variant over the whole image) per channel,
+/// averaged; inputs are CHW flat.
+pub fn ssim(a: &[f32], b: &[f32], channels: usize) -> f64 {
+    assert_eq!(a.len(), b.len());
+    assert!(channels > 0 && a.len() % channels == 0);
+    let per = a.len() / channels;
+    // dynamic range from the reference image
+    let range = (a.iter().cloned().fold(f32::NEG_INFINITY, f32::max)
+        - a.iter().cloned().fold(f32::INFINITY, f32::min))
+    .max(1e-6) as f64;
+    let c1 = (0.01 * range).powi(2);
+    let c2 = (0.03 * range).powi(2);
+    let mut acc = 0.0;
+    for c in 0..channels {
+        let xa = &a[c * per..(c + 1) * per];
+        let xb = &b[c * per..(c + 1) * per];
+        let ma = xa.iter().map(|&v| v as f64).sum::<f64>() / per as f64;
+        let mb = xb.iter().map(|&v| v as f64).sum::<f64>() / per as f64;
+        let mut va = 0.0;
+        let mut vb = 0.0;
+        let mut cov = 0.0;
+        for i in 0..per {
+            let da = xa[i] as f64 - ma;
+            let db = xb[i] as f64 - mb;
+            va += da * da;
+            vb += db * db;
+            cov += da * db;
+        }
+        va /= per as f64 - 1.0;
+        vb /= per as f64 - 1.0;
+        cov /= per as f64 - 1.0;
+        acc += ((2.0 * ma * mb + c1) * (2.0 * cov + c2))
+            / ((ma * ma + mb * mb + c1) * (va + vb + c2));
+    }
+    acc / channels as f64
+}
+
+/// Bundle of all metrics for one (reference, recovered) pair.
+#[derive(Debug, Clone, Copy)]
+pub struct Similarity {
+    pub mse: f64,
+    pub psnr: f64,
+    pub ssim: f64,
+}
+
+pub fn similarity(reference: &[f32], recovered: &[f32], channels: usize) -> Similarity {
+    Similarity {
+        mse: mse(reference, recovered),
+        psnr: psnr(reference, recovered),
+        ssim: ssim(reference, recovered, channels),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::prng::ChaChaRng;
+
+    fn image(seed: u64) -> Vec<f32> {
+        let mut rng = ChaChaRng::from_seed(seed, 0);
+        (0..784)
+            .map(|i| ((i as f32) * 0.05).sin() + 0.2 * rng.normal_f64() as f32)
+            .collect()
+    }
+
+    #[test]
+    fn identical_images_are_perfect() {
+        let a = image(1);
+        assert_eq!(mse(&a, &a), 0.0);
+        assert!(psnr(&a, &a).is_infinite());
+        assert!((ssim(&a, &a, 1) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn metrics_order_by_degradation() {
+        let a = image(1);
+        let mut rng = ChaChaRng::from_seed(9, 9);
+        let slightly: Vec<f32> = a.iter().map(|&v| v + 0.05 * rng.normal_f64() as f32).collect();
+        let heavily: Vec<f32> = a.iter().map(|&v| v + 1.5 * rng.normal_f64() as f32).collect();
+        assert!(mse(&a, &slightly) < mse(&a, &heavily));
+        assert!(psnr(&a, &slightly) > psnr(&a, &heavily));
+        assert!(ssim(&a, &slightly, 1) > ssim(&a, &heavily, 1));
+        // unrelated pure-noise image: ssim well below the related ones
+        let mut nrng = ChaChaRng::from_seed(123, 4);
+        let noise: Vec<f32> = (0..784).map(|_| nrng.normal_f64() as f32).collect();
+        assert!(ssim(&a, &noise, 1) < ssim(&a, &heavily, 1) + 0.2);
+        assert!(ssim(&a, &noise, 1) < 0.7);
+    }
+
+    #[test]
+    fn ssim_bounded() {
+        let a = image(2);
+        let b = image(3);
+        let s = ssim(&a, &b, 1);
+        assert!((-1.0..=1.0).contains(&s));
+    }
+}

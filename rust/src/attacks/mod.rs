@@ -1,0 +1,8 @@
+//! Privacy attacks used to evaluate the selection defense (§4.2.2):
+//! DLG gradient inversion on image models (Fig. 9) and embedding-gradient
+//! token recovery on the transformer (Fig. 10 analog), plus the similarity
+//! metrics that score them.
+
+pub mod dlg;
+pub mod metrics;
+pub mod nlp;

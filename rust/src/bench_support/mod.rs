@@ -1,0 +1,270 @@
+//! Benchmark support: the measured HE pipeline used by every table/figure
+//! harness (criterion is unavailable offline; each bench target under
+//! `rust/benches/` is a `harness = false` binary built on this module).
+//!
+//! Methodology: HE cost is measured per-ciphertext on a sample of chunks and
+//! scaled linearly to the full model — the O(n) linearity is itself verified
+//! by `linearity_holds` below, and matches the paper's own observation
+//! (§1, Fig. 2: "overheads grow linearly with the input size").
+
+use crate::ckks::{encrypt, ops, threshold, Ciphertext, CkksContext};
+use crate::crypto::prng::ChaChaRng;
+use std::time::Instant;
+
+/// Per-stage measured seconds for an HE FedAvg pipeline on one model.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HePipelineCost {
+    pub params: u64,
+    pub n_clients: usize,
+    /// Per-client encryption of the full update.
+    pub encrypt_secs: f64,
+    /// Server-side homomorphic weighted aggregation.
+    pub aggregate_secs: f64,
+    /// Key-holder decryption of the aggregate.
+    pub decrypt_secs: f64,
+    /// Plain (non-HE) aggregation of the same model.
+    pub plain_secs: f64,
+    /// Ciphertext bytes per client upload.
+    pub ct_bytes: u64,
+    /// Plaintext bytes per client upload.
+    pub pt_bytes: u64,
+    /// Fraction of ciphertexts actually measured (1.0 = full).
+    pub sample_fraction: f64,
+}
+
+impl HePipelineCost {
+    /// Total HE-side seconds (the Table-4 "HE Time" column: encrypt all
+    /// clients + aggregate + decrypt).
+    pub fn he_secs(&self) -> f64 {
+        self.encrypt_secs * self.n_clients as f64 + self.aggregate_secs + self.decrypt_secs
+    }
+    /// Computation overhead ratio vs plaintext (Table 4 "Comp Ratio").
+    pub fn comp_ratio(&self) -> f64 {
+        self.he_secs() / self.plain_secs.max(1e-9)
+    }
+    /// Communication overhead ratio (Table 4 "Comm Ratio").
+    pub fn comm_ratio(&self) -> f64 {
+        self.ct_bytes as f64 / self.pt_bytes.max(1) as f64
+    }
+}
+
+/// Measure the full-encryption FedAvg pipeline for a model of `n_params`
+/// parameters and `n_clients` clients, measuring at most `max_cts`
+/// ciphertext chunks and extrapolating linearly.
+pub fn measure_pipeline(
+    ctx: &CkksContext,
+    n_clients: usize,
+    n_params: u64,
+    max_cts: usize,
+    rng: &mut ChaChaRng,
+) -> HePipelineCost {
+    let batch = ctx.batch() as u64;
+    let total_cts = n_params.div_ceil(batch).max(1);
+    let measured_cts = (total_cts as usize).min(max_cts).max(1);
+    let scale = total_cts as f64 / measured_cts as f64;
+
+    let (pk, sk) = ctx.keygen(rng);
+    let alphas: Vec<f64> = vec![1.0 / n_clients as f64; n_clients];
+    let values: Vec<f64> = (0..ctx.batch())
+        .map(|i| ((i * 13) as f64 * 1e-4).sin())
+        .collect();
+
+    let mut enc = 0.0;
+    let mut agg = 0.0;
+    let mut dec = 0.0;
+    for _ in 0..measured_cts {
+        // measure one client's encode+encrypt as the per-client figure
+        let mut cts: Vec<Ciphertext> = Vec::with_capacity(n_clients);
+        for c in 0..n_clients {
+            let t = Instant::now();
+            let pt = ctx.encoder.encode(&values);
+            let ct = encrypt::encrypt(&ctx.params, &pk, &pt, values.len(), rng);
+            if c == 0 {
+                enc += t.elapsed().as_secs_f64();
+            }
+            cts.push(ct);
+        }
+        let t = Instant::now();
+        let out = ops::weighted_sum(&cts, &alphas, &ctx.params);
+        agg += t.elapsed().as_secs_f64();
+        let t = Instant::now();
+        let _ = ctx.decrypt_values(&out, &sk);
+        dec += t.elapsed().as_secs_f64();
+    }
+
+    // plaintext aggregation over the same parameter count (sampled)
+    let plain_chunk: usize = 1 << 20;
+    let plain_measured = (n_params as usize).min(plain_chunk).max(1);
+    let models: Vec<Vec<f32>> = (0..n_clients)
+        .map(|c| (0..plain_measured).map(|i| ((i + c) as f32) * 1e-6).collect())
+        .collect();
+    let t = Instant::now();
+    let _ = crate::he_agg::native::plain_fedavg(&models, &alphas);
+    let plain_secs = t.elapsed().as_secs_f64() * (n_params as f64 / plain_measured as f64);
+
+    HePipelineCost {
+        params: n_params,
+        n_clients,
+        encrypt_secs: enc * scale,
+        aggregate_secs: agg * scale,
+        decrypt_secs: dec * scale,
+        plain_secs,
+        ct_bytes: total_cts * ctx.params.ciphertext_bytes() as u64,
+        pt_bytes: 4 * n_params,
+        sample_fraction: measured_cts as f64 / total_cts as f64,
+    }
+}
+
+/// Selective-encryption variant: encrypt `ratio` of the parameters, leave
+/// the rest plaintext (Fig. 7 / Table 7 workload).
+pub fn measure_selective(
+    ctx: &CkksContext,
+    n_clients: usize,
+    n_params: u64,
+    ratio: f64,
+    max_cts: usize,
+    rng: &mut ChaChaRng,
+) -> HePipelineCost {
+    let enc_params = (n_params as f64 * ratio).round() as u64;
+    let plain_params = n_params - enc_params;
+    let mut cost = if enc_params > 0 {
+        measure_pipeline(ctx, n_clients, enc_params, max_cts, rng)
+    } else {
+        HePipelineCost {
+            n_clients,
+            sample_fraction: 1.0,
+            ..Default::default()
+        }
+    };
+    // the plaintext remainder adds plain aggregation time + bytes
+    if plain_params > 0 {
+        let alphas: Vec<f64> = vec![1.0 / n_clients as f64; n_clients];
+        let chunk = (plain_params as usize).min(1 << 20);
+        let models: Vec<Vec<f32>> = (0..n_clients)
+            .map(|c| (0..chunk).map(|i| ((i + c) as f32) * 1e-6).collect())
+            .collect();
+        let t = Instant::now();
+        let _ = crate::he_agg::native::plain_fedavg(&models, &alphas);
+        cost.plain_secs += t.elapsed().as_secs_f64() * (plain_params as f64 / chunk as f64);
+        cost.ct_bytes += 4 * plain_params;
+    }
+    cost.params = n_params;
+    cost.pt_bytes = 4 * n_params;
+    cost
+}
+
+/// Threshold-HE pipeline cost (Fig. 12): interactive keygen + encrypt +
+/// aggregate + distributed decryption for `n_parties`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ThresholdCost {
+    pub keygen_secs: f64,
+    pub encrypt_secs: f64,
+    pub aggregate_secs: f64,
+    pub decrypt_secs: f64,
+}
+
+pub fn measure_threshold(
+    ctx: &CkksContext,
+    n_parties: usize,
+    n_cts: usize,
+    rng: &mut ChaChaRng,
+) -> ThresholdCost {
+    let t = Instant::now();
+    let a = threshold::common_reference(&ctx.params, 1);
+    let parties: Vec<threshold::ThresholdParty> = (0..n_parties)
+        .map(|k| threshold::party_keygen(&ctx.params, k, &a, rng))
+        .collect();
+    let shares: Vec<&crate::ckks::RnsPoly> = parties.iter().map(|p| &p.b_share_ntt).collect();
+    let pk = threshold::combine_public_key(&ctx.params, &a, &shares);
+    let keygen_secs = t.elapsed().as_secs_f64();
+
+    let values: Vec<f64> = (0..ctx.batch()).map(|i| (i as f64) * 1e-4).collect();
+    let alphas: Vec<f64> = vec![1.0 / n_parties as f64; n_parties];
+    let mut encrypt_secs = 0.0;
+    let mut aggregate_secs = 0.0;
+    let mut decrypt_secs = 0.0;
+    for _ in 0..n_cts {
+        let mut cts = Vec::with_capacity(n_parties);
+        for _ in 0..n_parties {
+            let t = Instant::now();
+            let pt = ctx.encoder.encode(&values);
+            cts.push(encrypt::encrypt(&ctx.params, &pk, &pt, values.len(), rng));
+            encrypt_secs += t.elapsed().as_secs_f64();
+        }
+        let t = Instant::now();
+        let agg = ops::weighted_sum(&cts, &alphas, &ctx.params);
+        aggregate_secs += t.elapsed().as_secs_f64();
+        let t = Instant::now();
+        let partials: Vec<crate::ckks::RnsPoly> = parties
+            .iter()
+            .map(|p| threshold::partial_decrypt(&ctx.params, p, &agg, rng))
+            .collect();
+        let m = threshold::combine_partials(&ctx.params, &agg, &partials);
+        let _ = ctx.encoder.decode(&m, agg.n_values, agg.scale);
+        decrypt_secs += t.elapsed().as_secs_f64();
+    }
+    ThresholdCost {
+        keygen_secs,
+        encrypt_secs,
+        aggregate_secs,
+        decrypt_secs,
+    }
+}
+
+/// Wall-clock a closure `iters` times, returning per-iteration seconds.
+pub fn time_iters<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    let t = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t.elapsed().as_secs_f64() / iters.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pipeline_measures_something() {
+        let ctx = CkksContext::new(1024, 4, 40).unwrap();
+        let mut rng = ChaChaRng::from_seed(1, 0);
+        let cost = measure_pipeline(&ctx, 3, 5_000, 8, &mut rng);
+        assert!(cost.he_secs() > 0.0);
+        assert!(cost.plain_secs > 0.0);
+        assert!(cost.comp_ratio() > 1.0, "HE must cost more than plaintext");
+        assert!(cost.comm_ratio() > 1.0);
+        assert!((cost.sample_fraction - 0.8).abs() < 1e-9); // 8 of 10 chunks
+    }
+
+    #[test]
+    fn linearity_holds() {
+        // The extrapolation premise: cost per ciphertext is constant.
+        let ctx = CkksContext::new(1024, 4, 40).unwrap();
+        let mut rng = ChaChaRng::from_seed(2, 0);
+        let small = measure_pipeline(&ctx, 2, 512 * 4, 4, &mut rng);
+        let large = measure_pipeline(&ctx, 2, 512 * 16, 16, &mut rng);
+        let ratio = large.he_secs() / small.he_secs();
+        assert!((2.0..8.0).contains(&ratio), "ratio {ratio} not ~4");
+    }
+
+    #[test]
+    fn selective_cheaper_than_full() {
+        let ctx = CkksContext::new(1024, 4, 40).unwrap();
+        let mut rng = ChaChaRng::from_seed(3, 0);
+        let full = measure_selective(&ctx, 3, 50_000, 1.0, 8, &mut rng);
+        let tenth = measure_selective(&ctx, 3, 50_000, 0.1, 8, &mut rng);
+        let none = measure_selective(&ctx, 3, 50_000, 0.0, 8, &mut rng);
+        assert!(tenth.he_secs() < full.he_secs());
+        assert!(tenth.ct_bytes < full.ct_bytes);
+        assert_eq!(none.he_secs(), 0.0);
+        assert_eq!(none.ct_bytes, 4 * 50_000);
+    }
+
+    #[test]
+    fn threshold_cost_positive() {
+        let ctx = CkksContext::new(512, 4, 40).unwrap();
+        let mut rng = ChaChaRng::from_seed(4, 0);
+        let c = measure_threshold(&ctx, 2, 2, &mut rng);
+        assert!(c.keygen_secs > 0.0 && c.decrypt_secs > 0.0);
+    }
+}

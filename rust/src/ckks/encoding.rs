@@ -1,0 +1,305 @@
+//! CKKS canonical-embedding encoder/decoder.
+//!
+//! A real vector `v ∈ R^{n/2}` is packed into the slots of a plaintext
+//! polynomial by evaluating at the primitive 2n-th roots of unity
+//! ζ^{2j+1}, ζ = e^{iπ/n}. Using `E_j = Σ_k c_k ζ^{(2j+1)k} = FFT_n(c_k ζ^k)_j`
+//! the map reduces to a twisted complex FFT; conjugate symmetry
+//! `E_{n-1-j} = conj(E_j)` keeps coefficients real.
+//!
+//! Homomorphism: slot values are evaluations, so ciphertext addition adds
+//! slots and scalar multiplication scales slots — exactly the two operations
+//! Algorithm 1 needs.
+
+use super::params::CkksParams;
+use super::poly::RnsPoly;
+use std::sync::Arc;
+
+/// Minimal complex number (no num-complex offline).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct C64 {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl C64 {
+    #[inline]
+    pub fn new(re: f64, im: f64) -> Self {
+        C64 { re, im }
+    }
+    #[inline]
+    pub fn conj(self) -> Self {
+        C64::new(self.re, -self.im)
+    }
+    #[inline]
+    pub fn mul(self, o: C64) -> Self {
+        C64::new(
+            self.re * o.re - self.im * o.im,
+            self.re * o.im + self.im * o.re,
+        )
+    }
+    #[inline]
+    pub fn add(self, o: C64) -> Self {
+        C64::new(self.re + o.re, self.im + o.im)
+    }
+    #[inline]
+    pub fn sub(self, o: C64) -> Self {
+        C64::new(self.re - o.re, self.im - o.im)
+    }
+}
+
+/// Iterative radix-2 complex FFT with precomputed twiddles.
+pub struct Fft {
+    n: usize,
+    /// Twiddles ω^k, ω = e^{2πi/n}, k < n/2.
+    twiddles: Vec<C64>,
+}
+
+impl Fft {
+    pub fn new(n: usize) -> Self {
+        assert!(n.is_power_of_two());
+        let twiddles = (0..n / 2)
+            .map(|k| {
+                let t = 2.0 * std::f64::consts::PI * k as f64 / n as f64;
+                C64::new(t.cos(), t.sin())
+            })
+            .collect();
+        Fft { n, twiddles }
+    }
+
+    fn bit_reverse_permute(&self, a: &mut [C64]) {
+        let bits = self.n.trailing_zeros();
+        for i in 0..self.n {
+            let j = super::modarith::bit_reverse(i, bits);
+            if i < j {
+                a.swap(i, j);
+            }
+        }
+    }
+
+    /// Forward FFT: `A_j = Σ_k a_k ω^{jk}` (ω = e^{2πi/n}).
+    pub fn forward(&self, a: &mut [C64]) {
+        assert_eq!(a.len(), self.n);
+        self.bit_reverse_permute(a);
+        let mut len = 2;
+        while len <= self.n {
+            let step = self.n / len;
+            for start in (0..self.n).step_by(len) {
+                for k in 0..len / 2 {
+                    let w = self.twiddles[k * step];
+                    let u = a[start + k];
+                    let v = a[start + k + len / 2].mul(w);
+                    a[start + k] = u.add(v);
+                    a[start + k + len / 2] = u.sub(v);
+                }
+            }
+            len <<= 1;
+        }
+    }
+
+    /// Inverse FFT: `a_k = (1/n) Σ_j A_j ω^{-jk}`.
+    pub fn inverse(&self, a: &mut [C64]) {
+        // conj → forward → conj, then scale.
+        for x in a.iter_mut() {
+            *x = x.conj();
+        }
+        self.forward(a);
+        let inv_n = 1.0 / self.n as f64;
+        for x in a.iter_mut() {
+            *x = C64::new(x.re * inv_n, -x.im * inv_n);
+        }
+    }
+}
+
+/// The CKKS encoder for a fixed parameter set.
+pub struct Encoder {
+    params: Arc<CkksParams>,
+    fft: Fft,
+    /// Twist factors ζ^k (ζ = e^{iπ/n}), k < n.
+    zeta: Vec<C64>,
+    /// Inverse twist ζ^{-k}.
+    zeta_inv: Vec<C64>,
+}
+
+impl Encoder {
+    pub fn new(params: Arc<CkksParams>) -> Self {
+        let n = params.n;
+        let fft = Fft::new(n);
+        let zeta: Vec<C64> = (0..n)
+            .map(|k| {
+                let t = std::f64::consts::PI * k as f64 / n as f64;
+                C64::new(t.cos(), t.sin())
+            })
+            .collect();
+        let zeta_inv = zeta.iter().map(|z| z.conj()).collect();
+        Encoder {
+            params,
+            fft,
+            zeta,
+            zeta_inv,
+        }
+    }
+
+    /// Slots per plaintext.
+    pub fn batch(&self) -> usize {
+        self.params.n / 2
+    }
+
+    /// Encode up to `batch()` real values at scale Δ into an RNS plaintext.
+    pub fn encode(&self, values: &[f64]) -> RnsPoly {
+        let n = self.params.n;
+        let half = n / 2;
+        assert!(values.len() <= half, "too many values for one plaintext");
+        // Conjugate-symmetric evaluation vector.
+        let mut e = vec![C64::default(); n];
+        for (j, &v) in values.iter().enumerate() {
+            e[j] = C64::new(v, 0.0);
+            e[n - 1 - j] = C64::new(v, 0.0); // conj of a real value
+        }
+        self.fft.inverse(&mut e);
+        let delta = self.params.delta();
+        let coeffs: Vec<i128> = (0..n)
+            .map(|k| {
+                let u = e[k].mul(self.zeta_inv[k]);
+                // u is real up to fp error by conjugate symmetry.
+                (u.re * delta).round() as i128
+            })
+            .collect();
+        RnsPoly::from_signed_wide(&self.params, &coeffs)
+    }
+
+    /// Decode `n_values` slots from a coefficient-domain plaintext at the
+    /// given aggregate scale (Δ for fresh, Δ·Δ_w after weighting).
+    pub fn decode(&self, pt: &RnsPoly, n_values: usize, scale: f64) -> Vec<f64> {
+        let n = self.params.n;
+        assert!(n_values <= n / 2);
+        let centered = pt.to_centered_coeffs(&self.params);
+        let mut u: Vec<C64> = (0..n)
+            .map(|k| C64::new(centered[k] as f64, 0.0).mul(self.zeta[k]))
+            .collect();
+        self.fft.forward(&mut u);
+        (0..n_values).map(|j| u[j].re / scale).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::prng::ChaChaRng;
+
+    fn encoder(n: usize, bits: u32) -> Encoder {
+        Encoder::new(Arc::new(CkksParams::new(n, 4, bits).unwrap()))
+    }
+
+    #[test]
+    fn fft_roundtrip() {
+        let fft = Fft::new(256);
+        let mut rng = ChaChaRng::from_seed(1, 0);
+        let orig: Vec<C64> = (0..256)
+            .map(|_| C64::new(rng.uniform_f64() - 0.5, rng.uniform_f64() - 0.5))
+            .collect();
+        let mut a = orig.clone();
+        fft.forward(&mut a);
+        fft.inverse(&mut a);
+        for (x, y) in a.iter().zip(orig.iter()) {
+            assert!((x.re - y.re).abs() < 1e-12 && (x.im - y.im).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fft_matches_dft_definition() {
+        let n = 16;
+        let fft = Fft::new(n);
+        let mut rng = ChaChaRng::from_seed(2, 0);
+        let a: Vec<C64> = (0..n)
+            .map(|_| C64::new(rng.uniform_f64(), rng.uniform_f64()))
+            .collect();
+        let mut fast = a.clone();
+        fft.forward(&mut fast);
+        for j in 0..n {
+            let mut acc = C64::default();
+            for (k, &x) in a.iter().enumerate() {
+                let t = 2.0 * std::f64::consts::PI * (j * k) as f64 / n as f64;
+                acc = acc.add(x.mul(C64::new(t.cos(), t.sin())));
+            }
+            assert!((acc.re - fast[j].re).abs() < 1e-9);
+            assert!((acc.im - fast[j].im).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let enc = encoder(1024, 40);
+        let mut rng = ChaChaRng::from_seed(3, 0);
+        let values: Vec<f64> = (0..enc.batch()).map(|_| rng.uniform_f64() * 8.0 - 4.0).collect();
+        let pt = enc.encode(&values);
+        let dec = enc.decode(&pt, values.len(), enc.params.delta());
+        for (a, b) in values.iter().zip(dec.iter()) {
+            assert!((a - b).abs() < 1e-8, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_error_shrinks_with_scale() {
+        // The Table-6 accuracy mechanism: fewer scaling bits ⇒ larger
+        // quantization error.
+        let err_at = |bits: u32| {
+            let enc = encoder(512, bits);
+            let values: Vec<f64> = (0..enc.batch()).map(|i| (i as f64) * 1e-3).collect();
+            let pt = enc.encode(&values);
+            let dec = enc.decode(&pt, values.len(), enc.params.delta());
+            values
+                .iter()
+                .zip(dec.iter())
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f64, f64::max)
+        };
+        let coarse = err_at(14);
+        let fine = err_at(40);
+        assert!(coarse > 100.0 * fine, "coarse {coarse} fine {fine}");
+    }
+
+    #[test]
+    fn encoding_is_additive() {
+        let enc = encoder(256, 40);
+        let a: Vec<f64> = (0..enc.batch()).map(|i| i as f64 * 0.01).collect();
+        let b: Vec<f64> = (0..enc.batch()).map(|i| 1.0 - i as f64 * 0.02).collect();
+        let mut pa = enc.encode(&a);
+        let pb = enc.encode(&b);
+        pa.add_assign(&pb, &enc.params);
+        let dec = enc.decode(&pa, enc.batch(), enc.params.delta());
+        for i in 0..enc.batch() {
+            assert!((dec[i] - (a[i] + b[i])).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn scalar_multiplication_scales_slots() {
+        let enc = encoder(256, 40);
+        let a: Vec<f64> = (0..enc.batch()).map(|i| (i as f64 - 64.0) * 0.05).collect();
+        let mut pa = enc.encode(&a);
+        let alpha = 0.375;
+        let w = enc.params.encode_weight(alpha);
+        pa.mul_scalar(&w, &enc.params);
+        let scale = enc.params.delta() * enc.params.delta_w();
+        let dec = enc.decode(&pa, enc.batch(), scale);
+        for i in 0..enc.batch() {
+            assert!(
+                (dec[i] - alpha * a[i]).abs() < 1e-6,
+                "{} vs {}",
+                dec[i],
+                alpha * a[i]
+            );
+        }
+    }
+
+    #[test]
+    fn partial_fill_decodes_cleanly() {
+        let enc = encoder(256, 40);
+        let values = vec![1.5, -2.25, 3.0];
+        let pt = enc.encode(&values);
+        let dec = enc.decode(&pt, 3, enc.params.delta());
+        for (a, b) in values.iter().zip(dec.iter()) {
+            assert!((a - b).abs() < 1e-8);
+        }
+    }
+}

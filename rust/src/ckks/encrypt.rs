@@ -1,0 +1,209 @@
+//! RLWE encryption / decryption.
+//!
+//! `Enc(pk, m)`: sample ephemeral ternary `u` and errors `e0, e1`;
+//! `ct = (c0, c1) = (b·u + e0 + m, a·u + e1)`.
+//! `Dec(sk, ct)`: `m ≈ c0 + c1·s` (error ≈ e·u + e0 + e1·s, a few bits —
+//! negligible against Δ·Δ_w).
+//!
+//! Ciphertext polynomials are kept in **coefficient domain**: the
+//! aggregation pipeline only adds and scalar-multiplies, which are
+//! domain-agnostic, and the serialization/kernels operate on raw limbs.
+
+use super::keys::{PublicKey, SecretKey};
+use super::params::CkksParams;
+use super::poly::RnsPoly;
+use crate::crypto::prng::ChaChaRng;
+
+/// A CKKS ciphertext (pair of RNS polynomials, coefficient domain) plus the
+/// metadata needed to decode: number of meaningful slots and current scale.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Ciphertext {
+    pub c0: RnsPoly,
+    pub c1: RnsPoly,
+    /// Number of packed values (≤ n/2).
+    pub n_values: usize,
+    /// Aggregate scale (Δ fresh; Δ·Δ_w after weighting).
+    pub scale: f64,
+}
+
+/// Encrypt a coefficient-domain plaintext polynomial.
+pub fn encrypt(
+    params: &CkksParams,
+    pk: &PublicKey,
+    pt: &RnsPoly,
+    n_values: usize,
+    rng: &mut ChaChaRng,
+) -> Ciphertext {
+    assert!(!pt.ntt_form, "plaintext must be in coefficient domain");
+    let mut u = RnsPoly::sample_ternary(params, rng);
+    u.to_ntt(params);
+
+    // c0 = b·u (NTT) → coeff + e0 + m
+    let mut c0 = pk.b_ntt.mul_ntt(&u, params);
+    c0.from_ntt(params);
+    let e0 = RnsPoly::sample_error(params, rng);
+    c0.add_assign(&e0, params);
+    c0.add_assign(pt, params);
+
+    // c1 = a·u (NTT) → coeff + e1
+    let mut c1 = pk.a_ntt.mul_ntt(&u, params);
+    c1.from_ntt(params);
+    let e1 = RnsPoly::sample_error(params, rng);
+    c1.add_assign(&e1, params);
+
+    Ciphertext {
+        c0,
+        c1,
+        n_values,
+        scale: params.delta(),
+    }
+}
+
+/// Decrypt to a coefficient-domain plaintext polynomial.
+pub fn decrypt(params: &CkksParams, sk: &SecretKey, ct: &Ciphertext) -> RnsPoly {
+    let mut c1 = ct.c1.clone();
+    c1.to_ntt(params);
+    let mut m = c1.mul_ntt(&sk.s_ntt, params);
+    m.from_ntt(params);
+    m.add_assign(&ct.c0, params);
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::encoding::Encoder;
+    use crate::ckks::keys::keygen;
+    use std::sync::Arc;
+
+    fn setup(n: usize, bits: u32) -> (Arc<CkksParams>, Encoder, PublicKey, SecretKey) {
+        let params = Arc::new(CkksParams::new(n, 4, bits).unwrap());
+        let encoder = Encoder::new(params.clone());
+        let mut rng = ChaChaRng::from_seed(42, 0);
+        let (pk, sk) = keygen(&params, &mut rng);
+        (params, encoder, pk, sk)
+    }
+
+    #[test]
+    fn encrypt_decrypt_roundtrip() {
+        let (params, encoder, pk, sk) = setup(1024, 40);
+        let mut rng = ChaChaRng::from_seed(1, 1);
+        let values: Vec<f64> = (0..512).map(|i| (i as f64) * 0.01 - 2.5).collect();
+        let pt = encoder.encode(&values);
+        let ct = encrypt(&params, &pk, &pt, values.len(), &mut rng);
+        let dec_pt = decrypt(&params, &sk, &ct);
+        let dec = encoder.decode(&dec_pt, ct.n_values, ct.scale);
+        for (a, b) in values.iter().zip(dec.iter()) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn ciphertext_is_not_plaintext() {
+        // The ciphertext limbs must look nothing like the encoded message.
+        let (params, encoder, pk, _sk) = setup(256, 30);
+        let mut rng = ChaChaRng::from_seed(2, 2);
+        let values = vec![1.0; 128];
+        let pt = encoder.encode(&values);
+        let ct = encrypt(&params, &pk, &pt, 128, &mut rng);
+        // A fresh encode of the same values differs wildly from c0.
+        let diff_count = pt.limbs[0]
+            .iter()
+            .zip(ct.c0.limbs[0].iter())
+            .filter(|(a, b)| a != b)
+            .count();
+        assert!(diff_count > 250, "c0 leaks plaintext structure");
+    }
+
+    #[test]
+    fn decrypt_with_wrong_key_fails() {
+        let (params, encoder, pk, _sk) = setup(256, 30);
+        let mut rng = ChaChaRng::from_seed(3, 3);
+        let values = vec![0.5; 128];
+        let pt = encoder.encode(&values);
+        let ct = encrypt(&params, &pk, &pt, 128, &mut rng);
+        let (_pk2, sk2) = keygen(&params, &mut rng);
+        let dec_pt = decrypt(&params, &sk2, &ct);
+        let dec = encoder.decode(&dec_pt, 128, ct.scale);
+        let max_err = values
+            .iter()
+            .zip(dec.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        assert!(max_err > 1.0, "wrong key should not decrypt (err {max_err})");
+    }
+
+    #[test]
+    fn homomorphic_addition() {
+        let (params, encoder, pk, sk) = setup(512, 40);
+        let mut rng = ChaChaRng::from_seed(4, 4);
+        let a: Vec<f64> = (0..256).map(|i| i as f64 * 0.01).collect();
+        let b: Vec<f64> = (0..256).map(|i| 3.0 - i as f64 * 0.02).collect();
+        let mut ca = encrypt(&params, &pk, &encoder.encode(&a), 256, &mut rng);
+        let cb = encrypt(&params, &pk, &encoder.encode(&b), 256, &mut rng);
+        ca.c0.add_assign(&cb.c0, &params);
+        ca.c1.add_assign(&cb.c1, &params);
+        let dec = encoder.decode(&decrypt(&params, &sk, &ca), 256, ca.scale);
+        for i in 0..256 {
+            assert!((dec[i] - (a[i] + b[i])).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn homomorphic_scalar_weighting() {
+        // The exact operation of Algorithm 1: ct ← α ⊙ ct.
+        let (params, encoder, pk, sk) = setup(512, 40);
+        let mut rng = ChaChaRng::from_seed(5, 5);
+        let a: Vec<f64> = (0..256).map(|i| (i as f64 - 128.0) * 0.05).collect();
+        let mut ct = encrypt(&params, &pk, &encoder.encode(&a), 256, &mut rng);
+        let alpha = 1.0 / 3.0;
+        let w = params.encode_weight(alpha);
+        ct.c0.mul_scalar(&w, &params);
+        ct.c1.mul_scalar(&w, &params);
+        ct.scale *= params.delta_w();
+        let dec = encoder.decode(&decrypt(&params, &sk, &ct), 256, ct.scale);
+        for i in 0..256 {
+            assert!(
+                (dec[i] - alpha * a[i]).abs() < 1e-5,
+                "{} vs {}",
+                dec[i],
+                alpha * a[i]
+            );
+        }
+    }
+
+    #[test]
+    fn noise_stays_small_after_weighted_sum() {
+        // 16-client weighted aggregate at the paper's default scale.
+        let (params, encoder, pk, sk) = setup(1024, 52);
+        let mut rng = ChaChaRng::from_seed(6, 6);
+        let n_clients = 16;
+        let alpha = 1.0 / n_clients as f64;
+        let w = params.encode_weight(alpha);
+        let values: Vec<f64> = (0..512).map(|i| (i as f64) * 0.003 - 0.7).collect();
+        let mut agg: Option<Ciphertext> = None;
+        for _ in 0..n_clients {
+            let mut ct = encrypt(&params, &pk, &encoder.encode(&values), 512, &mut rng);
+            ct.c0.mul_scalar(&w, &params);
+            ct.c1.mul_scalar(&w, &params);
+            ct.scale *= params.delta_w();
+            match &mut agg {
+                None => agg = Some(ct),
+                Some(acc) => {
+                    acc.c0.add_assign(&ct.c0, &params);
+                    acc.c1.add_assign(&ct.c1, &params);
+                }
+            }
+        }
+        let agg = agg.unwrap();
+        let dec = encoder.decode(&decrypt(&params, &sk, &agg), 512, agg.scale);
+        for i in 0..512 {
+            assert!(
+                (dec[i] - values[i]).abs() < 1e-6,
+                "{} vs {}",
+                dec[i],
+                values[i]
+            );
+        }
+    }
+}

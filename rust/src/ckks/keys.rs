@@ -1,0 +1,115 @@
+//! Key generation: ternary secret, RLWE public key.
+//!
+//! The public key is kept in NTT form (both halves) because encryption
+//! multiplies it by the ephemeral ternary `u` — the hot loop of client-side
+//! encryption.
+
+use super::params::CkksParams;
+use super::poly::RnsPoly;
+use crate::crypto::prng::ChaChaRng;
+
+/// Secret key `s` (ternary), stored in NTT form for decryption products.
+#[derive(Debug, Clone)]
+pub struct SecretKey {
+    pub s_ntt: RnsPoly,
+}
+
+/// Public key `(b, a) = (-(a·s) + e, a)`, both halves in NTT form.
+#[derive(Debug, Clone)]
+pub struct PublicKey {
+    pub b_ntt: RnsPoly,
+    pub a_ntt: RnsPoly,
+}
+
+/// Generate a single-key pair.
+pub fn keygen(params: &CkksParams, rng: &mut ChaChaRng) -> (PublicKey, SecretKey) {
+    let mut s = RnsPoly::sample_ternary(params, rng);
+    s.to_ntt(params);
+
+    let mut a = RnsPoly::sample_uniform(params, rng);
+    a.to_ntt(params);
+
+    let mut e = RnsPoly::sample_error(params, rng);
+    e.to_ntt(params);
+
+    // b = -(a·s) + e
+    let mut b = a.mul_ntt(&s, params);
+    b.negate(params);
+    b.add_assign(&e, params);
+
+    (
+        PublicKey {
+            b_ntt: b,
+            a_ntt: a,
+        },
+        SecretKey { s_ntt: s },
+    )
+}
+
+/// Generate a public key for a *given* secret and common reference `a`
+/// (used by the threshold protocol where all parties share `a`).
+pub fn keygen_with(
+    params: &CkksParams,
+    s_ntt: &RnsPoly,
+    a_ntt: &RnsPoly,
+    rng: &mut ChaChaRng,
+) -> PublicKey {
+    let mut e = RnsPoly::sample_error(params, rng);
+    e.to_ntt(params);
+    let mut b = a_ntt.mul_ntt(s_ntt, params);
+    b.negate(params);
+    b.add_assign(&e, params);
+    PublicKey {
+        b_ntt: b,
+        a_ntt: a_ntt.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keygen_relation_holds() {
+        // b + a·s = e must be small.
+        let params = CkksParams::new(256, 3, 30).unwrap();
+        let mut rng = ChaChaRng::from_seed(1, 0);
+        let (pk, sk) = keygen(&params, &mut rng);
+        let mut lhs = pk.a_ntt.mul_ntt(&sk.s_ntt, &params);
+        lhs.add_assign(&pk.b_ntt, &params);
+        lhs.from_ntt(&params);
+        let coeffs = lhs.to_centered_coeffs(&params);
+        assert!(coeffs.iter().all(|&c| c.abs() <= 21), "error not small");
+        assert!(coeffs.iter().any(|&c| c != 0), "error must be nonzero");
+    }
+
+    #[test]
+    fn distinct_keys_from_distinct_randomness() {
+        let params = CkksParams::new(64, 2, 30).unwrap();
+        let mut r1 = ChaChaRng::from_seed(1, 0);
+        let mut r2 = ChaChaRng::from_seed(2, 0);
+        let (pk1, sk1) = keygen(&params, &mut r1);
+        let (pk2, sk2) = keygen(&params, &mut r2);
+        assert_ne!(sk1.s_ntt, sk2.s_ntt);
+        assert_ne!(pk1.a_ntt, pk2.a_ntt);
+    }
+
+    #[test]
+    fn keygen_with_shared_a() {
+        let params = CkksParams::new(64, 2, 30).unwrap();
+        let mut rng = ChaChaRng::from_seed(3, 0);
+        let mut a = RnsPoly::sample_uniform(&params, &mut rng);
+        a.to_ntt(&params);
+        let mut s = RnsPoly::sample_ternary(&params, &mut rng);
+        s.to_ntt(&params);
+        let pk = keygen_with(&params, &s, &a, &mut rng);
+        assert_eq!(pk.a_ntt, a);
+        let mut lhs = pk.a_ntt.mul_ntt(&s, &params);
+        lhs.add_assign(&pk.b_ntt, &params);
+        lhs.from_ntt(&params);
+        assert!(lhs
+            .to_centered_coeffs(&params)
+            .iter()
+            .all(|&c| c.abs() <= 21));
+    }
+}

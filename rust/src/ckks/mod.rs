@@ -1,0 +1,115 @@
+//! From-scratch RNS-CKKS homomorphic encryption (the paper's "Crypto
+//! Foundation" layer, which FedML-HE outsourced to PALISADE/TenSEAL).
+//!
+//! Scope is exactly the paper's usage envelope: approximate-number encoding,
+//! encryption/decryption, ciphertext addition, and ciphertext × plaintext
+//! *scalar* multiplication (multiplicative depth 1 — the aggregation-weight
+//! multiply of Algorithm 1). No relinearization, rescaling or bootstrapping
+//! is needed at this depth.
+//!
+//! Design choices (see DESIGN.md §2):
+//! * power-of-two ring `Z_Q[X]/(X^n + 1)`, default `n = 8192`;
+//! * RNS limbs `q_l < 2^31`, `q_l ≡ 1 (mod 2n)` so that the L1 Pallas kernel
+//!   can mirror the modular arithmetic exactly in uint64;
+//! * canonical-embedding slot encoding (`n/2` packed values per ciphertext =
+//!   the paper's default "HE packing batch size 4096");
+//! * ternary secrets, centered-binomial errors (σ ≈ 3.2);
+//! * n-of-n additive threshold keys + Shamir escrow (Appendix B).
+
+pub mod encoding;
+pub mod encrypt;
+pub mod keys;
+pub mod modarith;
+pub mod ntt;
+pub mod ops;
+pub mod params;
+pub mod poly;
+pub mod serialize;
+pub mod threshold;
+
+pub use encoding::Encoder;
+pub use encrypt::{decrypt, encrypt, Ciphertext};
+pub use keys::{keygen, PublicKey, SecretKey};
+pub use params::CkksParams;
+pub use poly::RnsPoly;
+
+use crate::crypto::prng::ChaChaRng;
+use std::sync::Arc;
+
+/// A convenience bundle of parameters + encoder: the "crypto context" that
+/// the key authority distributes in Algorithm 1.
+#[derive(Clone)]
+pub struct CkksContext {
+    pub params: Arc<CkksParams>,
+    pub encoder: Arc<Encoder>,
+}
+
+impl CkksContext {
+    /// Build a context; `n` the ring degree (power of two), `scaling_bits`
+    /// the CKKS scale exponent (paper default 52), `num_limbs` RNS limbs.
+    pub fn new(n: usize, num_limbs: usize, scaling_bits: u32) -> anyhow::Result<Self> {
+        let params = Arc::new(CkksParams::new(n, num_limbs, scaling_bits)?);
+        let encoder = Arc::new(Encoder::new(params.clone()));
+        Ok(CkksContext { params, encoder })
+    }
+
+    /// The paper's default configuration: multiplicative depth 1, scaling
+    /// factor 52 bits, packing batch 4096 (n = 8192), 128-bit security.
+    pub fn default_paper() -> anyhow::Result<Self> {
+        Self::new(8192, 4, 52)
+    }
+
+    /// Values packed per ciphertext (the paper's "HE packing batch size").
+    pub fn batch(&self) -> usize {
+        self.params.n / 2
+    }
+
+    /// Generate a fresh key pair using this context.
+    pub fn keygen(&self, rng: &mut ChaChaRng) -> (PublicKey, SecretKey) {
+        keys::keygen(&self.params, rng)
+    }
+
+    /// Encrypt a slice of at most `batch()` f64 values.
+    pub fn encrypt_values(
+        &self,
+        values: &[f64],
+        pk: &PublicKey,
+        rng: &mut ChaChaRng,
+    ) -> Ciphertext {
+        let pt = self.encoder.encode(values);
+        encrypt::encrypt(&self.params, pk, &pt, values.len(), rng)
+    }
+
+    /// Decrypt to `ct.n_values` f64 values, undoing the aggregate scale
+    /// `Δ · Δ_w^depth` tracked by the ciphertext.
+    pub fn decrypt_values(&self, ct: &Ciphertext, sk: &SecretKey) -> Vec<f64> {
+        let pt = encrypt::decrypt(&self.params, sk, ct);
+        self.encoder.decode(&pt, ct.n_values, ct.scale)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn context_roundtrip_small() {
+        let ctx = CkksContext::new(1024, 3, 40).unwrap();
+        let mut rng = ChaChaRng::from_seed(1, 0);
+        let (pk, sk) = ctx.keygen(&mut rng);
+        let values: Vec<f64> = (0..ctx.batch()).map(|i| (i as f64) / 100.0 - 2.0).collect();
+        let ct = ctx.encrypt_values(&values, &pk, &mut rng);
+        let dec = ctx.decrypt_values(&ct, &sk);
+        for (a, b) in values.iter().zip(dec.iter()) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn default_paper_params() {
+        let ctx = CkksContext::default_paper().unwrap();
+        assert_eq!(ctx.batch(), 4096);
+        assert_eq!(ctx.params.moduli.len(), 4);
+        assert!(ctx.params.log2_q() > 100.0);
+    }
+}

@@ -1,0 +1,274 @@
+//! Modular arithmetic over word-sized primes (q < 2^31), plus deterministic
+//! Miller–Rabin primality testing used by NTT-prime generation.
+//!
+//! The 31-bit limb bound is a deliberate cross-layer contract: products fit
+//! in u64 (`a·b < 2^62`), which is exactly what the L1 Pallas kernel can do
+//! in `uint64`, so the Rust aggregator and the XLA artifact compute
+//! bit-identical results.
+
+/// `a + b mod q` (inputs reduced).
+#[inline(always)]
+pub fn add_mod(a: u64, b: u64, q: u64) -> u64 {
+    let s = a + b;
+    if s >= q {
+        s - q
+    } else {
+        s
+    }
+}
+
+/// `a - b mod q` (inputs reduced).
+#[inline(always)]
+pub fn sub_mod(a: u64, b: u64, q: u64) -> u64 {
+    if a >= b {
+        a - b
+    } else {
+        a + q - b
+    }
+}
+
+/// `a * b mod q` for q < 2^32 (product fits u64 when inputs < 2^31; we use
+/// u128 to stay safe for any reduced inputs < q < 2^32).
+#[inline(always)]
+pub fn mul_mod(a: u64, b: u64, q: u64) -> u64 {
+    debug_assert!(a < q && b < q);
+    (a * b) % q
+}
+
+/// Barrett reducer for a fixed modulus q < 2^31: replaces the hardware
+/// division in `a·b mod q` (20–40 cycles) with two multiplies (§Perf).
+#[derive(Debug, Clone, Copy)]
+pub struct Barrett {
+    pub q: u64,
+    /// ⌊2^62 / q⌋ (< 2^32 for q > 2^30).
+    m: u64,
+}
+
+impl Barrett {
+    pub fn new(q: u64) -> Self {
+        debug_assert!(q > 1 && q < 1 << 31);
+        Barrett {
+            q,
+            m: ((1u128 << 62) / q as u128) as u64,
+        }
+    }
+
+    /// `a · b mod q` for reduced inputs (product < 2^62).
+    #[inline(always)]
+    pub fn mul(&self, a: u64, b: u64) -> u64 {
+        let t = a * b; // < 2^62
+        // quotient estimate ⌊t·m / 2^62⌋ ∈ {⌊t/q⌋, ⌊t/q⌋ − 1}
+        let quot = ((t as u128 * self.m as u128) >> 62) as u64;
+        let r = t - quot * self.q;
+        if r >= self.q {
+            r - self.q
+        } else {
+            r
+        }
+    }
+
+    /// Reduce a value < 2^62.
+    #[inline(always)]
+    pub fn reduce(&self, t: u64) -> u64 {
+        let quot = ((t as u128 * self.m as u128) >> 62) as u64;
+        let r = t - quot * self.q;
+        if r >= self.q {
+            r - self.q
+        } else {
+            r
+        }
+    }
+}
+
+/// `base^exp mod q`.
+pub fn pow_mod(mut base: u64, mut exp: u64, q: u64) -> u64 {
+    base %= q;
+    let mut acc = 1u64;
+    while exp > 0 {
+        if exp & 1 == 1 {
+            acc = mul_mod(acc, base, q);
+        }
+        base = mul_mod(base, base, q);
+        exp >>= 1;
+    }
+    acc
+}
+
+/// Modular inverse for prime q (Fermat).
+pub fn inv_mod(a: u64, q: u64) -> u64 {
+    pow_mod(a, q - 2, q)
+}
+
+/// Negate mod q.
+#[inline(always)]
+pub fn neg_mod(a: u64, q: u64) -> u64 {
+    if a == 0 {
+        0
+    } else {
+        q - a
+    }
+}
+
+/// Lift a signed value into [0, q).
+#[inline(always)]
+pub fn lift_signed(v: i64, q: u64) -> u64 {
+    let r = v % q as i64;
+    if r < 0 {
+        (r + q as i64) as u64
+    } else {
+        r as u64
+    }
+}
+
+/// Center a reduced value into (-q/2, q/2].
+#[inline(always)]
+pub fn center(v: u64, q: u64) -> i64 {
+    if v > q / 2 {
+        v as i64 - q as i64
+    } else {
+        v as i64
+    }
+}
+
+/// Deterministic Miller–Rabin for u64 (the listed witness set is proven
+/// complete below 3.3 * 10^24).
+pub fn is_prime(n: u64) -> bool {
+    if n < 2 {
+        return false;
+    }
+    for p in [2u64, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37] {
+        if n == p {
+            return true;
+        }
+        if n % p == 0 {
+            return false;
+        }
+    }
+    let mut d = n - 1;
+    let mut r = 0;
+    while d % 2 == 0 {
+        d /= 2;
+        r += 1;
+    }
+    'witness: for a in [2u64, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37] {
+        let mut x = pow_mod_wide(a, d, n);
+        if x == 1 || x == n - 1 {
+            continue;
+        }
+        for _ in 0..r - 1 {
+            x = mul_mod_wide(x, x, n);
+            if x == n - 1 {
+                continue 'witness;
+            }
+        }
+        return false;
+    }
+    true
+}
+
+/// u128-widened helpers for the primality test (moduli may exceed 2^32 there).
+#[inline]
+fn mul_mod_wide(a: u64, b: u64, q: u64) -> u64 {
+    ((a as u128 * b as u128) % q as u128) as u64
+}
+
+fn pow_mod_wide(mut base: u64, mut exp: u64, q: u64) -> u64 {
+    base %= q;
+    let mut acc = 1u64;
+    while exp > 0 {
+        if exp & 1 == 1 {
+            acc = mul_mod_wide(acc, base, q);
+        }
+        base = mul_mod_wide(base, base, q);
+        exp >>= 1;
+    }
+    acc
+}
+
+/// Bit-reverse the low `bits` bits of `x`.
+#[inline]
+pub fn bit_reverse(x: usize, bits: u32) -> usize {
+    x.reverse_bits() >> (usize::BITS - bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const Q: u64 = 2147377153; // a 31-bit NTT prime (≡ 1 mod 2^14)
+
+    #[test]
+    fn add_sub_roundtrip() {
+        for (a, b) in [(0u64, 0u64), (1, Q - 1), (Q / 2, Q / 2 + 1), (Q - 1, Q - 1)] {
+            let s = add_mod(a, b, Q);
+            assert!(s < Q);
+            assert_eq!(sub_mod(s, b, Q), a);
+        }
+    }
+
+    #[test]
+    fn inverse_works() {
+        for a in [1u64, 2, 12345, Q - 1, Q / 3] {
+            assert_eq!(mul_mod(a, inv_mod(a, Q), Q), 1);
+        }
+    }
+
+    #[test]
+    fn pow_matches_naive() {
+        let mut acc = 1u64;
+        for e in 0..20u64 {
+            assert_eq!(pow_mod(3, e, Q), acc);
+            acc = mul_mod(acc, 3, Q);
+        }
+    }
+
+    #[test]
+    fn signed_lift_center_roundtrip() {
+        for v in [-5i64, -1, 0, 1, 5, 1 << 20, -(1 << 20)] {
+            let lifted = lift_signed(v, Q);
+            assert!(lifted < Q);
+            assert_eq!(center(lifted, Q), v);
+        }
+    }
+
+    #[test]
+    fn primality_known_values() {
+        assert!(is_prime(2));
+        assert!(is_prime(3));
+        assert!(is_prime(Q));
+        assert!(is_prime((1u64 << 61) - 1)); // Mersenne
+        assert!(!is_prime(1));
+        assert!(!is_prime(2147377151)); // Q-2, even
+        assert!(!is_prime(2147483647u64 * 3));
+        // strong pseudoprime traps
+        assert!(!is_prime(3215031751));
+        assert!(is_prime(4294967291)); // largest prime < 2^32
+    }
+
+    #[test]
+    fn barrett_matches_plain_mul_mod() {
+        use crate::crypto::prng::ChaChaRng;
+        let mut rng = ChaChaRng::from_seed(77, 0);
+        for &q in &crate::ckks::params::generate_ntt_primes(4) {
+            let br = Barrett::new(q);
+            for _ in 0..2000 {
+                let a = rng.uniform_u64(q);
+                let b = rng.uniform_u64(q);
+                assert_eq!(br.mul(a, b), mul_mod(a, b, q));
+            }
+            // boundary values
+            assert_eq!(br.mul(q - 1, q - 1), mul_mod(q - 1, q - 1, q));
+            assert_eq!(br.mul(0, q - 1), 0);
+            assert_eq!(br.reduce((q - 1) * (q - 1)), mul_mod(q - 1, q - 1, q));
+        }
+    }
+
+    #[test]
+    fn bit_reverse_involution() {
+        for bits in [3u32, 8, 13] {
+            for x in 0..(1usize << bits) {
+                assert_eq!(bit_reverse(bit_reverse(x, bits), bits), x);
+            }
+        }
+    }
+}

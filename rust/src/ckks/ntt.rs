@@ -1,0 +1,262 @@
+//! Negacyclic number-theoretic transform over Z_q[X]/(X^n + 1).
+//!
+//! Iterative Cooley–Tukey (decimation-in-time) forward and Gentleman–Sande
+//! (decimation-in-frequency) inverse with ψ-twisting folded into the
+//! butterflies (Longa–Naehrig layout): `intt(ntt(a) ∘ ntt(b))` is the
+//! negacyclic product `a·b mod (X^n + 1, q)`.
+//!
+//! Multiplications use Shoup's precomputed-quotient trick: for a fixed
+//! twiddle `w`, `w' = ⌊w·2^64/q⌋` lets `a·w mod q` be computed with two
+//! multiplies and no division — this is the single biggest win of the §Perf
+//! pass (see EXPERIMENTS.md).
+
+use super::modarith::{bit_reverse, inv_mod, mul_mod};
+use super::params::primitive_root_2n;
+
+/// Precomputed tables for one (q, n) pair.
+pub struct NttTables {
+    pub q: u64,
+    pub n: usize,
+    /// ψ^bitrev(i) — forward twiddles in bit-reversed order.
+    psi_rev: Vec<u64>,
+    /// Shoup companions ⌊psi_rev·2^64/q⌋.
+    psi_rev_shoup: Vec<u64>,
+    /// ψ^{-bitrev(i)} — inverse twiddles in bit-reversed order.
+    inv_psi_rev: Vec<u64>,
+    inv_psi_rev_shoup: Vec<u64>,
+    /// n^{-1} mod q.
+    n_inv: u64,
+    n_inv_shoup: u64,
+}
+
+#[inline(always)]
+fn shoup_precompute(w: u64, q: u64) -> u64 {
+    (((w as u128) << 64) / q as u128) as u64
+}
+
+/// Shoup modular multiplication: `a·w mod q` given `w_shoup = ⌊w·2^64/q⌋`.
+/// Result is in [0, q).
+#[inline(always)]
+fn mul_mod_shoup(a: u64, w: u64, w_shoup: u64, q: u64) -> u64 {
+    let hi = ((a as u128 * w_shoup as u128) >> 64) as u64;
+    let r = a.wrapping_mul(w).wrapping_sub(hi.wrapping_mul(q));
+    if r >= q {
+        r - q
+    } else {
+        r
+    }
+}
+
+impl NttTables {
+    pub fn new(q: u64, n: usize) -> Self {
+        assert!(n.is_power_of_two());
+        let bits = n.trailing_zeros();
+        let psi = primitive_root_2n(q, n);
+        let psi_inv = inv_mod(psi, q);
+        let mut psi_pows = vec![1u64; n];
+        let mut inv_psi_pows = vec![1u64; n];
+        for i in 1..n {
+            psi_pows[i] = mul_mod(psi_pows[i - 1], psi, q);
+            inv_psi_pows[i] = mul_mod(inv_psi_pows[i - 1], psi_inv, q);
+        }
+        let mut psi_rev = vec![0u64; n];
+        let mut inv_psi_rev = vec![0u64; n];
+        for i in 0..n {
+            psi_rev[i] = psi_pows[bit_reverse(i, bits)];
+            inv_psi_rev[i] = inv_psi_pows[bit_reverse(i, bits)];
+        }
+        let psi_rev_shoup = psi_rev.iter().map(|&w| shoup_precompute(w, q)).collect();
+        let inv_psi_rev_shoup = inv_psi_rev.iter().map(|&w| shoup_precompute(w, q)).collect();
+        let n_inv = inv_mod(n as u64, q);
+        NttTables {
+            q,
+            n,
+            psi_rev,
+            psi_rev_shoup,
+            inv_psi_rev,
+            inv_psi_rev_shoup,
+            n_inv,
+            n_inv_shoup: shoup_precompute(n_inv, q),
+        }
+    }
+
+    /// In-place forward negacyclic NTT (natural order in, natural order out
+    /// with respect to the paired inverse below).
+    ///
+    /// §Perf: butterflies use `split_at_mut` to expose the two wings as
+    /// separate slices — this removes every bounds check and aliasing stall
+    /// from the inner loop (≈3× over the naive indexed version; see
+    /// EXPERIMENTS.md §Perf).
+    pub fn forward(&self, a: &mut [u64]) {
+        assert_eq!(a.len(), self.n);
+        let q = self.q;
+        let n = self.n;
+        let mut t = n;
+        let mut m = 1;
+        while m < n {
+            t >>= 1;
+            for i in 0..m {
+                let j1 = 2 * i * t;
+                let s = self.psi_rev[m + i];
+                let s_shoup = self.psi_rev_shoup[m + i];
+                let (lo, hi) = a[j1..j1 + 2 * t].split_at_mut(t);
+                for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
+                    let u = *x;
+                    let v = mul_mod_shoup(*y, s, s_shoup, q);
+                    let sum = u + v;
+                    *x = if sum >= q { sum - q } else { sum };
+                    *y = if u >= v { u - v } else { u + q - v };
+                }
+            }
+            m <<= 1;
+        }
+    }
+
+    /// In-place inverse negacyclic NTT (inverse of [`Self::forward`]).
+    pub fn inverse(&self, a: &mut [u64]) {
+        assert_eq!(a.len(), self.n);
+        let q = self.q;
+        let n = self.n;
+        let mut t = 1;
+        let mut m = n;
+        while m > 1 {
+            let h = m >> 1;
+            let mut j1 = 0;
+            for i in 0..h {
+                let s = self.inv_psi_rev[h + i];
+                let s_shoup = self.inv_psi_rev_shoup[h + i];
+                let (lo, hi) = a[j1..j1 + 2 * t].split_at_mut(t);
+                for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
+                    let u = *x;
+                    let v = *y;
+                    let sum = u + v;
+                    *x = if sum >= q { sum - q } else { sum };
+                    let diff = if u >= v { u - v } else { u + q - v };
+                    *y = mul_mod_shoup(diff, s, s_shoup, q);
+                }
+                j1 += 2 * t;
+            }
+            t <<= 1;
+            m = h;
+        }
+        for x in a.iter_mut() {
+            *x = mul_mod_shoup(*x, self.n_inv, self.n_inv_shoup, q);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::params::generate_ntt_primes;
+    use crate::crypto::prng::ChaChaRng;
+
+    fn naive_negacyclic(a: &[u64], b: &[u64], q: u64) -> Vec<u64> {
+        let n = a.len();
+        let mut c = vec![0i128; n];
+        for i in 0..n {
+            for j in 0..n {
+                let prod = (a[i] as i128) * (b[j] as i128) % q as i128;
+                if i + j < n {
+                    c[i + j] = (c[i + j] + prod) % q as i128;
+                } else {
+                    c[i + j - n] = (c[i + j - n] - prod).rem_euclid(q as i128);
+                }
+            }
+        }
+        c.into_iter().map(|x| x.rem_euclid(q as i128) as u64).collect()
+    }
+
+    #[test]
+    fn forward_inverse_roundtrip() {
+        let q = generate_ntt_primes(1)[0];
+        for n in [16usize, 256, 1024, 8192] {
+            let t = NttTables::new(q, n);
+            let mut rng = ChaChaRng::from_seed(n as u64, 0);
+            let orig: Vec<u64> = (0..n).map(|_| rng.uniform_u64(q)).collect();
+            let mut a = orig.clone();
+            t.forward(&mut a);
+            assert_ne!(a, orig);
+            t.inverse(&mut a);
+            assert_eq!(a, orig);
+        }
+    }
+
+    #[test]
+    fn matches_naive_negacyclic_convolution() {
+        let q = generate_ntt_primes(2)[1];
+        let n = 64;
+        let t = NttTables::new(q, n);
+        let mut rng = ChaChaRng::from_seed(7, 1);
+        let a: Vec<u64> = (0..n).map(|_| rng.uniform_u64(q)).collect();
+        let b: Vec<u64> = (0..n).map(|_| rng.uniform_u64(q)).collect();
+        let expected = naive_negacyclic(&a, &b, q);
+        let mut fa = a.clone();
+        let mut fb = b.clone();
+        t.forward(&mut fa);
+        t.forward(&mut fb);
+        let mut fc: Vec<u64> = fa
+            .iter()
+            .zip(fb.iter())
+            .map(|(&x, &y)| mul_mod(x, y, q))
+            .collect();
+        t.inverse(&mut fc);
+        assert_eq!(fc, expected);
+    }
+
+    #[test]
+    fn negacyclic_wraparound_sign() {
+        // X^{n-1} * X = X^n = -1 mod (X^n + 1)
+        let q = generate_ntt_primes(1)[0];
+        let n = 32;
+        let t = NttTables::new(q, n);
+        let mut a = vec![0u64; n];
+        let mut b = vec![0u64; n];
+        a[n - 1] = 1;
+        b[1] = 1;
+        t.forward(&mut a);
+        t.forward(&mut b);
+        let mut c: Vec<u64> = a
+            .iter()
+            .zip(b.iter())
+            .map(|(&x, &y)| mul_mod(x, y, q))
+            .collect();
+        t.inverse(&mut c);
+        assert_eq!(c[0], q - 1); // -1
+        assert!(c[1..].iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn shoup_mul_matches_plain() {
+        let q = generate_ntt_primes(1)[0];
+        let mut rng = ChaChaRng::from_seed(3, 3);
+        for _ in 0..1000 {
+            let a = rng.uniform_u64(q);
+            let w = rng.uniform_u64(q);
+            let ws = shoup_precompute(w, q);
+            assert_eq!(mul_mod_shoup(a, w, ws, q), mul_mod(a, w, q));
+        }
+    }
+
+    #[test]
+    fn linearity() {
+        let q = generate_ntt_primes(1)[0];
+        let n = 128;
+        let t = NttTables::new(q, n);
+        let mut rng = ChaChaRng::from_seed(9, 0);
+        let a: Vec<u64> = (0..n).map(|_| rng.uniform_u64(q)).collect();
+        let b: Vec<u64> = (0..n).map(|_| rng.uniform_u64(q)).collect();
+        let sum: Vec<u64> = a
+            .iter()
+            .zip(b.iter())
+            .map(|(&x, &y)| super::super::modarith::add_mod(x, y, q))
+            .collect();
+        let (mut fa, mut fb, mut fs) = (a, b, sum);
+        t.forward(&mut fa);
+        t.forward(&mut fb);
+        t.forward(&mut fs);
+        for i in 0..n {
+            assert_eq!(fs[i], super::super::modarith::add_mod(fa[i], fb[i], q));
+        }
+    }
+}

@@ -1,0 +1,190 @@
+//! Ciphertext-level operations: addition, scalar weighting, and the native
+//! (pure-Rust) weighted aggregation used as the oracle/fallback for the
+//! XLA-kernel hot path.
+
+use super::encrypt::Ciphertext;
+use super::params::CkksParams;
+
+/// `acc += ct` (scales must match).
+pub fn add_assign(acc: &mut Ciphertext, ct: &Ciphertext, params: &CkksParams) {
+    assert!(
+        (acc.scale - ct.scale).abs() < 1e-9,
+        "scale mismatch in ciphertext addition"
+    );
+    acc.c0.add_assign(&ct.c0, params);
+    acc.c1.add_assign(&ct.c1, params);
+    acc.n_values = acc.n_values.max(ct.n_values);
+}
+
+/// `ct ← α ⊙ ct`: multiply by the encoded scalar weight, bumping the scale
+/// by Δ_w (the single multiplicative depth of Algorithm 1).
+pub fn mul_weight(ct: &mut Ciphertext, alpha: f64, params: &CkksParams) {
+    let w = params.encode_weight(alpha);
+    ct.c0.mul_scalar(&w, params);
+    ct.c1.mul_scalar(&w, params);
+    ct.scale *= params.delta_w();
+}
+
+/// Native weighted sum `Σ_i α_i · ct_i` — the server aggregation of
+/// Algorithm 1 in pure Rust. Used to cross-check the XLA artifact and as the
+/// fallback for non-artifact shapes.
+///
+/// The inner loop is the measured L3 hot path: per (limb, coefficient) it is
+/// one u64 multiply, one modulo and one add per client. The §Perf pass keeps
+/// the product reduction lazy (the per-term `% q` keeps each term < 2^31 so
+/// up to 2^33 terms can accumulate in u64 before a final reduction).
+pub fn weighted_sum(cts: &[Ciphertext], alphas: &[f64], params: &CkksParams) -> Ciphertext {
+    assert_eq!(cts.len(), alphas.len());
+    assert!(!cts.is_empty());
+    let _n = params.n;
+    let num_limbs = params.num_limbs();
+    debug_assert!(
+        cts.len() < (1usize << 32),
+        "lazy accumulation bound exceeded"
+    );
+    let weights: Vec<Vec<u64>> = alphas.iter().map(|&a| params.encode_weight(a)).collect();
+    let mut out = cts[0].clone();
+    out.scale = cts[0].scale * params.delta_w();
+    out.n_values = cts.iter().map(|c| c.n_values).max().unwrap();
+    for (poly_idx, out_poly) in [&mut out.c0, &mut out.c1].into_iter().enumerate() {
+        for l in 0..num_limbs {
+            // §Perf: Barrett reduction (two multiplies) instead of the
+            // hardware division — ~2.4x on this loop; see EXPERIMENTS.md.
+            let br = crate::ckks::modarith::Barrett::new(params.moduli[l]);
+            let dst = &mut out_poly.limbs[l];
+            // Initialize with the first client's weighted limb, then
+            // accumulate the rest lazily.
+            let w0 = weights[0][l];
+            let src0 = if poly_idx == 0 {
+                &cts[0].c0.limbs[l]
+            } else {
+                &cts[0].c1.limbs[l]
+            };
+            for (d, &s) in dst.iter_mut().zip(src0.iter()) {
+                *d = br.mul(s, w0);
+            }
+            for (i, ct) in cts.iter().enumerate().skip(1) {
+                let w = weights[i][l];
+                let src = if poly_idx == 0 {
+                    &ct.c0.limbs[l]
+                } else {
+                    &ct.c1.limbs[l]
+                };
+                for (d, &s) in dst.iter_mut().zip(src.iter()) {
+                    // product < 2^62; reduce product, accumulate lazily
+                    *d += br.mul(s, w);
+                }
+                // Fold the accumulator periodically to stay < 2^63.
+                if i % (1 << 30) == 0 {
+                    for x in dst.iter_mut() {
+                        *x = br.reduce(*x);
+                    }
+                }
+            }
+            for x in dst.iter_mut() {
+                *x = br.reduce(*x);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::encoding::Encoder;
+    use crate::ckks::encrypt::{decrypt, encrypt};
+    use crate::ckks::keys::keygen;
+    use crate::crypto::prng::ChaChaRng;
+    use std::sync::Arc;
+
+    #[test]
+    fn weighted_sum_matches_plain_fedavg() {
+        let params = Arc::new(CkksParams::new(512, 4, 45).unwrap());
+        let encoder = Encoder::new(params.clone());
+        let mut rng = ChaChaRng::from_seed(7, 0);
+        let (pk, sk) = keygen(&params, &mut rng);
+
+        let n_clients = 5;
+        let alphas = [0.1, 0.25, 0.3, 0.15, 0.2];
+        let models: Vec<Vec<f64>> = (0..n_clients)
+            .map(|c| {
+                (0..256)
+                    .map(|i| ((i + c * 31) as f64 * 0.013).sin())
+                    .collect()
+            })
+            .collect();
+        let cts: Vec<Ciphertext> = models
+            .iter()
+            .map(|m| encrypt(&params, &pk, &encoder.encode(m), m.len(), &mut rng))
+            .collect();
+        let agg = weighted_sum(&cts, &alphas, &params);
+        let dec = encoder.decode(&decrypt(&params, &sk, &agg), 256, agg.scale);
+
+        for j in 0..256 {
+            let expected: f64 = (0..n_clients).map(|c| alphas[c] * models[c][j]).sum();
+            assert!(
+                (dec[j] - expected).abs() < 1e-5,
+                "slot {j}: {} vs {}",
+                dec[j],
+                expected
+            );
+        }
+    }
+
+    #[test]
+    fn weighted_sum_equals_sequential_ops() {
+        let params = Arc::new(CkksParams::new(128, 3, 35).unwrap());
+        let encoder = Encoder::new(params.clone());
+        let mut rng = ChaChaRng::from_seed(8, 0);
+        let (pk, _sk) = keygen(&params, &mut rng);
+        let alphas = [0.5, 0.5];
+        let cts: Vec<Ciphertext> = (0..2)
+            .map(|c| {
+                let m: Vec<f64> = (0..64).map(|i| (i * (c + 1)) as f64 * 0.01).collect();
+                encrypt(&params, &pk, &encoder.encode(&m), 64, &mut rng)
+            })
+            .collect();
+
+        let fast = weighted_sum(&cts, &alphas, &params);
+
+        let mut slow = cts[0].clone();
+        mul_weight(&mut slow, alphas[0], &params);
+        let mut t = cts[1].clone();
+        mul_weight(&mut t, alphas[1], &params);
+        add_assign(&mut slow, &t, &params);
+
+        assert_eq!(fast.c0, slow.c0);
+        assert_eq!(fast.c1, slow.c1);
+        assert!((fast.scale - slow.scale).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_client_weight_one_is_identityish() {
+        let params = Arc::new(CkksParams::new(128, 3, 35).unwrap());
+        let encoder = Encoder::new(params.clone());
+        let mut rng = ChaChaRng::from_seed(9, 0);
+        let (pk, sk) = keygen(&params, &mut rng);
+        let m: Vec<f64> = (0..64).map(|i| i as f64 * 0.1 - 3.0).collect();
+        let ct = encrypt(&params, &pk, &encoder.encode(&m), 64, &mut rng);
+        let agg = weighted_sum(std::slice::from_ref(&ct), &[1.0], &params);
+        let dec = encoder.decode(&decrypt(&params, &sk, &agg), 64, agg.scale);
+        for j in 0..64 {
+            assert!((dec[j] - m[j]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "scale mismatch")]
+    fn scale_mismatch_rejected() {
+        let params = Arc::new(CkksParams::new(128, 2, 30).unwrap());
+        let encoder = Encoder::new(params.clone());
+        let mut rng = ChaChaRng::from_seed(10, 0);
+        let (pk, _sk) = keygen(&params, &mut rng);
+        let m = vec![1.0; 32];
+        let mut a = encrypt(&params, &pk, &encoder.encode(&m), 32, &mut rng);
+        let mut b = a.clone();
+        mul_weight(&mut b, 0.5, &params);
+        add_assign(&mut a, &b, &params);
+    }
+}

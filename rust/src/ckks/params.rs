@@ -1,0 +1,261 @@
+//! CKKS parameter set: ring degree, RNS moduli, scales and NTT tables.
+//!
+//! Moduli are generated deterministically (descending scan from 2^31 for
+//! primes ≡ 1 mod 2^14) so the Python AOT path (`python/compile/crypto.py`)
+//! derives the *same* moduli without any cross-language data file; a pytest
+//! asserts the two lists match via `artifacts/crypto_params.json`.
+
+use super::modarith::{is_prime, pow_mod};
+use super::ntt::NttTables;
+
+/// Largest ring degree supported by the 2^14 root-of-unity order of the
+/// generated primes (q ≡ 1 mod 2^14 ⇒ a primitive 2n-th root exists for all
+/// n ≤ 8192).
+pub const MAX_N: usize = 8192;
+
+/// The exponent of the aggregation-weight scale Δ_w (α_i is encoded as
+/// round(α_i · 2^WEIGHT_BITS); the paper needs exactly one multiplicative
+/// depth for this weighting).
+pub const WEIGHT_BITS: u32 = 20;
+
+/// Centered-binomial parameter for the error distribution (variance k/2;
+/// k = 21 ⇒ σ ≈ 3.24, matching the σ = 3.2 convention of CKKS stacks).
+pub const CBD_K: u32 = 21;
+
+/// Generate the first `count` NTT-friendly primes below 2^31 with
+/// q ≡ 1 (mod 2^14), scanning downward (deterministic).
+pub fn generate_ntt_primes(count: usize) -> Vec<u64> {
+    let step = 1u64 << 14;
+    let mut primes = Vec::with_capacity(count);
+    // Largest candidate ≡ 1 mod 2^14 below 2^31.
+    let mut cand = ((1u64 << 31) / step) * step + 1;
+    while cand >= (1 << 31) {
+        cand -= step;
+    }
+    while primes.len() < count {
+        if is_prime(cand) {
+            primes.push(cand);
+        }
+        cand -= step;
+        assert!(cand > 1 << 30, "ran out of 31-bit NTT primes");
+    }
+    primes
+}
+
+/// Find a primitive 2n-th root of unity mod q (q ≡ 1 mod 2n required).
+pub fn primitive_root_2n(q: u64, n: usize) -> u64 {
+    let order = 2 * n as u64;
+    assert_eq!((q - 1) % order, 0, "q-1 must be divisible by 2n");
+    let exp = (q - 1) / order;
+    // Deterministic scan over candidate bases.
+    for base in 2u64.. {
+        let psi = pow_mod(base, exp, q);
+        // psi has order dividing 2n; it is primitive iff psi^n = -1 mod q.
+        if pow_mod(psi, n as u64, q) == q - 1 {
+            return psi;
+        }
+        assert!(base < 1000, "no primitive root found (q not prime?)");
+    }
+    unreachable!()
+}
+
+/// Full CKKS parameter set.
+pub struct CkksParams {
+    /// Ring degree (power of two). Batch = n/2 packed values.
+    pub n: usize,
+    /// RNS moduli q_l (31-bit NTT primes).
+    pub moduli: Vec<u64>,
+    /// Message scale exponent: Δ = 2^scaling_bits.
+    pub scaling_bits: u32,
+    /// Per-limb NTT tables.
+    pub ntt: Vec<NttTables>,
+    /// CRT reconstruction precomputation: Q, Q_l = Q/q_l, and
+    /// inv_l = (Q_l)^{-1} mod q_l.
+    pub q_full: u128,
+    pub crt_q_div: Vec<u128>,
+    pub crt_inv: Vec<u64>,
+}
+
+impl std::fmt::Debug for CkksParams {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CkksParams")
+            .field("n", &self.n)
+            .field("moduli", &self.moduli)
+            .field("scaling_bits", &self.scaling_bits)
+            .field("log2_q", &self.log2_q())
+            .finish()
+    }
+}
+
+impl CkksParams {
+    pub fn new(n: usize, num_limbs: usize, scaling_bits: u32) -> anyhow::Result<Self> {
+        anyhow::ensure!(n.is_power_of_two(), "ring degree must be a power of two");
+        anyhow::ensure!(n >= 8 && n <= MAX_N, "ring degree out of range");
+        anyhow::ensure!(num_limbs >= 1 && num_limbs <= 8, "1..=8 RNS limbs");
+        anyhow::ensure!(
+            scaling_bits >= 10 && scaling_bits <= 56,
+            "scaling bits out of range"
+        );
+        let moduli = generate_ntt_primes(num_limbs);
+        let ntt = moduli.iter().map(|&q| NttTables::new(q, n)).collect();
+        let q_full: u128 = moduli.iter().map(|&q| q as u128).product();
+        let crt_q_div: Vec<u128> = moduli.iter().map(|&q| q_full / q as u128).collect();
+        let crt_inv: Vec<u64> = moduli
+            .iter()
+            .zip(crt_q_div.iter())
+            .map(|(&q, &qd)| super::modarith::inv_mod((qd % q as u128) as u64, q))
+            .collect();
+        Ok(CkksParams {
+            n,
+            moduli,
+            scaling_bits,
+            ntt,
+            q_full,
+            crt_q_div,
+            crt_inv,
+        })
+    }
+
+    /// Number of RNS limbs.
+    pub fn num_limbs(&self) -> usize {
+        self.moduli.len()
+    }
+
+    /// Message scale Δ.
+    pub fn delta(&self) -> f64 {
+        (2f64).powi(self.scaling_bits as i32)
+    }
+
+    /// Weight scale Δ_w.
+    pub fn delta_w(&self) -> f64 {
+        (2f64).powi(WEIGHT_BITS as i32)
+    }
+
+    /// log2 of the full modulus Q.
+    pub fn log2_q(&self) -> f64 {
+        self.moduli.iter().map(|&q| (q as f64).log2()).sum()
+    }
+
+    /// Serialized bytes per ciphertext: 2 polys × limbs × n coefficients × 4B
+    /// (limbs are < 2^31 and stored as u32) + a small header.
+    pub fn ciphertext_bytes(&self) -> usize {
+        2 * self.num_limbs() * self.n * 4 + serialize_header_bytes()
+    }
+
+    /// CRT-reconstruct a coefficient from its per-limb residues, centered
+    /// into (-Q/2, Q/2].
+    ///
+    /// §Perf: each CRT term is < Q, so the accumulator stays < 2Q after an
+    /// add and a conditional subtraction keeps it reduced — no u128 modulo
+    /// (a slow libcall) in the loop.
+    pub fn crt_reconstruct_centered(&self, residues: &[u64]) -> i128 {
+        debug_assert_eq!(residues.len(), self.num_limbs());
+        let mut acc: u128 = 0;
+        for l in 0..self.num_limbs() {
+            let t = super::modarith::mul_mod(residues[l], self.crt_inv[l], self.moduli[l]);
+            // t < q_l ⇒ t·Q_l < Q; reduce with one comparison.
+            acc += t as u128 * self.crt_q_div[l];
+            if acc >= self.q_full {
+                acc -= self.q_full;
+            }
+        }
+        if acc > self.q_full / 2 {
+            acc as i128 - self.q_full as i128
+        } else {
+            acc as i128
+        }
+    }
+
+    /// Encode a non-negative scalar weight at Δ_w into per-limb residues
+    /// (the aggregation weight α_i of Algorithm 1).
+    pub fn encode_weight(&self, alpha: f64) -> Vec<u64> {
+        assert!(alpha >= 0.0, "aggregation weights are non-negative");
+        let w = (alpha * self.delta_w()).round() as u64;
+        self.moduli.iter().map(|&q| w % q).collect()
+    }
+}
+
+/// Header bytes used by `serialize.rs` (kept here so the size accounting in
+/// `ciphertext_bytes` matches the real wire format): magic(4) version(4)
+/// n(4) limbs(4) n_values(4) scale(8) reserved(8).
+pub const fn serialize_header_bytes() -> usize {
+    36
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primes_are_ntt_friendly() {
+        let primes = generate_ntt_primes(8);
+        assert_eq!(primes.len(), 8);
+        for &q in &primes {
+            assert!(q < 1 << 31);
+            assert!(q > 1 << 30);
+            assert!(is_prime(q));
+            assert_eq!((q - 1) % (1 << 14), 0);
+        }
+        // deterministic + descending + distinct
+        let again = generate_ntt_primes(8);
+        assert_eq!(primes, again);
+        for w in primes.windows(2) {
+            assert!(w[0] > w[1]);
+        }
+    }
+
+    #[test]
+    fn primitive_roots() {
+        for &q in &generate_ntt_primes(3) {
+            for n in [1024usize, 8192] {
+                let psi = primitive_root_2n(q, n);
+                assert_eq!(pow_mod(psi, n as u64, q), q - 1);
+                assert_eq!(pow_mod(psi, 2 * n as u64, q), 1);
+            }
+        }
+    }
+
+    #[test]
+    fn params_construct() {
+        let p = CkksParams::new(8192, 4, 52).unwrap();
+        assert_eq!(p.n, 8192);
+        assert_eq!(p.num_limbs(), 4);
+        assert!(p.log2_q() > 120.0 && p.log2_q() < 125.0);
+        // ciphertext ~256 KiB for the default config
+        assert_eq!(p.ciphertext_bytes(), 2 * 4 * 8192 * 4 + 36);
+    }
+
+    #[test]
+    fn params_validation() {
+        assert!(CkksParams::new(1000, 4, 52).is_err()); // not power of two
+        assert!(CkksParams::new(16384, 4, 52).is_err()); // too large
+        assert!(CkksParams::new(1024, 0, 52).is_err());
+        assert!(CkksParams::new(1024, 4, 60).is_err());
+    }
+
+    #[test]
+    fn crt_reconstruct_small_values() {
+        let p = CkksParams::new(1024, 4, 40).unwrap();
+        for v in [-12345i128, -1, 0, 1, 99999, 1i128 << 80, -(1i128 << 80)] {
+            let residues: Vec<u64> = p
+                .moduli
+                .iter()
+                .map(|&q| {
+                    let r = v.rem_euclid(q as i128);
+                    r as u64
+                })
+                .collect();
+            assert_eq!(p.crt_reconstruct_centered(&residues), v);
+        }
+    }
+
+    #[test]
+    fn weight_encoding() {
+        let p = CkksParams::new(1024, 2, 40).unwrap();
+        let w = p.encode_weight(0.5);
+        let expect = (0.5 * p.delta_w()).round() as u64;
+        for (l, &q) in p.moduli.iter().enumerate() {
+            assert_eq!(w[l], expect % q);
+        }
+    }
+}

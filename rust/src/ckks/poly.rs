@@ -1,0 +1,319 @@
+//! RNS polynomials in Z_Q[X]/(X^n + 1): the working data type of the scheme.
+//!
+//! Coefficients are stored limb-major (`limbs[l][j]` = coefficient j mod
+//! q_l) so the per-limb NTT and the limb-wise aggregation kernel stream
+//! contiguous memory.
+
+use super::modarith::{add_mod, lift_signed, neg_mod, sub_mod};
+use super::params::CkksParams;
+use crate::crypto::prng::ChaChaRng;
+
+/// An RNS polynomial; `ntt_form` tracks which domain the limbs are in.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RnsPoly {
+    pub n: usize,
+    /// One residue vector per modulus, each of length n.
+    pub limbs: Vec<Vec<u64>>,
+    pub ntt_form: bool,
+}
+
+impl RnsPoly {
+    /// The zero polynomial.
+    pub fn zero(params: &CkksParams) -> Self {
+        RnsPoly {
+            n: params.n,
+            limbs: vec![vec![0u64; params.n]; params.num_limbs()],
+            ntt_form: false,
+        }
+    }
+
+    /// Lift signed coefficients (e.g. an encoded message or error sample)
+    /// into every RNS limb.
+    pub fn from_signed(params: &CkksParams, coeffs: &[i64]) -> Self {
+        assert_eq!(coeffs.len(), params.n);
+        let limbs = params
+            .moduli
+            .iter()
+            .map(|&q| coeffs.iter().map(|&c| lift_signed(c, q)).collect())
+            .collect();
+        RnsPoly {
+            n: params.n,
+            limbs,
+            ntt_form: false,
+        }
+    }
+
+    /// Lift signed i128 coefficients (for wide encodings at high scale) via
+    /// per-limb reduction.
+    ///
+    /// §Perf: splits |c| = hi·2^64 + lo and reduces with one u64 division
+    /// plus a Barrett multiply instead of an i128 modulo (a libcall); valid
+    /// for |c| < 2^90 (hi < 2^26 < q so hi needs no reduction), which covers
+    /// every encoding scale the scheme admits.
+    pub fn from_signed_wide(params: &CkksParams, coeffs: &[i128]) -> Self {
+        assert_eq!(coeffs.len(), params.n);
+        let limbs = params
+            .moduli
+            .iter()
+            .map(|&q| {
+                let br = super::modarith::Barrett::new(q);
+                let two64 = ((1u128 << 64) % q as u128) as u64;
+                coeffs
+                    .iter()
+                    .map(|&c| {
+                        let abs = c.unsigned_abs();
+                        debug_assert!(abs < 1u128 << 90, "encoding overflow");
+                        let hi = (abs >> 64) as u64; // < 2^26 < q
+                        let lo = (abs as u64) % q;
+                        let r = super::modarith::add_mod(br.mul(hi, two64), lo, q);
+                        if c < 0 {
+                            super::modarith::neg_mod(r, q)
+                        } else {
+                            r
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        RnsPoly {
+            n: params.n,
+            limbs,
+            ntt_form: false,
+        }
+    }
+
+    /// Uniform random polynomial over R_Q (public `a` of the key pair).
+    pub fn sample_uniform(params: &CkksParams, rng: &mut ChaChaRng) -> Self {
+        let limbs = params
+            .moduli
+            .iter()
+            .map(|&q| (0..params.n).map(|_| rng.uniform_u64(q)).collect())
+            .collect();
+        RnsPoly {
+            n: params.n,
+            limbs,
+            ntt_form: false,
+        }
+    }
+
+    /// Ternary polynomial (secret / ephemeral key distribution).
+    pub fn sample_ternary(params: &CkksParams, rng: &mut ChaChaRng) -> Self {
+        let coeffs: Vec<i64> = (0..params.n).map(|_| rng.ternary()).collect();
+        Self::from_signed(params, &coeffs)
+    }
+
+    /// Centered-binomial error polynomial.
+    pub fn sample_error(params: &CkksParams, rng: &mut ChaChaRng) -> Self {
+        let coeffs: Vec<i64> = (0..params.n)
+            .map(|_| rng.cbd(super::params::CBD_K))
+            .collect();
+        Self::from_signed(params, &coeffs)
+    }
+
+    /// Forward NTT on every limb (idempotence guarded by `ntt_form`).
+    pub fn to_ntt(&mut self, params: &CkksParams) {
+        assert!(!self.ntt_form, "already in NTT form");
+        for (l, limb) in self.limbs.iter_mut().enumerate() {
+            params.ntt[l].forward(limb);
+        }
+        self.ntt_form = true;
+    }
+
+    /// Inverse NTT on every limb.
+    pub fn from_ntt(&mut self, params: &CkksParams) {
+        assert!(self.ntt_form, "not in NTT form");
+        for (l, limb) in self.limbs.iter_mut().enumerate() {
+            params.ntt[l].inverse(limb);
+        }
+        self.ntt_form = false;
+    }
+
+    /// `self += other` (domains must match).
+    pub fn add_assign(&mut self, other: &RnsPoly, params: &CkksParams) {
+        assert_eq!(self.ntt_form, other.ntt_form, "domain mismatch");
+        for l in 0..self.limbs.len() {
+            let q = params.moduli[l];
+            for j in 0..self.n {
+                self.limbs[l][j] = add_mod(self.limbs[l][j], other.limbs[l][j], q);
+            }
+        }
+    }
+
+    /// `self -= other`.
+    pub fn sub_assign(&mut self, other: &RnsPoly, params: &CkksParams) {
+        assert_eq!(self.ntt_form, other.ntt_form, "domain mismatch");
+        for l in 0..self.limbs.len() {
+            let q = params.moduli[l];
+            for j in 0..self.n {
+                self.limbs[l][j] = sub_mod(self.limbs[l][j], other.limbs[l][j], q);
+            }
+        }
+    }
+
+    /// Negate in place.
+    pub fn negate(&mut self, params: &CkksParams) {
+        for l in 0..self.limbs.len() {
+            let q = params.moduli[l];
+            for x in self.limbs[l].iter_mut() {
+                *x = neg_mod(*x, q);
+            }
+        }
+    }
+
+    /// Pointwise product (both operands must be in NTT form).
+    pub fn mul_ntt(&self, other: &RnsPoly, params: &CkksParams) -> RnsPoly {
+        assert!(self.ntt_form && other.ntt_form, "mul requires NTT form");
+        let limbs = (0..self.limbs.len())
+            .map(|l| {
+                let br = super::modarith::Barrett::new(params.moduli[l]);
+                self.limbs[l]
+                    .iter()
+                    .zip(other.limbs[l].iter())
+                    .map(|(&a, &b)| br.mul(a, b))
+                    .collect()
+            })
+            .collect();
+        RnsPoly {
+            n: self.n,
+            limbs,
+            ntt_form: true,
+        }
+    }
+
+    /// Multiply by a scalar given as per-limb residues (the encoded
+    /// aggregation weight). Domain-agnostic: scalar multiplication commutes
+    /// with the NTT.
+    pub fn mul_scalar(&mut self, scalar: &[u64], params: &CkksParams) {
+        assert_eq!(scalar.len(), self.limbs.len());
+        for l in 0..self.limbs.len() {
+            let br = super::modarith::Barrett::new(params.moduli[l]);
+            let s = scalar[l];
+            for x in self.limbs[l].iter_mut() {
+                *x = br.mul(*x, s);
+            }
+        }
+    }
+
+    /// Full negacyclic product: handles NTT conversion, returns coefficient
+    /// domain. (Convenience for tests; hot paths manage domains explicitly.)
+    pub fn mul_full(&self, other: &RnsPoly, params: &CkksParams) -> RnsPoly {
+        let mut a = self.clone();
+        let mut b = other.clone();
+        if !a.ntt_form {
+            a.to_ntt(params);
+        }
+        if !b.ntt_form {
+            b.to_ntt(params);
+        }
+        let mut c = a.mul_ntt(&b, params);
+        c.from_ntt(params);
+        c
+    }
+
+    /// CRT-reconstruct all coefficients to centered i128.
+    pub fn to_centered_coeffs(&self, params: &CkksParams) -> Vec<i128> {
+        assert!(!self.ntt_form, "reconstruct from coefficient domain");
+        let mut out = Vec::with_capacity(self.n);
+        let mut residues = vec![0u64; self.limbs.len()];
+        for j in 0..self.n {
+            for l in 0..self.limbs.len() {
+                residues[l] = self.limbs[l][j];
+            }
+            out.push(params.crt_reconstruct_centered(&residues));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> CkksParams {
+        CkksParams::new(64, 3, 30).unwrap()
+    }
+
+    #[test]
+    fn signed_lift_reconstruct_roundtrip() {
+        let p = params();
+        let mut rng = ChaChaRng::from_seed(1, 0);
+        let coeffs: Vec<i64> = (0..p.n)
+            .map(|_| rng.uniform_u64(1 << 40) as i64 - (1 << 39))
+            .collect();
+        let poly = RnsPoly::from_signed(&p, &coeffs);
+        let rec = poly.to_centered_coeffs(&p);
+        for (a, b) in coeffs.iter().zip(rec.iter()) {
+            assert_eq!(*a as i128, *b);
+        }
+    }
+
+    #[test]
+    fn add_sub_neg() {
+        let p = params();
+        let mut rng = ChaChaRng::from_seed(2, 0);
+        let a = RnsPoly::sample_uniform(&p, &mut rng);
+        let b = RnsPoly::sample_uniform(&p, &mut rng);
+        let mut s = a.clone();
+        s.add_assign(&b, &p);
+        s.sub_assign(&b, &p);
+        assert_eq!(s, a);
+        let mut n = a.clone();
+        n.negate(&p);
+        n.add_assign(&a, &p);
+        assert_eq!(n, RnsPoly::zero(&p));
+    }
+
+    #[test]
+    fn scalar_mul_commutes_with_ntt() {
+        let p = params();
+        let mut rng = ChaChaRng::from_seed(3, 0);
+        let a = RnsPoly::sample_uniform(&p, &mut rng);
+        let scalar: Vec<u64> = p.moduli.iter().map(|&q| 12345 % q).collect();
+
+        // scalar-mult then NTT
+        let mut x = a.clone();
+        x.mul_scalar(&scalar, &p);
+        x.to_ntt(&p);
+
+        // NTT then scalar-mult
+        let mut y = a.clone();
+        y.to_ntt(&p);
+        y.mul_scalar(&scalar, &p);
+
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    fn mul_matches_schoolbook_via_identity() {
+        // (a * 1) == a
+        let p = params();
+        let mut rng = ChaChaRng::from_seed(4, 0);
+        let a = RnsPoly::sample_uniform(&p, &mut rng);
+        let mut one_coeffs = vec![0i64; p.n];
+        one_coeffs[0] = 1;
+        let one = RnsPoly::from_signed(&p, &one_coeffs);
+        let prod = a.mul_full(&one, &p);
+        assert_eq!(prod, a);
+    }
+
+    #[test]
+    fn ternary_and_error_are_small() {
+        let p = params();
+        let mut rng = ChaChaRng::from_seed(5, 0);
+        let t = RnsPoly::sample_ternary(&p, &mut rng).to_centered_coeffs(&p);
+        assert!(t.iter().all(|&c| c.abs() <= 1));
+        let e = RnsPoly::sample_error(&p, &mut rng).to_centered_coeffs(&p);
+        assert!(e.iter().all(|&c| c.abs() <= 21));
+    }
+
+    #[test]
+    #[should_panic(expected = "domain mismatch")]
+    fn domain_mismatch_panics() {
+        let p = params();
+        let mut rng = ChaChaRng::from_seed(6, 0);
+        let mut a = RnsPoly::sample_uniform(&p, &mut rng);
+        let b = RnsPoly::sample_uniform(&p, &mut rng);
+        a.to_ntt(&p);
+        a.add_assign(&b, &p);
+    }
+}

@@ -1,0 +1,158 @@
+//! Ciphertext (de)serialization: the wire format whose byte counts feed every
+//! communication-overhead table in the paper.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic    u32   = 0x434B4B53 ("CKKS")
+//! version  u32   = 1
+//! n        u32   ring degree
+//! limbs    u32   number of RNS limbs
+//! n_values u32   packed value count
+//! scale    f64   aggregate scale
+//! reserved u32 ×2 (pad to the 32-byte header of params::serialize_header_bytes)
+//! body: c0 then c1, limb-major, each coefficient as u32 (moduli < 2^31)
+//! ```
+
+use super::encrypt::Ciphertext;
+use super::params::{serialize_header_bytes, CkksParams};
+use super::poly::RnsPoly;
+
+const MAGIC: u32 = 0x434B_4B53;
+const VERSION: u32 = 1;
+
+/// Serialize a ciphertext.
+pub fn ciphertext_to_bytes(ct: &Ciphertext) -> Vec<u8> {
+    assert!(!ct.c0.ntt_form && !ct.c1.ntt_form);
+    let n = ct.c0.n;
+    let limbs = ct.c0.limbs.len();
+    let mut out = Vec::with_capacity(serialize_header_bytes() + 2 * limbs * n * 4);
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&(n as u32).to_le_bytes());
+    out.extend_from_slice(&(limbs as u32).to_le_bytes());
+    out.extend_from_slice(&(ct.n_values as u32).to_le_bytes());
+    out.extend_from_slice(&ct.scale.to_le_bytes());
+    out.extend_from_slice(&0u32.to_le_bytes());
+    out.extend_from_slice(&0u32.to_le_bytes());
+    debug_assert_eq!(out.len(), serialize_header_bytes());
+    for poly in [&ct.c0, &ct.c1] {
+        for limb in &poly.limbs {
+            for &c in limb {
+                debug_assert!(c < 1 << 31);
+                out.extend_from_slice(&(c as u32).to_le_bytes());
+            }
+        }
+    }
+    out
+}
+
+fn read_u32(bytes: &[u8], off: &mut usize) -> anyhow::Result<u32> {
+    anyhow::ensure!(bytes.len() >= *off + 4, "truncated buffer");
+    let v = u32::from_le_bytes(bytes[*off..*off + 4].try_into().unwrap());
+    *off += 4;
+    Ok(v)
+}
+
+/// Deserialize a ciphertext; validates header against `params`.
+pub fn ciphertext_from_bytes(bytes: &[u8], params: &CkksParams) -> anyhow::Result<Ciphertext> {
+    let mut off = 0usize;
+    anyhow::ensure!(read_u32(bytes, &mut off)? == MAGIC, "bad magic");
+    anyhow::ensure!(read_u32(bytes, &mut off)? == VERSION, "bad version");
+    let n = read_u32(bytes, &mut off)? as usize;
+    let limbs = read_u32(bytes, &mut off)? as usize;
+    let n_values = read_u32(bytes, &mut off)? as usize;
+    anyhow::ensure!(bytes.len() >= off + 8, "truncated header");
+    let scale = f64::from_le_bytes(bytes[off..off + 8].try_into().unwrap());
+    off += 8;
+    off += 8; // reserved
+    anyhow::ensure!(n == params.n, "ring degree mismatch");
+    anyhow::ensure!(limbs == params.num_limbs(), "limb count mismatch");
+    anyhow::ensure!(n_values <= n / 2, "n_values out of range");
+    let body = 2 * limbs * n * 4;
+    anyhow::ensure!(bytes.len() == off + body, "bad body length");
+
+    let mut polys = Vec::with_capacity(2);
+    for _ in 0..2 {
+        let mut limb_vecs = Vec::with_capacity(limbs);
+        for l in 0..limbs {
+            let q = params.moduli[l];
+            let mut v = Vec::with_capacity(n);
+            for _ in 0..n {
+                let c = read_u32(bytes, &mut off)? as u64;
+                anyhow::ensure!(c < q, "coefficient out of range");
+                v.push(c);
+            }
+            limb_vecs.push(v);
+        }
+        polys.push(RnsPoly {
+            n,
+            limbs: limb_vecs,
+            ntt_form: false,
+        });
+    }
+    let c1 = polys.pop().unwrap();
+    let c0 = polys.pop().unwrap();
+    Ok(Ciphertext {
+        c0,
+        c1,
+        n_values,
+        scale,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::encoding::Encoder;
+    use crate::ckks::encrypt::encrypt;
+    use crate::ckks::keys::keygen;
+    use crate::crypto::prng::ChaChaRng;
+    use std::sync::Arc;
+
+    #[test]
+    fn roundtrip_and_size() {
+        let params = Arc::new(CkksParams::new(256, 4, 40).unwrap());
+        let encoder = Encoder::new(params.clone());
+        let mut rng = ChaChaRng::from_seed(1, 0);
+        let (pk, _) = keygen(&params, &mut rng);
+        let m: Vec<f64> = (0..128).map(|i| i as f64 * 0.01).collect();
+        let ct = encrypt(&params, &pk, &encoder.encode(&m), 128, &mut rng);
+        let bytes = ciphertext_to_bytes(&ct);
+        assert_eq!(bytes.len(), params.ciphertext_bytes());
+        let back = ciphertext_from_bytes(&bytes, &params).unwrap();
+        assert_eq!(back, ct);
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let params = Arc::new(CkksParams::new(128, 2, 30).unwrap());
+        let encoder = Encoder::new(params.clone());
+        let mut rng = ChaChaRng::from_seed(2, 0);
+        let (pk, _) = keygen(&params, &mut rng);
+        let ct = encrypt(&params, &pk, &encoder.encode(&[1.0]), 1, &mut rng);
+        let bytes = ciphertext_to_bytes(&ct);
+        // bad magic
+        let mut b = bytes.clone();
+        b[0] ^= 0xFF;
+        assert!(ciphertext_from_bytes(&b, &params).is_err());
+        // truncation
+        assert!(ciphertext_from_bytes(&bytes[..bytes.len() - 1], &params).is_err());
+        // out-of-range coefficient
+        let mut b = bytes.clone();
+        let hdr = crate::ckks::params::serialize_header_bytes();
+        b[hdr..hdr + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(ciphertext_from_bytes(&b, &params).is_err());
+    }
+
+    #[test]
+    fn wrong_params_rejected() {
+        let p1 = Arc::new(CkksParams::new(128, 2, 30).unwrap());
+        let p2 = Arc::new(CkksParams::new(256, 2, 30).unwrap());
+        let encoder = Encoder::new(p1.clone());
+        let mut rng = ChaChaRng::from_seed(3, 0);
+        let (pk, _) = keygen(&p1, &mut rng);
+        let ct = encrypt(&p1, &pk, &encoder.encode(&[1.0]), 1, &mut rng);
+        let bytes = ciphertext_to_bytes(&ct);
+        assert!(ciphertext_from_bytes(&bytes, &p2).is_err());
+    }
+}

@@ -1,0 +1,221 @@
+//! Threshold (multiparty) CKKS — Appendix B of the paper.
+//!
+//! n-of-n additive variant: each party holds a ternary share `s_k`; the
+//! joint secret is `s = Σ s_k`. Key agreement and decryption are interactive:
+//!
+//! 1. **Key agreement**: a common reference polynomial `a` is derived from a
+//!    public seed (CRS); each party publishes `b_k = -(a·s_k) + e_k`; the
+//!    joint public key is `(Σ b_k, a)`.
+//! 2. **Distributed decryption**: for `ct = (c0, c1)` each party publishes a
+//!    partial decryption `d_k = c1·s_k + e_smudge` (the smudging noise hides
+//!    `s_k` from the combiner); the plaintext is `c0 + Σ d_k`.
+//!
+//! Optional t-of-n escrow: each party's share can additionally be
+//! Shamir-split ([`crate::crypto::shamir`]) so a quorum can reconstruct a
+//! dropped party's share (dropout robustness for long-running FL tasks).
+
+use super::encrypt::Ciphertext;
+use super::keys::PublicKey;
+use super::params::CkksParams;
+use super::poly::RnsPoly;
+use crate::crypto::prng::ChaChaRng;
+
+/// Smudging-noise CBD parameter (variance 8× the base error).
+const SMUDGE_K: u32 = 8 * super::params::CBD_K;
+
+/// One party's state in the threshold protocol.
+pub struct ThresholdParty {
+    pub id: usize,
+    /// Secret share s_k (NTT form).
+    pub s_ntt: RnsPoly,
+    /// Published key-agreement share b_k (NTT form).
+    pub b_share_ntt: RnsPoly,
+}
+
+/// Derive the common reference polynomial `a` from a public seed.
+pub fn common_reference(params: &CkksParams, crs_seed: u64) -> RnsPoly {
+    let mut rng = ChaChaRng::from_seed(crs_seed, 0xC0DE);
+    let mut a = RnsPoly::sample_uniform(params, &mut rng);
+    a.to_ntt(params);
+    a
+}
+
+/// Round 1 of key agreement: create a party and its public share.
+pub fn party_keygen(
+    params: &CkksParams,
+    id: usize,
+    a_ntt: &RnsPoly,
+    rng: &mut ChaChaRng,
+) -> ThresholdParty {
+    let mut s = RnsPoly::sample_ternary(params, rng);
+    s.to_ntt(params);
+    let mut e = RnsPoly::sample_error(params, rng);
+    e.to_ntt(params);
+    let mut b = a_ntt.mul_ntt(&s, params);
+    b.negate(params);
+    b.add_assign(&e, params);
+    ThresholdParty {
+        id,
+        s_ntt: s,
+        b_share_ntt: b,
+    }
+}
+
+/// Round 2: combine the published shares into the joint public key.
+pub fn combine_public_key(
+    params: &CkksParams,
+    a_ntt: &RnsPoly,
+    shares: &[&RnsPoly],
+) -> PublicKey {
+    assert!(!shares.is_empty());
+    let mut b = shares[0].clone();
+    for s in &shares[1..] {
+        b.add_assign(s, params);
+    }
+    PublicKey {
+        b_ntt: b,
+        a_ntt: a_ntt.clone(),
+    }
+}
+
+/// A party's partial decryption of a ciphertext (coefficient domain).
+pub fn partial_decrypt(
+    params: &CkksParams,
+    party: &ThresholdParty,
+    ct: &Ciphertext,
+    rng: &mut ChaChaRng,
+) -> RnsPoly {
+    let mut c1 = ct.c1.clone();
+    c1.to_ntt(params);
+    let mut d = c1.mul_ntt(&party.s_ntt, params);
+    d.from_ntt(params);
+    // Smudging noise: hides s_k from whoever combines the partials.
+    let smudge: Vec<i64> = (0..params.n).map(|_| rng.cbd(SMUDGE_K)).collect();
+    let e = RnsPoly::from_signed(params, &smudge);
+    d.add_assign(&e, params);
+    d
+}
+
+/// Combine `c0` with all partial decryptions into the plaintext polynomial.
+pub fn combine_partials(
+    params: &CkksParams,
+    ct: &Ciphertext,
+    partials: &[RnsPoly],
+) -> RnsPoly {
+    let mut m = ct.c0.clone();
+    for d in partials {
+        m.add_assign(d, params);
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::encoding::Encoder;
+    use crate::ckks::encrypt::encrypt;
+    use crate::ckks::ops::weighted_sum;
+    use std::sync::Arc;
+
+    fn run_threshold(n_parties: usize) {
+        let params = Arc::new(CkksParams::new(512, 4, 45).unwrap());
+        let encoder = Encoder::new(params.clone());
+        let a = common_reference(&params, 99);
+        let mut rng = ChaChaRng::from_seed(13, 0);
+        let parties: Vec<ThresholdParty> = (0..n_parties)
+            .map(|k| party_keygen(&params, k, &a, &mut rng))
+            .collect();
+        let shares: Vec<&RnsPoly> = parties.iter().map(|p| &p.b_share_ntt).collect();
+        let pk = combine_public_key(&params, &a, &shares);
+
+        // Encrypt under the joint key, weighted-aggregate, then decrypt
+        // collaboratively — the Fig. 12 workload.
+        let models: Vec<Vec<f64>> = (0..3)
+            .map(|c| (0..256).map(|i| ((i * (c + 1)) as f64 * 0.01).cos()).collect())
+            .collect();
+        let alphas = [0.2, 0.3, 0.5];
+        let cts: Vec<Ciphertext> = models
+            .iter()
+            .map(|m| encrypt(&params, &pk, &encoder.encode(m), m.len(), &mut rng))
+            .collect();
+        let agg = weighted_sum(&cts, &alphas, &params);
+
+        let partials: Vec<RnsPoly> = parties
+            .iter()
+            .map(|p| partial_decrypt(&params, p, &agg, &mut rng))
+            .collect();
+        let m = combine_partials(&params, &agg, &partials);
+        let dec = encoder.decode(&m, 256, agg.scale);
+        for j in 0..256 {
+            let expected: f64 = (0..3).map(|c| alphas[c] * models[c][j]).sum();
+            assert!(
+                (dec[j] - expected).abs() < 1e-4,
+                "slot {j}: {} vs {expected}",
+                dec[j]
+            );
+        }
+    }
+
+    #[test]
+    fn two_party_threshold_decrypts() {
+        run_threshold(2);
+    }
+
+    #[test]
+    fn five_party_threshold_decrypts() {
+        run_threshold(5);
+    }
+
+    #[test]
+    fn missing_partial_fails() {
+        let params = Arc::new(CkksParams::new(256, 3, 40).unwrap());
+        let encoder = Encoder::new(params.clone());
+        let a = common_reference(&params, 7);
+        let mut rng = ChaChaRng::from_seed(14, 0);
+        let parties: Vec<ThresholdParty> = (0..3)
+            .map(|k| party_keygen(&params, k, &a, &mut rng))
+            .collect();
+        let shares: Vec<&RnsPoly> = parties.iter().map(|p| &p.b_share_ntt).collect();
+        let pk = combine_public_key(&params, &a, &shares);
+        let values = vec![1.0; 128];
+        let ct = encrypt(&params, &pk, &encoder.encode(&values), 128, &mut rng);
+        // only 2 of 3 partials
+        let partials: Vec<RnsPoly> = parties[..2]
+            .iter()
+            .map(|p| partial_decrypt(&params, p, &ct, &mut rng))
+            .collect();
+        let m = combine_partials(&params, &ct, &partials);
+        let dec = encoder.decode(&m, 128, ct.scale);
+        let max_err = values
+            .iter()
+            .zip(dec.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        assert!(max_err > 1.0, "partial set should not decrypt");
+    }
+
+    #[test]
+    fn crs_is_deterministic() {
+        let params = Arc::new(CkksParams::new(128, 2, 30).unwrap());
+        assert_eq!(common_reference(&params, 5), common_reference(&params, 5));
+        assert_ne!(common_reference(&params, 5), common_reference(&params, 6));
+    }
+
+    #[test]
+    fn share_escrow_roundtrip() {
+        // Shamir-escrow a party's serialized secret share and recover it.
+        use crate::crypto::shamir;
+        let params = Arc::new(CkksParams::new(64, 2, 30).unwrap());
+        let a = common_reference(&params, 1);
+        let mut rng = ChaChaRng::from_seed(15, 0);
+        let party = party_keygen(&params, 0, &a, &mut rng);
+        // serialize the share's first limb as bytes
+        let bytes: Vec<u8> = party.s_ntt.limbs[0]
+            .iter()
+            .flat_map(|&c| (c as u32).to_le_bytes())
+            .collect();
+        let shares = shamir::split_bytes(&bytes, 2, 3, &mut rng);
+        let rec = shamir::reconstruct_bytes(&[&shares[0], &shares[2]], bytes.len());
+        assert_eq!(rec, bytes);
+    }
+}

@@ -1,0 +1,108 @@
+//! Client-side executor: local training, sensitivity analysis, encryption.
+//!
+//! A client never ships plaintext parameters for masked coordinates; all its
+//! heavy math (train/sensitivity) runs through the AOT artifacts.
+
+use crate::crypto::prng::ChaChaRng;
+use crate::fl::data::synthetic_images;
+use crate::fl::{LocalTrainer, Workload};
+use crate::he_agg::{EncryptedUpdate, EncryptionMask, SelectiveCodec};
+use crate::runtime::Runtime;
+
+/// One federated client.
+pub struct FlClient<'a> {
+    pub id: usize,
+    pub alpha: f64,
+    pub trainer: LocalTrainer<'a>,
+    pub data: Workload,
+    pub rng: ChaChaRng,
+}
+
+impl<'a> FlClient<'a> {
+    /// Build a client with its local synthetic dataset.
+    pub fn new(
+        rt: &'a Runtime,
+        model: &str,
+        id: usize,
+        n_clients: usize,
+        samples: usize,
+        skew: f64,
+        seed: u64,
+    ) -> anyhow::Result<Self> {
+        let trainer = LocalTrainer::new(rt, model)?;
+        let meta = &rt.manifest.models[model];
+        let data = if model == "tinybert" {
+            Workload::Token(crate::fl::data::synthetic_tokens(
+                id,
+                samples,
+                meta.seq_len.unwrap_or(16),
+                meta.vocab.unwrap_or(128),
+                seed,
+            ))
+        } else {
+            let shape = match meta.input_shape.as_slice() {
+                [c, h, w] => (*c, *h, *w),
+                [f] => (1, 1, *f), // flat inputs (mlp): dataset synthesizes 1×1×F
+                _ => anyhow::bail!("unsupported input shape"),
+            };
+            // mlp trains on flattened 28×28 images
+            let gen_shape = if model == "mlp" { (1, 28, 28) } else { shape };
+            Workload::Image(synthetic_images(
+                id,
+                samples,
+                gen_shape,
+                meta.num_classes,
+                skew,
+                seed,
+            ))
+        };
+        Ok(FlClient {
+            id,
+            alpha: 1.0 / n_clients as f64,
+            trainer,
+            data,
+            rng: ChaChaRng::from_seed(seed, 0x1000 + id as u64),
+        })
+    }
+
+    /// Local sensitivity map (mask-agreement stage input).
+    pub fn sensitivity(&mut self, params: &[f32]) -> anyhow::Result<Vec<f32>> {
+        let LocalTrainer { .. } = &self.trainer;
+        self.trainer.sensitivity(params, &self.data)
+    }
+
+    /// Local training: `steps` SGD steps starting from the global model.
+    pub fn train(&mut self, global: &[f32], steps: usize, lr: f32) -> anyhow::Result<(Vec<f32>, f32)> {
+        self.trainer.train(global, &self.data, steps, lr)
+    }
+
+    /// Encrypt the local model per Algorithm 1 (optionally with local DP on
+    /// the plaintext coordinates).
+    pub fn encrypt(
+        &mut self,
+        codec: &SelectiveCodec,
+        params: &mut Vec<f32>,
+        mask: &EncryptionMask,
+        pk: &crate::ckks::PublicKey,
+        dp_scale: Option<f64>,
+    ) -> EncryptedUpdate {
+        let mut update = codec.encrypt_update(params, mask, pk, &mut self.rng);
+        if let Some(b) = dp_scale {
+            // Laplace noise on the *plaintext* part only — encrypted
+            // coordinates need no noise (Theorem 3.9: ε = 0).
+            crate::crypto::dp::add_noise(&mut self.rng, &mut update.plain, b);
+        }
+        update
+    }
+
+    /// Evaluate the global model on local data.
+    pub fn evaluate(&mut self, params: &[f32], batches: usize) -> anyhow::Result<(f32, f32)> {
+        self.trainer.evaluate(params, &self.data, batches)
+    }
+}
+
+/// mlp-shaped workloads feed [B, 784]; image graphs feed [B, C, H, W]. The
+/// trainer handles image graphs; this helper flattens for mlp.
+pub fn is_flat_input(model: &str) -> bool {
+    model == "mlp"
+}

@@ -1,0 +1,182 @@
+//! FL task configuration (the "server package" of the deployment platform).
+
+use crate::util::cli::Args;
+
+/// Which parameters get encrypted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Selection {
+    /// Full encryption (vanilla HE baseline).
+    Full,
+    /// Paper's Selective Parameter Encryption: top-p by sensitivity.
+    TopP,
+    /// Random-p baseline (Fig. 9 comparison).
+    Random,
+    /// No encryption (plaintext FedAvg baseline).
+    None,
+}
+
+impl Selection {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "full" => Selection::Full,
+            "topp" | "top-p" | "sensitivity" => Selection::TopP,
+            "random" => Selection::Random,
+            "none" | "plaintext" => Selection::None,
+            other => anyhow::bail!("unknown selection strategy '{other}'"),
+        })
+    }
+}
+
+/// Aggregation backend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// AOT Pallas kernel via PJRT (the three-layer hot path).
+    Xla,
+    /// Pure-Rust aggregation.
+    Native,
+}
+
+/// Key management mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KeyMode {
+    /// Trusted key authority distributes one key pair (paper default).
+    SingleKey,
+    /// n-of-n threshold key agreement (Appendix B).
+    Threshold,
+}
+
+/// Full FL task configuration.
+#[derive(Debug, Clone)]
+pub struct FlConfig {
+    pub model: String,
+    pub clients: usize,
+    pub rounds: usize,
+    pub local_steps: usize,
+    pub lr: f32,
+    /// Selective-encryption ratio p ∈ [0, 1].
+    pub ratio: f64,
+    pub selection: Selection,
+    pub backend: Backend,
+    pub key_mode: KeyMode,
+    /// Per-round client dropout probability.
+    pub dropout: f64,
+    /// Optional local-DP Laplace scale on the plaintext part (Algorithm 1's
+    /// optional noise).
+    pub dp_scale: Option<f64>,
+    /// Samples per client.
+    pub samples_per_client: usize,
+    /// Label-skew level in [0, 1].
+    pub skew: f64,
+    pub seed: u64,
+    pub bandwidth: crate::netsim::Bandwidth,
+    /// Evaluate every k rounds (0 = never).
+    pub eval_every: usize,
+    /// Override the crypto context as (n, num_limbs, scaling_bits) — used by
+    /// the Table-6 crypto-parameter sweep. Only valid with the native
+    /// backend (the XLA artifacts are compiled for the default context).
+    pub crypto_override: Option<(usize, usize, u32)>,
+}
+
+impl Default for FlConfig {
+    fn default() -> Self {
+        FlConfig {
+            model: "lenet".to_string(),
+            clients: 8,
+            rounds: 20,
+            local_steps: 4,
+            lr: 0.05,
+            ratio: 0.1,
+            selection: Selection::TopP,
+            backend: Backend::Xla,
+            key_mode: KeyMode::SingleKey,
+            dropout: 0.0,
+            dp_scale: None,
+            samples_per_client: 128,
+            skew: 0.5,
+            seed: 42,
+            bandwidth: crate::netsim::SINGLE_AWS_REGION,
+            eval_every: 5,
+            crypto_override: None,
+        }
+    }
+}
+
+impl FlConfig {
+    /// Parse from CLI options (unset options keep defaults).
+    pub fn from_args(args: &Args) -> anyhow::Result<Self> {
+        let d = FlConfig::default();
+        let bandwidth = match args.get_or("bandwidth", "sar").as_str() {
+            "ib" => crate::netsim::INFINIBAND,
+            "sar" => crate::netsim::SINGLE_AWS_REGION,
+            "mar" => crate::netsim::MULTI_AWS_REGION,
+            "aws200" => crate::netsim::FIG8_REGION,
+            other => anyhow::bail!("unknown bandwidth profile '{other}'"),
+        };
+        Ok(FlConfig {
+            model: args.get_or("model", &d.model),
+            clients: args.get_parsed_or("clients", d.clients),
+            rounds: args.get_parsed_or("rounds", d.rounds),
+            local_steps: args.get_parsed_or("local-steps", d.local_steps),
+            lr: args.get_parsed_or("lr", d.lr),
+            ratio: args.get_parsed_or("ratio", d.ratio),
+            selection: Selection::parse(&args.get_or("selection", "topp"))?,
+            backend: match args.get_or("backend", "xla").as_str() {
+                "xla" => Backend::Xla,
+                "native" => Backend::Native,
+                other => anyhow::bail!("unknown backend '{other}'"),
+            },
+            key_mode: match args.get_or("keys", "single").as_str() {
+                "single" => KeyMode::SingleKey,
+                "threshold" => KeyMode::Threshold,
+                other => anyhow::bail!("unknown key mode '{other}'"),
+            },
+            dropout: args.get_parsed_or("dropout", d.dropout),
+            dp_scale: args.get("dp-scale").and_then(|v| v.parse().ok()),
+            samples_per_client: args.get_parsed_or("samples", d.samples_per_client),
+            skew: args.get_parsed_or("skew", d.skew),
+            seed: args.get_parsed_or("seed", d.seed),
+            bandwidth,
+            eval_every: args.get_parsed_or("eval-every", d.eval_every),
+            crypto_override: None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_and_overrides() {
+        let args = Args::parse_from(
+            "run --model mlp --clients 12 --ratio 0.3 --selection random --backend native \
+             --keys threshold --bandwidth mar --dropout 0.2"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let c = FlConfig::from_args(&args).unwrap();
+        assert_eq!(c.model, "mlp");
+        assert_eq!(c.clients, 12);
+        assert_eq!(c.ratio, 0.3);
+        assert_eq!(c.selection, Selection::Random);
+        assert_eq!(c.backend, Backend::Native);
+        assert_eq!(c.key_mode, KeyMode::Threshold);
+        assert_eq!(c.bandwidth.name, "MAR");
+        assert_eq!(c.dropout, 0.2);
+        // untouched defaults
+        assert_eq!(c.rounds, 20);
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        for bad in [
+            "run --selection nope",
+            "run --backend gpu",
+            "run --keys paillier",
+            "run --bandwidth lan",
+        ] {
+            let args = Args::parse_from(bad.split_whitespace().map(String::from));
+            assert!(FlConfig::from_args(&args).is_err(), "{bad}");
+        }
+    }
+}

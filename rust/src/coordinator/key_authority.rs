@@ -1,0 +1,132 @@
+//! Key management (paper Fig. 3 "Encryption Key Agreement" stage).
+//!
+//! Two modes:
+//! * **Single key** — a trusted key authority generates `(pk, sk)` and
+//!   distributes both to clients; the aggregation server receives only the
+//!   public crypto context (it must never decrypt).
+//! * **Threshold** — no trusted dealer: every client contributes a key share
+//!   over a CRS-derived common polynomial (Appendix B); decryption requires
+//!   all parties' partials.
+//!
+//! Either way the authority can Shamir-escrow key material so a quorum of
+//! clients survives catastrophic dropout ([`escrow_secret`]).
+
+use crate::ckks::threshold::{self, ThresholdParty};
+use crate::ckks::{CkksContext, PublicKey, SecretKey};
+use crate::crypto::prng::ChaChaRng;
+use crate::crypto::shamir;
+
+/// Key material held by the *clients* (the server only ever sees `public`).
+pub enum KeyMaterial {
+    SingleKey {
+        pk: PublicKey,
+        sk: SecretKey,
+    },
+    Threshold {
+        pk: PublicKey,
+        parties: Vec<ThresholdParty>,
+    },
+}
+
+impl KeyMaterial {
+    pub fn public_key(&self) -> &PublicKey {
+        match self {
+            KeyMaterial::SingleKey { pk, .. } => pk,
+            KeyMaterial::Threshold { pk, .. } => pk,
+        }
+    }
+}
+
+/// Run the key-agreement stage.
+pub fn setup(
+    ctx: &CkksContext,
+    mode: crate::coordinator::config::KeyMode,
+    n_clients: usize,
+    rng: &mut ChaChaRng,
+) -> KeyMaterial {
+    match mode {
+        crate::coordinator::config::KeyMode::SingleKey => {
+            let (pk, sk) = ctx.keygen(rng);
+            KeyMaterial::SingleKey { pk, sk }
+        }
+        crate::coordinator::config::KeyMode::Threshold => {
+            // Round 0: CRS; Round 1: every client publishes a share;
+            // Round 2: combine.
+            let a = threshold::common_reference(&ctx.params, 0xFED5_EED);
+            let parties: Vec<ThresholdParty> = (0..n_clients)
+                .map(|k| threshold::party_keygen(&ctx.params, k, &a, rng))
+                .collect();
+            let shares: Vec<&crate::ckks::RnsPoly> =
+                parties.iter().map(|p| &p.b_share_ntt).collect();
+            let pk = threshold::combine_public_key(&ctx.params, &a, &shares);
+            KeyMaterial::Threshold { pk, parties }
+        }
+    }
+}
+
+/// Shamir-escrow an opaque secret (e.g. a serialized secret key) as t-of-n
+/// shares.
+pub fn escrow_secret(
+    secret: &[u8],
+    t: usize,
+    n: usize,
+    rng: &mut ChaChaRng,
+) -> Vec<Vec<shamir::Share>> {
+    shamir::split_bytes(secret, t, n, rng)
+}
+
+/// Recover an escrowed secret from a quorum.
+pub fn recover_secret(parties: &[&[shamir::Share]], len: usize) -> Vec<u8> {
+    shamir::reconstruct_bytes(parties, len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::KeyMode;
+
+    #[test]
+    fn single_key_mode_roundtrips() {
+        let ctx = CkksContext::new(256, 3, 40).unwrap();
+        let mut rng = ChaChaRng::from_seed(1, 0);
+        let km = setup(&ctx, KeyMode::SingleKey, 4, &mut rng);
+        let values = vec![1.25, -0.5, 3.0];
+        let ct = ctx.encrypt_values(&values, km.public_key(), &mut rng);
+        let KeyMaterial::SingleKey { sk, .. } = &km else {
+            panic!()
+        };
+        let dec = ctx.decrypt_values(&ct, sk);
+        for (a, b) in values.iter().zip(dec.iter()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn threshold_mode_needs_all_parties() {
+        let ctx = CkksContext::new(256, 3, 40).unwrap();
+        let mut rng = ChaChaRng::from_seed(2, 0);
+        let km = setup(&ctx, KeyMode::Threshold, 3, &mut rng);
+        let KeyMaterial::Threshold { pk, parties } = &km else {
+            panic!()
+        };
+        let values = vec![0.75; 64];
+        let ct = ctx.encrypt_values(&values, pk, &mut rng);
+        let partials: Vec<_> = parties
+            .iter()
+            .map(|p| threshold::partial_decrypt(&ctx.params, p, &ct, &mut rng))
+            .collect();
+        let m = threshold::combine_partials(&ctx.params, &ct, &partials);
+        let dec = ctx.encoder.decode(&m, ct.n_values, ct.scale);
+        assert!((dec[0] - 0.75).abs() < 1e-4);
+    }
+
+    #[test]
+    fn escrow_recovers_after_dropout() {
+        let mut rng = ChaChaRng::from_seed(3, 0);
+        let secret = b"serialized-secret-key-material".to_vec();
+        let shares = escrow_secret(&secret, 2, 5, &mut rng);
+        // parties 0, 3 survive
+        let rec = recover_secret(&[&shares[0], &shares[3]], secret.len());
+        assert_eq!(rec, secret);
+    }
+}

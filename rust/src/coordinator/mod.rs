@@ -1,0 +1,15 @@
+//! L3 coordinator: the paper's FL Orchestration layer.
+//!
+//! * [`config`] — task configuration (the deployment "server package").
+//! * [`key_authority`] — key agreement: trusted dealer or threshold protocol.
+//! * [`client`] — client-side executor (local train, sensitivity, encrypt).
+//! * [`server`] — the round orchestrator implementing Fig. 3's three stages
+//!   and Algorithm 1, with per-stage overhead metrics.
+
+pub mod client;
+pub mod config;
+pub mod key_authority;
+pub mod server;
+
+pub use config::{Backend, FlConfig, KeyMode, Selection};
+pub use server::{FlReport, FlServer, RoundMetrics};

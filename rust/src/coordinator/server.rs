@@ -1,0 +1,485 @@
+//! FL server: orchestrates the three stages of Fig. 3 —
+//! key agreement → encryption-mask calculation → encrypted federated
+//! learning — and records per-stage overhead metrics (the data source for
+//! Figs. 8/14 and the deployment-platform monitoring of Appendix C).
+
+use super::client::FlClient;
+use super::config::{Backend, FlConfig, Selection};
+use super::key_authority::{self, KeyMaterial};
+use crate::ckks::CkksContext;
+use crate::crypto::prng::ChaChaRng;
+use crate::he_agg::xla::XlaAggregator;
+use crate::he_agg::{native, selective, EncryptedUpdate, EncryptionMask, SelectiveCodec};
+use crate::netsim::SimClock;
+use crate::runtime::Runtime;
+use crate::util::json::Json;
+use std::time::Instant;
+
+/// Per-round overhead breakdown (the paper's "training cycle" dissection).
+#[derive(Debug, Clone, Default)]
+pub struct RoundMetrics {
+    pub round: usize,
+    pub participants: usize,
+    pub train_secs: f64,
+    pub encrypt_secs: f64,
+    pub aggregate_secs: f64,
+    pub decrypt_secs: f64,
+    /// Simulated network time at the configured bandwidth.
+    pub comm_secs: f64,
+    pub upload_bytes: u64,
+    pub download_bytes: u64,
+    pub train_loss: f32,
+}
+
+/// An evaluation point.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalPoint {
+    pub round: usize,
+    pub loss: f32,
+    pub accuracy: f32,
+}
+
+/// Full run report.
+#[derive(Debug, Clone, Default)]
+pub struct FlReport {
+    pub model: String,
+    pub clients: usize,
+    pub mask_ratio: f64,
+    pub encrypted_params: usize,
+    pub total_params: usize,
+    pub keygen_secs: f64,
+    pub mask_agreement_secs: f64,
+    pub rounds: Vec<RoundMetrics>,
+    pub evals: Vec<EvalPoint>,
+}
+
+impl FlReport {
+    pub fn total_secs(&self) -> f64 {
+        self.keygen_secs
+            + self.mask_agreement_secs
+            + self
+                .rounds
+                .iter()
+                .map(|r| {
+                    r.train_secs + r.encrypt_secs + r.aggregate_secs + r.decrypt_secs + r.comm_secs
+                })
+                .sum::<f64>()
+    }
+
+    pub fn total_upload_bytes(&self) -> u64 {
+        self.rounds.iter().map(|r| r.upload_bytes).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", self.model.clone().into()),
+            ("clients", self.clients.into()),
+            ("mask_ratio", self.mask_ratio.into()),
+            ("encrypted_params", self.encrypted_params.into()),
+            ("total_params", self.total_params.into()),
+            ("keygen_secs", self.keygen_secs.into()),
+            ("mask_agreement_secs", self.mask_agreement_secs.into()),
+            (
+                "rounds",
+                Json::Arr(
+                    self.rounds
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("round", r.round.into()),
+                                ("participants", r.participants.into()),
+                                ("train_secs", r.train_secs.into()),
+                                ("encrypt_secs", r.encrypt_secs.into()),
+                                ("aggregate_secs", r.aggregate_secs.into()),
+                                ("decrypt_secs", r.decrypt_secs.into()),
+                                ("comm_secs", r.comm_secs.into()),
+                                ("upload_bytes", r.upload_bytes.into()),
+                                ("download_bytes", r.download_bytes.into()),
+                                ("train_loss", (r.train_loss as f64).into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "evals",
+                Json::Arr(
+                    self.evals
+                        .iter()
+                        .map(|e| {
+                            Json::obj(vec![
+                                ("round", e.round.into()),
+                                ("loss", (e.loss as f64).into()),
+                                ("accuracy", (e.accuracy as f64).into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// The FL server/orchestrator.
+pub struct FlServer<'a> {
+    pub rt: &'a Runtime,
+    pub cfg: FlConfig,
+    pub codec: SelectiveCodec,
+}
+
+impl<'a> FlServer<'a> {
+    pub fn new(rt: &'a Runtime, cfg: FlConfig) -> anyhow::Result<Self> {
+        let ctx = match cfg.crypto_override {
+            Some((n, limbs, bits)) => {
+                anyhow::ensure!(
+                    cfg.backend == Backend::Native,
+                    "crypto overrides require the native backend (XLA artifacts \
+                     are compiled for the default context)"
+                );
+                CkksContext::new(n, limbs, bits)?
+            }
+            None => {
+                let c = &rt.manifest.crypto;
+                let ctx = CkksContext::new(c.n, c.num_limbs, c.scaling_bits)?;
+                rt.manifest.validate_crypto(&ctx.params)?;
+                ctx
+            }
+        };
+        Ok(FlServer {
+            rt,
+            cfg,
+            codec: SelectiveCodec::new(ctx),
+        })
+    }
+
+    fn aggregate(
+        &self,
+        updates: &[EncryptedUpdate],
+        alphas: &[f64],
+    ) -> anyhow::Result<EncryptedUpdate> {
+        match self.cfg.backend {
+            Backend::Xla => {
+                let agg = XlaAggregator::new(self.rt, self.codec.ctx.params.clone())?;
+                agg.aggregate(updates, alphas)
+            }
+            Backend::Native => Ok(native::aggregate(updates, alphas, &self.codec.ctx.params)),
+        }
+    }
+
+    /// Decrypt an aggregated update into a flat global model (done by a
+    /// client / the key holder in the real deployment; the server never has
+    /// the key — this method takes the key material explicitly).
+    fn decrypt_global(
+        &self,
+        update: &EncryptedUpdate,
+        mask: &EncryptionMask,
+        keys: &KeyMaterial,
+        rng: &mut ChaChaRng,
+    ) -> Vec<f32> {
+        match keys {
+            KeyMaterial::SingleKey { sk, .. } => self.codec.decrypt_update(update, mask, sk),
+            KeyMaterial::Threshold { parties, .. } => {
+                let refs: Vec<&crate::ckks::threshold::ThresholdParty> = parties.iter().collect();
+                self.codec.decrypt_update_threshold(update, mask, &refs, rng)
+            }
+        }
+    }
+
+    fn decrypt_vec(
+        &self,
+        cts: &[crate::ckks::Ciphertext],
+        keys: &KeyMaterial,
+        total: usize,
+        rng: &mut ChaChaRng,
+    ) -> Vec<f32> {
+        match keys {
+            KeyMaterial::SingleKey { sk, .. } => {
+                selective::decrypt_vector(&self.codec.ctx, cts, sk, total)
+            }
+            KeyMaterial::Threshold { parties, .. } => {
+                let mut out = Vec::with_capacity(total);
+                for ct in cts {
+                    let partials: Vec<_> = parties
+                        .iter()
+                        .map(|p| {
+                            crate::ckks::threshold::partial_decrypt(
+                                &self.codec.ctx.params,
+                                p,
+                                ct,
+                                rng,
+                            )
+                        })
+                        .collect();
+                    let m = crate::ckks::threshold::combine_partials(
+                        &self.codec.ctx.params,
+                        ct,
+                        &partials,
+                    );
+                    out.extend(
+                        self.codec
+                            .ctx
+                            .encoder
+                            .decode(&m, ct.n_values, ct.scale)
+                            .into_iter()
+                            .map(|v| v as f32),
+                    );
+                }
+                out.truncate(total);
+                out
+            }
+        }
+    }
+
+    /// Run the full federated task. Returns the report and the final model.
+    pub fn run(&self) -> anyhow::Result<(FlReport, Vec<f32>)> {
+        let cfg = &self.cfg;
+        let mut report = FlReport {
+            model: cfg.model.clone(),
+            clients: cfg.clients,
+            ..Default::default()
+        };
+        let mut server_rng = ChaChaRng::from_seed(cfg.seed, 0x5E17);
+
+        // ------------------------------------------------------------------
+        // Stage 1 — Encryption key agreement (Fig. 3).
+        let t = Instant::now();
+        let keys = key_authority::setup(
+            &self.codec.ctx,
+            cfg.key_mode,
+            cfg.clients,
+            &mut server_rng,
+        );
+        report.keygen_secs = t.elapsed().as_secs_f64();
+        let pk = keys.public_key().clone();
+
+        // Build clients with their local datasets.
+        let mut clients: Vec<FlClient<'_>> = (0..cfg.clients)
+            .map(|id| {
+                FlClient::new(
+                    self.rt,
+                    &cfg.model,
+                    id,
+                    cfg.clients,
+                    cfg.samples_per_client,
+                    cfg.skew,
+                    cfg.seed,
+                )
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let mut global = self.rt.manifest.load_init_params(&cfg.model)?;
+        let total_params = global.len();
+        report.total_params = total_params;
+
+        // ------------------------------------------------------------------
+        // Stage 2 — Encryption mask calculation (§2.4): clients compute local
+        // sensitivity maps, encrypt them, the server aggregates them
+        // homomorphically, the key holder decrypts the *aggregate* only, and
+        // the top-p mask becomes shared configuration.
+        let t = Instant::now();
+        let mask = match cfg.selection {
+            Selection::Full => EncryptionMask::full(total_params),
+            Selection::None => EncryptionMask::empty(total_params),
+            Selection::Random => {
+                EncryptionMask::random(total_params, cfg.ratio, &mut server_rng)
+            }
+            Selection::TopP => {
+                let alphas: Vec<f64> = clients.iter().map(|c| c.alpha).collect();
+                let mut enc_maps: Vec<EncryptedUpdate> = Vec::with_capacity(cfg.clients);
+                for c in clients.iter_mut() {
+                    let s = c.sensitivity(&global)?;
+                    let cts = selective::encrypt_vector(&self.codec.ctx, &s, &pk, &mut c.rng);
+                    enc_maps.push(EncryptedUpdate {
+                        cts,
+                        plain: Vec::new(),
+                        total: total_params,
+                    });
+                }
+                let agg_map = self.aggregate(&enc_maps, &alphas)?;
+                let global_map =
+                    self.decrypt_vec(&agg_map.cts, &keys, total_params, &mut server_rng);
+                EncryptionMask::top_p(&global_map, cfg.ratio)
+            }
+        };
+        report.mask_agreement_secs = t.elapsed().as_secs_f64();
+        report.mask_ratio = mask.ratio();
+        report.encrypted_params = mask.encrypted_count();
+
+        // ------------------------------------------------------------------
+        // Stage 3 — Encrypted federated learning rounds (Algorithm 1).
+        for round in 0..cfg.rounds {
+            let mut rm = RoundMetrics {
+                round,
+                ..Default::default()
+            };
+            let mut clock = SimClock::default();
+
+            // dropout injection (HE is dropout-robust: we just renormalize)
+            let active: Vec<usize> = (0..cfg.clients)
+                .filter(|_| server_rng.uniform_f64() >= cfg.dropout)
+                .collect();
+            let active = if active.is_empty() { vec![0] } else { active };
+            rm.participants = active.len();
+            let alpha_sum: f64 = active.iter().map(|&i| clients[i].alpha).sum();
+
+            // local training + encryption per participant
+            let mut updates: Vec<EncryptedUpdate> = Vec::with_capacity(active.len());
+            let mut alphas: Vec<f64> = Vec::with_capacity(active.len());
+            let mut loss_sum = 0.0f32;
+            for &i in &active {
+                let c = &mut clients[i];
+                let t = Instant::now();
+                let (mut local, loss) = c.train(&global, cfg.local_steps, cfg.lr)?;
+                rm.train_secs += t.elapsed().as_secs_f64();
+                loss_sum += loss;
+
+                let t = Instant::now();
+                let upd = c.encrypt(&self.codec, &mut local, &mask, &pk, cfg.dp_scale);
+                rm.encrypt_secs += t.elapsed().as_secs_f64();
+                clock.upload(upd.wire_bytes(&self.codec.ctx) as u64, cfg.bandwidth);
+                alphas.push(c.alpha / alpha_sum);
+                updates.push(upd);
+            }
+
+            // server-side homomorphic aggregation
+            let t = Instant::now();
+            let agg = self.aggregate(&updates, &alphas)?;
+            rm.aggregate_secs = t.elapsed().as_secs_f64();
+
+            // broadcast the partially-encrypted global model
+            let down = agg.wire_bytes(&self.codec.ctx) as u64;
+            for _ in &active {
+                clock.download(down, cfg.bandwidth);
+            }
+
+            // key-holder decryption + merge
+            let t = Instant::now();
+            global = self.decrypt_global(&agg, &mask, &keys, &mut server_rng);
+            rm.decrypt_secs = t.elapsed().as_secs_f64();
+
+            rm.comm_secs = clock.comm_secs;
+            rm.upload_bytes = clock.bytes_up;
+            rm.download_bytes = clock.bytes_down;
+            rm.train_loss = loss_sum / active.len() as f32;
+            crate::log_debug!(
+                "server",
+                "round {round}: loss {:.4} train {:.2}s enc {:.2}s agg {:.2}s",
+                rm.train_loss,
+                rm.train_secs,
+                rm.encrypt_secs,
+                rm.aggregate_secs
+            );
+            report.rounds.push(rm);
+
+            // periodic evaluation
+            if cfg.eval_every > 0 && (round + 1) % cfg.eval_every == 0 {
+                let mut l = 0.0f32;
+                let mut a = 0.0f32;
+                for c in clients.iter_mut() {
+                    let (cl, ca) = c.evaluate(&global, 1)?;
+                    l += cl;
+                    a += ca;
+                }
+                report.evals.push(EvalPoint {
+                    round: round + 1,
+                    loss: l / cfg.clients as f32,
+                    accuracy: a / cfg.clients as f32,
+                });
+            }
+        }
+        Ok((report, global))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::KeyMode;
+    use std::path::PathBuf;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(Runtime::new(dir).unwrap())
+    }
+
+    fn quick_cfg() -> FlConfig {
+        FlConfig {
+            model: "mlp".into(),
+            clients: 3,
+            rounds: 3,
+            local_steps: 2,
+            lr: 0.1,
+            ratio: 0.1,
+            samples_per_client: 64,
+            eval_every: 3,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn full_pipeline_selective_xla() {
+        let Some(rt) = runtime() else { return };
+        let server = FlServer::new(&rt, quick_cfg()).unwrap();
+        let (report, global) = server.run().unwrap();
+        assert_eq!(report.rounds.len(), 3);
+        assert_eq!(global.len(), 79510);
+        assert!((report.mask_ratio - 0.1).abs() < 0.01);
+        assert!(!report.evals.is_empty());
+        // losses should trend down across rounds
+        let first = report.rounds.first().unwrap().train_loss;
+        let last = report.rounds.last().unwrap().train_loss;
+        assert!(last < first, "loss {first} -> {last}");
+        // selective encryption cuts upload bytes well below full encryption
+        let plain_bytes = 4 * 79510u64 * 3;
+        assert!(report.rounds[0].upload_bytes < 4 * plain_bytes);
+    }
+
+    #[test]
+    fn plaintext_and_full_encryption_agree() {
+        let Some(rt) = runtime() else { return };
+        // same seed, plaintext vs fully-encrypted: final models must agree
+        // to CKKS precision (the "exact aggregation" claim of Table 1).
+        let mut cfg_a = quick_cfg();
+        cfg_a.selection = Selection::None;
+        cfg_a.dropout = 0.0;
+        let mut cfg_b = quick_cfg();
+        cfg_b.selection = Selection::Full;
+        cfg_b.dropout = 0.0;
+        let (_, ga) = FlServer::new(&rt, cfg_a).unwrap().run().unwrap();
+        let (_, gb) = FlServer::new(&rt, cfg_b).unwrap().run().unwrap();
+        assert_eq!(ga.len(), gb.len());
+        let max_err = ga
+            .iter()
+            .zip(gb.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 1e-3, "max err {max_err}");
+    }
+
+    #[test]
+    fn threshold_mode_runs() {
+        let Some(rt) = runtime() else { return };
+        let mut cfg = quick_cfg();
+        cfg.key_mode = KeyMode::Threshold;
+        cfg.rounds = 2;
+        cfg.backend = Backend::Native;
+        let (report, _) = FlServer::new(&rt, cfg).unwrap().run().unwrap();
+        assert_eq!(report.rounds.len(), 2);
+    }
+
+    #[test]
+    fn dropout_reduces_participants() {
+        let Some(rt) = runtime() else { return };
+        let mut cfg = quick_cfg();
+        cfg.clients = 6;
+        cfg.dropout = 0.5;
+        cfg.rounds = 4;
+        cfg.selection = Selection::Random;
+        let (report, _) = FlServer::new(&rt, cfg).unwrap().run().unwrap();
+        assert!(report.rounds.iter().any(|r| r.participants < 6));
+        // run completes despite dropout — the HE robustness claim of Table 1
+        assert_eq!(report.rounds.len(), 4);
+    }
+}

@@ -1,0 +1,73 @@
+//! Laplace mechanism (Definitions 3.6/3.7, Lemma 3.8 of the paper).
+//!
+//! Algorithm 1 allows optional local DP noise on the plaintext portion of a
+//! selectively-encrypted update; the §3 privacy analysis compares full-DP,
+//! random-selection and sensitivity-selection budgets. This module provides
+//! the mechanism itself; budget accounting lives in [`crate::privacy`].
+
+use crate::crypto::prng::ChaChaRng;
+
+/// Sample Laplace(0, b) by inverse CDF.
+pub fn laplace(rng: &mut ChaChaRng, b: f64) -> f64 {
+    assert!(b > 0.0, "scale must be positive");
+    // u uniform in (-1/2, 1/2]; x = -b * sign(u) * ln(1 - 2|u|)
+    let u = rng.uniform_f64() - 0.5;
+    let s = if u >= 0.0 { 1.0 } else { -1.0 };
+    -b * s * (1.0 - 2.0 * u.abs()).max(f64::MIN_POSITIVE).ln()
+}
+
+/// The Laplace mechanism: adds Laplace(Δf/ε) noise to each coordinate,
+/// achieving ε-DP per coordinate (Lemma 3.8).
+pub fn laplace_mechanism(rng: &mut ChaChaRng, values: &mut [f32], sensitivity: f64, epsilon: f64) {
+    assert!(epsilon > 0.0);
+    let b = sensitivity / epsilon;
+    for v in values.iter_mut() {
+        *v += laplace(rng, b) as f32;
+    }
+}
+
+/// Add Laplace(b) noise with an explicit scale (the `Noise(b)` call of
+/// Algorithm 1).
+pub fn add_noise(rng: &mut ChaChaRng, values: &mut [f32], b: f64) {
+    for v in values.iter_mut() {
+        *v += laplace(rng, b) as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn laplace_moments() {
+        let mut rng = ChaChaRng::from_seed(100, 0);
+        let b = 2.0;
+        let n = 40_000;
+        let samples: Vec<f64> = (0..n).map(|_| laplace(&mut rng, b)).collect();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        // Var[Laplace(b)] = 2 b^2 = 8
+        assert!((var - 8.0).abs() < 0.5, "var {var}");
+    }
+
+    #[test]
+    fn mechanism_perturbs_all_coordinates() {
+        let mut rng = ChaChaRng::from_seed(101, 0);
+        let mut xs = vec![1.0f32; 64];
+        laplace_mechanism(&mut rng, &mut xs, 1.0, 0.5);
+        assert!(xs.iter().all(|&x| x != 1.0));
+    }
+
+    #[test]
+    fn smaller_epsilon_means_more_noise() {
+        // Empirical check of the ε↔noise tradeoff.
+        let spread = |eps: f64| {
+            let mut rng = ChaChaRng::from_seed(102, 0);
+            let mut xs = vec![0.0f32; 4096];
+            laplace_mechanism(&mut rng, &mut xs, 1.0, eps);
+            xs.iter().map(|x| x.abs() as f64).sum::<f64>() / xs.len() as f64
+        };
+        assert!(spread(0.1) > 5.0 * spread(10.0));
+    }
+}

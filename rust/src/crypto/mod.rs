@@ -1,0 +1,8 @@
+//! Cryptographic substrates built from scratch: a ChaCha20-based CSPRNG,
+//! Shamir secret sharing over a prime field (used by the threshold-HE key
+//! management of Appendix B), and the Laplace mechanism for the optional
+//! local differential-privacy noise of Algorithm 1.
+
+pub mod dp;
+pub mod prng;
+pub mod shamir;

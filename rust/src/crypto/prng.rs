@@ -1,0 +1,323 @@
+//! ChaCha20-based cryptographically secure pseudo-random number generator.
+//!
+//! Implemented from scratch (RFC 8439 block function). Used for all secret
+//! sampling in the CKKS substrate: uniform ring elements, ternary secrets,
+//! centered-binomial errors. Deterministic seeding is supported for tests and
+//! reproducible experiments; [`ChaChaRng::from_os_entropy`] seeds from
+//! `/dev/urandom` for real key generation.
+
+/// ChaCha20 quarter round.
+#[inline(always)]
+fn quarter(state: &mut [u32; 16], a: usize, b: usize, c: usize, d: usize) {
+    state[a] = state[a].wrapping_add(state[b]);
+    state[d] = (state[d] ^ state[a]).rotate_left(16);
+    state[c] = state[c].wrapping_add(state[d]);
+    state[b] = (state[b] ^ state[c]).rotate_left(12);
+    state[a] = state[a].wrapping_add(state[b]);
+    state[d] = (state[d] ^ state[a]).rotate_left(8);
+    state[c] = state[c].wrapping_add(state[d]);
+    state[b] = (state[b] ^ state[c]).rotate_left(7);
+}
+
+/// Run the 20-round ChaCha block function on `input`, producing 64 bytes of
+/// keystream as 16 little-endian u32 words.
+fn chacha20_block(input: &[u32; 16]) -> [u32; 16] {
+    let mut x = *input;
+    for _ in 0..10 {
+        // column rounds
+        quarter(&mut x, 0, 4, 8, 12);
+        quarter(&mut x, 1, 5, 9, 13);
+        quarter(&mut x, 2, 6, 10, 14);
+        quarter(&mut x, 3, 7, 11, 15);
+        // diagonal rounds
+        quarter(&mut x, 0, 5, 10, 15);
+        quarter(&mut x, 1, 6, 11, 12);
+        quarter(&mut x, 2, 7, 8, 13);
+        quarter(&mut x, 3, 4, 9, 14);
+    }
+    for i in 0..16 {
+        x[i] = x[i].wrapping_add(input[i]);
+    }
+    x
+}
+
+/// A ChaCha20 keystream RNG.
+#[derive(Debug, Clone)]
+pub struct ChaChaRng {
+    state: [u32; 16],
+    buf: [u32; 16],
+    /// Next unread word in `buf` (16 = exhausted).
+    idx: usize,
+}
+
+const SIGMA: [u32; 4] = [0x6170_7865, 0x3320_646e, 0x7962_2d32, 0x6b20_6574];
+
+impl ChaChaRng {
+    /// Construct from a 32-byte key and 12-byte nonce.
+    pub fn new(key: &[u8; 32], nonce: &[u8; 12]) -> Self {
+        let mut state = [0u32; 16];
+        state[..4].copy_from_slice(&SIGMA);
+        for i in 0..8 {
+            state[4 + i] = u32::from_le_bytes(key[4 * i..4 * i + 4].try_into().unwrap());
+        }
+        state[12] = 0; // block counter
+        for i in 0..3 {
+            state[13 + i] = u32::from_le_bytes(nonce[4 * i..4 * i + 4].try_into().unwrap());
+        }
+        ChaChaRng {
+            state,
+            buf: [0; 16],
+            idx: 16,
+        }
+    }
+
+    /// Deterministic seeding for tests/experiments: expands a u64 seed and a
+    /// stream id into the key/nonce.
+    pub fn from_seed(seed: u64, stream: u64) -> Self {
+        let mut key = [0u8; 32];
+        key[..8].copy_from_slice(&seed.to_le_bytes());
+        key[8..16].copy_from_slice(&seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).to_le_bytes());
+        key[16..24].copy_from_slice(&stream.to_le_bytes());
+        key[24..32].copy_from_slice(&stream.wrapping_add(0xD1B5_4A32_D192_ED03).to_le_bytes());
+        let nonce = [0u8; 12];
+        ChaChaRng::new(&key, &nonce)
+    }
+
+    /// Seed from the OS entropy pool.
+    pub fn from_os_entropy() -> std::io::Result<Self> {
+        use std::io::Read;
+        let mut key = [0u8; 32];
+        let mut nonce = [0u8; 12];
+        let mut f = std::fs::File::open("/dev/urandom")?;
+        f.read_exact(&mut key)?;
+        f.read_exact(&mut nonce)?;
+        Ok(ChaChaRng::new(&key, &nonce))
+    }
+
+    fn refill(&mut self) {
+        self.buf = chacha20_block(&self.state);
+        self.state[12] = self.state[12].wrapping_add(1);
+        if self.state[12] == 0 {
+            self.state[13] = self.state[13].wrapping_add(1);
+        }
+        self.idx = 0;
+    }
+
+    /// Next 32 random bits.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        if self.idx >= 16 {
+            self.refill();
+        }
+        let v = self.buf[self.idx];
+        self.idx += 1;
+        v
+    }
+
+    /// Next 64 random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        (self.next_u32() as u64) | ((self.next_u32() as u64) << 32)
+    }
+
+    /// Uniform in `[0, bound)` by rejection sampling (unbiased).
+    pub fn uniform_u64(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0);
+        // Largest multiple of `bound` that fits in u64.
+        let zone = u64::MAX - (u64::MAX % bound);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return v % bound;
+            }
+        }
+    }
+
+    /// Uniform usize in `[0, bound)`.
+    pub fn uniform_usize(&mut self, bound: usize) -> usize {
+        self.uniform_u64(bound as u64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)` with 53 bits of precision.
+    pub fn uniform_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal_f64(&mut self) -> f64 {
+        let u1 = loop {
+            let u = self.uniform_f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        let u2 = self.uniform_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Ternary sample in {-1, 0, 1} with probabilities (1/4, 1/2, 1/4) —
+    /// the standard CKKS secret/ephemeral distribution.
+    pub fn ternary(&mut self) -> i64 {
+        match self.next_u32() & 3 {
+            0 => -1,
+            1 => 1,
+            _ => 0,
+        }
+    }
+
+    /// Centered binomial with parameter `k` (variance `k/2`); `k = 21` gives
+    /// the σ≈3.2 discrete-Gaussian-equivalent error used by RNS-CKKS stacks.
+    pub fn cbd(&mut self, k: u32) -> i64 {
+        let mut acc = 0i64;
+        let mut remaining = k;
+        while remaining > 0 {
+            let take = remaining.min(32);
+            let a = self.next_u32() & (((1u64 << take) - 1) as u32);
+            let b = self.next_u32() & (((1u64 << take) - 1) as u32);
+            acc += a.count_ones() as i64 - b.count_ones() as i64;
+            remaining -= take;
+        }
+        acc
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.uniform_usize(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Fill a byte buffer with keystream.
+    pub fn fill_bytes(&mut self, out: &mut [u8]) {
+        let mut i = 0;
+        while i < out.len() {
+            let w = self.next_u32().to_le_bytes();
+            let n = (out.len() - i).min(4);
+            out[i..i + n].copy_from_slice(&w[..n]);
+            i += n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// RFC 8439 §2.3.2 test vector for the ChaCha20 block function.
+    #[test]
+    fn rfc8439_block_vector() {
+        let mut state = [0u32; 16];
+        state[..4].copy_from_slice(&SIGMA);
+        let key: Vec<u8> = (0u8..32).collect();
+        for i in 0..8 {
+            state[4 + i] = u32::from_le_bytes(key[4 * i..4 * i + 4].try_into().unwrap());
+        }
+        state[12] = 1;
+        state[13] = 0x0900_0000;
+        state[14] = 0x4a00_0000;
+        state[15] = 0x0000_0000;
+        let out = chacha20_block(&state);
+        let expected: [u32; 16] = [
+            0xe4e7f110, 0x15593bd1, 0x1fdd0f50, 0xc47120a3, 0xc7f4d1c7, 0x0368c033, 0x9aaa2204,
+            0x4e6cd4c3, 0x466482d2, 0x09aa9f07, 0x05d7c214, 0xa2028bd9, 0xd19c12b5, 0xb94e16de,
+            0xe883d0cb, 0x4e3c50a2,
+        ];
+        assert_eq!(out, expected);
+    }
+
+    #[test]
+    fn determinism_and_streams() {
+        let mut a = ChaChaRng::from_seed(42, 0);
+        let mut b = ChaChaRng::from_seed(42, 0);
+        let mut c = ChaChaRng::from_seed(42, 1);
+        let xs: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        let zs: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        assert_eq!(xs, ys);
+        assert_ne!(xs, zs);
+    }
+
+    #[test]
+    fn uniform_bound_respected() {
+        let mut rng = ChaChaRng::from_seed(7, 7);
+        for bound in [1u64, 2, 3, 1000, 1 << 31, (1 << 31) - 1] {
+            for _ in 0..200 {
+                assert!(rng.uniform_u64(bound) < bound);
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_f64_in_unit_interval() {
+        let mut rng = ChaChaRng::from_seed(1, 2);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let x = rng.uniform_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn ternary_distribution() {
+        let mut rng = ChaChaRng::from_seed(3, 4);
+        let mut counts = [0usize; 3];
+        for _ in 0..30_000 {
+            match rng.ternary() {
+                -1 => counts[0] += 1,
+                0 => counts[1] += 1,
+                1 => counts[2] += 1,
+                _ => unreachable!(),
+            }
+        }
+        // ~7.5k, 15k, 7.5k
+        assert!((counts[0] as f64 - 7500.0).abs() < 500.0);
+        assert!((counts[1] as f64 - 15000.0).abs() < 700.0);
+        assert!((counts[2] as f64 - 7500.0).abs() < 500.0);
+    }
+
+    #[test]
+    fn cbd_moments() {
+        let mut rng = ChaChaRng::from_seed(9, 9);
+        let k = 21;
+        let n = 20_000;
+        let samples: Vec<i64> = (0..n).map(|_| rng.cbd(k)).collect();
+        let mean = samples.iter().sum::<i64>() as f64 / n as f64;
+        let var = samples.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.1, "mean {mean}");
+        // variance k/2 = 10.5
+        assert!((var - 10.5).abs() < 0.6, "var {var}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = ChaChaRng::from_seed(11, 0);
+        let n = 20_000;
+        let samples: Vec<f64> = (0..n).map(|_| rng.normal_f64()).collect();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.05);
+        assert!((var - 1.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = ChaChaRng::from_seed(5, 5);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn os_entropy_seeds() {
+        let mut a = ChaChaRng::from_os_entropy().unwrap();
+        let mut b = ChaChaRng::from_os_entropy().unwrap();
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

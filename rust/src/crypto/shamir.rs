@@ -1,0 +1,191 @@
+//! Shamir secret sharing over the prime field GF(p), p = 2^61 - 1 (Mersenne).
+//!
+//! Used by the key-management layer (Appendix B): the key authority can
+//! escrow a CKKS secret key as t-of-n shares so that a quorum of clients can
+//! reconstruct it after catastrophic dropout, and the threshold-HE setup uses
+//! it to back up per-party key shares. Secrets larger than the field are
+//! split into 32-bit chunks, each shared independently.
+
+use crate::crypto::prng::ChaChaRng;
+
+/// Field modulus: the Mersenne prime 2^61 - 1.
+pub const P: u64 = (1u64 << 61) - 1;
+
+#[inline]
+fn fadd(a: u64, b: u64) -> u64 {
+    let s = a + b; // < 2^62, no overflow
+    if s >= P {
+        s - P
+    } else {
+        s
+    }
+}
+
+#[inline]
+fn fsub(a: u64, b: u64) -> u64 {
+    if a >= b {
+        a - b
+    } else {
+        a + P - b
+    }
+}
+
+#[inline]
+fn fmul(a: u64, b: u64) -> u64 {
+    ((a as u128 * b as u128) % P as u128) as u64
+}
+
+/// Modular inverse by Fermat's little theorem.
+fn finv(a: u64) -> u64 {
+    assert!(a % P != 0, "no inverse of 0");
+    // a^(p-2) mod p
+    let mut base = a % P;
+    let mut exp = P - 2;
+    let mut acc = 1u64;
+    while exp > 0 {
+        if exp & 1 == 1 {
+            acc = fmul(acc, base);
+        }
+        base = fmul(base, base);
+        exp >>= 1;
+    }
+    acc
+}
+
+/// One share of a field element: the point (x, y) on the polynomial.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Share {
+    pub x: u64,
+    pub y: u64,
+}
+
+/// Split `secret` (< P) into `n` shares with threshold `t` (any `t` shares
+/// reconstruct, fewer reveal nothing).
+pub fn split(secret: u64, t: usize, n: usize, rng: &mut ChaChaRng) -> Vec<Share> {
+    assert!(t >= 1 && t <= n, "need 1 <= t <= n");
+    assert!(secret < P, "secret must be < field modulus");
+    // Random degree-(t-1) polynomial with constant term = secret.
+    let mut coeffs = vec![secret];
+    for _ in 1..t {
+        coeffs.push(rng.uniform_u64(P));
+    }
+    (1..=n as u64)
+        .map(|x| {
+            // Horner evaluation.
+            let mut y = 0u64;
+            for &c in coeffs.iter().rev() {
+                y = fadd(fmul(y, x), c);
+            }
+            Share { x, y }
+        })
+        .collect()
+}
+
+/// Reconstruct the secret from at least `t` distinct shares via Lagrange
+/// interpolation at x = 0.
+pub fn reconstruct(shares: &[Share]) -> u64 {
+    let mut secret = 0u64;
+    for (i, si) in shares.iter().enumerate() {
+        let mut num = 1u64;
+        let mut den = 1u64;
+        for (j, sj) in shares.iter().enumerate() {
+            if i == j {
+                continue;
+            }
+            num = fmul(num, sj.x % P);
+            den = fmul(den, fsub(sj.x % P, si.x % P));
+        }
+        let li = fmul(num, finv(den));
+        secret = fadd(secret, fmul(si.y, li));
+    }
+    secret
+}
+
+/// Share an arbitrary byte string: each 4-byte chunk becomes a field element.
+/// Returns per-party share vectors (party k gets `out[k]`).
+pub fn split_bytes(data: &[u8], t: usize, n: usize, rng: &mut ChaChaRng) -> Vec<Vec<Share>> {
+    let mut per_party: Vec<Vec<Share>> = vec![Vec::new(); n];
+    for chunk in data.chunks(4) {
+        let mut word = [0u8; 4];
+        word[..chunk.len()].copy_from_slice(chunk);
+        let secret = u32::from_le_bytes(word) as u64;
+        let shares = split(secret, t, n, rng);
+        for (k, s) in shares.into_iter().enumerate() {
+            per_party[k].push(s);
+        }
+    }
+    per_party
+}
+
+/// Reconstruct a byte string of length `len` from per-party share vectors.
+pub fn reconstruct_bytes(parties: &[&[Share]], len: usize) -> Vec<u8> {
+    let chunks = parties[0].len();
+    assert!(parties.iter().all(|p| p.len() == chunks));
+    let mut out = Vec::with_capacity(len);
+    for c in 0..chunks {
+        let shares: Vec<Share> = parties.iter().map(|p| p[c]).collect();
+        let word = reconstruct(&shares) as u32;
+        out.extend_from_slice(&word.to_le_bytes());
+    }
+    out.truncate(len);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn field_sanity() {
+        assert_eq!(fmul(finv(12345), 12345), 1);
+        assert_eq!(fadd(P - 1, 1), 0);
+        assert_eq!(fsub(0, 1), P - 1);
+    }
+
+    #[test]
+    fn split_reconstruct_roundtrip() {
+        let mut rng = ChaChaRng::from_seed(1, 0);
+        for (t, n) in [(1usize, 1usize), (2, 3), (3, 5), (5, 5)] {
+            let secret = rng.uniform_u64(P);
+            let shares = split(secret, t, n, &mut rng);
+            // any t-subset reconstructs
+            assert_eq!(reconstruct(&shares[..t]), secret);
+            assert_eq!(reconstruct(&shares[n - t..]), secret);
+            // all shares also reconstruct
+            assert_eq!(reconstruct(&shares), secret);
+        }
+    }
+
+    #[test]
+    fn fewer_than_t_shares_do_not_reconstruct() {
+        let mut rng = ChaChaRng::from_seed(2, 0);
+        let secret = 0xDEAD_BEEFu64;
+        let shares = split(secret, 3, 5, &mut rng);
+        // With only 2 of 3 required shares, Lagrange gives a wrong value with
+        // overwhelming probability (information-theoretically independent).
+        assert_ne!(reconstruct(&shares[..2]), secret);
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let mut rng = ChaChaRng::from_seed(3, 0);
+        let data: Vec<u8> = (0u8..=255).cycle().take(1001).collect();
+        let parties = split_bytes(&data, 2, 4, &mut rng);
+        let rec = reconstruct_bytes(&[&parties[1], &parties[3]], data.len());
+        assert_eq!(rec, data);
+    }
+
+    /// Property sweep: random (t, n, secret) combinations all roundtrip.
+    #[test]
+    fn property_sweep() {
+        let mut rng = ChaChaRng::from_seed(4, 0);
+        for _ in 0..50 {
+            let n = 1 + rng.uniform_usize(8);
+            let t = 1 + rng.uniform_usize(n);
+            let secret = rng.uniform_u64(P);
+            let mut shares = split(secret, t, n, &mut rng);
+            rng.shuffle(&mut shares);
+            assert_eq!(reconstruct(&shares[..t]), secret);
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Federated-learning substrate: model registry, synthetic datasets, and the
+//! local training driver over the AOT artifacts.
+
+pub mod data;
+pub mod model_meta;
+pub mod trainer;
+
+pub use model_meta::{ModelInfo, TABLE4_MODELS};
+pub use trainer::{LocalTrainer, Workload};

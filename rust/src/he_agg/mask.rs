@@ -1,0 +1,221 @@
+//! Encryption masks: which parameters get homomorphically protected.
+//!
+//! The paper's Selective Parameter Encryption ranks parameters by the
+//! securely-aggregated sensitivity map and encrypts the top-`p` fraction;
+//! random selection is the weaker baseline of Fig. 9; the "first and last
+//! layers" heuristic is the Empirical Selection Recipe of §4.2.2.
+
+use crate::crypto::prng::ChaChaRng;
+
+/// A binary encryption mask over a flat parameter vector, stored as the
+/// sorted list of encrypted indices.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EncryptionMask {
+    pub total: usize,
+    /// Sorted indices of encrypted (protected) parameters.
+    pub encrypted: Vec<u32>,
+}
+
+impl EncryptionMask {
+    /// Encrypt everything (the vanilla-HE baseline).
+    pub fn full(total: usize) -> Self {
+        EncryptionMask {
+            total,
+            encrypted: (0..total as u32).collect(),
+        }
+    }
+
+    /// Encrypt nothing (plaintext FedAvg).
+    pub fn empty(total: usize) -> Self {
+        EncryptionMask {
+            total,
+            encrypted: Vec::new(),
+        }
+    }
+
+    /// Top-`p` fraction by sensitivity (the paper's selection strategy).
+    pub fn top_p(sensitivity: &[f32], p: f64) -> Self {
+        let total = sensitivity.len();
+        let k = ((total as f64) * p.clamp(0.0, 1.0)).round() as usize;
+        let mut idx: Vec<u32> = (0..total as u32).collect();
+        // Partial selection: k largest by sensitivity.
+        idx.select_nth_unstable_by(k.min(total.saturating_sub(1)), |&a, &b| {
+            sensitivity[b as usize]
+                .partial_cmp(&sensitivity[a as usize])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let mut encrypted: Vec<u32> = idx[..k].to_vec();
+        encrypted.sort_unstable();
+        EncryptionMask { total, encrypted }
+    }
+
+    /// Uniform-random `p` fraction (Fig. 9's baseline).
+    pub fn random(total: usize, p: f64, rng: &mut ChaChaRng) -> Self {
+        let k = ((total as f64) * p.clamp(0.0, 1.0)).round() as usize;
+        let mut idx: Vec<u32> = (0..total as u32).collect();
+        rng.shuffle(&mut idx);
+        let mut encrypted: Vec<u32> = idx[..k].to_vec();
+        encrypted.sort_unstable();
+        EncryptionMask { total, encrypted }
+    }
+
+    /// The Empirical Selection Recipe: top-`p` sensitive parameters plus the
+    /// first and last layer ranges.
+    pub fn recipe(
+        sensitivity: &[f32],
+        p: f64,
+        first_layer: std::ops::Range<usize>,
+        last_layer: std::ops::Range<usize>,
+    ) -> Self {
+        let base = Self::top_p(sensitivity, p);
+        let mut set: Vec<bool> = vec![false; sensitivity.len()];
+        for &i in &base.encrypted {
+            set[i as usize] = true;
+        }
+        for i in first_layer.chain(last_layer) {
+            set[i] = true;
+        }
+        let encrypted = set
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &b)| b.then_some(i as u32))
+            .collect();
+        EncryptionMask {
+            total: sensitivity.len(),
+            encrypted,
+        }
+    }
+
+    /// Number of encrypted parameters.
+    pub fn encrypted_count(&self) -> usize {
+        self.encrypted.len()
+    }
+
+    /// Actual encrypted ratio.
+    pub fn ratio(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.encrypted.len() as f64 / self.total as f64
+        }
+    }
+
+    /// Dense boolean view (for attack simulation / merging).
+    pub fn to_dense(&self) -> Vec<bool> {
+        let mut v = vec![false; self.total];
+        for &i in &self.encrypted {
+            v[i as usize] = true;
+        }
+        v
+    }
+
+    /// Sorted plaintext (unencrypted) indices.
+    pub fn plaintext_indices(&self) -> Vec<u32> {
+        let dense = self.to_dense();
+        (0..self.total as u32)
+            .filter(|&i| !dense[i as usize])
+            .collect()
+    }
+
+    /// Serialize as little-endian u32 list prefixed with total (for the
+    /// mask-distribution message of Algorithm 1 round 1).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(8 + 4 * self.encrypted.len());
+        out.extend_from_slice(&(self.total as u32).to_le_bytes());
+        out.extend_from_slice(&(self.encrypted.len() as u32).to_le_bytes());
+        for &i in &self.encrypted {
+            out.extend_from_slice(&i.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> anyhow::Result<Self> {
+        anyhow::ensure!(bytes.len() >= 8, "truncated mask");
+        let total = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
+        let k = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
+        anyhow::ensure!(bytes.len() == 8 + 4 * k, "bad mask length");
+        let mut encrypted = Vec::with_capacity(k);
+        let mut prev: i64 = -1;
+        for c in bytes[8..].chunks_exact(4) {
+            let i = u32::from_le_bytes(c.try_into().unwrap());
+            anyhow::ensure!((i as usize) < total, "mask index out of range");
+            anyhow::ensure!(i as i64 > prev, "mask indices must be sorted unique");
+            prev = i as i64;
+            encrypted.push(i);
+        }
+        Ok(EncryptionMask { total, encrypted })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_p_selects_most_sensitive() {
+        let s: Vec<f32> = vec![0.1, 5.0, 0.2, 4.0, 0.05, 3.0, 0.3, 2.0, 0.01, 1.0];
+        let m = EncryptionMask::top_p(&s, 0.3);
+        assert_eq!(m.encrypted, vec![1, 3, 5]); // sensitivities 5,4,3
+        assert_eq!(m.encrypted_count(), 3);
+        assert!((m.ratio() - 0.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn top_p_extremes() {
+        let s = vec![1.0f32; 100];
+        assert_eq!(EncryptionMask::top_p(&s, 0.0).encrypted_count(), 0);
+        assert_eq!(EncryptionMask::top_p(&s, 1.0).encrypted_count(), 100);
+        assert_eq!(EncryptionMask::full(100).encrypted_count(), 100);
+        assert_eq!(EncryptionMask::empty(100).encrypted_count(), 0);
+    }
+
+    #[test]
+    fn random_mask_has_right_size_and_spread() {
+        let mut rng = ChaChaRng::from_seed(1, 0);
+        let m = EncryptionMask::random(10_000, 0.25, &mut rng);
+        assert_eq!(m.encrypted_count(), 2500);
+        // sorted unique
+        for w in m.encrypted.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        // roughly uniform: mean index near total/2
+        let mean: f64 =
+            m.encrypted.iter().map(|&i| i as f64).sum::<f64>() / m.encrypted_count() as f64;
+        assert!((mean - 5000.0).abs() < 300.0);
+    }
+
+    #[test]
+    fn recipe_includes_boundary_layers() {
+        let s = vec![0.0f32; 100];
+        let m = EncryptionMask::recipe(&s, 0.0, 0..10, 90..100);
+        assert_eq!(m.encrypted_count(), 20);
+        assert!(m.encrypted.contains(&0) && m.encrypted.contains(&99));
+    }
+
+    #[test]
+    fn plaintext_indices_complement() {
+        let s: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let m = EncryptionMask::top_p(&s, 0.4);
+        let enc: Vec<u32> = m.encrypted.clone();
+        let plain = m.plaintext_indices();
+        assert_eq!(enc.len() + plain.len(), 10);
+        let mut all: Vec<u32> = enc.into_iter().chain(plain).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn bytes_roundtrip_and_validation() {
+        let s: Vec<f32> = (0..1000).map(|i| ((i * 7919) % 997) as f32).collect();
+        let m = EncryptionMask::top_p(&s, 0.1);
+        let b = m.to_bytes();
+        assert_eq!(EncryptionMask::from_bytes(&b).unwrap(), m);
+        // corrupt: unsorted
+        let mut bad = b.clone();
+        if m.encrypted.len() >= 2 {
+            bad[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+            assert!(EncryptionMask::from_bytes(&bad).is_err());
+        }
+        assert!(EncryptionMask::from_bytes(&b[..b.len() - 2]).is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! Selective Parameter Encryption (the paper's §2.4 contribution) and the
+//! two aggregation backends.
+//!
+//! * [`mask`] — sensitivity-ranked encryption masks (top-p, random, layer
+//!   heuristics) and the secure mask-agreement helpers.
+//! * [`selective`] — split a flat parameter vector into an encrypted part
+//!   (CKKS ciphertexts) and a compacted plaintext part, and merge back.
+//! * [`native`] — pure-Rust aggregation (oracle + arbitrary-shape fallback).
+//! * [`xla`] — aggregation through the AOT Pallas kernel via PJRT (the
+//!   three-layer hot path).
+
+pub mod mask;
+pub mod native;
+pub mod selective;
+pub mod xla;
+
+pub use mask::EncryptionMask;
+pub use selective::{EncryptedUpdate, SelectiveCodec};

@@ -1,0 +1,127 @@
+//! Native (pure-Rust) aggregation backend.
+//!
+//! Serves three roles: the correctness oracle for the XLA artifact, the
+//! fallback for shapes the fixed-shape artifact cannot take, and one side of
+//! the §Perf L3 comparison.
+
+use super::selective::EncryptedUpdate;
+use crate::ckks::{ops, CkksParams};
+
+/// Aggregate selectively-encrypted updates: ciphertext parts via the
+/// homomorphic weighted sum, plaintext parts via an f64-accumulated
+/// weighted sum.
+pub fn aggregate(
+    updates: &[EncryptedUpdate],
+    alphas: &[f64],
+    params: &CkksParams,
+) -> EncryptedUpdate {
+    assert_eq!(updates.len(), alphas.len());
+    assert!(!updates.is_empty());
+    let n_cts = updates[0].cts.len();
+    let n_plain = updates[0].plain.len();
+    assert!(
+        updates
+            .iter()
+            .all(|u| u.cts.len() == n_cts && u.plain.len() == n_plain),
+        "heterogeneous update shapes"
+    );
+
+    // Encrypted part: per ciphertext index, weighted-sum across clients.
+    let cts = (0..n_cts)
+        .map(|c| {
+            let slice: Vec<crate::ckks::Ciphertext> =
+                updates.iter().map(|u| u.cts[c].clone()).collect();
+            ops::weighted_sum(&slice, alphas, params)
+        })
+        .collect();
+
+    // Plaintext part.
+    let mut plain = vec![0.0f64; n_plain];
+    for (u, &a) in updates.iter().zip(alphas.iter()) {
+        for (acc, &v) in plain.iter_mut().zip(u.plain.iter()) {
+            *acc += a * v as f64;
+        }
+    }
+
+    EncryptedUpdate {
+        cts,
+        plain: plain.into_iter().map(|v| v as f32).collect(),
+        total: updates[0].total,
+    }
+}
+
+/// Plain (non-HE) FedAvg over flat vectors — the paper's baseline.
+pub fn plain_fedavg(models: &[Vec<f32>], alphas: &[f64]) -> Vec<f32> {
+    assert_eq!(models.len(), alphas.len());
+    let len = models[0].len();
+    let mut out = vec![0.0f64; len];
+    for (m, &a) in models.iter().zip(alphas.iter()) {
+        assert_eq!(m.len(), len);
+        for (acc, &v) in out.iter_mut().zip(m.iter()) {
+            *acc += a * v as f64;
+        }
+    }
+    out.into_iter().map(|v| v as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::CkksContext;
+    use crate::crypto::prng::ChaChaRng;
+    use crate::he_agg::mask::EncryptionMask;
+    use crate::he_agg::selective::SelectiveCodec;
+
+    #[test]
+    fn selective_aggregate_matches_plain_fedavg() {
+        let ctx = CkksContext::new(512, 4, 45).unwrap();
+        let codec = SelectiveCodec::new(ctx);
+        let mut rng = ChaChaRng::from_seed(11, 0);
+        let (pk, sk) = codec.ctx.keygen(&mut rng);
+
+        let n_clients = 4;
+        let alphas = [0.4, 0.3, 0.2, 0.1];
+        let models: Vec<Vec<f32>> = (0..n_clients)
+            .map(|c| (0..800).map(|i| ((i * (c + 3)) as f32 * 0.01).sin()).collect())
+            .collect();
+        let sens: Vec<f32> = (0..800).map(|i| ((i * 13) % 797) as f32).collect();
+        let mask = EncryptionMask::top_p(&sens, 0.3);
+
+        let updates: Vec<_> = models
+            .iter()
+            .map(|m| codec.encrypt_update(m, &mask, &pk, &mut rng))
+            .collect();
+        let agg = aggregate(&updates, &alphas, &codec.ctx.params);
+        let got = codec.decrypt_update(&agg, &mask, &sk);
+        let expected = plain_fedavg(&models, &alphas);
+        for j in 0..800 {
+            assert!(
+                (got[j] - expected[j]).abs() < 1e-5,
+                "j={j}: {} vs {}",
+                got[j],
+                expected[j]
+            );
+        }
+    }
+
+    #[test]
+    fn plain_fedavg_weighted_mean() {
+        let models = vec![vec![1.0f32; 4], vec![3.0f32; 4]];
+        let got = plain_fedavg(&models, &[0.75, 0.25]);
+        assert_eq!(got, vec![1.5f32; 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "heterogeneous")]
+    fn shape_mismatch_panics() {
+        let ctx = CkksContext::new(128, 2, 30).unwrap();
+        let codec = SelectiveCodec::new(ctx);
+        let mut rng = ChaChaRng::from_seed(12, 0);
+        let (pk, _) = codec.ctx.keygen(&mut rng);
+        let m1 = vec![1.0f32; 100];
+        let m2 = vec![1.0f32; 50];
+        let u1 = codec.encrypt_update(&m1, &EncryptionMask::full(100), &pk, &mut rng);
+        let u2 = codec.encrypt_update(&m2, &EncryptionMask::full(50), &pk, &mut rng);
+        aggregate(&[u1, u2], &[0.5, 0.5], &codec.ctx.params);
+    }
+}

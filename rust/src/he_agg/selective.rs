@@ -1,0 +1,276 @@
+//! Selective encryption codec: flat parameter vector ⇄ (ciphertexts, plain).
+//!
+//! Implements the client-side transform of Algorithm 1:
+//! `[W] = HE.Enc(pk, M ⊙ W) + (1 − M) ⊙ W` — the masked coordinates are
+//! compacted in mask order and packed `batch()` values per ciphertext; the
+//! remaining coordinates travel as compacted plaintext f32.
+
+use super::mask::EncryptionMask;
+use crate::ckks::{Ciphertext, CkksContext, PublicKey, SecretKey};
+use crate::crypto::prng::ChaChaRng;
+
+/// One client's (selectively) encrypted model update.
+#[derive(Debug, Clone)]
+pub struct EncryptedUpdate {
+    /// Ciphertexts over the masked coordinates (mask order, batch-packed).
+    pub cts: Vec<Ciphertext>,
+    /// Compacted plaintext coordinates (complement of the mask, index order).
+    pub plain: Vec<f32>,
+    /// Total parameter count (for merge validation).
+    pub total: usize,
+}
+
+impl EncryptedUpdate {
+    /// Serialized size in bytes (the communication-cost model: ciphertext
+    /// wire format + 4 B per plaintext value).
+    pub fn wire_bytes(&self, ctx: &CkksContext) -> usize {
+        self.cts.len() * ctx.params.ciphertext_bytes() + 4 * self.plain.len()
+    }
+}
+
+/// Encoder/decoder bound to a crypto context.
+pub struct SelectiveCodec {
+    pub ctx: CkksContext,
+}
+
+impl SelectiveCodec {
+    pub fn new(ctx: CkksContext) -> Self {
+        SelectiveCodec { ctx }
+    }
+
+    /// Ciphertexts needed for `k` encrypted values.
+    pub fn ct_count(&self, k: usize) -> usize {
+        k.div_ceil(self.ctx.batch())
+    }
+
+    /// Apply Algorithm 1's client-side encryption.
+    pub fn encrypt_update(
+        &self,
+        params: &[f32],
+        mask: &EncryptionMask,
+        pk: &PublicKey,
+        rng: &mut ChaChaRng,
+    ) -> EncryptedUpdate {
+        assert_eq!(params.len(), mask.total, "mask/params length mismatch");
+        let batch = self.ctx.batch();
+        let enc_values: Vec<f64> = mask
+            .encrypted
+            .iter()
+            .map(|&i| params[i as usize] as f64)
+            .collect();
+        let cts = enc_values
+            .chunks(batch)
+            .map(|chunk| self.ctx.encrypt_values(chunk, pk, rng))
+            .collect();
+        let dense = mask.to_dense();
+        let plain = params
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &v)| (!dense[i]).then_some(v))
+            .collect();
+        EncryptedUpdate {
+            cts,
+            plain,
+            total: params.len(),
+        }
+    }
+
+    /// Decrypt + merge an (aggregated) update back into a flat vector.
+    pub fn decrypt_update(
+        &self,
+        update: &EncryptedUpdate,
+        mask: &EncryptionMask,
+        sk: &SecretKey,
+    ) -> Vec<f32> {
+        assert_eq!(update.total, mask.total);
+        let mut out = vec![0.0f32; mask.total];
+        // plaintext part
+        for (slot, &i) in mask.plaintext_indices().iter().enumerate() {
+            out[i as usize] = update.plain[slot];
+        }
+        // encrypted part
+        let mut cursor = 0usize;
+        for ct in &update.cts {
+            let values = self.ctx.decrypt_values(ct, sk);
+            for v in values {
+                if cursor < mask.encrypted.len() {
+                    out[mask.encrypted[cursor] as usize] = v as f32;
+                    cursor += 1;
+                }
+            }
+        }
+        assert_eq!(cursor, mask.encrypted.len(), "short decrypt");
+        out
+    }
+
+    /// Decrypt via threshold partials instead of a single secret key.
+    pub fn decrypt_update_threshold(
+        &self,
+        update: &EncryptedUpdate,
+        mask: &EncryptionMask,
+        parties: &[&crate::ckks::threshold::ThresholdParty],
+        rng: &mut ChaChaRng,
+    ) -> Vec<f32> {
+        let mut out = vec![0.0f32; mask.total];
+        for (slot, &i) in mask.plaintext_indices().iter().enumerate() {
+            out[i as usize] = update.plain[slot];
+        }
+        let mut cursor = 0usize;
+        for ct in &update.cts {
+            let partials: Vec<_> = parties
+                .iter()
+                .map(|p| crate::ckks::threshold::partial_decrypt(&self.ctx.params, p, ct, rng))
+                .collect();
+            let m = crate::ckks::threshold::combine_partials(&self.ctx.params, ct, &partials);
+            let values = self.ctx.encoder.decode(&m, ct.n_values, ct.scale);
+            for v in values {
+                if cursor < mask.encrypted.len() {
+                    out[mask.encrypted[cursor] as usize] = v as f32;
+                    cursor += 1;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Encrypt a full f64 vector (no mask semantics) — used for the sensitivity
+/// map aggregation of the mask-agreement stage, where the *entire* map is
+/// encrypted.
+pub fn encrypt_vector(
+    ctx: &CkksContext,
+    values: &[f32],
+    pk: &PublicKey,
+    rng: &mut ChaChaRng,
+) -> Vec<Ciphertext> {
+    let batch = ctx.batch();
+    values
+        .chunks(batch)
+        .map(|chunk| {
+            let v: Vec<f64> = chunk.iter().map(|&x| x as f64).collect();
+            ctx.encrypt_values(&v, pk, rng)
+        })
+        .collect()
+}
+
+/// Decrypt a vector of ciphertexts back to `total` f32 values.
+pub fn decrypt_vector(
+    ctx: &CkksContext,
+    cts: &[Ciphertext],
+    sk: &SecretKey,
+    total: usize,
+) -> Vec<f32> {
+    let mut out = Vec::with_capacity(total);
+    for ct in cts {
+        let vals = ctx.decrypt_values(ct, sk);
+        out.extend(vals.into_iter().map(|v| v as f32));
+    }
+    out.truncate(total);
+    out
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_ctx() -> CkksContext {
+        CkksContext::new(512, 4, 45).unwrap()
+    }
+
+    #[test]
+    fn split_merge_roundtrip() {
+        let ctx = small_ctx();
+        let codec = SelectiveCodec::new(ctx);
+        let mut rng = ChaChaRng::from_seed(1, 0);
+        let (pk, sk) = codec.ctx.keygen(&mut rng);
+        let params: Vec<f32> = (0..1000).map(|i| (i as f32 * 0.37).sin()).collect();
+        let sens: Vec<f32> = (0..1000).map(|i| ((i * 31) % 997) as f32).collect();
+        for p in [0.0, 0.1, 0.5, 1.0] {
+            let mask = EncryptionMask::top_p(&sens, p);
+            let upd = codec.encrypt_update(&params, &mask, &pk, &mut rng);
+            assert_eq!(upd.cts.len(), codec.ct_count(mask.encrypted_count()));
+            let back = codec.decrypt_update(&upd, &mask, &sk);
+            for (a, b) in params.iter().zip(back.iter()) {
+                assert!((a - b).abs() < 1e-5, "p={p}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn wire_bytes_scale_with_ratio() {
+        let ctx = small_ctx();
+        let ct_bytes = ctx.params.ciphertext_bytes();
+        let codec = SelectiveCodec::new(ctx);
+        let mut rng = ChaChaRng::from_seed(2, 0);
+        let (pk, _) = codec.ctx.keygen(&mut rng);
+        let params = vec![0.5f32; 2048];
+        let sens: Vec<f32> = (0..2048).map(|i| i as f32).collect();
+        let full = codec.encrypt_update(&params, &EncryptionMask::top_p(&sens, 1.0), &pk, &mut rng);
+        let tenth = codec.encrypt_update(&params, &EncryptionMask::top_p(&sens, 0.1), &pk, &mut rng);
+        let none = codec.encrypt_update(&params, &EncryptionMask::top_p(&sens, 0.0), &pk, &mut rng);
+        assert_eq!(full.wire_bytes(&codec.ctx), 8 * ct_bytes); // 2048/256 slots
+        assert_eq!(none.wire_bytes(&codec.ctx), 2048 * 4);
+        assert!(tenth.wire_bytes(&codec.ctx) < full.wire_bytes(&codec.ctx) / 4);
+    }
+
+    #[test]
+    fn plaintext_part_is_exactly_preserved() {
+        let ctx = small_ctx();
+        let codec = SelectiveCodec::new(ctx);
+        let mut rng = ChaChaRng::from_seed(3, 0);
+        let (pk, sk) = codec.ctx.keygen(&mut rng);
+        let params: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let sens: Vec<f32> = (0..100).map(|i| (i % 10) as f32).collect();
+        let mask = EncryptionMask::top_p(&sens, 0.2);
+        let upd = codec.encrypt_update(&params, &mask, &pk, &mut rng);
+        let back = codec.decrypt_update(&upd, &mask, &sk);
+        // plaintext coordinates are bit-exact
+        let dense = mask.to_dense();
+        for i in 0..100 {
+            if !dense[i] {
+                assert_eq!(back[i], params[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn vector_helpers_roundtrip() {
+        let ctx = small_ctx();
+        let mut rng = ChaChaRng::from_seed(4, 0);
+        let (pk, sk) = ctx.keygen(&mut rng);
+        let values: Vec<f32> = (0..700).map(|i| (i as f32) * 1e-3).collect();
+        let cts = encrypt_vector(&ctx, &values, &pk, &mut rng);
+        assert_eq!(cts.len(), 3); // 700 / 256
+        let back = decrypt_vector(&ctx, &cts, &sk, 700);
+        assert_eq!(back.len(), 700);
+        for (a, b) in values.iter().zip(back.iter()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn threshold_decrypt_update_works() {
+        use crate::ckks::threshold::*;
+        let ctx = small_ctx();
+        let codec = SelectiveCodec::new(ctx);
+        let params_arc = codec.ctx.params.clone();
+        let a = common_reference(&params_arc, 42);
+        let mut rng = ChaChaRng::from_seed(5, 0);
+        let parties: Vec<ThresholdParty> = (0..2)
+            .map(|k| party_keygen(&params_arc, k, &a, &mut rng))
+            .collect();
+        let shares: Vec<&crate::ckks::RnsPoly> =
+            parties.iter().map(|p| &p.b_share_ntt).collect();
+        let pk = combine_public_key(&params_arc, &a, &shares);
+        let params: Vec<f32> = (0..300).map(|i| (i as f32 * 0.11).cos()).collect();
+        let sens = vec![1.0f32; 300];
+        let mask = EncryptionMask::top_p(&sens, 0.5);
+        let upd = codec.encrypt_update(&params, &mask, &pk, &mut rng);
+        let refs: Vec<&ThresholdParty> = parties.iter().collect();
+        let back = codec.decrypt_update_threshold(&upd, &mask, &refs, &mut rng);
+        for (a, b) in params.iter().zip(back.iter()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,373 @@
+//! XLA aggregation backend: drives the AOT Pallas kernels via PJRT.
+//!
+//! This is the three-layer hot path: the L1 `he_agg` kernel (modular
+//! weighted sum over RNS limbs) and `plain_agg` kernel (f32 weighted sum)
+//! were lowered once at build time for fixed shapes
+//! `(N = agg_clients, C = agg_chunk, L, n)`; this module adapts arbitrary
+//! client counts and model lengths onto those shapes:
+//!
+//! * clients are processed in groups of `agg_clients`, padding the last
+//!   group with zero-weight entries (zero weight ⇒ zero contribution, exact
+//!   in modular arithmetic);
+//! * ciphertexts stream through the batched artifact `agg_chunk` at a time,
+//!   the remainder through the single-ciphertext artifact;
+//! * group partial sums are combined with native ciphertext additions
+//!   (cheap; keeps every group at the same Δ·Δ_w scale).
+
+use super::selective::EncryptedUpdate;
+use crate::ckks::{Ciphertext, CkksParams, RnsPoly};
+use crate::runtime::executor::{Arg, Runtime};
+use std::sync::Arc;
+
+/// Aggregator bound to a runtime and crypto parameters.
+pub struct XlaAggregator<'a> {
+    pub rt: &'a Runtime,
+    pub params: Arc<CkksParams>,
+}
+
+impl<'a> XlaAggregator<'a> {
+    pub fn new(rt: &'a Runtime, params: Arc<CkksParams>) -> anyhow::Result<Self> {
+        rt.manifest.validate_crypto(&params)?;
+        Ok(XlaAggregator { rt, params })
+    }
+
+    fn n_art(&self) -> usize {
+        self.rt.manifest.agg_clients
+    }
+    fn chunk_art(&self) -> usize {
+        self.rt.manifest.agg_chunk
+    }
+    fn plain_block(&self) -> usize {
+        self.rt.manifest.plain_block
+    }
+
+    /// Flatten one ciphertext into u32 words (poly-major, limb-major).
+    fn ct_words(&self, ct: &Ciphertext, out: &mut Vec<u32>) {
+        for poly in [&ct.c0, &ct.c1] {
+            for limb in &poly.limbs {
+                out.extend(limb.iter().map(|&c| c as u32));
+            }
+        }
+    }
+
+    /// Zero words for a padding ciphertext.
+    fn zero_words(&self, out: &mut Vec<u32>) {
+        out.extend(std::iter::repeat(0u32).take(2 * self.params.num_limbs() * self.params.n));
+    }
+
+    /// Rebuild a ciphertext from kernel output words.
+    fn ct_from_words(&self, words: &[u32], n_values: usize, scale: f64) -> Ciphertext {
+        let n = self.params.n;
+        let l = self.params.num_limbs();
+        assert_eq!(words.len(), 2 * l * n);
+        let mut polys = Vec::with_capacity(2);
+        for p in 0..2 {
+            let limbs = (0..l)
+                .map(|li| {
+                    let off = (p * l + li) * n;
+                    words[off..off + n].iter().map(|&w| w as u64).collect()
+                })
+                .collect();
+            polys.push(RnsPoly {
+                n,
+                limbs,
+                ntt_form: false,
+            });
+        }
+        let c1 = polys.pop().unwrap();
+        let c0 = polys.pop().unwrap();
+        Ciphertext {
+            c0,
+            c1,
+            n_values,
+            scale,
+        }
+    }
+
+    /// Encoded per-limb weights for one client group, padded to `n_art`.
+    fn group_weights(&self, alphas: &[f64]) -> Vec<u32> {
+        let l = self.params.num_limbs();
+        let mut w = Vec::with_capacity(self.n_art() * l);
+        for i in 0..self.n_art() {
+            if i < alphas.len() {
+                for r in self.params.encode_weight(alphas[i]) {
+                    w.push(r as u32);
+                }
+            } else {
+                w.extend(std::iter::repeat(0u32).take(l));
+            }
+        }
+        w
+    }
+
+    /// Aggregate the ciphertext lists of one client group (all of the same
+    /// length) through the artifacts.
+    fn aggregate_ct_group(
+        &self,
+        group: &[&EncryptedUpdate],
+        alphas: &[f64],
+    ) -> anyhow::Result<Vec<Ciphertext>> {
+        let n_art = self.n_art();
+        let l = self.params.num_limbs();
+        let n = self.params.n;
+        let ct_words = 2 * l * n;
+        let n_cts = group[0].cts.len();
+        let weights = self.group_weights(alphas);
+        let out_scale = group[0].cts.first().map(|c| c.scale).unwrap_or(0.0)
+            * self.params.delta_w();
+
+        let mut out = Vec::with_capacity(n_cts);
+        let chunk = self.chunk_art();
+        let mut c0 = 0usize;
+        while c0 < n_cts {
+            let c_here = (n_cts - c0).min(chunk);
+            if c_here == chunk {
+                // batched artifact: x u32[N, C, 2, L, n]
+                let mut x = Vec::with_capacity(n_art * chunk * ct_words);
+                for i in 0..n_art {
+                    for c in 0..chunk {
+                        if i < group.len() {
+                            self.ct_words(&group[i].cts[c0 + c], &mut x);
+                        } else {
+                            self.zero_words(&mut x);
+                        }
+                    }
+                }
+                let res = self.rt.execute(
+                    "he_agg_batched",
+                    &[
+                        Arg::U32(
+                            &x,
+                            vec![n_art as i64, chunk as i64, 2, l as i64, n as i64],
+                        ),
+                        Arg::U32(&weights, vec![n_art as i64, l as i64]),
+                    ],
+                )?;
+                let words = res[0].to_vec::<u32>()?;
+                for c in 0..chunk {
+                    let n_values = group
+                        .iter()
+                        .map(|u| u.cts[c0 + c].n_values)
+                        .max()
+                        .unwrap();
+                    out.push(self.ct_from_words(
+                        &words[c * ct_words..(c + 1) * ct_words],
+                        n_values,
+                        out_scale,
+                    ));
+                }
+                c0 += chunk;
+            } else {
+                // single-ciphertext artifact for the tail
+                let mut x = Vec::with_capacity(n_art * ct_words);
+                for i in 0..n_art {
+                    if i < group.len() {
+                        self.ct_words(&group[i].cts[c0], &mut x);
+                    } else {
+                        self.zero_words(&mut x);
+                    }
+                }
+                let res = self.rt.execute(
+                    "he_agg",
+                    &[
+                        Arg::U32(&x, vec![n_art as i64, 2, l as i64, n as i64]),
+                        Arg::U32(&weights, vec![n_art as i64, l as i64]),
+                    ],
+                )?;
+                let words = res[0].to_vec::<u32>()?;
+                let n_values = group.iter().map(|u| u.cts[c0].n_values).max().unwrap();
+                out.push(self.ct_from_words(&words, n_values, out_scale));
+                c0 += 1;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Plaintext weighted sum of one client group through `plain_agg`.
+    fn aggregate_plain_group(
+        &self,
+        group: &[&EncryptedUpdate],
+        alphas: &[f64],
+    ) -> anyhow::Result<Vec<f32>> {
+        let n_art = self.n_art();
+        let block = self.plain_block();
+        let len = group[0].plain.len();
+        let mut w = vec![0.0f32; n_art];
+        for (i, &a) in alphas.iter().enumerate() {
+            w[i] = a as f32;
+        }
+        let mut out = Vec::with_capacity(len);
+        let mut off = 0usize;
+        while off < len {
+            let here = (len - off).min(block);
+            let mut x = vec![0.0f32; n_art * block];
+            for (i, u) in group.iter().enumerate() {
+                x[i * block..i * block + here].copy_from_slice(&u.plain[off..off + here]);
+            }
+            let res = self.rt.execute(
+                "plain_agg",
+                &[
+                    Arg::F32(&x, vec![n_art as i64, block as i64]),
+                    Arg::F32(&w, vec![n_art as i64]),
+                ],
+            )?;
+            let v = res[0].to_vec::<f32>()?;
+            out.extend_from_slice(&v[..here]);
+            off += here;
+        }
+        Ok(out)
+    }
+
+    /// Full aggregation of Algorithm 1 through the XLA artifacts.
+    pub fn aggregate(
+        &self,
+        updates: &[EncryptedUpdate],
+        alphas: &[f64],
+    ) -> anyhow::Result<EncryptedUpdate> {
+        anyhow::ensure!(updates.len() == alphas.len() && !updates.is_empty());
+        let n_art = self.n_art();
+        let mut acc: Option<EncryptedUpdate> = None;
+        for (g, chunk) in updates.chunks(n_art).enumerate() {
+            let group: Vec<&EncryptedUpdate> = chunk.iter().collect();
+            let a = &alphas[g * n_art..g * n_art + chunk.len()];
+            let cts = self.aggregate_ct_group(&group, a)?;
+            let plain = self.aggregate_plain_group(&group, a)?;
+            let part = EncryptedUpdate {
+                cts,
+                plain,
+                total: updates[0].total,
+            };
+            match &mut acc {
+                None => acc = Some(part),
+                Some(existing) => {
+                    // combine group partial sums (same scale): native adds
+                    for (e, p) in existing.cts.iter_mut().zip(part.cts.iter()) {
+                        crate::ckks::ops::add_assign(e, p, &self.params);
+                    }
+                    for (e, p) in existing.plain.iter_mut().zip(part.plain.iter()) {
+                        *e += p;
+                    }
+                }
+            }
+        }
+        Ok(acc.unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::CkksContext;
+    use crate::crypto::prng::ChaChaRng;
+    use crate::he_agg::mask::EncryptionMask;
+    use crate::he_agg::native;
+    use crate::he_agg::selective::SelectiveCodec;
+    use std::path::PathBuf;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Runtime::new(dir).unwrap())
+    }
+
+    fn setup(rt: &Runtime) -> (SelectiveCodec, ChaChaRng) {
+        let c = &rt.manifest.crypto;
+        let ctx = CkksContext::new(c.n, c.num_limbs, c.scaling_bits).unwrap();
+        (SelectiveCodec::new(ctx), ChaChaRng::from_seed(77, 0))
+    }
+
+    /// The backbone cross-check: XLA kernel output must be bit-identical to
+    /// the native Rust aggregator on the ciphertext limbs.
+    #[test]
+    fn xla_matches_native_bit_exact() {
+        let Some(rt) = runtime() else { return };
+        let (codec, mut rng) = setup(&rt);
+        let (pk, _sk) = codec.ctx.keygen(&mut rng);
+        let n_clients = 3;
+        let alphas = [0.5, 0.3, 0.2];
+        let total = 10_000; // 3 ciphertexts at batch 4096
+        let sens: Vec<f32> = (0..total).map(|i| ((i * 7) % 1009) as f32).collect();
+        let mask = EncryptionMask::top_p(&sens, 0.6);
+        let models: Vec<Vec<f32>> = (0..n_clients)
+            .map(|c| (0..total).map(|i| ((i + c * 97) as f32 * 0.001).sin()).collect())
+            .collect();
+        let updates: Vec<_> = models
+            .iter()
+            .map(|m| codec.encrypt_update(m, &mask, &pk, &mut rng))
+            .collect();
+
+        let agg = XlaAggregator::new(&rt, codec.ctx.params.clone()).unwrap();
+        let via_xla = agg.aggregate(&updates, &alphas).unwrap();
+        let via_native = native::aggregate(&updates, &alphas, &codec.ctx.params);
+
+        assert_eq!(via_xla.cts.len(), via_native.cts.len());
+        for (a, b) in via_xla.cts.iter().zip(via_native.cts.iter()) {
+            assert_eq!(a.c0, b.c0, "c0 limbs differ");
+            assert_eq!(a.c1, b.c1, "c1 limbs differ");
+            assert!((a.scale - b.scale).abs() < 1e-9);
+        }
+        for (a, b) in via_xla.plain.iter().zip(via_native.plain.iter()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    /// End-to-end through the kernel: decrypt(xla_aggregate(enc(models)))
+    /// equals plain FedAvg.
+    #[test]
+    fn xla_aggregate_decrypts_to_fedavg() {
+        let Some(rt) = runtime() else { return };
+        let (codec, mut rng) = setup(&rt);
+        let (pk, sk) = codec.ctx.keygen(&mut rng);
+        let alphas = [0.25, 0.25, 0.25, 0.25];
+        let total = 5000;
+        let models: Vec<Vec<f32>> = (0..4)
+            .map(|c| (0..total).map(|i| ((i * (c + 1)) as f32 * 0.002).cos()).collect())
+            .collect();
+        let mask = EncryptionMask::full(total);
+        let updates: Vec<_> = models
+            .iter()
+            .map(|m| codec.encrypt_update(m, &mask, &pk, &mut rng))
+            .collect();
+        let agg = XlaAggregator::new(&rt, codec.ctx.params.clone()).unwrap();
+        let out = agg.aggregate(&updates, &alphas).unwrap();
+        let got = codec.decrypt_update(&out, &mask, &sk);
+        let expected = native::plain_fedavg(&models, &alphas);
+        for j in 0..total {
+            assert!(
+                (got[j] - expected[j]).abs() < 1e-5,
+                "j={j}: {} vs {}",
+                got[j],
+                expected[j]
+            );
+        }
+    }
+
+    /// More clients than the artifact width (8): grouping path.
+    #[test]
+    fn client_grouping_beyond_artifact_width() {
+        let Some(rt) = runtime() else { return };
+        let (codec, mut rng) = setup(&rt);
+        let (pk, sk) = codec.ctx.keygen(&mut rng);
+        let n_clients = 11;
+        let alphas: Vec<f64> = vec![1.0 / n_clients as f64; n_clients];
+        let total = 2000;
+        let models: Vec<Vec<f32>> = (0..n_clients)
+            .map(|c| vec![c as f32; total])
+            .collect();
+        let mask = EncryptionMask::full(total);
+        let updates: Vec<_> = models
+            .iter()
+            .map(|m| codec.encrypt_update(m, &mask, &pk, &mut rng))
+            .collect();
+        let agg = XlaAggregator::new(&rt, codec.ctx.params.clone()).unwrap();
+        let out = agg.aggregate(&updates, &alphas).unwrap();
+        let got = codec.decrypt_update(&out, &mask, &sk);
+        let expected = (0..n_clients).map(|c| c as f32).sum::<f32>() / n_clients as f32;
+        for j in 0..total {
+            assert!((got[j] - expected).abs() < 1e-4, "j={j}: {}", got[j]);
+        }
+    }
+}

@@ -1,0 +1,161 @@
+//! # fedml_he — FedML-HE reproduction
+//!
+//! A from-scratch reproduction of *FedML-HE: An Efficient
+//! Homomorphic-Encryption-Based Privacy-Preserving Federated Learning System*
+//! (Jin et al., 2023) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the federated-learning coordinator: server round
+//!   manager, client workers, key authority, threshold key agreement,
+//!   encryption-mask agreement, dropout handling, bandwidth simulation,
+//!   metrics, and a from-scratch RNS-CKKS crypto substrate ([`ckks`]).
+//! * **L2 (`python/compile/model.py`)** — JAX compute graphs (train step,
+//!   evaluation, parameter sensitivity, gradient-inversion attack step and the
+//!   HE aggregation graph) AOT-lowered to HLO text at build time.
+//! * **L1 (`python/compile/kernels/`)** — Pallas kernels for the aggregation
+//!   hot path (modular weighted sum over RNS ciphertext limbs, plaintext
+//!   weighted sum), lowered into the same HLO artifacts.
+//!
+//! Python never runs on the request path: the [`runtime`] module loads the
+//! AOT artifacts through the PJRT CPU client (`xla` crate) and the rest of the
+//! system is pure Rust.
+//!
+//! The paper's headline contribution, **Selective Parameter Encryption**
+//! (encrypt only the top-`p` most privacy-sensitive parameters), lives in
+//! [`he_agg`]; the privacy-budget analysis of §3 lives in [`privacy`].
+
+pub mod attacks;
+pub mod baselines;
+pub mod bench_support;
+pub mod ckks;
+pub mod coordinator;
+pub mod crypto;
+pub mod fl;
+pub mod he_agg;
+pub mod netsim;
+pub mod privacy;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result type (thin alias over `anyhow`).
+pub type Result<T> = anyhow::Result<T>;
+
+/// CLI dispatch for the `fedml-he` binary.
+pub fn dispatch(args: util::cli::Args) -> Result<()> {
+    if args.flag("verbose") {
+        util::logging::set_level(util::logging::Level::Debug);
+    }
+    let artifacts = args.get_or("artifacts", concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+    let (sub, _rest) = args.subcommand();
+    match sub {
+        Some("run") => {
+            let rt = runtime::Runtime::new(&artifacts)?;
+            let cfg = coordinator::FlConfig::from_args(&args)?;
+            let server = coordinator::FlServer::new(&rt, cfg)?;
+            let (report, _global) = server.run()?;
+            println!("{}", report.to_json());
+            Ok(())
+        }
+        Some("params") => {
+            let ctx = ckks::CkksContext::new(
+                args.get_parsed_or("n", 8192),
+                args.get_parsed_or("limbs", 4),
+                args.get_parsed_or("scaling-bits", 52),
+            )?;
+            println!(
+                "{}",
+                util::json::Json::obj(vec![
+                    ("n", ctx.params.n.into()),
+                    ("batch", ctx.batch().into()),
+                    ("moduli", ctx.params.moduli.clone().into()),
+                    ("scaling_bits", (ctx.params.scaling_bits as u64).into()),
+                    ("log2_q", ctx.params.log2_q().into()),
+                    (
+                        "ciphertext_bytes",
+                        ctx.params.ciphertext_bytes().into()
+                    ),
+                ])
+            );
+            Ok(())
+        }
+        Some("privacy-map") => {
+            let rt = runtime::Runtime::new(&artifacts)?;
+            let model = args.get_or("model", "lenet");
+            let rtm = rt
+                .manifest
+                .models
+                .get(&model)
+                .ok_or_else(|| anyhow::anyhow!("model '{model}' has no artifacts"))?
+                .clone();
+            let mut trainer = fl::LocalTrainer::new(&rt, &model)?;
+            let params = rt.manifest.load_init_params(&model)?;
+            let data = if model == "tinybert" {
+                fl::Workload::Token(fl::data::synthetic_tokens(
+                    0,
+                    64,
+                    rtm.seq_len.unwrap_or(16),
+                    rtm.vocab.unwrap_or(128),
+                    args.get_parsed_or("seed", 0),
+                ))
+            } else {
+                fl::Workload::Image(fl::data::synthetic_images(
+                    0,
+                    64,
+                    (1, 28, 28),
+                    rtm.num_classes,
+                    0.5,
+                    args.get_parsed_or("seed", 0),
+                ))
+            };
+            let s = trainer.sensitivity(&params, &data)?;
+            let p: f64 = args.get_parsed_or("ratio", 0.1);
+            let mask = he_agg::EncryptionMask::top_p(&s, p);
+            let mut sorted = s.clone();
+            sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let total: f64 = sorted.iter().map(|&v| v as f64).sum();
+            let top: f64 = sorted[..mask.encrypted_count().max(1)]
+                .iter()
+                .map(|&v| v as f64)
+                .sum();
+            println!(
+                "{}",
+                util::json::Json::obj(vec![
+                    ("model", model.into()),
+                    ("params", s.len().into()),
+                    ("ratio", p.into()),
+                    ("encrypted", mask.encrypted_count().into()),
+                    ("sensitivity_mass_captured", (top / total).into()),
+                    ("max_sensitivity", (sorted[0] as f64).into()),
+                    (
+                        "median_sensitivity",
+                        (sorted[sorted.len() / 2] as f64).into()
+                    ),
+                ])
+            );
+            Ok(())
+        }
+        Some("bench") => {
+            eprintln!("benchmarks are cargo bench targets; run e.g.:");
+            eprintln!("  cargo bench --bench table4_models");
+            eprintln!("see DESIGN.md §5 for the table/figure → bench mapping");
+            Ok(())
+        }
+        Some(other) => anyhow::bail!(
+            "unknown subcommand '{other}' (expected: run | params | privacy-map | bench)"
+        ),
+        None => {
+            eprintln!("fedml-he — FedML-HE reproduction (Rust + JAX + Pallas via PJRT)");
+            eprintln!();
+            eprintln!("usage: fedml-he <subcommand> [--options]");
+            eprintln!();
+            eprintln!("subcommands:");
+            eprintln!("  run           run a federated task (--model --clients --rounds --ratio");
+            eprintln!("                --selection topp|random|full|none --backend xla|native");
+            eprintln!("                --keys single|threshold --bandwidth ib|sar|mar|aws200");
+            eprintln!("                --dropout P --dp-scale B ...)");
+            eprintln!("  params        print the CKKS context (--n --limbs --scaling-bits)");
+            eprintln!("  privacy-map   compute a model's sensitivity map summary (--model --ratio)");
+            eprintln!("  bench         how to regenerate every paper table/figure");
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! `fedml-he` — CLI launcher for the FedML-HE reproduction.
+//!
+//! Subcommands are registered as they are implemented; run with no arguments
+//! for usage.
+
+use fedml_he::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    fedml_he::dispatch(args)
+}

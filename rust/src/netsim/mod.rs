@@ -1,0 +1,77 @@
+//! Network simulation: bandwidth profiles and simulated transfer clocks.
+//!
+//! The paper's communication costs are `bytes ÷ bandwidth` under three
+//! deployment profiles (Appendix D.5) plus the Fig. 8 single-AWS-region
+//! setting; this module reproduces exactly that cost model while the byte
+//! counts come from the real wire formats.
+
+/// A deployment bandwidth profile.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Bandwidth {
+    pub name: &'static str,
+    /// Bytes per second.
+    pub bytes_per_sec: f64,
+}
+
+/// Infiniband: intra-datacenter (paper: 5 GB/s).
+pub const INFINIBAND: Bandwidth = Bandwidth { name: "IB", bytes_per_sec: 5.0e9 };
+/// Single AWS region (paper: 592 MB/s).
+pub const SINGLE_AWS_REGION: Bandwidth = Bandwidth { name: "SAR", bytes_per_sec: 592.0e6 };
+/// Multi AWS region (paper: 15.6 MB/s).
+pub const MULTI_AWS_REGION: Bandwidth = Bandwidth { name: "MAR", bytes_per_sec: 15.6e6 };
+/// Fig. 8 single-region setting (paper: 200 MB/s).
+pub const FIG8_REGION: Bandwidth = Bandwidth { name: "AWS-200", bytes_per_sec: 200.0e6 };
+
+/// All profiles of Appendix D.5.
+pub const PROFILES: &[Bandwidth] = &[INFINIBAND, SINGLE_AWS_REGION, MULTI_AWS_REGION];
+
+impl Bandwidth {
+    /// Simulated seconds to move `bytes` over this link.
+    pub fn transfer_secs(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.bytes_per_sec
+    }
+}
+
+/// Accumulates simulated communication time alongside real compute time.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SimClock {
+    pub comm_secs: f64,
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+}
+
+impl SimClock {
+    /// Record a client→server upload.
+    pub fn upload(&mut self, bytes: u64, bw: Bandwidth) {
+        self.bytes_up += bytes;
+        self.comm_secs += bw.transfer_secs(bytes);
+    }
+    /// Record a server→client download.
+    pub fn download(&mut self, bytes: u64, bw: Bandwidth) {
+        self.bytes_down += bytes;
+        self.comm_secs += bw.transfer_secs(bytes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_times_match_paper_arithmetic() {
+        // 1.58 GB ResNet-50 ciphertext over MAR ≈ 101 s; over IB ≈ 0.32 s
+        let ct: u64 = 1_580_000_000;
+        assert!((MULTI_AWS_REGION.transfer_secs(ct) - 101.28).abs() < 1.0);
+        assert!(INFINIBAND.transfer_secs(ct) < 0.35);
+    }
+
+    #[test]
+    fn clock_accumulates() {
+        let mut c = SimClock::default();
+        c.upload(1000, Bandwidth { name: "t", bytes_per_sec: 1000.0 });
+        c.download(2000, Bandwidth { name: "t", bytes_per_sec: 1000.0 });
+        assert_eq!(c.bytes_up, 1000);
+        assert_eq!(c.bytes_down, 2000);
+        assert!((c.comm_secs - 3.0).abs() < 1e-12);
+    }
+}

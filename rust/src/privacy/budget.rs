@@ -1,0 +1,136 @@
+//! Privacy-budget analysis of §3.3: the differential-privacy cost of the
+//! three protection schemes.
+//!
+//! With per-parameter sensitivities Δf_i and a Laplace scale b, releasing an
+//! unencrypted parameter i costs ε_i = Δf_i / b (Lemma 3.8); encrypted
+//! parameters cost 0 (Theorem 3.9). Sequential composition (Lemma 3.10)
+//! sums the costs:
+//!
+//! * all-DP (no encryption):      J           = Σ_i Δf_i / b   (Remark 3.12)
+//! * random p-fraction encrypted: (1 − p)·J   in expectation   (Remark 3.13)
+//! * top-p sensitive encrypted:   ≈ (1 − p)²·J under Δf ~ U(0,1) (Remark 3.14)
+
+use crate::he_agg::EncryptionMask;
+
+/// Total budget J = Σ Δf_i / b (Remark 3.12).
+pub fn budget_full_dp(sensitivities: &[f32], b: f64) -> f64 {
+    assert!(b > 0.0);
+    sensitivities.iter().map(|&s| s as f64 / b).sum()
+}
+
+/// Empirical budget of an arbitrary mask: Σ over *unencrypted* i of Δf_i/b
+/// (Theorem 3.11).
+pub fn budget_with_mask(sensitivities: &[f32], mask: &EncryptionMask, b: f64) -> f64 {
+    assert!(b > 0.0);
+    assert_eq!(sensitivities.len(), mask.total);
+    let dense = mask.to_dense();
+    sensitivities
+        .iter()
+        .zip(dense.iter())
+        .filter(|(_, &enc)| !enc)
+        .map(|(&s, _)| s as f64 / b)
+        .sum()
+}
+
+/// Analytic expectations under Δf ~ U(0,1) (the Remarks' closed forms).
+pub fn expected_budgets(n: usize, p: f64, b: f64) -> (f64, f64, f64) {
+    let j = n as f64 * 0.5 / b;
+    (j, (1.0 - p) * j, (1.0 - p) * (1.0 - p) * j)
+}
+
+/// The headline observation: selective encryption needs (1−p)× less budget
+/// than random selection at the same ratio.
+pub fn selective_advantage(sensitivities: &[f32], p: f64, b: f64) -> f64 {
+    let selective = budget_with_mask(
+        sensitivities,
+        &EncryptionMask::top_p(sensitivities, p),
+        b,
+    );
+    let j = budget_full_dp(sensitivities, b);
+    let random_expected = (1.0 - p) * j;
+    if selective == 0.0 {
+        f64::INFINITY
+    } else {
+        random_expected / selective
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::prng::ChaChaRng;
+
+    fn uniform_sens(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = ChaChaRng::from_seed(seed, 0);
+        (0..n).map(|_| rng.uniform_f64() as f32).collect()
+    }
+
+    #[test]
+    fn remark_3_12_full_dp() {
+        let s = uniform_sens(100_000, 1);
+        let j = budget_full_dp(&s, 1.0);
+        // E[J] = n/2 under U(0,1)
+        assert!((j - 50_000.0).abs() < 500.0, "J = {j}");
+    }
+
+    #[test]
+    fn remark_3_13_random_selection() {
+        let s = uniform_sens(100_000, 2);
+        let j = budget_full_dp(&s, 1.0);
+        let mut rng = ChaChaRng::from_seed(7, 0);
+        for p in [0.1, 0.3, 0.7] {
+            let m = EncryptionMask::random(s.len(), p, &mut rng);
+            let eps = budget_with_mask(&s, &m, 1.0);
+            let expected = (1.0 - p) * j;
+            assert!(
+                (eps - expected).abs() / expected < 0.02,
+                "p={p}: {eps} vs {expected}"
+            );
+        }
+    }
+
+    #[test]
+    fn remark_3_14_selective_selection() {
+        let s = uniform_sens(100_000, 3);
+        let j = budget_full_dp(&s, 1.0);
+        for p in [0.1, 0.3, 0.7] {
+            let m = EncryptionMask::top_p(&s, p);
+            let eps = budget_with_mask(&s, &m, 1.0);
+            // remaining parameters are the (1-p) least sensitive: under
+            // U(0,1) their mean is (1-p)/2 ⇒ ε = (1-p)^2 · J
+            let expected = (1.0 - p) * (1.0 - p) * j;
+            assert!(
+                (eps - expected).abs() / expected.max(1.0) < 0.03,
+                "p={p}: {eps} vs {expected}"
+            );
+        }
+    }
+
+    #[test]
+    fn analytic_matches_empirical() {
+        let n = 200_000;
+        let s = uniform_sens(n, 4);
+        let (j, rand, sel) = expected_budgets(n, 0.3, 2.0);
+        assert!((budget_full_dp(&s, 2.0) - j).abs() / j < 0.01);
+        let m = EncryptionMask::top_p(&s, 0.3);
+        assert!((budget_with_mask(&s, &m, 2.0) - sel).abs() / sel < 0.03);
+        assert!(rand > sel);
+    }
+
+    #[test]
+    fn advantage_is_one_over_one_minus_p() {
+        let s = uniform_sens(100_000, 5);
+        for p in [0.1, 0.5] {
+            let adv = selective_advantage(&s, p, 1.0);
+            let expected = 1.0 / (1.0 - p);
+            assert!((adv - expected).abs() / expected < 0.05, "p={p}: {adv}");
+        }
+    }
+
+    #[test]
+    fn full_encryption_costs_zero() {
+        let s = uniform_sens(1000, 6);
+        let eps = budget_with_mask(&s, &EncryptionMask::full(1000), 1.0);
+        assert_eq!(eps, 0.0);
+    }
+}

@@ -1,0 +1,3 @@
+//! Privacy accounting (§3 of the paper).
+
+pub mod budget;

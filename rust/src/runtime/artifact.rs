@@ -1,0 +1,237 @@
+//! Artifact manifest: the contract emitted by `python/compile/aot.py`.
+//!
+//! `manifest.json` records, for every lowered graph, the HLO file and the
+//! argument shapes/dtypes; plus the crypto context and model metadata. The
+//! runtime validates the crypto context against the Rust-side parameters at
+//! load time (the cross-language consistency gate).
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One argument of a lowered graph.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArgSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One lowered graph.
+#[derive(Debug, Clone)]
+pub struct GraphSpec {
+    pub file: String,
+    pub args: Vec<ArgSpec>,
+}
+
+/// Model metadata recorded by the AOT pipeline.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub param_count: usize,
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub seq_len: Option<usize>,
+    pub vocab: Option<usize>,
+}
+
+/// Crypto context as recorded in the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CryptoMeta {
+    pub n: usize,
+    pub num_limbs: usize,
+    pub scaling_bits: u32,
+    pub weight_bits: u32,
+    pub moduli: Vec<u64>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub crypto: CryptoMeta,
+    pub agg_clients: usize,
+    pub agg_chunk: usize,
+    pub plain_block: usize,
+    pub train_batch: usize,
+    pub sens_batch: usize,
+    pub graphs: BTreeMap<String, GraphSpec>,
+    pub models: BTreeMap<String, ModelMeta>,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| anyhow::anyhow!("cannot read manifest in {dir:?}: {e} (run `make artifacts`)"))?;
+        let root = Json::parse(&text)?;
+
+        let crypto_j = root
+            .get("crypto")
+            .ok_or_else(|| anyhow::anyhow!("manifest missing crypto"))?;
+        let crypto = CryptoMeta {
+            n: field_usize(crypto_j, "n")?,
+            num_limbs: field_usize(crypto_j, "num_limbs")?,
+            scaling_bits: field_usize(crypto_j, "scaling_bits")? as u32,
+            weight_bits: field_usize(crypto_j, "weight_bits")? as u32,
+            moduli: crypto_j
+                .get("moduli")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("manifest missing moduli"))?
+                .iter()
+                .filter_map(Json::as_u64)
+                .collect(),
+        };
+
+        let mut graphs = BTreeMap::new();
+        for (name, g) in root
+            .get("graphs")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing graphs"))?
+        {
+            let args = g
+                .get("args")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("graph {name} missing args"))?
+                .iter()
+                .map(|a| {
+                    Ok(ArgSpec {
+                        shape: a
+                            .get("shape")
+                            .and_then(Json::as_arr)
+                            .ok_or_else(|| anyhow::anyhow!("bad arg shape"))?
+                            .iter()
+                            .filter_map(Json::as_usize)
+                            .collect(),
+                        dtype: a
+                            .get("dtype")
+                            .and_then(Json::as_str)
+                            .unwrap_or("float32")
+                            .to_string(),
+                    })
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            graphs.insert(
+                name.clone(),
+                GraphSpec {
+                    file: g
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow::anyhow!("graph {name} missing file"))?
+                        .to_string(),
+                    args,
+                },
+            );
+        }
+
+        let mut models = BTreeMap::new();
+        if let Some(ms) = root.get("models").and_then(Json::as_obj) {
+            for (name, m) in ms {
+                models.insert(
+                    name.clone(),
+                    ModelMeta {
+                        param_count: field_usize(m, "param_count")?,
+                        input_shape: m
+                            .get("input_shape")
+                            .and_then(Json::as_arr)
+                            .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                            .unwrap_or_default(),
+                        num_classes: field_usize(m, "num_classes")?,
+                        seq_len: m.get("seq_len").and_then(Json::as_usize),
+                        vocab: m.get("vocab").and_then(Json::as_usize),
+                    },
+                );
+            }
+        }
+
+        Ok(Manifest {
+            dir,
+            crypto,
+            agg_clients: field_usize(&root, "agg_clients")?,
+            agg_chunk: field_usize(&root, "agg_chunk")?,
+            plain_block: field_usize(&root, "plain_block")?,
+            train_batch: field_usize(&root, "train_batch")?,
+            sens_batch: field_usize(&root, "sens_batch")?,
+            graphs,
+            models,
+        })
+    }
+
+    /// Check the manifest's crypto context against a Rust parameter set.
+    pub fn validate_crypto(&self, params: &crate::ckks::CkksParams) -> anyhow::Result<()> {
+        anyhow::ensure!(self.crypto.n == params.n, "ring degree mismatch");
+        anyhow::ensure!(
+            self.crypto.moduli == params.moduli,
+            "RNS moduli mismatch between artifact and Rust substrate"
+        );
+        anyhow::ensure!(
+            self.crypto.weight_bits == crate::ckks::params::WEIGHT_BITS,
+            "weight scale mismatch"
+        );
+        Ok(())
+    }
+
+    /// Path of a graph's HLO file.
+    pub fn hlo_path(&self, graph: &str) -> anyhow::Result<PathBuf> {
+        let g = self
+            .graphs
+            .get(graph)
+            .ok_or_else(|| anyhow::anyhow!("graph '{graph}' not in manifest"))?;
+        Ok(self.dir.join(&g.file))
+    }
+
+    /// Load the deterministic initial parameters for a model.
+    pub fn load_init_params(&self, model: &str) -> anyhow::Result<Vec<f32>> {
+        let meta = self
+            .models
+            .get(model)
+            .ok_or_else(|| anyhow::anyhow!("model '{model}' not in manifest"))?;
+        let path = self.dir.join("init").join(format!("{model}.f32"));
+        let bytes = std::fs::read(&path)?;
+        anyhow::ensure!(bytes.len() == 4 * meta.param_count, "bad init file size");
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect())
+    }
+}
+
+fn field_usize(j: &Json, key: &str) -> anyhow::Result<usize> {
+    j.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow::anyhow!("manifest missing field '{key}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.crypto.n, 8192);
+        assert_eq!(m.crypto.moduli.len(), 4);
+        assert!(m.graphs.contains_key("he_agg"));
+        assert!(m.graphs.contains_key("lenet_train"));
+        // moduli agree with the Rust scan
+        let params = crate::ckks::CkksParams::new(8192, 4, 52).unwrap();
+        m.validate_crypto(&params).unwrap();
+        // init params load
+        let init = m.load_init_params("mlp").unwrap();
+        assert_eq!(init.len(), 79510);
+    }
+
+    #[test]
+    fn missing_manifest_is_an_error() {
+        let err = Manifest::load("/nonexistent-dir").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,202 @@
+//! Executor: compile-once / run-many wrapper over the PJRT CPU client.
+//!
+//! Graphs are compiled lazily on first use and cached; every lowered module
+//! returns a tuple (aot.py lowers with `return_tuple=True`), which
+//! [`Runtime::execute`] decomposes into plain literals.
+
+use super::artifact::Manifest;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Typed argument for a graph call.
+pub enum Arg<'a> {
+    F32(&'a [f32], Vec<i64>),
+    U32(&'a [u32], Vec<i64>),
+    I32(&'a [i32], Vec<i64>),
+    ScalarF32(f32),
+}
+
+impl Arg<'_> {
+    fn to_literal(&self) -> anyhow::Result<xla::Literal> {
+        Ok(match self {
+            Arg::F32(data, dims) => xla::Literal::vec1(data).reshape(dims)?,
+            Arg::U32(data, dims) => xla::Literal::vec1(data).reshape(dims)?,
+            Arg::I32(data, dims) => xla::Literal::vec1(data).reshape(dims)?,
+            Arg::ScalarF32(v) => xla::Literal::scalar(*v),
+        })
+    }
+}
+
+/// The PJRT runtime: client + manifest + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Create a runtime over the artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Number of graphs compiled so far (metrics).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Get (compiling if needed) the executable for a graph.
+    pub fn executable(&self, graph: &str) -> anyhow::Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(graph) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.hlo_path(graph)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(self.client.compile(&comp)?);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(graph.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute a graph; returns the decomposed output tuple.
+    pub fn execute(&self, graph: &str, args: &[Arg<'_>]) -> anyhow::Result<Vec<xla::Literal>> {
+        let spec = self
+            .manifest
+            .graphs
+            .get(graph)
+            .ok_or_else(|| anyhow::anyhow!("graph '{graph}' not in manifest"))?;
+        anyhow::ensure!(
+            spec.args.len() == args.len(),
+            "graph '{graph}' expects {} args, got {}",
+            spec.args.len(),
+            args.len()
+        );
+        let exe = self.executable(graph)?;
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|a| a.to_literal())
+            .collect::<anyhow::Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+
+    /// Convenience: execute and extract f32 vectors from every output.
+    pub fn execute_f32(&self, graph: &str, args: &[Arg<'_>]) -> anyhow::Result<Vec<Vec<f32>>> {
+        self.execute(graph, args)?
+            .iter()
+            .map(|l| Ok(l.to_vec::<f32>()?))
+            .collect()
+    }
+}
+
+/// Extract an f32 vector from one literal output.
+pub fn literal_f32(l: &xla::Literal) -> anyhow::Result<Vec<f32>> {
+    Ok(l.to_vec::<f32>()?)
+}
+
+/// Extract a u32 vector from one literal output.
+pub fn literal_u32(l: &xla::Literal) -> anyhow::Result<Vec<u32>> {
+    Ok(l.to_vec::<u32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Runtime::new(dir).unwrap())
+    }
+
+    #[test]
+    fn plain_agg_executes() {
+        let Some(rt) = runtime() else { return };
+        let n = rt.manifest.agg_clients;
+        let b = rt.manifest.plain_block;
+        let xs: Vec<f32> = (0..n * b).map(|i| (i % 7) as f32).collect();
+        let mut w = vec![0.0f32; n];
+        w[0] = 0.5;
+        w[1] = 0.5;
+        let out = rt
+            .execute_f32(
+                "plain_agg",
+                &[
+                    Arg::F32(&xs, vec![n as i64, b as i64]),
+                    Arg::F32(&w, vec![n as i64]),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), b);
+        for j in 0..16 {
+            let expected = 0.5 * ((j % 7) as f32) + 0.5 * (((b + j) % 7) as f32);
+            assert!((out[0][j] - expected).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn train_step_executes_and_learns() {
+        let Some(rt) = runtime() else { return };
+        let batch = rt.manifest.train_batch;
+        let mut params = rt.manifest.load_init_params("mlp").unwrap();
+        // deterministic synthetic batch: class = argmax of 10 pixel groups
+        let mut x = vec![0.0f32; batch * 784];
+        let mut y = vec![0i32; batch];
+        for i in 0..batch {
+            let c = (i % 10) as usize;
+            y[i] = c as i32;
+            for j in 0..78 {
+                x[i * 784 + c * 78 + j] = 1.0;
+            }
+        }
+        let mut losses = Vec::new();
+        for _ in 0..10 {
+            let out = rt
+                .execute(
+                    "mlp_train",
+                    &[
+                        Arg::F32(&params, vec![params.len() as i64]),
+                        Arg::F32(&x, vec![batch as i64, 784]),
+                        Arg::I32(&y, vec![batch as i64]),
+                        Arg::ScalarF32(0.5),
+                    ],
+                )
+                .unwrap();
+            params = out[0].to_vec::<f32>().unwrap();
+            losses.push(out[1].to_vec::<f32>().unwrap()[0]);
+        }
+        assert!(
+            losses.last().unwrap() < &(losses[0] * 0.5),
+            "losses {losses:?}"
+        );
+    }
+
+    #[test]
+    fn unknown_graph_is_error() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.execute("nope", &[]).is_err());
+    }
+
+    #[test]
+    fn arg_count_checked() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.execute("plain_agg", &[]).is_err());
+    }
+}

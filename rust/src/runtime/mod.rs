@@ -1,0 +1,11 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! This is the only boundary between the Rust coordinator and the
+//! JAX/Pallas-authored compute graphs; Python never runs here.
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::Manifest;
+pub use executor::Runtime;

@@ -1,0 +1,119 @@
+//! Minimal command-line argument parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments. Subcommands are handled by the caller peeling off the first
+//! positional argument.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// `--key value` / `--key=value` options in order of appearance.
+    opts: BTreeMap<String, String>,
+    /// Bare `--flag` options.
+    flags: Vec<String>,
+    /// Positional arguments.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (excluding argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(items: I) -> Self {
+        let mut args = Args::default();
+        let mut iter = items.into_iter().peekable();
+        while let Some(item) = iter.next() {
+            if let Some(stripped) = item.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|next| !next.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.opts.insert(stripped.to_string(), v);
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
+            } else {
+                args.positional.push(item);
+            }
+        }
+        args
+    }
+
+    /// Parse the process arguments.
+    pub fn parse() -> Self {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    /// Get a string option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    /// Get a string option with a default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Get a parsed numeric/typed option with a default.
+    pub fn get_parsed_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.get(key)
+            .and_then(|v| v.parse::<T>().ok())
+            .unwrap_or(default)
+    }
+
+    /// Whether a bare `--flag` was passed.
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// First positional argument (the subcommand) and the rest.
+    pub fn subcommand(&self) -> (Option<&str>, &[String]) {
+        match self.positional.split_first() {
+            Some((first, rest)) => (Some(first.as_str()), rest),
+            None => (None, &[]),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn key_value_styles() {
+        // NOTE: a bare `--flag` must be last or followed by another
+        // `--option`, otherwise the next token is consumed as its value.
+        let a = parse("run pos1 --clients 8 --ratio=0.1 --verbose");
+        assert_eq!(a.get("clients"), Some("8"));
+        assert_eq!(a.get_parsed_or::<usize>("clients", 0), 8);
+        assert_eq!(a.get_parsed_or::<f64>("ratio", 0.0), 0.1);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["run", "pos1"]);
+        let (sub, rest) = a.subcommand();
+        assert_eq!(sub, Some("run"));
+        assert_eq!(rest, &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.get_or("model", "lenet"), "lenet");
+        assert_eq!(a.get_parsed_or::<u64>("rounds", 10), 10);
+        assert!(!a.flag("verbose"));
+        assert_eq!(a.subcommand().0, None);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("--dry-run");
+        assert!(a.flag("dry-run"));
+    }
+}

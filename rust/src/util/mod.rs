@@ -1,0 +1,62 @@
+//! Small self-contained utility substrates.
+//!
+//! The offline build environment only ships the `xla` crate's dependency
+//! closure, so the conveniences a production framework would pull from
+//! crates.io (argument parsing, JSON, logging, stats) are implemented here
+//! from scratch.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod stats;
+pub mod table;
+
+/// Format a byte count as a human-readable string (KiB/MiB/GiB), matching the
+/// unit style used in the paper's tables.
+pub fn human_bytes(bytes: u64) -> String {
+    const KB: f64 = 1024.0;
+    let b = bytes as f64;
+    if b >= KB * KB * KB {
+        format!("{:.2} GB", b / (KB * KB * KB))
+    } else if b >= KB * KB {
+        format!("{:.2} MB", b / (KB * KB))
+    } else if b >= KB {
+        format!("{:.2} KB", b / KB)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// Format seconds with adaptive precision.
+pub fn human_secs(s: f64) -> String {
+    if s >= 100.0 {
+        format!("{s:.1} s")
+    } else if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.3} us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KB");
+        assert_eq!(human_bytes(5 * 1024 * 1024), "5.00 MB");
+        assert_eq!(human_bytes(3 * 1024 * 1024 * 1024), "3.00 GB");
+    }
+
+    #[test]
+    fn secs_units() {
+        assert_eq!(human_secs(123.4), "123.4 s");
+        assert_eq!(human_secs(1.5), "1.500 s");
+        assert_eq!(human_secs(0.0025), "2.500 ms");
+        assert_eq!(human_secs(2.5e-6), "2.500 us");
+    }
+}

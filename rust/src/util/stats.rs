@@ -1,0 +1,102 @@
+//! Small statistics helpers used by benchmarks and metrics reports.
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Percentile via linear interpolation (p in [0,100]).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = rank - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Median.
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Minimum (0 for empty).
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::INFINITY, f64::min).min(f64::INFINITY)
+}
+
+/// Summary statistics of a sample.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary::default();
+        }
+        Summary {
+            n: xs.len(),
+            mean: mean(xs),
+            std: std_dev(xs),
+            min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+            p50: percentile(xs, 50.0),
+            p95: percentile(xs, 95.0),
+            max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_stats() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert!((mean(&xs) - 3.0).abs() < 1e-12);
+        assert!((median(&xs) - 3.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - (2.0f64).sqrt()).abs() < 1e-12);
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 5.0).abs() < 1e-12);
+        assert!((percentile(&xs, 25.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary() {
+        let s = Summary::of(&[2.0, 4.0]);
+        assert_eq!(s.n, 2);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.min - 2.0).abs() < 1e-12);
+        assert!((s.max - 4.0).abs() < 1e-12);
+        let empty = Summary::of(&[]);
+        assert_eq!(empty.n, 0);
+    }
+}

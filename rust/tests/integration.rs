@@ -1,0 +1,202 @@
+//! Integration tests over the public `fedml_he` API: the full three-layer
+//! stack exercised the way a downstream user would (`make artifacts` must
+//! have been run; tests skip gracefully if not).
+
+use fedml_he::ckks::CkksContext;
+use fedml_he::coordinator::{Backend, FlConfig, FlServer, KeyMode, Selection};
+use fedml_he::crypto::prng::ChaChaRng;
+use fedml_he::he_agg::{native, EncryptionMask, SelectiveCodec};
+use fedml_he::runtime::Runtime;
+
+fn runtime() -> Option<Runtime> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::new(dir).unwrap())
+}
+
+/// Exact-aggregation claim (Table 1): an HE federated run and a plaintext
+/// run with identical seeds produce the same model to CKKS precision, and
+/// selective (p=0.1) sits in between with the plaintext part bit-exact.
+#[test]
+fn he_fl_is_exact_aggregation() {
+    let Some(rt) = runtime() else { return };
+    let base = FlConfig {
+        model: "mlp".into(),
+        clients: 4,
+        rounds: 2,
+        local_steps: 2,
+        samples_per_client: 64,
+        eval_every: 0,
+        dropout: 0.0,
+        ..Default::default()
+    };
+    let run = |sel: Selection, backend: Backend| {
+        let mut cfg = base.clone();
+        cfg.selection = sel;
+        cfg.backend = backend;
+        FlServer::new(&rt, cfg).unwrap().run().unwrap().1
+    };
+    let plain = run(Selection::None, Backend::Native);
+    let full_xla = run(Selection::Full, Backend::Xla);
+    let full_native = run(Selection::Full, Backend::Native);
+    let selective = run(Selection::TopP, Backend::Xla);
+
+    let max_err = |a: &[f32], b: &[f32]| {
+        a.iter()
+            .zip(b.iter())
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max)
+    };
+    assert!(max_err(&plain, &full_xla) < 1e-3, "HE != plaintext result");
+    assert!(max_err(&plain, &selective) < 1e-3, "selective != plaintext");
+    // the two backends must agree with each other even more tightly
+    assert!(max_err(&full_xla, &full_native) < 1e-4, "backends diverge");
+}
+
+/// Dropout robustness (Table 1): with 40% dropout the run completes and
+/// still learns.
+#[test]
+fn dropout_robustness() {
+    let Some(rt) = runtime() else { return };
+    let cfg = FlConfig {
+        model: "mlp".into(),
+        clients: 5,
+        rounds: 6,
+        local_steps: 2,
+        dropout: 0.4,
+        selection: Selection::TopP,
+        ratio: 0.2,
+        samples_per_client: 64,
+        eval_every: 6,
+        ..Default::default()
+    };
+    let (report, _) = FlServer::new(&rt, cfg).unwrap().run().unwrap();
+    assert_eq!(report.rounds.len(), 6);
+    assert!(report.rounds.iter().any(|r| r.participants < 5));
+    let first = report.rounds.first().unwrap().train_loss;
+    let last = report.rounds.last().unwrap().train_loss;
+    assert!(last < first, "no learning under dropout: {first} -> {last}");
+}
+
+/// Threshold mode through the full coordinator (Appendix B).
+#[test]
+fn threshold_end_to_end() {
+    let Some(rt) = runtime() else { return };
+    let cfg = FlConfig {
+        model: "mlp".into(),
+        clients: 3,
+        rounds: 2,
+        local_steps: 1,
+        key_mode: KeyMode::Threshold,
+        backend: Backend::Native,
+        selection: Selection::Random,
+        ratio: 0.15,
+        samples_per_client: 64,
+        eval_every: 0,
+        ..Default::default()
+    };
+    let (report, global) = FlServer::new(&rt, cfg).unwrap().run().unwrap();
+    assert_eq!(report.rounds.len(), 2);
+    assert!(global.iter().all(|v| v.is_finite()));
+}
+
+/// Wire-format interop: an update serialized ciphertext-by-ciphertext
+/// round-trips and aggregates identically.
+#[test]
+fn serialization_interop() {
+    let ctx = CkksContext::new(1024, 4, 45).unwrap();
+    let codec = SelectiveCodec::new(ctx);
+    let mut rng = ChaChaRng::from_seed(42, 0);
+    let (pk, sk) = codec.ctx.keygen(&mut rng);
+    let params: Vec<f32> = (0..2000).map(|i| (i as f32 * 0.01).sin()).collect();
+    let mask = EncryptionMask::full(2000);
+    let updates: Vec<_> = (0..3)
+        .map(|_| {
+            let mut u = codec.encrypt_update(&params, &mask, &pk, &mut rng);
+            // serialize + deserialize every ciphertext (the network path)
+            u.cts = u
+                .cts
+                .iter()
+                .map(|ct| {
+                    let bytes = fedml_he::ckks::serialize::ciphertext_to_bytes(ct);
+                    fedml_he::ckks::serialize::ciphertext_from_bytes(&bytes, &codec.ctx.params)
+                        .unwrap()
+                })
+                .collect();
+            u
+        })
+        .collect();
+    let agg = native::aggregate(&updates, &[0.5, 0.25, 0.25], &codec.ctx.params);
+    let out = codec.decrypt_update(&agg, &mask, &sk);
+    for (a, b) in params.iter().zip(out.iter()) {
+        assert!((a - b).abs() < 1e-5);
+    }
+}
+
+/// DP composition on the plaintext part: Algorithm 1's optional noise
+/// perturbs only unencrypted coordinates.
+#[test]
+fn dp_noise_on_plaintext_part_only() {
+    let Some(rt) = runtime() else { return };
+    let cfg = FlConfig {
+        model: "mlp".into(),
+        clients: 2,
+        rounds: 1,
+        local_steps: 1,
+        dp_scale: Some(0.5),
+        selection: Selection::Random,
+        ratio: 0.5,
+        samples_per_client: 64,
+        eval_every: 0,
+        backend: Backend::Native,
+        ..Default::default()
+    };
+    let (report, global) = FlServer::new(&rt, cfg).unwrap().run().unwrap();
+    assert_eq!(report.rounds.len(), 1);
+    // noisy but finite
+    assert!(global.iter().all(|v| v.is_finite()));
+    let spread = global.iter().map(|v| v.abs()).sum::<f32>() / global.len() as f32;
+    assert!(spread > 0.05, "DP noise should be visible (spread {spread})");
+}
+
+/// The paper's privacy-map pipeline through the public API: sensitivity →
+/// secure aggregation → top-p mask captures most of the sensitivity mass.
+#[test]
+fn privacy_map_pipeline() {
+    let Some(rt) = runtime() else { return };
+    let mut trainer = fedml_he::fl::LocalTrainer::new(&rt, "lenet").unwrap();
+    let data = fedml_he::fl::Workload::Image(fedml_he::fl::data::synthetic_images(
+        0,
+        64,
+        (1, 28, 28),
+        10,
+        0.5,
+        3,
+    ));
+    let params = rt.manifest.load_init_params("lenet").unwrap();
+    let s = trainer.sensitivity(&params, &data).unwrap();
+    let mask = EncryptionMask::top_p(&s, 0.1);
+    let captured: f64 = mask
+        .encrypted
+        .iter()
+        .map(|&i| s[i as usize] as f64)
+        .sum();
+    let total: f64 = s.iter().map(|&v| v as f64).sum();
+    assert!(
+        captured / total > 0.3,
+        "top-10% should capture >30% of mass, got {:.2}",
+        captured / total
+    );
+    // budget ordering: selective < random at the same ratio
+    let mut rng = ChaChaRng::from_seed(1, 0);
+    let sel = fedml_he::privacy::budget::budget_with_mask(&s, &mask, 1.0);
+    let rnd = fedml_he::privacy::budget::budget_with_mask(
+        &s,
+        &EncryptionMask::random(s.len(), 0.1, &mut rng),
+        1.0,
+    );
+    assert!(sel < rnd, "selective {sel} !< random {rnd}");
+}
