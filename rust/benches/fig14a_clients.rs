@@ -2,10 +2,15 @@
 //! number of clients grows to 200 (fully-encrypted CNN). The aggregation
 //! step grows with N on the server; encryption stays constant per client.
 
-use fedml_he::bench_support::measure_pipeline;
+use fedml_he::agg_engine::{
+    Arrival, CohortScheduler, Engine, EngineConfig, Population, StreamingAggregator,
+};
+use fedml_he::bench_support::{measure_pipeline, time_iters};
 use fedml_he::ckks::CkksContext;
 use fedml_he::crypto::prng::ChaChaRng;
+use fedml_he::he_agg::{selective::SelectiveCodec, EncryptionMask};
 use fedml_he::util::{human_secs, table::Table};
+use std::sync::Arc;
 
 fn main() {
     let ctx = CkksContext::default_paper().unwrap();
@@ -29,4 +34,71 @@ fn main() {
     t.print();
     println!("\nShape check: server aggregation grows ~linearly with N (proportionally-added");
     println!("ciphertext inputs) while per-client encryption and decryption stay flat.");
+
+    // Fig. 14a, population-scale point: the seed could only *instantiate*
+    // its participants, capping N at memory. The cohort scheduler registers
+    // a 1,000,000-client population lazily (O(1) state) and samples K=16
+    // participants per round; one streamed round then aggregates the
+    // cohort's updates through the pipeline engine.
+    let population = 1_000_000u64;
+    let k = 16usize;
+    let sched = CohortScheduler::new(Population::new(population, 14), k);
+    let sample_s = time_iters(1000, || {
+        std::hint::black_box(sched.sample(7));
+    });
+
+    let codec = SelectiveCodec::new(ctx.clone());
+    let mut rng2 = ChaChaRng::from_seed(15, 0);
+    let (pk, _sk) = codec.ctx.keygen(&mut rng2);
+    let cohort = sched.sample(0);
+    let n_cts = 4usize; // per-update sample; HE cost extrapolates linearly
+    let total = n_cts * codec.ctx.batch();
+    let mask = EncryptionMask::full(total);
+    let arcs: Vec<Arc<fedml_he::he_agg::EncryptedUpdate>> = cohort
+        .members
+        .iter()
+        .map(|m| {
+            let model: Vec<f32> = (0..total)
+                .map(|i| ((i as u64 + m.id) % 997) as f32 * 1e-4)
+                .collect();
+            Arc::new(codec.encrypt_update(&model, &mask, &pk, &mut rng2))
+        })
+        .collect();
+    let engine_cfg = EngineConfig {
+        engine: Engine::Pipeline,
+        shards: 4,
+        quorum: None,
+        straggler_timeout_secs: 5.0,
+    };
+    let engine = StreamingAggregator::new(&codec.ctx.params, engine_cfg);
+    let round_s = time_iters(3, || {
+        let arrivals: Vec<Arrival> = arcs
+            .iter()
+            .zip(cohort.members.iter())
+            .enumerate()
+            .map(|(i, (u, m))| Arrival {
+                client: m.id,
+                alpha: m.alpha,
+                arrival_secs: i as f64 * 1e-3,
+                update: u.clone(),
+            })
+            .collect();
+        std::hint::black_box(engine.aggregate(arrivals).unwrap());
+    });
+
+    let mut t = Table::new(
+        "Fig. 14a (population scale) — 1M registered clients, K=16 cohort/round",
+        &["Step", "Time"],
+    );
+    t.row(vec![
+        format!("Cohort sample (K={k} of N={population})"),
+        human_secs(sample_s),
+    ]);
+    t.row(vec![
+        format!("Streamed aggregation round ({n_cts}-ct sample, 4 shards)"),
+        human_secs(round_s),
+    ]);
+    t.print();
+    println!("\nScheduler state is O(1) in N and O(K) per round: the same bench point runs");
+    println!("unchanged at N = 100M+ (see agg_engine::cohort tests).");
 }

@@ -4,11 +4,13 @@
 //! batched), in ciphertexts/second. L3 crypto: NTT, encrypt, decrypt,
 //! weighted-sum throughput. Results feed EXPERIMENTS.md §Perf.
 
+use fedml_he::agg_engine::{Arrival, Engine, EngineConfig, StreamingAggregator};
 use fedml_he::bench_support::time_iters;
 use fedml_he::ckks::{encrypt, ops, CkksContext};
 use fedml_he::crypto::prng::ChaChaRng;
-use fedml_he::he_agg::{selective::SelectiveCodec, xla::XlaAggregator, EncryptionMask};
+use fedml_he::he_agg::{native, selective::SelectiveCodec, xla::XlaAggregator, EncryptionMask};
 use fedml_he::util::table::Table;
+use std::sync::Arc;
 
 fn main() {
     let ctx = CkksContext::default_paper().unwrap();
@@ -67,6 +69,78 @@ fn main() {
         format!("{:.1} ct/s", 1.0 / agg_s),
     ]);
     t.print();
+
+    // §Perf — sequential engine vs sharded streaming pipeline on the
+    // ResNet-50-sized workload (25.56M params = 6241 ciphertexts at batch
+    // 4096). A 24-ciphertext sample per engine is measured and extrapolated
+    // linearly (the linearity premise is verified by
+    // bench_support::tests::linearity_holds).
+    {
+        let resnet = fedml_he::fl::model_meta::lookup("resnet50").unwrap();
+        let codec = SelectiveCodec::new(ctx.clone());
+        let sample_cts = 24usize;
+        let total = sample_cts * codec.ctx.batch();
+        let full_cts = (resnet.params as usize).div_ceil(codec.ctx.batch());
+        let extrapolate = full_cts as f64 / sample_cts as f64;
+        let mask = EncryptionMask::full(total);
+        let alphas = vec![1.0 / n_clients as f64; n_clients];
+        let arcs: Vec<Arc<fedml_he::he_agg::EncryptedUpdate>> = (0..n_clients)
+            .map(|c| {
+                let m: Vec<f32> = (0..total).map(|i| ((i + c * 13) as f32) * 1e-5).collect();
+                Arc::new(codec.encrypt_update(&m, &mask, &pk, &mut rng))
+            })
+            .collect();
+        let updates: Vec<fedml_he::he_agg::EncryptedUpdate> =
+            arcs.iter().map(|a| (**a).clone()).collect();
+
+        let mut t = Table::new(
+            "§Perf — aggregation engines (8 clients, ResNet-50-sized; sampled)",
+            &["Engine", "Sample time", "ct/s", "Full ResNet-50 (est.)"],
+        );
+        let seq_s = time_iters(3, || {
+            std::hint::black_box(native::aggregate(&updates, &alphas, &codec.ctx.params));
+        });
+        t.row(vec![
+            "sequential (seed loop)".into(),
+            fedml_he::util::human_secs(seq_s),
+            format!("{:.1}", sample_cts as f64 / seq_s),
+            fedml_he::util::human_secs(seq_s * extrapolate),
+        ]);
+        let mut speedup_at = Vec::new();
+        for shards in [1usize, 2, 4, 8] {
+            let cfg = EngineConfig {
+                engine: Engine::Pipeline,
+                shards,
+                quorum: None,
+                straggler_timeout_secs: 5.0,
+            };
+            let engine = StreamingAggregator::new(&codec.ctx.params, cfg);
+            let pipe_s = time_iters(3, || {
+                let arrivals: Vec<Arrival> = arcs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, u)| Arrival {
+                        client: i as u64,
+                        alpha: alphas[i],
+                        arrival_secs: i as f64 * 1e-3,
+                        update: u.clone(),
+                    })
+                    .collect();
+                std::hint::black_box(engine.aggregate(arrivals).unwrap());
+            });
+            speedup_at.push((shards, seq_s / pipe_s));
+            t.row(vec![
+                format!("pipeline, {shards} shard(s)"),
+                fedml_he::util::human_secs(pipe_s),
+                format!("{:.1}", sample_cts as f64 / pipe_s),
+                fedml_he::util::human_secs(pipe_s * extrapolate),
+            ]);
+        }
+        t.print();
+        for (shards, speedup) in speedup_at {
+            println!("pipeline/{shards} speedup over sequential: {speedup:.2}x");
+        }
+    }
 
     // XLA kernel path vs native over a multi-ciphertext model
     let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");

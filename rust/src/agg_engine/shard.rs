@@ -1,0 +1,250 @@
+//! Limb sharding: the static work layout and the per-shard streaming
+//! accumulator running the modular weighted-sum kernel.
+//!
+//! The unit of parallelism is one `(ciphertext, limb)` pair — a contiguous
+//! `n`-coefficient residue vector. Units are dealt round-robin over shards
+//! so the limbs of a single ciphertext spread across workers (a model
+//! smaller than the shard count still parallelizes). The kernel is the same
+//! lazy-Barrett accumulation as [`crate::ckks::ops::weighted_sum`]: per
+//! client one reduced product (`< q < 2^31`) is added into a `u64`
+//! accumulator, so up to `2^31` clients fold in before any reduction is
+//! needed; the single final reduction makes the result independent of
+//! arrival order — bitwise identical to the sequential kernel.
+
+use crate::ckks::modarith::Barrett;
+use crate::ckks::CkksParams;
+use crate::he_agg::EncryptedUpdate;
+
+/// Static layout of one aggregation round over `n_shards` workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardPlan {
+    pub n_shards: usize,
+    /// Ciphertexts per update (all updates in a round have the same shape).
+    pub n_cts: usize,
+    /// RNS limbs per polynomial.
+    pub n_limbs: usize,
+    /// Length of the plaintext (selective-encryption remainder) vector.
+    pub plain_len: usize,
+}
+
+impl ShardPlan {
+    pub fn new(n_shards: usize, n_cts: usize, n_limbs: usize, plain_len: usize) -> Self {
+        assert!(n_shards >= 1, "at least one shard");
+        assert!(n_limbs >= 1, "at least one limb");
+        ShardPlan {
+            n_shards,
+            n_cts,
+            n_limbs,
+            plain_len,
+        }
+    }
+
+    /// Total `(ciphertext, limb)` units in the round.
+    pub fn n_units(&self) -> usize {
+        self.n_cts * self.n_limbs
+    }
+
+    /// The `(ct, limb)` units owned by `shard` (round-robin over the
+    /// flattened unit index).
+    pub fn units(&self, shard: usize) -> Vec<(usize, usize)> {
+        assert!(shard < self.n_shards);
+        (0..self.n_units())
+            .filter(|u| u % self.n_shards == shard)
+            .map(|u| (u / self.n_limbs, u % self.n_limbs))
+            .collect()
+    }
+
+    /// Contiguous slice of the plaintext remainder owned by `shard`.
+    pub fn plain_range(&self, shard: usize) -> std::ops::Range<usize> {
+        assert!(shard < self.n_shards);
+        let per = self.plain_len.div_ceil(self.n_shards).max(1);
+        let lo = (shard * per).min(self.plain_len);
+        let hi = ((shard + 1) * per).min(self.plain_len);
+        lo..hi
+    }
+}
+
+/// One shard's reduced weighted sums at seal time.
+#[derive(Debug, Clone)]
+pub struct ShardCtSums {
+    /// The `(ct, limb)` units, parallel to `c0`/`c1`.
+    pub units: Vec<(usize, usize)>,
+    /// Reduced c0 residues per unit (length `n` each).
+    pub c0: Vec<Vec<u64>>,
+    /// Reduced c1 residues per unit.
+    pub c1: Vec<Vec<u64>>,
+}
+
+/// Streaming accumulator for one shard: absorbs one client update at a time
+/// (in arrival order) and reduces once at seal.
+pub struct ShardAccumulator {
+    plan: ShardPlan,
+    units: Vec<(usize, usize)>,
+    reducers: Vec<Barrett>,
+    acc_c0: Vec<Vec<u64>>,
+    acc_c1: Vec<Vec<u64>>,
+    absorbed: usize,
+}
+
+impl ShardAccumulator {
+    pub fn new(plan: ShardPlan, shard: usize, params: &CkksParams) -> Self {
+        assert_eq!(plan.n_limbs, params.num_limbs(), "plan/params limb mismatch");
+        let units = plan.units(shard);
+        let n = params.n;
+        ShardAccumulator {
+            plan,
+            reducers: params.moduli.iter().map(|&q| Barrett::new(q)).collect(),
+            acc_c0: vec![vec![0u64; n]; units.len()],
+            acc_c1: vec![vec![0u64; n]; units.len()],
+            units,
+            absorbed: 0,
+        }
+    }
+
+    /// Clients folded in so far.
+    pub fn absorbed(&self) -> usize {
+        self.absorbed
+    }
+
+    /// Fold one client's ciphertext limbs into this shard, weighted by the
+    /// client's encoded per-limb FedAvg weight (`CkksParams::encode_weight`).
+    pub fn absorb(&mut self, upd: &EncryptedUpdate, weight: &[u64]) {
+        assert_eq!(upd.cts.len(), self.plan.n_cts, "update shape drifted mid-round");
+        assert_eq!(weight.len(), self.plan.n_limbs, "weight residue count");
+        for (k, &(ct, limb)) in self.units.iter().enumerate() {
+            let br = self.reducers[limb];
+            let w = weight[limb];
+            let src = &upd.cts[ct];
+            for (d, &s) in self.acc_c0[k].iter_mut().zip(src.c0.limbs[limb].iter()) {
+                *d += br.mul(s, w);
+            }
+            for (d, &s) in self.acc_c1[k].iter_mut().zip(src.c1.limbs[limb].iter()) {
+                *d += br.mul(s, w);
+            }
+        }
+        self.absorbed += 1;
+        // Lazy-accumulation guard: each term is < 2^31, so fold well before
+        // the u64 headroom (2^62 for Barrett::reduce) could run out.
+        if self.absorbed % (1 << 30) == 0 {
+            self.fold();
+        }
+    }
+
+    fn fold(&mut self) {
+        for (k, &(_, limb)) in self.units.iter().enumerate() {
+            let br = self.reducers[limb];
+            for x in self.acc_c0[k].iter_mut() {
+                *x = br.reduce(*x);
+            }
+            for x in self.acc_c1[k].iter_mut() {
+                *x = br.reduce(*x);
+            }
+        }
+    }
+
+    /// Seal the shard: one final modular reduction per unit.
+    pub fn finalize(mut self) -> ShardCtSums {
+        self.fold();
+        ShardCtSums {
+            units: self.units,
+            c0: self.acc_c0,
+            c1: self.acc_c1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::{ops, CkksContext};
+    use crate::crypto::prng::ChaChaRng;
+    use crate::he_agg::mask::EncryptionMask;
+    use crate::he_agg::selective::SelectiveCodec;
+
+    #[test]
+    fn plan_partitions_all_units_exactly_once() {
+        for n_shards in [1usize, 2, 3, 4, 8, 13] {
+            let plan = ShardPlan::new(n_shards, 5, 4, 1000);
+            let mut seen = vec![0usize; plan.n_units()];
+            for s in 0..n_shards {
+                for (ct, limb) in plan.units(s) {
+                    seen[ct * plan.n_limbs + limb] += 1;
+                }
+            }
+            assert!(seen.iter().all(|&c| c == 1), "shards={n_shards}");
+            // plaintext ranges tile [0, plain_len)
+            let mut covered = 0usize;
+            for s in 0..n_shards {
+                let r = plan.plain_range(s);
+                assert_eq!(r.start, covered.min(plan.plain_len));
+                covered = covered.max(r.end);
+            }
+            assert_eq!(covered, plan.plain_len);
+        }
+    }
+
+    #[test]
+    fn sharded_sums_match_sequential_kernel_bitwise() {
+        let ctx = CkksContext::new(256, 4, 40).unwrap();
+        let codec = SelectiveCodec::new(ctx);
+        let mut rng = ChaChaRng::from_seed(21, 0);
+        let (pk, _sk) = codec.ctx.keygen(&mut rng);
+        let total = 600; // 5 ciphertexts at batch 128
+        let mask = EncryptionMask::full(total);
+        let alphas = [0.4, 0.35, 0.25];
+        let updates: Vec<EncryptedUpdate> = (0..3usize)
+            .map(|c| {
+                let m: Vec<f32> = (0..total).map(|i| ((i * (c + 2)) as f32 * 0.01).sin()).collect();
+                codec.encrypt_update(&m, &mask, &pk, &mut rng)
+            })
+            .collect();
+        let params = &codec.ctx.params;
+
+        // sequential oracle per ciphertext index
+        let oracle: Vec<crate::ckks::Ciphertext> = (0..updates[0].cts.len())
+            .map(|c| {
+                let slice: Vec<_> = updates.iter().map(|u| u.cts[c].clone()).collect();
+                ops::weighted_sum(&slice, &alphas, params)
+            })
+            .collect();
+
+        for n_shards in [1usize, 2, 4, 8] {
+            let plan = ShardPlan::new(n_shards, updates[0].cts.len(), params.num_limbs(), 0);
+            let mut accs: Vec<ShardAccumulator> = (0..n_shards)
+                .map(|s| ShardAccumulator::new(plan, s, params))
+                .collect();
+            // absorb in a scrambled arrival order
+            for &i in &[2usize, 0, 1] {
+                let w = params.encode_weight(alphas[i]);
+                for acc in accs.iter_mut() {
+                    acc.absorb(&updates[i], &w);
+                }
+            }
+            for acc in accs {
+                assert_eq!(acc.absorbed(), 3);
+                let sums = acc.finalize();
+                for (k, &(ct, limb)) in sums.units.iter().enumerate() {
+                    assert_eq!(sums.c0[k], oracle[ct].c0.limbs[limb], "shards={n_shards}");
+                    assert_eq!(sums.c1[k], oracle[ct].c1.limbs[limb], "shards={n_shards}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "shape drifted")]
+    fn shape_drift_panics() {
+        let ctx = CkksContext::new(128, 2, 30).unwrap();
+        let codec = SelectiveCodec::new(ctx);
+        let mut rng = ChaChaRng::from_seed(22, 0);
+        let (pk, _) = codec.ctx.keygen(&mut rng);
+        let u1 = codec.encrypt_update(&vec![1.0; 100], &EncryptionMask::full(100), &pk, &mut rng);
+        let u2 = codec.encrypt_update(&vec![1.0; 300], &EncryptionMask::full(300), &pk, &mut rng);
+        let params = &codec.ctx.params;
+        let plan = ShardPlan::new(2, u1.cts.len(), params.num_limbs(), 0);
+        let mut acc = ShardAccumulator::new(plan, 0, params);
+        let w = params.encode_weight(0.5);
+        acc.absorb(&u1, &w);
+        acc.absorb(&u2, &w);
+    }
+}

@@ -1,0 +1,421 @@
+//! Streaming intake + sharded aggregation: the pipeline engine.
+//!
+//! Stages (DESIGN.md §3):
+//!
+//! 1. **Intake** — arrivals (one per participant, stamped with the
+//!    [`crate::netsim`] simulated transfer-completion time) are admitted in
+//!    arrival order through bounded fan-out channels, so shard workers
+//!    aggregate update `i` while update `i+1` is still "on the wire".
+//! 2. **Quorum seal** — the round seals once every non-straggler has
+//!    arrived: the first `quorum` arrivals are always accepted, later ones
+//!    only within `straggler_timeout_secs` of the quorum point. Dropped
+//!    weight mass is reported in [`StreamStats::alpha_mass`] so the caller
+//!    renormalizes the decrypted model exactly (HE dropout robustness).
+//! 3. **Assembly** — each worker returns its reduced `(ct, limb)` units and
+//!    plaintext slice; the main thread scatters them into one
+//!    [`EncryptedUpdate`].
+//!
+//! Exactness: ciphertext limbs are modular sums (commutative, reduced once
+//! at seal) — bitwise identical to the sequential kernel for any shard
+//! count/arrival order. The plaintext remainder is accumulated in client-id
+//! order at seal, f64-for-f64 the same loop as the sequential path — also
+//! bitwise identical.
+
+use super::shard::{ShardAccumulator, ShardCtSums, ShardPlan};
+use super::EngineConfig;
+use crate::ckks::{Ciphertext, CkksParams, RnsPoly};
+use crate::he_agg::EncryptedUpdate;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// Depth of each shard's intake channel: enough to keep workers busy while
+/// bounding memory to a few in-flight updates per shard.
+const INTAKE_DEPTH: usize = 4;
+
+/// One client's update entering the round.
+#[derive(Clone)]
+pub struct Arrival {
+    /// Client id (virtual cohort id or trainer-slot id).
+    pub client: u64,
+    /// FedAvg weight, normalized over the *selected* cohort.
+    pub alpha: f64,
+    /// Simulated transfer-completion time (seconds into the round).
+    pub arrival_secs: f64,
+    pub update: Arc<EncryptedUpdate>,
+}
+
+/// What the streaming round did.
+#[derive(Debug, Clone, Default)]
+pub struct StreamStats {
+    pub offered: usize,
+    pub accepted: usize,
+    pub dropped_stragglers: usize,
+    /// Client ids of the accepted participants (the round's comm accounting
+    /// charges link time only for these — dropped stragglers count bytes but
+    /// never gate the round).
+    pub accepted_clients: Vec<u64>,
+    /// Σ α over accepted participants. The decrypted model must be divided
+    /// by this to renormalize after straggler drops (1.0 when none drop).
+    pub alpha_mass: f64,
+    /// Simulated time at which the round sealed (last accepted arrival).
+    pub sealed_at_secs: f64,
+}
+
+/// Per-client work item fanned out to every shard worker.
+struct WorkItem {
+    client: u64,
+    alpha: f64,
+    /// Encoded per-limb weight residues for `alpha`.
+    weight: Arc<Vec<u64>>,
+    update: Arc<EncryptedUpdate>,
+}
+
+/// One worker's sealed output.
+struct ShardOutput {
+    sums: ShardCtSums,
+    plain_lo: usize,
+    plain: Vec<f32>,
+}
+
+/// The sharded streaming aggregation engine.
+pub struct StreamingAggregator<'a> {
+    pub params: &'a CkksParams,
+    pub cfg: EngineConfig,
+}
+
+impl<'a> StreamingAggregator<'a> {
+    pub fn new(params: &'a CkksParams, cfg: EngineConfig) -> Self {
+        StreamingAggregator { params, cfg }
+    }
+
+    /// Run one round: admit `arrivals` in simulated-arrival order, apply the
+    /// quorum/straggler policy, aggregate across the shard pool, and return
+    /// the aggregate plus round statistics.
+    pub fn aggregate(
+        &self,
+        mut arrivals: Vec<Arrival>,
+    ) -> anyhow::Result<(EncryptedUpdate, StreamStats)> {
+        anyhow::ensure!(!arrivals.is_empty(), "streaming round with no arrivals");
+        arrivals.sort_by(|a, b| {
+            a.arrival_secs
+                .total_cmp(&b.arrival_secs)
+                .then(a.client.cmp(&b.client))
+        });
+        let n_cts = arrivals[0].update.cts.len();
+        let n_plain = arrivals[0].update.plain.len();
+        let total = arrivals[0].update.total;
+        anyhow::ensure!(
+            arrivals
+                .iter()
+                .all(|a| a.update.cts.len() == n_cts
+                    && a.update.plain.len() == n_plain
+                    && a.update.total == total),
+            "heterogeneous update shapes in streaming round"
+        );
+
+        // Quorum/straggler policy over the arrival-ordered list.
+        let offered = arrivals.len();
+        let quorum = self.cfg.quorum.unwrap_or(offered).clamp(1, offered);
+        let cutoff = arrivals[quorum - 1].arrival_secs + self.cfg.straggler_timeout_secs;
+        let accepted: Vec<Arrival> = arrivals
+            .iter()
+            .enumerate()
+            .filter(|(i, a)| *i < quorum || a.arrival_secs <= cutoff)
+            .map(|(_, a)| a.clone())
+            .collect();
+        let stats = StreamStats {
+            offered,
+            accepted: accepted.len(),
+            dropped_stragglers: offered - accepted.len(),
+            accepted_clients: accepted.iter().map(|a| a.client).collect(),
+            alpha_mass: accepted.iter().map(|a| a.alpha).sum(),
+            sealed_at_secs: accepted
+                .iter()
+                .map(|a| a.arrival_secs)
+                .fold(0.0f64, f64::max),
+        };
+
+        let plan = ShardPlan::new(
+            self.cfg.shards.max(1),
+            n_cts,
+            self.params.num_limbs(),
+            n_plain,
+        );
+        let params = self.params;
+        let outputs: Vec<ShardOutput> = std::thread::scope(|scope| {
+            let mut senders = Vec::with_capacity(plan.n_shards);
+            let mut handles = Vec::with_capacity(plan.n_shards);
+            for shard in 0..plan.n_shards {
+                let (tx, rx) = mpsc::sync_channel::<WorkItem>(INTAKE_DEPTH);
+                senders.push(tx);
+                handles.push(scope.spawn(move || shard_worker(params, plan, shard, rx)));
+            }
+            // Intake: feed accepted arrivals in arrival order. The bounded
+            // channels backpressure the intake, so aggregation of early
+            // arrivals overlaps "transfer" of later ones.
+            for a in &accepted {
+                let weight = Arc::new(params.encode_weight(a.alpha));
+                for tx in &senders {
+                    let item = WorkItem {
+                        client: a.client,
+                        alpha: a.alpha,
+                        weight: weight.clone(),
+                        update: a.update.clone(),
+                    };
+                    tx.send(item).expect("shard worker hung up mid-round");
+                }
+            }
+            // Seal: closing the channels ends every worker's intake loop.
+            drop(senders);
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("shard worker panicked"))
+                .collect()
+        });
+
+        // Assembly: scatter shard outputs into one update.
+        let out_scale = accepted[0]
+            .update
+            .cts
+            .first()
+            .map(|c| c.scale)
+            .unwrap_or(self.params.delta())
+            * self.params.delta_w();
+        let mut cts: Vec<Ciphertext> = (0..n_cts)
+            .map(|c| Ciphertext {
+                c0: RnsPoly::zero(self.params),
+                c1: RnsPoly::zero(self.params),
+                n_values: accepted
+                    .iter()
+                    .map(|a| a.update.cts[c].n_values)
+                    .max()
+                    .unwrap(),
+                scale: out_scale,
+            })
+            .collect();
+        let mut plain = vec![0.0f32; n_plain];
+        for out in outputs {
+            for (k, &(ct, limb)) in out.sums.units.iter().enumerate() {
+                cts[ct].c0.limbs[limb].copy_from_slice(&out.sums.c0[k]);
+                cts[ct].c1.limbs[limb].copy_from_slice(&out.sums.c1[k]);
+            }
+            plain[out.plain_lo..out.plain_lo + out.plain.len()].copy_from_slice(&out.plain);
+        }
+        Ok((EncryptedUpdate { cts, plain, total }, stats))
+    }
+}
+
+/// Worker loop: absorb ciphertext limbs as updates arrive; at seal, fold the
+/// plaintext slice in client-id order (bitwise-identical to the sequential
+/// f64 accumulation) and return the reduced sums.
+fn shard_worker(
+    params: &CkksParams,
+    plan: ShardPlan,
+    shard: usize,
+    rx: mpsc::Receiver<WorkItem>,
+) -> ShardOutput {
+    let mut acc = ShardAccumulator::new(plan, shard, params);
+    let mut buffered: Vec<WorkItem> = Vec::new();
+    while let Ok(item) = rx.recv() {
+        acc.absorb(&item.update, &item.weight);
+        buffered.push(item);
+    }
+    buffered.sort_by_key(|i| i.client);
+    let range = plan.plain_range(shard);
+    let mut sums = vec![0.0f64; range.len()];
+    for item in &buffered {
+        let src = &item.update.plain[range.clone()];
+        for (d, &v) in sums.iter_mut().zip(src.iter()) {
+            *d += item.alpha * v as f64;
+        }
+    }
+    ShardOutput {
+        sums: acc.finalize(),
+        plain_lo: range.start,
+        plain: sums.into_iter().map(|v| v as f32).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agg_engine::Engine;
+    use crate::ckks::CkksContext;
+    use crate::crypto::prng::ChaChaRng;
+    use crate::he_agg::mask::EncryptionMask;
+    use crate::he_agg::native;
+    use crate::he_agg::selective::SelectiveCodec;
+
+    fn fixture(
+        n_clients: usize,
+        total: usize,
+        ratio: f64,
+    ) -> (SelectiveCodec, Vec<EncryptedUpdate>, Vec<f64>, EncryptionMask) {
+        let ctx = CkksContext::new(256, 4, 40).unwrap();
+        let codec = SelectiveCodec::new(ctx);
+        let mut rng = ChaChaRng::from_seed(31, 0);
+        let (pk, _sk) = codec.ctx.keygen(&mut rng);
+        let sens: Vec<f32> = (0..total).map(|i| ((i * 31) % 101) as f32).collect();
+        let mask = EncryptionMask::top_p(&sens, ratio);
+        let sizes: Vec<f64> = (0..n_clients).map(|c| (c + 1) as f64).collect();
+        let mass: f64 = sizes.iter().sum();
+        let alphas: Vec<f64> = sizes.iter().map(|s| s / mass).collect();
+        let updates: Vec<EncryptedUpdate> = (0..n_clients)
+            .map(|c| {
+                let m: Vec<f32> = (0..total)
+                    .map(|i| ((i + c * 131) as f32 * 0.003).sin())
+                    .collect();
+                codec.encrypt_update(&m, &mask, &pk, &mut rng)
+            })
+            .collect();
+        (codec, updates, alphas, mask)
+    }
+
+    fn arrivals_of(updates: &[EncryptedUpdate], alphas: &[f64], times: &[f64]) -> Vec<Arrival> {
+        updates
+            .iter()
+            .zip(alphas.iter())
+            .zip(times.iter())
+            .enumerate()
+            .map(|(i, ((u, &alpha), &t))| Arrival {
+                client: i as u64,
+                alpha,
+                arrival_secs: t,
+                update: Arc::new(u.clone()),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn pipeline_matches_sequential_bitwise_across_shard_counts() {
+        let (codec, updates, alphas, _mask) = fixture(5, 900, 0.5);
+        let oracle = native::aggregate(&updates, &alphas, &codec.ctx.params);
+        // reversed arrival order: last client's bytes land first
+        let times: Vec<f64> = (0..5).map(|i| (5 - i) as f64).collect();
+        for shards in [1usize, 2, 4, 8] {
+            let cfg = EngineConfig {
+                engine: Engine::Pipeline,
+                shards,
+                quorum: None,
+                straggler_timeout_secs: 5.0,
+            };
+            let engine = StreamingAggregator::new(&codec.ctx.params, cfg);
+            let (got, stats) = engine
+                .aggregate(arrivals_of(&updates, &alphas, &times))
+                .unwrap();
+            assert_eq!(stats.accepted, 5);
+            assert_eq!(stats.dropped_stragglers, 0);
+            assert!((stats.alpha_mass - 1.0).abs() < 1e-12);
+            assert_eq!(got.cts.len(), oracle.cts.len(), "shards={shards}");
+            for (a, b) in got.cts.iter().zip(oracle.cts.iter()) {
+                assert_eq!(a.c0, b.c0, "shards={shards}: c0 limbs differ");
+                assert_eq!(a.c1, b.c1, "shards={shards}: c1 limbs differ");
+                assert_eq!(a.n_values, b.n_values);
+                assert!((a.scale - b.scale).abs() < 1e-9);
+            }
+            // plaintext remainder is bitwise identical
+            assert_eq!(got.plain, oracle.plain, "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn quorum_drops_stragglers_and_reports_mass() {
+        let (codec, updates, alphas, _mask) = fixture(6, 600, 0.4);
+        // clients 4 and 5 are stragglers: they arrive long after quorum
+        let times = [0.1, 0.2, 0.3, 0.4, 100.0, 200.0];
+        let cfg = EngineConfig {
+            engine: Engine::Pipeline,
+            shards: 4,
+            quorum: Some(4),
+            straggler_timeout_secs: 1.0,
+        };
+        let engine = StreamingAggregator::new(&codec.ctx.params, cfg);
+        let (got, stats) = engine
+            .aggregate(arrivals_of(&updates, &alphas, &times))
+            .unwrap();
+        assert_eq!(stats.offered, 6);
+        assert_eq!(stats.accepted, 4);
+        assert_eq!(stats.dropped_stragglers, 2);
+        let expect_mass: f64 = alphas[..4].iter().sum();
+        assert!((stats.alpha_mass - expect_mass).abs() < 1e-12);
+        assert!((stats.sealed_at_secs - 0.4).abs() < 1e-12);
+        // the aggregate equals the sequential aggregate over the accepted set
+        let oracle = native::aggregate(&updates[..4], &alphas[..4], &codec.ctx.params);
+        for (a, b) in got.cts.iter().zip(oracle.cts.iter()) {
+            assert_eq!(a.c0, b.c0);
+            assert_eq!(a.c1, b.c1);
+        }
+        assert_eq!(got.plain, oracle.plain);
+    }
+
+    #[test]
+    fn late_arrival_within_timeout_is_accepted() {
+        let (codec, updates, alphas, _mask) = fixture(5, 400, 0.3);
+        let times = [0.1, 0.2, 0.3, 0.4, 0.9]; // within quorum+timeout
+        let cfg = EngineConfig {
+            engine: Engine::Pipeline,
+            shards: 2,
+            quorum: Some(4),
+            straggler_timeout_secs: 1.0,
+        };
+        let engine = StreamingAggregator::new(&codec.ctx.params, cfg);
+        let (_, stats) = engine
+            .aggregate(arrivals_of(&updates, &alphas, &times))
+            .unwrap();
+        assert_eq!(stats.accepted, 5);
+        assert_eq!(stats.dropped_stragglers, 0);
+    }
+
+    #[test]
+    fn renormalized_decrypt_matches_fedavg_over_accepted() {
+        // End-to-end: drop stragglers, decrypt, renormalize by alpha_mass —
+        // the result is the exact FedAvg over the accepted participants.
+        let ctx = CkksContext::new(256, 4, 40).unwrap();
+        let codec = SelectiveCodec::new(ctx);
+        let mut rng = ChaChaRng::from_seed(33, 0);
+        let (pk, sk) = codec.ctx.keygen(&mut rng);
+        let total = 500;
+        let mask = EncryptionMask::full(total);
+        let alphas = [0.25, 0.25, 0.25, 0.25];
+        let models: Vec<Vec<f32>> = (0..4usize)
+            .map(|c| (0..total).map(|i| ((i * (c + 1)) as f32 * 0.002).cos()).collect())
+            .collect();
+        let updates: Vec<EncryptedUpdate> = models
+            .iter()
+            .map(|m| codec.encrypt_update(m, &mask, &pk, &mut rng))
+            .collect();
+        let cfg = EngineConfig {
+            engine: Engine::Pipeline,
+            shards: 4,
+            quorum: Some(3),
+            straggler_timeout_secs: 0.5,
+        };
+        let engine = StreamingAggregator::new(&codec.ctx.params, cfg);
+        let times = [0.1, 0.2, 0.3, 99.0]; // client 3 is dropped
+        let (agg, stats) = engine
+            .aggregate(arrivals_of(&updates, &alphas, &times))
+            .unwrap();
+        assert_eq!(stats.accepted, 3);
+        let mut got = codec.decrypt_update(&agg, &mask, &sk);
+        for v in got.iter_mut() {
+            *v = (*v as f64 / stats.alpha_mass) as f32;
+        }
+        let renorm: Vec<f64> = alphas[..3].iter().map(|a| a / stats.alpha_mass).collect();
+        let expected = native::plain_fedavg(&models[..3], &renorm);
+        for j in 0..total {
+            assert!(
+                (got[j] - expected[j]).abs() < 1e-4,
+                "j={j}: {} vs {}",
+                got[j],
+                expected[j]
+            );
+        }
+    }
+
+    #[test]
+    fn empty_round_is_an_error() {
+        let ctx = CkksContext::new(128, 2, 30).unwrap();
+        let engine = StreamingAggregator::new(&ctx.params, EngineConfig::default());
+        assert!(engine.aggregate(Vec::new()).is_err());
+    }
+}

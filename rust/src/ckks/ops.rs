@@ -28,12 +28,20 @@ pub fn mul_weight(ct: &mut Ciphertext, alpha: f64, params: &CkksParams) {
 /// Native weighted sum `Σ_i α_i · ct_i` — the server aggregation of
 /// Algorithm 1 in pure Rust. Used to cross-check the XLA artifact and as the
 /// fallback for non-artifact shapes.
+pub fn weighted_sum(cts: &[Ciphertext], alphas: &[f64], params: &CkksParams) -> Ciphertext {
+    let refs: Vec<&Ciphertext> = cts.iter().collect();
+    weighted_sum_refs(&refs, alphas, params)
+}
+
+/// Borrowed-input variant of [`weighted_sum`]: the aggregation hot path
+/// (`he_agg::native`, the `agg_engine` oracle) calls this per ciphertext
+/// index without first cloning each client's ciphertext into a scratch Vec.
 ///
 /// The inner loop is the measured L3 hot path: per (limb, coefficient) it is
 /// one u64 multiply, one modulo and one add per client. The §Perf pass keeps
 /// the product reduction lazy (the per-term `% q` keeps each term < 2^31 so
 /// up to 2^33 terms can accumulate in u64 before a final reduction).
-pub fn weighted_sum(cts: &[Ciphertext], alphas: &[f64], params: &CkksParams) -> Ciphertext {
+pub fn weighted_sum_refs(cts: &[&Ciphertext], alphas: &[f64], params: &CkksParams) -> Ciphertext {
     assert_eq!(cts.len(), alphas.len());
     assert!(!cts.is_empty());
     let _n = params.n;

@@ -100,6 +100,125 @@ pub fn ciphertext_from_bytes(bytes: &[u8], params: &CkksParams) -> anyhow::Resul
     })
 }
 
+// ---------------------------------------------------------------------------
+// Per-shard limb views (the agg_engine wire format): a shard transfers only
+// the limb range it aggregates, so sharded intake moves exactly the full
+// ciphertext body split across links with a small per-shard header.
+
+const SHARD_MAGIC: u32 = 0x434B_5348; // "CKSH"
+
+/// A deserialized limb-range view of one ciphertext.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CiphertextShard {
+    /// Limb range [lo, hi) carried by this shard.
+    pub lo: usize,
+    pub hi: usize,
+    pub n_values: usize,
+    pub scale: f64,
+    /// c0 residue vectors for limbs lo..hi (each length n).
+    pub c0_limbs: Vec<Vec<u64>>,
+    /// c1 residue vectors for limbs lo..hi.
+    pub c1_limbs: Vec<Vec<u64>>,
+}
+
+impl CiphertextShard {
+    /// Scatter this shard's limbs into a full ciphertext skeleton.
+    pub fn scatter_into(&self, ct: &mut Ciphertext) {
+        for (k, l) in (self.lo..self.hi).enumerate() {
+            ct.c0.limbs[l].copy_from_slice(&self.c0_limbs[k]);
+            ct.c1.limbs[l].copy_from_slice(&self.c1_limbs[k]);
+        }
+        ct.n_values = self.n_values;
+        ct.scale = self.scale;
+    }
+}
+
+/// Header bytes of the shard wire format: magic(4) version(4) n(4) lo(4)
+/// hi(4) n_values(4) scale(8).
+pub const fn shard_header_bytes() -> usize {
+    32
+}
+
+/// Serialized size of a limb-range shard.
+pub fn shard_wire_bytes(params: &CkksParams, lo: usize, hi: usize) -> usize {
+    shard_header_bytes() + 2 * (hi - lo) * params.n * 4
+}
+
+/// Serialize limbs [lo, hi) of a ciphertext.
+pub fn ciphertext_shard_to_bytes(ct: &Ciphertext, lo: usize, hi: usize) -> Vec<u8> {
+    assert!(!ct.c0.ntt_form && !ct.c1.ntt_form);
+    assert!(lo < hi && hi <= ct.c0.limbs.len(), "bad limb range");
+    let n = ct.c0.n;
+    let mut out = Vec::with_capacity(shard_header_bytes() + 2 * (hi - lo) * n * 4);
+    out.extend_from_slice(&SHARD_MAGIC.to_le_bytes());
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&(n as u32).to_le_bytes());
+    out.extend_from_slice(&(lo as u32).to_le_bytes());
+    out.extend_from_slice(&(hi as u32).to_le_bytes());
+    out.extend_from_slice(&(ct.n_values as u32).to_le_bytes());
+    out.extend_from_slice(&ct.scale.to_le_bytes());
+    debug_assert_eq!(out.len(), shard_header_bytes());
+    for poly in [&ct.c0, &ct.c1] {
+        for limb in &poly.limbs[lo..hi] {
+            for &c in limb {
+                debug_assert!(c < 1 << 31);
+                out.extend_from_slice(&(c as u32).to_le_bytes());
+            }
+        }
+    }
+    out
+}
+
+/// Deserialize a limb-range shard; validates header against `params`.
+pub fn ciphertext_shard_from_bytes(
+    bytes: &[u8],
+    params: &CkksParams,
+) -> anyhow::Result<CiphertextShard> {
+    let mut off = 0usize;
+    anyhow::ensure!(read_u32(bytes, &mut off)? == SHARD_MAGIC, "bad shard magic");
+    anyhow::ensure!(read_u32(bytes, &mut off)? == VERSION, "bad version");
+    let n = read_u32(bytes, &mut off)? as usize;
+    let lo = read_u32(bytes, &mut off)? as usize;
+    let hi = read_u32(bytes, &mut off)? as usize;
+    let n_values = read_u32(bytes, &mut off)? as usize;
+    anyhow::ensure!(bytes.len() >= off + 8, "truncated shard header");
+    let scale = f64::from_le_bytes(bytes[off..off + 8].try_into().unwrap());
+    off += 8;
+    anyhow::ensure!(n == params.n, "ring degree mismatch");
+    anyhow::ensure!(lo < hi && hi <= params.num_limbs(), "limb range out of bounds");
+    anyhow::ensure!(n_values <= n / 2, "n_values out of range");
+    anyhow::ensure!(
+        bytes.len() == off + 2 * (hi - lo) * n * 4,
+        "bad shard body length"
+    );
+
+    let mut polys: Vec<Vec<Vec<u64>>> = Vec::with_capacity(2);
+    for _ in 0..2 {
+        let mut limb_vecs = Vec::with_capacity(hi - lo);
+        for l in lo..hi {
+            let q = params.moduli[l];
+            let mut v = Vec::with_capacity(n);
+            for _ in 0..n {
+                let c = read_u32(bytes, &mut off)? as u64;
+                anyhow::ensure!(c < q, "coefficient out of range");
+                v.push(c);
+            }
+            limb_vecs.push(v);
+        }
+        polys.push(limb_vecs);
+    }
+    let c1_limbs = polys.pop().unwrap();
+    let c0_limbs = polys.pop().unwrap();
+    Ok(CiphertextShard {
+        lo,
+        hi,
+        n_values,
+        scale,
+        c0_limbs,
+        c1_limbs,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -142,6 +261,62 @@ mod tests {
         let hdr = crate::ckks::params::serialize_header_bytes();
         b[hdr..hdr + 4].copy_from_slice(&u32::MAX.to_le_bytes());
         assert!(ciphertext_from_bytes(&b, &params).is_err());
+    }
+
+    #[test]
+    fn shard_views_tile_the_ciphertext() {
+        let params = Arc::new(CkksParams::new(256, 4, 40).unwrap());
+        let encoder = Encoder::new(params.clone());
+        let mut rng = ChaChaRng::from_seed(4, 0);
+        let (pk, _) = keygen(&params, &mut rng);
+        let m: Vec<f64> = (0..128).map(|i| i as f64 * 0.02 - 1.0).collect();
+        let ct = encrypt(&params, &pk, &encoder.encode(&m), 128, &mut rng);
+
+        // split limbs into two shards: [0,2) and [2,4)
+        let a = ciphertext_shard_to_bytes(&ct, 0, 2);
+        let b = ciphertext_shard_to_bytes(&ct, 2, 4);
+        assert_eq!(a.len(), shard_wire_bytes(&params, 0, 2));
+        // shard bodies sum to the full-ciphertext body
+        let full_body = params.ciphertext_bytes() - crate::ckks::params::serialize_header_bytes();
+        assert_eq!(
+            (a.len() - shard_header_bytes()) + (b.len() - shard_header_bytes()),
+            full_body
+        );
+
+        // reassemble into a skeleton and compare bitwise
+        let sa = ciphertext_shard_from_bytes(&a, &params).unwrap();
+        let sb = ciphertext_shard_from_bytes(&b, &params).unwrap();
+        let mut rebuilt = Ciphertext {
+            c0: RnsPoly::zero(&params),
+            c1: RnsPoly::zero(&params),
+            n_values: 0,
+            scale: 0.0,
+        };
+        sa.scatter_into(&mut rebuilt);
+        sb.scatter_into(&mut rebuilt);
+        assert_eq!(rebuilt, ct);
+    }
+
+    #[test]
+    fn shard_corruption_detected() {
+        let params = Arc::new(CkksParams::new(128, 3, 30).unwrap());
+        let encoder = Encoder::new(params.clone());
+        let mut rng = ChaChaRng::from_seed(5, 0);
+        let (pk, _) = keygen(&params, &mut rng);
+        let ct = encrypt(&params, &pk, &encoder.encode(&[1.0]), 1, &mut rng);
+        let bytes = ciphertext_shard_to_bytes(&ct, 1, 3);
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        assert!(ciphertext_shard_from_bytes(&bad, &params).is_err());
+        assert!(ciphertext_shard_from_bytes(&bytes[..bytes.len() - 2], &params).is_err());
+        // out-of-range coefficient in the body
+        let mut bad = bytes.clone();
+        let hdr = shard_header_bytes();
+        bad[hdr..hdr + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(ciphertext_shard_from_bytes(&bad, &params).is_err());
+        // full-format bytes are not a shard
+        let full = ciphertext_to_bytes(&ct);
+        assert!(ciphertext_shard_from_bytes(&full, &params).is_err());
     }
 
     #[test]

@@ -78,6 +78,52 @@ pub fn combine_public_key(
     }
 }
 
+/// Serialize a secret share (NTT-form limbs, coefficients < 2^31 as u32 LE,
+/// limb-major) for Shamir escrow: the key authority splits these bytes
+/// t-of-n across the other parties so a quorum can resurrect a dropped
+/// party's share ([`crate::crypto::shamir::split_bytes`]).
+pub fn share_to_bytes(share: &RnsPoly) -> Vec<u8> {
+    assert!(share.ntt_form, "secret shares are held in NTT form");
+    let mut out = Vec::with_capacity(share.limbs.len() * share.n * 4);
+    for limb in &share.limbs {
+        for &c in limb {
+            debug_assert!(c < 1 << 31);
+            out.extend_from_slice(&(c as u32).to_le_bytes());
+        }
+    }
+    out
+}
+
+/// Rebuild an escrowed secret share from its serialized bytes.
+pub fn share_from_bytes(params: &CkksParams, bytes: &[u8]) -> anyhow::Result<RnsPoly> {
+    let l = params.num_limbs();
+    anyhow::ensure!(
+        bytes.len() == l * params.n * 4,
+        "escrowed share has wrong length ({} bytes for n={} limbs={})",
+        bytes.len(),
+        params.n,
+        l
+    );
+    let mut limbs = Vec::with_capacity(l);
+    let mut off = 0usize;
+    for limb_idx in 0..l {
+        let q = params.moduli[limb_idx];
+        let mut v = Vec::with_capacity(params.n);
+        for _ in 0..params.n {
+            let c = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as u64;
+            anyhow::ensure!(c < q, "escrowed coefficient out of range");
+            v.push(c);
+            off += 4;
+        }
+        limbs.push(v);
+    }
+    Ok(RnsPoly {
+        n: params.n,
+        limbs,
+        ntt_form: true,
+    })
+}
+
 /// A party's partial decryption of a ciphertext (coefficient domain).
 pub fn partial_decrypt(
     params: &CkksParams,

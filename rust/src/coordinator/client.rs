@@ -65,6 +65,19 @@ impl<'a> FlClient<'a> {
         })
     }
 
+    /// Rebind this (pooled) trainer slot to impersonate virtual cohort
+    /// member `vid` for one round: the population's per-client weight and a
+    /// per-(virtual-client, round) RNG stream. The round is folded into the
+    /// seed so a client re-sampled in a later round never replays encryption
+    /// or DP randomness (LWE randomness reuse would leak plaintext
+    /// differences). Trainer pools back the lazily materialized population
+    /// of `agg_engine::cohort` — only the K sampled participants per round
+    /// ever hold real state.
+    pub fn bind_virtual(&mut self, vid: u64, alpha: f64, client_seed: u64, round: u64) {
+        self.alpha = alpha;
+        self.rng = ChaChaRng::from_seed(client_seed.wrapping_add(round), 0x7000 ^ vid);
+    }
+
     /// Local sensitivity map (mask-agreement stage input).
     pub fn sensitivity(&mut self, params: &[f32]) -> anyhow::Result<Vec<f32>> {
         let LocalTrainer { .. } = &self.trainer;

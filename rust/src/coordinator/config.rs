@@ -1,5 +1,6 @@
 //! FL task configuration (the "server package" of the deployment platform).
 
+use crate::agg_engine::{Engine, EngineConfig};
 use crate::util::cli::Args;
 
 /// Which parameters get encrypted.
@@ -75,6 +76,20 @@ pub struct FlConfig {
     /// the Table-6 crypto-parameter sweep. Only valid with the native
     /// backend (the XLA artifacts are compiled for the default context).
     pub crypto_override: Option<(usize, usize, u32)>,
+    /// Aggregation engine: the seed's sequential loop or the sharded
+    /// streaming pipeline (`agg_engine`).
+    pub engine: Engine,
+    /// Worker shards for the pipeline engine.
+    pub shards: usize,
+    /// Aggregate-at-quorum: minimum arrivals before the straggler cutoff
+    /// applies (`None` = wait for every participant).
+    pub quorum: Option<usize>,
+    /// Simulated seconds after quorum during which stragglers still make it.
+    pub straggler_timeout: f64,
+    /// Registered virtual-client population; when set, each round's
+    /// participants are a cohort of `clients` sampled from this population
+    /// (lazily materialized — see `agg_engine::cohort`).
+    pub population: Option<u64>,
 }
 
 impl Default for FlConfig {
@@ -97,6 +112,11 @@ impl Default for FlConfig {
             bandwidth: crate::netsim::SINGLE_AWS_REGION,
             eval_every: 5,
             crypto_override: None,
+            engine: Engine::Sequential,
+            shards: 4,
+            quorum: None,
+            straggler_timeout: 5.0,
+            population: None,
         }
     }
 }
@@ -138,7 +158,24 @@ impl FlConfig {
             bandwidth,
             eval_every: args.get_parsed_or("eval-every", d.eval_every),
             crypto_override: None,
+            engine: Engine::parse(&args.get_or("engine", "sequential"))?,
+            shards: args.parsed("shards")?.unwrap_or(d.shards),
+            quorum: args.parsed("quorum")?,
+            straggler_timeout: args
+                .parsed("straggler-timeout")?
+                .unwrap_or(d.straggler_timeout),
+            population: args.parsed("population")?,
         })
+    }
+
+    /// The engine knobs in `agg_engine` form.
+    pub fn engine_config(&self) -> EngineConfig {
+        EngineConfig {
+            engine: self.engine,
+            shards: self.shards.max(1),
+            quorum: self.quorum,
+            straggler_timeout_secs: self.straggler_timeout,
+        }
     }
 }
 
@@ -165,6 +202,30 @@ mod tests {
         assert_eq!(c.dropout, 0.2);
         // untouched defaults
         assert_eq!(c.rounds, 20);
+        assert_eq!(c.engine, Engine::Sequential);
+        assert_eq!(c.quorum, None);
+        assert_eq!(c.population, None);
+    }
+
+    #[test]
+    fn engine_options_parse() {
+        let args = Args::parse_from(
+            "run --engine pipeline --shards 8 --quorum 12 --straggler-timeout 2.5 \
+             --population 1000000"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let c = FlConfig::from_args(&args).unwrap();
+        assert_eq!(c.engine, Engine::Pipeline);
+        assert_eq!(c.shards, 8);
+        assert_eq!(c.quorum, Some(12));
+        assert_eq!(c.straggler_timeout, 2.5);
+        assert_eq!(c.population, Some(1_000_000));
+        let ec = c.engine_config();
+        assert_eq!(ec.engine, Engine::Pipeline);
+        assert_eq!(ec.shards, 8);
+        assert_eq!(ec.quorum, Some(12));
+        assert_eq!(ec.straggler_timeout_secs, 2.5);
     }
 
     #[test]
@@ -174,6 +235,11 @@ mod tests {
             "run --backend gpu",
             "run --keys paillier",
             "run --bandwidth lan",
+            "run --engine gpu",
+            "run --quorum many",
+            "run --population everyone",
+            "run --shards 1O",
+            "run --straggler-timeout soon",
         ] {
             let args = Args::parse_from(bad.split_whitespace().map(String::from));
             assert!(FlConfig::from_args(&args).is_err(), "{bad}");

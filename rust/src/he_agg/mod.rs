@@ -8,6 +8,10 @@
 //! * [`native`] — pure-Rust aggregation (oracle + arbitrary-shape fallback).
 //! * [`xla`] — aggregation through the AOT Pallas kernel via PJRT (the
 //!   three-layer hot path).
+//!
+//! Both backends aggregate a whole round at once; the sharded streaming
+//! alternative that overlaps intake with aggregation lives in
+//! [`crate::agg_engine`] and produces bitwise-identical ciphertext limbs.
 
 pub mod mask;
 pub mod native;

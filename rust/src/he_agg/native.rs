@@ -26,12 +26,13 @@ pub fn aggregate(
         "heterogeneous update shapes"
     );
 
-    // Encrypted part: per ciphertext index, weighted-sum across clients.
+    // Encrypted part: per ciphertext index, weighted-sum across clients
+    // (borrowed inputs — no per-ciphertext clone on the hot path).
     let cts = (0..n_cts)
         .map(|c| {
-            let slice: Vec<crate::ckks::Ciphertext> =
-                updates.iter().map(|u| u.cts[c].clone()).collect();
-            ops::weighted_sum(&slice, alphas, params)
+            let slice: Vec<&crate::ckks::Ciphertext> =
+                updates.iter().map(|u| &u.cts[c]).collect();
+            ops::weighted_sum_refs(&slice, alphas, params)
         })
         .collect();
 

@@ -26,6 +26,15 @@ impl EncryptedUpdate {
     pub fn wire_bytes(&self, ctx: &CkksContext) -> usize {
         self.cts.len() * ctx.params.ciphertext_bytes() + 4 * self.plain.len()
     }
+
+    /// Serialized size of limb range [lo, hi) of every ciphertext under the
+    /// per-shard wire format (`ckks::serialize::ciphertext_shard_to_bytes`)
+    /// — what one aggregation shard receives when the transfer itself is
+    /// sharded. The plaintext remainder is accounted separately (it travels
+    /// with whichever shard owns its range).
+    pub fn limb_shard_wire_bytes(&self, ctx: &CkksContext, lo: usize, hi: usize) -> usize {
+        self.cts.len() * crate::ckks::serialize::shard_wire_bytes(&ctx.params, lo, hi)
+    }
 }
 
 /// Encoder/decoder bound to a crypto context.
@@ -212,6 +221,26 @@ mod tests {
         assert_eq!(full.wire_bytes(&codec.ctx), 8 * ct_bytes); // 2048/256 slots
         assert_eq!(none.wire_bytes(&codec.ctx), 2048 * 4);
         assert!(tenth.wire_bytes(&codec.ctx) < full.wire_bytes(&codec.ctx) / 4);
+    }
+
+    #[test]
+    fn limb_shard_bytes_tile_the_ciphertext_bytes() {
+        let ctx = small_ctx();
+        let codec = SelectiveCodec::new(ctx);
+        let mut rng = ChaChaRng::from_seed(9, 0);
+        let (pk, _) = codec.ctx.keygen(&mut rng);
+        let params = vec![0.25f32; 1024];
+        let upd = codec.encrypt_update(&params, &EncryptionMask::full(1024), &pk, &mut rng);
+        let l = codec.ctx.params.num_limbs();
+        // a 2-way limb partition carries the full ciphertext body; only the
+        // per-message headers differ between the two formats
+        let split = upd.limb_shard_wire_bytes(&codec.ctx, 0, l / 2)
+            + upd.limb_shard_wire_bytes(&codec.ctx, l / 2, l);
+        let full_ct_bytes = upd.wire_bytes(&codec.ctx) - 4 * upd.plain.len();
+        let header_delta = upd.cts.len()
+            * (2 * crate::ckks::serialize::shard_header_bytes()
+                - crate::ckks::params::serialize_header_bytes());
+        assert_eq!(split, full_ct_bytes + header_delta);
     }
 
     #[test]

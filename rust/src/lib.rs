@@ -23,6 +23,7 @@
 //! (encrypt only the top-`p` most privacy-sensitive parameters), lives in
 //! [`he_agg`]; the privacy-budget analysis of §3 lives in [`privacy`].
 
+pub mod agg_engine;
 pub mod attacks;
 pub mod baselines;
 pub mod bench_support;
@@ -136,7 +137,8 @@ pub fn dispatch(args: util::cli::Args) -> Result<()> {
         Some("bench") => {
             eprintln!("benchmarks are cargo bench targets; run e.g.:");
             eprintln!("  cargo bench --bench table4_models");
-            eprintln!("see DESIGN.md §5 for the table/figure → bench mapping");
+            eprintln!("  cargo bench --bench perf_hotpath   # incl. sequential-vs-pipeline shards");
+            eprintln!("see DESIGN.md §5 for the complete table/figure → bench mapping");
             Ok(())
         }
         Some(other) => anyhow::bail!(
@@ -151,7 +153,9 @@ pub fn dispatch(args: util::cli::Args) -> Result<()> {
             eprintln!("  run           run a federated task (--model --clients --rounds --ratio");
             eprintln!("                --selection topp|random|full|none --backend xla|native");
             eprintln!("                --keys single|threshold --bandwidth ib|sar|mar|aws200");
-            eprintln!("                --dropout P --dp-scale B ...)");
+            eprintln!("                --dropout P --dp-scale B");
+            eprintln!("                --engine sequential|pipeline --shards S --quorum K");
+            eprintln!("                --straggler-timeout SECS --population N ...)");
             eprintln!("  params        print the CKKS context (--n --limbs --scaling-bits)");
             eprintln!("  privacy-map   compute a model's sensitivity map summary (--model --ratio)");
             eprintln!("  bench         how to regenerate every paper table/figure");

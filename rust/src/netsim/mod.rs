@@ -32,25 +32,93 @@ impl Bandwidth {
     }
 }
 
+/// How concurrent client uploads are charged to round time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum UplinkMode {
+    /// Seed behavior: uploads sum serially (models a single-threaded ingest
+    /// link; overstates round time when clients upload simultaneously).
+    #[default]
+    Serial,
+    /// Per-round uplink time = max over concurrent transfers (clients push
+    /// over independent links; the round waits for the slowest upload).
+    Parallel,
+}
+
 /// Accumulates simulated communication time alongside real compute time.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct SimClock {
+    pub mode: UplinkMode,
     pub comm_secs: f64,
     pub bytes_up: u64,
     pub bytes_down: u64,
+    /// Longest single uplink transfer seen so far (Parallel accounting).
+    uplink_max_secs: f64,
 }
 
 impl SimClock {
+    /// Seed-compatible serial accounting.
+    pub fn serial() -> Self {
+        SimClock::default()
+    }
+
+    /// Parallel-uplink accounting (used for per-round `RoundMetrics`).
+    pub fn parallel() -> Self {
+        SimClock {
+            mode: UplinkMode::Parallel,
+            ..SimClock::default()
+        }
+    }
+
     /// Record a client→server upload.
     pub fn upload(&mut self, bytes: u64, bw: Bandwidth) {
         self.bytes_up += bytes;
-        self.comm_secs += bw.transfer_secs(bytes);
+        let t = bw.transfer_secs(bytes);
+        match self.mode {
+            UplinkMode::Serial => self.comm_secs += t,
+            UplinkMode::Parallel => {
+                // comm_secs tracks max(uplinks) + Σ downloads exactly.
+                if t > self.uplink_max_secs {
+                    self.comm_secs += t - self.uplink_max_secs;
+                    self.uplink_max_secs = t;
+                }
+            }
+        }
     }
+    /// Count upload bytes without charging link time — a transfer the round
+    /// never waited for (e.g. a straggler dropped by the quorum policy).
+    pub fn upload_bytes_only(&mut self, bytes: u64) {
+        self.bytes_up += bytes;
+    }
+
     /// Record a server→client download.
     pub fn download(&mut self, bytes: u64, bw: Bandwidth) {
         self.bytes_down += bytes;
         self.comm_secs += bw.transfer_secs(bytes);
     }
+
+    /// Server→clients broadcast: every recipient receives `bytes`. Serial
+    /// accounting sums the transfers; Parallel charges one transfer time
+    /// (independent links, all recipients download concurrently).
+    pub fn broadcast(&mut self, bytes: u64, recipients: usize, bw: Bandwidth) {
+        self.bytes_down += bytes * recipients as u64;
+        match self.mode {
+            UplinkMode::Serial => self.comm_secs += bw.transfer_secs(bytes) * recipients as f64,
+            UplinkMode::Parallel => self.comm_secs += bw.transfer_secs(bytes),
+        }
+    }
+}
+
+/// Completion times for concurrent uploads: client `i` starts at `starts[i]`
+/// (e.g. when its local training finishes) and pushes `bytes[i]` over an
+/// independent link, arriving at `starts[i] + bytes[i]/bw`. This is the
+/// arrival ordering the streaming aggregation engine consumes.
+pub fn concurrent_arrivals(bytes: &[u64], starts: &[f64], bw: Bandwidth) -> Vec<f64> {
+    assert_eq!(bytes.len(), starts.len());
+    bytes
+        .iter()
+        .zip(starts.iter())
+        .map(|(&b, &s)| s + bw.transfer_secs(b))
+        .collect()
 }
 
 #[cfg(test)]
@@ -73,5 +141,50 @@ mod tests {
         assert_eq!(c.bytes_up, 1000);
         assert_eq!(c.bytes_down, 2000);
         assert!((c.comm_secs - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parallel_uplink_takes_max_not_sum() {
+        let bw = Bandwidth { name: "t", bytes_per_sec: 1000.0 };
+        let mut serial = SimClock::serial();
+        let mut parallel = SimClock::parallel();
+        for clock in [&mut serial, &mut parallel] {
+            clock.upload(1000, bw); // 1 s
+            clock.upload(3000, bw); // 3 s
+            clock.upload(2000, bw); // 2 s
+            clock.download(500, bw); // 0.5 s
+        }
+        // serial: 1 + 3 + 2 + 0.5; parallel: max(1, 3, 2) + 0.5
+        assert!((serial.comm_secs - 6.5).abs() < 1e-12);
+        assert!((parallel.comm_secs - 3.5).abs() < 1e-12);
+        // byte counters are accounting-mode independent
+        assert_eq!(serial.bytes_up, parallel.bytes_up);
+        assert_eq!(serial.bytes_down, parallel.bytes_down);
+    }
+
+    #[test]
+    fn broadcast_and_bytes_only_accounting() {
+        let bw = Bandwidth { name: "t", bytes_per_sec: 1000.0 };
+        let mut serial = SimClock::serial();
+        let mut parallel = SimClock::parallel();
+        for clock in [&mut serial, &mut parallel] {
+            clock.broadcast(1000, 4, bw); // 1 s per recipient
+            clock.upload_bytes_only(5000); // dropped straggler: bytes, no time
+        }
+        assert!((serial.comm_secs - 4.0).abs() < 1e-12);
+        assert!((parallel.comm_secs - 1.0).abs() < 1e-12);
+        assert_eq!(serial.bytes_down, 4000);
+        assert_eq!(parallel.bytes_down, 4000);
+        assert_eq!(serial.bytes_up, 5000);
+    }
+
+    #[test]
+    fn concurrent_arrival_ordering() {
+        let bw = Bandwidth { name: "t", bytes_per_sec: 100.0 };
+        // client 1 starts later but uploads less; client 0 arrives last
+        let arr = concurrent_arrivals(&[500, 100], &[0.0, 2.0], bw);
+        assert!((arr[0] - 5.0).abs() < 1e-12);
+        assert!((arr[1] - 3.0).abs() < 1e-12);
+        assert!(arr[1] < arr[0]);
     }
 }

@@ -65,6 +65,22 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// Get an *optional* parsed option, erroring on malformed values instead
+    /// of silently falling back (for options like `--quorum` where "unset"
+    /// and "invalid" must not be conflated).
+    pub fn parsed<T: std::str::FromStr>(&self, key: &str) -> anyhow::Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("invalid --{key} '{v}': {e}")),
+        }
+    }
+
     /// Whether a bare `--flag` was passed.
     pub fn flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
@@ -115,5 +131,14 @@ mod tests {
     fn trailing_flag() {
         let a = parse("--dry-run");
         assert!(a.flag("dry-run"));
+    }
+
+    #[test]
+    fn parsed_distinguishes_unset_from_invalid() {
+        let a = parse("run --quorum 12");
+        assert_eq!(a.parsed::<usize>("quorum").unwrap(), Some(12));
+        assert_eq!(a.parsed::<usize>("population").unwrap(), None);
+        let b = parse("run --quorum twelve");
+        assert!(b.parsed::<usize>("quorum").is_err());
     }
 }

@@ -1,0 +1,142 @@
+//! Offline drop-in for the subset of the `anyhow` API this workspace uses:
+//! [`Error`], [`Result`], and the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! The build image has no crates.io access, so this path dependency keeps
+//! `cargo build` fully self-contained. The semantics match upstream for the
+//! covered surface: any `std::error::Error + Send + Sync + 'static` converts
+//! via `?`, and `ensure!` supports both the bare-condition and formatted
+//! forms.
+
+use std::fmt;
+
+/// A type-erased error: a display message plus an optional source it was
+/// converted from.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Construct from anything displayable (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error {
+            msg: message.to_string(),
+            source: None,
+        }
+    }
+
+    /// The root-cause chain is flattened into the display message; expose
+    /// the immediate source when one exists.
+    pub fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        self.source.as_deref().map(|e| e as _)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `fn main() -> anyhow::Result<()>` prints this on error exit.
+        write!(f, "{}", self.msg)?;
+        let mut src = self.source();
+        while let Some(e) = src {
+            write!(f, "\n\ncaused by: {e}")?;
+            src = e.source();
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`; that is
+// what makes this blanket conversion coherent (mirrors upstream anyhow).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error {
+            msg: e.to_string(),
+            source: Some(Box::new(e)),
+        }
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Create an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] if the condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(e.to_string(), "missing");
+        assert!(e.source().is_some());
+    }
+
+    #[test]
+    fn macros_cover_both_forms() {
+        fn checked(v: usize) -> Result<usize> {
+            ensure!(v > 1);
+            ensure!(v < 10, "v too large: {v}");
+            if v == 5 {
+                bail!("five is right out");
+            }
+            Ok(v)
+        }
+        assert_eq!(checked(3).unwrap(), 3);
+        assert!(checked(0)
+            .unwrap_err()
+            .to_string()
+            .contains("condition failed"));
+        assert_eq!(checked(99).unwrap_err().to_string(), "v too large: 99");
+        assert_eq!(checked(5).unwrap_err().to_string(), "five is right out");
+    }
+
+    #[test]
+    fn collect_into_result() {
+        let ok: Result<Vec<usize>> = (0..3).map(Ok).collect();
+        assert_eq!(ok.unwrap(), vec![0, 1, 2]);
+    }
+}

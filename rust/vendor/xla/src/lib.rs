@@ -1,0 +1,128 @@
+//! Offline stub of the `xla` PJRT binding crate.
+//!
+//! The real crate links the PJRT CPU plugin and executes the AOT HLO
+//! artifacts produced by `python/compile/aot.py`. This build image has no
+//! crates.io access and no PJRT shared library, so this stub provides the
+//! exact API surface `fedml_he::runtime` compiles against while every
+//! runtime entry point returns an error. All artifact-dependent tests and
+//! code paths are already gated on `artifacts/manifest.json` existing, so
+//! they skip cleanly under the stub; the pure-Rust (`--backend native`) and
+//! pipeline-engine paths are unaffected.
+//!
+//! To light up the PJRT path, replace this directory with the real binding
+//! (same package name) — no source change in the main crate is needed.
+
+use std::fmt;
+
+/// Error type for every stubbed operation.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what} requires the real PJRT binding (offline stub built; \
+         artifact-gated paths are disabled)"
+    )))
+}
+
+/// A host-side literal (stub: carries no data). Generic parameters are
+/// deliberately unconstrained so call-site inference can never fail against
+/// the stub.
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<S>(_data: S) -> Literal {
+        Literal
+    }
+
+    pub fn scalar(_v: f32) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("Literal::reshape")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device-side buffer handle (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// PJRT client (stub: construction fails, so `Runtime::new` reports a clear
+/// error instead of failing deep inside a graph call).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_errors_are_descriptive() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(e.to_string().contains("PJRT"));
+        let data = [1.0f32];
+        let slice: &[f32] = &data;
+        // double-reference call shape, as the runtime uses it
+        assert!(Literal::vec1(&slice).to_vec::<f32>().is_err());
+    }
+}
