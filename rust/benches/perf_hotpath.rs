@@ -70,6 +70,135 @@ fn main() {
     ]);
     t.print();
 
+    // §Perf — mask layout: interval runs vs the seed index-list layout at
+    // ResNet-50 and BERT scale (layer-structured masks, p = 0.1). Gather =
+    // compact a flat parameter vector into (encrypt staging, plaintext
+    // remainder); scatter = the inverse merge. No HE inside the timed loop —
+    // this isolates the layout's memory-traffic cost, plus the mask wire
+    // bytes of the Algorithm-1 round-1 distribution message.
+    {
+        let mut t = Table::new(
+            "§Perf — mask gather/scatter + wire bytes (p=0.1, layer-granularity)",
+            &["Model", "Layout", "Gather", "Scatter", "Mask wire"],
+        );
+        for name in ["resnet50", "bert"] {
+            let info = fedml_he::fl::model_meta::lookup(name).unwrap();
+            let total = info.params as usize;
+            let spans = info.layer_spans();
+            let scores: Vec<f32> =
+                (0..spans.len()).map(|i| ((i * 37) % 101) as f32).collect();
+            let mask =
+                fedml_he::he_agg::EncryptionMask::from_layer_scores(total, &scores, &spans, 0.1);
+            let k = mask.encrypted_count();
+            let params: Vec<f32> = (0..total).map(|i| ((i & 0xffff) as f32) * 1e-4).collect();
+            // the seed layout: one sorted u32 per encrypted parameter
+            let indices: Vec<u32> = mask.encrypted.iter_indices().map(|i| i as u32).collect();
+
+            // index-list gather (per-index indirection; dense bool view for
+            // the plaintext complement — the seed encrypt path)
+            let idx_gather_s = time_iters(3, || {
+                let enc: Vec<f64> =
+                    indices.iter().map(|&i| params[i as usize] as f64).collect();
+                let mut dense = vec![false; total];
+                for &i in &indices {
+                    dense[i as usize] = true;
+                }
+                let plain: Vec<f32> = params
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(i, &v)| (!dense[i]).then_some(v))
+                    .collect();
+                std::hint::black_box((enc, plain));
+            });
+            // run gather (contiguous segment copies — the new encrypt path)
+            let run_gather_s = time_iters(3, || {
+                let mut enc: Vec<f64> = Vec::with_capacity(k);
+                for r in mask.runs() {
+                    enc.extend(params[r.lo..r.hi].iter().map(|&v| v as f64));
+                }
+                let plain_layout = mask.plaintext_layout();
+                let mut plain: Vec<f32> = Vec::with_capacity(total - k);
+                for r in plain_layout.runs() {
+                    plain.extend_from_slice(&params[r.lo..r.hi]);
+                }
+                std::hint::black_box((enc, plain));
+            });
+
+            // compacted buffers for the scatter direction
+            let mut enc_c: Vec<f64> = Vec::with_capacity(k);
+            let mut plain_c: Vec<f32> = Vec::with_capacity(total - k);
+            for r in mask.runs() {
+                enc_c.extend(params[r.lo..r.hi].iter().map(|&v| v as f64));
+            }
+            for r in mask.plaintext_layout().runs() {
+                plain_c.extend_from_slice(&params[r.lo..r.hi]);
+            }
+
+            // index-list scatter (the seed decrypt path: recompute the
+            // plaintext index list, then per-index writes)
+            let idx_scatter_s = time_iters(3, || {
+                let mut out = vec![0.0f32; total];
+                let mut dense = vec![false; total];
+                for &i in &indices {
+                    dense[i as usize] = true;
+                }
+                let mut slot = 0usize;
+                for (i, d) in dense.iter().enumerate() {
+                    if !*d {
+                        out[i] = plain_c[slot];
+                        slot += 1;
+                    }
+                }
+                for (cursor, &i) in indices.iter().enumerate() {
+                    out[i as usize] = enc_c[cursor] as f32;
+                }
+                std::hint::black_box(out);
+            });
+            // run scatter (segment memcpy + widening segment loop)
+            let run_scatter_s = time_iters(3, || {
+                let mut out = vec![0.0f32; total];
+                let mut off = 0usize;
+                for r in mask.plaintext_layout().runs() {
+                    out[r.lo..r.hi].copy_from_slice(&plain_c[off..off + r.len()]);
+                    off += r.len();
+                }
+                let mut off = 0usize;
+                for r in mask.runs() {
+                    for (d, &s) in out[r.lo..r.hi].iter_mut().zip(enc_c[off..off + r.len()].iter())
+                    {
+                        *d = s as f32;
+                    }
+                    off += r.len();
+                }
+                std::hint::black_box(out);
+            });
+
+            let seed_wire = 8 + 4 * k;
+            t.row(vec![
+                name.into(),
+                "index list (seed)".into(),
+                fedml_he::util::human_secs(idx_gather_s),
+                fedml_he::util::human_secs(idx_scatter_s),
+                fedml_he::util::human_bytes(seed_wire as u64),
+            ]);
+            t.row(vec![
+                name.into(),
+                format!("runs ({})", mask.encrypted.n_runs()),
+                fedml_he::util::human_secs(run_gather_s),
+                fedml_he::util::human_secs(run_scatter_s),
+                fedml_he::util::human_bytes(mask.to_bytes().len() as u64),
+            ]);
+            println!(
+                "{name}: run-layout gather speedup {:.2}x, scatter speedup {:.2}x, \
+                 wire {}x smaller",
+                idx_gather_s / run_gather_s,
+                idx_scatter_s / run_scatter_s,
+                seed_wire / mask.to_bytes().len().max(1)
+            );
+        }
+        t.print();
+    }
+
     // §Perf — sequential engine vs sharded streaming pipeline on the
     // ResNet-50-sized workload (25.56M params = 6241 ciphertexts at batch
     // 4096). A 24-ciphertext sample per engine is measured and extrapolated

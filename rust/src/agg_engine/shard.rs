@@ -10,13 +10,22 @@
 //! accumulator, so up to `2^31` clients fold in before any reduction is
 //! needed; the single final reduction makes the result independent of
 //! arrival order — bitwise identical to the sequential kernel.
+//!
+//! The plaintext (selective-encryption remainder) vector is split into one
+//! contiguous compacted range per shard. When the round's encryption mask is
+//! known, [`ShardPlan::new_run_aligned`] snaps those boundaries to nearby
+//! mask-complement run ends (splitting only runs longer than a balanced
+//! share), so shards own whole runs wherever alignment is cheap; the f64
+//! fold itself is positionally identical either way, keeping the pipeline
+//! bitwise equal to the sequential path for any cut placement.
 
 use crate::ckks::modarith::Barrett;
 use crate::ckks::CkksParams;
+use crate::he_agg::mask::Run;
 use crate::he_agg::EncryptedUpdate;
 
 /// Static layout of one aggregation round over `n_shards` workers.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ShardPlan {
     pub n_shards: usize,
     /// Ciphertexts per update (all updates in a round have the same shape).
@@ -25,17 +34,83 @@ pub struct ShardPlan {
     pub n_limbs: usize,
     /// Length of the plaintext (selective-encryption remainder) vector.
     pub plain_len: usize,
+    /// Shard boundaries in the compacted plaintext space:
+    /// `plain_cuts[s]..plain_cuts[s+1]` is shard `s`'s slice. Monotone, with
+    /// `plain_cuts[0] == 0` and `plain_cuts[n_shards] == plain_len`.
+    plain_cuts: Vec<usize>,
 }
 
 impl ShardPlan {
+    /// Even split of the plaintext remainder (mask layout unknown).
     pub fn new(n_shards: usize, n_cts: usize, n_limbs: usize, plain_len: usize) -> Self {
         assert!(n_shards >= 1, "at least one shard");
         assert!(n_limbs >= 1, "at least one limb");
+        let per = plain_len.div_ceil(n_shards).max(1);
+        let plain_cuts = (0..=n_shards).map(|s| (s * per).min(plain_len)).collect();
         ShardPlan {
             n_shards,
             n_cts,
             n_limbs,
             plain_len,
+            plain_cuts,
+        }
+    }
+
+    /// Run-aligned split: `plain_runs` are the mask-complement runs whose
+    /// segments the compacted plaintext vector concatenates. Each shard cut
+    /// snaps to the run boundary nearest its balanced target when that stays
+    /// within one balanced share of it — shards then own whole runs and
+    /// their scatter-back is pure segment copies. A run longer than a share
+    /// (e.g. the single full-range run of an empty mask) is split at the
+    /// balanced target instead: alignment is an optimization, never a reason
+    /// to serialize the fold onto one shard.
+    pub fn new_run_aligned(
+        n_shards: usize,
+        n_cts: usize,
+        n_limbs: usize,
+        plain_runs: &[Run],
+    ) -> Self {
+        assert!(n_shards >= 1, "at least one shard");
+        assert!(n_limbs >= 1, "at least one limb");
+        // Cumulative compacted end positions, one per run.
+        let mut ends = Vec::with_capacity(plain_runs.len());
+        let mut acc = 0usize;
+        for r in plain_runs {
+            acc += r.len();
+            ends.push(acc);
+        }
+        let plain_len = acc;
+        let per = plain_len.div_ceil(n_shards).max(1);
+        let mut plain_cuts = vec![0usize; n_shards + 1];
+        for s in 1..n_shards {
+            let target = plain_len * s / n_shards;
+            // nearest run boundaries on either side of the target
+            let (before, after) = match ends.binary_search(&target) {
+                Ok(i) => (ends[i], ends[i]),
+                Err(i) => (
+                    if i > 0 { ends[i - 1] } else { 0 },
+                    if i < ends.len() { ends[i] } else { plain_len },
+                ),
+            };
+            let snapped = if after - target <= target - before {
+                after
+            } else {
+                before
+            };
+            let cut = if snapped.abs_diff(target) <= per {
+                snapped
+            } else {
+                target
+            };
+            plain_cuts[s] = cut.max(plain_cuts[s - 1]);
+        }
+        plain_cuts[n_shards] = plain_len;
+        ShardPlan {
+            n_shards,
+            n_cts,
+            n_limbs,
+            plain_len,
+            plain_cuts,
         }
     }
 
@@ -54,13 +129,11 @@ impl ShardPlan {
             .collect()
     }
 
-    /// Contiguous slice of the plaintext remainder owned by `shard`.
+    /// Contiguous slice of the compacted plaintext remainder owned by
+    /// `shard`.
     pub fn plain_range(&self, shard: usize) -> std::ops::Range<usize> {
         assert!(shard < self.n_shards);
-        let per = self.plain_len.div_ceil(self.n_shards).max(1);
-        let lo = (shard * per).min(self.plain_len);
-        let hi = ((shard + 1) * per).min(self.plain_len);
-        lo..hi
+        self.plain_cuts[shard]..self.plain_cuts[shard + 1]
     }
 }
 
@@ -87,12 +160,12 @@ pub struct ShardAccumulator {
 }
 
 impl ShardAccumulator {
-    pub fn new(plan: ShardPlan, shard: usize, params: &CkksParams) -> Self {
+    pub fn new(plan: &ShardPlan, shard: usize, params: &CkksParams) -> Self {
         assert_eq!(plan.n_limbs, params.num_limbs(), "plan/params limb mismatch");
         let units = plan.units(shard);
         let n = params.n;
         ShardAccumulator {
-            plan,
+            plan: plan.clone(),
             reducers: params.moduli.iter().map(|&q| Barrett::new(q)).collect(),
             acc_c0: vec![vec![0u64; n]; units.len()],
             acc_c1: vec![vec![0u64; n]; units.len()],
@@ -184,6 +257,74 @@ mod tests {
     }
 
     #[test]
+    fn run_aligned_cuts_snap_or_split_within_bounds() {
+        // adversarial complement layouts: singleton runs, one full-range run
+        // (empty mask), long blocks, and a mix whose balanced targets fall
+        // mid-run
+        let layouts: Vec<Vec<Run>> = vec![
+            (0..50).map(|i| Run { lo: 2 * i, hi: 2 * i + 1 }).collect(),
+            vec![Run { lo: 0, hi: 1000 }],
+            vec![
+                Run { lo: 0, hi: 7 },
+                Run { lo: 100, hi: 530 },
+                Run { lo: 600, hi: 601 },
+                Run { lo: 700, hi: 950 },
+            ],
+            Vec::new(),
+        ];
+        for runs in &layouts {
+            let mut ends = Vec::new();
+            let mut acc = 0usize;
+            for r in runs {
+                acc += r.len();
+                ends.push(acc);
+            }
+            for n_shards in [1usize, 2, 3, 4, 8, 13] {
+                let plan = ShardPlan::new_run_aligned(n_shards, 3, 4, runs);
+                assert_eq!(plan.plain_len, acc);
+                let per = acc.div_ceil(n_shards).max(1);
+                let mut covered = 0usize;
+                let mut prev_cut = 0usize;
+                for s in 0..n_shards {
+                    let r = plan.plain_range(s);
+                    assert_eq!(r.start, covered, "shards={n_shards}");
+                    covered = r.end;
+                    // balance: no shard hoards the fold (≤ 3 balanced shares)
+                    assert!(
+                        r.len() <= 3 * per,
+                        "shards={n_shards}: shard {s} owns {} of {acc}",
+                        r.len()
+                    );
+                    // every interior cut is a run end, the balanced-target
+                    // fallback for an oversized run, or a clamped repeat
+                    if s > 0 {
+                        let b = r.start;
+                        let target = acc * s / n_shards;
+                        assert!(
+                            b == 0
+                                || b == acc
+                                || ends.contains(&b)
+                                || b == target
+                                || b == prev_cut,
+                            "shards={n_shards}: cut {b} is neither aligned nor balanced"
+                        );
+                    }
+                    prev_cut = r.start;
+                }
+                assert_eq!(covered, acc);
+            }
+            // singleton-run layouts align exactly (snap is always in bound)
+        }
+        // the empty-mask complement (one full-range run) must still
+        // parallelize: the fold is split at balanced targets, not serialized
+        let plan = ShardPlan::new_run_aligned(8, 3, 4, &[Run { lo: 0, hi: 1000 }]);
+        for s in 0..8 {
+            let r = plan.plain_range(s);
+            assert!(r.len() <= 250, "shard {s} owns {} of 1000", r.len());
+        }
+    }
+
+    #[test]
     fn sharded_sums_match_sequential_kernel_bitwise() {
         let ctx = CkksContext::new(256, 4, 40).unwrap();
         let codec = SelectiveCodec::new(ctx);
@@ -211,7 +352,7 @@ mod tests {
         for n_shards in [1usize, 2, 4, 8] {
             let plan = ShardPlan::new(n_shards, updates[0].cts.len(), params.num_limbs(), 0);
             let mut accs: Vec<ShardAccumulator> = (0..n_shards)
-                .map(|s| ShardAccumulator::new(plan, s, params))
+                .map(|s| ShardAccumulator::new(&plan, s, params))
                 .collect();
             // absorb in a scrambled arrival order
             for &i in &[2usize, 0, 1] {
@@ -242,7 +383,7 @@ mod tests {
         let u2 = codec.encrypt_update(&vec![1.0; 300], &EncryptionMask::full(300), &pk, &mut rng);
         let params = &codec.ctx.params;
         let plan = ShardPlan::new(2, u1.cts.len(), params.num_limbs(), 0);
-        let mut acc = ShardAccumulator::new(plan, 0, params);
+        let mut acc = ShardAccumulator::new(&plan, 0, params);
         let w = params.encode_weight(0.5);
         acc.absorb(&u1, &w);
         acc.absorb(&u2, &w);

@@ -24,7 +24,7 @@
 use super::shard::{ShardAccumulator, ShardCtSums, ShardPlan};
 use super::EngineConfig;
 use crate::ckks::{Ciphertext, CkksParams, RnsPoly};
-use crate::he_agg::EncryptedUpdate;
+use crate::he_agg::{EncryptedUpdate, EncryptionMask};
 use std::sync::mpsc;
 use std::sync::Arc;
 
@@ -90,10 +90,27 @@ impl<'a> StreamingAggregator<'a> {
 
     /// Run one round: admit `arrivals` in simulated-arrival order, apply the
     /// quorum/straggler policy, aggregate across the shard pool, and return
-    /// the aggregate plus round statistics.
+    /// the aggregate plus round statistics. Plaintext-remainder shard
+    /// boundaries are an even split; use
+    /// [`StreamingAggregator::aggregate_with_mask`] when the round's
+    /// encryption mask is known to get run-aligned boundaries.
     pub fn aggregate(
         &self,
+        arrivals: Vec<Arrival>,
+    ) -> anyhow::Result<(EncryptedUpdate, StreamStats)> {
+        self.aggregate_with_mask(arrivals, None)
+    }
+
+    /// [`StreamingAggregator::aggregate`] with the round's shared encryption
+    /// mask: the plaintext-remainder shard plan is expressed in run space
+    /// (cuts snap to nearby mask-complement run boundaries, splitting only
+    /// runs longer than a balanced share), so shards own whole runs wherever
+    /// alignment is cheap. Bitwise identical to the even-split plan — the
+    /// f64 fold is positional either way.
+    pub fn aggregate_with_mask(
+        &self,
         mut arrivals: Vec<Arrival>,
+        mask: Option<&EncryptionMask>,
     ) -> anyhow::Result<(EncryptedUpdate, StreamStats)> {
         anyhow::ensure!(!arrivals.is_empty(), "streaming round with no arrivals");
         arrivals.sort_by(|a, b| {
@@ -135,12 +152,29 @@ impl<'a> StreamingAggregator<'a> {
                 .fold(0.0f64, f64::max),
         };
 
-        let plan = ShardPlan::new(
-            self.cfg.shards.max(1),
-            n_cts,
-            self.params.num_limbs(),
-            n_plain,
-        );
+        let plan = match mask {
+            Some(m) => {
+                anyhow::ensure!(m.total() == total, "mask/update total mismatch");
+                let plain_layout = m.plaintext_layout();
+                anyhow::ensure!(
+                    plain_layout.count() == n_plain,
+                    "mask complement ({}) does not match plaintext remainder ({n_plain})",
+                    plain_layout.count()
+                );
+                ShardPlan::new_run_aligned(
+                    self.cfg.shards.max(1),
+                    n_cts,
+                    self.params.num_limbs(),
+                    plain_layout.runs(),
+                )
+            }
+            None => ShardPlan::new(
+                self.cfg.shards.max(1),
+                n_cts,
+                self.params.num_limbs(),
+                n_plain,
+            ),
+        };
         let params = self.params;
         let outputs: Vec<ShardOutput> = std::thread::scope(|scope| {
             let mut senders = Vec::with_capacity(plan.n_shards);
@@ -148,7 +182,8 @@ impl<'a> StreamingAggregator<'a> {
             for shard in 0..plan.n_shards {
                 let (tx, rx) = mpsc::sync_channel::<WorkItem>(INTAKE_DEPTH);
                 senders.push(tx);
-                handles.push(scope.spawn(move || shard_worker(params, plan, shard, rx)));
+                let worker_plan = plan.clone();
+                handles.push(scope.spawn(move || shard_worker(params, worker_plan, shard, rx)));
             }
             // Intake: feed accepted arrivals in arrival order. The bounded
             // channels backpressure the intake, so aggregation of early
@@ -214,7 +249,7 @@ fn shard_worker(
     shard: usize,
     rx: mpsc::Receiver<WorkItem>,
 ) -> ShardOutput {
-    let mut acc = ShardAccumulator::new(plan, shard, params);
+    let mut acc = ShardAccumulator::new(&plan, shard, params);
     let mut buffered: Vec<WorkItem> = Vec::new();
     while let Ok(item) = rx.recv() {
         acc.absorb(&item.update, &item.weight);
@@ -316,6 +351,46 @@ mod tests {
             // plaintext remainder is bitwise identical
             assert_eq!(got.plain, oracle.plain, "shards={shards}");
         }
+    }
+
+    #[test]
+    fn run_aligned_plan_is_bitwise_identical_to_even_split() {
+        // aggregate_with_mask snaps plaintext cuts to mask-complement run
+        // boundaries; the result must stay bitwise equal to both the
+        // even-split pipeline and the sequential oracle
+        let (codec, updates, alphas, mask) = fixture(5, 1100, 0.35);
+        let oracle = native::aggregate(&updates, &alphas, &codec.ctx.params);
+        let times: Vec<f64> = (0..5).map(|i| (i * 7 % 5) as f64).collect();
+        for shards in [1usize, 3, 4, 8] {
+            let cfg = EngineConfig {
+                engine: Engine::Pipeline,
+                shards,
+                quorum: None,
+                straggler_timeout_secs: 5.0,
+            };
+            let engine = StreamingAggregator::new(&codec.ctx.params, cfg);
+            let (got, stats) = engine
+                .aggregate_with_mask(arrivals_of(&updates, &alphas, &times), Some(&mask))
+                .unwrap();
+            assert_eq!(stats.accepted, 5);
+            for (a, b) in got.cts.iter().zip(oracle.cts.iter()) {
+                assert_eq!(a.c0, b.c0, "shards={shards}");
+                assert_eq!(a.c1, b.c1, "shards={shards}");
+            }
+            assert_eq!(got.plain, oracle.plain, "shards={shards}");
+        }
+        // a mask whose total disagrees with the updates is rejected
+        let cfg = EngineConfig {
+            engine: Engine::Pipeline,
+            shards: 2,
+            quorum: None,
+            straggler_timeout_secs: 5.0,
+        };
+        let engine = StreamingAggregator::new(&codec.ctx.params, cfg);
+        let bad = EncryptionMask::full(7);
+        assert!(engine
+            .aggregate_with_mask(arrivals_of(&updates, &alphas, &times), Some(&bad))
+            .is_err());
     }
 
     #[test]

@@ -95,13 +95,11 @@ mod tests {
     #[test]
     fn masking_embedding_rows_blocks_recovery() {
         let g = grad_with_tokens(&[2, 7, 11]);
-        // protect the embedding region entirely
-        let mut enc: Vec<u32> = (0..(VOCAB * D) as u32).collect();
-        enc.sort_unstable();
-        let mask = EncryptionMask {
-            total: g.len(),
-            encrypted: enc,
-        };
+        // protect the embedding region entirely (one run)
+        let mask = EncryptionMask::from_runs(
+            g.len(),
+            vec![crate::he_agg::mask::Run { lo: 0, hi: VOCAB * D }],
+        );
         let rec = recover_tokens(&g, &mask, VOCAB, D, 1e-3);
         assert!(rec.is_empty());
         assert_eq!(score_recovery(&rec, &[2, 7, 11]).recall, 0.0);
@@ -111,11 +109,10 @@ mod tests {
     fn partial_masking_partially_protects() {
         let g = grad_with_tokens(&[2, 7, 11]);
         // protect only token 7's row
-        let enc: Vec<u32> = (7 * D..8 * D).map(|i| i as u32).collect();
-        let mask = EncryptionMask {
-            total: g.len(),
-            encrypted: enc,
-        };
+        let mask = EncryptionMask::from_runs(
+            g.len(),
+            vec![crate::he_agg::mask::Run { lo: 7 * D, hi: 8 * D }],
+        );
         let rec = recover_tokens(&g, &mask, VOCAB, D, 1e-3);
         assert_eq!(rec, vec![2, 11]);
         let s = score_recovery(&rec, &[2, 7, 11]);

@@ -84,6 +84,18 @@ impl<'a> FlClient<'a> {
         self.trainer.sensitivity(params, &self.data)
     }
 
+    /// Per-layer sensitivity scores (mean |Δf| over each span) for
+    /// layer-granularity mask agreement: the client pre-aggregates locally so
+    /// the encrypted agreement message is O(layers), not O(params).
+    pub fn layer_sensitivity(
+        &mut self,
+        params: &[f32],
+        spans: &[std::ops::Range<usize>],
+    ) -> anyhow::Result<Vec<f32>> {
+        let s = self.sensitivity(params)?;
+        Ok(crate::he_agg::mask::layer_mean_scores(&s, spans))
+    }
+
     /// Local training: `steps` SGD steps starting from the global model.
     pub fn train(&mut self, global: &[f32], steps: usize, lr: f32) -> anyhow::Result<(Vec<f32>, f32)> {
         self.trainer.train(global, &self.data, steps, lr)

@@ -28,6 +28,30 @@ impl Selection {
     }
 }
 
+/// Granularity of the selective-encryption mask.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MaskGranularity {
+    /// Per-parameter top-p selection (the paper's headline mechanism). The
+    /// mask-agreement stage aggregates an O(params) sensitivity map.
+    Param,
+    /// Whole-layer selection: clients aggregate sensitivity per layer, the
+    /// server picks whole layers by mean score. The practical deployment
+    /// mode — the agreement message and the mask both shrink to O(layers).
+    Layer,
+}
+
+impl MaskGranularity {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "param" | "parameter" => MaskGranularity::Param,
+            "layer" => MaskGranularity::Layer,
+            other => anyhow::bail!(
+                "unknown mask granularity '{other}' (expected: param | layer)"
+            ),
+        })
+    }
+}
+
 /// Aggregation backend.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Backend {
@@ -57,6 +81,9 @@ pub struct FlConfig {
     /// Selective-encryption ratio p ∈ [0, 1].
     pub ratio: f64,
     pub selection: Selection,
+    /// Mask granularity for top-p selection (`--mask-granularity
+    /// {param,layer}`).
+    pub mask_granularity: MaskGranularity,
     pub backend: Backend,
     pub key_mode: KeyMode,
     /// Per-round client dropout probability.
@@ -102,6 +129,7 @@ impl Default for FlConfig {
             lr: 0.05,
             ratio: 0.1,
             selection: Selection::TopP,
+            mask_granularity: MaskGranularity::Param,
             backend: Backend::Xla,
             key_mode: KeyMode::SingleKey,
             dropout: 0.0,
@@ -140,6 +168,9 @@ impl FlConfig {
             lr: args.get_parsed_or("lr", d.lr),
             ratio: args.get_parsed_or("ratio", d.ratio),
             selection: Selection::parse(&args.get_or("selection", "topp"))?,
+            mask_granularity: MaskGranularity::parse(
+                &args.get_or("mask-granularity", "param"),
+            )?,
             backend: match args.get_or("backend", "xla").as_str() {
                 "xla" => Backend::Xla,
                 "native" => Backend::Native,
@@ -205,6 +236,21 @@ mod tests {
         assert_eq!(c.engine, Engine::Sequential);
         assert_eq!(c.quorum, None);
         assert_eq!(c.population, None);
+        assert_eq!(c.mask_granularity, MaskGranularity::Param);
+    }
+
+    #[test]
+    fn mask_granularity_parses() {
+        let args = Args::parse_from(
+            "run --mask-granularity layer"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let c = FlConfig::from_args(&args).unwrap();
+        assert_eq!(c.mask_granularity, MaskGranularity::Layer);
+        assert_eq!(MaskGranularity::parse("param").unwrap(), MaskGranularity::Param);
+        assert_eq!(MaskGranularity::parse("parameter").unwrap(), MaskGranularity::Param);
+        assert!(MaskGranularity::parse("tensor").is_err());
     }
 
     #[test]
@@ -240,6 +286,7 @@ mod tests {
             "run --population everyone",
             "run --shards 1O",
             "run --straggler-timeout soon",
+            "run --mask-granularity tensor",
         ] {
             let args = Args::parse_from(bad.split_whitespace().map(String::from));
             assert!(FlConfig::from_args(&args).is_err(), "{bad}");

@@ -4,7 +4,7 @@
 //! Figs. 8/14 and the deployment-platform monitoring of Appendix C).
 
 use super::client::FlClient;
-use super::config::{Backend, FlConfig, Selection};
+use super::config::{Backend, FlConfig, MaskGranularity, Selection};
 use super::key_authority::{self, KeyMaterial};
 use crate::agg_engine::{Arrival, CohortScheduler, Engine, Population, StreamingAggregator};
 use crate::ckks::CkksContext;
@@ -53,6 +53,17 @@ pub struct FlReport {
     pub mask_ratio: f64,
     pub encrypted_params: usize,
     pub total_params: usize,
+    /// Interval-run count of the agreed mask (its O(·) wire/memory factor).
+    pub mask_runs: usize,
+    /// Serialized size of the Algorithm-1 round-1 mask-distribution message
+    /// (run-delta format).
+    pub mask_bytes: u64,
+    /// Client→server bytes of the mask-agreement stage (encrypted
+    /// sensitivity maps; O(layers) ciphertexts under layer granularity).
+    pub mask_upload_bytes: u64,
+    /// Simulated comm time of the mask-agreement stage (sensitivity-map
+    /// uplinks + mask broadcast), included in `mask_agreement_secs`.
+    pub mask_comm_secs: f64,
     pub keygen_secs: f64,
     pub mask_agreement_secs: f64,
     pub rounds: Vec<RoundMetrics>,
@@ -83,6 +94,10 @@ impl FlReport {
             ("mask_ratio", self.mask_ratio.into()),
             ("encrypted_params", self.encrypted_params.into()),
             ("total_params", self.total_params.into()),
+            ("mask_runs", self.mask_runs.into()),
+            ("mask_bytes", self.mask_bytes.into()),
+            ("mask_upload_bytes", self.mask_upload_bytes.into()),
+            ("mask_comm_secs", self.mask_comm_secs.into()),
             ("keygen_secs", self.keygen_secs.into()),
             ("mask_agreement_secs", self.mask_agreement_secs.into()),
             (
@@ -279,10 +294,14 @@ impl<'a> FlServer<'a> {
 
         // ------------------------------------------------------------------
         // Stage 2 — Encryption mask calculation (§2.4): clients compute local
-        // sensitivity maps, encrypt them, the server aggregates them
-        // homomorphically, the key holder decrypts the *aggregate* only, and
-        // the top-p mask becomes shared configuration.
+        // sensitivity maps (per parameter, or pre-aggregated per layer under
+        // `--mask-granularity layer`), encrypt them, the server aggregates
+        // them homomorphically, the key holder decrypts the *aggregate* only,
+        // and the agreed mask becomes shared configuration. The stage's wire
+        // traffic — encrypted map uplinks plus the run-delta mask broadcast
+        // of Algorithm 1 round 1 — is charged to `mask_agreement_secs`.
         let t = Instant::now();
+        let mut mask_clock = SimClock::parallel();
         let mask = match cfg.selection {
             Selection::Full => EncryptionMask::full(total_params),
             Selection::None => EncryptionMask::empty(total_params),
@@ -291,25 +310,51 @@ impl<'a> FlServer<'a> {
             }
             Selection::TopP => {
                 let alphas: Vec<f64> = clients.iter().map(|c| c.alpha).collect();
+                let spans = crate::fl::model_meta::layer_spans_for(&cfg.model, total_params);
+                let map_len = match cfg.mask_granularity {
+                    MaskGranularity::Param => total_params,
+                    MaskGranularity::Layer => spans.len(),
+                };
                 let mut enc_maps: Vec<EncryptedUpdate> = Vec::with_capacity(cfg.clients);
                 for c in clients.iter_mut() {
-                    let s = c.sensitivity(&global)?;
+                    let s = match cfg.mask_granularity {
+                        MaskGranularity::Param => c.sensitivity(&global)?,
+                        MaskGranularity::Layer => c.layer_sensitivity(&global, &spans)?,
+                    };
                     let cts = selective::encrypt_vector(&self.codec.ctx, &s, &pk, &mut c.rng);
                     enc_maps.push(EncryptedUpdate {
                         cts,
                         plain: Vec::new(),
-                        total: total_params,
+                        total: map_len,
                     });
+                }
+                for u in &enc_maps {
+                    mask_clock.upload(u.wire_bytes(&self.codec.ctx) as u64, cfg.bandwidth);
                 }
                 let agg_map = self.aggregate(&enc_maps, &alphas)?;
                 let global_map =
-                    self.decrypt_vec(&agg_map.cts, &keys, total_params, &mut server_rng);
-                EncryptionMask::top_p(&global_map, cfg.ratio)
+                    self.decrypt_vec(&agg_map.cts, &keys, map_len, &mut server_rng);
+                match cfg.mask_granularity {
+                    MaskGranularity::Param => EncryptionMask::top_p(&global_map, cfg.ratio),
+                    MaskGranularity::Layer => EncryptionMask::from_layer_scores(
+                        total_params,
+                        &global_map,
+                        &spans,
+                        cfg.ratio,
+                    ),
+                }
             }
         };
-        report.mask_agreement_secs = t.elapsed().as_secs_f64();
+        // Algorithm 1 round 1: broadcast the agreed mask to every client.
+        let mask_bytes = mask.to_bytes().len() as u64;
+        mask_clock.broadcast(mask_bytes, cfg.clients, cfg.bandwidth);
+        report.mask_upload_bytes = mask_clock.bytes_up;
+        report.mask_bytes = mask_bytes;
+        report.mask_comm_secs = mask_clock.comm_secs;
+        report.mask_agreement_secs = t.elapsed().as_secs_f64() + mask_clock.comm_secs;
         report.mask_ratio = mask.ratio();
         report.encrypted_params = mask.encrypted_count();
+        report.mask_runs = mask.encrypted.n_runs();
 
         // ------------------------------------------------------------------
         // Stage 3 — Encrypted federated learning rounds (Algorithm 1).
@@ -412,7 +457,8 @@ impl<'a> FlServer<'a> {
                         .collect();
                     let engine =
                         StreamingAggregator::new(&self.codec.ctx.params, cfg.engine_config());
-                    let (agg, stats) = engine.aggregate(arrivals)?;
+                    // run-aligned plaintext shard plan from the shared mask
+                    let (agg, stats) = engine.aggregate_with_mask(arrivals, Some(&mask))?;
                     let accepted: std::collections::HashSet<u64> =
                         stats.accepted_clients.iter().copied().collect();
                     for (cid, &b) in client_ids.iter().zip(upload_bytes.iter()) {
@@ -586,6 +632,27 @@ mod tests {
             .map(|(a, b)| (a - b).abs())
             .fold(0.0f32, f32::max);
         assert!(max_err < 1e-6, "pipeline diverged from sequential: {max_err}");
+    }
+
+    #[test]
+    fn layer_granularity_mode_runs() {
+        let Some(rt) = runtime() else { return };
+        let mut cfg = quick_cfg();
+        cfg.backend = Backend::Native;
+        cfg.mask_granularity = MaskGranularity::Layer;
+        cfg.rounds = 2;
+        let (report, global) = FlServer::new(&rt, cfg).unwrap().run().unwrap();
+        assert_eq!(report.rounds.len(), 2);
+        assert!(global.iter().all(|v| v.is_finite()));
+        // whole-layer mask: O(layers) runs and a tiny distribution message
+        let layers = crate::fl::model_meta::lookup("mlp").unwrap().layers as usize;
+        assert!(report.mask_runs <= layers, "runs {}", report.mask_runs);
+        assert!(report.mask_bytes < 1024, "mask bytes {}", report.mask_bytes);
+        // whole layers are selected until the ratio target is covered
+        assert!(report.mask_ratio >= 0.1);
+        // the layer-granularity agreement message is O(layers) ciphertexts,
+        // far below the O(params) per-parameter map
+        assert!(report.mask_upload_bytes > 0);
     }
 
     #[test]

@@ -3,7 +3,11 @@
 //!
 //! The benchmark models exist only as flat parameter counts — the paper's
 //! own HE microbenchmarks flatten models to 1-D vectors before encryption
-//! (Table 3 APIs), so overhead reproduction needs nothing else.
+//! (Table 3 APIs), so overhead reproduction needs nothing else. For
+//! layer-granularity mask selection each entry additionally records its
+//! weight-tensor count; [`layer_spans`] synthesizes the contiguous per-layer
+//! spans of the flat vector from it (the mask cost depends only on the span
+//! count and placement, not the exact per-tensor sizes).
 
 /// A model entry in the registry.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -13,29 +17,72 @@ pub struct ModelInfo {
     pub params: u64,
     /// Whether an AOT train/eval/sens artifact exists for local training.
     pub trainable: bool,
+    /// Weight-tensor (layer) count — the run count of a layer-granularity
+    /// mask and the length of the per-layer sensitivity score vector.
+    pub layers: u32,
 }
 
 /// The paper's Table-4 model suite (sizes verbatim from the paper).
 pub const TABLE4_MODELS: &[ModelInfo] = &[
-    ModelInfo { name: "linear", params: 101, trainable: false },
-    ModelInfo { name: "ts-transformer", params: 5_609, trainable: false },
-    ModelInfo { name: "mlp", params: 79_510, trainable: true },
-    ModelInfo { name: "lenet", params: 88_648, trainable: false },
-    ModelInfo { name: "rnn", params: 822_570, trainable: false },
-    ModelInfo { name: "cnn", params: 1_663_370, trainable: false },
-    ModelInfo { name: "mobilenet", params: 3_315_428, trainable: false },
-    ModelInfo { name: "resnet18", params: 12_556_426, trainable: false },
-    ModelInfo { name: "resnet34", params: 21_797_672, trainable: false },
-    ModelInfo { name: "resnet50", params: 25_557_032, trainable: false },
-    ModelInfo { name: "groupvit", params: 55_726_609, trainable: false },
-    ModelInfo { name: "vit", params: 86_389_248, trainable: false },
-    ModelInfo { name: "bert", params: 109_482_240, trainable: false },
-    ModelInfo { name: "llama2", params: 6_738_000_000, trainable: false },
+    ModelInfo { name: "linear", params: 101, trainable: false, layers: 2 },
+    ModelInfo { name: "ts-transformer", params: 5_609, trainable: false, layers: 26 },
+    ModelInfo { name: "mlp", params: 79_510, trainable: true, layers: 4 },
+    ModelInfo { name: "lenet", params: 88_648, trainable: false, layers: 10 },
+    ModelInfo { name: "rnn", params: 822_570, trainable: false, layers: 8 },
+    ModelInfo { name: "cnn", params: 1_663_370, trainable: false, layers: 8 },
+    ModelInfo { name: "mobilenet", params: 3_315_428, trainable: false, layers: 137 },
+    ModelInfo { name: "resnet18", params: 12_556_426, trainable: false, layers: 62 },
+    ModelInfo { name: "resnet34", params: 21_797_672, trainable: false, layers: 110 },
+    ModelInfo { name: "resnet50", params: 25_557_032, trainable: false, layers: 161 },
+    ModelInfo { name: "groupvit", params: 55_726_609, trainable: false, layers: 272 },
+    ModelInfo { name: "vit", params: 86_389_248, trainable: false, layers: 152 },
+    ModelInfo { name: "bert", params: 109_482_240, trainable: false, layers: 199 },
+    ModelInfo { name: "llama2", params: 6_738_000_000, trainable: false, layers: 291 },
 ];
+
+/// Fallback layer count for models not in the Table-4 registry.
+pub const DEFAULT_LAYERS: u32 = 16;
 
 /// Look up a Table-4 model.
 pub fn lookup(name: &str) -> Option<ModelInfo> {
     TABLE4_MODELS.iter().copied().find(|m| m.name == name)
+}
+
+/// Contiguous per-layer parameter spans of a flat `params`-sized vector:
+/// `layers` blocks whose sizes differ by at most one. The registry stores
+/// only flat counts, so spans are synthesized — enough structure for
+/// layer-granularity masks, whose wire and selection cost is O(layers).
+pub fn layer_spans(params: u64, layers: u32) -> Vec<std::ops::Range<usize>> {
+    let total = params as usize;
+    if total == 0 {
+        return Vec::new();
+    }
+    let n = (layers.max(1) as usize).min(total);
+    let base = total / n;
+    let rem = total % n;
+    let mut spans = Vec::with_capacity(n);
+    let mut lo = 0usize;
+    for i in 0..n {
+        let len = base + usize::from(i < rem);
+        spans.push(lo..lo + len);
+        lo += len;
+    }
+    spans
+}
+
+/// Layer spans for a named model over an observed flat parameter count: the
+/// registry's layer count when known (`DEFAULT_LAYERS` otherwise) over the
+/// *actual* total, so the spans always tile the loaded model exactly.
+pub fn layer_spans_for(model: &str, total: usize) -> Vec<std::ops::Range<usize>> {
+    let layers = lookup(model).map(|m| m.layers).unwrap_or(DEFAULT_LAYERS);
+    layer_spans(total as u64, layers)
+}
+
+impl ModelInfo {
+    /// This model's synthesized per-layer spans.
+    pub fn layer_spans(&self) -> Vec<std::ops::Range<usize>> {
+        layer_spans(self.params, self.layers)
+    }
 }
 
 /// Plaintext wire size of a flat f32 model.
@@ -62,6 +109,32 @@ mod tests {
         }
         assert_eq!(lookup("resnet50").unwrap().params, 25_557_032);
         assert!(lookup("nope").is_none());
+        // every entry has a plausible layer structure
+        for m in TABLE4_MODELS {
+            assert!(m.layers >= 1 && (m.layers as u64) <= m.params, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn layer_spans_tile_the_flat_vector() {
+        for m in TABLE4_MODELS.iter().filter(|m| m.params < 10_000_000_000) {
+            let spans = m.layer_spans();
+            assert_eq!(spans.len(), m.layers as usize, "{}", m.name);
+            let mut lo = 0usize;
+            for s in &spans {
+                assert_eq!(s.start, lo, "{}", m.name);
+                assert!(s.end > s.start, "{}", m.name);
+                lo = s.end;
+            }
+            assert_eq!(lo, m.params as usize, "{}", m.name);
+        }
+        // degenerate inputs
+        assert!(layer_spans(0, 5).is_empty());
+        assert_eq!(layer_spans(3, 10).len(), 3); // never more spans than params
+        // unknown model falls back to DEFAULT_LAYERS over the observed total
+        let spans = layer_spans_for("mystery", 1000);
+        assert_eq!(spans.len(), DEFAULT_LAYERS as usize);
+        assert_eq!(spans.last().unwrap().end, 1000);
     }
 
     #[test]

@@ -4,159 +4,517 @@
 //! securely-aggregated sensitivity map and encrypts the top-`p` fraction;
 //! random selection is the weaker baseline of Fig. 9; the "first and last
 //! layers" heuristic is the Empirical Selection Recipe of §4.2.2.
+//!
+//! Real masks are run-structured (layer ranges, the first-and-last-layer
+//! recipe, contiguous sensitivity blocks), so the mask core is a run-length
+//! [`MaskLayout`] — sorted, non-overlapping, coalesced `[lo, hi)` intervals
+//! over the flat parameter space — rather than the seed's one-`u32`-per-index
+//! list. That makes mask memory and wire cost O(runs) instead of O(encrypted
+//! params) (a layer-granularity BERT mask is a few hundred bytes, not ~44 MB)
+//! and turns the encrypt/decrypt gather/scatter paths into contiguous segment
+//! copies instead of per-index indirection.
 
 use crate::crypto::prng::ChaChaRng;
 
-/// A binary encryption mask over a flat parameter vector, stored as the
-/// sorted list of encrypted indices.
-#[derive(Debug, Clone, PartialEq)]
+/// One half-open interval `[lo, hi)` of the flat parameter space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Run {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Run {
+    pub fn len(&self) -> usize {
+        self.hi.saturating_sub(self.lo)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.hi <= self.lo
+    }
+}
+
+/// A set of coordinates of a flat `total`-parameter vector, stored as sorted,
+/// non-overlapping, non-adjacent (coalesced) `[lo, hi)` runs.
+///
+/// Invariants (enforced by every constructor):
+/// * `runs[i].lo < runs[i].hi <= total`
+/// * `runs[i].hi < runs[i+1].lo` (strictly — adjacent runs are merged)
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MaskLayout {
+    total: usize,
+    runs: Vec<Run>,
+    /// Cached Σ run lengths.
+    count: usize,
+}
+
+impl MaskLayout {
+    /// No coordinates.
+    pub fn empty(total: usize) -> Self {
+        MaskLayout { total, runs: Vec::new(), count: 0 }
+    }
+
+    /// Every coordinate.
+    pub fn full(total: usize) -> Self {
+        if total == 0 {
+            return Self::empty(0);
+        }
+        MaskLayout {
+            total,
+            runs: vec![Run { lo: 0, hi: total }],
+            count: total,
+        }
+    }
+
+    /// Build from arbitrary runs: clamps to `[0, total)`, drops empties,
+    /// sorts, and coalesces overlapping/adjacent intervals.
+    pub fn from_runs(total: usize, mut runs: Vec<Run>) -> Self {
+        for r in runs.iter_mut() {
+            r.lo = r.lo.min(total);
+            r.hi = r.hi.min(total);
+        }
+        runs.retain(|r| !r.is_empty());
+        runs.sort_by_key(|r| r.lo);
+        let mut out: Vec<Run> = Vec::with_capacity(runs.len());
+        for r in runs {
+            match out.last_mut() {
+                Some(last) if r.lo <= last.hi => last.hi = last.hi.max(r.hi),
+                _ => out.push(r),
+            }
+        }
+        let count = out.iter().map(Run::len).sum();
+        MaskLayout { total, runs: out, count }
+    }
+
+    /// Build from ascending (possibly duplicated) indices, coalescing
+    /// consecutive ones into runs in a single scan. Indices `>= total` are
+    /// ignored; unsorted input falls back to an O(n log n) sort-and-coalesce
+    /// so no index is ever silently dropped.
+    pub fn from_sorted_indices(total: usize, indices: &[u32]) -> Self {
+        let mut runs: Vec<Run> = Vec::new();
+        let mut prev: Option<usize> = None;
+        for &i in indices {
+            let i = i as usize;
+            if prev.is_some_and(|p| i < p) {
+                // out-of-order input: the single-scan coalescer would drop
+                // indices that land before the current run — re-sort instead
+                let all = indices
+                    .iter()
+                    .map(|&j| Run { lo: j as usize, hi: j as usize + 1 })
+                    .collect();
+                return Self::from_runs(total, all);
+            }
+            prev = Some(i);
+            if i >= total {
+                continue;
+            }
+            match runs.last_mut() {
+                Some(last) if i < last.hi => {} // duplicate
+                Some(last) if i == last.hi => last.hi = i + 1,
+                _ => runs.push(Run { lo: i, hi: i + 1 }),
+            }
+        }
+        let count = runs.iter().map(Run::len).sum();
+        MaskLayout { total, runs, count }
+    }
+
+    /// Length of the underlying flat parameter space.
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// The coalesced runs, sorted by `lo`.
+    pub fn runs(&self) -> &[Run] {
+        &self.runs
+    }
+
+    /// Number of runs (the O(·) factor of mask memory and wire cost).
+    pub fn n_runs(&self) -> usize {
+        self.runs.len()
+    }
+
+    /// Number of covered coordinates.
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Whether coordinate `i` is covered (binary search over runs).
+    pub fn contains(&self, i: usize) -> bool {
+        self.runs
+            .binary_search_by(|r| {
+                if i < r.lo {
+                    std::cmp::Ordering::Greater
+                } else if i >= r.hi {
+                    std::cmp::Ordering::Less
+                } else {
+                    std::cmp::Ordering::Equal
+                }
+            })
+            .is_ok()
+    }
+
+    /// The uncovered coordinates as a layout over the same space.
+    pub fn complement(&self) -> MaskLayout {
+        let mut runs = Vec::with_capacity(self.runs.len() + 1);
+        let mut prev = 0usize;
+        for r in &self.runs {
+            if r.lo > prev {
+                runs.push(Run { lo: prev, hi: r.lo });
+            }
+            prev = r.hi;
+        }
+        if prev < self.total {
+            runs.push(Run { lo: prev, hi: self.total });
+        }
+        MaskLayout {
+            total: self.total,
+            runs,
+            count: self.total - self.count,
+        }
+    }
+
+    /// Set union over the same parameter space.
+    pub fn union(&self, other: &MaskLayout) -> MaskLayout {
+        assert_eq!(self.total, other.total, "layout space mismatch");
+        let mut all: Vec<Run> = Vec::with_capacity(self.runs.len() + other.runs.len());
+        all.extend_from_slice(&self.runs);
+        all.extend_from_slice(&other.runs);
+        MaskLayout::from_runs(self.total, all)
+    }
+
+    /// Iterate covered coordinates in ascending order.
+    pub fn iter_indices(&self) -> impl Iterator<Item = usize> + '_ {
+        self.runs.iter().flat_map(|r| r.lo..r.hi)
+    }
+
+    /// Dense boolean view — for attack simulation and test oracles only;
+    /// never used on the encrypt/decrypt hot paths.
+    pub fn to_dense(&self) -> Vec<bool> {
+        let mut v = vec![false; self.total];
+        for r in &self.runs {
+            v[r.lo..r.hi].fill(true);
+        }
+        v
+    }
+
+    /// Run-delta wire format (the mask-distribution message of Algorithm 1
+    /// round 1): `u64 total | u32 n_runs | (varint gap, varint len)*` where
+    /// `gap` is the distance from the previous run's end (`lo` for the first
+    /// run) and `len` the run length. O(runs) bytes — a layer-granularity
+    /// mask over 100M+ parameters serializes in well under a kilobyte.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(12 + 4 * self.runs.len());
+        out.extend_from_slice(&(self.total as u64).to_le_bytes());
+        out.extend_from_slice(&(self.runs.len() as u32).to_le_bytes());
+        let mut prev_hi = 0usize;
+        for r in &self.runs {
+            write_varint(&mut out, (r.lo - prev_hi) as u64);
+            write_varint(&mut out, r.len() as u64);
+            prev_hi = r.hi;
+        }
+        out
+    }
+
+    /// Parse and validate the run-delta wire format. Rejects truncation,
+    /// trailing bytes, zero-length runs, un-coalesced (gap-0) runs, and runs
+    /// beyond `total`.
+    pub fn from_bytes(bytes: &[u8]) -> anyhow::Result<Self> {
+        anyhow::ensure!(bytes.len() >= 12, "truncated mask header");
+        let total = u64::from_le_bytes(bytes[0..8].try_into().unwrap());
+        anyhow::ensure!(total <= usize::MAX as u64, "mask total overflows usize");
+        let total = total as usize;
+        let n_runs = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        // each run is at least two varint bytes — bound the allocation before
+        // trusting the declared count
+        anyhow::ensure!(
+            bytes.len() - 12 >= 2 * n_runs,
+            "declared run count exceeds payload"
+        );
+        let mut pos = 12usize;
+        let mut runs = Vec::with_capacity(n_runs);
+        let mut prev_hi = 0usize;
+        for i in 0..n_runs {
+            let gap = read_varint(bytes, &mut pos)?;
+            let len = read_varint(bytes, &mut pos)?;
+            anyhow::ensure!(len >= 1, "zero-length mask run");
+            anyhow::ensure!(i == 0 || gap >= 1, "mask runs must be coalesced");
+            let lo = (prev_hi as u64)
+                .checked_add(gap)
+                .ok_or_else(|| anyhow::anyhow!("mask run offset overflow"))?;
+            let hi = lo
+                .checked_add(len)
+                .ok_or_else(|| anyhow::anyhow!("mask run length overflow"))?;
+            anyhow::ensure!(hi <= total as u64, "mask run out of range");
+            runs.push(Run { lo: lo as usize, hi: hi as usize });
+            prev_hi = hi as usize;
+        }
+        anyhow::ensure!(pos == bytes.len(), "trailing bytes after mask runs");
+        let count = runs.iter().map(Run::len).sum();
+        Ok(MaskLayout { total, runs, count })
+    }
+}
+
+fn write_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            break;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+fn read_varint(bytes: &[u8], pos: &mut usize) -> anyhow::Result<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        anyhow::ensure!(*pos < bytes.len(), "truncated varint");
+        anyhow::ensure!(shift < 64, "varint overflow");
+        let b = bytes[*pos];
+        *pos += 1;
+        // at shift 63 only the lowest payload bit fits in a u64; higher bits
+        // would silently shift out and alias to a different value
+        anyhow::ensure!(shift < 63 || (b & 0x7f) <= 1, "varint overflow");
+        v |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+/// A binary encryption mask over a flat parameter vector: the encrypted
+/// (protected) coordinates as a run-length [`MaskLayout`].
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct EncryptionMask {
-    pub total: usize,
-    /// Sorted indices of encrypted (protected) parameters.
-    pub encrypted: Vec<u32>,
+    /// Runs of encrypted (protected) parameters.
+    pub encrypted: MaskLayout,
 }
 
 impl EncryptionMask {
     /// Encrypt everything (the vanilla-HE baseline).
     pub fn full(total: usize) -> Self {
-        EncryptionMask {
-            total,
-            encrypted: (0..total as u32).collect(),
-        }
+        EncryptionMask { encrypted: MaskLayout::full(total) }
     }
 
     /// Encrypt nothing (plaintext FedAvg).
     pub fn empty(total: usize) -> Self {
+        EncryptionMask { encrypted: MaskLayout::empty(total) }
+    }
+
+    /// Build from explicit runs (clamped/coalesced).
+    pub fn from_runs(total: usize, runs: Vec<Run>) -> Self {
+        EncryptionMask { encrypted: MaskLayout::from_runs(total, runs) }
+    }
+
+    /// Build from sorted encrypted indices.
+    pub fn from_indices(total: usize, indices: &[u32]) -> Self {
         EncryptionMask {
-            total,
-            encrypted: Vec::new(),
+            encrypted: MaskLayout::from_sorted_indices(total, indices),
         }
     }
 
     /// Top-`p` fraction by sensitivity (the paper's selection strategy).
+    /// Degenerate inputs (empty slice, NaN `p`, `p <= 0`) yield the empty
+    /// mask rather than panicking.
     pub fn top_p(sensitivity: &[f32], p: f64) -> Self {
         let total = sensitivity.len();
-        let k = ((total as f64) * p.clamp(0.0, 1.0)).round() as usize;
+        let k = fraction_count(total, p);
+        if k == 0 {
+            return Self::empty(total);
+        }
+        if k == total {
+            return Self::full(total);
+        }
+        assert!(total <= u32::MAX as usize, "per-index selection is u32-indexed");
         let mut idx: Vec<u32> = (0..total as u32).collect();
-        // Partial selection: k largest by sensitivity.
-        idx.select_nth_unstable_by(k.min(total.saturating_sub(1)), |&a, &b| {
+        // Partial selection: k largest by sensitivity (k < total here, so the
+        // pivot index is in range even for a 1-element slice).
+        idx.select_nth_unstable_by(k, |&a, &b| {
             sensitivity[b as usize]
                 .partial_cmp(&sensitivity[a as usize])
                 .unwrap_or(std::cmp::Ordering::Equal)
         });
-        let mut encrypted: Vec<u32> = idx[..k].to_vec();
+        let mut encrypted = idx[..k].to_vec();
         encrypted.sort_unstable();
-        EncryptionMask { total, encrypted }
+        Self::from_indices(total, &encrypted)
     }
 
-    /// Uniform-random `p` fraction (Fig. 9's baseline).
+    /// Uniform-random `p` fraction (Fig. 9's baseline). Same degenerate-input
+    /// guards as [`EncryptionMask::top_p`].
     pub fn random(total: usize, p: f64, rng: &mut ChaChaRng) -> Self {
-        let k = ((total as f64) * p.clamp(0.0, 1.0)).round() as usize;
+        let k = fraction_count(total, p);
+        if k == 0 {
+            return Self::empty(total);
+        }
+        if k == total {
+            return Self::full(total);
+        }
+        assert!(total <= u32::MAX as usize, "per-index selection is u32-indexed");
         let mut idx: Vec<u32> = (0..total as u32).collect();
         rng.shuffle(&mut idx);
-        let mut encrypted: Vec<u32> = idx[..k].to_vec();
+        let mut encrypted = idx[..k].to_vec();
         encrypted.sort_unstable();
-        EncryptionMask { total, encrypted }
+        Self::from_indices(total, &encrypted)
     }
 
     /// The Empirical Selection Recipe: top-`p` sensitive parameters plus the
-    /// first and last layer ranges.
+    /// first and last layer ranges — a run union, no dense materialization.
     pub fn recipe(
         sensitivity: &[f32],
         p: f64,
         first_layer: std::ops::Range<usize>,
         last_layer: std::ops::Range<usize>,
     ) -> Self {
+        let total = sensitivity.len();
         let base = Self::top_p(sensitivity, p);
-        let mut set: Vec<bool> = vec![false; sensitivity.len()];
-        for &i in &base.encrypted {
-            set[i as usize] = true;
+        let layers = MaskLayout::from_runs(
+            total,
+            vec![
+                Run { lo: first_layer.start, hi: first_layer.end },
+                Run { lo: last_layer.start, hi: last_layer.end },
+            ],
+        );
+        EncryptionMask { encrypted: base.encrypted.union(&layers) }
+    }
+
+    /// Layer-granularity selection over pre-aggregated per-layer scores:
+    /// encrypt whole layers, highest score first, until at least `p` of the
+    /// parameter space is covered. The practical deployment mode — the mask
+    /// is O(layers) runs and the mask-agreement message carries one score
+    /// per layer instead of one per parameter.
+    pub fn from_layer_scores(
+        total: usize,
+        scores: &[f32],
+        layers: &[std::ops::Range<usize>],
+        p: f64,
+    ) -> Self {
+        assert_eq!(scores.len(), layers.len(), "one score per layer");
+        let target = fraction_count(total, p);
+        if target == 0 {
+            return Self::empty(total);
         }
-        for i in first_layer.chain(last_layer) {
-            set[i] = true;
-        }
-        let encrypted = set
-            .iter()
-            .enumerate()
-            .filter_map(|(i, &b)| b.then_some(i as u32))
+        let mut order: Vec<usize> = (0..layers.len())
+            .filter(|&i| layers[i].start < layers[i].end)
             .collect();
-        EncryptionMask {
-            total: sensitivity.len(),
-            encrypted,
+        order.sort_by(|&a, &b| {
+            scores[b]
+                .partial_cmp(&scores[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        // accumulate as a coalesced union so overlapping spans never
+        // double-count coverage toward the target
+        let mut acc = MaskLayout::empty(total);
+        for i in order {
+            if acc.count() >= target {
+                break;
+            }
+            let r = &layers[i];
+            let span = MaskLayout::from_runs(total, vec![Run { lo: r.start, hi: r.end }]);
+            acc = acc.union(&span);
         }
+        EncryptionMask { encrypted: acc }
+    }
+
+    /// Layer-granularity selection from a full per-parameter sensitivity map:
+    /// scores each layer by its mean sensitivity, then defers to
+    /// [`EncryptionMask::from_layer_scores`].
+    pub fn layer_granular(
+        sensitivity: &[f32],
+        p: f64,
+        layers: &[std::ops::Range<usize>],
+    ) -> Self {
+        let total = sensitivity.len();
+        let scores = layer_mean_scores(sensitivity, layers);
+        Self::from_layer_scores(total, &scores, layers, p)
+    }
+
+    /// Total parameter count of the flat space.
+    pub fn total(&self) -> usize {
+        self.encrypted.total()
+    }
+
+    /// The encrypted runs, sorted by `lo`.
+    pub fn runs(&self) -> &[Run] {
+        self.encrypted.runs()
     }
 
     /// Number of encrypted parameters.
     pub fn encrypted_count(&self) -> usize {
-        self.encrypted.len()
+        self.encrypted.count()
     }
 
     /// Actual encrypted ratio.
     pub fn ratio(&self) -> f64 {
-        if self.total == 0 {
+        if self.total() == 0 {
             0.0
         } else {
-            self.encrypted.len() as f64 / self.total as f64
+            self.encrypted_count() as f64 / self.total() as f64
         }
     }
 
-    /// Dense boolean view (for attack simulation / merging).
+    /// The plaintext (unencrypted) coordinates as runs — the layout the
+    /// compacted plaintext remainder is scattered from.
+    pub fn plaintext_layout(&self) -> MaskLayout {
+        self.encrypted.complement()
+    }
+
+    /// Dense boolean view (for attack simulation / test oracles).
     pub fn to_dense(&self) -> Vec<bool> {
-        let mut v = vec![false; self.total];
-        for &i in &self.encrypted {
-            v[i as usize] = true;
-        }
-        v
+        self.encrypted.to_dense()
     }
 
-    /// Sorted plaintext (unencrypted) indices.
-    pub fn plaintext_indices(&self) -> Vec<u32> {
-        let dense = self.to_dense();
-        (0..self.total as u32)
-            .filter(|&i| !dense[i as usize])
-            .collect()
-    }
-
-    /// Serialize as little-endian u32 list prefixed with total (for the
-    /// mask-distribution message of Algorithm 1 round 1).
+    /// Serialize in the run-delta wire format (see [`MaskLayout::to_bytes`]).
     pub fn to_bytes(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(8 + 4 * self.encrypted.len());
-        out.extend_from_slice(&(self.total as u32).to_le_bytes());
-        out.extend_from_slice(&(self.encrypted.len() as u32).to_le_bytes());
-        for &i in &self.encrypted {
-            out.extend_from_slice(&i.to_le_bytes());
-        }
-        out
+        self.encrypted.to_bytes()
     }
 
     pub fn from_bytes(bytes: &[u8]) -> anyhow::Result<Self> {
-        anyhow::ensure!(bytes.len() >= 8, "truncated mask");
-        let total = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
-        let k = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
-        anyhow::ensure!(bytes.len() == 8 + 4 * k, "bad mask length");
-        let mut encrypted = Vec::with_capacity(k);
-        let mut prev: i64 = -1;
-        for c in bytes[8..].chunks_exact(4) {
-            let i = u32::from_le_bytes(c.try_into().unwrap());
-            anyhow::ensure!((i as usize) < total, "mask index out of range");
-            anyhow::ensure!(i as i64 > prev, "mask indices must be sorted unique");
-            prev = i as i64;
-            encrypted.push(i);
-        }
-        Ok(EncryptionMask { total, encrypted })
+        Ok(EncryptionMask { encrypted: MaskLayout::from_bytes(bytes)? })
     }
+}
+
+/// `round(total · p)` clamped to `[0, total]`, treating NaN `p` as 0.
+fn fraction_count(total: usize, p: f64) -> usize {
+    if total == 0 || p.is_nan() || p <= 0.0 {
+        return 0;
+    }
+    (((total as f64) * p.clamp(0.0, 1.0)).round() as usize).min(total)
+}
+
+/// Mean sensitivity per layer span (empty spans score 0).
+pub fn layer_mean_scores(sensitivity: &[f32], layers: &[std::ops::Range<usize>]) -> Vec<f32> {
+    layers
+        .iter()
+        .map(|r| {
+            let hi = r.end.min(sensitivity.len());
+            let lo = r.start.min(hi);
+            if lo >= hi {
+                return 0.0;
+            }
+            let sum: f64 = sensitivity[lo..hi].iter().map(|&s| s as f64).sum();
+            (sum / (hi - lo) as f64) as f32
+        })
+        .collect()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn indices(m: &EncryptionMask) -> Vec<usize> {
+        m.encrypted.iter_indices().collect()
+    }
+
     #[test]
     fn top_p_selects_most_sensitive() {
         let s: Vec<f32> = vec![0.1, 5.0, 0.2, 4.0, 0.05, 3.0, 0.3, 2.0, 0.01, 1.0];
         let m = EncryptionMask::top_p(&s, 0.3);
-        assert_eq!(m.encrypted, vec![1, 3, 5]); // sensitivities 5,4,3
+        assert_eq!(indices(&m), vec![1, 3, 5]); // sensitivities 5,4,3
         assert_eq!(m.encrypted_count(), 3);
+        assert_eq!(m.encrypted.n_runs(), 3); // non-adjacent singletons
         assert!((m.ratio() - 0.3).abs() < 1e-9);
     }
 
@@ -165,8 +523,39 @@ mod tests {
         let s = vec![1.0f32; 100];
         assert_eq!(EncryptionMask::top_p(&s, 0.0).encrypted_count(), 0);
         assert_eq!(EncryptionMask::top_p(&s, 1.0).encrypted_count(), 100);
+        // full coverage coalesces to a single run
+        assert_eq!(EncryptionMask::top_p(&s, 1.0).encrypted.n_runs(), 1);
         assert_eq!(EncryptionMask::full(100).encrypted_count(), 100);
         assert_eq!(EncryptionMask::empty(100).encrypted_count(), 0);
+    }
+
+    #[test]
+    fn degenerate_inputs_do_not_panic() {
+        // empty sensitivity slice (the seed's select_nth panic)
+        let m = EncryptionMask::top_p(&[], 0.5);
+        assert_eq!(m.total(), 0);
+        assert_eq!(m.encrypted_count(), 0);
+        // NaN and out-of-range p
+        let s = vec![1.0f32; 10];
+        assert_eq!(EncryptionMask::top_p(&s, f64::NAN).encrypted_count(), 0);
+        assert_eq!(EncryptionMask::top_p(&s, -3.0).encrypted_count(), 0);
+        assert_eq!(EncryptionMask::top_p(&s, 7.0).encrypted_count(), 10);
+        // single-element slice at both extremes
+        assert_eq!(EncryptionMask::top_p(&[1.0], 1.0).encrypted_count(), 1);
+        assert_eq!(EncryptionMask::top_p(&[1.0], 0.0).encrypted_count(), 0);
+        // total == 0 everywhere
+        let mut rng = ChaChaRng::from_seed(1, 0);
+        assert_eq!(EncryptionMask::random(0, 0.5, &mut rng).encrypted_count(), 0);
+        assert_eq!(EncryptionMask::full(0).encrypted.n_runs(), 0);
+        assert_eq!(
+            EncryptionMask::random(10, f64::NAN, &mut rng).encrypted_count(),
+            0
+        );
+        assert_eq!(EncryptionMask::recipe(&[], 0.5, 0..0, 0..0).total(), 0);
+        assert_eq!(
+            EncryptionMask::layer_granular(&[], 0.5, &[]).encrypted_count(),
+            0
+        );
     }
 
     #[test]
@@ -174,13 +563,13 @@ mod tests {
         let mut rng = ChaChaRng::from_seed(1, 0);
         let m = EncryptionMask::random(10_000, 0.25, &mut rng);
         assert_eq!(m.encrypted_count(), 2500);
-        // sorted unique
-        for w in m.encrypted.windows(2) {
-            assert!(w[0] < w[1]);
+        // sorted, coalesced runs
+        for w in m.runs().windows(2) {
+            assert!(w[0].hi < w[1].lo);
         }
         // roughly uniform: mean index near total/2
-        let mean: f64 =
-            m.encrypted.iter().map(|&i| i as f64).sum::<f64>() / m.encrypted_count() as f64;
+        let mean: f64 = m.encrypted.iter_indices().map(|i| i as f64).sum::<f64>()
+            / m.encrypted_count() as f64;
         assert!((mean - 5000.0).abs() < 300.0);
     }
 
@@ -189,19 +578,96 @@ mod tests {
         let s = vec![0.0f32; 100];
         let m = EncryptionMask::recipe(&s, 0.0, 0..10, 90..100);
         assert_eq!(m.encrypted_count(), 20);
-        assert!(m.encrypted.contains(&0) && m.encrypted.contains(&99));
+        assert_eq!(m.encrypted.n_runs(), 2);
+        assert!(m.encrypted.contains(0) && m.encrypted.contains(99));
+        assert!(!m.encrypted.contains(50));
     }
 
     #[test]
-    fn plaintext_indices_complement() {
+    fn unsorted_indices_are_not_dropped() {
+        // the single-scan coalescer falls back to sort-and-coalesce
+        let m = EncryptionMask::from_indices(100, &[5, 3, 4, 3, 90]);
+        assert_eq!(indices(&m), vec![3, 4, 5, 90]);
+        assert_eq!(m.encrypted.n_runs(), 2);
+    }
+
+    #[test]
+    fn from_runs_normalizes() {
+        // overlapping + adjacent + out-of-range + empty runs all coalesce
+        let m = EncryptionMask::from_runs(
+            100,
+            vec![
+                Run { lo: 10, hi: 20 },
+                Run { lo: 15, hi: 25 },
+                Run { lo: 25, hi: 30 },
+                Run { lo: 50, hi: 50 },
+                Run { lo: 90, hi: 200 },
+            ],
+        );
+        assert_eq!(m.runs(), &[Run { lo: 10, hi: 30 }, Run { lo: 90, hi: 100 }]);
+        assert_eq!(m.encrypted_count(), 30);
+    }
+
+    #[test]
+    fn complement_partitions_the_space() {
         let s: Vec<f32> = (0..10).map(|i| i as f32).collect();
         let m = EncryptionMask::top_p(&s, 0.4);
-        let enc: Vec<u32> = m.encrypted.clone();
-        let plain = m.plaintext_indices();
-        assert_eq!(enc.len() + plain.len(), 10);
-        let mut all: Vec<u32> = enc.into_iter().chain(plain).collect();
+        let plain = m.plaintext_layout();
+        assert_eq!(m.encrypted_count() + plain.count(), 10);
+        let mut all: Vec<usize> = m
+            .encrypted
+            .iter_indices()
+            .chain(plain.iter_indices())
+            .collect();
         all.sort_unstable();
         assert_eq!(all, (0..10).collect::<Vec<_>>());
+        // complement of the complement is the original
+        assert_eq!(plain.complement(), m.encrypted);
+    }
+
+    #[test]
+    fn union_merges_overlaps() {
+        let a = MaskLayout::from_runs(50, vec![Run { lo: 0, hi: 10 }, Run { lo: 30, hi: 35 }]);
+        let b = MaskLayout::from_runs(50, vec![Run { lo: 5, hi: 12 }, Run { lo: 35, hi: 40 }]);
+        let u = a.union(&b);
+        assert_eq!(u.runs(), &[Run { lo: 0, hi: 12 }, Run { lo: 30, hi: 40 }]);
+        assert_eq!(u.count(), 22);
+    }
+
+    #[test]
+    fn layer_granular_selects_whole_layers() {
+        // 4 layers of 25 params; layer 2 then layer 0 are most sensitive
+        let mut s = vec![0.1f32; 100];
+        for v in s[50..75].iter_mut() {
+            *v = 9.0;
+        }
+        for v in s[0..25].iter_mut() {
+            *v = 5.0;
+        }
+        let layers = [0..25, 25..50, 50..75, 75..100];
+        let m = EncryptionMask::layer_granular(&s, 0.3, &layers);
+        // target 30 params → layer 2 (25) then layer 0 (25) → 50 covered
+        assert_eq!(m.encrypted_count(), 50);
+        assert_eq!(m.runs(), &[Run { lo: 0, hi: 25 }, Run { lo: 50, hi: 75 }]);
+        // p=0 still empty; p=1 covers everything layer by layer
+        assert_eq!(EncryptionMask::layer_granular(&s, 0.0, &layers).encrypted_count(), 0);
+        assert_eq!(
+            EncryptionMask::layer_granular(&s, 1.0, &layers).encrypted_count(),
+            100
+        );
+    }
+
+    #[test]
+    fn overlapping_layer_spans_do_not_double_count() {
+        // spans 0 and 1 are the same region; coverage must not count twice,
+        // so span 2 is still needed to reach the 75% target
+        let m = EncryptionMask::from_layer_scores(
+            100,
+            &[3.0, 2.0, 1.0],
+            &[0..50, 0..50, 50..100],
+            0.75,
+        );
+        assert_eq!(m.encrypted_count(), 100);
     }
 
     #[test]
@@ -210,12 +676,53 @@ mod tests {
         let m = EncryptionMask::top_p(&s, 0.1);
         let b = m.to_bytes();
         assert_eq!(EncryptionMask::from_bytes(&b).unwrap(), m);
-        // corrupt: unsorted
-        let mut bad = b.clone();
-        if m.encrypted.len() >= 2 {
-            bad[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
-            assert!(EncryptionMask::from_bytes(&bad).is_err());
-        }
-        assert!(EncryptionMask::from_bytes(&b[..b.len() - 2]).is_err());
+        // wire cost is O(runs), with a 12-byte header
+        assert!(b.len() <= 12 + 20 * m.encrypted.n_runs());
+        // truncation
+        assert!(EncryptionMask::from_bytes(&b[..b.len() - 1]).is_err());
+        assert!(EncryptionMask::from_bytes(&b[..4]).is_err());
+        // trailing garbage
+        let mut long = b.clone();
+        long.push(0);
+        assert!(EncryptionMask::from_bytes(&long).is_err());
+    }
+
+    #[test]
+    fn malformed_runs_rejected() {
+        // hand-build: total=100, 1 run of length 0
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&100u64.to_le_bytes());
+        bad.extend_from_slice(&1u32.to_le_bytes());
+        bad.push(5); // gap 5
+        bad.push(0); // len 0
+        assert!(MaskLayout::from_bytes(&bad).is_err());
+        // run beyond total: gap 90, len 20
+        let mut oob = Vec::new();
+        oob.extend_from_slice(&100u64.to_le_bytes());
+        oob.extend_from_slice(&1u32.to_le_bytes());
+        oob.push(90);
+        oob.push(20);
+        assert!(MaskLayout::from_bytes(&oob).is_err());
+        // two adjacent runs (gap 0 on the second): must be coalesced
+        let mut adj = Vec::new();
+        adj.extend_from_slice(&100u64.to_le_bytes());
+        adj.extend_from_slice(&2u32.to_le_bytes());
+        adj.push(0); // run 0: [0, 5)
+        adj.push(5);
+        adj.push(0); // run 1: gap 0 → [5, 10) — not coalesced
+        adj.push(5);
+        assert!(MaskLayout::from_bytes(&adj).is_err());
+        // a valid two-run encoding parses
+        let ok = MaskLayout::from_runs(100, vec![Run { lo: 0, hi: 5 }, Run { lo: 6, hi: 10 }]);
+        assert_eq!(MaskLayout::from_bytes(&ok.to_bytes()).unwrap(), ok);
+    }
+
+    #[test]
+    fn full_mask_wire_is_constant_size() {
+        // the vanilla-HE baseline over BERT-scale space: one run, 14 bytes
+        let m = EncryptionMask::full(109_482_240);
+        let b = m.to_bytes();
+        assert!(b.len() < 32, "full mask wire {} bytes", b.len());
+        assert_eq!(EncryptionMask::from_bytes(&b).unwrap(), m);
     }
 }

@@ -2,7 +2,8 @@
 //! two aggregation backends.
 //!
 //! * [`mask`] — sensitivity-ranked encryption masks (top-p, random, layer
-//!   heuristics) and the secure mask-agreement helpers.
+//!   heuristics) over a run-length interval layout ([`mask::MaskLayout`]):
+//!   O(runs) memory and wire bytes, segment-copy gather/scatter.
 //! * [`selective`] — split a flat parameter vector into an encrypted part
 //!   (CKKS ciphertexts) and a compacted plaintext part, and merge back.
 //! * [`native`] — pure-Rust aggregation (oracle + arbitrary-shape fallback).
@@ -18,5 +19,5 @@ pub mod native;
 pub mod selective;
 pub mod xla;
 
-pub use mask::EncryptionMask;
+pub use mask::{EncryptionMask, MaskLayout, Run};
 pub use selective::{EncryptedUpdate, SelectiveCodec};

@@ -10,6 +10,10 @@ use crate::ckks::{ops, CkksParams};
 /// Aggregate selectively-encrypted updates: ciphertext parts via the
 /// homomorphic weighted sum, plaintext parts via an f64-accumulated
 /// weighted sum.
+///
+/// Both parts are compacted by the run-based mask layout before they arrive
+/// here, so the plaintext fold is one contiguous pass — the sequential
+/// oracle the run-sharded pipeline (`agg_engine`) must match bitwise.
 pub fn aggregate(
     updates: &[EncryptedUpdate],
     alphas: &[f64],

@@ -4,8 +4,13 @@
 //! `[W] = HE.Enc(pk, M ⊙ W) + (1 − M) ⊙ W` — the masked coordinates are
 //! compacted in mask order and packed `batch()` values per ciphertext; the
 //! remaining coordinates travel as compacted plaintext f32.
+//!
+//! Gather and scatter operate on the mask's interval runs: every hot-path
+//! copy is a contiguous segment (memcpy for the f32 plaintext remainder, a
+//! strided-free widening loop for the f64 encrypt staging), never per-index
+//! indirection, and no dense boolean view is ever materialized.
 
-use super::mask::EncryptionMask;
+use super::mask::{EncryptionMask, MaskLayout, Run};
 use crate::ckks::{Ciphertext, CkksContext, PublicKey, SecretKey};
 use crate::crypto::prng::ChaChaRng;
 
@@ -37,6 +42,59 @@ impl EncryptedUpdate {
     }
 }
 
+/// Streaming scatter cursor: walks a run list while compacted (mask-order)
+/// value chunks arrive, writing each chunk into as many contiguous segments
+/// as it spans.
+struct RunCursor<'a> {
+    runs: &'a [Run],
+    run: usize,
+    /// Offset into `runs[run]`.
+    off: usize,
+    scattered: usize,
+}
+
+impl<'a> RunCursor<'a> {
+    fn new(runs: &'a [Run]) -> Self {
+        RunCursor { runs, run: 0, off: 0, scattered: 0 }
+    }
+
+    /// Scatter one chunk of compacted f64 values into `out`. Values beyond
+    /// the run list (packing slack in the final ciphertext) are dropped.
+    fn scatter(&mut self, values: &[f64], out: &mut [f32]) {
+        let mut v = 0usize;
+        while v < values.len() && self.run < self.runs.len() {
+            let r = self.runs[self.run];
+            let take = (r.len() - self.off).min(values.len() - v);
+            let base = r.lo + self.off;
+            for (d, &s) in out[base..base + take].iter_mut().zip(values[v..v + take].iter()) {
+                *d = s as f32;
+            }
+            v += take;
+            self.off += take;
+            self.scattered += take;
+            if self.off == r.len() {
+                self.run += 1;
+                self.off = 0;
+            }
+        }
+    }
+
+    fn scattered(&self) -> usize {
+        self.scattered
+    }
+}
+
+/// Scatter the compacted plaintext remainder back into `out` along the
+/// complement runs — pure `copy_from_slice` segments.
+fn scatter_plain(layout: &MaskLayout, plain: &[f32], out: &mut [f32]) {
+    assert_eq!(plain.len(), layout.count(), "plaintext remainder length");
+    let mut off = 0usize;
+    for r in layout.runs() {
+        out[r.lo..r.hi].copy_from_slice(&plain[off..off + r.len()]);
+        off += r.len();
+    }
+}
+
 /// Encoder/decoder bound to a crypto context.
 pub struct SelectiveCodec {
     pub ctx: CkksContext,
@@ -60,23 +118,23 @@ impl SelectiveCodec {
         pk: &PublicKey,
         rng: &mut ChaChaRng,
     ) -> EncryptedUpdate {
-        assert_eq!(params.len(), mask.total, "mask/params length mismatch");
+        assert_eq!(params.len(), mask.total(), "mask/params length mismatch");
         let batch = self.ctx.batch();
-        let enc_values: Vec<f64> = mask
-            .encrypted
-            .iter()
-            .map(|&i| params[i as usize] as f64)
-            .collect();
+        // Encrypted part: gather run segments into the f64 staging buffer.
+        let mut enc_values: Vec<f64> = Vec::with_capacity(mask.encrypted_count());
+        for r in mask.runs() {
+            enc_values.extend(params[r.lo..r.hi].iter().map(|&v| v as f64));
+        }
         let cts = enc_values
             .chunks(batch)
             .map(|chunk| self.ctx.encrypt_values(chunk, pk, rng))
             .collect();
-        let dense = mask.to_dense();
-        let plain = params
-            .iter()
-            .enumerate()
-            .filter_map(|(i, &v)| (!dense[i]).then_some(v))
-            .collect();
+        // Plaintext part: segment memcpy along the complement runs.
+        let plain_layout = mask.plaintext_layout();
+        let mut plain: Vec<f32> = Vec::with_capacity(plain_layout.count());
+        for r in plain_layout.runs() {
+            plain.extend_from_slice(&params[r.lo..r.hi]);
+        }
         EncryptedUpdate {
             cts,
             plain,
@@ -91,24 +149,15 @@ impl SelectiveCodec {
         mask: &EncryptionMask,
         sk: &SecretKey,
     ) -> Vec<f32> {
-        assert_eq!(update.total, mask.total);
-        let mut out = vec![0.0f32; mask.total];
-        // plaintext part
-        for (slot, &i) in mask.plaintext_indices().iter().enumerate() {
-            out[i as usize] = update.plain[slot];
-        }
-        // encrypted part
-        let mut cursor = 0usize;
+        assert_eq!(update.total, mask.total(), "update/mask total mismatch");
+        let mut out = vec![0.0f32; mask.total()];
+        scatter_plain(&mask.plaintext_layout(), &update.plain, &mut out);
+        let mut cursor = RunCursor::new(mask.runs());
         for ct in &update.cts {
             let values = self.ctx.decrypt_values(ct, sk);
-            for v in values {
-                if cursor < mask.encrypted.len() {
-                    out[mask.encrypted[cursor] as usize] = v as f32;
-                    cursor += 1;
-                }
-            }
+            cursor.scatter(&values, &mut out);
         }
-        assert_eq!(cursor, mask.encrypted.len(), "short decrypt");
+        assert_eq!(cursor.scattered(), mask.encrypted_count(), "short decrypt");
         out
     }
 
@@ -120,11 +169,10 @@ impl SelectiveCodec {
         parties: &[&crate::ckks::threshold::ThresholdParty],
         rng: &mut ChaChaRng,
     ) -> Vec<f32> {
-        let mut out = vec![0.0f32; mask.total];
-        for (slot, &i) in mask.plaintext_indices().iter().enumerate() {
-            out[i as usize] = update.plain[slot];
-        }
-        let mut cursor = 0usize;
+        assert_eq!(update.total, mask.total(), "update/mask total mismatch");
+        let mut out = vec![0.0f32; mask.total()];
+        scatter_plain(&mask.plaintext_layout(), &update.plain, &mut out);
+        let mut cursor = RunCursor::new(mask.runs());
         for ct in &update.cts {
             let partials: Vec<_> = parties
                 .iter()
@@ -132,13 +180,9 @@ impl SelectiveCodec {
                 .collect();
             let m = crate::ckks::threshold::combine_partials(&self.ctx.params, ct, &partials);
             let values = self.ctx.encoder.decode(&m, ct.n_values, ct.scale);
-            for v in values {
-                if cursor < mask.encrypted.len() {
-                    out[mask.encrypted[cursor] as usize] = v as f32;
-                    cursor += 1;
-                }
-            }
+            cursor.scatter(&values, &mut out);
         }
+        assert_eq!(cursor.scattered(), mask.encrypted_count(), "short decrypt");
         out
     }
 }
@@ -207,6 +251,32 @@ mod tests {
     }
 
     #[test]
+    fn run_structured_mask_roundtrip() {
+        // a layer-style mask (few long runs) exercises the segment paths:
+        // multi-run ciphertext chunks and memcpy plaintext scatter
+        let ctx = small_ctx();
+        let codec = SelectiveCodec::new(ctx);
+        let mut rng = ChaChaRng::from_seed(7, 0);
+        let (pk, sk) = codec.ctx.keygen(&mut rng);
+        let total = 900;
+        let params: Vec<f32> = (0..total).map(|i| (i as f32 * 0.11).cos()).collect();
+        let mask = EncryptionMask::from_runs(
+            total,
+            vec![
+                Run { lo: 0, hi: 300 },
+                Run { lo: 400, hi: 401 },
+                Run { lo: 500, hi: 800 },
+            ],
+        );
+        let upd = codec.encrypt_update(&params, &mask, &pk, &mut rng);
+        assert_eq!(upd.plain.len(), total - mask.encrypted_count());
+        let back = codec.decrypt_update(&upd, &mask, &sk);
+        for (a, b) in params.iter().zip(back.iter()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
     fn wire_bytes_scale_with_ratio() {
         let ctx = small_ctx();
         let ct_bytes = ctx.params.ciphertext_bytes();
@@ -255,12 +325,45 @@ mod tests {
         let upd = codec.encrypt_update(&params, &mask, &pk, &mut rng);
         let back = codec.decrypt_update(&upd, &mask, &sk);
         // plaintext coordinates are bit-exact
-        let dense = mask.to_dense();
-        for i in 0..100 {
-            if !dense[i] {
+        for r in mask.plaintext_layout().runs() {
+            for i in r.lo..r.hi {
                 assert_eq!(back[i], params[i]);
             }
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "update/mask total mismatch")]
+    fn decrypt_rejects_total_mismatch() {
+        let ctx = small_ctx();
+        let codec = SelectiveCodec::new(ctx);
+        let mut rng = ChaChaRng::from_seed(13, 0);
+        let (pk, sk) = codec.ctx.keygen(&mut rng);
+        let params = vec![1.0f32; 100];
+        let mask = EncryptionMask::full(100);
+        let upd = codec.encrypt_update(&params, &mask, &pk, &mut rng);
+        codec.decrypt_update(&upd, &EncryptionMask::full(200), &sk);
+    }
+
+    #[test]
+    #[should_panic(expected = "update/mask total mismatch")]
+    fn threshold_decrypt_rejects_total_mismatch() {
+        use crate::ckks::threshold::*;
+        let ctx = small_ctx();
+        let codec = SelectiveCodec::new(ctx);
+        let params_arc = codec.ctx.params.clone();
+        let a = common_reference(&params_arc, 7);
+        let mut rng = ChaChaRng::from_seed(14, 0);
+        let parties: Vec<ThresholdParty> = (0..2)
+            .map(|k| party_keygen(&params_arc, k, &a, &mut rng))
+            .collect();
+        let shares: Vec<&crate::ckks::RnsPoly> =
+            parties.iter().map(|p| &p.b_share_ntt).collect();
+        let pk = combine_public_key(&params_arc, &a, &shares);
+        let params = vec![1.0f32; 100];
+        let upd = codec.encrypt_update(&params, &EncryptionMask::full(100), &pk, &mut rng);
+        let refs: Vec<&ThresholdParty> = parties.iter().collect();
+        codec.decrypt_update_threshold(&upd, &EncryptionMask::full(200), &refs, &mut rng);
     }
 
     #[test]

@@ -151,7 +151,8 @@ pub fn dispatch(args: util::cli::Args) -> Result<()> {
             eprintln!();
             eprintln!("subcommands:");
             eprintln!("  run           run a federated task (--model --clients --rounds --ratio");
-            eprintln!("                --selection topp|random|full|none --backend xla|native");
+            eprintln!("                --selection topp|random|full|none --mask-granularity param|layer");
+            eprintln!("                --backend xla|native");
             eprintln!("                --keys single|threshold --bandwidth ib|sar|mar|aws200");
             eprintln!("                --dropout P --dp-scale B");
             eprintln!("                --engine sequential|pipeline --shards S --quorum K");

@@ -19,16 +19,15 @@ pub fn budget_full_dp(sensitivities: &[f32], b: f64) -> f64 {
 }
 
 /// Empirical budget of an arbitrary mask: Σ over *unencrypted* i of Δf_i/b
-/// (Theorem 3.11).
+/// (Theorem 3.11). Sums over the mask-complement runs — no dense view.
 pub fn budget_with_mask(sensitivities: &[f32], mask: &EncryptionMask, b: f64) -> f64 {
     assert!(b > 0.0);
-    assert_eq!(sensitivities.len(), mask.total);
-    let dense = mask.to_dense();
-    sensitivities
+    assert_eq!(sensitivities.len(), mask.total());
+    mask.plaintext_layout()
+        .runs()
         .iter()
-        .zip(dense.iter())
-        .filter(|(_, &enc)| !enc)
-        .map(|(&s, _)| s as f64 / b)
+        .flat_map(|r| sensitivities[r.lo..r.hi].iter())
+        .map(|&s| s as f64 / b)
         .sum()
 }
 

@@ -180,9 +180,10 @@ fn privacy_map_pipeline() {
     let s = trainer.sensitivity(&params, &data).unwrap();
     let mask = EncryptionMask::top_p(&s, 0.1);
     let captured: f64 = mask
-        .encrypted
+        .runs()
         .iter()
-        .map(|&i| s[i as usize] as f64)
+        .flat_map(|r| s[r.lo..r.hi].iter())
+        .map(|&v| v as f64)
         .sum();
     let total: f64 = s.iter().map(|&v| v as f64).sum();
     assert!(
