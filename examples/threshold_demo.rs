@@ -62,7 +62,7 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!((dec[100] - expected).abs() < 1e-4);
 
     println!("\n== Shamir escrow: recover a dropped party's share ==");
-    let bytes: Vec<u8> = parties[0].s_ntt.limbs[0]
+    let bytes: Vec<u8> = parties[0].s_ntt.limb(0)
         .iter()
         .flat_map(|&c| (c as u32).to_le_bytes())
         .collect();

@@ -166,7 +166,8 @@ impl ShardAccumulator {
         let n = params.n;
         ShardAccumulator {
             plan: plan.clone(),
-            reducers: params.moduli.iter().map(|&q| Barrett::new(q)).collect(),
+            // §Perf: reuse the per-limb reducers cached in `CkksParams`.
+            reducers: params.barrett.clone(),
             acc_c0: vec![vec![0u64; n]; units.len()],
             acc_c1: vec![vec![0u64; n]; units.len()],
             units,
@@ -188,10 +189,10 @@ impl ShardAccumulator {
             let br = self.reducers[limb];
             let w = weight[limb];
             let src = &upd.cts[ct];
-            for (d, &s) in self.acc_c0[k].iter_mut().zip(src.c0.limbs[limb].iter()) {
+            for (d, &s) in self.acc_c0[k].iter_mut().zip(src.c0.limb(limb).iter()) {
                 *d += br.mul(s, w);
             }
-            for (d, &s) in self.acc_c1[k].iter_mut().zip(src.c1.limbs[limb].iter()) {
+            for (d, &s) in self.acc_c1[k].iter_mut().zip(src.c1.limb(limb).iter()) {
                 *d += br.mul(s, w);
             }
         }
@@ -365,8 +366,8 @@ mod tests {
                 assert_eq!(acc.absorbed(), 3);
                 let sums = acc.finalize();
                 for (k, &(ct, limb)) in sums.units.iter().enumerate() {
-                    assert_eq!(sums.c0[k], oracle[ct].c0.limbs[limb], "shards={n_shards}");
-                    assert_eq!(sums.c1[k], oracle[ct].c1.limbs[limb], "shards={n_shards}");
+                    assert_eq!(sums.c0[k], oracle[ct].c0.limb(limb), "shards={n_shards}");
+                    assert_eq!(sums.c1[k], oracle[ct].c1.limb(limb), "shards={n_shards}");
                 }
             }
         }

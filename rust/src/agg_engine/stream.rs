@@ -231,8 +231,8 @@ impl<'a> StreamingAggregator<'a> {
         let mut plain = vec![0.0f32; n_plain];
         for out in outputs {
             for (k, &(ct, limb)) in out.sums.units.iter().enumerate() {
-                cts[ct].c0.limbs[limb].copy_from_slice(&out.sums.c0[k]);
-                cts[ct].c1.limbs[limb].copy_from_slice(&out.sums.c1[k]);
+                cts[ct].c0.limb_mut(limb).copy_from_slice(&out.sums.c0[k]);
+                cts[ct].c1.limb_mut(limb).copy_from_slice(&out.sums.c1[k]);
             }
             plain[out.plain_lo..out.plain_lo + out.plain.len()].copy_from_slice(&out.plain);
         }

@@ -8,10 +8,21 @@
 //! Ciphertext polynomials are kept in **coefficient domain**: the
 //! aggregation pipeline only adds and scalar-multiplies, which are
 //! domain-agnostic, and the serialization/kernels operate on raw limbs.
+//!
+//! §Perf: the hot entry points are [`encrypt_into`]/[`decrypt_into`] — they
+//! write into a caller-owned ciphertext/plaintext and stage everything in a
+//! pooled [`CkksScratch`], so the steady state performs **zero heap
+//! allocations** (proved by `tests/zero_alloc.rs`). The seed path
+//! materialized ~7 temporary polynomials per ciphertext; here `b·u + e0 + m`
+//! is accumulated in place (pointwise product into the output limb, inverse
+//! NTT in place, then one fused error+message sweep) and the error samples
+//! never exist as a separate polynomial — they are drawn once into a single
+//! pooled limb and re-lifted per modulus on the fly.
 
 use super::keys::{PublicKey, SecretKey};
+use super::modarith::{add_mod, center, lift_signed};
 use super::params::CkksParams;
-use super::poly::RnsPoly;
+use super::poly::{sample_cbd_limb0, sample_ternary_into, CkksScratch, RnsPoly};
 use crate::crypto::prng::ChaChaRng;
 
 /// A CKKS ciphertext (pair of RNS polynomials, coefficient domain) plus the
@@ -26,7 +37,22 @@ pub struct Ciphertext {
     pub scale: f64,
 }
 
-/// Encrypt a coefficient-domain plaintext polynomial.
+impl Ciphertext {
+    /// An all-zero ciphertext skeleton of the parameter set's shape — the
+    /// reusable target of [`encrypt_into`] and the `_into` aggregation
+    /// kernels.
+    pub fn zero(params: &CkksParams) -> Self {
+        Ciphertext {
+            c0: RnsPoly::zero(params),
+            c1: RnsPoly::zero(params),
+            n_values: 0,
+            scale: 0.0,
+        }
+    }
+}
+
+/// Encrypt a coefficient-domain plaintext polynomial (allocating
+/// convenience wrapper over [`encrypt_into`]).
 pub fn encrypt(
     params: &CkksParams,
     pk: &PublicKey,
@@ -34,39 +60,121 @@ pub fn encrypt(
     n_values: usize,
     rng: &mut ChaChaRng,
 ) -> Ciphertext {
-    assert!(!pt.ntt_form, "plaintext must be in coefficient domain");
-    let mut u = RnsPoly::sample_ternary(params, rng);
-    u.to_ntt(params);
-
-    // c0 = b·u (NTT) → coeff + e0 + m
-    let mut c0 = pk.b_ntt.mul_ntt(&u, params);
-    c0.from_ntt(params);
-    let e0 = RnsPoly::sample_error(params, rng);
-    c0.add_assign(&e0, params);
-    c0.add_assign(pt, params);
-
-    // c1 = a·u (NTT) → coeff + e1
-    let mut c1 = pk.a_ntt.mul_ntt(&u, params);
-    c1.from_ntt(params);
-    let e1 = RnsPoly::sample_error(params, rng);
-    c1.add_assign(&e1, params);
-
-    Ciphertext {
-        c0,
-        c1,
-        n_values,
-        scale: params.delta(),
-    }
+    let mut scratch = CkksScratch::new(params);
+    let mut out = Ciphertext::zero(params);
+    encrypt_into(params, pk, pt, n_values, rng, &mut scratch, &mut out);
+    out
 }
 
-/// Decrypt to a coefficient-domain plaintext polynomial.
+/// Encrypt into a caller-owned ciphertext using pooled scratch buffers —
+/// allocation-free after warm-up. RNG consumption (u, then e0, then e1) is
+/// identical to the seed path, so ciphertexts are bitwise-stable.
+pub fn encrypt_into(
+    params: &CkksParams,
+    pk: &PublicKey,
+    pt: &RnsPoly,
+    n_values: usize,
+    rng: &mut ChaChaRng,
+    scratch: &mut CkksScratch,
+    out: &mut Ciphertext,
+) {
+    assert!(!pt.ntt_form, "plaintext must be in coefficient domain");
+    let n = params.n;
+    let num_limbs = params.num_limbs();
+    debug_assert_eq!(out.c0.n, n, "output ciphertext shape mismatch");
+    debug_assert_eq!(out.c0.num_limbs(), num_limbs);
+    let q0 = params.moduli[0];
+
+    // Ephemeral ternary u, sampled straight into the pooled buffer and
+    // NTT'd per limb in place. (resize is a no-op after warm-up.)
+    scratch.u.resize(num_limbs * n, 0);
+    scratch.e.resize(n, 0);
+    sample_ternary_into(params, rng, &mut scratch.u);
+    for (l, limb) in scratch.u.chunks_exact_mut(n).enumerate() {
+        params.ntt[l].forward(limb);
+    }
+
+    // c0 = INTT(b ∘ u) + e0 + m, fused per limb with no temporaries.
+    sample_cbd_limb0(params, super::params::CBD_K, rng, &mut scratch.e);
+    for l in 0..num_limbs {
+        let q = params.moduli[l];
+        let br = params.barrett[l];
+        let u_l = &scratch.u[l * n..(l + 1) * n];
+        let dst = out.c0.limb_mut(l);
+        for ((d, &b), &u) in dst.iter_mut().zip(pk.b_ntt.limb(l)).zip(u_l.iter()) {
+            *d = br.mul(b, u);
+        }
+        params.ntt[l].inverse(dst);
+        for ((d, &e0), &m) in dst.iter_mut().zip(scratch.e.iter()).zip(pt.limb(l)) {
+            let e = if l == 0 { e0 } else { lift_signed(center(e0, q0), q) };
+            *d = add_mod(add_mod(*d, e, q), m, q);
+        }
+    }
+    out.c0.ntt_form = false;
+
+    // c1 = INTT(a ∘ u) + e1, same fused pattern.
+    sample_cbd_limb0(params, super::params::CBD_K, rng, &mut scratch.e);
+    for l in 0..num_limbs {
+        let q = params.moduli[l];
+        let br = params.barrett[l];
+        let u_l = &scratch.u[l * n..(l + 1) * n];
+        let dst = out.c1.limb_mut(l);
+        for ((d, &a), &u) in dst.iter_mut().zip(pk.a_ntt.limb(l)).zip(u_l.iter()) {
+            *d = br.mul(a, u);
+        }
+        params.ntt[l].inverse(dst);
+        for (d, &e1) in dst.iter_mut().zip(scratch.e.iter()) {
+            let e = if l == 0 { e1 } else { lift_signed(center(e1, q0), q) };
+            *d = add_mod(*d, e, q);
+        }
+    }
+    out.c1.ntt_form = false;
+
+    out.n_values = n_values;
+    out.scale = params.delta();
+}
+
+/// Decrypt to a coefficient-domain plaintext polynomial (allocating
+/// convenience wrapper over [`decrypt_into`]).
 pub fn decrypt(params: &CkksParams, sk: &SecretKey, ct: &Ciphertext) -> RnsPoly {
-    let mut c1 = ct.c1.clone();
-    c1.to_ntt(params);
-    let mut m = c1.mul_ntt(&sk.s_ntt, params);
-    m.from_ntt(params);
-    m.add_assign(&ct.c0, params);
-    m
+    let mut scratch = CkksScratch::new(params);
+    let mut out = RnsPoly::zero(params);
+    decrypt_into(params, sk, ct, &mut scratch, &mut out);
+    out
+}
+
+/// Decrypt into a caller-owned polynomial using pooled scratch buffers —
+/// allocation-free after warm-up.
+pub fn decrypt_into(
+    params: &CkksParams,
+    sk: &SecretKey,
+    ct: &Ciphertext,
+    scratch: &mut CkksScratch,
+    out: &mut RnsPoly,
+) {
+    assert!(
+        !ct.c0.ntt_form && !ct.c1.ntt_form,
+        "ciphertext must be in coefficient domain"
+    );
+    let n = params.n;
+    debug_assert_eq!(out.n, n, "output plaintext shape mismatch");
+    scratch.t.resize(params.num_limbs() * n, 0);
+    scratch.t.copy_from_slice(ct.c1.flat());
+    for l in 0..params.num_limbs() {
+        let q = params.moduli[l];
+        let br = params.barrett[l];
+        let t_l = &mut scratch.t[l * n..(l + 1) * n];
+        params.ntt[l].forward(t_l);
+        let dst = out.limb_mut(l);
+        for ((d, &t), &s) in dst.iter_mut().zip(t_l.iter()).zip(sk.s_ntt.limb(l)) {
+            *d = br.mul(t, s);
+        }
+        params.ntt[l].inverse(dst);
+        for (d, &c0) in dst.iter_mut().zip(ct.c0.limb(l)) {
+            *d = add_mod(*d, c0, q);
+        }
+    }
+    out.ntt_form = false;
 }
 
 #[cfg(test)]
@@ -99,6 +207,29 @@ mod tests {
     }
 
     #[test]
+    fn into_variants_match_allocating_wrappers() {
+        // Same RNG state ⇒ bitwise-identical ciphertexts, with or without
+        // caller-owned buffers, and across buffer reuse.
+        let (params, encoder, pk, sk) = setup(256, 30);
+        let values = vec![0.25; 64];
+        let pt = encoder.encode(&values);
+        let mut r1 = ChaChaRng::from_seed(8, 8);
+        let mut r2 = ChaChaRng::from_seed(8, 8);
+        let ct = encrypt(&params, &pk, &pt, 64, &mut r1);
+        let mut scratch = CkksScratch::new(&params);
+        let mut ct2 = Ciphertext::zero(&params);
+        // dirty the reused buffer first to prove every word is rewritten
+        let mut dirty_rng = ChaChaRng::from_seed(9, 9);
+        encrypt_into(&params, &pk, &pt, 64, &mut dirty_rng, &mut scratch, &mut ct2);
+        encrypt_into(&params, &pk, &pt, 64, &mut r2, &mut scratch, &mut ct2);
+        assert_eq!(ct, ct2);
+        let dec1 = decrypt(&params, &sk, &ct);
+        let mut dec2 = RnsPoly::zero(&params);
+        decrypt_into(&params, &sk, &ct2, &mut scratch, &mut dec2);
+        assert_eq!(dec1, dec2);
+    }
+
+    #[test]
     fn ciphertext_is_not_plaintext() {
         // The ciphertext limbs must look nothing like the encoded message.
         let (params, encoder, pk, _sk) = setup(256, 30);
@@ -107,9 +238,10 @@ mod tests {
         let pt = encoder.encode(&values);
         let ct = encrypt(&params, &pk, &pt, 128, &mut rng);
         // A fresh encode of the same values differs wildly from c0.
-        let diff_count = pt.limbs[0]
+        let diff_count = pt
+            .limb(0)
             .iter()
-            .zip(ct.c0.limbs[0].iter())
+            .zip(ct.c0.limb(0).iter())
             .filter(|(a, b)| a != b)
             .count();
         assert!(diff_count > 250, "c0 leaks plaintext structure");

@@ -28,10 +28,10 @@ pub mod serialize;
 pub mod threshold;
 
 pub use encoding::Encoder;
-pub use encrypt::{decrypt, encrypt, Ciphertext};
+pub use encrypt::{decrypt, decrypt_into, encrypt, encrypt_into, Ciphertext};
 pub use keys::{keygen, PublicKey, SecretKey};
 pub use params::CkksParams;
-pub use poly::RnsPoly;
+pub use poly::{CkksScratch, RnsPoly};
 
 use crate::crypto::prng::ChaChaRng;
 use std::sync::Arc;

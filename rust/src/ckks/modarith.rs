@@ -27,10 +27,13 @@ pub fn sub_mod(a: u64, b: u64, q: u64) -> u64 {
     }
 }
 
-/// `a * b mod q` for q < 2^32 (product fits u64 when inputs < 2^31; we use
-/// u128 to stay safe for any reduced inputs < q < 2^32).
+/// `a * b mod q`, multiplying in u64 — **contract: q < 2^31** so the product
+/// of reduced inputs stays below 2^62 and cannot overflow. Moduli at or
+/// above 2^32 would wrap silently; callers with wider moduli (the primality
+/// test) must use the u128-widened `mul_mod_wide` below instead.
 #[inline(always)]
 pub fn mul_mod(a: u64, b: u64, q: u64) -> u64 {
+    debug_assert!(q < 1 << 31, "mul_mod contract: q < 2^31 (got {q})");
     debug_assert!(a < q && b < q);
     (a * b) % q
 }

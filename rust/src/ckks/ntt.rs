@@ -7,8 +7,20 @@
 //!
 //! Multiplications use Shoup's precomputed-quotient trick: for a fixed
 //! twiddle `w`, `w' = ⌊w·2^64/q⌋` lets `a·w mod q` be computed with two
-//! multiplies and no division — this is the single biggest win of the §Perf
-//! pass (see EXPERIMENTS.md).
+//! multiplies and no division.
+//!
+//! §Perf (Harvey-style lazy reduction): the hot butterflies keep values
+//! **unreduced in [0, 4q)** — the Shoup product skips its conditional
+//! subtract (result in [0, 2q)), the add/sub wings skip theirs — so the
+//! per-butterfly branches of the seed implementation disappear from the
+//! inner loops. q < 2^31 gives plenty of u64 headroom (4q < 2^33, and the
+//! Shoup product a·w < 2^33·2^31 < 2^64). The forward pass finishes with one
+//! full-reduction sweep; the inverse folds the final Gentleman–Sande stage,
+//! the n^{-1} scaling and the full reduction into a single fused pass. Both
+//! transforms return **fully reduced** (< q) outputs, bitwise identical to
+//! the reference butterflies kept below ([`NttTables::forward_reference`] /
+//! [`NttTables::inverse_reference`], the seed implementation retained as the
+//! differential-test oracle and bench baseline).
 
 use super::modarith::{bit_reverse, inv_mod, mul_mod};
 use super::params::primitive_root_2n;
@@ -27,6 +39,10 @@ pub struct NttTables {
     /// n^{-1} mod q.
     n_inv: u64,
     n_inv_shoup: u64,
+    /// ψ^{-bitrev(1)}·n^{-1} — the final inverse stage's twiddle with the
+    /// n^{-1} scaling folded in (§Perf: fused final pass).
+    inv_psi_last: u64,
+    inv_psi_last_shoup: u64,
 }
 
 #[inline(always)]
@@ -38,13 +54,23 @@ fn shoup_precompute(w: u64, q: u64) -> u64 {
 /// Result is in [0, q).
 #[inline(always)]
 fn mul_mod_shoup(a: u64, w: u64, w_shoup: u64, q: u64) -> u64 {
-    let hi = ((a as u128 * w_shoup as u128) >> 64) as u64;
-    let r = a.wrapping_mul(w).wrapping_sub(hi.wrapping_mul(q));
+    let r = mul_mod_shoup_lazy(a, w, w_shoup, q);
     if r >= q {
         r - q
     } else {
         r
     }
+}
+
+/// Lazy Shoup multiplication: result in [0, 2q) — the deferred conditional
+/// subtract of the Harvey butterflies. Valid whenever `a·w < 2^64` (here
+/// a < 4q < 2^33 and w < q < 2^31).
+#[inline(always)]
+fn mul_mod_shoup_lazy(a: u64, w: u64, w_shoup: u64, q: u64) -> u64 {
+    let hi = ((a as u128 * w_shoup as u128) >> 64) as u64;
+    let r = a.wrapping_mul(w).wrapping_sub(hi.wrapping_mul(q));
+    debug_assert!(r < 2 * q);
+    r
 }
 
 impl NttTables {
@@ -68,6 +94,7 @@ impl NttTables {
         let psi_rev_shoup = psi_rev.iter().map(|&w| shoup_precompute(w, q)).collect();
         let inv_psi_rev_shoup = inv_psi_rev.iter().map(|&w| shoup_precompute(w, q)).collect();
         let n_inv = inv_mod(n as u64, q);
+        let inv_psi_last = mul_mod(inv_psi_rev[1], n_inv, q);
         NttTables {
             q,
             n,
@@ -77,17 +104,114 @@ impl NttTables {
             inv_psi_rev_shoup,
             n_inv,
             n_inv_shoup: shoup_precompute(n_inv, q),
+            inv_psi_last,
+            inv_psi_last_shoup: shoup_precompute(inv_psi_last, q),
         }
     }
 
     /// In-place forward negacyclic NTT (natural order in, natural order out
-    /// with respect to the paired inverse below).
+    /// with respect to the paired inverse below). Input must be reduced;
+    /// output is fully reduced.
     ///
-    /// §Perf: butterflies use `split_at_mut` to expose the two wings as
-    /// separate slices — this removes every bounds check and aliasing stall
-    /// from the inner loop (≈3× over the naive indexed version; see
-    /// EXPERIMENTS.md §Perf).
+    /// §Perf: Harvey lazy butterflies — values ride in [0, 4q), the only
+    /// reduction inside the loop is one conditional subtract of 2q on the
+    /// even wing; a single sweep at the end reduces to [0, q). `split_at_mut`
+    /// exposes the two wings as separate slices, removing every bounds check
+    /// and aliasing stall from the inner loop.
     pub fn forward(&self, a: &mut [u64]) {
+        assert_eq!(a.len(), self.n);
+        let q = self.q;
+        let two_q = 2 * q;
+        let n = self.n;
+        let mut t = n;
+        let mut m = 1;
+        while m < n {
+            t >>= 1;
+            for i in 0..m {
+                let j1 = 2 * i * t;
+                let s = self.psi_rev[m + i];
+                let s_shoup = self.psi_rev_shoup[m + i];
+                let (lo, hi) = a[j1..j1 + 2 * t].split_at_mut(t);
+                for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
+                    let mut u = *x; // < 4q
+                    if u >= two_q {
+                        u -= two_q;
+                    }
+                    let v = mul_mod_shoup_lazy(*y, s, s_shoup, q); // < 2q
+                    *x = u + v; // < 4q
+                    *y = u + two_q - v; // < 4q
+                }
+            }
+            m <<= 1;
+        }
+        for x in a.iter_mut() {
+            let mut v = *x;
+            if v >= two_q {
+                v -= two_q;
+            }
+            if v >= q {
+                v -= q;
+            }
+            *x = v;
+        }
+    }
+
+    /// In-place inverse negacyclic NTT (inverse of [`Self::forward`]).
+    /// Input must be reduced; output is fully reduced.
+    ///
+    /// §Perf: lazy butterflies keep values in [0, 2q); the final
+    /// Gentleman–Sande stage, the n^{-1} scaling and the full reduction are
+    /// fused into one pass using the precomputed `ψ^{-bitrev(1)}·n^{-1}`
+    /// twiddle — no separate scaling sweep over the array.
+    pub fn inverse(&self, a: &mut [u64]) {
+        assert_eq!(a.len(), self.n);
+        let q = self.q;
+        let two_q = 2 * q;
+        let n = self.n;
+        let mut t = 1;
+        let mut m = n;
+        while m > 2 {
+            let h = m >> 1;
+            let mut j1 = 0;
+            for i in 0..h {
+                let s = self.inv_psi_rev[h + i];
+                let s_shoup = self.inv_psi_rev_shoup[h + i];
+                let (lo, hi) = a[j1..j1 + 2 * t].split_at_mut(t);
+                for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
+                    let u = *x; // < 2q
+                    let v = *y; // < 2q
+                    let mut sum = u + v; // < 4q
+                    if sum >= two_q {
+                        sum -= two_q;
+                    }
+                    *x = sum; // < 2q
+                    *y = mul_mod_shoup_lazy(u + two_q - v, s, s_shoup, q); // < 2q
+                }
+                j1 += 2 * t;
+            }
+            t <<= 1;
+            m = h;
+        }
+        // Fused final stage (m = 2): one butterfly pass over the two halves
+        // with n^{-1} folded into both wings, fully reducing on the way out.
+        let (lo, hi) = a.split_at_mut(n / 2);
+        for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
+            let u = *x; // < 2q
+            let v = *y; // < 2q
+            *x = mul_mod_shoup(u + v, self.n_inv, self.n_inv_shoup, q);
+            *y = mul_mod_shoup(
+                u + two_q - v,
+                self.inv_psi_last,
+                self.inv_psi_last_shoup,
+                q,
+            );
+        }
+    }
+
+    /// The seed (pre-lazy) forward butterflies: fully reduced after every
+    /// butterfly. Kept as the differential-test oracle for the lazy rewrite
+    /// and as the `perf_hotpath` baseline.
+    pub fn forward_reference(&self, a: &mut [u64]) {
         assert_eq!(a.len(), self.n);
         let q = self.q;
         let n = self.n;
@@ -112,8 +236,9 @@ impl NttTables {
         }
     }
 
-    /// In-place inverse negacyclic NTT (inverse of [`Self::forward`]).
-    pub fn inverse(&self, a: &mut [u64]) {
+    /// The seed (pre-lazy) inverse butterflies with the separate n^{-1}
+    /// sweep. Oracle/baseline companion of [`Self::forward_reference`].
+    pub fn inverse_reference(&self, a: &mut [u64]) {
         assert_eq!(a.len(), self.n);
         let q = self.q;
         let n = self.n;
@@ -182,6 +307,64 @@ mod tests {
         }
     }
 
+    /// §Perf property test: the lazy-reduction butterflies must produce
+    /// fully reduced outputs bitwise equal to the seed (reference)
+    /// implementation for every generated prime and the full ring-degree
+    /// range, in both directions.
+    #[test]
+    fn lazy_matches_reference_and_is_fully_reduced() {
+        for &q in &generate_ntt_primes(4) {
+            for n in [16usize, 64, 256, 1024, 4096, 8192] {
+                let t = NttTables::new(q, n);
+                let mut rng = ChaChaRng::from_seed(q ^ n as u64, 1);
+                let orig: Vec<u64> = (0..n).map(|_| rng.uniform_u64(q)).collect();
+
+                let mut lazy = orig.clone();
+                let mut reference = orig.clone();
+                t.forward(&mut lazy);
+                t.forward_reference(&mut reference);
+                assert_eq!(lazy, reference, "forward mismatch q={q} n={n}");
+                assert!(
+                    lazy.iter().all(|&x| x < q),
+                    "forward output not reduced q={q} n={n}"
+                );
+
+                t.inverse(&mut lazy);
+                t.inverse_reference(&mut reference);
+                assert_eq!(lazy, reference, "inverse mismatch q={q} n={n}");
+                assert!(
+                    lazy.iter().all(|&x| x < q),
+                    "inverse output not reduced q={q} n={n}"
+                );
+                assert_eq!(lazy, orig, "roundtrip mismatch q={q} n={n}");
+            }
+        }
+    }
+
+    /// Boundary stress: all-(q-1) and single-spike inputs exercise the
+    /// maximal intermediate values of the lazy bounds analysis.
+    #[test]
+    fn lazy_extremal_inputs() {
+        let q = generate_ntt_primes(1)[0];
+        for n in [16usize, 512] {
+            let t = NttTables::new(q, n);
+            let mut patterns: Vec<Vec<u64>> = vec![vec![q - 1; n], vec![0; n]];
+            let mut spike = vec![0u64; n];
+            spike[n - 1] = q - 1;
+            patterns.push(spike);
+            for orig in patterns.drain(..) {
+                let mut lazy = orig.clone();
+                let mut reference = orig.clone();
+                t.forward(&mut lazy);
+                t.forward_reference(&mut reference);
+                assert_eq!(lazy, reference);
+                assert!(lazy.iter().all(|&x| x < q));
+                t.inverse(&mut lazy);
+                assert_eq!(lazy, orig);
+            }
+        }
+    }
+
     #[test]
     fn matches_naive_negacyclic_convolution() {
         let q = generate_ntt_primes(2)[1];
@@ -235,6 +418,10 @@ mod tests {
             let w = rng.uniform_u64(q);
             let ws = shoup_precompute(w, q);
             assert_eq!(mul_mod_shoup(a, w, ws, q), mul_mod(a, w, q));
+            // the lazy variant is reduced-equal
+            let lazy = mul_mod_shoup_lazy(a, w, ws, q);
+            assert!(lazy < 2 * q);
+            assert_eq!(lazy % q, mul_mod(a, w, q));
         }
     }
 

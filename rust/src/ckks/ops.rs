@@ -4,6 +4,7 @@
 
 use super::encrypt::Ciphertext;
 use super::params::CkksParams;
+use super::poly::CkksScratch;
 
 /// `acc += ct` (scales must match).
 pub fn add_assign(acc: &mut Ciphertext, ct: &Ciphertext, params: &CkksParams) {
@@ -33,50 +34,73 @@ pub fn weighted_sum(cts: &[Ciphertext], alphas: &[f64], params: &CkksParams) -> 
     weighted_sum_refs(&refs, alphas, params)
 }
 
-/// Borrowed-input variant of [`weighted_sum`]: the aggregation hot path
-/// (`he_agg::native`, the `agg_engine` oracle) calls this per ciphertext
-/// index without first cloning each client's ciphertext into a scratch Vec.
+/// Borrowed-input variant of [`weighted_sum`] (allocating wrapper over
+/// [`weighted_sum_refs_into`]).
+pub fn weighted_sum_refs(cts: &[&Ciphertext], alphas: &[f64], params: &CkksParams) -> Ciphertext {
+    let mut scratch = CkksScratch::new(params);
+    let mut out = Ciphertext::zero(params);
+    weighted_sum_refs_into(cts, alphas, params, &mut scratch, &mut out);
+    out
+}
+
+/// The aggregation hot path (`he_agg::native`, the `agg_engine` oracle):
+/// weighted-sum borrowed ciphertexts into a caller-owned output, staging the
+/// encoded weights in the pooled scratch — allocation-free after warm-up.
 ///
 /// The inner loop is the measured L3 hot path: per (limb, coefficient) it is
-/// one u64 multiply, one modulo and one add per client. The §Perf pass keeps
-/// the product reduction lazy (the per-term `% q` keeps each term < 2^31 so
-/// up to 2^33 terms can accumulate in u64 before a final reduction).
-pub fn weighted_sum_refs(cts: &[&Ciphertext], alphas: &[f64], params: &CkksParams) -> Ciphertext {
+/// one Barrett product and one add per client. The §Perf pass keeps the
+/// product reduction lazy (each reduced term is < 2^31 so up to 2^31 terms
+/// accumulate in u64 before a fold) and indexes the per-limb Barrett
+/// reducers cached in [`CkksParams`] instead of rebuilding one per call.
+pub fn weighted_sum_refs_into(
+    cts: &[&Ciphertext],
+    alphas: &[f64],
+    params: &CkksParams,
+    scratch: &mut CkksScratch,
+    out: &mut Ciphertext,
+) {
     assert_eq!(cts.len(), alphas.len());
     assert!(!cts.is_empty());
-    let _n = params.n;
     let num_limbs = params.num_limbs();
     debug_assert!(
-        cts.len() < (1usize << 32),
+        cts.len() < (1usize << 31),
         "lazy accumulation bound exceeded"
     );
-    let weights: Vec<Vec<u64>> = alphas.iter().map(|&a| params.encode_weight(a)).collect();
-    let mut out = cts[0].clone();
+    scratch.weights.clear();
+    for &a in alphas {
+        params.encode_weight_into(a, &mut scratch.weights);
+    }
     out.scale = cts[0].scale * params.delta_w();
     out.n_values = cts.iter().map(|c| c.n_values).max().unwrap();
-    for (poly_idx, out_poly) in [&mut out.c0, &mut out.c1].into_iter().enumerate() {
+    // Domain-agnostic kernel: the output lives in whatever domain the inputs
+    // do (the seed path inherited this via `out = cts[0].clone()`).
+    out.c0.ntt_form = cts[0].c0.ntt_form;
+    out.c1.ntt_form = cts[0].c1.ntt_form;
+    for poly_idx in 0..2 {
         for l in 0..num_limbs {
-            // §Perf: Barrett reduction (two multiplies) instead of the
-            // hardware division — ~2.4x on this loop; see EXPERIMENTS.md.
-            let br = crate::ckks::modarith::Barrett::new(params.moduli[l]);
-            let dst = &mut out_poly.limbs[l];
+            let br = params.barrett[l];
+            let dst = if poly_idx == 0 {
+                out.c0.limb_mut(l)
+            } else {
+                out.c1.limb_mut(l)
+            };
             // Initialize with the first client's weighted limb, then
             // accumulate the rest lazily.
-            let w0 = weights[0][l];
+            let w0 = scratch.weights[l];
             let src0 = if poly_idx == 0 {
-                &cts[0].c0.limbs[l]
+                cts[0].c0.limb(l)
             } else {
-                &cts[0].c1.limbs[l]
+                cts[0].c1.limb(l)
             };
             for (d, &s) in dst.iter_mut().zip(src0.iter()) {
                 *d = br.mul(s, w0);
             }
             for (i, ct) in cts.iter().enumerate().skip(1) {
-                let w = weights[i][l];
+                let w = scratch.weights[i * num_limbs + l];
                 let src = if poly_idx == 0 {
-                    &ct.c0.limbs[l]
+                    ct.c0.limb(l)
                 } else {
-                    &ct.c1.limbs[l]
+                    ct.c1.limb(l)
                 };
                 for (d, &s) in dst.iter_mut().zip(src.iter()) {
                     // product < 2^62; reduce product, accumulate lazily
@@ -94,7 +118,6 @@ pub fn weighted_sum_refs(cts: &[&Ciphertext], alphas: &[f64], params: &CkksParam
             }
         }
     }
-    out
 }
 
 #[cfg(test)]
@@ -165,6 +188,58 @@ mod tests {
         assert_eq!(fast.c0, slow.c0);
         assert_eq!(fast.c1, slow.c1);
         assert!((fast.scale - slow.scale).abs() < 1e-9);
+    }
+
+    #[test]
+    fn into_variant_reuses_buffers_bitwise() {
+        let params = Arc::new(CkksParams::new(128, 3, 35).unwrap());
+        let encoder = Encoder::new(params.clone());
+        let mut rng = ChaChaRng::from_seed(18, 0);
+        let (pk, _sk) = keygen(&params, &mut rng);
+        let alphas = [0.25, 0.75];
+        let cts: Vec<Ciphertext> = (0..2)
+            .map(|c| {
+                let m: Vec<f64> = (0..64).map(|i| (i + c) as f64 * 0.02).collect();
+                encrypt(&params, &pk, &encoder.encode(&m), 64, &mut rng)
+            })
+            .collect();
+        let refs: Vec<&Ciphertext> = cts.iter().collect();
+        let oracle = weighted_sum_refs(&refs, &alphas, &params);
+        let mut scratch = CkksScratch::new(&params);
+        let mut out = Ciphertext::zero(&params);
+        for _ in 0..3 {
+            // repeated reuse of the same output/scratch stays bitwise equal
+            weighted_sum_refs_into(&refs, &alphas, &params, &mut scratch, &mut out);
+            assert_eq!(out, oracle);
+        }
+    }
+
+    #[test]
+    fn weighted_sum_preserves_input_domain() {
+        // The kernel is domain-agnostic: the output must carry the inputs'
+        // domain flag (regression for the flat-limb rewrite, which no longer
+        // clone-inherits it).
+        let params = Arc::new(CkksParams::new(128, 2, 30).unwrap());
+        let encoder = Encoder::new(params.clone());
+        let mut rng = ChaChaRng::from_seed(21, 0);
+        let (pk, _sk) = keygen(&params, &mut rng);
+        let m = vec![0.5; 32];
+        let mut a = encrypt(&params, &pk, &encoder.encode(&m), 32, &mut rng);
+        let mut b = encrypt(&params, &pk, &encoder.encode(&m), 32, &mut rng);
+        let agg = weighted_sum(&[a.clone(), b.clone()], &[0.5, 0.5], &params);
+        assert!(!agg.c0.ntt_form && !agg.c1.ntt_form);
+        // NTT-domain inputs: output flags follow, and the result is the NTT
+        // of the coefficient-domain aggregate (the kernel commutes).
+        a.c0.to_ntt(&params);
+        a.c1.to_ntt(&params);
+        b.c0.to_ntt(&params);
+        b.c1.to_ntt(&params);
+        let mut agg_ntt = weighted_sum(&[a, b], &[0.5, 0.5], &params);
+        assert!(agg_ntt.c0.ntt_form && agg_ntt.c1.ntt_form);
+        agg_ntt.c0.from_ntt(&params);
+        agg_ntt.c1.from_ntt(&params);
+        assert_eq!(agg_ntt.c0, agg.c0);
+        assert_eq!(agg_ntt.c1, agg.c1);
     }
 
     #[test]

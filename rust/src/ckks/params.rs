@@ -5,7 +5,7 @@
 //! derives the *same* moduli without any cross-language data file; a pytest
 //! asserts the two lists match via `artifacts/crypto_params.json`.
 
-use super::modarith::{is_prime, pow_mod};
+use super::modarith::{is_prime, pow_mod, Barrett};
 use super::ntt::NttTables;
 
 /// Largest ring degree supported by the 2^14 root-of-unity order of the
@@ -69,6 +69,10 @@ pub struct CkksParams {
     pub scaling_bits: u32,
     /// Per-limb NTT tables.
     pub ntt: Vec<NttTables>,
+    /// Per-limb Barrett reducers, precomputed once (§Perf: the hot kernels
+    /// — `mul_ntt`, `mul_scalar`, the weighted-sum loops — index this table
+    /// instead of rebuilding a reducer per limb per call).
+    pub barrett: Vec<Barrett>,
     /// CRT reconstruction precomputation: Q, Q_l = Q/q_l, and
     /// inv_l = (Q_l)^{-1} mod q_l.
     pub q_full: u128,
@@ -98,6 +102,7 @@ impl CkksParams {
         );
         let moduli = generate_ntt_primes(num_limbs);
         let ntt = moduli.iter().map(|&q| NttTables::new(q, n)).collect();
+        let barrett = moduli.iter().map(|&q| Barrett::new(q)).collect();
         let q_full: u128 = moduli.iter().map(|&q| q as u128).product();
         let crt_q_div: Vec<u128> = moduli.iter().map(|&q| q_full / q as u128).collect();
         let crt_inv: Vec<u64> = moduli
@@ -110,6 +115,7 @@ impl CkksParams {
             moduli,
             scaling_bits,
             ntt,
+            barrett,
             q_full,
             crt_q_div,
             crt_inv,
@@ -169,9 +175,17 @@ impl CkksParams {
     /// Encode a non-negative scalar weight at Δ_w into per-limb residues
     /// (the aggregation weight α_i of Algorithm 1).
     pub fn encode_weight(&self, alpha: f64) -> Vec<u64> {
+        let mut out = Vec::with_capacity(self.num_limbs());
+        self.encode_weight_into(alpha, &mut out);
+        out
+    }
+
+    /// Append the per-limb residues of an encoded weight to `out` — the
+    /// allocation-free variant for pooled weight buffers.
+    pub fn encode_weight_into(&self, alpha: f64, out: &mut Vec<u64>) {
         assert!(alpha >= 0.0, "aggregation weights are non-negative");
         let w = (alpha * self.delta_w()).round() as u64;
-        self.moduli.iter().map(|&q| w % q).collect()
+        out.extend(self.moduli.iter().map(|&q| w % q));
     }
 }
 

@@ -1,10 +1,16 @@
 //! RNS polynomials in Z_Q[X]/(X^n + 1): the working data type of the scheme.
 //!
-//! Coefficients are stored limb-major (`limbs[l][j]` = coefficient j mod
-//! q_l) so the per-limb NTT and the limb-wise aggregation kernel stream
-//! contiguous memory.
+//! §Perf: coefficients live in **one contiguous limb-major allocation**
+//! (`data[l*n + j]` = coefficient j mod q_l) instead of the seed's
+//! `Vec<Vec<u64>>`. One allocation per polynomial keeps the allocator out of
+//! the hot paths, the per-limb NTT and the limb-wise aggregation kernel still
+//! stream contiguous memory through [`RnsPoly::limb`]/[`RnsPoly::limb_mut`]
+//! slice views, and whole-poly copies are a single `memcpy` of the flat
+//! buffer. [`CkksScratch`] pools the staging buffers so the encrypt/decrypt/
+//! weighted-sum steady state performs no heap allocation at all (see
+//! DESIGN.md §7).
 
-use super::modarith::{add_mod, lift_signed, neg_mod, sub_mod};
+use super::modarith::{add_mod, center, lift_signed, neg_mod, sub_mod};
 use super::params::CkksParams;
 use crate::crypto::prng::ChaChaRng;
 
@@ -12,8 +18,9 @@ use crate::crypto::prng::ChaChaRng;
 #[derive(Debug, Clone, PartialEq)]
 pub struct RnsPoly {
     pub n: usize,
-    /// One residue vector per modulus, each of length n.
-    pub limbs: Vec<Vec<u64>>,
+    num_limbs: usize,
+    /// Contiguous limb-major storage, length `num_limbs * n`.
+    data: Vec<u64>,
     pub ntt_form: bool,
 }
 
@@ -22,23 +29,80 @@ impl RnsPoly {
     pub fn zero(params: &CkksParams) -> Self {
         RnsPoly {
             n: params.n,
-            limbs: vec![vec![0u64; params.n]; params.num_limbs()],
+            num_limbs: params.num_limbs(),
+            data: vec![0u64; params.num_limbs() * params.n],
             ntt_form: false,
         }
+    }
+
+    /// Wrap an existing flat limb-major buffer (deserialization, kernel
+    /// output). `data.len()` must be `num_limbs * n`.
+    pub fn from_flat(n: usize, num_limbs: usize, data: Vec<u64>, ntt_form: bool) -> Self {
+        assert_eq!(data.len(), num_limbs * n, "flat buffer shape mismatch");
+        RnsPoly {
+            n,
+            num_limbs,
+            data,
+            ntt_form,
+        }
+    }
+
+    /// Number of RNS limbs.
+    #[inline]
+    pub fn num_limbs(&self) -> usize {
+        self.num_limbs
+    }
+
+    /// Residue vector of limb `l` (length n, contiguous).
+    #[inline]
+    pub fn limb(&self, l: usize) -> &[u64] {
+        &self.data[l * self.n..(l + 1) * self.n]
+    }
+
+    /// Mutable residue vector of limb `l`.
+    #[inline]
+    pub fn limb_mut(&mut self, l: usize) -> &mut [u64] {
+        let n = self.n;
+        &mut self.data[l * n..(l + 1) * n]
+    }
+
+    /// Iterate limb slices in order.
+    #[inline]
+    pub fn limbs(&self) -> std::slice::ChunksExact<'_, u64> {
+        self.data.chunks_exact(self.n)
+    }
+
+    /// Iterate mutable limb slices in order.
+    #[inline]
+    pub fn limbs_mut(&mut self) -> std::slice::ChunksExactMut<'_, u64> {
+        let n = self.n;
+        self.data.chunks_exact_mut(n)
+    }
+
+    /// The whole flat limb-major buffer.
+    #[inline]
+    pub fn flat(&self) -> &[u64] {
+        &self.data
+    }
+
+    /// Mutable flat buffer.
+    #[inline]
+    pub fn flat_mut(&mut self) -> &mut [u64] {
+        &mut self.data
     }
 
     /// Lift signed coefficients (e.g. an encoded message or error sample)
     /// into every RNS limb.
     pub fn from_signed(params: &CkksParams, coeffs: &[i64]) -> Self {
         assert_eq!(coeffs.len(), params.n);
-        let limbs = params
-            .moduli
-            .iter()
-            .map(|&q| coeffs.iter().map(|&c| lift_signed(c, q)).collect())
-            .collect();
+        let mut data = Vec::with_capacity(params.num_limbs() * params.n);
+        for &q in &params.moduli {
+            data.extend(coeffs.iter().map(|&c| lift_signed(c, q)));
+        }
         RnsPoly {
             n: params.n,
-            limbs,
+            num_limbs: params.num_limbs(),
+            data,
             ntt_form: false,
         }
     }
@@ -52,68 +116,67 @@ impl RnsPoly {
     /// every encoding scale the scheme admits.
     pub fn from_signed_wide(params: &CkksParams, coeffs: &[i128]) -> Self {
         assert_eq!(coeffs.len(), params.n);
-        let limbs = params
-            .moduli
-            .iter()
-            .map(|&q| {
-                let br = super::modarith::Barrett::new(q);
-                let two64 = ((1u128 << 64) % q as u128) as u64;
-                coeffs
-                    .iter()
-                    .map(|&c| {
-                        let abs = c.unsigned_abs();
-                        debug_assert!(abs < 1u128 << 90, "encoding overflow");
-                        let hi = (abs >> 64) as u64; // < 2^26 < q
-                        let lo = (abs as u64) % q;
-                        let r = super::modarith::add_mod(br.mul(hi, two64), lo, q);
-                        if c < 0 {
-                            super::modarith::neg_mod(r, q)
-                        } else {
-                            r
-                        }
-                    })
-                    .collect()
-            })
-            .collect();
+        let mut data = Vec::with_capacity(params.num_limbs() * params.n);
+        for (l, &q) in params.moduli.iter().enumerate() {
+            let br = params.barrett[l];
+            let two64 = ((1u128 << 64) % q as u128) as u64;
+            data.extend(coeffs.iter().map(|&c| {
+                let abs = c.unsigned_abs();
+                debug_assert!(abs < 1u128 << 90, "encoding overflow");
+                let hi = (abs >> 64) as u64; // < 2^26 < q
+                let lo = (abs as u64) % q;
+                let r = add_mod(br.mul(hi, two64), lo, q);
+                if c < 0 {
+                    neg_mod(r, q)
+                } else {
+                    r
+                }
+            }));
+        }
         RnsPoly {
             n: params.n,
-            limbs,
+            num_limbs: params.num_limbs(),
+            data,
             ntt_form: false,
         }
     }
 
     /// Uniform random polynomial over R_Q (public `a` of the key pair).
     pub fn sample_uniform(params: &CkksParams, rng: &mut ChaChaRng) -> Self {
-        let limbs = params
-            .moduli
-            .iter()
-            .map(|&q| (0..params.n).map(|_| rng.uniform_u64(q)).collect())
-            .collect();
+        let mut data = Vec::with_capacity(params.num_limbs() * params.n);
+        for &q in &params.moduli {
+            for _ in 0..params.n {
+                data.push(rng.uniform_u64(q));
+            }
+        }
         RnsPoly {
             n: params.n,
-            limbs,
+            num_limbs: params.num_limbs(),
+            data,
             ntt_form: false,
         }
     }
 
     /// Ternary polynomial (secret / ephemeral key distribution).
     pub fn sample_ternary(params: &CkksParams, rng: &mut ChaChaRng) -> Self {
-        let coeffs: Vec<i64> = (0..params.n).map(|_| rng.ternary()).collect();
-        Self::from_signed(params, &coeffs)
+        let mut p = RnsPoly::zero(params);
+        sample_ternary_into(params, rng, &mut p.data);
+        p
     }
 
     /// Centered-binomial error polynomial.
     pub fn sample_error(params: &CkksParams, rng: &mut ChaChaRng) -> Self {
-        let coeffs: Vec<i64> = (0..params.n)
-            .map(|_| rng.cbd(super::params::CBD_K))
-            .collect();
-        Self::from_signed(params, &coeffs)
+        let mut p = RnsPoly::zero(params);
+        let n = params.n;
+        sample_cbd_limb0(params, super::params::CBD_K, rng, &mut p.data[..n]);
+        broadcast_limb0(params, &mut p.data);
+        p
     }
 
     /// Forward NTT on every limb (idempotence guarded by `ntt_form`).
     pub fn to_ntt(&mut self, params: &CkksParams) {
         assert!(!self.ntt_form, "already in NTT form");
-        for (l, limb) in self.limbs.iter_mut().enumerate() {
+        for (l, limb) in self.data.chunks_exact_mut(self.n).enumerate() {
             params.ntt[l].forward(limb);
         }
         self.ntt_form = true;
@@ -122,7 +185,7 @@ impl RnsPoly {
     /// Inverse NTT on every limb.
     pub fn from_ntt(&mut self, params: &CkksParams) {
         assert!(self.ntt_form, "not in NTT form");
-        for (l, limb) in self.limbs.iter_mut().enumerate() {
+        for (l, limb) in self.data.chunks_exact_mut(self.n).enumerate() {
             params.ntt[l].inverse(limb);
         }
         self.ntt_form = false;
@@ -131,10 +194,16 @@ impl RnsPoly {
     /// `self += other` (domains must match).
     pub fn add_assign(&mut self, other: &RnsPoly, params: &CkksParams) {
         assert_eq!(self.ntt_form, other.ntt_form, "domain mismatch");
-        for l in 0..self.limbs.len() {
+        let n = self.n;
+        for (l, (dst, src)) in self
+            .data
+            .chunks_exact_mut(n)
+            .zip(other.data.chunks_exact(n))
+            .enumerate()
+        {
             let q = params.moduli[l];
-            for j in 0..self.n {
-                self.limbs[l][j] = add_mod(self.limbs[l][j], other.limbs[l][j], q);
+            for (d, &s) in dst.iter_mut().zip(src.iter()) {
+                *d = add_mod(*d, s, q);
             }
         }
     }
@@ -142,40 +211,52 @@ impl RnsPoly {
     /// `self -= other`.
     pub fn sub_assign(&mut self, other: &RnsPoly, params: &CkksParams) {
         assert_eq!(self.ntt_form, other.ntt_form, "domain mismatch");
-        for l in 0..self.limbs.len() {
+        let n = self.n;
+        for (l, (dst, src)) in self
+            .data
+            .chunks_exact_mut(n)
+            .zip(other.data.chunks_exact(n))
+            .enumerate()
+        {
             let q = params.moduli[l];
-            for j in 0..self.n {
-                self.limbs[l][j] = sub_mod(self.limbs[l][j], other.limbs[l][j], q);
+            for (d, &s) in dst.iter_mut().zip(src.iter()) {
+                *d = sub_mod(*d, s, q);
             }
         }
     }
 
     /// Negate in place.
     pub fn negate(&mut self, params: &CkksParams) {
-        for l in 0..self.limbs.len() {
+        let n = self.n;
+        for (l, limb) in self.data.chunks_exact_mut(n).enumerate() {
             let q = params.moduli[l];
-            for x in self.limbs[l].iter_mut() {
+            for x in limb.iter_mut() {
                 *x = neg_mod(*x, q);
             }
         }
     }
 
     /// Pointwise product (both operands must be in NTT form).
+    ///
+    /// §Perf: uses the per-limb Barrett reducers cached in [`CkksParams`]
+    /// instead of rebuilding one per limb per call.
     pub fn mul_ntt(&self, other: &RnsPoly, params: &CkksParams) -> RnsPoly {
         assert!(self.ntt_form && other.ntt_form, "mul requires NTT form");
-        let limbs = (0..self.limbs.len())
-            .map(|l| {
-                let br = super::modarith::Barrett::new(params.moduli[l]);
-                self.limbs[l]
-                    .iter()
-                    .zip(other.limbs[l].iter())
-                    .map(|(&a, &b)| br.mul(a, b))
-                    .collect()
-            })
-            .collect();
+        let n = self.n;
+        let mut data = Vec::with_capacity(self.num_limbs * n);
+        for (l, (a, b)) in self
+            .data
+            .chunks_exact(n)
+            .zip(other.data.chunks_exact(n))
+            .enumerate()
+        {
+            let br = params.barrett[l];
+            data.extend(a.iter().zip(b.iter()).map(|(&x, &y)| br.mul(x, y)));
+        }
         RnsPoly {
-            n: self.n,
-            limbs,
+            n,
+            num_limbs: self.num_limbs,
+            data,
             ntt_form: true,
         }
     }
@@ -184,11 +265,12 @@ impl RnsPoly {
     /// aggregation weight). Domain-agnostic: scalar multiplication commutes
     /// with the NTT.
     pub fn mul_scalar(&mut self, scalar: &[u64], params: &CkksParams) {
-        assert_eq!(scalar.len(), self.limbs.len());
-        for l in 0..self.limbs.len() {
-            let br = super::modarith::Barrett::new(params.moduli[l]);
+        assert_eq!(scalar.len(), self.num_limbs);
+        let n = self.n;
+        for (l, limb) in self.data.chunks_exact_mut(n).enumerate() {
+            let br = params.barrett[l];
             let s = scalar[l];
-            for x in self.limbs[l].iter_mut() {
+            for x in limb.iter_mut() {
                 *x = br.mul(*x, s);
             }
         }
@@ -213,15 +295,92 @@ impl RnsPoly {
     /// CRT-reconstruct all coefficients to centered i128.
     pub fn to_centered_coeffs(&self, params: &CkksParams) -> Vec<i128> {
         assert!(!self.ntt_form, "reconstruct from coefficient domain");
-        let mut out = Vec::with_capacity(self.n);
-        let mut residues = vec![0u64; self.limbs.len()];
-        for j in 0..self.n {
-            for l in 0..self.limbs.len() {
-                residues[l] = self.limbs[l][j];
+        let n = self.n;
+        let mut out = Vec::with_capacity(n);
+        let mut residues = vec![0u64; self.num_limbs];
+        for j in 0..n {
+            for l in 0..self.num_limbs {
+                residues[l] = self.data[l * n + j];
             }
             out.push(params.crt_reconstruct_centered(&residues));
         }
         out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pooled scratch buffers + allocation-free sampling (§Perf).
+
+/// Reusable staging buffers for the encrypt/decrypt/weighted-sum hot paths:
+/// every buffer starts empty and is sized by the first kernel that needs it
+/// (a scratch used only for aggregation never allocates poly staging, one
+/// used only for decryption never allocates the ephemeral-`u` pool). After
+/// one warm-up call per shape, `encrypt_into`, `decrypt_into` and
+/// `weighted_sum_refs_into` perform **zero heap allocations** (proved by
+/// `tests/zero_alloc.rs`). Each worker thread owns one scratch.
+#[derive(Default)]
+pub struct CkksScratch {
+    /// Full flat poly staging (ephemeral `u` in NTT form), `num_limbs * n`.
+    pub(crate) u: Vec<u64>,
+    /// Single-limb sample staging (`n` values lifted mod q_0): error samples
+    /// are drawn once here and re-lifted per limb on the fly.
+    pub(crate) e: Vec<u64>,
+    /// Full flat poly temp (decrypt's NTT copy of c1), `num_limbs * n`.
+    pub(crate) t: Vec<u64>,
+    /// Amortized per-round weight residues (`clients * num_limbs`).
+    pub(crate) weights: Vec<u64>,
+}
+
+impl CkksScratch {
+    pub fn new(_params: &CkksParams) -> Self {
+        CkksScratch::default()
+    }
+}
+
+/// Sample a ternary polynomial straight into a flat limb-major buffer: limb 0
+/// is drawn from the RNG (same draw order as the seed path), the remaining
+/// limbs are re-lifted from limb 0 — no intermediate signed vector.
+pub(crate) fn sample_ternary_into(params: &CkksParams, rng: &mut ChaChaRng, out: &mut [u64]) {
+    let n = params.n;
+    debug_assert_eq!(out.len(), params.num_limbs() * n);
+    let q0 = params.moduli[0];
+    let (first, rest) = out.split_at_mut(n);
+    for x in first.iter_mut() {
+        *x = lift_signed(rng.ternary(), q0);
+    }
+    broadcast_from_limb0(params, first, rest);
+}
+
+/// Sample `n` centered-binomial values lifted into limb 0's modulus.
+pub(crate) fn sample_cbd_limb0(
+    params: &CkksParams,
+    k: u32,
+    rng: &mut ChaChaRng,
+    out: &mut [u64],
+) {
+    debug_assert_eq!(out.len(), params.n);
+    let q0 = params.moduli[0];
+    for x in out.iter_mut() {
+        *x = lift_signed(rng.cbd(k), q0);
+    }
+}
+
+/// Re-lift limb 0 of a flat buffer into every other limb (small centered
+/// values only: the limb-0 residue uniquely determines the signed sample).
+pub(crate) fn broadcast_limb0(params: &CkksParams, data: &mut [u64]) {
+    let n = params.n;
+    let (first, rest) = data.split_at_mut(n);
+    broadcast_from_limb0(params, first, rest);
+}
+
+fn broadcast_from_limb0(params: &CkksParams, first: &[u64], rest: &mut [u64]) {
+    let n = params.n;
+    let q0 = params.moduli[0];
+    for (l, limb) in rest.chunks_exact_mut(n).enumerate() {
+        let q = params.moduli[l + 1];
+        for (d, &s) in limb.iter_mut().zip(first.iter()) {
+            *d = lift_signed(center(s, q0), q);
+        }
     }
 }
 
@@ -304,6 +463,35 @@ mod tests {
         assert!(t.iter().all(|&c| c.abs() <= 1));
         let e = RnsPoly::sample_error(&p, &mut rng).to_centered_coeffs(&p);
         assert!(e.iter().all(|&c| c.abs() <= 21));
+    }
+
+    #[test]
+    fn flat_views_are_consistent() {
+        let p = params();
+        let mut rng = ChaChaRng::from_seed(7, 0);
+        let a = RnsPoly::sample_uniform(&p, &mut rng);
+        assert_eq!(a.num_limbs(), p.num_limbs());
+        assert_eq!(a.flat().len(), p.num_limbs() * p.n);
+        for (l, limb) in a.limbs().enumerate() {
+            assert_eq!(limb, a.limb(l));
+            assert_eq!(limb, &a.flat()[l * p.n..(l + 1) * p.n]);
+        }
+        let rebuilt = RnsPoly::from_flat(a.n, a.num_limbs(), a.flat().to_vec(), a.ntt_form);
+        assert_eq!(rebuilt, a);
+    }
+
+    #[test]
+    fn sampling_into_matches_allocating_samplers() {
+        // The scratch-buffer samplers must consume the RNG identically to
+        // the allocating ones (bitwise-stable ciphertexts).
+        let p = params();
+        let mut r1 = ChaChaRng::from_seed(9, 0);
+        let mut r2 = ChaChaRng::from_seed(9, 0);
+        let t1 = RnsPoly::sample_ternary(&p, &mut r1);
+        let mut buf = vec![0u64; p.num_limbs() * p.n];
+        sample_ternary_into(&p, &mut r2, &mut buf);
+        assert_eq!(t1.flat(), &buf[..]);
+        assert_eq!(r1.next_u64(), r2.next_u64());
     }
 
     #[test]

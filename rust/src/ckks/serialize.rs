@@ -24,7 +24,7 @@ const VERSION: u32 = 1;
 pub fn ciphertext_to_bytes(ct: &Ciphertext) -> Vec<u8> {
     assert!(!ct.c0.ntt_form && !ct.c1.ntt_form);
     let n = ct.c0.n;
-    let limbs = ct.c0.limbs.len();
+    let limbs = ct.c0.num_limbs();
     let mut out = Vec::with_capacity(serialize_header_bytes() + 2 * limbs * n * 4);
     out.extend_from_slice(&MAGIC.to_le_bytes());
     out.extend_from_slice(&VERSION.to_le_bytes());
@@ -36,11 +36,9 @@ pub fn ciphertext_to_bytes(ct: &Ciphertext) -> Vec<u8> {
     out.extend_from_slice(&0u32.to_le_bytes());
     debug_assert_eq!(out.len(), serialize_header_bytes());
     for poly in [&ct.c0, &ct.c1] {
-        for limb in &poly.limbs {
-            for &c in limb {
-                debug_assert!(c < 1 << 31);
-                out.extend_from_slice(&(c as u32).to_le_bytes());
-            }
+        for &c in poly.flat() {
+            debug_assert!(c < 1 << 31);
+            out.extend_from_slice(&(c as u32).to_le_bytes());
         }
     }
     out
@@ -73,22 +71,16 @@ pub fn ciphertext_from_bytes(bytes: &[u8], params: &CkksParams) -> anyhow::Resul
 
     let mut polys = Vec::with_capacity(2);
     for _ in 0..2 {
-        let mut limb_vecs = Vec::with_capacity(limbs);
+        let mut data = Vec::with_capacity(limbs * n);
         for l in 0..limbs {
             let q = params.moduli[l];
-            let mut v = Vec::with_capacity(n);
             for _ in 0..n {
                 let c = read_u32(bytes, &mut off)? as u64;
                 anyhow::ensure!(c < q, "coefficient out of range");
-                v.push(c);
+                data.push(c);
             }
-            limb_vecs.push(v);
         }
-        polys.push(RnsPoly {
-            n,
-            limbs: limb_vecs,
-            ntt_form: false,
-        });
+        polys.push(RnsPoly::from_flat(n, limbs, data, false));
     }
     let c1 = polys.pop().unwrap();
     let c0 = polys.pop().unwrap();
@@ -125,8 +117,8 @@ impl CiphertextShard {
     /// Scatter this shard's limbs into a full ciphertext skeleton.
     pub fn scatter_into(&self, ct: &mut Ciphertext) {
         for (k, l) in (self.lo..self.hi).enumerate() {
-            ct.c0.limbs[l].copy_from_slice(&self.c0_limbs[k]);
-            ct.c1.limbs[l].copy_from_slice(&self.c1_limbs[k]);
+            ct.c0.limb_mut(l).copy_from_slice(&self.c0_limbs[k]);
+            ct.c1.limb_mut(l).copy_from_slice(&self.c1_limbs[k]);
         }
         ct.n_values = self.n_values;
         ct.scale = self.scale;
@@ -147,7 +139,7 @@ pub fn shard_wire_bytes(params: &CkksParams, lo: usize, hi: usize) -> usize {
 /// Serialize limbs [lo, hi) of a ciphertext.
 pub fn ciphertext_shard_to_bytes(ct: &Ciphertext, lo: usize, hi: usize) -> Vec<u8> {
     assert!(!ct.c0.ntt_form && !ct.c1.ntt_form);
-    assert!(lo < hi && hi <= ct.c0.limbs.len(), "bad limb range");
+    assert!(lo < hi && hi <= ct.c0.num_limbs(), "bad limb range");
     let n = ct.c0.n;
     let mut out = Vec::with_capacity(shard_header_bytes() + 2 * (hi - lo) * n * 4);
     out.extend_from_slice(&SHARD_MAGIC.to_le_bytes());
@@ -159,8 +151,8 @@ pub fn ciphertext_shard_to_bytes(ct: &Ciphertext, lo: usize, hi: usize) -> Vec<u
     out.extend_from_slice(&ct.scale.to_le_bytes());
     debug_assert_eq!(out.len(), shard_header_bytes());
     for poly in [&ct.c0, &ct.c1] {
-        for limb in &poly.limbs[lo..hi] {
-            for &c in limb {
+        for l in lo..hi {
+            for &c in poly.limb(l) {
                 debug_assert!(c < 1 << 31);
                 out.extend_from_slice(&(c as u32).to_le_bytes());
             }

@@ -84,12 +84,10 @@ pub fn combine_public_key(
 /// party's share ([`crate::crypto::shamir::split_bytes`]).
 pub fn share_to_bytes(share: &RnsPoly) -> Vec<u8> {
     assert!(share.ntt_form, "secret shares are held in NTT form");
-    let mut out = Vec::with_capacity(share.limbs.len() * share.n * 4);
-    for limb in &share.limbs {
-        for &c in limb {
-            debug_assert!(c < 1 << 31);
-            out.extend_from_slice(&(c as u32).to_le_bytes());
-        }
+    let mut out = Vec::with_capacity(share.num_limbs() * share.n * 4);
+    for &c in share.flat() {
+        debug_assert!(c < 1 << 31);
+        out.extend_from_slice(&(c as u32).to_le_bytes());
     }
     out
 }
@@ -104,24 +102,18 @@ pub fn share_from_bytes(params: &CkksParams, bytes: &[u8]) -> anyhow::Result<Rns
         params.n,
         l
     );
-    let mut limbs = Vec::with_capacity(l);
+    let mut data = Vec::with_capacity(l * params.n);
     let mut off = 0usize;
     for limb_idx in 0..l {
         let q = params.moduli[limb_idx];
-        let mut v = Vec::with_capacity(params.n);
         for _ in 0..params.n {
             let c = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as u64;
             anyhow::ensure!(c < q, "escrowed coefficient out of range");
-            v.push(c);
+            data.push(c);
             off += 4;
         }
-        limbs.push(v);
     }
-    Ok(RnsPoly {
-        n: params.n,
-        limbs,
-        ntt_form: true,
-    })
+    Ok(RnsPoly::from_flat(params.n, l, data, true))
 }
 
 /// A party's partial decryption of a ciphertext (coefficient domain).
@@ -256,7 +248,7 @@ mod tests {
         let mut rng = ChaChaRng::from_seed(15, 0);
         let party = party_keygen(&params, 0, &a, &mut rng);
         // serialize the share's first limb as bytes
-        let bytes: Vec<u8> = party.s_ntt.limbs[0]
+        let bytes: Vec<u8> = party.s_ntt.limb(0)
             .iter()
             .flat_map(|&c| (c as u32).to_le_bytes())
             .collect();

@@ -5,7 +5,7 @@
 //! the §Perf L3 comparison.
 
 use super::selective::EncryptedUpdate;
-use crate::ckks::{ops, CkksParams};
+use crate::ckks::{ops, Ciphertext, CkksParams, CkksScratch};
 
 /// Aggregate selectively-encrypted updates: ciphertext parts via the
 /// homomorphic weighted sum, plaintext parts via an f64-accumulated
@@ -31,12 +31,17 @@ pub fn aggregate(
     );
 
     // Encrypted part: per ciphertext index, weighted-sum across clients
-    // (borrowed inputs — no per-ciphertext clone on the hot path).
+    // (borrowed inputs; §Perf: one scratch + one refs buffer reused across
+    // every ciphertext index — the whole loop allocates only the outputs).
+    let mut scratch = CkksScratch::new(params);
+    let mut slice: Vec<&Ciphertext> = Vec::with_capacity(updates.len());
     let cts = (0..n_cts)
         .map(|c| {
-            let slice: Vec<&crate::ckks::Ciphertext> =
-                updates.iter().map(|u| &u.cts[c]).collect();
-            ops::weighted_sum_refs(&slice, alphas, params)
+            slice.clear();
+            slice.extend(updates.iter().map(|u| &u.cts[c]));
+            let mut out = Ciphertext::zero(params);
+            ops::weighted_sum_refs_into(&slice, alphas, params, &mut scratch, &mut out);
+            out
         })
         .collect();
 

@@ -9,9 +9,21 @@
 //! copy is a contiguous segment (memcpy for the f32 plaintext remainder, a
 //! strided-free widening loop for the f64 encrypt staging), never per-index
 //! indirection, and no dense boolean view is ever materialized.
+//!
+//! §Perf (parallel codec): `encrypt_update`/`decrypt_update` fan their chunk
+//! ciphertexts across a `std::thread::scope` worker pool. Each worker owns a
+//! pooled [`CkksScratch`] (zero steady-state allocation in the per-chunk
+//! encrypt), and each chunk encrypts under its **own forked RNG stream**
+//! ([`ChaChaRng::fork`], forked from the caller's rng in chunk order), so
+//! the produced ciphertexts are bitwise identical for any worker count —
+//! client-side cost scales with cores the way the server's `agg_engine`
+//! already does.
 
 use super::mask::{EncryptionMask, MaskLayout, Run};
-use crate::ckks::{Ciphertext, CkksContext, PublicKey, SecretKey};
+use crate::ckks::{
+    decrypt_into, encrypt_into, Ciphertext, CkksContext, CkksScratch, PublicKey, RnsPoly,
+    SecretKey,
+};
 use crate::crypto::prng::ChaChaRng;
 
 /// One client's (selectively) encrypted model update.
@@ -98,16 +110,154 @@ fn scatter_plain(layout: &MaskLayout, plain: &[f32], out: &mut [f32]) {
 /// Encoder/decoder bound to a crypto context.
 pub struct SelectiveCodec {
     pub ctx: CkksContext,
+    /// Worker threads for the per-chunk fan-out (1 = sequential). Chunk
+    /// outputs are identical for any value (per-chunk forked RNG streams).
+    workers: usize,
 }
 
 impl SelectiveCodec {
+    /// Codec with one worker per available core.
     pub fn new(ctx: CkksContext) -> Self {
-        SelectiveCodec { ctx }
+        let workers = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1);
+        Self::with_workers(ctx, workers)
+    }
+
+    /// Codec with an explicit worker count (1 = the sequential reference
+    /// path; results are bitwise identical across worker counts).
+    pub fn with_workers(ctx: CkksContext, workers: usize) -> Self {
+        SelectiveCodec {
+            ctx,
+            workers: workers.max(1),
+        }
+    }
+
+    /// Worker threads used for chunk fan-out.
+    pub fn workers(&self) -> usize {
+        self.workers
     }
 
     /// Ciphertexts needed for `k` encrypted values.
     pub fn ct_count(&self, k: usize) -> usize {
         k.div_ceil(self.ctx.batch())
+    }
+
+    /// Encode + encrypt chunk `c` of the compacted value vector into a
+    /// caller-pooled ciphertext shape (the per-worker unit of work).
+    fn encrypt_one_chunk(
+        &self,
+        enc_values: &[f64],
+        c: usize,
+        pk: &PublicKey,
+        rng: &mut ChaChaRng,
+        scratch: &mut CkksScratch,
+    ) -> Ciphertext {
+        let batch = self.ctx.batch();
+        let lo = c * batch;
+        let hi = (lo + batch).min(enc_values.len());
+        let chunk = &enc_values[lo..hi];
+        let pt = self.ctx.encoder.encode(chunk);
+        let mut ct = Ciphertext::zero(&self.ctx.params);
+        encrypt_into(&self.ctx.params, pk, &pt, chunk.len(), rng, scratch, &mut ct);
+        ct
+    }
+
+    /// Encrypt every chunk of `enc_values`, fanning chunks across the worker
+    /// pool. `rngs` holds one pre-forked RNG per chunk, so the output is a
+    /// pure function of those streams — independent of worker count and
+    /// completion order.
+    fn encrypt_chunks(
+        &self,
+        enc_values: &[f64],
+        rngs: &mut [ChaChaRng],
+        pk: &PublicKey,
+    ) -> Vec<Ciphertext> {
+        let k = rngs.len();
+        let mut out: Vec<Option<Ciphertext>> = (0..k).map(|_| None).collect();
+        let workers = self.workers.min(k).max(1);
+        if workers <= 1 {
+            let mut scratch = CkksScratch::new(&self.ctx.params);
+            for (c, (slot, chunk_rng)) in out.iter_mut().zip(rngs.iter_mut()).enumerate() {
+                *slot = Some(self.encrypt_one_chunk(enc_values, c, pk, chunk_rng, &mut scratch));
+            }
+        } else {
+            let per = k.div_ceil(workers);
+            std::thread::scope(|s| {
+                for (block, (slots, rng_block)) in
+                    out.chunks_mut(per).zip(rngs.chunks_mut(per)).enumerate()
+                {
+                    let base = block * per;
+                    s.spawn(move || {
+                        let mut scratch = CkksScratch::new(&self.ctx.params);
+                        for (i, (slot, chunk_rng)) in
+                            slots.iter_mut().zip(rng_block.iter_mut()).enumerate()
+                        {
+                            *slot = Some(self.encrypt_one_chunk(
+                                enc_values,
+                                base + i,
+                                pk,
+                                chunk_rng,
+                                &mut scratch,
+                            ));
+                        }
+                    });
+                }
+            });
+        }
+        out.into_iter()
+            .map(|ct| ct.expect("chunk not encrypted"))
+            .collect()
+    }
+
+    /// Decrypt + decode every ciphertext through a persistent worker pool,
+    /// streaming decoded chunks to `consume` **in chunk order**. Worker `w`
+    /// owns chunks `w, w+workers, …` (per-worker scratch lives for the whole
+    /// call) and hands results over a bounded channel, so transient decoded
+    /// plaintext stays O(workers) chunks for any model size. Decryption is
+    /// deterministic, so the fan-out needs no RNG plumbing.
+    fn decrypt_chunks_streamed(
+        &self,
+        cts: &[Ciphertext],
+        sk: &SecretKey,
+        mut consume: impl FnMut(Vec<f64>),
+    ) {
+        let k = cts.len();
+        let workers = self.workers.min(k).max(1);
+        if workers <= 1 {
+            let mut scratch = CkksScratch::new(&self.ctx.params);
+            let mut poly = RnsPoly::zero(&self.ctx.params);
+            for ct in cts {
+                decrypt_into(&self.ctx.params, sk, ct, &mut scratch, &mut poly);
+                consume(self.ctx.encoder.decode(&poly, ct.n_values, ct.scale));
+            }
+        } else {
+            std::thread::scope(|s| {
+                let mut rxs = Vec::with_capacity(workers);
+                for w in 0..workers {
+                    let (tx, rx) = std::sync::mpsc::sync_channel::<Vec<f64>>(4);
+                    rxs.push(rx);
+                    s.spawn(move || {
+                        let mut scratch = CkksScratch::new(&self.ctx.params);
+                        let mut poly = RnsPoly::zero(&self.ctx.params);
+                        for ct in cts.iter().skip(w).step_by(workers) {
+                            decrypt_into(&self.ctx.params, sk, ct, &mut scratch, &mut poly);
+                            let values =
+                                self.ctx.encoder.decode(&poly, ct.n_values, ct.scale);
+                            if tx.send(values).is_err() {
+                                break; // consumer side gone
+                            }
+                        }
+                    });
+                }
+                // In-order drain: chunk c comes from worker c % workers, and
+                // each worker produces its chunks in ascending order.
+                for c in 0..k {
+                    let values = rxs[c % workers].recv().expect("decrypt worker hung up");
+                    consume(values);
+                }
+            });
+        }
     }
 
     /// Apply Algorithm 1's client-side encryption.
@@ -125,10 +275,12 @@ impl SelectiveCodec {
         for r in mask.runs() {
             enc_values.extend(params[r.lo..r.hi].iter().map(|&v| v as f64));
         }
-        let cts = enc_values
-            .chunks(batch)
-            .map(|chunk| self.ctx.encrypt_values(chunk, pk, rng))
-            .collect();
+        // One forked RNG per chunk, forked in chunk order: the ciphertext
+        // stream is a pure function of the caller's RNG state, no matter
+        // which worker encrypts which chunk.
+        let n_chunks = enc_values.len().div_ceil(batch);
+        let mut chunk_rngs: Vec<ChaChaRng> = (0..n_chunks).map(|c| rng.fork(c as u64)).collect();
+        let cts = self.encrypt_chunks(&enc_values, &mut chunk_rngs, pk);
         // Plaintext part: segment memcpy along the complement runs.
         let plain_layout = mask.plaintext_layout();
         let mut plain: Vec<f32> = Vec::with_capacity(plain_layout.count());
@@ -153,10 +305,9 @@ impl SelectiveCodec {
         let mut out = vec![0.0f32; mask.total()];
         scatter_plain(&mask.plaintext_layout(), &update.plain, &mut out);
         let mut cursor = RunCursor::new(mask.runs());
-        for ct in &update.cts {
-            let values = self.ctx.decrypt_values(ct, sk);
+        self.decrypt_chunks_streamed(&update.cts, sk, |values| {
             cursor.scatter(&values, &mut out);
-        }
+        });
         assert_eq!(cursor.scattered(), mask.encrypted_count(), "short decrypt");
         out
     }
@@ -277,6 +428,43 @@ mod tests {
     }
 
     #[test]
+    fn parallel_encrypt_matches_sequential_ciphertext_for_ciphertext() {
+        // §Perf determinism gate: the worker-pool fan-out must produce the
+        // exact ciphertext stream of the sequential path, for any worker
+        // count, and leave the caller's RNG in the same state.
+        let ctx = small_ctx();
+        let (pk, sk) = {
+            let mut krng = ChaChaRng::from_seed(41, 0);
+            ctx.keygen(&mut krng)
+        };
+        let total = 2000; // 8 chunks at batch 256
+        let params: Vec<f32> = (0..total).map(|i| (i as f32 * 0.017).sin()).collect();
+        let sens: Vec<f32> = (0..total).map(|i| ((i * 7) % 611) as f32).collect();
+        let mask = EncryptionMask::top_p(&sens, 0.6);
+        let seq = SelectiveCodec::with_workers(ctx.clone(), 1);
+        let baseline = {
+            let mut rng = ChaChaRng::from_seed(42, 0);
+            let upd = seq.encrypt_update(&params, &mask, &pk, &mut rng);
+            (upd, rng.next_u64())
+        };
+        for workers in [2usize, 3, 8] {
+            let par = SelectiveCodec::with_workers(ctx.clone(), workers);
+            let mut rng = ChaChaRng::from_seed(42, 0);
+            let upd = par.encrypt_update(&params, &mask, &pk, &mut rng);
+            assert_eq!(upd.cts.len(), baseline.0.cts.len());
+            for (c, (a, b)) in upd.cts.iter().zip(baseline.0.cts.iter()).enumerate() {
+                assert_eq!(a, b, "workers={workers}: chunk {c} differs");
+            }
+            assert_eq!(upd.plain, baseline.0.plain, "workers={workers}");
+            assert_eq!(rng.next_u64(), baseline.1, "workers={workers}: rng drift");
+            // parallel decrypt agrees with the sequential decrypt
+            let d_seq = seq.decrypt_update(&baseline.0, &mask, &sk);
+            let d_par = par.decrypt_update(&upd, &mask, &sk);
+            assert_eq!(d_seq, d_par, "workers={workers}");
+        }
+    }
+
+    #[test]
     fn wire_bytes_scale_with_ratio() {
         let ctx = small_ctx();
         let ct_bytes = ctx.params.ciphertext_bytes();
@@ -286,7 +474,8 @@ mod tests {
         let params = vec![0.5f32; 2048];
         let sens: Vec<f32> = (0..2048).map(|i| i as f32).collect();
         let full = codec.encrypt_update(&params, &EncryptionMask::top_p(&sens, 1.0), &pk, &mut rng);
-        let tenth = codec.encrypt_update(&params, &EncryptionMask::top_p(&sens, 0.1), &pk, &mut rng);
+        let tenth =
+            codec.encrypt_update(&params, &EncryptionMask::top_p(&sens, 0.1), &pk, &mut rng);
         let none = codec.encrypt_update(&params, &EncryptionMask::top_p(&sens, 0.0), &pk, &mut rng);
         assert_eq!(full.wire_bytes(&codec.ctx), 8 * ct_bytes); // 2048/256 slots
         assert_eq!(none.wire_bytes(&codec.ctx), 2048 * 4);

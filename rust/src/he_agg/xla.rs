@@ -44,9 +44,7 @@ impl<'a> XlaAggregator<'a> {
     /// Flatten one ciphertext into u32 words (poly-major, limb-major).
     fn ct_words(&self, ct: &Ciphertext, out: &mut Vec<u32>) {
         for poly in [&ct.c0, &ct.c1] {
-            for limb in &poly.limbs {
-                out.extend(limb.iter().map(|&c| c as u32));
-            }
+            out.extend(poly.flat().iter().map(|&c| c as u32));
         }
     }
 
@@ -62,17 +60,9 @@ impl<'a> XlaAggregator<'a> {
         assert_eq!(words.len(), 2 * l * n);
         let mut polys = Vec::with_capacity(2);
         for p in 0..2 {
-            let limbs = (0..l)
-                .map(|li| {
-                    let off = (p * l + li) * n;
-                    words[off..off + n].iter().map(|&w| w as u64).collect()
-                })
-                .collect();
-            polys.push(RnsPoly {
-                n,
-                limbs,
-                ntt_form: false,
-            });
+            let off = p * l * n;
+            let data: Vec<u64> = words[off..off + l * n].iter().map(|&w| w as u64).collect();
+            polys.push(RnsPoly::from_flat(n, l, data, false));
         }
         let c1 = polys.pop().unwrap();
         let c0 = polys.pop().unwrap();

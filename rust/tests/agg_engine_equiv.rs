@@ -88,11 +88,11 @@ fn pipeline_shards4_identical_to_sequential() {
     for (ct_idx, (a, b)) in pipelined.cts.iter().zip(sequential.cts.iter()).enumerate() {
         for limb in 0..codec.ctx.params.num_limbs() {
             assert_eq!(
-                a.c0.limbs[limb], b.c0.limbs[limb],
+                a.c0.limb(limb), b.c0.limb(limb),
                 "ct {ct_idx} limb {limb}: c0 differs"
             );
             assert_eq!(
-                a.c1.limbs[limb], b.c1.limbs[limb],
+                a.c1.limb(limb), b.c1.limb(limb),
                 "ct {ct_idx} limb {limb}: c1 differs"
             );
         }
