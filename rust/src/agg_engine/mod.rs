@@ -33,7 +33,7 @@ pub mod stream;
 
 pub use cohort::{Cohort, CohortMember, CohortScheduler, Population};
 pub use shard::{ShardAccumulator, ShardCtSums, ShardPlan};
-pub use stream::{Arrival, StreamStats, StreamingAggregator};
+pub use stream::{Arrival, RoundIntake, StreamStats, StreamingAggregator};
 
 /// Which aggregation engine the coordinator runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

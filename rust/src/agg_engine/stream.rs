@@ -3,9 +3,13 @@
 //! Stages (DESIGN.md §3):
 //!
 //! 1. **Intake** — arrivals (one per participant, stamped with the
-//!    [`crate::netsim`] simulated transfer-completion time) are admitted in
-//!    arrival order through bounded fan-out channels, so shard workers
-//!    aggregate update `i` while update `i+1` is still "on the wire".
+//!    [`crate::netsim`] simulated transfer-completion time, or with the
+//!    wall-clock receive time when they come off a real socket via
+//!    [`crate::transport`]) are admitted in arrival order through bounded
+//!    fan-out channels, so shard workers aggregate update `i` while update
+//!    `i+1` is still "on the wire". Batch callers hand one vector to
+//!    [`StreamingAggregator::aggregate`]; a transport offers arrivals one at
+//!    a time through [`RoundIntake`].
 //! 2. **Quorum seal** — the round seals once every non-straggler has
 //!    arrived: the first `quorum` arrivals are always accepted, later ones
 //!    only within `straggler_timeout_secs` of the quorum point. Dropped
@@ -109,37 +113,117 @@ impl<'a> StreamingAggregator<'a> {
     /// f64 fold is positional either way.
     pub fn aggregate_with_mask(
         &self,
-        mut arrivals: Vec<Arrival>,
+        arrivals: Vec<Arrival>,
         mask: Option<&EncryptionMask>,
     ) -> anyhow::Result<(EncryptedUpdate, StreamStats)> {
         anyhow::ensure!(!arrivals.is_empty(), "streaming round with no arrivals");
-        arrivals.sort_by(|a, b| {
+        let mut intake = self.begin_round(mask);
+        for a in arrivals {
+            intake.offer(a)?;
+        }
+        intake.seal()
+    }
+
+    /// Open an incremental round: a real transport offers arrivals one at a
+    /// time as their transfers complete (wall-clock stamps), instead of
+    /// handing over one pre-built vector. [`RoundIntake::seal`] applies the
+    /// same quorum/straggler policy and produces the same aggregate as the
+    /// batch entry points.
+    pub fn begin_round<'m>(&self, mask: Option<&'m EncryptionMask>) -> RoundIntake<'a, 'm> {
+        RoundIntake {
+            params: self.params,
+            cfg: self.cfg,
+            mask,
+            arrivals: Vec::new(),
+            shape: None,
+            quorum_reached_at: None,
+        }
+    }
+}
+
+/// One round's incremental intake (see [`StreamingAggregator::begin_round`]).
+///
+/// `offer` validates and buffers each arrival; `seal` sorts by arrival stamp,
+/// applies the quorum/straggler policy by truncating the straggler tail **in
+/// place** (the intake owns its arrivals — admission never deep-copies an
+/// update, enforced by an allocation-count gate in `tests/zero_alloc.rs`),
+/// and runs the sharded aggregation over the accepted prefix.
+pub struct RoundIntake<'p, 'm> {
+    params: &'p CkksParams,
+    cfg: EngineConfig,
+    mask: Option<&'m EncryptionMask>,
+    arrivals: Vec<Arrival>,
+    /// `(n_cts, n_plain, total)` of the first offered update.
+    shape: Option<(usize, usize, usize)>,
+    /// Arrival stamp at which the `quorum`-th offer landed (offer order).
+    quorum_reached_at: Option<f64>,
+}
+
+impl<'p, 'm> RoundIntake<'p, 'm> {
+    /// Admit one arrival. Shape validation covers every offered update —
+    /// including ones the seal-time policy later drops — exactly like the
+    /// batch path.
+    pub fn offer(&mut self, a: Arrival) -> anyhow::Result<()> {
+        let shape = (a.update.cts.len(), a.update.plain.len(), a.update.total);
+        match self.shape {
+            None => self.shape = Some(shape),
+            Some(s) => anyhow::ensure!(
+                s == shape,
+                "heterogeneous update shapes in streaming round"
+            ),
+        }
+        self.arrivals.push(a);
+        if self.quorum_reached_at.is_none() {
+            if let Some(q) = self.cfg.quorum {
+                if self.arrivals.len() >= q.max(1) {
+                    self.quorum_reached_at = Some(self.arrivals.last().unwrap().arrival_secs);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Arrivals offered so far.
+    pub fn offered(&self) -> usize {
+        self.arrivals.len()
+    }
+
+    /// Advisory straggler cutoff for the transport: once the quorum-th offer
+    /// has landed, waiting past `quorum stamp + straggler_timeout` cannot add
+    /// an accepted arrival, so the intake loop may stop accepting. `None`
+    /// until quorum is reached (or when no quorum is configured). The
+    /// authoritative accept/drop decision is re-derived at [`Self::seal`]
+    /// over the sorted arrivals, so a slightly-late stop never skews stats.
+    pub fn cutoff_secs(&self) -> Option<f64> {
+        self.quorum_reached_at
+            .map(|t| t + self.cfg.straggler_timeout_secs)
+    }
+
+    /// Seal the round: quorum/straggler filter, sharded aggregation,
+    /// assembly. Consumes the intake.
+    pub fn seal(mut self) -> anyhow::Result<(EncryptedUpdate, StreamStats)> {
+        anyhow::ensure!(!self.arrivals.is_empty(), "streaming round with no arrivals");
+        self.arrivals.sort_by(|a, b| {
             a.arrival_secs
                 .total_cmp(&b.arrival_secs)
                 .then(a.client.cmp(&b.client))
         });
-        let n_cts = arrivals[0].update.cts.len();
-        let n_plain = arrivals[0].update.plain.len();
-        let total = arrivals[0].update.total;
-        anyhow::ensure!(
-            arrivals
-                .iter()
-                .all(|a| a.update.cts.len() == n_cts
-                    && a.update.plain.len() == n_plain
-                    && a.update.total == total),
-            "heterogeneous update shapes in streaming round"
-        );
+        let (n_cts, n_plain, total) = self.shape.expect("non-empty round has a shape");
 
-        // Quorum/straggler policy over the arrival-ordered list.
-        let offered = arrivals.len();
+        // Quorum/straggler policy over the arrival-ordered list: the first
+        // `quorum` arrivals are always accepted, later ones only within the
+        // timeout of the quorum point. Sorted by stamp, the accepted set is
+        // a prefix — partition in place by truncating the straggler tail
+        // (no per-arrival clones).
+        let offered = self.arrivals.len();
         let quorum = self.cfg.quorum.unwrap_or(offered).clamp(1, offered);
-        let cutoff = arrivals[quorum - 1].arrival_secs + self.cfg.straggler_timeout_secs;
-        let accepted: Vec<Arrival> = arrivals
-            .iter()
-            .enumerate()
-            .filter(|(i, a)| *i < quorum || a.arrival_secs <= cutoff)
-            .map(|(_, a)| a.clone())
-            .collect();
+        let cutoff = self.arrivals[quorum - 1].arrival_secs + self.cfg.straggler_timeout_secs;
+        let keep = self
+            .arrivals
+            .partition_point(|a| a.arrival_secs <= cutoff)
+            .max(quorum);
+        self.arrivals.truncate(keep);
+        let accepted = &self.arrivals;
         let stats = StreamStats {
             offered,
             accepted: accepted.len(),
@@ -152,6 +236,7 @@ impl<'a> StreamingAggregator<'a> {
                 .fold(0.0f64, f64::max),
         };
 
+        let mask = self.mask;
         let plan = match mask {
             Some(m) => {
                 anyhow::ensure!(m.total() == total, "mask/update total mismatch");
@@ -188,7 +273,7 @@ impl<'a> StreamingAggregator<'a> {
             // Intake: feed accepted arrivals in arrival order. The bounded
             // channels backpressure the intake, so aggregation of early
             // arrivals overlaps "transfer" of later ones.
-            for a in &accepted {
+            for a in accepted {
                 let weight = Arc::new(params.encode_weight(a.alpha));
                 for tx in &senders {
                     let item = WorkItem {
@@ -492,5 +577,97 @@ mod tests {
         let ctx = CkksContext::new(128, 2, 30).unwrap();
         let engine = StreamingAggregator::new(&ctx.params, EngineConfig::default());
         assert!(engine.aggregate(Vec::new()).is_err());
+        // the incremental path agrees: sealing an empty intake is an error
+        assert!(engine.begin_round(None).seal().is_err());
+    }
+
+    #[test]
+    fn incremental_intake_matches_batch_bitwise() {
+        // Offering arrivals one at a time (out of stamp order, as a real
+        // transport might) seals to the same aggregate and stats as the
+        // batch entry point.
+        let (codec, updates, alphas, mask) = fixture(6, 800, 0.4);
+        let times = [0.4, 0.1, 0.9, 0.2, 50.0, 0.3];
+        let cfg = EngineConfig {
+            engine: Engine::Pipeline,
+            shards: 3,
+            quorum: Some(4),
+            straggler_timeout_secs: 1.0,
+        };
+        let engine = StreamingAggregator::new(&codec.ctx.params, cfg);
+        let arrivals = arrivals_of(&updates, &alphas, &times);
+        let (batch_agg, batch_stats) = engine
+            .aggregate_with_mask(arrivals.clone(), Some(&mask))
+            .unwrap();
+        let mut intake = engine.begin_round(Some(&mask));
+        for a in arrivals {
+            intake.offer(a).unwrap();
+        }
+        assert_eq!(intake.offered(), 6);
+        let (inc_agg, inc_stats) = intake.seal().unwrap();
+        assert_eq!(inc_stats.offered, batch_stats.offered);
+        assert_eq!(inc_stats.accepted, batch_stats.accepted);
+        assert_eq!(inc_stats.dropped_stragglers, batch_stats.dropped_stragglers);
+        assert_eq!(inc_stats.accepted_clients, batch_stats.accepted_clients);
+        assert!((inc_stats.alpha_mass - batch_stats.alpha_mass).abs() < 1e-15);
+        assert_eq!(inc_stats.dropped_stragglers, 1); // client 4 at t=50
+        for (a, b) in inc_agg.cts.iter().zip(batch_agg.cts.iter()) {
+            assert_eq!(a.c0, b.c0);
+            assert_eq!(a.c1, b.c1);
+        }
+        assert_eq!(inc_agg.plain, batch_agg.plain);
+    }
+
+    #[test]
+    fn intake_rejects_heterogeneous_shapes() {
+        let (codec, updates, alphas, _mask) = fixture(2, 300, 0.5);
+        let (_, small_updates, small_alphas, _) = fixture(1, 200, 0.5);
+        let cfg = EngineConfig {
+            engine: Engine::Pipeline,
+            shards: 2,
+            quorum: None,
+            straggler_timeout_secs: 1.0,
+        };
+        let engine = StreamingAggregator::new(&codec.ctx.params, cfg);
+        let mut intake = engine.begin_round(None);
+        for a in arrivals_of(&updates, &alphas, &[0.1, 0.2]) {
+            intake.offer(a).unwrap();
+        }
+        let stray = arrivals_of(&small_updates, &small_alphas, &[0.3]).pop().unwrap();
+        assert!(intake.offer(stray).is_err());
+    }
+
+    #[test]
+    fn intake_cutoff_hint_tracks_quorum() {
+        let (codec, updates, alphas, _mask) = fixture(3, 300, 0.5);
+        let cfg = EngineConfig {
+            engine: Engine::Pipeline,
+            shards: 2,
+            quorum: Some(2),
+            straggler_timeout_secs: 1.5,
+        };
+        let engine = StreamingAggregator::new(&codec.ctx.params, cfg);
+        let mut intake = engine.begin_round(None);
+        let mut arrivals = arrivals_of(&updates, &alphas, &[0.2, 0.5, 0.9]);
+        intake.offer(arrivals.remove(0)).unwrap();
+        assert_eq!(intake.cutoff_secs(), None); // quorum not reached
+        intake.offer(arrivals.remove(0)).unwrap();
+        let cutoff = intake.cutoff_secs().unwrap();
+        assert!((cutoff - 2.0).abs() < 1e-12); // 0.5 + 1.5
+        // no quorum configured → never a cutoff hint
+        let no_quorum = StreamingAggregator::new(
+            &codec.ctx.params,
+            EngineConfig {
+                engine: Engine::Pipeline,
+                shards: 2,
+                quorum: None,
+                straggler_timeout_secs: 1.5,
+            },
+        );
+        let mut open = no_quorum.begin_round(None);
+        for a in arrivals_of(&updates, &alphas, &[0.1, 0.2, 0.3]) {
+            open.offer(a).unwrap();
+        }
+        assert_eq!(open.cutoff_secs(), None);
     }
 }

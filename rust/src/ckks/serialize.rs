@@ -138,10 +138,20 @@ pub fn shard_wire_bytes(params: &CkksParams, lo: usize, hi: usize) -> usize {
 
 /// Serialize limbs [lo, hi) of a ciphertext.
 pub fn ciphertext_shard_to_bytes(ct: &Ciphertext, lo: usize, hi: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(shard_header_bytes() + 2 * (hi - lo) * ct.c0.n * 4);
+    ciphertext_shard_append(ct, lo, hi, &mut out);
+    out
+}
+
+/// Append the shard wire format for limbs [lo, hi) to `out`. The transport
+/// frame writer serializes straight into its (reused) frame buffer — no
+/// intermediate per-frame vector.
+pub fn ciphertext_shard_append(ct: &Ciphertext, lo: usize, hi: usize, out: &mut Vec<u8>) {
     assert!(!ct.c0.ntt_form && !ct.c1.ntt_form);
     assert!(lo < hi && hi <= ct.c0.num_limbs(), "bad limb range");
     let n = ct.c0.n;
-    let mut out = Vec::with_capacity(shard_header_bytes() + 2 * (hi - lo) * n * 4);
+    out.reserve(shard_header_bytes() + 2 * (hi - lo) * n * 4);
+    let start = out.len();
     out.extend_from_slice(&SHARD_MAGIC.to_le_bytes());
     out.extend_from_slice(&VERSION.to_le_bytes());
     out.extend_from_slice(&(n as u32).to_le_bytes());
@@ -149,7 +159,7 @@ pub fn ciphertext_shard_to_bytes(ct: &Ciphertext, lo: usize, hi: usize) -> Vec<u
     out.extend_from_slice(&(hi as u32).to_le_bytes());
     out.extend_from_slice(&(ct.n_values as u32).to_le_bytes());
     out.extend_from_slice(&ct.scale.to_le_bytes());
-    debug_assert_eq!(out.len(), shard_header_bytes());
+    debug_assert_eq!(out.len() - start, shard_header_bytes());
     for poly in [&ct.c0, &ct.c1] {
         for l in lo..hi {
             for &c in poly.limb(l) {
@@ -158,7 +168,6 @@ pub fn ciphertext_shard_to_bytes(ct: &Ciphertext, lo: usize, hi: usize) -> Vec<u
             }
         }
     }
-    out
 }
 
 /// Deserialize a limb-range shard; validates header against `params`.
@@ -309,6 +318,20 @@ mod tests {
         // full-format bytes are not a shard
         let full = ciphertext_to_bytes(&ct);
         assert!(ciphertext_shard_from_bytes(&full, &params).is_err());
+    }
+
+    #[test]
+    fn shard_append_writes_after_existing_prefix() {
+        let params = Arc::new(CkksParams::new(128, 2, 30).unwrap());
+        let encoder = Encoder::new(params.clone());
+        let mut rng = ChaChaRng::from_seed(6, 0);
+        let (pk, _) = keygen(&params, &mut rng);
+        let ct = encrypt(&params, &pk, &encoder.encode(&[0.5]), 1, &mut rng);
+        let direct = ciphertext_shard_to_bytes(&ct, 0, 2);
+        let mut buf = vec![0xAAu8; 7];
+        ciphertext_shard_append(&ct, 0, 2, &mut buf);
+        assert_eq!(&buf[..7], &[0xAA; 7]);
+        assert_eq!(&buf[7..], &direct[..]);
     }
 
     #[test]

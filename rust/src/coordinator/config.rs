@@ -52,6 +52,31 @@ impl MaskGranularity {
     }
 }
 
+/// How client updates reach the server's aggregation intake.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Transport {
+    /// In-process simulator: arrivals are stamped with `netsim` transfer
+    /// times derived from the configured bandwidth profile.
+    Sim,
+    /// Real TCP: each participant uploads its serialized update over a
+    /// socket ([`crate::transport`]); arrivals are stamped with wall-clock
+    /// receive times and a mid-upload disconnect becomes a dropped
+    /// straggler. TCP rounds always aggregate through the streaming intake
+    /// (bitwise-identical to the sequential kernel), so `--engine` only
+    /// selects the aggregation loop of the simulator path.
+    Tcp,
+}
+
+impl Transport {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "sim" | "simulated" => Transport::Sim,
+            "tcp" => Transport::Tcp,
+            other => anyhow::bail!("unknown transport '{other}' (expected: sim | tcp)"),
+        })
+    }
+}
+
 /// Aggregation backend.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Backend {
@@ -117,6 +142,17 @@ pub struct FlConfig {
     /// participants are a cohort of `clients` sampled from this population
     /// (lazily materialized — see `agg_engine::cohort`).
     pub population: Option<u64>,
+    /// Update delivery: in-process simulator or real TCP sockets.
+    pub transport: Transport,
+    /// Bind address for the TCP intake (`--listen`; port 0 = ephemeral).
+    pub listen: String,
+    /// Address uploaders dial (`--connect`; defaults to the bound listen
+    /// address, which is the loopback single-process case).
+    pub connect: Option<String>,
+    /// Hard wall-clock bound in seconds on one TCP intake round
+    /// (`--intake-max-wait`; default 30 s + the straggler timeout). Raise
+    /// it for slow links where honest uploads take longer.
+    pub intake_max_wait: Option<f64>,
 }
 
 impl Default for FlConfig {
@@ -145,6 +181,10 @@ impl Default for FlConfig {
             quorum: None,
             straggler_timeout: 5.0,
             population: None,
+            transport: Transport::Sim,
+            listen: "127.0.0.1:0".to_string(),
+            connect: None,
+            intake_max_wait: None,
         }
     }
 }
@@ -196,6 +236,10 @@ impl FlConfig {
                 .parsed("straggler-timeout")?
                 .unwrap_or(d.straggler_timeout),
             population: args.parsed("population")?,
+            transport: Transport::parse(&args.get_or("transport", "sim"))?,
+            listen: args.get_or("listen", &d.listen),
+            connect: args.get("connect").map(String::from),
+            intake_max_wait: args.parsed("intake-max-wait")?,
         })
     }
 
@@ -237,6 +281,27 @@ mod tests {
         assert_eq!(c.quorum, None);
         assert_eq!(c.population, None);
         assert_eq!(c.mask_granularity, MaskGranularity::Param);
+        assert_eq!(c.transport, Transport::Sim);
+        assert_eq!(c.listen, "127.0.0.1:0");
+        assert_eq!(c.connect, None);
+    }
+
+    #[test]
+    fn transport_options_parse() {
+        let args = Args::parse_from(
+            "run --transport tcp --listen 127.0.0.1:7070 --connect 10.0.0.5:7070 \
+             --intake-max-wait 120"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let c = FlConfig::from_args(&args).unwrap();
+        assert_eq!(c.transport, Transport::Tcp);
+        assert_eq!(c.listen, "127.0.0.1:7070");
+        assert_eq!(c.connect.as_deref(), Some("10.0.0.5:7070"));
+        assert_eq!(c.intake_max_wait, Some(120.0));
+        assert_eq!(Transport::parse("sim").unwrap(), Transport::Sim);
+        assert_eq!(Transport::parse("simulated").unwrap(), Transport::Sim);
+        assert!(Transport::parse("udp").is_err());
     }
 
     #[test]
@@ -287,6 +352,8 @@ mod tests {
             "run --shards 1O",
             "run --straggler-timeout soon",
             "run --mask-granularity tensor",
+            "run --transport udp",
+            "run --intake-max-wait soon",
         ] {
             let args = Args::parse_from(bad.split_whitespace().map(String::from));
             assert!(FlConfig::from_args(&args).is_err(), "{bad}");

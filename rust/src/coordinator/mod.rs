@@ -11,5 +11,5 @@ pub mod config;
 pub mod key_authority;
 pub mod server;
 
-pub use config::{Backend, FlConfig, KeyMode, MaskGranularity, Selection};
+pub use config::{Backend, FlConfig, KeyMode, MaskGranularity, Selection, Transport};
 pub use server::{FlReport, FlServer, RoundMetrics};

@@ -4,7 +4,7 @@
 //! Figs. 8/14 and the deployment-platform monitoring of Appendix C).
 
 use super::client::FlClient;
-use super::config::{Backend, FlConfig, MaskGranularity, Selection};
+use super::config::{Backend, FlConfig, MaskGranularity, Selection, Transport};
 use super::key_authority::{self, KeyMaterial};
 use crate::agg_engine::{Arrival, CohortScheduler, Engine, Population, StreamingAggregator};
 use crate::ckks::CkksContext;
@@ -13,13 +13,19 @@ use crate::he_agg::xla::XlaAggregator;
 use crate::he_agg::{native, selective, EncryptedUpdate, EncryptionMask, SelectiveCodec};
 use crate::netsim::{concurrent_arrivals, SimClock};
 use crate::runtime::Runtime;
+use crate::transport::{
+    IntakeConfig, TcpIntake, UpdateShape, UploadConfig, UNIDENTIFIED_CLIENT,
+};
 use crate::util::json::Json;
 use std::sync::Arc;
 use std::time::Instant;
 
 /// Per-round overhead breakdown (the paper's "training cycle" dissection).
 /// `comm_secs` uses parallel-uplink accounting (round comm = max over the
-/// concurrent uploads + broadcast time), not the serial sum.
+/// concurrent uploads + broadcast time), not the serial sum. Under
+/// `--transport tcp` the uplink part is the measured wall-clock intake time
+/// instead of a simulated transfer time; the downlink broadcast stays
+/// simulated (DESIGN.md §8).
 #[derive(Debug, Clone, Default)]
 pub struct RoundMetrics {
     pub round: usize,
@@ -371,12 +377,40 @@ impl<'a> FlServer<'a> {
         let scheduler = cfg
             .population
             .map(|n| CohortScheduler::new(Population::new(n, cfg.seed), cfg.clients));
+        // TCP transport: bind the intake once for the whole task — rebinding
+        // a fixed `--listen` port every round would hit TIME_WAIT
+        // (EADDRINUSE) from the previous round's closed connections. The
+        // round id in every frame keeps rounds from bleeding into each
+        // other on the shared listener.
+        let tcp_intake = match cfg.transport {
+            Transport::Tcp => {
+                let shape = UpdateShape::for_round(&self.codec.ctx, &mask);
+                Some(TcpIntake::bind(
+                    &cfg.listen,
+                    self.codec.ctx.params.clone(),
+                    shape,
+                )?)
+            }
+            Transport::Sim => None,
+        };
+        let tcp_dial = match (&tcp_intake, &cfg.connect) {
+            (Some(_), Some(a)) => Some(a.clone()),
+            (Some(intake), None) => Some(intake.local_addr()?.to_string()),
+            (None, _) => None,
+        };
+        // One Parallel clock spans every round; per-round metrics are deltas
+        // and `finish_round` resets the per-round uplink max at each
+        // boundary (a reused clock without the reset would max round-2
+        // uploads against round 1's slowest transfer).
+        let mut clock = SimClock::parallel();
         for round in 0..cfg.rounds {
             let mut rm = RoundMetrics {
                 round,
                 ..Default::default()
             };
-            let mut clock = SimClock::parallel();
+            let comm0 = clock.comm_secs;
+            let up0 = clock.bytes_up;
+            let down0 = clock.bytes_down;
 
             let cohort = scheduler.as_ref().map(|s| s.sample(round as u64));
             if let (Some(c), Some(s)) = (&cohort, &scheduler) {
@@ -433,46 +467,124 @@ impl<'a> FlServer<'a> {
             // server-side homomorphic aggregation; uplink time is charged
             // only for uploads the round actually waited for
             let t = Instant::now();
-            let (agg, alpha_mass) = match cfg.engine {
-                Engine::Sequential => {
-                    for &b in &upload_bytes {
-                        clock.upload(b, cfg.bandwidth);
-                    }
-                    (self.aggregate(&updates, &alphas)?, 1.0)
-                }
-                Engine::Pipeline => {
-                    let arrival_secs =
-                        concurrent_arrivals(&upload_bytes, &train_starts, cfg.bandwidth);
-                    let arrivals: Vec<Arrival> = updates
-                        .drain(..)
-                        .zip(alphas.iter())
-                        .zip(arrival_secs.iter())
-                        .enumerate()
-                        .map(|(k, ((upd, &alpha), &at))| Arrival {
+            let mut wire_secs = 0.0f64;
+            let (agg, alpha_mass) = if cfg.transport == Transport::Tcp {
+                // Real loopback/LAN delivery: one uploader thread per
+                // participant streams its (staged) update over a socket; the
+                // intake stamps completions with wall-clock times, the
+                // streaming engine applies the quorum policy to those
+                // stamps, and a client failing mid-upload is folded into
+                // the straggler count.
+                let intake = tcp_intake.as_ref().expect("bound at task setup");
+                let dial = tcp_dial.as_deref().expect("resolved at task setup");
+                let icfg = IntakeConfig {
+                    round_id: round as u64,
+                    expected_uploads: active.len(),
+                    quorum: cfg.quorum,
+                    straggler_timeout: std::time::Duration::from_secs_f64(
+                        cfg.straggler_timeout.max(0.0),
+                    ),
+                    // hard intake bound: explicit --intake-max-wait, or base
+                    // slack plus the configured straggler window so a wide
+                    // --straggler-timeout is never silently truncated; also
+                    // what bounds a fully-failed round (e.g. a misconfigured
+                    // --connect where no upload ever lands)
+                    max_wait: std::time::Duration::from_secs_f64(
+                        cfg.intake_max_wait
+                            .unwrap_or(30.0 + cfg.straggler_timeout.max(0.0))
+                            .max(1.0),
+                    ),
+                    ..IntakeConfig::default()
+                };
+                let outcome = std::thread::scope(|s| {
+                    for (k, upd) in updates.drain(..).enumerate() {
+                        let ucfg = UploadConfig {
+                            round_id: round as u64,
                             client: client_ids[k],
-                            alpha,
-                            arrival_secs: at,
-                            update: Arc::new(upd),
-                        })
-                        .collect();
-                    let engine =
-                        StreamingAggregator::new(&self.codec.ctx.params, cfg.engine_config());
-                    // run-aligned plaintext shard plan from the shared mask
-                    let (agg, stats) = engine.aggregate_with_mask(arrivals, Some(&mask))?;
-                    let accepted: std::collections::HashSet<u64> =
-                        stats.accepted_clients.iter().copied().collect();
-                    for (cid, &b) in client_ids.iter().zip(upload_bytes.iter()) {
-                        if accepted.contains(cid) {
-                            clock.upload(b, cfg.bandwidth);
-                        } else {
-                            // dropped straggler: bytes were sent but the
-                            // round never waited for them
-                            clock.upload_bytes_only(b);
-                        }
+                            alpha: alphas[k],
+                            ..UploadConfig::default()
+                        };
+                        s.spawn(move || {
+                            if let Err(e) = crate::transport::upload_update(dial, &ucfg, &upd)
+                            {
+                                crate::log_debug!(
+                                    "transport",
+                                    "client {} upload failed: {e}",
+                                    ucfg.client
+                                );
+                            }
+                        });
                     }
-                    rm.participants = stats.accepted;
-                    rm.stragglers_dropped = stats.dropped_stragglers;
-                    (agg, stats.alpha_mass)
+                    intake.collect_round(&icfg)
+                })?;
+                wire_secs = outcome.elapsed_secs;
+                clock.upload_bytes_only(outcome.bytes_received);
+                let engine =
+                    StreamingAggregator::new(&self.codec.ctx.params, cfg.engine_config());
+                let mut round_intake = engine.begin_round(Some(&mask));
+                for a in outcome.arrivals {
+                    round_intake.offer(a)?;
+                }
+                let (agg, mut stats) = round_intake.seal()?;
+                // Only identified participants whose upload failed count as
+                // dropped stragglers — anonymous probes and retries of an
+                // already-accepted client would otherwise skew the round's
+                // reported drop rate.
+                let accepted_ids: std::collections::HashSet<u64> =
+                    stats.accepted_clients.iter().copied().collect();
+                let failed_participants = outcome
+                    .failed
+                    .iter()
+                    .filter(|&&id| id != UNIDENTIFIED_CLIENT && !accepted_ids.contains(&id))
+                    .collect::<std::collections::HashSet<_>>()
+                    .len();
+                stats.offered += failed_participants;
+                stats.dropped_stragglers += failed_participants;
+                rm.participants = stats.accepted;
+                rm.stragglers_dropped = stats.dropped_stragglers;
+                (agg, stats.alpha_mass)
+            } else {
+                match cfg.engine {
+                    Engine::Sequential => {
+                        for &b in &upload_bytes {
+                            clock.upload(b, cfg.bandwidth);
+                        }
+                        (self.aggregate(&updates, &alphas)?, 1.0)
+                    }
+                    Engine::Pipeline => {
+                        let arrival_secs =
+                            concurrent_arrivals(&upload_bytes, &train_starts, cfg.bandwidth);
+                        let arrivals: Vec<Arrival> = updates
+                            .drain(..)
+                            .zip(alphas.iter())
+                            .zip(arrival_secs.iter())
+                            .enumerate()
+                            .map(|(k, ((upd, &alpha), &at))| Arrival {
+                                client: client_ids[k],
+                                alpha,
+                                arrival_secs: at,
+                                update: Arc::new(upd),
+                            })
+                            .collect();
+                        let engine =
+                            StreamingAggregator::new(&self.codec.ctx.params, cfg.engine_config());
+                        // run-aligned plaintext shard plan from the shared mask
+                        let (agg, stats) = engine.aggregate_with_mask(arrivals, Some(&mask))?;
+                        let accepted: std::collections::HashSet<u64> =
+                            stats.accepted_clients.iter().copied().collect();
+                        for (cid, &b) in client_ids.iter().zip(upload_bytes.iter()) {
+                            if accepted.contains(cid) {
+                                clock.upload(b, cfg.bandwidth);
+                            } else {
+                                // dropped straggler: bytes were sent but the
+                                // round never waited for them
+                                clock.upload_bytes_only(b);
+                            }
+                        }
+                        rm.participants = stats.accepted;
+                        rm.stragglers_dropped = stats.dropped_stragglers;
+                        (agg, stats.alpha_mass)
+                    }
                 }
             };
             rm.aggregate_secs = t.elapsed().as_secs_f64();
@@ -495,9 +607,9 @@ impl<'a> FlServer<'a> {
             }
             rm.decrypt_secs = t.elapsed().as_secs_f64();
 
-            rm.comm_secs = clock.comm_secs;
-            rm.upload_bytes = clock.bytes_up;
-            rm.download_bytes = clock.bytes_down;
+            rm.comm_secs = clock.comm_secs - comm0 + wire_secs;
+            rm.upload_bytes = clock.bytes_up - up0;
+            rm.download_bytes = clock.bytes_down - down0;
             rm.train_loss = loss_sum / active.len() as f32;
             crate::log_debug!(
                 "server",
@@ -508,6 +620,7 @@ impl<'a> FlServer<'a> {
                 rm.aggregate_secs
             );
             report.rounds.push(rm);
+            clock.finish_round();
 
             // periodic evaluation
             if cfg.eval_every > 0 && (round + 1) % cfg.eval_every == 0 {
@@ -632,6 +745,35 @@ mod tests {
             .map(|(a, b)| (a - b).abs())
             .fold(0.0f32, f32::max);
         assert!(max_err < 1e-6, "pipeline diverged from sequential: {max_err}");
+    }
+
+    #[test]
+    fn tcp_transport_round_matches_sim_transport() {
+        let Some(rt) = runtime() else { return };
+        // Same seeds, same staged encryption: delivering the updates over
+        // real loopback sockets instead of the in-process vector must not
+        // change the trained model (no stragglers at loopback speed, quorum
+        // unset). Tolerance only covers benign XLA training nondeterminism
+        // between the two runs — the aggregation itself is bitwise-stable.
+        let mut sim = quick_cfg();
+        sim.backend = Backend::Native;
+        sim.dropout = 0.0;
+        sim.rounds = 2;
+        let mut tcp = sim.clone();
+        tcp.transport = Transport::Tcp;
+        tcp.engine = crate::agg_engine::Engine::Pipeline;
+        tcp.shards = 2;
+        let (_, ga) = FlServer::new(&rt, sim).unwrap().run().unwrap();
+        let (rb, gb) = FlServer::new(&rt, tcp).unwrap().run().unwrap();
+        assert_eq!(rb.rounds.len(), 2);
+        assert!(rb.rounds.iter().all(|r| r.stragglers_dropped == 0));
+        assert!(rb.rounds.iter().all(|r| r.upload_bytes > 0));
+        let max_err = ga
+            .iter()
+            .zip(gb.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 1e-6, "tcp transport diverged from sim: {max_err}");
     }
 
     #[test]

@@ -163,51 +163,83 @@ impl SelectiveCodec {
         ct
     }
 
-    /// Encrypt every chunk of `enc_values`, fanning chunks across the worker
-    /// pool. `rngs` holds one pre-forked RNG per chunk, so the output is a
-    /// pure function of those streams — independent of worker count and
-    /// completion order.
-    fn encrypt_chunks(
+    /// Encrypt every chunk of the compacted value vector, handing finished
+    /// ciphertexts to `consume` **in chunk order as they complete** — the
+    /// transport client pushes chunk `c` onto the wire while chunks `> c`
+    /// are still encrypting on the worker pool. Worker `w` owns chunks
+    /// `w, w+W, …` with its own pooled scratch and hands results over a
+    /// bounded channel, so at most O(workers) finished chunks are ever
+    /// buffered ahead of the consumer. One pre-forked RNG per chunk (forked
+    /// from the caller's rng in chunk order) makes the ciphertext stream —
+    /// and the caller's post-call rng state — a pure function of the
+    /// caller's RNG, independent of worker count, scheduling, or consumer
+    /// speed: byte-for-byte the stream [`SelectiveCodec::encrypt_update`]
+    /// produces.
+    ///
+    /// Returns the compacted plaintext remainder and the chunk count.
+    pub fn encrypt_update_streamed(
         &self,
-        enc_values: &[f64],
-        rngs: &mut [ChaChaRng],
+        params: &[f32],
+        mask: &EncryptionMask,
         pk: &PublicKey,
-    ) -> Vec<Ciphertext> {
-        let k = rngs.len();
-        let mut out: Vec<Option<Ciphertext>> = (0..k).map(|_| None).collect();
-        let workers = self.workers.min(k).max(1);
+        rng: &mut ChaChaRng,
+        mut consume: impl FnMut(usize, Ciphertext),
+    ) -> (Vec<f32>, usize) {
+        assert_eq!(params.len(), mask.total(), "mask/params length mismatch");
+        let batch = self.ctx.batch();
+        // Encrypted part: gather run segments into the f64 staging buffer.
+        let mut enc_values: Vec<f64> = Vec::with_capacity(mask.encrypted_count());
+        for r in mask.runs() {
+            enc_values.extend(params[r.lo..r.hi].iter().map(|&v| v as f64));
+        }
+        // Plaintext part: segment memcpy along the complement runs.
+        let plain_layout = mask.plaintext_layout();
+        let mut plain: Vec<f32> = Vec::with_capacity(plain_layout.count());
+        for r in plain_layout.runs() {
+            plain.extend_from_slice(&params[r.lo..r.hi]);
+        }
+        let n_chunks = enc_values.len().div_ceil(batch);
+        let chunk_rngs: Vec<ChaChaRng> = (0..n_chunks).map(|c| rng.fork(c as u64)).collect();
+        let workers = self.workers.min(n_chunks).max(1);
         if workers <= 1 {
             let mut scratch = CkksScratch::new(&self.ctx.params);
-            for (c, (slot, chunk_rng)) in out.iter_mut().zip(rngs.iter_mut()).enumerate() {
-                *slot = Some(self.encrypt_one_chunk(enc_values, c, pk, chunk_rng, &mut scratch));
+            for (c, mut chunk_rng) in chunk_rngs.into_iter().enumerate() {
+                let ct = self.encrypt_one_chunk(&enc_values, c, pk, &mut chunk_rng, &mut scratch);
+                consume(c, ct);
             }
         } else {
-            let per = k.div_ceil(workers);
+            // Stride-distribute the forked rngs: worker w owns chunks
+            // w, w+W, … and produces them in ascending order.
+            let mut worker_rngs: Vec<Vec<ChaChaRng>> = vec![Vec::new(); workers];
+            for (c, r) in chunk_rngs.into_iter().enumerate() {
+                worker_rngs[c % workers].push(r);
+            }
+            let enc_values = &enc_values;
             std::thread::scope(|s| {
-                for (block, (slots, rng_block)) in
-                    out.chunks_mut(per).zip(rngs.chunks_mut(per)).enumerate()
-                {
-                    let base = block * per;
+                let mut rxs = Vec::with_capacity(workers);
+                for (w, mut rngs_w) in worker_rngs.into_iter().enumerate() {
+                    let (tx, rx) = std::sync::mpsc::sync_channel::<Ciphertext>(2);
+                    rxs.push(rx);
                     s.spawn(move || {
                         let mut scratch = CkksScratch::new(&self.ctx.params);
-                        for (i, (slot, chunk_rng)) in
-                            slots.iter_mut().zip(rng_block.iter_mut()).enumerate()
-                        {
-                            *slot = Some(self.encrypt_one_chunk(
-                                enc_values,
-                                base + i,
-                                pk,
-                                chunk_rng,
-                                &mut scratch,
-                            ));
+                        for (i, chunk_rng) in rngs_w.iter_mut().enumerate() {
+                            let c = w + i * workers;
+                            let ct =
+                                self.encrypt_one_chunk(enc_values, c, pk, chunk_rng, &mut scratch);
+                            if tx.send(ct).is_err() {
+                                break; // consumer side gone
+                            }
                         }
                     });
                 }
+                // In-order drain: chunk c comes from worker c % workers.
+                for c in 0..n_chunks {
+                    let ct = rxs[c % workers].recv().expect("encrypt worker hung up");
+                    consume(c, ct);
+                }
             });
         }
-        out.into_iter()
-            .map(|ct| ct.expect("chunk not encrypted"))
-            .collect()
+        (plain, n_chunks)
     }
 
     /// Decrypt + decode every ciphertext through a persistent worker pool,
@@ -268,25 +300,10 @@ impl SelectiveCodec {
         pk: &PublicKey,
         rng: &mut ChaChaRng,
     ) -> EncryptedUpdate {
-        assert_eq!(params.len(), mask.total(), "mask/params length mismatch");
-        let batch = self.ctx.batch();
-        // Encrypted part: gather run segments into the f64 staging buffer.
-        let mut enc_values: Vec<f64> = Vec::with_capacity(mask.encrypted_count());
-        for r in mask.runs() {
-            enc_values.extend(params[r.lo..r.hi].iter().map(|&v| v as f64));
-        }
-        // One forked RNG per chunk, forked in chunk order: the ciphertext
-        // stream is a pure function of the caller's RNG state, no matter
-        // which worker encrypts which chunk.
-        let n_chunks = enc_values.len().div_ceil(batch);
-        let mut chunk_rngs: Vec<ChaChaRng> = (0..n_chunks).map(|c| rng.fork(c as u64)).collect();
-        let cts = self.encrypt_chunks(&enc_values, &mut chunk_rngs, pk);
-        // Plaintext part: segment memcpy along the complement runs.
-        let plain_layout = mask.plaintext_layout();
-        let mut plain: Vec<f32> = Vec::with_capacity(plain_layout.count());
-        for r in plain_layout.runs() {
-            plain.extend_from_slice(&params[r.lo..r.hi]);
-        }
+        let mut cts: Vec<Ciphertext> = Vec::with_capacity(self.ct_count(mask.encrypted_count()));
+        let (plain, n_chunks) =
+            self.encrypt_update_streamed(params, mask, pk, rng, |_, ct| cts.push(ct));
+        debug_assert_eq!(cts.len(), n_chunks);
         EncryptedUpdate {
             cts,
             plain,
@@ -461,6 +478,39 @@ mod tests {
             let d_seq = seq.decrypt_update(&baseline.0, &mask, &sk);
             let d_par = par.decrypt_update(&upd, &mask, &sk);
             assert_eq!(d_seq, d_par, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn streamed_encrypt_is_identical_and_in_order() {
+        // the wire-streaming entry point must hand out the exact chunk
+        // sequence of encrypt_update, in ascending chunk order
+        let ctx = small_ctx();
+        let (pk, _) = {
+            let mut krng = ChaChaRng::from_seed(51, 0);
+            ctx.keygen(&mut krng)
+        };
+        let total = 1500;
+        let model: Vec<f32> = (0..total).map(|i| (i as f32 * 0.013).sin()).collect();
+        let sens: Vec<f32> = (0..total).map(|i| ((i * 13) % 401) as f32).collect();
+        let mask = EncryptionMask::top_p(&sens, 0.7);
+        let codec = SelectiveCodec::with_workers(ctx.clone(), 4);
+        let baseline = {
+            let mut rng = ChaChaRng::from_seed(52, 0);
+            codec.encrypt_update(&model, &mask, &pk, &mut rng)
+        };
+        let mut rng = ChaChaRng::from_seed(52, 0);
+        let mut seen: Vec<(usize, Ciphertext)> = Vec::new();
+        let (plain, n) =
+            codec.encrypt_update_streamed(&model, &mask, &pk, &mut rng, |c, ct| {
+                seen.push((c, ct));
+            });
+        assert_eq!(n, baseline.cts.len());
+        assert_eq!(plain, baseline.plain);
+        assert_eq!(seen.len(), n);
+        for (i, (c, ct)) in seen.iter().enumerate() {
+            assert_eq!(*c, i, "chunks must stream in order");
+            assert_eq!(ct, &baseline.cts[i], "chunk {i} differs");
         }
     }
 

@@ -35,6 +35,7 @@ pub mod he_agg;
 pub mod netsim;
 pub mod privacy;
 pub mod runtime;
+pub mod transport;
 pub mod util;
 
 /// Crate-wide result type (thin alias over `anyhow`).
@@ -156,7 +157,9 @@ pub fn dispatch(args: util::cli::Args) -> Result<()> {
             eprintln!("                --keys single|threshold --bandwidth ib|sar|mar|aws200");
             eprintln!("                --dropout P --dp-scale B");
             eprintln!("                --engine sequential|pipeline --shards S --quorum K");
-            eprintln!("                --straggler-timeout SECS --population N ...)");
+            eprintln!("                --straggler-timeout SECS --population N");
+            eprintln!("                --transport sim|tcp --listen ADDR --connect ADDR");
+            eprintln!("                --intake-max-wait SECS ...)");
             eprintln!("  params        print the CKKS context (--n --limbs --scaling-bits)");
             eprintln!("  privacy-map   compute a model's sensitivity map summary (--model --ratio)");
             eprintln!("  bench         how to regenerate every paper table/figure");

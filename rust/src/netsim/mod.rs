@@ -85,9 +85,19 @@ impl SimClock {
         }
     }
     /// Count upload bytes without charging link time — a transfer the round
-    /// never waited for (e.g. a straggler dropped by the quorum policy).
+    /// never waited for (e.g. a straggler dropped by the quorum policy), or
+    /// bytes that already paid real wall-clock time on a live transport.
     pub fn upload_bytes_only(&mut self, bytes: u64) {
         self.bytes_up += bytes;
+    }
+
+    /// Mark a round boundary. Parallel accounting maxes each uplink against
+    /// the slowest transfer *of the current round only*; without this reset a
+    /// clock reused across rounds undercharges every round after the first
+    /// (round 2's uploads would be max'd against round 1's slowest). Serial
+    /// accounting keeps no per-round state, so the call is always safe.
+    pub fn finish_round(&mut self) {
+        self.uplink_max_secs = 0.0;
     }
 
     /// Record a server→client download.
@@ -176,6 +186,34 @@ mod tests {
         assert_eq!(serial.bytes_down, 4000);
         assert_eq!(parallel.bytes_down, 4000);
         assert_eq!(serial.bytes_up, 5000);
+    }
+
+    #[test]
+    fn parallel_clock_reused_across_rounds_resets_uplink_max() {
+        let bw = Bandwidth { name: "t", bytes_per_sec: 1000.0 };
+        let mut clock = SimClock::parallel();
+        // round 1: slowest uplink 3 s
+        clock.upload(3000, bw);
+        clock.upload(1000, bw);
+        clock.finish_round();
+        // round 2: slowest uplink 2 s — must charge a fresh per-round max,
+        // not be absorbed by round 1's 3 s
+        clock.upload(1000, bw);
+        clock.upload(2000, bw);
+        clock.finish_round();
+        // round 3: a single 1 s uplink
+        clock.upload(1000, bw);
+        clock.finish_round();
+        assert!((clock.comm_secs - 6.0).abs() < 1e-12, "3 + 2 + 1 expected");
+        assert_eq!(clock.bytes_up, 8000);
+
+        // regression shape: without the boundary, rounds 2 and 3 ride under
+        // round 1's max and the clock undercharges to 3 s total
+        let mut stale = SimClock::parallel();
+        for b in [3000u64, 1000, 1000, 2000, 1000] {
+            stale.upload(b, bw);
+        }
+        assert!((stale.comm_secs - 3.0).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,225 @@
+//! Client-side upload driver: stream an [`EncryptedUpdate`] to the server's
+//! TCP intake, frame by frame.
+//!
+//! Two entry points:
+//!
+//! * [`upload_update`] — ship an already-encrypted update (the coordinator's
+//!   staged path, and the replay path for tests).
+//! * [`upload_encrypt_streaming`] — encrypt-and-upload: ciphertext chunks go
+//!   onto the socket **while later chunks are still being encrypted** by the
+//!   parallel [`SelectiveCodec`] worker pool
+//!   ([`SelectiveCodec::encrypt_update_streamed`]). The socket writer is a
+//!   bounded `BufWriter`, so a slow link backpressures the encrypt workers
+//!   through their bounded hand-off channels instead of buffering the whole
+//!   ciphertext body in memory.
+//!
+//! Both produce byte-identical uploads for the same update/rng.
+
+use super::frame::{encode_begin, write_frame, FrameKind, PLAIN_CHUNK_VALUES};
+use crate::ckks::serialize::ciphertext_shard_append;
+use crate::ckks::{Ciphertext, PublicKey};
+use crate::crypto::prng::ChaChaRng;
+use crate::he_agg::{EncryptedUpdate, EncryptionMask, SelectiveCodec};
+use std::io::{BufWriter, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// Per-upload knobs.
+#[derive(Debug, Clone)]
+pub struct UploadConfig {
+    pub round_id: u64,
+    /// Client id carried in the BEGIN frame.
+    pub client: u64,
+    /// FedAvg weight carried in the BEGIN frame (must be in (0, 1]).
+    pub alpha: f64,
+    /// Socket write-buffer capacity in bytes: the bound on how far the
+    /// uploader runs ahead of the link.
+    pub write_buffer: usize,
+    /// Socket read/write timeout.
+    pub io_timeout: Duration,
+}
+
+impl Default for UploadConfig {
+    fn default() -> Self {
+        UploadConfig {
+            round_id: 0,
+            client: 0,
+            alpha: 1.0,
+            write_buffer: 256 * 1024,
+            io_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// What an upload put on the wire.
+#[derive(Debug, Clone, Default)]
+pub struct UploadReceipt {
+    pub bytes_sent: u64,
+    pub ct_frames: usize,
+    /// Whether the server acknowledged the END frame.
+    pub acked: bool,
+}
+
+struct FrameSink {
+    writer: BufWriter<TcpStream>,
+    round: u64,
+    /// Reused payload staging buffer for ciphertext frames.
+    buf: Vec<u8>,
+    bytes_sent: u64,
+    ct_frames: usize,
+}
+
+impl FrameSink {
+    fn connect(addr: &str, cfg: &UploadConfig) -> anyhow::Result<(Self, TcpStream)> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(cfg.io_timeout))?;
+        stream.set_write_timeout(Some(cfg.io_timeout))?;
+        let reader = stream.try_clone()?;
+        Ok((
+            FrameSink {
+                writer: BufWriter::with_capacity(cfg.write_buffer.max(1024), stream),
+                round: cfg.round_id,
+                buf: Vec::new(),
+                bytes_sent: 0,
+                ct_frames: 0,
+            },
+            reader,
+        ))
+    }
+
+    fn send(&mut self, kind: FrameKind, seq: u32, payload: &[u8]) -> std::io::Result<()> {
+        self.bytes_sent += write_frame(&mut self.writer, self.round, kind, seq, payload)?;
+        Ok(())
+    }
+
+    fn send_begin(
+        &mut self,
+        cfg: &UploadConfig,
+        n_cts: usize,
+        n_plain: usize,
+        total: usize,
+    ) -> std::io::Result<()> {
+        let p = encode_begin(cfg.client, cfg.alpha, n_cts, n_plain, total);
+        self.send(FrameKind::Begin, 0, &p)
+    }
+
+    fn send_ct(&mut self, seq: usize, ct: &Ciphertext) -> std::io::Result<()> {
+        let limbs = ct.c0.num_limbs();
+        self.buf.clear();
+        ciphertext_shard_append(ct, 0, limbs, &mut self.buf);
+        let payload = std::mem::take(&mut self.buf);
+        let r = self.send(FrameKind::CtChunk, seq as u32, &payload);
+        self.buf = payload;
+        if r.is_ok() {
+            self.ct_frames += 1;
+        }
+        r
+    }
+
+    fn send_plain(&mut self, plain: &[f32]) -> std::io::Result<()> {
+        for (seq, chunk) in plain.chunks(PLAIN_CHUNK_VALUES).enumerate() {
+            self.buf.clear();
+            self.buf.reserve(chunk.len() * 4);
+            for &v in chunk {
+                self.buf.extend_from_slice(&v.to_le_bytes());
+            }
+            let payload = std::mem::take(&mut self.buf);
+            let r = self.send(FrameKind::Plain, seq as u32, &payload);
+            self.buf = payload;
+            r?;
+        }
+        Ok(())
+    }
+
+    /// END + flush, then wait for the server's ACK on `reader`.
+    fn finish(mut self, reader: &mut TcpStream) -> anyhow::Result<UploadReceipt> {
+        self.send(FrameKind::End, 0, &[])?;
+        self.writer.flush()?;
+        let ack =
+            super::frame::read_frame(reader, self.round, super::frame::BEGIN_PAYLOAD_BYTES)?;
+        anyhow::ensure!(ack.kind == FrameKind::Ack, "expected ACK, got {:?}", ack.kind);
+        Ok(UploadReceipt {
+            bytes_sent: self.bytes_sent,
+            ct_frames: self.ct_frames,
+            acked: true,
+        })
+    }
+}
+
+/// Upload an already-encrypted update. Frames stream through the bounded
+/// write buffer; returns once the server acknowledges the END frame.
+pub fn upload_update(
+    addr: &str,
+    cfg: &UploadConfig,
+    update: &EncryptedUpdate,
+) -> anyhow::Result<UploadReceipt> {
+    let (mut sink, mut reader) = FrameSink::connect(addr, cfg)?;
+    sink.send_begin(cfg, update.cts.len(), update.plain.len(), update.total)?;
+    for (seq, ct) in update.cts.iter().enumerate() {
+        sink.send_ct(seq, ct)?;
+    }
+    sink.send_plain(&update.plain)?;
+    sink.finish(&mut reader)
+}
+
+/// Encrypt-and-upload: chunk `c` is framed onto the socket while chunks
+/// `> c` are still encrypting on the codec's worker pool. The resulting
+/// upload is byte-identical to encrypting with
+/// [`SelectiveCodec::encrypt_update`] and calling [`upload_update`] with the
+/// same rng state.
+pub fn upload_encrypt_streaming(
+    addr: &str,
+    cfg: &UploadConfig,
+    codec: &SelectiveCodec,
+    model: &[f32],
+    mask: &EncryptionMask,
+    pk: &PublicKey,
+    rng: &mut ChaChaRng,
+) -> anyhow::Result<UploadReceipt> {
+    let (mut sink, mut reader) = FrameSink::connect(addr, cfg)?;
+    let n_cts = codec.ct_count(mask.encrypted_count());
+    let n_plain = mask.total() - mask.encrypted_count();
+    sink.send_begin(cfg, n_cts, n_plain, mask.total())?;
+    // Stream ciphertext chunks as the worker pool finishes them. Encryption
+    // keeps running after a socket error; the first error is kept and
+    // reported once the (deterministic) rng stream has fully advanced.
+    let mut io_err: Option<std::io::Error> = None;
+    let (plain, ct_frames) = codec.encrypt_update_streamed(model, mask, pk, rng, |seq, ct| {
+        if io_err.is_none() {
+            if let Err(e) = sink.send_ct(seq, &ct) {
+                io_err = Some(e);
+            }
+        }
+    });
+    if let Some(e) = io_err {
+        return Err(e.into());
+    }
+    anyhow::ensure!(
+        ct_frames == n_cts && plain.len() == n_plain,
+        "codec produced {ct_frames} chunks / {} plain values, declared {n_cts} / {n_plain}",
+        plain.len()
+    );
+    sink.send_plain(&plain)?;
+    sink.finish(&mut reader)
+}
+
+/// Failure injection for tests and demos: send BEGIN plus the first
+/// `ct_frames` ciphertext chunks, then drop the connection without END — a
+/// mid-upload disconnect the server must absorb as a dropped straggler.
+pub fn upload_partial_then_disconnect(
+    addr: &str,
+    cfg: &UploadConfig,
+    update: &EncryptedUpdate,
+    ct_frames: usize,
+) -> anyhow::Result<u64> {
+    let (mut sink, _reader) = FrameSink::connect(addr, cfg)?;
+    sink.send_begin(cfg, update.cts.len(), update.plain.len(), update.total)?;
+    for (seq, ct) in update.cts.iter().take(ct_frames).enumerate() {
+        sink.send_ct(seq, ct)?;
+    }
+    sink.writer.flush()?;
+    let sent = sink.bytes_sent;
+    drop(sink); // closes the socket with the upload incomplete
+    Ok(sent)
+}

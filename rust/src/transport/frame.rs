@@ -1,0 +1,335 @@
+//! Length-framed binary upload protocol (DESIGN.md §8).
+//!
+//! Every message on the wire is one frame:
+//!
+//! ```text
+//! magic    u32   = 0x46485450 ("FHTP")
+//! version  u32   = 1
+//! round    u64   round id (both sides reject skew)
+//! kind     u32   frame kind (BEGIN/CT_CHUNK/PLAIN/END/ACK)
+//! seq      u32   chunk sequence (ciphertext index / plaintext chunk index)
+//! len      u32   payload byte length
+//! payload  len bytes
+//! crc      u32   CRC-32 (IEEE) of the payload
+//! ```
+//!
+//! The reader validates magic, version, round, kind and `len` **before**
+//! allocating the payload buffer: `len` is capped by a params-derived bound
+//! ([`frame_payload_cap`]), so an attacker-controlled length prefix can never
+//! drive an allocation beyond one legitimate frame. Truncation (EOF anywhere
+//! inside a frame), CRC mismatch, version skew and unknown kinds all return
+//! `Err` — the connection's upload is then discarded as a dropped straggler,
+//! never a panic or a poisoned round.
+
+use crate::ckks::serialize::shard_wire_bytes;
+use crate::ckks::CkksParams;
+use std::io::{Read, Write};
+
+/// Frame magic: "FHTP" (FedML-HE transport protocol).
+pub const FRAME_MAGIC: u32 = 0x4648_5450;
+/// Wire protocol version; bumped on any layout change.
+pub const PROTOCOL_VERSION: u32 = 1;
+/// Fixed frame header size: magic(4) version(4) round(8) kind(4) seq(4) len(4).
+pub const FRAME_HEADER_BYTES: usize = 28;
+/// Fixed frame trailer size: payload CRC-32.
+pub const FRAME_TRAILER_BYTES: usize = 4;
+/// BEGIN payload: client(8) alpha(8) n_cts(4) n_plain(4) total(8).
+pub const BEGIN_PAYLOAD_BYTES: usize = 32;
+/// f32 values per PLAIN frame (256 KiB of payload).
+pub const PLAIN_CHUNK_VALUES: usize = 65_536;
+
+/// What a frame carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Upload preamble: client identity, FedAvg weight, declared shape.
+    Begin = 1,
+    /// One ciphertext chunk: a full-limb-range shard view
+    /// (`ckks::serialize::ciphertext_shard_to_bytes(ct, 0, limbs)`).
+    CtChunk = 2,
+    /// A slice of the compacted plaintext remainder (f32 LE, in order).
+    Plain = 3,
+    /// Upload complete (empty payload); the server stamps the arrival here.
+    End = 4,
+    /// Server receipt (u32 LE status, 0 = received).
+    Ack = 5,
+}
+
+impl FrameKind {
+    fn from_u32(v: u32) -> anyhow::Result<Self> {
+        Ok(match v {
+            1 => FrameKind::Begin,
+            2 => FrameKind::CtChunk,
+            3 => FrameKind::Plain,
+            4 => FrameKind::End,
+            5 => FrameKind::Ack,
+            other => anyhow::bail!("unknown frame kind {other}"),
+        })
+    }
+}
+
+/// One parsed frame.
+#[derive(Debug, Clone)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub seq: u32,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    /// Total bytes this frame occupied on the wire.
+    pub fn wire_bytes(&self) -> u64 {
+        (FRAME_HEADER_BYTES + self.payload.len() + FRAME_TRAILER_BYTES) as u64
+    }
+}
+
+/// Largest payload any legitimate frame of a round can carry: the full-limb
+/// ciphertext shard view, a PLAIN chunk, or the BEGIN preamble — whichever
+/// is biggest. The reader rejects declared lengths above this bound before
+/// allocating.
+pub fn frame_payload_cap(params: &CkksParams) -> usize {
+    shard_wire_bytes(params, 0, params.num_limbs())
+        .max(PLAIN_CHUNK_VALUES * 4)
+        .max(BEGIN_PAYLOAD_BYTES)
+}
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+/// CRC-32 (IEEE 802.3, reflected).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Write one frame; returns the bytes put on the wire.
+pub fn write_frame<W: Write>(
+    w: &mut W,
+    round: u64,
+    kind: FrameKind,
+    seq: u32,
+    payload: &[u8],
+) -> std::io::Result<u64> {
+    let mut hdr = [0u8; FRAME_HEADER_BYTES];
+    hdr[0..4].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
+    hdr[4..8].copy_from_slice(&PROTOCOL_VERSION.to_le_bytes());
+    hdr[8..16].copy_from_slice(&round.to_le_bytes());
+    hdr[16..20].copy_from_slice(&(kind as u32).to_le_bytes());
+    hdr[20..24].copy_from_slice(&seq.to_le_bytes());
+    hdr[24..28].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    w.write_all(&hdr)?;
+    w.write_all(payload)?;
+    w.write_all(&crc32(payload).to_le_bytes())?;
+    Ok((FRAME_HEADER_BYTES + payload.len() + FRAME_TRAILER_BYTES) as u64)
+}
+
+fn read_exact_or(r: &mut impl Read, buf: &mut [u8], what: &str) -> anyhow::Result<()> {
+    r.read_exact(buf)
+        .map_err(|e| anyhow::anyhow!("truncated {what}: {e}"))
+}
+
+/// Read and validate one frame. `max_payload` bounds the allocation made for
+/// the declared payload length ([`frame_payload_cap`] on the server side).
+pub fn read_frame<R: Read>(
+    r: &mut R,
+    expect_round: u64,
+    max_payload: usize,
+) -> anyhow::Result<Frame> {
+    let mut hdr = [0u8; FRAME_HEADER_BYTES];
+    read_exact_or(r, &mut hdr, "frame header")?;
+    let magic = u32::from_le_bytes(hdr[0..4].try_into().unwrap());
+    anyhow::ensure!(magic == FRAME_MAGIC, "bad frame magic {magic:#010x}");
+    let version = u32::from_le_bytes(hdr[4..8].try_into().unwrap());
+    anyhow::ensure!(
+        version == PROTOCOL_VERSION,
+        "protocol version skew: got {version}, expected {PROTOCOL_VERSION}"
+    );
+    let round = u64::from_le_bytes(hdr[8..16].try_into().unwrap());
+    anyhow::ensure!(
+        round == expect_round,
+        "frame for round {round}, expected {expect_round}"
+    );
+    let kind = FrameKind::from_u32(u32::from_le_bytes(hdr[16..20].try_into().unwrap()))?;
+    let seq = u32::from_le_bytes(hdr[20..24].try_into().unwrap());
+    let len = u32::from_le_bytes(hdr[24..28].try_into().unwrap()) as usize;
+    anyhow::ensure!(
+        len <= max_payload,
+        "declared payload length {len} exceeds cap {max_payload}"
+    );
+    let mut payload = vec![0u8; len];
+    read_exact_or(r, &mut payload, "frame payload")?;
+    let mut crc = [0u8; FRAME_TRAILER_BYTES];
+    read_exact_or(r, &mut crc, "frame crc")?;
+    anyhow::ensure!(
+        u32::from_le_bytes(crc) == crc32(&payload),
+        "frame crc mismatch"
+    );
+    Ok(Frame { kind, seq, payload })
+}
+
+/// Encode a BEGIN payload.
+pub fn encode_begin(
+    client: u64,
+    alpha: f64,
+    n_cts: usize,
+    n_plain: usize,
+    total: usize,
+) -> [u8; BEGIN_PAYLOAD_BYTES] {
+    let mut p = [0u8; BEGIN_PAYLOAD_BYTES];
+    p[0..8].copy_from_slice(&client.to_le_bytes());
+    p[8..16].copy_from_slice(&alpha.to_le_bytes());
+    p[16..20].copy_from_slice(&(n_cts as u32).to_le_bytes());
+    p[20..24].copy_from_slice(&(n_plain as u32).to_le_bytes());
+    p[24..32].copy_from_slice(&(total as u64).to_le_bytes());
+    p
+}
+
+/// Decode a BEGIN payload: `(client, alpha, n_cts, n_plain, total)`.
+pub fn decode_begin(p: &[u8]) -> anyhow::Result<(u64, f64, usize, usize, usize)> {
+    anyhow::ensure!(
+        p.len() == BEGIN_PAYLOAD_BYTES,
+        "BEGIN payload must be {BEGIN_PAYLOAD_BYTES} bytes, got {}",
+        p.len()
+    );
+    let client = u64::from_le_bytes(p[0..8].try_into().unwrap());
+    let alpha = f64::from_le_bytes(p[8..16].try_into().unwrap());
+    let n_cts = u32::from_le_bytes(p[16..20].try_into().unwrap()) as usize;
+    let n_plain = u32::from_le_bytes(p[20..24].try_into().unwrap()) as usize;
+    let total = u64::from_le_bytes(p[24..32].try_into().unwrap()) as usize;
+    anyhow::ensure!(
+        alpha.is_finite() && alpha > 0.0 && alpha <= 1.0,
+        "FedAvg weight out of range: {alpha}"
+    );
+    Ok((client, alpha, n_cts, n_plain, total))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn crc32_matches_ieee_check_value() {
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn frame_roundtrip() {
+        let payload: Vec<u8> = (0..200u16).map(|v| (v % 251) as u8).collect();
+        let mut wire = Vec::new();
+        let n = write_frame(&mut wire, 7, FrameKind::CtChunk, 3, &payload).unwrap();
+        assert_eq!(n as usize, wire.len());
+        let f = read_frame(&mut Cursor::new(&wire), 7, 4096).unwrap();
+        assert_eq!(f.kind, FrameKind::CtChunk);
+        assert_eq!(f.seq, 3);
+        assert_eq!(f.payload, payload);
+        assert_eq!(f.wire_bytes(), n);
+    }
+
+    #[test]
+    fn begin_payload_roundtrip_and_validation() {
+        let p = encode_begin(42, 0.25, 8, 1000, 9000);
+        let (client, alpha, n_cts, n_plain, total) = decode_begin(&p).unwrap();
+        assert_eq!(
+            (client, alpha, n_cts, n_plain, total),
+            (42, 0.25, 8, 1000, 9000)
+        );
+        // malformed weights are rejected
+        for bad in [f64::NAN, f64::INFINITY, -0.5, 0.0, 1.5] {
+            let p = encode_begin(1, bad, 1, 1, 1);
+            assert!(decode_begin(&p).is_err(), "alpha {bad} accepted");
+        }
+        assert!(decode_begin(&p[..31]).is_err());
+    }
+
+    #[test]
+    fn malformed_frames_rejected_not_panicking() {
+        let payload = vec![9u8; 64];
+        let mut wire = Vec::new();
+        write_frame(&mut wire, 5, FrameKind::Plain, 0, &payload).unwrap();
+
+        // truncation at every boundary: header, payload, crc
+        for cut in [1, FRAME_HEADER_BYTES - 1, FRAME_HEADER_BYTES + 10, wire.len() - 1] {
+            assert!(
+                read_frame(&mut Cursor::new(&wire[..cut]), 5, 4096).is_err(),
+                "cut at {cut} accepted"
+            );
+        }
+        // bad magic
+        let mut b = wire.clone();
+        b[0] ^= 0xFF;
+        assert!(read_frame(&mut Cursor::new(&b), 5, 4096).is_err());
+        // version skew
+        let mut b = wire.clone();
+        b[4..8].copy_from_slice(&2u32.to_le_bytes());
+        assert!(read_frame(&mut Cursor::new(&b), 5, 4096).is_err());
+        // wrong round
+        assert!(read_frame(&mut Cursor::new(&wire), 6, 4096).is_err());
+        // unknown kind
+        let mut b = wire.clone();
+        b[16..20].copy_from_slice(&99u32.to_le_bytes());
+        assert!(read_frame(&mut Cursor::new(&b), 5, 4096).is_err());
+        // garbage crc
+        let mut b = wire.clone();
+        let last = b.len() - 1;
+        b[last] ^= 0x55;
+        assert!(read_frame(&mut Cursor::new(&b), 5, 4096).is_err());
+        // corrupted payload byte → crc mismatch
+        let mut b = wire.clone();
+        b[FRAME_HEADER_BYTES + 3] ^= 0x01;
+        assert!(read_frame(&mut Cursor::new(&b), 5, 4096).is_err());
+    }
+
+    #[test]
+    fn every_single_byte_corruption_parses_or_errors_never_panics() {
+        let payload = vec![7u8; 96];
+        let mut wire = Vec::new();
+        write_frame(&mut wire, 11, FrameKind::CtChunk, 2, &payload).unwrap();
+        for i in 0..wire.len() {
+            let mut b = wire.clone();
+            b[i] ^= 0x80;
+            let _ = read_frame(&mut Cursor::new(&b), 11, 4096);
+        }
+    }
+
+    #[test]
+    fn oversized_declared_length_rejected_before_allocating() {
+        // a frame header declaring a u32::MAX payload must be rejected by
+        // the cap check, not by attempting a 4 GiB allocation
+        let mut hdr = [0u8; FRAME_HEADER_BYTES];
+        hdr[0..4].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
+        hdr[4..8].copy_from_slice(&PROTOCOL_VERSION.to_le_bytes());
+        hdr[8..16].copy_from_slice(&3u64.to_le_bytes());
+        hdr[16..20].copy_from_slice(&(FrameKind::CtChunk as u32).to_le_bytes());
+        hdr[24..28].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = read_frame(&mut Cursor::new(&hdr[..]), 3, 1 << 20).unwrap_err();
+        assert!(err.to_string().contains("exceeds cap"), "{err}");
+    }
+
+    #[test]
+    fn payload_cap_covers_ct_and_plain_frames() {
+        let params = CkksParams::new(256, 3, 30).unwrap();
+        let cap = frame_payload_cap(&params);
+        assert!(cap >= shard_wire_bytes(&params, 0, params.num_limbs()));
+        assert!(cap >= PLAIN_CHUNK_VALUES * 4);
+        assert!(cap >= BEGIN_PAYLOAD_BYTES);
+    }
+}

@@ -1,0 +1,452 @@
+//! Server-side TCP intake: accept concurrent uploads, reassemble
+//! [`EncryptedUpdate`]s, and hand them to the streaming aggregation engine
+//! as true [`Arrival`]s stamped with wall-clock receive times.
+//!
+//! Failure containment (DESIGN.md §8 failure matrix): any per-connection
+//! error — truncated frame, CRC mismatch, version/round skew, shape
+//! mismatch, out-of-range coefficients, mid-upload disconnect — discards
+//! only that connection's upload. The client is reported in
+//! [`IntakeOutcome::failed`] and folded into the round's straggler
+//! accounting; the round itself always completes from the uploads that did
+//! land. Nothing on this path panics, and no attacker-controlled length can
+//! allocate beyond one legitimate frame ([`super::frame::frame_payload_cap`]).
+
+use super::frame::{
+    decode_begin, frame_payload_cap, read_frame, write_frame, FrameKind, BEGIN_PAYLOAD_BYTES,
+};
+use crate::agg_engine::Arrival;
+use crate::ckks::serialize::ciphertext_shard_from_bytes;
+use crate::ckks::{Ciphertext, CkksContext, CkksParams};
+use crate::he_agg::{EncryptedUpdate, EncryptionMask};
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Sentinel client id for a connection that failed before its BEGIN frame
+/// identified it.
+pub const UNIDENTIFIED_CLIENT: u64 = u64::MAX;
+
+/// Expected shape of every upload in a round, derived by the server from the
+/// agreed mask + crypto context. BEGIN declarations must match exactly, so a
+/// client can never size a server-side buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct UpdateShape {
+    pub n_cts: usize,
+    pub n_plain: usize,
+    pub total: usize,
+}
+
+impl UpdateShape {
+    /// Shape of a selectively-encrypted update under `mask`.
+    pub fn for_round(ctx: &CkksContext, mask: &EncryptionMask) -> Self {
+        let enc = mask.encrypted_count();
+        UpdateShape {
+            n_cts: enc.div_ceil(ctx.batch()),
+            n_plain: mask.total() - enc,
+            total: mask.total(),
+        }
+    }
+}
+
+/// Per-round intake knobs.
+#[derive(Debug, Clone)]
+pub struct IntakeConfig {
+    pub round_id: u64,
+    /// Connections to wait for (one per expected participant).
+    pub expected_uploads: usize,
+    /// Quorum for the early-stop hint: once this many uploads completed,
+    /// the accept loop waits only `straggler_timeout` longer. The
+    /// authoritative accept/drop decision is re-derived at seal by
+    /// [`crate::agg_engine::RoundIntake`] over the same stamps.
+    pub quorum: Option<usize>,
+    pub straggler_timeout: Duration,
+    /// Hard wall-clock bound on the whole intake — a hung accept loop fails
+    /// fast instead of hanging the round (and CI).
+    pub max_wait: Duration,
+    /// Per-connection socket read/write timeout.
+    pub io_timeout: Duration,
+}
+
+impl Default for IntakeConfig {
+    fn default() -> Self {
+        IntakeConfig {
+            round_id: 0,
+            expected_uploads: 0,
+            quorum: None,
+            straggler_timeout: Duration::from_secs(5),
+            max_wait: Duration::from_secs(60),
+            io_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// What one round's intake produced.
+#[derive(Debug, Clone, Default)]
+pub struct IntakeOutcome {
+    /// Completed uploads, stamped with seconds since the intake opened and
+    /// sorted by (stamp, client) — ready for the quorum/straggler policy.
+    pub arrivals: Vec<Arrival>,
+    /// Clients whose upload failed mid-stream ([`UNIDENTIFIED_CLIENT`] when
+    /// the failure predates their BEGIN frame). The caller folds these into
+    /// `StreamStats::dropped_stragglers`.
+    pub failed: Vec<u64>,
+    /// Frame bytes received across all connections, including failed ones.
+    pub bytes_received: u64,
+    /// Wall-clock duration of the intake (accept-open to last handler done).
+    pub elapsed_secs: f64,
+}
+
+/// A bound TCP intake serving one round at a time.
+pub struct TcpIntake {
+    listener: TcpListener,
+    params: std::sync::Arc<CkksParams>,
+    shape: UpdateShape,
+}
+
+impl TcpIntake {
+    /// Bind the intake socket (use port 0 for an ephemeral loopback port).
+    pub fn bind(
+        addr: &str,
+        params: std::sync::Arc<CkksParams>,
+        shape: UpdateShape,
+    ) -> anyhow::Result<Self> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow::anyhow!("cannot bind transport intake on {addr}: {e}"))?;
+        Ok(TcpIntake {
+            listener,
+            params,
+            shape,
+        })
+    }
+
+    /// The bound address (what clients dial).
+    pub fn local_addr(&self) -> anyhow::Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Accept and reassemble one round of uploads. Each connection is served
+    /// on its own worker thread; completed updates are stamped (seconds
+    /// since the intake opened) under one lock, so stamps are monotone in
+    /// completion order. Accepts until `expected_uploads` uploads have
+    /// settled (completed, or failed after identifying themselves with a
+    /// valid BEGIN — anonymous probes never consume a slot), the quorum
+    /// early-stop cutoff passes, or `max_wait` expires — whichever comes
+    /// first; uploads still in flight at that point are finished and
+    /// included before returning. Duplicate uploads for an already-counted
+    /// client id are discarded into `failed`.
+    pub fn collect_round(&self, cfg: &IntakeConfig) -> anyhow::Result<IntakeOutcome> {
+        let start = Instant::now();
+        let deadline = start + cfg.max_wait;
+        self.listener.set_nonblocking(true)?;
+        let completed: Mutex<Vec<Arrival>> = Mutex::new(Vec::new());
+        let failed: Mutex<Vec<u64>> = Mutex::new(Vec::new());
+        let bytes = AtomicU64::new(0);
+        // Set when the quorum-th upload completes: accept only until then +
+        // straggler_timeout (an upload already in flight still finishes and
+        // is judged by the seal-time policy).
+        let accept_cutoff: Mutex<Option<Instant>> = Mutex::new(None);
+        let params = &*self.params;
+        let shape = self.shape;
+
+        // A participant slot "settles" on a completed upload or an
+        // *identified* failure (the connection got through a valid BEGIN for
+        // this round). Anonymous probes — port scanners, garbage bytes —
+        // are recorded in `failed` but never settle a slot, so they cannot
+        // displace a legitimate participant; absent participants are
+        // bounded by the quorum cutoff / `max_wait` instead.
+        let settled = AtomicUsize::new(0);
+        // Live per-connection worker threads. Bounding this (instead of a
+        // lifetime spawn count) keeps the accept loop serving after bursts
+        // of fast-failing probes: past the cap, new connections wait in the
+        // listen backlog instead of each pinning a thread + frame buffer.
+        let in_flight = AtomicUsize::new(0);
+        let max_in_flight = cfg.expected_uploads.saturating_mul(2).saturating_add(32);
+
+        std::thread::scope(|s| -> anyhow::Result<()> {
+            loop {
+                if settled.load(Ordering::Relaxed) >= cfg.expected_uploads {
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                if let Some(cut) = *accept_cutoff.lock().unwrap() {
+                    if now >= cut {
+                        break;
+                    }
+                }
+                if in_flight.load(Ordering::Relaxed) >= max_in_flight {
+                    std::thread::sleep(Duration::from_millis(1));
+                    continue;
+                }
+                match self.listener.accept() {
+                    Ok((stream, _peer)) => {
+                        in_flight.fetch_add(1, Ordering::Relaxed);
+                        let completed = &completed;
+                        let failed = &failed;
+                        let bytes = &bytes;
+                        let accept_cutoff = &accept_cutoff;
+                        let settled = &settled;
+                        let in_flight = &in_flight;
+                        let cfg = cfg.clone();
+                        s.spawn(move || {
+                            let mut seen_client: Option<u64> = None;
+                            let mut received = 0u64;
+                            let result = receive_update(
+                                stream,
+                                params,
+                                shape,
+                                &cfg,
+                                deadline,
+                                &mut seen_client,
+                                &mut received,
+                            );
+                            bytes.fetch_add(received, Ordering::Relaxed);
+                            match result {
+                                Ok((client, alpha, update)) => {
+                                    let mut done = completed.lock().unwrap();
+                                    if done.iter().any(|a| a.client == client) {
+                                        // a retry after a lost ACK (or a
+                                        // forged id): the first completion
+                                        // already counts — aggregating the
+                                        // duplicate would double its weight
+                                        drop(done);
+                                        crate::log_debug!(
+                                            "transport",
+                                            "duplicate upload from client {client} discarded"
+                                        );
+                                        failed.lock().unwrap().push(client);
+                                    } else {
+                                        // stamp inside the lock → stamps
+                                        // are monotone in push order
+                                        let t = start.elapsed().as_secs_f64();
+                                        done.push(Arrival {
+                                            client,
+                                            alpha,
+                                            arrival_secs: t,
+                                            update: std::sync::Arc::new(update),
+                                        });
+                                        let n_done = done.len();
+                                        drop(done);
+                                        // a completion after an earlier
+                                        // failed attempt reuses the slot
+                                        // that failure already settled
+                                        let failed_before =
+                                            failed.lock().unwrap().contains(&client);
+                                        if !failed_before {
+                                            settled.fetch_add(1, Ordering::Relaxed);
+                                        }
+                                        if let Some(q) = cfg.quorum {
+                                            if n_done >= q.max(1) {
+                                                let mut cut =
+                                                    accept_cutoff.lock().unwrap();
+                                                if cut.is_none() {
+                                                    *cut = Some(
+                                                        Instant::now()
+                                                            + cfg.straggler_timeout,
+                                                    );
+                                                }
+                                            }
+                                        }
+                                    }
+                                }
+                                Err(e) => {
+                                    let id = seen_client.unwrap_or(UNIDENTIFIED_CLIENT);
+                                    crate::log_debug!(
+                                        "transport",
+                                        "upload from client {id} failed: {e}"
+                                    );
+                                    // a given client id settles at most one
+                                    // slot, across completions and failures
+                                    // — replaying BEGIN-then-disconnect (or
+                                    // failing a retry after a completed
+                                    // upload) must not burn the other
+                                    // participants' slots
+                                    let completed_before = completed
+                                        .lock()
+                                        .unwrap()
+                                        .iter()
+                                        .any(|a| a.client == id);
+                                    let mut f = failed.lock().unwrap();
+                                    let first_failure = !f.contains(&id);
+                                    f.push(id);
+                                    drop(f);
+                                    if seen_client.is_some()
+                                        && first_failure
+                                        && !completed_before
+                                    {
+                                        settled.fetch_add(1, Ordering::Relaxed);
+                                    }
+                                }
+                            }
+                            in_flight.fetch_sub(1, Ordering::Relaxed);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                    // a peer that RSTs before we accept (connection churn,
+                    // port scans) kills only that connection, not the round
+                    Err(e)
+                        if matches!(
+                            e.kind(),
+                            std::io::ErrorKind::ConnectionAborted
+                                | std::io::ErrorKind::ConnectionReset
+                                | std::io::ErrorKind::Interrupted
+                        ) => {}
+                    Err(e) => anyhow::bail!("transport accept failed: {e}"),
+                }
+            }
+            Ok(())
+        })?;
+
+        let mut arrivals = completed.into_inner().unwrap();
+        arrivals.sort_by(|a, b| {
+            a.arrival_secs
+                .total_cmp(&b.arrival_secs)
+                .then(a.client.cmp(&b.client))
+        });
+        Ok(IntakeOutcome {
+            arrivals,
+            failed: failed.into_inner().unwrap(),
+            bytes_received: bytes.load(Ordering::Relaxed),
+            elapsed_secs: start.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+/// Reassemble one client's upload off its socket. Any validation failure or
+/// disconnect returns `Err`; `seen_client`/`received` report partial
+/// progress either way.
+///
+/// `deadline` is the intake-wide `max_wait` bound: it is re-checked before
+/// every frame and the socket read timeout is clamped to the time remaining,
+/// so a slowly-trickling connection cannot hold the round open much past
+/// `max_wait` (within one in-flight frame) by resetting the per-read timer.
+fn receive_update(
+    mut stream: TcpStream,
+    params: &CkksParams,
+    shape: UpdateShape,
+    cfg: &IntakeConfig,
+    deadline: Instant,
+    seen_client: &mut Option<u64>,
+    received: &mut u64,
+) -> anyhow::Result<(u64, f64, EncryptedUpdate)> {
+    stream.set_nonblocking(false)?;
+    stream.set_write_timeout(Some(cfg.io_timeout))?;
+    let cap = frame_payload_cap(params);
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let arm_read = |stream: &TcpStream| -> anyhow::Result<()> {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        anyhow::ensure!(
+            !remaining.is_zero(),
+            "upload exceeded the intake deadline"
+        );
+        stream.set_read_timeout(Some(remaining.min(cfg.io_timeout)))?;
+        Ok(())
+    };
+
+    // BEGIN: identity + declared shape, checked against the round's shape.
+    arm_read(&stream)?;
+    let begin = read_frame(&mut reader, cfg.round_id, cap)?;
+    *received += begin.wire_bytes();
+    anyhow::ensure!(
+        begin.kind == FrameKind::Begin,
+        "upload must start with BEGIN, got {:?}",
+        begin.kind
+    );
+    anyhow::ensure!(
+        begin.payload.len() == BEGIN_PAYLOAD_BYTES,
+        "BEGIN payload length {}",
+        begin.payload.len()
+    );
+    let (client, alpha, n_cts, n_plain, total) = decode_begin(&begin.payload)?;
+    // rejected before the connection counts as "identified": the sentinel
+    // would corrupt slot settling and straggler accounting downstream
+    anyhow::ensure!(
+        client != UNIDENTIFIED_CLIENT,
+        "client id {client} is reserved"
+    );
+    *seen_client = Some(client);
+    anyhow::ensure!(
+        n_cts == shape.n_cts && n_plain == shape.n_plain && total == shape.total,
+        "upload shape ({n_cts} cts, {n_plain} plain, {total} total) does not match \
+         the round shape ({} cts, {} plain, {} total)",
+        shape.n_cts,
+        shape.n_plain,
+        shape.total
+    );
+
+    let mut cts: Vec<Option<Ciphertext>> = (0..n_cts).map(|_| None).collect();
+    let mut plain: Vec<f32> = Vec::with_capacity(n_plain);
+    let mut next_plain_seq = 0u32;
+    loop {
+        arm_read(&stream)?;
+        let frame = read_frame(&mut reader, cfg.round_id, cap)?;
+        *received += frame.wire_bytes();
+        match frame.kind {
+            FrameKind::CtChunk => {
+                let seq = frame.seq as usize;
+                anyhow::ensure!(seq < n_cts, "ciphertext chunk {seq} out of range");
+                anyhow::ensure!(cts[seq].is_none(), "duplicate ciphertext chunk {seq}");
+                let shard = ciphertext_shard_from_bytes(&frame.payload, params)?;
+                anyhow::ensure!(
+                    shard.lo == 0 && shard.hi == params.num_limbs(),
+                    "ciphertext chunk must carry the full limb range, got [{}, {})",
+                    shard.lo,
+                    shard.hi
+                );
+                let mut ct = Ciphertext::zero(params);
+                shard.scatter_into(&mut ct);
+                cts[seq] = Some(ct);
+            }
+            FrameKind::Plain => {
+                anyhow::ensure!(
+                    frame.seq == next_plain_seq,
+                    "plaintext chunk {} out of order (expected {next_plain_seq})",
+                    frame.seq
+                );
+                next_plain_seq += 1;
+                anyhow::ensure!(
+                    frame.payload.len() % 4 == 0,
+                    "plaintext payload not f32-aligned"
+                );
+                let k = frame.payload.len() / 4;
+                anyhow::ensure!(
+                    plain.len() + k <= n_plain,
+                    "plaintext remainder overflows the declared {n_plain} values"
+                );
+                for c in frame.payload.chunks_exact(4) {
+                    plain.push(f32::from_le_bytes(c.try_into().unwrap()));
+                }
+            }
+            FrameKind::End => {
+                anyhow::ensure!(
+                    cts.iter().all(|c| c.is_some()),
+                    "upload sealed with missing ciphertext chunks"
+                );
+                anyhow::ensure!(
+                    plain.len() == n_plain,
+                    "upload sealed with {} of {n_plain} plaintext values",
+                    plain.len()
+                );
+                break;
+            }
+            FrameKind::Begin => anyhow::bail!("duplicate BEGIN frame"),
+            FrameKind::Ack => anyhow::bail!("unexpected ACK from client"),
+        }
+    }
+    drop(reader);
+    write_frame(
+        &mut stream,
+        cfg.round_id,
+        FrameKind::Ack,
+        0,
+        &0u32.to_le_bytes(),
+    )?;
+    let cts: Vec<Ciphertext> = cts.into_iter().map(|c| c.unwrap()).collect();
+    Ok((client, alpha, EncryptedUpdate { cts, plain, total }))
+}

@@ -1,0 +1,42 @@
+//! Real TCP transport behind the [`crate::agg_engine`] `Arrival` intake.
+//!
+//! The paper frames its overhead numbers as wire-transfer costs over real
+//! links (Appendix D.5, Fig. 8); until this module, the aggregation intake
+//! was only ever fed from an in-process vector built by the simulator. Here
+//! the client/server boundary is a real socket:
+//!
+//! * [`frame`] — the length-framed binary protocol: magic + version +
+//!   round id + CRC'd frames, with strict malformed-input validation
+//!   (truncation, oversized declared lengths, version skew, garbage CRC all
+//!   return `Err`, and no attacker-controlled length drives an allocation).
+//! * [`client`] — the upload driver: streams ciphertext chunks through a
+//!   bounded write buffer, either from an already-encrypted update or
+//!   **while later chunks are still being encrypted** by the parallel
+//!   [`crate::he_agg::SelectiveCodec`] worker pool.
+//! * [`intake`] — the multi-client server: concurrent per-connection worker
+//!   threads reassemble updates and stamp them with wall-clock receive
+//!   times; completed uploads become true [`crate::agg_engine::Arrival`]s
+//!   driving the existing quorum/straggler policy, and a mid-upload
+//!   disconnect is absorbed as a dropped straggler — never a panic or a
+//!   poisoned round.
+//!
+//! Ciphertext frame payloads reuse the per-shard wire views of
+//! [`crate::ckks::serialize`] (a CT frame is a full-limb-range shard view,
+//! serialized straight into the frame buffer), so a loopback round is
+//! byte-identical to the simulator's accounting and bitwise-identical in its
+//! aggregate. The coordinator selects the path with `--transport {sim,tcp}`
+//! (`--listen`/`--connect` pick the socket addresses); see DESIGN.md §8 for
+//! the frame diagram, arrival-stamp semantics and failure matrix.
+
+pub mod client;
+pub mod frame;
+pub mod intake;
+
+pub use client::{
+    upload_encrypt_streaming, upload_partial_then_disconnect, upload_update, UploadConfig,
+    UploadReceipt,
+};
+pub use frame::{crc32, frame_payload_cap, read_frame, write_frame, Frame, FrameKind};
+pub use intake::{
+    IntakeConfig, IntakeOutcome, TcpIntake, UpdateShape, UNIDENTIFIED_CLIENT,
+};

@@ -1,0 +1,405 @@
+//! Transport acceptance gates: a loopback TCP round with concurrent clients
+//! (one disconnecting mid-upload) must produce a bitwise-identical aggregate
+//! to the in-process engine, report the disconnecting client as a dropped
+//! straggler, bound its accept loop, and reject malformed wire input without
+//! panicking or poisoning the round. No artifacts required — everything runs
+//! on the pure-Rust crypto substrate.
+
+use fedml_he::agg_engine::{Engine, EngineConfig, StreamingAggregator};
+use fedml_he::ckks::serialize::ciphertext_shard_to_bytes;
+use fedml_he::ckks::{CkksContext, PublicKey};
+use fedml_he::crypto::prng::ChaChaRng;
+use fedml_he::he_agg::{native, EncryptedUpdate, EncryptionMask, SelectiveCodec};
+use fedml_he::transport::frame::encode_begin;
+use fedml_he::transport::{
+    upload_encrypt_streaming, upload_partial_then_disconnect, upload_update, write_frame,
+    FrameKind, IntakeConfig, TcpIntake, UpdateShape, UploadConfig, UNIDENTIFIED_CLIENT,
+};
+use std::io::Write;
+use std::net::TcpStream;
+use std::time::Duration;
+
+const TOTAL: usize = 1100;
+
+fn fixture(
+    n_clients: usize,
+) -> (
+    SelectiveCodec,
+    PublicKey,
+    EncryptionMask,
+    Vec<Vec<f32>>,
+    Vec<f64>,
+) {
+    let ctx = CkksContext::new(256, 4, 40).unwrap();
+    let codec = SelectiveCodec::new(ctx);
+    let mut rng = ChaChaRng::from_seed(71, 0);
+    let (pk, _sk) = codec.ctx.keygen(&mut rng);
+    let sens: Vec<f32> = (0..TOTAL).map(|i| ((i * 37) % 113) as f32).collect();
+    let mask = EncryptionMask::top_p(&sens, 0.45);
+    let models: Vec<Vec<f32>> = (0..n_clients)
+        .map(|c| {
+            (0..TOTAL)
+                .map(|i| ((i + c * 97) as f32 * 0.004).sin())
+                .collect()
+        })
+        .collect();
+    let alphas: Vec<f64> = vec![1.0 / n_clients as f64; n_clients];
+    (codec, pk, mask, models, alphas)
+}
+
+fn encrypt_all(
+    codec: &SelectiveCodec,
+    models: &[Vec<f32>],
+    mask: &EncryptionMask,
+    pk: &PublicKey,
+) -> Vec<EncryptedUpdate> {
+    models
+        .iter()
+        .enumerate()
+        .map(|(c, m)| {
+            let mut rng = ChaChaRng::from_seed(100 + c as u64, 0);
+            codec.encrypt_update(m, mask, pk, &mut rng)
+        })
+        .collect()
+}
+
+fn intake_cfg(round_id: u64, expected: usize) -> IntakeConfig {
+    IntakeConfig {
+        round_id,
+        expected_uploads: expected,
+        quorum: None,
+        straggler_timeout: Duration::from_secs(5),
+        max_wait: Duration::from_secs(20),
+        io_timeout: Duration::from_secs(5),
+    }
+}
+
+#[test]
+fn tcp_round_with_disconnect_matches_in_process_engine_bitwise() {
+    // ≥ 4 concurrent clients, one disconnecting mid-upload: the round
+    // completes, counts the disconnect as a dropped straggler, and the
+    // aggregate is bitwise-identical to the in-process engine over the
+    // clients that landed.
+    let n = 5;
+    let (codec, pk, mask, models, alphas) = fixture(n);
+    let updates = encrypt_all(&codec, &models, &mask, &pk);
+    let oracle = native::aggregate(&updates[..4], &alphas[..4], &codec.ctx.params);
+
+    let shape = UpdateShape::for_round(&codec.ctx, &mask);
+    let intake = TcpIntake::bind("127.0.0.1:0", codec.ctx.params.clone(), shape).unwrap();
+    let addr = intake.local_addr().unwrap().to_string();
+    let mut handles = Vec::new();
+    for (c, upd) in updates.iter().cloned().enumerate() {
+        let addr = addr.clone();
+        let alpha = alphas[c];
+        handles.push(std::thread::spawn(move || {
+            let cfg = UploadConfig {
+                round_id: 3,
+                client: c as u64,
+                alpha,
+                ..UploadConfig::default()
+            };
+            if c == 4 {
+                // BEGIN + one ciphertext chunk, then drop the socket
+                upload_partial_then_disconnect(&addr, &cfg, &upd, 1).unwrap();
+            } else {
+                let receipt = upload_update(&addr, &cfg, &upd).unwrap();
+                assert!(receipt.acked);
+                assert_eq!(receipt.ct_frames, upd.cts.len());
+            }
+        }));
+    }
+    let outcome = intake.collect_round(&intake_cfg(3, n)).unwrap();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(outcome.arrivals.len(), 4);
+    assert_eq!(outcome.failed, vec![4u64]);
+    assert!(outcome.bytes_received > 0);
+    // wall-clock stamps are monotone and within the intake window
+    for w in outcome.arrivals.windows(2) {
+        assert!(w[0].arrival_secs <= w[1].arrival_secs);
+    }
+
+    let engine = StreamingAggregator::new(
+        &codec.ctx.params,
+        EngineConfig {
+            engine: Engine::Pipeline,
+            shards: 4,
+            quorum: None,
+            straggler_timeout_secs: 5.0,
+        },
+    );
+    let mut round = engine.begin_round(Some(&mask));
+    for a in outcome.arrivals {
+        round.offer(a).unwrap();
+    }
+    let (agg, mut stats) = round.seal().unwrap();
+    stats.offered += outcome.failed.len();
+    stats.dropped_stragglers += outcome.failed.len();
+    assert_eq!(stats.offered, 5);
+    assert_eq!(stats.accepted, 4);
+    assert_eq!(stats.dropped_stragglers, 1);
+    let expect_mass: f64 = alphas[..4].iter().sum();
+    assert!((stats.alpha_mass - expect_mass).abs() < 1e-12);
+
+    assert_eq!(agg.cts.len(), oracle.cts.len());
+    for (a, b) in agg.cts.iter().zip(oracle.cts.iter()) {
+        assert_eq!(a.c0, b.c0, "c0 limbs differ from the in-process engine");
+        assert_eq!(a.c1, b.c1, "c1 limbs differ from the in-process engine");
+        assert_eq!(a.n_values, b.n_values);
+        assert!((a.scale - b.scale).abs() < 1e-9);
+    }
+    assert_eq!(agg.plain, oracle.plain);
+}
+
+#[test]
+fn streaming_encrypt_upload_is_bitwise_identical_to_staged() {
+    // upload_encrypt_streaming overlaps encryption with the socket write;
+    // the server must reassemble exactly the update encrypt_update builds
+    // from the same rng state.
+    let (codec, pk, mask, models, _alphas) = fixture(1);
+    let expected = {
+        let mut rng = ChaChaRng::from_seed(500, 0);
+        codec.encrypt_update(&models[0], &mask, &pk, &mut rng)
+    };
+    let shape = UpdateShape::for_round(&codec.ctx, &mask);
+    let intake = TcpIntake::bind("127.0.0.1:0", codec.ctx.params.clone(), shape).unwrap();
+    let addr = intake.local_addr().unwrap().to_string();
+    let outcome = std::thread::scope(|s| {
+        s.spawn(|| {
+            let mut rng = ChaChaRng::from_seed(500, 0);
+            let cfg = UploadConfig {
+                round_id: 9,
+                client: 42,
+                alpha: 1.0,
+                ..UploadConfig::default()
+            };
+            let receipt = upload_encrypt_streaming(
+                &addr, &cfg, &codec, &models[0], &mask, &pk, &mut rng,
+            )
+            .unwrap();
+            assert!(receipt.acked);
+            assert_eq!(receipt.ct_frames, expected.cts.len());
+        });
+        intake.collect_round(&intake_cfg(9, 1))
+    })
+    .unwrap();
+    assert_eq!(outcome.arrivals.len(), 1);
+    assert!(outcome.failed.is_empty());
+    let got = &outcome.arrivals[0];
+    assert_eq!(got.client, 42);
+    assert!((got.alpha - 1.0).abs() < 1e-15);
+    assert_eq!(got.update.total, expected.total);
+    assert_eq!(got.update.plain, expected.plain);
+    assert_eq!(got.update.cts.len(), expected.cts.len());
+    for (a, b) in got.update.cts.iter().zip(expected.cts.iter()) {
+        assert_eq!(a, b, "wire roundtrip changed a ciphertext");
+    }
+}
+
+#[test]
+fn malformed_uploads_fail_their_connection_not_the_round() {
+    // Three concurrent connections: one valid, one with a shape-skewed
+    // BEGIN, one full-limb-range violation (limb-count mismatch). The round
+    // completes from the valid upload; the identified failures land in
+    // `failed` and settle their slots.
+    let (codec, pk, mask, models, alphas) = fixture(2);
+    let updates = encrypt_all(&codec, &models, &mask, &pk);
+    let shape = UpdateShape::for_round(&codec.ctx, &mask);
+    let intake = TcpIntake::bind("127.0.0.1:0", codec.ctx.params.clone(), shape).unwrap();
+    let addr = intake.local_addr().unwrap().to_string();
+
+    let mut handles = Vec::new();
+    // valid upload from client 0
+    {
+        let addr = addr.clone();
+        let upd = updates[0].clone();
+        let alpha = alphas[0];
+        handles.push(std::thread::spawn(move || {
+            let cfg = UploadConfig {
+                round_id: 1,
+                client: 0,
+                alpha,
+                ..UploadConfig::default()
+            };
+            upload_update(&addr, &cfg, &upd).unwrap();
+        }));
+    }
+    // client 7: BEGIN declaring one ciphertext too many
+    {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut s = TcpStream::connect(&addr).unwrap();
+            let p = encode_begin(7, 0.5, shape.n_cts + 1, shape.n_plain, shape.total);
+            let _ = write_frame(&mut s, 1, FrameKind::Begin, 0, &p);
+            let _ = s.flush();
+        }));
+    }
+    // client 8: valid BEGIN, then a ciphertext chunk carrying only a partial
+    // limb range — a limb-count mismatch on the wire
+    {
+        let addr = addr.clone();
+        let upd = updates[1].clone();
+        handles.push(std::thread::spawn(move || {
+            let mut s = TcpStream::connect(&addr).unwrap();
+            let p = encode_begin(8, 0.5, shape.n_cts, shape.n_plain, shape.total);
+            let _ = write_frame(&mut s, 1, FrameKind::Begin, 0, &p);
+            let partial = ciphertext_shard_to_bytes(&upd.cts[0], 0, 2);
+            let _ = write_frame(&mut s, 1, FrameKind::CtChunk, 0, &partial);
+            let _ = s.flush();
+        }));
+    }
+
+    let outcome = intake.collect_round(&intake_cfg(1, 3)).unwrap();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(outcome.arrivals.len(), 1);
+    assert_eq!(outcome.arrivals[0].client, 0);
+    let mut failed = outcome.failed.clone();
+    failed.sort_unstable();
+    assert_eq!(failed, vec![7, 8]);
+
+    // the surviving upload still seals into a valid round
+    let engine = StreamingAggregator::new(
+        &codec.ctx.params,
+        EngineConfig {
+            engine: Engine::Pipeline,
+            shards: 2,
+            quorum: None,
+            straggler_timeout_secs: 5.0,
+        },
+    );
+    let mut round = engine.begin_round(Some(&mask));
+    for a in outcome.arrivals {
+        round.offer(a).unwrap();
+    }
+    let (agg, stats) = round.seal().unwrap();
+    assert_eq!(stats.accepted, 1);
+    let oracle = native::aggregate(&updates[..1], &alphas[..1], &codec.ctx.params);
+    for (a, b) in agg.cts.iter().zip(oracle.cts.iter()) {
+        assert_eq!(a.c0, b.c0);
+        assert_eq!(a.c1, b.c1);
+    }
+}
+
+#[test]
+fn anonymous_probe_does_not_displace_a_participant() {
+    // A garbage connection that never presents a valid BEGIN is recorded in
+    // `failed` but must not consume the participant's slot: the real upload
+    // arriving afterwards still completes the round.
+    let (codec, pk, mask, models, alphas) = fixture(1);
+    let updates = encrypt_all(&codec, &models, &mask, &pk);
+    let shape = UpdateShape::for_round(&codec.ctx, &mask);
+    let intake = TcpIntake::bind("127.0.0.1:0", codec.ctx.params.clone(), shape).unwrap();
+    let addr = intake.local_addr().unwrap().to_string();
+    let handle = {
+        let addr = addr.clone();
+        let upd = updates[0].clone();
+        let alpha = alphas[0];
+        std::thread::spawn(move || {
+            // probe first: pure garbage, then close
+            {
+                let mut s = TcpStream::connect(&addr).unwrap();
+                let _ = s.write_all(&[0xABu8; 128]);
+                let _ = s.flush();
+            }
+            std::thread::sleep(Duration::from_millis(200));
+            let cfg = UploadConfig {
+                round_id: 6,
+                client: 0,
+                alpha,
+                ..UploadConfig::default()
+            };
+            upload_update(&addr, &cfg, &upd).unwrap();
+        })
+    };
+    let outcome = intake.collect_round(&intake_cfg(6, 1)).unwrap();
+    handle.join().unwrap();
+    assert_eq!(outcome.arrivals.len(), 1);
+    assert_eq!(outcome.arrivals[0].client, 0);
+    assert_eq!(outcome.failed, vec![UNIDENTIFIED_CLIENT]);
+}
+
+#[test]
+fn duplicate_upload_is_discarded_not_double_counted() {
+    // The same client uploading twice (lost-ACK retry or a forged id) must
+    // contribute exactly one arrival — aggregating both would double its
+    // FedAvg weight.
+    let (codec, pk, mask, models, alphas) = fixture(1);
+    let updates = encrypt_all(&codec, &models, &mask, &pk);
+    let shape = UpdateShape::for_round(&codec.ctx, &mask);
+    let intake = TcpIntake::bind("127.0.0.1:0", codec.ctx.params.clone(), shape).unwrap();
+    let addr = intake.local_addr().unwrap().to_string();
+    let handle = {
+        let addr = addr.clone();
+        let upd = updates[0].clone();
+        let alpha = alphas[0];
+        std::thread::spawn(move || {
+            let cfg = UploadConfig {
+                round_id: 4,
+                client: 0,
+                alpha,
+                ..UploadConfig::default()
+            };
+            upload_update(&addr, &cfg, &upd).unwrap();
+            // retry: completes on the wire but must be discarded server-side
+            let _ = upload_update(&addr, &cfg, &upd);
+        })
+    };
+    let cfg = IntakeConfig {
+        round_id: 4,
+        expected_uploads: 2,
+        quorum: Some(1),
+        straggler_timeout: Duration::from_millis(500),
+        max_wait: Duration::from_secs(20),
+        io_timeout: Duration::from_secs(5),
+    };
+    let outcome = intake.collect_round(&cfg).unwrap();
+    handle.join().unwrap();
+    assert_eq!(outcome.arrivals.len(), 1);
+    assert_eq!(outcome.failed, vec![0]);
+}
+
+#[test]
+fn quorum_early_stop_bounds_the_accept_loop() {
+    // Expecting 3 uploads but only 1 arrives: with quorum 1 and a short
+    // straggler timeout the intake stops a few hundred ms after the first
+    // completion instead of waiting out max_wait.
+    let (codec, pk, mask, models, alphas) = fixture(1);
+    let updates = encrypt_all(&codec, &models, &mask, &pk);
+    let shape = UpdateShape::for_round(&codec.ctx, &mask);
+    let intake = TcpIntake::bind("127.0.0.1:0", codec.ctx.params.clone(), shape).unwrap();
+    let addr = intake.local_addr().unwrap().to_string();
+    let handle = {
+        let addr = addr.clone();
+        let upd = updates[0].clone();
+        let alpha = alphas[0];
+        std::thread::spawn(move || {
+            let cfg = UploadConfig {
+                round_id: 2,
+                client: 0,
+                alpha,
+                ..UploadConfig::default()
+            };
+            upload_update(&addr, &cfg, &upd).unwrap();
+        })
+    };
+    let cfg = IntakeConfig {
+        round_id: 2,
+        expected_uploads: 3,
+        quorum: Some(1),
+        straggler_timeout: Duration::from_millis(300),
+        max_wait: Duration::from_secs(30),
+        io_timeout: Duration::from_secs(5),
+    };
+    let outcome = intake.collect_round(&cfg).unwrap();
+    handle.join().unwrap();
+    assert_eq!(outcome.arrivals.len(), 1);
+    assert!(
+        outcome.elapsed_secs < 10.0,
+        "accept loop ran {}s — early stop did not engage",
+        outcome.elapsed_secs
+    );
+}

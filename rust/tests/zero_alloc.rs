@@ -8,10 +8,13 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+use fedml_he::agg_engine::{Arrival, Engine, EngineConfig, StreamingAggregator};
 use fedml_he::ckks::{
     decrypt_into, encrypt_into, keygen, ops, Ciphertext, CkksParams, CkksScratch, RnsPoly,
 };
 use fedml_he::crypto::prng::ChaChaRng;
+use fedml_he::he_agg::EncryptedUpdate;
+use std::sync::Arc;
 
 struct CountingAlloc;
 
@@ -74,4 +77,49 @@ fn hot_paths_are_allocation_free_after_warmup() {
     // Sanity: the loop really did useful work (fresh randomness each pass).
     assert!(ct.c0.limb(0).iter().any(|&x| x != 0));
     assert_eq!(agg.n_values, 128);
+}
+
+#[test]
+fn streaming_admission_never_clones_updates() {
+    // Quorum/straggler admission must move the round's already-owned
+    // arrivals, never deep-copy an update: offering N model-scale updates is
+    // O(N) small bookkeeping allocations, not O(N × model). A deep clone of
+    // these 16 updates would cost hundreds of allocations (8 ciphertexts ×
+    // 2 polynomials each, per arrival).
+    let params = CkksParams::new(256, 3, 30).unwrap();
+    let make_update = || {
+        let cts: Vec<Ciphertext> = (0..8).map(|_| Ciphertext::zero(&params)).collect();
+        Arc::new(EncryptedUpdate {
+            cts,
+            plain: vec![0.0f32; 1024],
+            total: 2048,
+        })
+    };
+    let cfg = EngineConfig {
+        engine: Engine::Pipeline,
+        shards: 2,
+        quorum: Some(4),
+        straggler_timeout_secs: 1.0,
+    };
+    let engine = StreamingAggregator::new(&params, cfg);
+    let arrivals: Vec<Arrival> = (0..16)
+        .map(|i| Arrival {
+            client: i as u64,
+            alpha: 1.0 / 16.0,
+            arrival_secs: i as f64 * 0.01,
+            update: make_update(),
+        })
+        .collect();
+    let mut intake = engine.begin_round(None);
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for a in arrivals {
+        intake.offer(a).unwrap();
+    }
+    let after = ALLOCS.load(Ordering::Relaxed);
+    assert!(
+        after - before <= 8,
+        "streaming admission allocated {} time(s) for 16 offers",
+        after - before
+    );
+    assert_eq!(intake.offered(), 16);
 }
