@@ -1,0 +1,69 @@
+//! Serve/join demo: one full federated task over persistent duplex
+//! loopback sessions (DESIGN.md §9) — the server pushes the agreed mask
+//! and each round's partially-encrypted aggregate as real downlink frames,
+//! client session threads run the exact `join` loop (train, encrypt,
+//! upload, decrypt locally) — compared **bitwise** against the same-seed
+//! in-process simulator. Runs without artifacts (synthetic workload); CI
+//! uses it as the bounded session-transport smoke.
+//!
+//! ```bash
+//! cargo run --release --example serve_join_demo
+//! ```
+
+use fedml_he::coordinator::{FlConfig, FlServer, Transport};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = FlConfig {
+        model: "synthetic".into(),
+        synthetic_dim: 2048,
+        clients: 3,
+        rounds: 2,
+        local_steps: 2,
+        lr: 0.2,
+        eval_every: 2,
+        engine: fedml_he::agg_engine::Engine::Pipeline,
+        shards: 2,
+        seed: 7,
+        ..Default::default()
+    };
+
+    let (sim_report, sim_global) = FlServer::standalone(cfg.clone())?.run()?;
+    println!(
+        "sim: {} rounds, timing={}, down {} B (simulated clock)",
+        sim_report.rounds.len(),
+        sim_report.timing_source,
+        sim_report.rounds.iter().map(|r| r.download_bytes).sum::<u64>(),
+    );
+
+    let mut tcp_cfg = cfg;
+    tcp_cfg.transport = Transport::Tcp;
+    let (tcp_report, tcp_global) = FlServer::standalone(tcp_cfg)?.run()?;
+    println!(
+        "tcp: {} rounds, timing={}, mask downlink {} B, round downlink {} B, fin {} B (measured)",
+        tcp_report.rounds.len(),
+        tcp_report.timing_source,
+        tcp_report.mask_downlink_bytes,
+        tcp_report.rounds.iter().map(|r| r.download_bytes).sum::<u64>(),
+        tcp_report.fin_downlink_bytes,
+    );
+    for r in &tcp_report.rounds {
+        println!(
+            "  round {}: {} participants, up {} B in {:.3}s, down {} B in {:.3}s",
+            r.round, r.participants, r.upload_bytes, r.comm_secs, r.download_bytes,
+            r.downlink_secs,
+        );
+    }
+
+    anyhow::ensure!(sim_global.len() == tcp_global.len());
+    for (i, (a, b)) in sim_global.iter().zip(tcp_global.iter()).enumerate() {
+        anyhow::ensure!(
+            a.to_bits() == b.to_bits(),
+            "param {i} diverged: sim {a} vs tcp {b}"
+        );
+    }
+    println!(
+        "final models are bitwise identical across transports ({} params)",
+        sim_global.len()
+    );
+    Ok(())
+}

@@ -69,28 +69,95 @@ impl Cohort {
     }
 }
 
-/// Samples K distinct participants per round from the population.
-#[derive(Debug, Clone, Copy)]
+/// Cap on a client's straggler penalty (selection probability floor
+/// 2^-MAX_PENALTY_SHIFT).
+const MAX_PENALTY: u32 = 8;
+/// Penalties beyond this shift no further probability halving (floor 1/8).
+const MAX_PENALTY_SHIFT: u32 = 3;
+
+/// Samples K distinct participants per round from the population,
+/// down-weighting clients the coordinator has observed timing out
+/// (straggler-aware resampling): a client with penalty `p` is accepted
+/// with probability `2^-min(p, 3)` per draw, so a persistent straggler's
+/// selection rate decays toward 1/8 of its fair share and recovers as
+/// completed rounds decay the penalty.
+///
+/// With no recorded penalties the sample stream is byte-identical to the
+/// penalty-free scheduler (no extra RNG draws), so existing runs and tests
+/// reproduce exactly.
+#[derive(Debug, Clone)]
 pub struct CohortScheduler {
     pub population: Population,
     pub k: usize,
+    /// id → observed-timeout score (incremented per dropped round, decayed
+    /// per completed round).
+    penalties: std::collections::HashMap<u64, u32>,
 }
 
 impl CohortScheduler {
     pub fn new(population: Population, k: usize) -> Self {
         assert!(k >= 1, "cohort must be non-empty");
         assert!(k as u64 <= population.size, "cohort larger than population");
-        CohortScheduler { population, k }
+        CohortScheduler {
+            population,
+            k,
+            penalties: std::collections::HashMap::new(),
+        }
+    }
+
+    /// Record a round in which client `id` was dropped as a straggler.
+    pub fn observe_straggler(&mut self, id: u64) {
+        let p = self.penalties.entry(id).or_insert(0);
+        *p = (*p + 1).min(MAX_PENALTY);
+    }
+
+    /// Record a completed (accepted) round for client `id`: one penalty
+    /// step decays, so a recovered client earns its share back.
+    pub fn observe_completed(&mut self, id: u64) {
+        let cleared = match self.penalties.get_mut(&id) {
+            Some(p) => {
+                *p -= 1;
+                *p == 0
+            }
+            None => false,
+        };
+        if cleared {
+            self.penalties.remove(&id);
+        }
+    }
+
+    /// Current straggler penalty of client `id`.
+    pub fn penalty(&self, id: u64) -> u32 {
+        self.penalties.get(&id).copied().unwrap_or(0)
+    }
+
+    /// Per-draw acceptance probability of client `id`.
+    pub fn selection_prob(&self, id: u64) -> f64 {
+        let shift = self.penalty(id).min(MAX_PENALTY_SHIFT);
+        1.0 / f64::from(1u32 << shift)
     }
 
     /// Deterministic per-round sample of K distinct client ids (rejection
-    /// sampling: O(K) memory regardless of population size).
+    /// sampling: O(K) memory regardless of population size). Penalized ids
+    /// survive a draw only with [`Self::selection_prob`]; a bounded
+    /// attempt budget guarantees termination even when every id is
+    /// penalized (the penalty is a bias, not a ban).
     pub fn sample(&self, round: u64) -> Cohort {
         let mut rng = ChaChaRng::from_seed(self.population.seed, 0xC0_0480 ^ round);
         let mut seen: HashSet<u64> = HashSet::with_capacity(self.k);
         let mut members: Vec<CohortMember> = Vec::with_capacity(self.k);
+        let mut attempts_left: u64 = 64 * self.k as u64 + 1024;
         while members.len() < self.k {
             let id = rng.uniform_u64(self.population.size);
+            if attempts_left > 0 {
+                attempts_left -= 1;
+                let prob = self.selection_prob(id);
+                // no extra rng draw for unpenalized ids: the base stream
+                // stays byte-identical to the penalty-free scheduler
+                if prob < 1.0 && rng.uniform_f64() >= prob {
+                    continue;
+                }
+            }
             if seen.insert(id) {
                 members.push(CohortMember {
                     id,
@@ -165,6 +232,90 @@ mod tests {
             (0..64).map(|i| p.data_size(i)).collect::<Vec<_>>(),
             (0..64).map(|i| q.data_size(i)).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn persistent_straggler_selection_probability_decays() {
+        // One client keeps timing out: feed its drops back into the
+        // scheduler and count how often it is sampled, against a
+        // penalty-free control. The penalized rate must fall well below
+        // the control's (floor 1/8 of fair share).
+        let population = Population::new(200, 11);
+        let mut penalized = CohortScheduler::new(population, 16);
+        let control = CohortScheduler::new(population, 16);
+        let victim = control.sample(0).ids()[0];
+        let rounds = 300u64;
+        let (mut hits_penalized, mut hits_control) = (0u32, 0u32);
+        for r in 0..rounds {
+            let c = penalized.sample(r);
+            if c.ids().contains(&victim) {
+                hits_penalized += 1;
+                penalized.observe_straggler(victim);
+                // everyone else completed fine
+                for id in c.ids() {
+                    if id != victim {
+                        penalized.observe_completed(id);
+                    }
+                }
+            }
+            if control.sample(r).ids().contains(&victim) {
+                hits_control += 1;
+            }
+        }
+        assert!(hits_control >= 10, "control sampled victim {hits_control}x");
+        assert!(
+            (hits_penalized as f64) < hits_control as f64 * 0.6,
+            "penalty did not bite: {hits_penalized} vs {hits_control}"
+        );
+        // the probability itself decays monotonically to the floor
+        let mut s = CohortScheduler::new(population, 4);
+        assert_eq!(s.selection_prob(7), 1.0);
+        s.observe_straggler(7);
+        assert_eq!(s.selection_prob(7), 0.5);
+        s.observe_straggler(7);
+        assert_eq!(s.selection_prob(7), 0.25);
+        s.observe_straggler(7);
+        s.observe_straggler(7);
+        assert_eq!(s.selection_prob(7), 0.125, "probability floor");
+        // recovery: completions decay the penalty back to fair share
+        for _ in 0..MAX_PENALTY {
+            s.observe_completed(7);
+        }
+        assert_eq!(s.penalty(7), 0);
+        assert_eq!(s.selection_prob(7), 1.0);
+    }
+
+    #[test]
+    fn penalty_free_sampling_matches_pristine_scheduler() {
+        // Recording and then fully decaying penalties must restore the
+        // exact original sample stream (no lingering rng perturbation).
+        let population = Population::new(5_000, 3);
+        let pristine = CohortScheduler::new(population, 8);
+        let mut touched = CohortScheduler::new(population, 8);
+        let id = pristine.sample(0).ids()[0];
+        touched.observe_straggler(id);
+        touched.observe_straggler(id);
+        assert_ne!(touched.penalty(id), 0);
+        touched.observe_completed(id);
+        touched.observe_completed(id);
+        for round in 0..20 {
+            assert_eq!(pristine.sample(round).ids(), touched.sample(round).ids());
+        }
+    }
+
+    #[test]
+    fn fully_penalized_population_still_terminates() {
+        let population = Population::new(4, 0);
+        let mut s = CohortScheduler::new(population, 4);
+        for id in 0..4 {
+            for _ in 0..MAX_PENALTY {
+                s.observe_straggler(id);
+            }
+        }
+        // k == population size with everyone at the floor: the attempt
+        // budget guarantees the full cohort is still produced
+        let c = s.sample(9);
+        assert_eq!(c.ids(), vec![0, 1, 2, 3]);
     }
 
     #[test]

@@ -183,6 +183,18 @@ impl<'p, 'm> RoundIntake<'p, 'm> {
         Ok(())
     }
 
+    /// Offer a batch of arrivals in order — the hand-off point for a
+    /// transport outcome (one-shot intake or persistent-session collector).
+    pub fn offer_many(
+        &mut self,
+        arrivals: impl IntoIterator<Item = Arrival>,
+    ) -> anyhow::Result<()> {
+        for a in arrivals {
+            self.offer(a)?;
+        }
+        Ok(())
+    }
+
     /// Arrivals offered so far.
     pub fn offered(&self) -> usize {
         self.arrivals.len()

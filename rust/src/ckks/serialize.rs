@@ -220,6 +220,100 @@ pub fn ciphertext_shard_from_bytes(
     })
 }
 
+// ---------------------------------------------------------------------------
+// Key material (the out-of-band distribution file of the serve/join flow):
+// raw RNS polynomials with their domain flag, coefficients as u32 (< 2^31).
+
+const POLY_MAGIC: u32 = 0x434B_504C; // "CKPL"
+
+/// Append one RNS polynomial: magic(4) version(4) n(4) limbs(4) ntt(1)
+/// pad(3) body (limb-major u32 coefficients).
+pub fn rns_poly_append(p: &RnsPoly, out: &mut Vec<u8>) {
+    let limbs = p.num_limbs();
+    out.reserve(20 + limbs * p.n * 4);
+    out.extend_from_slice(&POLY_MAGIC.to_le_bytes());
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&(p.n as u32).to_le_bytes());
+    out.extend_from_slice(&(limbs as u32).to_le_bytes());
+    out.push(u8::from(p.ntt_form));
+    out.extend_from_slice(&[0u8; 3]);
+    for &c in p.flat() {
+        debug_assert!(c < 1 << 31);
+        out.extend_from_slice(&(c as u32).to_le_bytes());
+    }
+}
+
+/// Read one RNS polynomial written by [`rns_poly_append`], advancing `off`.
+/// Validates the shape against `params` and every coefficient against its
+/// limb modulus.
+pub fn rns_poly_read(
+    bytes: &[u8],
+    off: &mut usize,
+    params: &CkksParams,
+) -> anyhow::Result<RnsPoly> {
+    anyhow::ensure!(read_u32(bytes, off)? == POLY_MAGIC, "bad poly magic");
+    anyhow::ensure!(read_u32(bytes, off)? == VERSION, "bad poly version");
+    let n = read_u32(bytes, off)? as usize;
+    let limbs = read_u32(bytes, off)? as usize;
+    anyhow::ensure!(bytes.len() >= *off + 4, "truncated poly header");
+    let ntt = bytes[*off];
+    anyhow::ensure!(ntt <= 1, "bad poly domain flag {ntt}");
+    anyhow::ensure!(
+        bytes[*off + 1..*off + 4] == [0u8; 3],
+        "bad poly header padding"
+    );
+    *off += 4;
+    anyhow::ensure!(n == params.n, "ring degree mismatch");
+    anyhow::ensure!(limbs == params.num_limbs(), "limb count mismatch");
+    let mut data = Vec::with_capacity(limbs * n);
+    for l in 0..limbs {
+        let q = params.moduli[l];
+        for _ in 0..n {
+            let c = read_u32(bytes, off)? as u64;
+            anyhow::ensure!(c < q, "poly coefficient out of range");
+            data.push(c);
+        }
+    }
+    Ok(RnsPoly::from_flat(n, limbs, data, ntt == 1))
+}
+
+/// Append a public key (`b` then `a`, both NTT form).
+pub fn public_key_append(pk: &super::keys::PublicKey, out: &mut Vec<u8>) {
+    rns_poly_append(&pk.b_ntt, out);
+    rns_poly_append(&pk.a_ntt, out);
+}
+
+/// Read a public key written by [`public_key_append`], advancing `off`.
+pub fn public_key_read(
+    bytes: &[u8],
+    off: &mut usize,
+    params: &CkksParams,
+) -> anyhow::Result<super::keys::PublicKey> {
+    let b_ntt = rns_poly_read(bytes, off, params)?;
+    let a_ntt = rns_poly_read(bytes, off, params)?;
+    anyhow::ensure!(
+        b_ntt.ntt_form && a_ntt.ntt_form,
+        "public key halves must be in NTT form"
+    );
+    Ok(super::keys::PublicKey { b_ntt, a_ntt })
+}
+
+/// Append a secret key (`s`, NTT form).
+pub fn secret_key_append(sk: &super::keys::SecretKey, out: &mut Vec<u8>) {
+    rns_poly_append(&sk.s_ntt, out);
+}
+
+/// Read a secret key written by [`secret_key_append`], advancing `off`.
+pub fn secret_key_read(
+    bytes: &[u8],
+    off: &mut usize,
+    params: &CkksParams,
+) -> anyhow::Result<super::keys::SecretKey> {
+    let s_ntt = rns_poly_read(bytes, off, params)?;
+    anyhow::ensure!(s_ntt.ntt_form, "secret key must be in NTT form");
+    Ok(super::keys::SecretKey { s_ntt })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -332,6 +426,55 @@ mod tests {
         ciphertext_shard_append(&ct, 0, 2, &mut buf);
         assert_eq!(&buf[..7], &[0xAA; 7]);
         assert_eq!(&buf[7..], &direct[..]);
+    }
+
+    #[test]
+    fn key_material_roundtrips_and_validates() {
+        let params = Arc::new(CkksParams::new(256, 3, 30).unwrap());
+        let mut rng = ChaChaRng::from_seed(9, 0);
+        let (pk, sk) = keygen(&params, &mut rng);
+        let mut bytes = Vec::new();
+        public_key_append(&pk, &mut bytes);
+        secret_key_append(&sk, &mut bytes);
+        let mut off = 0usize;
+        let pk2 = public_key_read(&bytes, &mut off, &params).unwrap();
+        let sk2 = secret_key_read(&bytes, &mut off, &params).unwrap();
+        assert_eq!(off, bytes.len());
+        assert_eq!(pk2.b_ntt, pk.b_ntt);
+        assert_eq!(pk2.a_ntt, pk.a_ntt);
+        assert_eq!(sk2.s_ntt, sk.s_ntt);
+
+        // the recovered key pair actually decrypts
+        let encoder = Encoder::new(params.clone());
+        let ct = encrypt(&params, &pk2, &encoder.encode(&[0.625]), 1, &mut rng);
+        let dec = crate::ckks::decrypt(&params, &sk2, &ct);
+        let vals = encoder.decode(&dec, 1, ct.scale);
+        assert!((vals[0] - 0.625).abs() < 1e-4);
+
+        // truncation / bad magic / coefficient out of range are rejected
+        let mut off = 0usize;
+        assert!(public_key_read(&bytes[..bytes.len() - 1], &mut off, &params).is_ok());
+        let mut off = 0usize;
+        assert!(secret_key_read(&bytes[..10], &mut off, &params).is_err());
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        let mut off = 0usize;
+        assert!(public_key_read(&bad, &mut off, &params).is_err());
+        let mut bad = bytes.clone();
+        bad[20..24].copy_from_slice(&u32::MAX.to_le_bytes());
+        let mut off = 0usize;
+        assert!(public_key_read(&bad, &mut off, &params).is_err());
+        // a coefficient-domain poly is rejected as key material
+        let mut coeff = sk.s_ntt.clone();
+        coeff.from_ntt(&params);
+        let mut b = Vec::new();
+        rns_poly_append(&coeff, &mut b);
+        let mut off = 0usize;
+        assert!(secret_key_read(&b, &mut off, &params).is_err());
+        // wrong params
+        let other = CkksParams::new(512, 3, 30).unwrap();
+        let mut off = 0usize;
+        assert!(public_key_read(&bytes, &mut off, &other).is_err());
     }
 
     #[test]

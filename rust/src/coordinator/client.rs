@@ -131,3 +131,115 @@ impl<'a> FlClient<'a> {
 pub fn is_flat_input(model: &str) -> bool {
     model == "mlp"
 }
+
+/// The client-side compute core behind a coordinator
+/// [`Participant`](crate::coordinator::phases::Participant): either the
+/// AOT-artifact trainer or the artifact-free synthetic workload. One enum so the phase machine, the in-process tcp
+/// client threads, and standalone `join` processes all drive exactly the
+/// same per-client logic (same rng streams, same encrypt path) — the
+/// bitwise-equivalence guarantee between `--transport sim`, `--transport
+/// tcp` and multi-process `serve`/`join` rests on this.
+pub enum ClientCore<'a> {
+    Artifact(FlClient<'a>),
+    Synthetic(crate::fl::SyntheticClient),
+}
+
+impl ClientCore<'_> {
+    pub fn id(&self) -> u64 {
+        match self {
+            ClientCore::Artifact(c) => c.id as u64,
+            ClientCore::Synthetic(c) => c.id,
+        }
+    }
+
+    /// Base FedAvg weight (before per-round normalization over the active
+    /// set).
+    pub fn alpha(&self) -> f64 {
+        match self {
+            ClientCore::Artifact(c) => c.alpha,
+            ClientCore::Synthetic(c) => c.alpha,
+        }
+    }
+
+    /// The client's encryption/DP randomness stream.
+    pub fn rng_mut(&mut self) -> &mut ChaChaRng {
+        match self {
+            ClientCore::Artifact(c) => &mut c.rng,
+            ClientCore::Synthetic(c) => &mut c.rng,
+        }
+    }
+
+    /// Rebind this pooled slot to a virtual cohort member for one round.
+    pub fn bind_virtual(&mut self, vid: u64, alpha: f64, client_seed: u64, round: u64) {
+        match self {
+            ClientCore::Artifact(c) => c.bind_virtual(vid, alpha, client_seed, round),
+            ClientCore::Synthetic(c) => c.bind_virtual(vid, alpha, client_seed, round),
+        }
+    }
+
+    /// Local sensitivity map (mask-agreement stage input).
+    pub fn sensitivity(&mut self, global: &[f32]) -> anyhow::Result<Vec<f32>> {
+        match self {
+            ClientCore::Artifact(c) => c.sensitivity(global),
+            ClientCore::Synthetic(c) => Ok(c.sensitivity(global)),
+        }
+    }
+
+    /// Per-layer sensitivity scores (layer-granularity mask agreement).
+    pub fn layer_sensitivity(
+        &mut self,
+        global: &[f32],
+        spans: &[std::ops::Range<usize>],
+    ) -> anyhow::Result<Vec<f32>> {
+        match self {
+            ClientCore::Artifact(c) => c.layer_sensitivity(global, spans),
+            ClientCore::Synthetic(c) => {
+                let s = c.sensitivity(global);
+                Ok(crate::he_agg::mask::layer_mean_scores(&s, spans))
+            }
+        }
+    }
+
+    /// Local training from the global model.
+    pub fn train(
+        &mut self,
+        global: &[f32],
+        steps: usize,
+        lr: f32,
+    ) -> anyhow::Result<(Vec<f32>, f32)> {
+        match self {
+            ClientCore::Artifact(c) => c.train(global, steps, lr),
+            ClientCore::Synthetic(c) => Ok(c.train(global, steps, lr)),
+        }
+    }
+
+    /// Algorithm-1 client-side encryption (+ optional DP noise on the
+    /// plaintext remainder), driven by this client's rng stream.
+    pub fn encrypt(
+        &mut self,
+        codec: &SelectiveCodec,
+        params: &mut Vec<f32>,
+        mask: &EncryptionMask,
+        pk: &crate::ckks::PublicKey,
+        dp_scale: Option<f64>,
+    ) -> EncryptedUpdate {
+        match self {
+            ClientCore::Artifact(c) => c.encrypt(codec, params, mask, pk, dp_scale),
+            ClientCore::Synthetic(c) => {
+                let mut update = codec.encrypt_update(params, mask, pk, &mut c.rng);
+                if let Some(b) = dp_scale {
+                    crate::crypto::dp::add_noise(&mut c.rng, &mut update.plain, b);
+                }
+                update
+            }
+        }
+    }
+
+    /// Evaluate the global model on local data.
+    pub fn evaluate(&mut self, global: &[f32], batches: usize) -> anyhow::Result<(f32, f32)> {
+        match self {
+            ClientCore::Artifact(c) => c.evaluate(global, batches),
+            ClientCore::Synthetic(c) => Ok(c.evaluate(global)),
+        }
+    }
+}

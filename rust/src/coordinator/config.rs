@@ -153,6 +153,17 @@ pub struct FlConfig {
     /// (`--intake-max-wait`; default 30 s + the straggler timeout). Raise
     /// it for slow links where honest uploads take longer.
     pub intake_max_wait: Option<f64>,
+    /// Flat parameter count of the artifact-free `synthetic` model
+    /// (`--synthetic-params`; ignored for artifact models).
+    pub synthetic_dim: usize,
+    /// Seconds the server waits for all clients' session handshakes
+    /// (`--join-wait`) — the barrier before the mask-agreement stage under
+    /// `--transport tcp` and `serve`.
+    pub join_wait: f64,
+    /// Seconds a client session waits for the next downlink
+    /// (`--round-wait`) — covers server aggregation plus the other
+    /// clients' training between rounds.
+    pub round_wait: f64,
 }
 
 impl Default for FlConfig {
@@ -185,6 +196,9 @@ impl Default for FlConfig {
             listen: "127.0.0.1:0".to_string(),
             connect: None,
             intake_max_wait: None,
+            synthetic_dim: crate::fl::SYNTHETIC_DEFAULT_DIM,
+            join_wait: 120.0,
+            round_wait: 300.0,
         }
     }
 }
@@ -240,6 +254,9 @@ impl FlConfig {
             listen: args.get_or("listen", &d.listen),
             connect: args.get("connect").map(String::from),
             intake_max_wait: args.parsed("intake-max-wait")?,
+            synthetic_dim: args.get_parsed_or("synthetic-params", d.synthetic_dim),
+            join_wait: args.get_parsed_or("join-wait", d.join_wait),
+            round_wait: args.get_parsed_or("round-wait", d.round_wait),
         })
     }
 
@@ -290,7 +307,8 @@ mod tests {
     fn transport_options_parse() {
         let args = Args::parse_from(
             "run --transport tcp --listen 127.0.0.1:7070 --connect 10.0.0.5:7070 \
-             --intake-max-wait 120"
+             --intake-max-wait 120 --synthetic-params 2048 --join-wait 45 \
+             --round-wait 90"
                 .split_whitespace()
                 .map(String::from),
         );
@@ -299,9 +317,16 @@ mod tests {
         assert_eq!(c.listen, "127.0.0.1:7070");
         assert_eq!(c.connect.as_deref(), Some("10.0.0.5:7070"));
         assert_eq!(c.intake_max_wait, Some(120.0));
+        assert_eq!(c.synthetic_dim, 2048);
+        assert_eq!(c.join_wait, 45.0);
+        assert_eq!(c.round_wait, 90.0);
         assert_eq!(Transport::parse("sim").unwrap(), Transport::Sim);
         assert_eq!(Transport::parse("simulated").unwrap(), Transport::Sim);
         assert!(Transport::parse("udp").is_err());
+        // defaults
+        let d = FlConfig::default();
+        assert_eq!(d.synthetic_dim, crate::fl::SYNTHETIC_DEFAULT_DIM);
+        assert!(d.join_wait > 0.0 && d.round_wait > 0.0);
     }
 
     #[test]

@@ -2,14 +2,25 @@
 //!
 //! * [`config`] — task configuration (the deployment "server package").
 //! * [`key_authority`] — key agreement: trusted dealer or threshold protocol.
-//! * [`client`] — client-side executor (local train, sensitivity, encrypt).
-//! * [`server`] — the round orchestrator implementing Fig. 3's three stages
-//!   and Algorithm 1, with per-stage overhead metrics.
+//! * [`client`] — client-side executor (local train, sensitivity, encrypt)
+//!   behind the [`client::ClientCore`] artifact/synthetic split.
+//! * [`phases`] — the round-phase state machine (KeyAgreement →
+//!   MaskAgreement → per-round Broadcast/Intake/Aggregate/Decrypt → Eval →
+//!   Finale) over the [`phases::Participant`] trait, plus the client
+//!   session loop shared by `join` processes and in-process tcp clients.
+//! * [`taskkey`] — the out-of-band task/key distribution file for
+//!   multi-process `serve`/`join`.
+//! * [`server`] — the orchestrator: configuration, report, and the
+//!   run/serve entry points dispatching into the phase machine.
 
 pub mod client;
 pub mod config;
 pub mod key_authority;
+pub mod phases;
 pub mod server;
+pub mod taskkey;
 
 pub use config::{Backend, FlConfig, KeyMode, MaskGranularity, Selection, Transport};
-pub use server::{FlReport, FlServer, RoundMetrics};
+pub use phases::{client_session_loop, join_task, Participant, RemoteParticipant, SimParticipant};
+pub use server::{FlReport, FlServer, RoundMetrics, ServeOptions};
+pub use taskkey::{TaskKey, TaskSpec};

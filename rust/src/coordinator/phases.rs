@@ -1,0 +1,1151 @@
+//! The round-phase state machine (DESIGN.md §9).
+//!
+//! `FlServer::run` used to inline every stage of Fig. 3 into one 400-line
+//! loop that only knew in-process clients. Here the task is an explicit
+//! phase sequence over a shared [`RoundState`]:
+//!
+//! ```text
+//! KeyAgreement → MaskAgreement → per round r {
+//!     Broadcast(r)      downlink: previous aggregate + round roles
+//!     LocalTrain+Encrypt / Intake(r)
+//!     Aggregate(r)      streaming engine, quorum/straggler policy
+//!     Decrypt+Apply(r)  key-holder decrypt + α-mass renormalization
+//!     Eval(r)
+//! } → Finale            last aggregate + FIN downlink
+//! ```
+//!
+//! Each phase is a function over `RoundState` and a slice of
+//! [`Participant`]s. The trait is the deployment boundary: the same phase
+//! code drives in-process simulator clients ([`SimParticipant`], arrivals
+//! stamped with `netsim` transfer times) and remote TCP peers
+//! ([`RemoteParticipant`], persistent duplex sessions with measured
+//! wall-clock downlink/uplink). `--transport sim`, `--transport tcp`
+//! (in-process client session threads over loopback) and multi-process
+//! `serve`/`join` all execute this file — which is what makes their final
+//! models bitwise-identical for the same seed: every RNG stream (server
+//! and per-client) is consumed by the same code in the same order, and the
+//! aggregation/decryption kernels are order-independent.
+//!
+//! [`client_session_loop`] is the other half of the symmetry: the client
+//! main loop shared verbatim by `join` processes and the client threads a
+//! single-process tcp run spawns.
+
+use super::client::ClientCore;
+use super::config::{MaskGranularity, Selection, Transport};
+use super::key_authority::{self, KeyMaterial};
+use super::server::{
+    EvalPoint, FlReport, FlServer, RoundMetrics, TIMING_MEASURED, TIMING_SIMULATED,
+};
+use super::taskkey::TaskKey;
+use crate::agg_engine::{Arrival, CohortScheduler, Engine, Population, StreamingAggregator};
+use crate::ckks::{CkksContext, PublicKey, SecretKey};
+use crate::crypto::prng::ChaChaRng;
+use crate::fl::model_meta::layer_spans_for;
+use crate::fl::{SyntheticClient, SyntheticModel, SYNTHETIC_MODEL};
+use crate::he_agg::{selective, EncryptedUpdate, EncryptionMask, SelectiveCodec};
+use crate::netsim::{concurrent_arrivals, SimClock};
+use crate::runtime::Runtime;
+use crate::transport::{
+    ClientSession, DownBegin, IntakeConfig, SessionHub, SessionOpts, UpdateShape, MASK_ROUND,
+    UNIDENTIFIED_CLIENT,
+};
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Shared mutable state threaded through the phase machine.
+pub struct RoundState {
+    pub keys: KeyMaterial,
+    pub pk: PublicKey,
+    pub global: Vec<f32>,
+    pub total_params: usize,
+    /// Agreed encryption mask (set by the MaskAgreement phase).
+    pub mask: Option<EncryptionMask>,
+    /// Round upload/downlink shape derived from the mask.
+    pub shape: Option<UpdateShape>,
+    pub report: FlReport,
+    pub server_rng: ChaChaRng,
+    pub clock: SimClock,
+    /// Previous round's aggregate + its accepted α mass — the payload of
+    /// the next Broadcast phase.
+    pub last_agg: Option<(EncryptedUpdate, f64)>,
+    /// Cohort scheduler (population mode, sim transport only) — carries
+    /// the straggler-penalty state across rounds.
+    pub scheduler: Option<CohortScheduler>,
+}
+
+/// How round uploads reach the aggregation intake.
+pub enum Uplink<'h> {
+    /// In-process: arrivals come straight out of [`Participant::
+    /// launch_round`], stamped with simulated transfer times.
+    Sim,
+    /// Persistent TCP sessions: arrivals come off the hub's per-session
+    /// readers, stamped with measured wall-clock times.
+    Hub(&'h SessionHub),
+}
+
+/// Context for the mask-agreement phase.
+pub struct MaskStage<'s> {
+    pub granularity: MaskGranularity,
+    pub spans: &'s [std::ops::Range<usize>],
+    /// Sensitivity-map length (params, or layer count under layer
+    /// granularity).
+    pub map_len: usize,
+    pub global: &'s [f32],
+    pub pk: &'s PublicKey,
+    pub codec: &'s SelectiveCodec,
+}
+
+/// One round's launch order for a participant.
+pub struct RoundLaunch<'s> {
+    pub round: usize,
+    pub global: &'s [f32],
+    pub mask: &'s EncryptionMask,
+    pub pk: &'s PublicKey,
+    pub codec: &'s SelectiveCodec,
+    /// This participant's FedAvg weight normalized over the round's active
+    /// set.
+    pub alpha_norm: f64,
+    pub local_steps: usize,
+    pub lr: f32,
+    pub dp_scale: Option<f64>,
+}
+
+/// What an in-process participant produced for a round (remote peers
+/// return `None` — their upload arrives over the session instead).
+pub struct SimRoundOutput {
+    pub client: u64,
+    pub alpha: f64,
+    pub update: EncryptedUpdate,
+    pub train_secs: f64,
+    pub encrypt_secs: f64,
+    pub upload_bytes: u64,
+    pub loss: f32,
+}
+
+/// A task participant as the phase machine sees it: the same phase code
+/// drives in-process simulator clients and remote TCP peers through this
+/// trait (the issue's deployment symmetry).
+pub trait Participant {
+    /// Wire client id (virtual cohort id in population mode).
+    fn id(&self) -> u64;
+    /// Base FedAvg weight (before per-round normalization).
+    fn base_alpha(&self) -> f64;
+    /// Rebind this pooled slot to a virtual cohort member (sim-only).
+    fn bind_virtual(&mut self, _vid: u64, _alpha: f64, _client_seed: u64, _round: u64) {}
+    /// MaskAgreement: produce the encrypted sensitivity map inline (sim),
+    /// or `None` when it arrives over the session (remote). The `u64` is
+    /// the upload's wire size.
+    fn solicit_sensitivity(
+        &mut self,
+        stage: &MaskStage,
+    ) -> anyhow::Result<Option<(EncryptedUpdate, u64)>>;
+    /// Downlink the agreed mask (`wire` is its serialized form). Returns
+    /// measured wire bytes (0 when the downlink is simulated).
+    fn deliver_mask(&mut self, mask: &EncryptionMask, wire: &[u8]) -> anyhow::Result<u64>;
+    /// Downlink one round's preamble + optional carried aggregate.
+    fn deliver_round(
+        &mut self,
+        round: u64,
+        down: &DownBegin,
+        agg: Option<&EncryptedUpdate>,
+    ) -> anyhow::Result<u64>;
+    /// Kick off round-`r` local train + encrypt + upload. Sim participants
+    /// do the work inline and return the result; remote peers return
+    /// `None` (their session loop reacts to the Broadcast downlink).
+    fn launch_round(&mut self, launch: &RoundLaunch) -> anyhow::Result<Option<SimRoundOutput>>;
+    /// Evaluate the global on local data (`None` when the participant
+    /// cannot evaluate server-side, i.e. remote peers).
+    fn evaluate(&mut self, global: &[f32]) -> anyhow::Result<Option<(f32, f32)>>;
+}
+
+/// In-process participant: wraps a [`ClientCore`] (artifact or synthetic).
+pub struct SimParticipant<'a> {
+    core: ClientCore<'a>,
+    /// Wire id — the virtual cohort id after `bind_virtual`, else the
+    /// trainer-slot id.
+    wire_id: u64,
+}
+
+impl<'a> SimParticipant<'a> {
+    pub fn new(core: ClientCore<'a>) -> Self {
+        let wire_id = core.id();
+        SimParticipant { core, wire_id }
+    }
+}
+
+impl Participant for SimParticipant<'_> {
+    fn id(&self) -> u64 {
+        self.wire_id
+    }
+
+    fn base_alpha(&self) -> f64 {
+        self.core.alpha()
+    }
+
+    fn bind_virtual(&mut self, vid: u64, alpha: f64, client_seed: u64, round: u64) {
+        self.core.bind_virtual(vid, alpha, client_seed, round);
+        self.wire_id = vid;
+    }
+
+    fn solicit_sensitivity(
+        &mut self,
+        stage: &MaskStage,
+    ) -> anyhow::Result<Option<(EncryptedUpdate, u64)>> {
+        let s = match stage.granularity {
+            MaskGranularity::Param => self.core.sensitivity(stage.global)?,
+            MaskGranularity::Layer => self.core.layer_sensitivity(stage.global, stage.spans)?,
+        };
+        let cts = selective::encrypt_vector(&stage.codec.ctx, &s, stage.pk, self.core.rng_mut());
+        let upd = EncryptedUpdate {
+            cts,
+            plain: Vec::new(),
+            total: stage.map_len,
+        };
+        let bytes = upd.wire_bytes(&stage.codec.ctx) as u64;
+        Ok(Some((upd, bytes)))
+    }
+
+    fn deliver_mask(&mut self, _mask: &EncryptionMask, _wire: &[u8]) -> anyhow::Result<u64> {
+        Ok(0) // shared-memory delivery; the sim clock charges the broadcast
+    }
+
+    fn deliver_round(
+        &mut self,
+        _round: u64,
+        _down: &DownBegin,
+        _agg: Option<&EncryptedUpdate>,
+    ) -> anyhow::Result<u64> {
+        Ok(0) // ditto: the decrypted global is applied by Decrypt+Apply
+    }
+
+    fn launch_round(&mut self, l: &RoundLaunch) -> anyhow::Result<Option<SimRoundOutput>> {
+        let t = Instant::now();
+        let (mut local, loss) = self.core.train(l.global, l.local_steps, l.lr)?;
+        let train_secs = t.elapsed().as_secs_f64();
+        let t = Instant::now();
+        let update = self.core.encrypt(l.codec, &mut local, l.mask, l.pk, l.dp_scale);
+        let encrypt_secs = t.elapsed().as_secs_f64();
+        let upload_bytes = update.wire_bytes(&l.codec.ctx) as u64;
+        Ok(Some(SimRoundOutput {
+            client: self.wire_id,
+            alpha: l.alpha_norm,
+            update,
+            train_secs,
+            encrypt_secs,
+            upload_bytes,
+            loss,
+        }))
+    }
+
+    fn evaluate(&mut self, global: &[f32]) -> anyhow::Result<Option<(f32, f32)>> {
+        self.core.evaluate(global, 1).map(Some)
+    }
+}
+
+/// Remote participant: a persistent-session peer. Downlinks are real
+/// frames pushed through the hub; uploads arrive via the hub's collector.
+pub struct RemoteParticipant<'h> {
+    hub: &'h SessionHub,
+    id: u64,
+    alpha: f64,
+}
+
+impl<'h> RemoteParticipant<'h> {
+    pub fn new(hub: &'h SessionHub, id: u64, alpha: f64) -> Self {
+        RemoteParticipant { hub, id, alpha }
+    }
+}
+
+impl Participant for RemoteParticipant<'_> {
+    fn id(&self) -> u64 {
+        self.id
+    }
+
+    fn base_alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    fn solicit_sensitivity(
+        &mut self,
+        _stage: &MaskStage,
+    ) -> anyhow::Result<Option<(EncryptedUpdate, u64)>> {
+        Ok(None) // the join side computes + uploads over its session
+    }
+
+    fn deliver_mask(&mut self, _mask: &EncryptionMask, wire: &[u8]) -> anyhow::Result<u64> {
+        let out = self.hub.broadcast_mask(&[self.id], wire);
+        anyhow::ensure!(
+            out.failed.is_empty(),
+            "mask downlink to client {} failed",
+            self.id
+        );
+        Ok(out.bytes_sent)
+    }
+
+    /// Per-client round push. NOTE: the per-round Broadcast and Finale
+    /// phases batch the whole cohort through `SessionHub::broadcast_round`
+    /// instead (the shared aggregate is serialized once); this per-client
+    /// entry exists for targeted pushes — e.g. a future mid-round downlink
+    /// replay to a rejoined client.
+    fn deliver_round(
+        &mut self,
+        round: u64,
+        down: &DownBegin,
+        agg: Option<&EncryptedUpdate>,
+    ) -> anyhow::Result<u64> {
+        let out = self.hub.broadcast_round(round, &[(self.id, *down)], agg);
+        anyhow::ensure!(
+            out.failed.is_empty(),
+            "round {round} downlink to client {} failed",
+            self.id
+        );
+        Ok(out.bytes_sent)
+    }
+
+    fn launch_round(&mut self, _launch: &RoundLaunch) -> anyhow::Result<Option<SimRoundOutput>> {
+        Ok(None) // the Broadcast downlink already carries the launch order
+    }
+
+    fn evaluate(&mut self, _global: &[f32]) -> anyhow::Result<Option<(f32, f32)>> {
+        Ok(None) // remote local data is not reachable server-side
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Phases.
+
+/// Phase 0 — KeyAgreement (Fig. 3 stage 1) + state construction.
+pub(crate) fn init_state(srv: &FlServer) -> anyhow::Result<RoundState> {
+    let cfg = &srv.cfg;
+    if let Some(n) = cfg.population {
+        anyhow::ensure!(
+            n >= cfg.clients as u64,
+            "--population ({n}) must be at least --clients ({})",
+            cfg.clients
+        );
+        anyhow::ensure!(
+            cfg.transport == Transport::Sim,
+            "--population requires --transport sim (virtual cohort members \
+             have no remote processes)"
+        );
+    }
+    let mut server_rng = ChaChaRng::from_seed(cfg.seed, 0x5E17);
+    let t = Instant::now();
+    let keys = key_authority::setup(&srv.codec.ctx, cfg.key_mode, cfg.clients, &mut server_rng);
+    let keygen_secs = t.elapsed().as_secs_f64();
+    let pk = keys.public_key().clone();
+    let global = srv.init_global()?;
+    let total_params = global.len();
+    let timing_source = match cfg.transport {
+        Transport::Sim => TIMING_SIMULATED,
+        Transport::Tcp => TIMING_MEASURED,
+    };
+    let report = FlReport {
+        model: cfg.model.clone(),
+        clients: cfg.clients,
+        total_params,
+        keygen_secs,
+        timing_source,
+        ..Default::default()
+    };
+    let scheduler = cfg
+        .population
+        .map(|n| CohortScheduler::new(Population::new(n, cfg.seed), cfg.clients));
+    Ok(RoundState {
+        keys,
+        pk,
+        global,
+        total_params,
+        mask: None,
+        shape: None,
+        report,
+        server_rng,
+        clock: SimClock::parallel(),
+        last_agg: None,
+        scheduler,
+    })
+}
+
+/// Phase 1 — MaskAgreement (§2.4): compute/collect encrypted sensitivity
+/// maps (TopP), aggregate + decrypt the aggregate only, derive the mask,
+/// and broadcast it to every participant (simulated clock or real MASK
+/// frames).
+pub(crate) fn phase_mask_agreement(
+    srv: &FlServer,
+    st: &mut RoundState,
+    participants: &mut [Box<dyn Participant + '_>],
+    uplink: &Uplink,
+) -> anyhow::Result<()> {
+    let cfg = &srv.cfg;
+    let t = Instant::now();
+    let mut mask_clock = SimClock::parallel();
+    let mut measured_up = 0u64;
+    let mut measured_secs = 0.0f64;
+    let mask = match cfg.selection {
+        Selection::Full => EncryptionMask::full(st.total_params),
+        Selection::None => EncryptionMask::empty(st.total_params),
+        Selection::Random => {
+            EncryptionMask::random(st.total_params, cfg.ratio, &mut st.server_rng)
+        }
+        Selection::TopP => {
+            let spans = layer_spans_for(&cfg.model, st.total_params);
+            let map_len = match cfg.mask_granularity {
+                MaskGranularity::Param => st.total_params,
+                MaskGranularity::Layer => spans.len(),
+            };
+            let stage = MaskStage {
+                granularity: cfg.mask_granularity,
+                spans: &spans,
+                map_len,
+                global: &st.global,
+                pk: &st.pk,
+                codec: &srv.codec,
+            };
+            let mut maps: Vec<(u64, f64, EncryptedUpdate)> = Vec::new();
+            let mut base_alpha: HashMap<u64, f64> = HashMap::new();
+            for p in participants.iter_mut() {
+                base_alpha.insert(p.id(), p.base_alpha());
+                if let Some((upd, bytes)) = p.solicit_sensitivity(&stage)? {
+                    mask_clock.upload(bytes, cfg.bandwidth);
+                    maps.push((p.id(), p.base_alpha(), upd));
+                }
+            }
+            if let Uplink::Hub(hub) = uplink {
+                let shape = UpdateShape {
+                    n_cts: srv.codec.ct_count(map_len),
+                    n_plain: 0,
+                    total: map_len,
+                };
+                let expected: Vec<(u64, Option<f64>)> = base_alpha
+                    .iter()
+                    .map(|(&id, &alpha)| (id, Some(alpha)))
+                    .collect();
+                let stage_wait = Duration::from_secs_f64(
+                    cfg.intake_max_wait.unwrap_or(cfg.round_wait).max(1.0),
+                );
+                let icfg = IntakeConfig {
+                    round_id: MASK_ROUND,
+                    expected_uploads: expected.len(),
+                    quorum: None,
+                    max_wait: stage_wait,
+                    // a client may compute its sensitivity map for a while
+                    // before its BEGIN lands; the per-read timeout must not
+                    // undercut that (the deadline clamp still bounds it)
+                    io_timeout: stage_wait,
+                    ..IntakeConfig::default()
+                };
+                let outcome = hub.collect_round(&expected, shape, &icfg);
+                anyhow::ensure!(
+                    outcome.failed.is_empty() && outcome.arrivals.len() == expected.len(),
+                    "mask agreement requires every client's sensitivity map \
+                     ({} of {} arrived, failed: {:?})",
+                    outcome.arrivals.len(),
+                    expected.len(),
+                    outcome.failed
+                );
+                measured_up = outcome.bytes_received;
+                measured_secs += outcome.elapsed_secs;
+                for a in outcome.arrivals {
+                    // server-authoritative weights: the agreed base alpha,
+                    // not whatever the wire declared
+                    let alpha = base_alpha[&a.client];
+                    let upd = Arc::try_unwrap(a.update)
+                        .unwrap_or_else(|arc| (*arc).clone());
+                    maps.push((a.client, alpha, upd));
+                }
+            }
+            maps.sort_by_key(|(id, _, _)| *id);
+            let alphas: Vec<f64> = maps.iter().map(|m| m.1).collect();
+            let updates: Vec<EncryptedUpdate> = maps.into_iter().map(|m| m.2).collect();
+            let agg_map = srv.aggregate(&updates, &alphas)?;
+            let global_map =
+                srv.decrypt_vec(&agg_map.cts, &st.keys, map_len, &mut st.server_rng);
+            match cfg.mask_granularity {
+                MaskGranularity::Param => EncryptionMask::top_p(&global_map, cfg.ratio),
+                MaskGranularity::Layer => EncryptionMask::from_layer_scores(
+                    st.total_params,
+                    &global_map,
+                    &spans,
+                    cfg.ratio,
+                ),
+            }
+        }
+    };
+
+    // Algorithm 1 round 1: broadcast the agreed mask to every client.
+    let wire = mask.to_bytes();
+    let mask_bytes = wire.len() as u64;
+    let t_down = Instant::now();
+    let mut measured_down = 0u64;
+    for p in participants.iter_mut() {
+        measured_down += p.deliver_mask(&mask, &wire)?;
+    }
+    match uplink {
+        Uplink::Sim => {
+            mask_clock.broadcast(mask_bytes, cfg.clients, cfg.bandwidth);
+            st.report.mask_upload_bytes = mask_clock.bytes_up;
+            st.report.mask_comm_secs = mask_clock.comm_secs;
+            st.report.mask_agreement_secs = t.elapsed().as_secs_f64() + mask_clock.comm_secs;
+        }
+        Uplink::Hub(_) => {
+            measured_secs += t_down.elapsed().as_secs_f64();
+            st.report.mask_upload_bytes = measured_up;
+            st.report.mask_downlink_bytes = measured_down;
+            st.report.mask_comm_secs = measured_secs;
+            // wall time already contains the measured network time
+            st.report.mask_agreement_secs = t.elapsed().as_secs_f64();
+        }
+    }
+    st.report.mask_bytes = mask_bytes;
+    st.report.mask_ratio = mask.ratio();
+    st.report.encrypted_params = mask.encrypted_count();
+    st.report.mask_runs = mask.encrypted.n_runs();
+    st.shape = Some(UpdateShape::for_round(&srv.codec.ctx, &mask));
+    st.mask = Some(mask);
+    Ok(())
+}
+
+/// One Broadcast phase's outcome: the active set and the measured downlink
+/// cost.
+pub(crate) struct BroadcastPlan {
+    /// Participant indexes active this round.
+    pub active: Vec<usize>,
+    /// Their wire client ids (aligned with `active`).
+    pub active_ids: Vec<u64>,
+    /// Their FedAvg weights normalized over the active set.
+    pub alphas: Vec<f64>,
+    /// Measured downlink frame bytes (0 under sim — the clock carries it).
+    pub down_bytes: u64,
+    /// Measured downlink wall time (0-ish under sim).
+    pub down_secs: f64,
+}
+
+/// Phase 2 — Broadcast(r): sample the cohort (population mode), draw
+/// dropout, and push the start-of-round downlink — the previous round's
+/// partially-encrypted aggregate plus each participant's role — to every
+/// connected participant (dropped clients still receive the next global).
+pub(crate) fn phase_broadcast(
+    srv: &FlServer,
+    st: &mut RoundState,
+    participants: &mut [Box<dyn Participant + '_>],
+    round: usize,
+    uplink: &Uplink,
+) -> anyhow::Result<BroadcastPlan> {
+    let cfg = &srv.cfg;
+    if let Uplink::Hub(hub) = uplink {
+        hub.set_next_round(round as u64);
+    }
+    let cohort = st.scheduler.as_ref().map(|s| s.sample(round as u64));
+    if let (Some(c), Some(s)) = (&cohort, &st.scheduler) {
+        for (slot, m) in c.members.iter().enumerate() {
+            participants[slot].bind_virtual(
+                m.id,
+                m.alpha,
+                s.population.client_seed(m.id),
+                round as u64,
+            );
+        }
+    }
+
+    // dropout injection (HE is dropout-robust: we just renormalize);
+    // rng consumption order matches the seed coordinator exactly
+    let active: Vec<usize> = (0..cfg.clients)
+        .filter(|_| st.server_rng.uniform_f64() >= cfg.dropout)
+        .collect();
+    let active = if active.is_empty() { vec![0] } else { active };
+    let alpha_sum: f64 = active.iter().map(|&i| participants[i].base_alpha()).sum();
+    let alphas: Vec<f64> = active
+        .iter()
+        .map(|&i| participants[i].base_alpha() / alpha_sum)
+        .collect();
+    let active_ids: Vec<u64> = active.iter().map(|&i| participants[i].id()).collect();
+
+    let (agg, alpha_mass) = match &st.last_agg {
+        Some((a, m)) => (Some(a), *m),
+        None => (None, 0.0),
+    };
+    let shape = st.shape.expect("mask agreed before rounds");
+    let plans: Vec<(u64, DownBegin)> = participants
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let k = active.iter().position(|&a| a == i);
+            let down = DownBegin {
+                alpha: k.map(|k| alphas[k]).unwrap_or(0.0),
+                alpha_mass,
+                n_cts: if agg.is_some() { shape.n_cts } else { 0 },
+                n_plain: if agg.is_some() { shape.n_plain } else { 0 },
+                total: if agg.is_some() { shape.total } else { 0 },
+                participate: k.is_some(),
+                has_agg: agg.is_some(),
+                fin: false,
+            };
+            (p.id(), down)
+        })
+        .collect();
+    match uplink {
+        Uplink::Sim => {
+            // symmetry hook: sim participants receive the same per-round
+            // role delivery (a no-op — the sim clock charges the broadcast)
+            for (p, (_, down)) in participants.iter_mut().zip(plans.iter()) {
+                p.deliver_round(round as u64, down, agg)?;
+            }
+            if let Some(a) = agg {
+                st.clock.broadcast(
+                    a.wire_bytes(&srv.codec.ctx) as u64,
+                    participants.len(),
+                    cfg.bandwidth,
+                );
+            }
+            Ok(BroadcastPlan {
+                active,
+                active_ids,
+                alphas,
+                down_bytes: 0,
+                down_secs: 0.0,
+            })
+        }
+        Uplink::Hub(hub) => {
+            // one batched push: the shared aggregate is serialized once and
+            // fanned out to every connected session
+            let out = hub.broadcast_round(round as u64, &plans, agg);
+            for client in &out.failed {
+                // dead session: its absence surfaces as a failed upload in
+                // the Intake phase (straggler accounting); slot can rejoin
+                crate::log_debug!(
+                    "phases",
+                    "round {round} downlink to client {client} failed"
+                );
+            }
+            Ok(BroadcastPlan {
+                active,
+                active_ids,
+                alphas,
+                down_bytes: out.bytes_sent,
+                down_secs: out.elapsed_secs,
+            })
+        }
+    }
+}
+
+/// Phase 3a — LocalTrain+Encrypt then Aggregate, in-process: launch each
+/// active participant inline, stamp arrivals with simulated transfer
+/// times, and run the configured engine (sequential barrier or streaming
+/// pipeline).
+fn phase_collect_sim(
+    srv: &FlServer,
+    st: &mut RoundState,
+    participants: &mut [Box<dyn Participant + '_>],
+    round: usize,
+    plan: &BroadcastPlan,
+    rm: &mut RoundMetrics,
+) -> anyhow::Result<(EncryptedUpdate, f64)> {
+    let cfg = &srv.cfg;
+    let mask = st.mask.as_ref().expect("mask agreed");
+    let mut outs: Vec<SimRoundOutput> = Vec::with_capacity(plan.active.len());
+    let mut loss_sum = 0.0f32;
+    for (k, &i) in plan.active.iter().enumerate() {
+        let launch = RoundLaunch {
+            round,
+            global: &st.global,
+            mask,
+            pk: &st.pk,
+            codec: &srv.codec,
+            alpha_norm: plan.alphas[k],
+            local_steps: cfg.local_steps,
+            lr: cfg.lr,
+            dp_scale: cfg.dp_scale,
+        };
+        let out = participants[i]
+            .launch_round(&launch)?
+            .expect("sim participants produce their round output inline");
+        rm.train_secs += out.train_secs;
+        rm.encrypt_secs += out.encrypt_secs;
+        loss_sum += out.loss;
+        outs.push(out);
+    }
+    rm.train_loss = loss_sum / plan.active.len() as f32;
+
+    let t = Instant::now();
+    let result = match cfg.engine {
+        Engine::Sequential => {
+            for o in &outs {
+                st.clock.upload(o.upload_bytes, cfg.bandwidth);
+            }
+            let alphas: Vec<f64> = outs.iter().map(|o| o.alpha).collect();
+            let updates: Vec<EncryptedUpdate> = outs.into_iter().map(|o| o.update).collect();
+            (srv.aggregate(&updates, &alphas)?, 1.0)
+        }
+        Engine::Pipeline => {
+            let client_ids: Vec<u64> = outs.iter().map(|o| o.client).collect();
+            let bytes: Vec<u64> = outs.iter().map(|o| o.upload_bytes).collect();
+            // a client's upload starts when its (concurrent) local
+            // training finishes — the arrival ordering of the pipeline
+            let starts: Vec<f64> = outs.iter().map(|o| o.train_secs).collect();
+            let arrival_secs = concurrent_arrivals(&bytes, &starts, cfg.bandwidth);
+            let arrivals: Vec<Arrival> = outs
+                .into_iter()
+                .zip(arrival_secs)
+                .map(|(o, at)| Arrival {
+                    client: o.client,
+                    alpha: o.alpha,
+                    arrival_secs: at,
+                    update: Arc::new(o.update),
+                })
+                .collect();
+            let engine = StreamingAggregator::new(&srv.codec.ctx.params, cfg.engine_config());
+            // run-aligned plaintext shard plan from the shared mask
+            let (agg, stats) = engine.aggregate_with_mask(arrivals, Some(mask))?;
+            let accepted: HashSet<u64> = stats.accepted_clients.iter().copied().collect();
+            for (cid, &b) in client_ids.iter().zip(bytes.iter()) {
+                if accepted.contains(cid) {
+                    st.clock.upload(b, cfg.bandwidth);
+                } else {
+                    // dropped straggler: bytes were sent but the round
+                    // never waited for them
+                    st.clock.upload_bytes_only(b);
+                }
+            }
+            // straggler-aware resampling: feed observed outcomes back into
+            // the cohort scheduler (population mode)
+            if let Some(s) = st.scheduler.as_mut() {
+                for cid in &client_ids {
+                    if accepted.contains(cid) {
+                        s.observe_completed(*cid);
+                    } else {
+                        s.observe_straggler(*cid);
+                    }
+                }
+            }
+            rm.participants = stats.accepted;
+            rm.stragglers_dropped = stats.dropped_stragglers;
+            (agg, stats.alpha_mass)
+        }
+    };
+    rm.aggregate_secs = t.elapsed().as_secs_f64();
+    Ok(result)
+}
+
+/// Phase 3b — Intake then Aggregate, persistent sessions: collect the
+/// round's uploads off the hub (wall-clock stamps, quorum early-stop,
+/// client-reported local metrics), feed the streaming engine, and fold
+/// failed sessions into the straggler accounting.
+fn phase_collect_hub(
+    srv: &FlServer,
+    st: &mut RoundState,
+    hub: &SessionHub,
+    round: usize,
+    plan: &BroadcastPlan,
+    rm: &mut RoundMetrics,
+) -> anyhow::Result<(EncryptedUpdate, f64)> {
+    let cfg = &srv.cfg;
+    let mask = st.mask.as_ref().expect("mask agreed");
+    let shape = st.shape.expect("mask agreed");
+    let t = Instant::now();
+    // hard intake bound: explicit --intake-max-wait, or base slack plus
+    // the straggler window so a wide timeout is never silently truncated;
+    // also what bounds a fully-failed round
+    let max_wait = Duration::from_secs_f64(
+        cfg.intake_max_wait
+            .unwrap_or(30.0 + cfg.straggler_timeout.max(0.0))
+            .max(1.0),
+    );
+    let icfg = IntakeConfig {
+        round_id: round as u64,
+        expected_uploads: plan.active_ids.len(),
+        quorum: cfg.quorum,
+        straggler_timeout: Duration::from_secs_f64(cfg.straggler_timeout.max(0.0)),
+        max_wait,
+        // clients train before their BEGIN lands — the per-read timeout
+        // must cover that; the (cutoff-aware) deadline clamp still bounds
+        // every read, so straggler responsiveness is unaffected
+        io_timeout: max_wait,
+        ..IntakeConfig::default()
+    };
+    // server-authoritative weights: the collector pins each session's
+    // declared FedAvg weight to the one this round's downlink assigned, so
+    // a skewed upload fails its session before touching arrivals or the
+    // round's metric sums
+    let expected: Vec<(u64, Option<f64>)> = plan
+        .active_ids
+        .iter()
+        .copied()
+        .zip(plan.alphas.iter().map(|&a| Some(a)))
+        .collect();
+    let outcome = hub.collect_round(&expected, shape, &icfg);
+    let wire_secs = outcome.elapsed_secs;
+    st.clock.upload_bytes_only(outcome.bytes_received);
+    rm.train_secs = outcome.train_secs;
+    rm.encrypt_secs = outcome.encrypt_secs;
+    let completed = outcome.arrivals.len();
+    if completed > 0 {
+        rm.train_loss = (outcome.loss_sum / completed as f64) as f32;
+    }
+    let failed = outcome.failed;
+
+    let engine = StreamingAggregator::new(&srv.codec.ctx.params, cfg.engine_config());
+    let mut intake = engine.begin_round(Some(mask));
+    intake.offer_many(outcome.arrivals)?;
+    let (agg, mut stats) = intake.seal()?;
+    // Only identified participants whose upload failed count as dropped
+    // stragglers — retries of an already-accepted client would otherwise
+    // skew the round's reported drop rate.
+    let accepted_ids: HashSet<u64> = stats.accepted_clients.iter().copied().collect();
+    let failed_participants = failed
+        .iter()
+        .filter(|&&id| id != UNIDENTIFIED_CLIENT && !accepted_ids.contains(&id))
+        .collect::<HashSet<_>>()
+        .len();
+    stats.offered += failed_participants;
+    stats.dropped_stragglers += failed_participants;
+    rm.participants = stats.accepted;
+    rm.stragglers_dropped = stats.dropped_stragglers;
+    rm.comm_secs += wire_secs;
+    rm.aggregate_secs = (t.elapsed().as_secs_f64() - wire_secs).max(0.0);
+    Ok((agg, stats.alpha_mass))
+}
+
+/// Phase 4 — Decrypt+Apply: key-holder decryption of the aggregate,
+/// renormalized by the accepted FedAvg weight mass; the result becomes the
+/// next global and the aggregate is retained for the next Broadcast.
+pub(crate) fn phase_decrypt_apply(
+    srv: &FlServer,
+    st: &mut RoundState,
+    agg: EncryptedUpdate,
+    alpha_mass: f64,
+) -> anyhow::Result<f64> {
+    let t = Instant::now();
+    let mut global = srv.decrypt_global(
+        &agg,
+        st.mask.as_ref().expect("mask agreed"),
+        &st.keys,
+        &mut st.server_rng,
+    );
+    if (alpha_mass - 1.0).abs() > 1e-12 {
+        for v in global.iter_mut() {
+            *v = (*v as f64 / alpha_mass) as f32;
+        }
+    }
+    st.global = global;
+    st.last_agg = Some((agg, alpha_mass));
+    Ok(t.elapsed().as_secs_f64())
+}
+
+/// Phase 5 — Eval: periodic evaluation on participants' local data; under
+/// remote participants the synthetic model evaluates server-side (pure
+/// function of the seed), artifact models skip.
+pub(crate) fn phase_eval(
+    srv: &FlServer,
+    st: &mut RoundState,
+    participants: &mut [Box<dyn Participant + '_>],
+    round: usize,
+) -> anyhow::Result<()> {
+    let cfg = &srv.cfg;
+    if cfg.eval_every == 0 || (round + 1) % cfg.eval_every != 0 {
+        return Ok(());
+    }
+    let mut l = 0.0f32;
+    let mut a = 0.0f32;
+    let mut n = 0usize;
+    for p in participants.iter_mut() {
+        if let Some((cl, ca)) = p.evaluate(&st.global)? {
+            l += cl;
+            a += ca;
+            n += 1;
+        }
+    }
+    if n == 0 && cfg.model == SYNTHETIC_MODEL {
+        let m = SyntheticModel::new(cfg.synthetic_dim.max(1), cfg.seed);
+        for id in 0..cfg.clients {
+            let (cl, ca) = SyntheticClient::new(m, id as u64, cfg.clients).evaluate(&st.global);
+            l += cl;
+            a += ca;
+            n += 1;
+        }
+    }
+    if n > 0 {
+        st.report.evals.push(EvalPoint {
+            round: round + 1,
+            loss: l / n as f32,
+            accuracy: a / n as f32,
+        });
+    }
+    Ok(())
+}
+
+/// Phase 6 — Finale: deliver the last aggregate with the FIN flag so every
+/// client applies the final global and exits its session loop (real frames
+/// under tcp; one simulated broadcast under sim for accounting symmetry).
+pub(crate) fn phase_finale(
+    srv: &FlServer,
+    st: &mut RoundState,
+    participants: &mut [Box<dyn Participant + '_>],
+    uplink: &Uplink,
+) -> anyhow::Result<()> {
+    let cfg = &srv.cfg;
+    let (agg, alpha_mass) = match &st.last_agg {
+        Some((a, m)) => (Some(a), *m),
+        None => (None, 0.0),
+    };
+    if let Uplink::Hub(hub) = uplink {
+        hub.set_next_round(cfg.rounds as u64);
+    }
+    let shape = st.shape.expect("mask agreed");
+    let down0 = st.clock.bytes_down;
+    let comm0 = st.clock.comm_secs;
+    let fin = DownBegin {
+        alpha: 0.0,
+        alpha_mass,
+        n_cts: if agg.is_some() { shape.n_cts } else { 0 },
+        n_plain: if agg.is_some() { shape.n_plain } else { 0 },
+        total: if agg.is_some() { shape.total } else { 0 },
+        participate: false,
+        has_agg: agg.is_some(),
+        fin: true,
+    };
+    match uplink {
+        Uplink::Sim => {
+            for p in participants.iter_mut() {
+                p.deliver_round(cfg.rounds as u64, &fin, agg)?;
+            }
+            if let Some(a) = agg {
+                st.clock.broadcast(
+                    a.wire_bytes(&srv.codec.ctx) as u64,
+                    participants.len(),
+                    cfg.bandwidth,
+                );
+            }
+            st.report.fin_downlink_bytes = st.clock.bytes_down - down0;
+            st.report.fin_downlink_secs = st.clock.comm_secs - comm0;
+        }
+        Uplink::Hub(hub) => {
+            let plans: Vec<(u64, DownBegin)> =
+                participants.iter().map(|p| (p.id(), fin)).collect();
+            let out = hub.broadcast_round(cfg.rounds as u64, &plans, agg);
+            for client in &out.failed {
+                crate::log_debug!("phases", "fin downlink to client {client} failed");
+            }
+            st.report.fin_downlink_bytes = out.bytes_sent;
+            st.report.fin_downlink_secs = out.elapsed_secs;
+        }
+    }
+    Ok(())
+}
+
+/// The driver: MaskAgreement, then per-round phase dispatch, then Finale.
+/// `FlServer::run` and `FlServer::serve` both reduce to this.
+pub(crate) fn drive(
+    srv: &FlServer,
+    st: &mut RoundState,
+    participants: &mut [Box<dyn Participant + '_>],
+    uplink: &Uplink,
+) -> anyhow::Result<()> {
+    phase_mask_agreement(srv, st, participants, uplink)?;
+    for round in 0..srv.cfg.rounds {
+        let comm0 = st.clock.comm_secs;
+        let up0 = st.clock.bytes_up;
+        let down0 = st.clock.bytes_down;
+        let mut rm = RoundMetrics {
+            round,
+            timing_source: st.report.timing_source,
+            ..Default::default()
+        };
+        let plan = phase_broadcast(srv, st, participants, round, uplink)?;
+        rm.participants = plan.active.len();
+        let (agg, alpha_mass) = match uplink {
+            Uplink::Sim => phase_collect_sim(srv, st, participants, round, &plan, &mut rm)?,
+            Uplink::Hub(hub) => phase_collect_hub(srv, st, *hub, round, &plan, &mut rm)?,
+        };
+        rm.decrypt_secs = phase_decrypt_apply(srv, st, agg, alpha_mass)?;
+        rm.upload_bytes = st.clock.bytes_up - up0;
+        rm.comm_secs += st.clock.comm_secs - comm0;
+        match uplink {
+            Uplink::Sim => rm.download_bytes = st.clock.bytes_down - down0,
+            Uplink::Hub(_) => {
+                rm.comm_secs += plan.down_secs;
+                rm.downlink_secs = plan.down_secs;
+                rm.download_bytes = plan.down_bytes;
+            }
+        }
+        crate::log_debug!(
+            "server",
+            "round {round}: loss {:.4} train {:.2}s enc {:.2}s agg {:.2}s",
+            rm.train_loss,
+            rm.train_secs,
+            rm.encrypt_secs,
+            rm.aggregate_secs
+        );
+        st.report.rounds.push(rm);
+        st.clock.finish_round();
+        phase_eval(srv, st, participants, round)?;
+    }
+    phase_finale(srv, st, participants, uplink)
+}
+
+// ---------------------------------------------------------------------------
+// The client side of the deployment symmetry.
+
+/// Everything a client session loop needs to know about the task (a subset
+/// of [`super::taskkey::TaskSpec`], resolved for one client).
+#[derive(Debug, Clone)]
+pub struct ClientLoopCfg {
+    pub addr: String,
+    pub client: u64,
+    pub model: String,
+    pub clients: usize,
+    pub selection: Selection,
+    pub mask_granularity: MaskGranularity,
+    pub local_steps: usize,
+    pub lr: f32,
+    pub dp_scale: Option<f64>,
+    pub opts: SessionOpts,
+}
+
+/// The client main loop, shared verbatim by `join` processes and the
+/// in-process client threads of `--transport tcp`: connect + HELLO, upload
+/// the encrypted sensitivity map (TopP), receive the mask, then per round
+/// receive the downlink (decrypt + renormalize the carried aggregate with
+/// the secret key — the client-side half of Algorithm 1), train, encrypt,
+/// upload. Exits on the FIN downlink; returns the final global model.
+pub fn client_session_loop(
+    cfg: &ClientLoopCfg,
+    codec: &SelectiveCodec,
+    pk: &PublicKey,
+    sk: &SecretKey,
+    init_global: Vec<f32>,
+    core: &mut ClientCore,
+) -> anyhow::Result<Vec<f32>> {
+    let (mut sess, _next) = ClientSession::connect(
+        &cfg.addr,
+        cfg.client,
+        codec.ctx.params.clone(),
+        cfg.opts.clone(),
+    )?;
+    let mut global = init_global;
+    let total = global.len();
+
+    // Mask-agreement stage (TopP only): encrypted sensitivity uplink.
+    if cfg.selection == Selection::TopP {
+        let spans = layer_spans_for(&cfg.model, total);
+        let s = match cfg.mask_granularity {
+            MaskGranularity::Param => core.sensitivity(&global)?,
+            MaskGranularity::Layer => core.layer_sensitivity(&global, &spans)?,
+        };
+        let map_len = s.len();
+        let cts = selective::encrypt_vector(&codec.ctx, &s, pk, core.rng_mut());
+        let upd = EncryptedUpdate {
+            cts,
+            plain: Vec::new(),
+            total: map_len,
+        };
+        sess.upload(MASK_ROUND, core.alpha(), &upd, None)?;
+    }
+    let mask = sess.recv_mask(total)?;
+    anyhow::ensure!(
+        mask.total() == total,
+        "agreed mask covers {} params, local model has {total}",
+        mask.total()
+    );
+    let shape = UpdateShape::for_round(&codec.ctx, &mask);
+
+    let mut round: u64 = 0;
+    loop {
+        let dl = sess.recv_round(round, Some(shape))?;
+        if let Some(agg) = &dl.agg {
+            let mut g = codec.decrypt_update(agg, &mask, sk);
+            // identical renormalization (and skip-condition) to the
+            // server's Decrypt+Apply phase — bit-for-bit the same global
+            if (dl.down.alpha_mass - 1.0).abs() > 1e-12 {
+                for v in g.iter_mut() {
+                    *v = (*v as f64 / dl.down.alpha_mass) as f32;
+                }
+            }
+            global = g;
+        }
+        if dl.down.fin {
+            break;
+        }
+        if dl.down.participate {
+            let t = Instant::now();
+            let (mut local, loss) = core.train(&global, cfg.local_steps, cfg.lr)?;
+            let train_secs = t.elapsed().as_secs_f64();
+            let t = Instant::now();
+            let upd = core.encrypt(codec, &mut local, &mask, pk, cfg.dp_scale);
+            let encrypt_secs = t.elapsed().as_secs_f64();
+            sess.upload(
+                round,
+                dl.down.alpha,
+                &upd,
+                Some((train_secs, encrypt_secs, loss)),
+            )?;
+        }
+        round += 1;
+    }
+    Ok(global)
+}
+
+/// Run one `join` process: load the out-of-band task key, build the client
+/// core (synthetic, or artifact-backed via `rt`), and drive
+/// [`client_session_loop`] against the serve process at `addr`. Returns
+/// the client's final global model.
+pub fn join_task(
+    addr: &str,
+    client_id: u64,
+    key: &TaskKey,
+    rt: Option<&Runtime>,
+    opts: SessionOpts,
+) -> anyhow::Result<Vec<f32>> {
+    let spec = &key.spec;
+    anyhow::ensure!(
+        client_id < spec.clients as u64,
+        "--client-id {client_id} out of range (task has {} clients, ids 0..{})",
+        spec.clients,
+        spec.clients - 1
+    );
+    let params = spec.params()?;
+    let ctx = CkksContext {
+        encoder: Arc::new(crate::ckks::Encoder::new(params.clone())),
+        params,
+    };
+    let codec = SelectiveCodec::new(ctx);
+    let (mut core, init_global) = if spec.model == SYNTHETIC_MODEL {
+        let m = SyntheticModel::new(spec.synthetic_dim.max(1), spec.seed);
+        (
+            ClientCore::Synthetic(SyntheticClient::new(m, client_id, spec.clients)),
+            m.init_params(),
+        )
+    } else {
+        let rt = rt.ok_or_else(|| {
+            anyhow::anyhow!(
+                "model '{}' needs the AOT artifacts (--artifacts); only the \
+                 synthetic model joins artifact-free",
+                spec.model
+            )
+        })?;
+        let client = super::client::FlClient::new(
+            rt,
+            &spec.model,
+            client_id as usize,
+            spec.clients,
+            spec.samples_per_client,
+            spec.skew,
+            spec.seed,
+        )?;
+        let init = rt.manifest.load_init_params(&spec.model)?;
+        (ClientCore::Artifact(client), init)
+    };
+    let lcfg = ClientLoopCfg {
+        addr: addr.to_string(),
+        client: client_id,
+        model: spec.model.clone(),
+        clients: spec.clients,
+        selection: spec.selection,
+        mask_granularity: spec.mask_granularity,
+        local_steps: spec.local_steps,
+        lr: spec.lr,
+        dp_scale: spec.dp_scale,
+        opts,
+    };
+    client_session_loop(&lcfg, &codec, &key.pk, &key.sk, init_global, &mut core)
+}

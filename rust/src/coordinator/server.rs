@@ -1,31 +1,55 @@
-//! FL server: orchestrates the three stages of Fig. 3 —
-//! key agreement → encryption-mask calculation → encrypted federated
-//! learning — and records per-stage overhead metrics (the data source for
-//! Figs. 8/14 and the deployment-platform monitoring of Appendix C).
+//! FL server: Fig. 3's three stages as an explicit round-phase state
+//! machine. The phases themselves — KeyAgreement → MaskAgreement → per
+//! round {Broadcast, LocalTrain+Encrypt/Intake, Aggregate, Decrypt+Apply} →
+//! Eval → Finale — live in [`super::phases`]; this module owns the
+//! configuration surface, the aggregation/decryption primitives, the
+//! per-stage overhead report (the data source for Figs. 8/14 and the
+//! deployment-platform monitoring of Appendix C), and the three run modes:
+//!
+//! * [`FlServer::run`] with `--transport sim` — in-process simulator
+//!   participants, simulated comm accounting.
+//! * [`FlServer::run`] with `--transport tcp` — the same phase machine
+//!   driving persistent duplex sessions over loopback: the coordinator
+//!   spawns one client-session thread per client running the exact `join`
+//!   loop, and every mask/global downlink and update uplink is real frames
+//!   with measured bytes/times.
+//! * [`FlServer::serve`] — the multi-process deployment: clients are
+//!   separate `join` OS processes, keys distributed out-of-band via a task
+//!   key file (DESIGN.md §9). Same phases, same bytes, bitwise-identical
+//!   final model for the same seed.
 
-use super::client::FlClient;
-use super::config::{Backend, FlConfig, MaskGranularity, Selection, Transport};
-use super::key_authority::{self, KeyMaterial};
-use crate::agg_engine::{Arrival, CohortScheduler, Engine, Population, StreamingAggregator};
+use super::config::{Backend, FlConfig, KeyMode, Transport};
+use super::key_authority::KeyMaterial;
+use super::phases::{self, Participant, RemoteParticipant, SimParticipant, Uplink};
+use super::taskkey::{TaskKey, TaskSpec};
 use crate::ckks::CkksContext;
+use crate::coordinator::client::{ClientCore, FlClient};
 use crate::crypto::prng::ChaChaRng;
+use crate::fl::{SyntheticClient, SyntheticModel, SYNTHETIC_MODEL};
 use crate::he_agg::xla::XlaAggregator;
 use crate::he_agg::{native, selective, EncryptedUpdate, EncryptionMask, SelectiveCodec};
-use crate::netsim::{concurrent_arrivals, SimClock};
 use crate::runtime::Runtime;
-use crate::transport::{
-    IntakeConfig, TcpIntake, UpdateShape, UploadConfig, UNIDENTIFIED_CLIENT,
-};
+use crate::transport::{SessionHub, SessionOpts};
 use crate::util::json::Json;
-use std::sync::Arc;
-use std::time::Instant;
+use std::time::Duration;
+
+/// Crypto context used by the artifact-free `synthetic` model when no
+/// `--n/--limbs` override is given: modest (fast CI smoke) but real RNS.
+pub const SYNTHETIC_CRYPTO: (usize, usize, u32) = (1024, 4, 40);
+
+/// `timing_source` label: stage/comm times are simulated from the
+/// configured bandwidth profile.
+pub const TIMING_SIMULATED: &str = "simulated";
+/// `timing_source` label: comm times and byte counts are measured off real
+/// sockets (persistent duplex sessions).
+pub const TIMING_MEASURED: &str = "measured";
 
 /// Per-round overhead breakdown (the paper's "training cycle" dissection).
 /// `comm_secs` uses parallel-uplink accounting (round comm = max over the
-/// concurrent uploads + broadcast time), not the serial sum. Under
-/// `--transport tcp` the uplink part is the measured wall-clock intake time
-/// instead of a simulated transfer time; the downlink broadcast stays
-/// simulated (DESIGN.md §8).
+/// concurrent uploads + broadcast time) under `--transport sim`; under tcp
+/// every comm number is measured wall clock — uplink intake time plus the
+/// real downlink push — and `timing_source` says which convention a row
+/// uses, so sim and tcp reports are never silently conflated.
 #[derive(Debug, Clone, Default)]
 pub struct RoundMetrics {
     pub round: usize,
@@ -36,11 +60,16 @@ pub struct RoundMetrics {
     pub encrypt_secs: f64,
     pub aggregate_secs: f64,
     pub decrypt_secs: f64,
-    /// Simulated network time at the configured bandwidth.
+    /// Simulated network time (sim) or measured wall-clock comm (tcp).
     pub comm_secs: f64,
+    /// Measured downlink wall time under tcp (0 under sim: the broadcast
+    /// is folded into `comm_secs` by the clock).
+    pub downlink_secs: f64,
     pub upload_bytes: u64,
     pub download_bytes: u64,
     pub train_loss: f32,
+    /// [`TIMING_SIMULATED`] or [`TIMING_MEASURED`].
+    pub timing_source: &'static str,
 }
 
 /// An evaluation point.
@@ -67,11 +96,21 @@ pub struct FlReport {
     /// Client→server bytes of the mask-agreement stage (encrypted
     /// sensitivity maps; O(layers) ciphertexts under layer granularity).
     pub mask_upload_bytes: u64,
-    /// Simulated comm time of the mask-agreement stage (sensitivity-map
-    /// uplinks + mask broadcast), included in `mask_agreement_secs`.
+    /// Measured server→client bytes of the mask broadcast under tcp (0
+    /// under sim — the simulated clock folds it into `mask_comm_secs`).
+    pub mask_downlink_bytes: u64,
+    /// Comm time of the mask-agreement stage (sensitivity-map uplinks +
+    /// mask broadcast), included in `mask_agreement_secs`. Simulated or
+    /// measured per `timing_source`.
     pub mask_comm_secs: f64,
     pub keygen_secs: f64,
     pub mask_agreement_secs: f64,
+    /// Final-downlink cost (the FIN broadcast carrying the last aggregate).
+    pub fin_downlink_bytes: u64,
+    pub fin_downlink_secs: f64,
+    /// [`TIMING_SIMULATED`] or [`TIMING_MEASURED`] — which convention every
+    /// comm/time figure in this report uses.
+    pub timing_source: &'static str,
     pub rounds: Vec<RoundMetrics>,
     pub evals: Vec<EvalPoint>,
 }
@@ -80,6 +119,7 @@ impl FlReport {
     pub fn total_secs(&self) -> f64 {
         self.keygen_secs
             + self.mask_agreement_secs
+            + self.fin_downlink_secs
             + self
                 .rounds
                 .iter()
@@ -103,9 +143,13 @@ impl FlReport {
             ("mask_runs", self.mask_runs.into()),
             ("mask_bytes", self.mask_bytes.into()),
             ("mask_upload_bytes", self.mask_upload_bytes.into()),
+            ("mask_downlink_bytes", self.mask_downlink_bytes.into()),
             ("mask_comm_secs", self.mask_comm_secs.into()),
             ("keygen_secs", self.keygen_secs.into()),
             ("mask_agreement_secs", self.mask_agreement_secs.into()),
+            ("fin_downlink_bytes", self.fin_downlink_bytes.into()),
+            ("fin_downlink_secs", self.fin_downlink_secs.into()),
+            ("timing_source", self.timing_source.to_string().into()),
             (
                 "rounds",
                 Json::Arr(
@@ -121,9 +165,14 @@ impl FlReport {
                                 ("aggregate_secs", r.aggregate_secs.into()),
                                 ("decrypt_secs", r.decrypt_secs.into()),
                                 ("comm_secs", r.comm_secs.into()),
+                                ("downlink_secs", r.downlink_secs.into()),
                                 ("upload_bytes", r.upload_bytes.into()),
                                 ("download_bytes", r.download_bytes.into()),
                                 ("train_loss", (r.train_loss as f64).into()),
+                                (
+                                    "timing_source",
+                                    r.timing_source.to_string().into(),
+                                ),
                             ])
                         })
                         .collect(),
@@ -148,29 +197,69 @@ impl FlReport {
     }
 }
 
+/// Options for [`FlServer::serve`] (the multi-process deployment entry).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Where to write the out-of-band task key (spec + pk + sk) **before**
+    /// listening — the side channel `join` processes read.
+    pub task_key: std::path::PathBuf,
+    /// Optional file to write the bound listen address to (lets `join`
+    /// processes discover an ephemeral `--listen 127.0.0.1:0` port).
+    pub addr_file: Option<std::path::PathBuf>,
+}
+
 /// The FL server/orchestrator.
 pub struct FlServer<'a> {
-    pub rt: &'a Runtime,
+    /// PJRT runtime for artifact models (`None` for the standalone
+    /// synthetic model).
+    pub rt: Option<&'a Runtime>,
     pub cfg: FlConfig,
     pub codec: SelectiveCodec,
 }
 
 impl<'a> FlServer<'a> {
+    /// Build a server over the AOT runtime (any model, including
+    /// `synthetic`, which ignores the runtime).
     pub fn new(rt: &'a Runtime, cfg: FlConfig) -> anyhow::Result<Self> {
-        let ctx = match cfg.crypto_override {
-            Some((n, limbs, bits)) => {
-                anyhow::ensure!(
-                    cfg.backend == Backend::Native,
-                    "crypto overrides require the native backend (XLA artifacts \
-                     are compiled for the default context)"
-                );
-                CkksContext::new(n, limbs, bits)?
-            }
-            None => {
-                let c = &rt.manifest.crypto;
-                let ctx = CkksContext::new(c.n, c.num_limbs, c.scaling_bits)?;
-                rt.manifest.validate_crypto(&ctx.params)?;
-                ctx
+        Self::with_runtime(Some(rt), cfg)
+    }
+
+    /// Build a runtime-free server — only the `synthetic` model qualifies
+    /// (everything else needs the AOT artifacts).
+    pub fn standalone(cfg: FlConfig) -> anyhow::Result<FlServer<'static>> {
+        FlServer::<'static>::with_runtime(None, cfg)
+    }
+
+    fn with_runtime(rt: Option<&'a Runtime>, mut cfg: FlConfig) -> anyhow::Result<Self> {
+        let ctx = if cfg.model == SYNTHETIC_MODEL {
+            // artifact-free: force the native backend (the XLA aggregation
+            // path needs a runtime and buys nothing at synthetic scale)
+            cfg.backend = Backend::Native;
+            let (n, limbs, bits) = cfg.crypto_override.unwrap_or(SYNTHETIC_CRYPTO);
+            CkksContext::new(n, limbs, bits)?
+        } else {
+            let rt = rt.ok_or_else(|| {
+                anyhow::anyhow!(
+                    "model '{}' needs the AOT artifacts; only '{SYNTHETIC_MODEL}' runs \
+                     standalone",
+                    cfg.model
+                )
+            })?;
+            match cfg.crypto_override {
+                Some((n, limbs, bits)) => {
+                    anyhow::ensure!(
+                        cfg.backend == Backend::Native,
+                        "crypto overrides require the native backend (XLA artifacts \
+                         are compiled for the default context)"
+                    );
+                    CkksContext::new(n, limbs, bits)?
+                }
+                None => {
+                    let c = &rt.manifest.crypto;
+                    let ctx = CkksContext::new(c.n, c.num_limbs, c.scaling_bits)?;
+                    rt.manifest.validate_crypto(&ctx.params)?;
+                    ctx
+                }
             }
         };
         Ok(FlServer {
@@ -180,14 +269,17 @@ impl<'a> FlServer<'a> {
         })
     }
 
-    fn aggregate(
+    pub(crate) fn aggregate(
         &self,
         updates: &[EncryptedUpdate],
         alphas: &[f64],
     ) -> anyhow::Result<EncryptedUpdate> {
         match self.cfg.backend {
             Backend::Xla => {
-                let agg = XlaAggregator::new(self.rt, self.codec.ctx.params.clone())?;
+                let rt = self
+                    .rt
+                    .ok_or_else(|| anyhow::anyhow!("the XLA backend needs a runtime"))?;
+                let agg = XlaAggregator::new(rt, self.codec.ctx.params.clone())?;
                 agg.aggregate(updates, alphas)
             }
             Backend::Native => Ok(native::aggregate(updates, alphas, &self.codec.ctx.params)),
@@ -197,7 +289,7 @@ impl<'a> FlServer<'a> {
     /// Decrypt an aggregated update into a flat global model (done by a
     /// client / the key holder in the real deployment; the server never has
     /// the key — this method takes the key material explicitly).
-    fn decrypt_global(
+    pub(crate) fn decrypt_global(
         &self,
         update: &EncryptedUpdate,
         mask: &EncryptionMask,
@@ -213,7 +305,7 @@ impl<'a> FlServer<'a> {
         }
     }
 
-    fn decrypt_vec(
+    pub(crate) fn decrypt_vec(
         &self,
         cts: &[crate::ckks::Ciphertext],
         keys: &KeyMaterial,
@@ -258,394 +350,236 @@ impl<'a> FlServer<'a> {
         }
     }
 
-    /// Run the full federated task. Returns the report and the final model.
-    pub fn run(&self) -> anyhow::Result<(FlReport, Vec<f32>)> {
+    /// The initial global model (artifact init file, or the synthetic
+    /// model's seeded init — the same one every `join` process derives).
+    pub(crate) fn init_global(&self) -> anyhow::Result<Vec<f32>> {
+        if self.cfg.model == SYNTHETIC_MODEL {
+            Ok(SyntheticModel::new(self.cfg.synthetic_dim.max(1), self.cfg.seed).init_params())
+        } else {
+            let rt = self.rt.expect("artifact model has a runtime (checked at construction)");
+            rt.manifest.load_init_params(&self.cfg.model)
+        }
+    }
+
+    /// Build client `id`'s compute core (artifact trainer or synthetic).
+    pub(crate) fn make_core(&self, id: usize) -> anyhow::Result<ClientCore<'a>> {
         let cfg = &self.cfg;
-        let mut report = FlReport {
-            model: cfg.model.clone(),
-            clients: cfg.clients,
-            ..Default::default()
-        };
-        let mut server_rng = ChaChaRng::from_seed(cfg.seed, 0x5E17);
+        if cfg.model == SYNTHETIC_MODEL {
+            let m = SyntheticModel::new(cfg.synthetic_dim.max(1), cfg.seed);
+            Ok(ClientCore::Synthetic(SyntheticClient::new(
+                m,
+                id as u64,
+                cfg.clients,
+            )))
+        } else {
+            let rt = self.rt.expect("artifact model has a runtime (checked at construction)");
+            Ok(ClientCore::Artifact(FlClient::new(
+                rt,
+                &cfg.model,
+                id,
+                cfg.clients,
+                cfg.samples_per_client,
+                cfg.skew,
+                cfg.seed,
+            )?))
+        }
+    }
 
-        // ------------------------------------------------------------------
-        // Stage 1 — Encryption key agreement (Fig. 3).
-        let t = Instant::now();
-        let keys = key_authority::setup(
-            &self.codec.ctx,
-            cfg.key_mode,
-            cfg.clients,
-            &mut server_rng,
+    fn session_opts(&self) -> SessionOpts {
+        SessionOpts {
+            round_wait: Duration::from_secs_f64(self.cfg.round_wait.max(1.0)),
+            connect_retry: Duration::from_secs_f64(self.cfg.join_wait.max(1.0)),
+            ..SessionOpts::default()
+        }
+    }
+
+    /// Run the full federated task. Returns the report and the final
+    /// model. Pure phase dispatch: the transport decides who the
+    /// participants are, the phases are the same either way.
+    pub fn run(&self) -> anyhow::Result<(FlReport, Vec<f32>)> {
+        match self.cfg.transport {
+            Transport::Sim => self.run_sim(),
+            Transport::Tcp => self.run_tcp(),
+        }
+    }
+
+    fn run_sim(&self) -> anyhow::Result<(FlReport, Vec<f32>)> {
+        let mut st = phases::init_state(self)?;
+        let mut participants: Vec<Box<dyn Participant + 'a>> =
+            Vec::with_capacity(self.cfg.clients);
+        for id in 0..self.cfg.clients {
+            participants.push(Box::new(SimParticipant::new(self.make_core(id)?)));
+        }
+        phases::drive(self, &mut st, &mut participants, &Uplink::Sim)?;
+        Ok((st.report, st.global))
+    }
+
+    /// Single-process tcp: the coordinator spawns one client-session
+    /// thread per client running the exact `join` loop over loopback, so
+    /// every downlink/uplink is real frames through the persistent hub.
+    fn run_tcp(&self) -> anyhow::Result<(FlReport, Vec<f32>)> {
+        let cfg = &self.cfg;
+        anyhow::ensure!(
+            cfg.key_mode == KeyMode::SingleKey,
+            "--transport tcp requires --keys single: session clients decrypt \
+             the broadcast aggregate locally with the distributed secret key"
         );
-        report.keygen_secs = t.elapsed().as_secs_f64();
-        let pk = keys.public_key().clone();
-
-        // Build clients with their local datasets.
-        let mut clients: Vec<FlClient<'_>> = (0..cfg.clients)
-            .map(|id| {
-                FlClient::new(
-                    self.rt,
-                    &cfg.model,
-                    id,
-                    cfg.clients,
-                    cfg.samples_per_client,
-                    cfg.skew,
-                    cfg.seed,
-                )
-            })
-            .collect::<anyhow::Result<_>>()?;
-        let mut global = self.rt.manifest.load_init_params(&cfg.model)?;
-        let total_params = global.len();
-        report.total_params = total_params;
-
-        // ------------------------------------------------------------------
-        // Stage 2 — Encryption mask calculation (§2.4): clients compute local
-        // sensitivity maps (per parameter, or pre-aggregated per layer under
-        // `--mask-granularity layer`), encrypt them, the server aggregates
-        // them homomorphically, the key holder decrypts the *aggregate* only,
-        // and the agreed mask becomes shared configuration. The stage's wire
-        // traffic — encrypted map uplinks plus the run-delta mask broadcast
-        // of Algorithm 1 round 1 — is charged to `mask_agreement_secs`.
-        let t = Instant::now();
-        let mut mask_clock = SimClock::parallel();
-        let mask = match cfg.selection {
-            Selection::Full => EncryptionMask::full(total_params),
-            Selection::None => EncryptionMask::empty(total_params),
-            Selection::Random => {
-                EncryptionMask::random(total_params, cfg.ratio, &mut server_rng)
-            }
-            Selection::TopP => {
-                let alphas: Vec<f64> = clients.iter().map(|c| c.alpha).collect();
-                let spans = crate::fl::model_meta::layer_spans_for(&cfg.model, total_params);
-                let map_len = match cfg.mask_granularity {
-                    MaskGranularity::Param => total_params,
-                    MaskGranularity::Layer => spans.len(),
-                };
-                let mut enc_maps: Vec<EncryptedUpdate> = Vec::with_capacity(cfg.clients);
-                for c in clients.iter_mut() {
-                    let s = match cfg.mask_granularity {
-                        MaskGranularity::Param => c.sensitivity(&global)?,
-                        MaskGranularity::Layer => c.layer_sensitivity(&global, &spans)?,
-                    };
-                    let cts = selective::encrypt_vector(&self.codec.ctx, &s, &pk, &mut c.rng);
-                    enc_maps.push(EncryptedUpdate {
-                        cts,
-                        plain: Vec::new(),
-                        total: map_len,
-                    });
-                }
-                for u in &enc_maps {
-                    mask_clock.upload(u.wire_bytes(&self.codec.ctx) as u64, cfg.bandwidth);
-                }
-                let agg_map = self.aggregate(&enc_maps, &alphas)?;
-                let global_map =
-                    self.decrypt_vec(&agg_map.cts, &keys, map_len, &mut server_rng);
-                match cfg.mask_granularity {
-                    MaskGranularity::Param => EncryptionMask::top_p(&global_map, cfg.ratio),
-                    MaskGranularity::Layer => EncryptionMask::from_layer_scores(
-                        total_params,
-                        &global_map,
-                        &spans,
-                        cfg.ratio,
-                    ),
-                }
-            }
+        let mut st = phases::init_state(self)?;
+        let KeyMaterial::SingleKey { pk, sk } = &st.keys else {
+            anyhow::bail!("tcp transport requires single-key material");
         };
-        // Algorithm 1 round 1: broadcast the agreed mask to every client.
-        let mask_bytes = mask.to_bytes().len() as u64;
-        mask_clock.broadcast(mask_bytes, cfg.clients, cfg.bandwidth);
-        report.mask_upload_bytes = mask_clock.bytes_up;
-        report.mask_bytes = mask_bytes;
-        report.mask_comm_secs = mask_clock.comm_secs;
-        report.mask_agreement_secs = t.elapsed().as_secs_f64() + mask_clock.comm_secs;
-        report.mask_ratio = mask.ratio();
-        report.encrypted_params = mask.encrypted_count();
-        report.mask_runs = mask.encrypted.n_runs();
+        let pk = pk.clone();
+        let sk = sk.clone();
+        let mut hub = SessionHub::bind(
+            &cfg.listen,
+            self.codec.ctx.params.clone(),
+            cfg.clients * 2 + 8,
+        )?;
+        let addr = match &cfg.connect {
+            Some(a) => a.clone(),
+            None => hub.local_addr()?.to_string(),
+        };
+        let init_global = st.global.clone();
+        // build cores up-front so artifact errors surface before threads
+        let mut cores = Vec::with_capacity(cfg.clients);
+        for id in 0..cfg.clients {
+            cores.push(self.make_core(id)?);
+        }
+        let drive_result = std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(cfg.clients);
+            for (id, core) in cores.into_iter().enumerate() {
+                let lcfg = phases::ClientLoopCfg {
+                    addr: addr.clone(),
+                    client: id as u64,
+                    model: cfg.model.clone(),
+                    clients: cfg.clients,
+                    selection: cfg.selection,
+                    mask_granularity: cfg.mask_granularity,
+                    local_steps: cfg.local_steps,
+                    lr: cfg.lr,
+                    dp_scale: cfg.dp_scale,
+                    opts: self.session_opts(),
+                };
+                let codec = &self.codec;
+                let pk = pk.clone();
+                let sk = sk.clone();
+                let ig = init_global.clone();
+                handles.push(s.spawn(move || {
+                    let mut core = core;
+                    phases::client_session_loop(&lcfg, codec, &pk, &sk, ig, &mut core)
+                }));
+            }
+            let r = (|| -> anyhow::Result<()> {
+                let ids = hub.wait_for_clients(
+                    cfg.clients,
+                    Duration::from_secs_f64(cfg.join_wait.max(1.0)),
+                )?;
+                anyhow::ensure!(
+                    ids == (0..cfg.clients as u64).collect::<Vec<u64>>(),
+                    "session client ids must be exactly 0..{} (got {ids:?})",
+                    cfg.clients
+                );
+                let mut participants: Vec<Box<dyn Participant + '_>> = ids
+                    .iter()
+                    .map(|&id| {
+                        Box::new(RemoteParticipant::new(&hub, id, 1.0 / cfg.clients as f64))
+                            as Box<dyn Participant + '_>
+                    })
+                    .collect();
+                phases::drive(self, &mut st, &mut participants, &Uplink::Hub(&hub))
+            })();
+            // closing the hub unblocks any client thread still in a read,
+            // success or failure — the scope must always join
+            hub.shutdown();
+            for h in handles {
+                match h.join() {
+                    Ok(Ok(_final_model)) => {}
+                    Ok(Err(e)) => {
+                        crate::log_debug!("server", "client session thread exited: {e}")
+                    }
+                    Err(_) => crate::log_debug!("server", "client session thread panicked"),
+                }
+            }
+            r
+        });
+        drive_result?;
+        Ok((st.report, st.global))
+    }
 
-        // ------------------------------------------------------------------
-        // Stage 3 — Encrypted federated learning rounds (Algorithm 1).
-        // With `--population N`, each round's participants are a cohort of
-        // `clients` virtual ids sampled from the registered population; the
-        // instantiated trainers form a pool backing the sampled members.
-        if let Some(n) = cfg.population {
+    /// Multi-process deployment entry: write the out-of-band task key,
+    /// listen, wait for `clients` independent `join` processes, and drive
+    /// the same phase machine over their persistent sessions. The final
+    /// model is bitwise-identical to a same-seed `--transport sim` run.
+    pub fn serve(&self, opts: &ServeOptions) -> anyhow::Result<(FlReport, Vec<f32>)> {
+        let cfg = &self.cfg;
+        anyhow::ensure!(
+            cfg.transport == Transport::Tcp,
+            "serve is a tcp-transport mode"
+        );
+        anyhow::ensure!(
+            cfg.key_mode == KeyMode::SingleKey,
+            "serve distributes a single key pair out-of-band (--keys single)"
+        );
+        anyhow::ensure!(
+            cfg.population.is_none(),
+            "--population requires --transport sim"
+        );
+        let mut st = phases::init_state(self)?;
+        let KeyMaterial::SingleKey { pk, sk } = &st.keys else {
+            anyhow::bail!("serve requires single-key material");
+        };
+        let task_key = TaskKey {
+            spec: TaskSpec::from_config(cfg, &self.codec.ctx.params),
+            pk: pk.clone(),
+            sk: sk.clone(),
+        };
+        // key file first, then listen: a join process that sees the file
+        // can immediately dial (with connect retry) without racing the bind
+        task_key.save(&opts.task_key)?;
+        let mut hub = SessionHub::bind(
+            &cfg.listen,
+            self.codec.ctx.params.clone(),
+            cfg.clients * 2 + 8,
+        )?;
+        let addr = hub.local_addr()?;
+        if let Some(p) = &opts.addr_file {
+            // atomic: a join process polling for the file must never read
+            // a created-but-empty address
+            crate::util::write_file_atomic(p, addr.to_string().as_bytes())
+                .map_err(|e| anyhow::anyhow!("cannot write addr file {}: {e}", p.display()))?;
+        }
+        eprintln!(
+            "serve: listening on {addr} for {} join processes (task key: {})",
+            cfg.clients,
+            opts.task_key.display()
+        );
+        let r = (|| -> anyhow::Result<()> {
+            let ids = hub
+                .wait_for_clients(cfg.clients, Duration::from_secs_f64(cfg.join_wait.max(1.0)))?;
             anyhow::ensure!(
-                n >= cfg.clients as u64,
-                "--population ({n}) must be at least --clients ({})",
+                ids == (0..cfg.clients as u64).collect::<Vec<u64>>(),
+                "join processes must use --client-id 0..{} (got {ids:?})",
                 cfg.clients
             );
-        }
-        let scheduler = cfg
-            .population
-            .map(|n| CohortScheduler::new(Population::new(n, cfg.seed), cfg.clients));
-        // TCP transport: bind the intake once for the whole task — rebinding
-        // a fixed `--listen` port every round would hit TIME_WAIT
-        // (EADDRINUSE) from the previous round's closed connections. The
-        // round id in every frame keeps rounds from bleeding into each
-        // other on the shared listener.
-        let tcp_intake = match cfg.transport {
-            Transport::Tcp => {
-                let shape = UpdateShape::for_round(&self.codec.ctx, &mask);
-                Some(TcpIntake::bind(
-                    &cfg.listen,
-                    self.codec.ctx.params.clone(),
-                    shape,
-                )?)
-            }
-            Transport::Sim => None,
-        };
-        let tcp_dial = match (&tcp_intake, &cfg.connect) {
-            (Some(_), Some(a)) => Some(a.clone()),
-            (Some(intake), None) => Some(intake.local_addr()?.to_string()),
-            (None, _) => None,
-        };
-        // One Parallel clock spans every round; per-round metrics are deltas
-        // and `finish_round` resets the per-round uplink max at each
-        // boundary (a reused clock without the reset would max round-2
-        // uploads against round 1's slowest transfer).
-        let mut clock = SimClock::parallel();
-        for round in 0..cfg.rounds {
-            let mut rm = RoundMetrics {
-                round,
-                ..Default::default()
-            };
-            let comm0 = clock.comm_secs;
-            let up0 = clock.bytes_up;
-            let down0 = clock.bytes_down;
-
-            let cohort = scheduler.as_ref().map(|s| s.sample(round as u64));
-            if let (Some(c), Some(s)) = (&cohort, &scheduler) {
-                for (slot, m) in c.members.iter().enumerate() {
-                    clients[slot].bind_virtual(
-                        m.id,
-                        m.alpha,
-                        s.population.client_seed(m.id),
-                        round as u64,
-                    );
-                }
-            }
-
-            // dropout injection (HE is dropout-robust: we just renormalize)
-            let active: Vec<usize> = (0..cfg.clients)
-                .filter(|_| server_rng.uniform_f64() >= cfg.dropout)
+            let mut participants: Vec<Box<dyn Participant + '_>> = ids
+                .iter()
+                .map(|&id| {
+                    Box::new(RemoteParticipant::new(&hub, id, 1.0 / cfg.clients as f64))
+                        as Box<dyn Participant + '_>
+                })
                 .collect();
-            let active = if active.is_empty() { vec![0] } else { active };
-            rm.participants = active.len();
-            let alpha_sum: f64 = active.iter().map(|&i| clients[i].alpha).sum();
-
-            // local training + encryption per participant
-            let mut updates: Vec<EncryptedUpdate> = Vec::with_capacity(active.len());
-            let mut alphas: Vec<f64> = Vec::with_capacity(active.len());
-            let mut client_ids: Vec<u64> = Vec::with_capacity(active.len());
-            let mut train_starts: Vec<f64> = Vec::with_capacity(active.len());
-            let mut upload_bytes: Vec<u64> = Vec::with_capacity(active.len());
-            let mut loss_sum = 0.0f32;
-            for &i in &active {
-                let c = &mut clients[i];
-                let t = Instant::now();
-                let (mut local, loss) = c.train(&global, cfg.local_steps, cfg.lr)?;
-                let train_t = t.elapsed().as_secs_f64();
-                rm.train_secs += train_t;
-                loss_sum += loss;
-
-                let t = Instant::now();
-                let upd = c.encrypt(&self.codec, &mut local, &mask, &pk, cfg.dp_scale);
-                rm.encrypt_secs += t.elapsed().as_secs_f64();
-                // a client's upload starts when its (concurrent) local
-                // training finishes — the arrival ordering of the pipeline
-                train_starts.push(train_t);
-                upload_bytes.push(upd.wire_bytes(&self.codec.ctx) as u64);
-                client_ids.push(
-                    cohort
-                        .as_ref()
-                        .map(|co| co.members[i].id)
-                        .unwrap_or(i as u64),
-                );
-                alphas.push(c.alpha / alpha_sum);
-                updates.push(upd);
-            }
-
-            // server-side homomorphic aggregation; uplink time is charged
-            // only for uploads the round actually waited for
-            let t = Instant::now();
-            let mut wire_secs = 0.0f64;
-            let (agg, alpha_mass) = if cfg.transport == Transport::Tcp {
-                // Real loopback/LAN delivery: one uploader thread per
-                // participant streams its (staged) update over a socket; the
-                // intake stamps completions with wall-clock times, the
-                // streaming engine applies the quorum policy to those
-                // stamps, and a client failing mid-upload is folded into
-                // the straggler count.
-                let intake = tcp_intake.as_ref().expect("bound at task setup");
-                let dial = tcp_dial.as_deref().expect("resolved at task setup");
-                let icfg = IntakeConfig {
-                    round_id: round as u64,
-                    expected_uploads: active.len(),
-                    quorum: cfg.quorum,
-                    straggler_timeout: std::time::Duration::from_secs_f64(
-                        cfg.straggler_timeout.max(0.0),
-                    ),
-                    // hard intake bound: explicit --intake-max-wait, or base
-                    // slack plus the configured straggler window so a wide
-                    // --straggler-timeout is never silently truncated; also
-                    // what bounds a fully-failed round (e.g. a misconfigured
-                    // --connect where no upload ever lands)
-                    max_wait: std::time::Duration::from_secs_f64(
-                        cfg.intake_max_wait
-                            .unwrap_or(30.0 + cfg.straggler_timeout.max(0.0))
-                            .max(1.0),
-                    ),
-                    ..IntakeConfig::default()
-                };
-                let outcome = std::thread::scope(|s| {
-                    for (k, upd) in updates.drain(..).enumerate() {
-                        let ucfg = UploadConfig {
-                            round_id: round as u64,
-                            client: client_ids[k],
-                            alpha: alphas[k],
-                            ..UploadConfig::default()
-                        };
-                        s.spawn(move || {
-                            if let Err(e) = crate::transport::upload_update(dial, &ucfg, &upd)
-                            {
-                                crate::log_debug!(
-                                    "transport",
-                                    "client {} upload failed: {e}",
-                                    ucfg.client
-                                );
-                            }
-                        });
-                    }
-                    intake.collect_round(&icfg)
-                })?;
-                wire_secs = outcome.elapsed_secs;
-                clock.upload_bytes_only(outcome.bytes_received);
-                let engine =
-                    StreamingAggregator::new(&self.codec.ctx.params, cfg.engine_config());
-                let mut round_intake = engine.begin_round(Some(&mask));
-                for a in outcome.arrivals {
-                    round_intake.offer(a)?;
-                }
-                let (agg, mut stats) = round_intake.seal()?;
-                // Only identified participants whose upload failed count as
-                // dropped stragglers — anonymous probes and retries of an
-                // already-accepted client would otherwise skew the round's
-                // reported drop rate.
-                let accepted_ids: std::collections::HashSet<u64> =
-                    stats.accepted_clients.iter().copied().collect();
-                let failed_participants = outcome
-                    .failed
-                    .iter()
-                    .filter(|&&id| id != UNIDENTIFIED_CLIENT && !accepted_ids.contains(&id))
-                    .collect::<std::collections::HashSet<_>>()
-                    .len();
-                stats.offered += failed_participants;
-                stats.dropped_stragglers += failed_participants;
-                rm.participants = stats.accepted;
-                rm.stragglers_dropped = stats.dropped_stragglers;
-                (agg, stats.alpha_mass)
-            } else {
-                match cfg.engine {
-                    Engine::Sequential => {
-                        for &b in &upload_bytes {
-                            clock.upload(b, cfg.bandwidth);
-                        }
-                        (self.aggregate(&updates, &alphas)?, 1.0)
-                    }
-                    Engine::Pipeline => {
-                        let arrival_secs =
-                            concurrent_arrivals(&upload_bytes, &train_starts, cfg.bandwidth);
-                        let arrivals: Vec<Arrival> = updates
-                            .drain(..)
-                            .zip(alphas.iter())
-                            .zip(arrival_secs.iter())
-                            .enumerate()
-                            .map(|(k, ((upd, &alpha), &at))| Arrival {
-                                client: client_ids[k],
-                                alpha,
-                                arrival_secs: at,
-                                update: Arc::new(upd),
-                            })
-                            .collect();
-                        let engine =
-                            StreamingAggregator::new(&self.codec.ctx.params, cfg.engine_config());
-                        // run-aligned plaintext shard plan from the shared mask
-                        let (agg, stats) = engine.aggregate_with_mask(arrivals, Some(&mask))?;
-                        let accepted: std::collections::HashSet<u64> =
-                            stats.accepted_clients.iter().copied().collect();
-                        for (cid, &b) in client_ids.iter().zip(upload_bytes.iter()) {
-                            if accepted.contains(cid) {
-                                clock.upload(b, cfg.bandwidth);
-                            } else {
-                                // dropped straggler: bytes were sent but the
-                                // round never waited for them
-                                clock.upload_bytes_only(b);
-                            }
-                        }
-                        rm.participants = stats.accepted;
-                        rm.stragglers_dropped = stats.dropped_stragglers;
-                        (agg, stats.alpha_mass)
-                    }
-                }
-            };
-            rm.aggregate_secs = t.elapsed().as_secs_f64();
-
-            // broadcast the partially-encrypted global model to every active
-            // client — dropped stragglers still receive the next global —
-            // over concurrent downlinks (one transfer time under parallel
-            // accounting)
-            let down = agg.wire_bytes(&self.codec.ctx) as u64;
-            clock.broadcast(down, active.len(), cfg.bandwidth);
-
-            // key-holder decryption + merge (renormalized by the accepted
-            // FedAvg weight mass when the quorum policy dropped stragglers)
-            let t = Instant::now();
-            global = self.decrypt_global(&agg, &mask, &keys, &mut server_rng);
-            if (alpha_mass - 1.0).abs() > 1e-12 {
-                for v in global.iter_mut() {
-                    *v = (*v as f64 / alpha_mass) as f32;
-                }
-            }
-            rm.decrypt_secs = t.elapsed().as_secs_f64();
-
-            rm.comm_secs = clock.comm_secs - comm0 + wire_secs;
-            rm.upload_bytes = clock.bytes_up - up0;
-            rm.download_bytes = clock.bytes_down - down0;
-            rm.train_loss = loss_sum / active.len() as f32;
-            crate::log_debug!(
-                "server",
-                "round {round}: loss {:.4} train {:.2}s enc {:.2}s agg {:.2}s",
-                rm.train_loss,
-                rm.train_secs,
-                rm.encrypt_secs,
-                rm.aggregate_secs
-            );
-            report.rounds.push(rm);
-            clock.finish_round();
-
-            // periodic evaluation
-            if cfg.eval_every > 0 && (round + 1) % cfg.eval_every == 0 {
-                let mut l = 0.0f32;
-                let mut a = 0.0f32;
-                for c in clients.iter_mut() {
-                    let (cl, ca) = c.evaluate(&global, 1)?;
-                    l += cl;
-                    a += ca;
-                }
-                report.evals.push(EvalPoint {
-                    round: round + 1,
-                    loss: l / cfg.clients as f32,
-                    accuracy: a / cfg.clients as f32,
-                });
-            }
-        }
-        Ok((report, global))
+            phases::drive(self, &mut st, &mut participants, &Uplink::Hub(&hub))
+        })();
+        hub.shutdown();
+        r?;
+        Ok((st.report, st.global))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::config::KeyMode;
+    use crate::coordinator::config::{KeyMode, MaskGranularity, Selection};
     use std::path::PathBuf;
 
     fn runtime() -> Option<Runtime> {
@@ -679,6 +613,7 @@ mod tests {
         assert_eq!(global.len(), 79510);
         assert!((report.mask_ratio - 0.1).abs() < 0.01);
         assert!(!report.evals.is_empty());
+        assert_eq!(report.timing_source, TIMING_SIMULATED);
         // losses should trend down across rounds
         let first = report.rounds.first().unwrap().train_loss;
         let last = report.rounds.last().unwrap().train_loss;
@@ -750,11 +685,12 @@ mod tests {
     #[test]
     fn tcp_transport_round_matches_sim_transport() {
         let Some(rt) = runtime() else { return };
-        // Same seeds, same staged encryption: delivering the updates over
-        // real loopback sockets instead of the in-process vector must not
-        // change the trained model (no stragglers at loopback speed, quorum
-        // unset). Tolerance only covers benign XLA training nondeterminism
-        // between the two runs — the aggregation itself is bitwise-stable.
+        // Same seeds: delivering the whole task over persistent loopback
+        // sessions (client threads running the join loop, real downlink
+        // frames, client-side decryption) must not change the trained
+        // model. Tolerance only covers benign XLA training nondeterminism
+        // between the two runs — aggregation and decryption are
+        // bitwise-stable.
         let mut sim = quick_cfg();
         sim.backend = Backend::Native;
         sim.dropout = 0.0;
@@ -763,11 +699,15 @@ mod tests {
         tcp.transport = Transport::Tcp;
         tcp.engine = crate::agg_engine::Engine::Pipeline;
         tcp.shards = 2;
-        let (_, ga) = FlServer::new(&rt, sim).unwrap().run().unwrap();
+        let (ra, ga) = FlServer::new(&rt, sim).unwrap().run().unwrap();
         let (rb, gb) = FlServer::new(&rt, tcp).unwrap().run().unwrap();
         assert_eq!(rb.rounds.len(), 2);
         assert!(rb.rounds.iter().all(|r| r.stragglers_dropped == 0));
         assert!(rb.rounds.iter().all(|r| r.upload_bytes > 0));
+        // downlink is measured under tcp, simulated under sim
+        assert_eq!(ra.timing_source, TIMING_SIMULATED);
+        assert_eq!(rb.timing_source, TIMING_MEASURED);
+        assert!(rb.rounds[1].download_bytes > 0);
         let max_err = ga
             .iter()
             .zip(gb.iter())

@@ -1,0 +1,321 @@
+//! Out-of-band task/key distribution for multi-process `serve`/`join`
+//! (DESIGN.md §9).
+//!
+//! `serve` writes one binary **task-key file** before opening its listen
+//! socket; each `join` process reads it to recover (a) the task spec every
+//! participant must agree on for the run to be bitwise-reproducible (model,
+//! crypto context, seed, FL hyper-parameters) and (b) the key material: the
+//! public key every client encrypts under and the secret key the key-holder
+//! role uses to decrypt the broadcast aggregate locally.
+//!
+//! **Trust model.** The file is the paper's "key agreement" stage collapsed
+//! to a file handed out over a trusted side channel: whoever can read it
+//! can decrypt aggregates, so it must never travel over the unauthenticated
+//! session socket. Client ids remain unauthenticated on the wire (any peer
+//! that knows the listen address can claim a slot) and the transport is
+//! plaintext TCP — TLS + client authentication are future work, recorded in
+//! DESIGN.md §9.
+
+use super::config::{FlConfig, MaskGranularity, Selection};
+use crate::ckks::keys::{PublicKey, SecretKey};
+use crate::ckks::serialize::{
+    public_key_append, public_key_read, secret_key_append, secret_key_read,
+};
+use crate::ckks::CkksParams;
+use crate::transport::frame::crc32;
+use std::sync::Arc;
+
+const MAGIC: u32 = 0x4648_544B; // "FHTK"
+const VERSION: u32 = 1;
+
+/// The task parameters every process of a multi-process run must share.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskSpec {
+    pub model: String,
+    /// Parameter count of the `synthetic` model (0 for artifact models).
+    pub synthetic_dim: usize,
+    pub clients: usize,
+    pub rounds: usize,
+    pub local_steps: usize,
+    pub lr: f32,
+    pub ratio: f64,
+    pub selection: Selection,
+    pub mask_granularity: MaskGranularity,
+    pub dp_scale: Option<f64>,
+    pub samples_per_client: usize,
+    pub skew: f64,
+    pub seed: u64,
+    /// Crypto context as `(n, num_limbs, scaling_bits)`.
+    pub crypto: (usize, usize, u32),
+}
+
+impl TaskSpec {
+    /// Extract the shared spec from a server config + its crypto context.
+    pub fn from_config(cfg: &FlConfig, params: &CkksParams) -> Self {
+        TaskSpec {
+            model: cfg.model.clone(),
+            synthetic_dim: cfg.synthetic_dim,
+            clients: cfg.clients,
+            rounds: cfg.rounds,
+            local_steps: cfg.local_steps,
+            lr: cfg.lr,
+            ratio: cfg.ratio,
+            selection: cfg.selection,
+            mask_granularity: cfg.mask_granularity,
+            dp_scale: cfg.dp_scale,
+            samples_per_client: cfg.samples_per_client,
+            skew: cfg.skew,
+            seed: cfg.seed,
+            crypto: (params.n, params.num_limbs(), params.scaling_bits),
+        }
+    }
+
+    /// Rebuild the crypto parameters this spec pins.
+    pub fn params(&self) -> anyhow::Result<Arc<CkksParams>> {
+        let (n, limbs, bits) = self.crypto;
+        Ok(Arc::new(CkksParams::new(n, limbs, bits)?))
+    }
+}
+
+fn selection_to_u8(s: Selection) -> u8 {
+    match s {
+        Selection::Full => 0,
+        Selection::TopP => 1,
+        Selection::Random => 2,
+        Selection::None => 3,
+    }
+}
+
+fn selection_from_u8(v: u8) -> anyhow::Result<Selection> {
+    Ok(match v {
+        0 => Selection::Full,
+        1 => Selection::TopP,
+        2 => Selection::Random,
+        3 => Selection::None,
+        other => anyhow::bail!("unknown selection tag {other}"),
+    })
+}
+
+fn granularity_to_u8(g: MaskGranularity) -> u8 {
+    match g {
+        MaskGranularity::Param => 0,
+        MaskGranularity::Layer => 1,
+    }
+}
+
+fn granularity_from_u8(v: u8) -> anyhow::Result<MaskGranularity> {
+    Ok(match v {
+        0 => MaskGranularity::Param,
+        1 => MaskGranularity::Layer,
+        other => anyhow::bail!("unknown mask-granularity tag {other}"),
+    })
+}
+
+/// The complete out-of-band distribution artifact: spec + key material.
+pub struct TaskKey {
+    pub spec: TaskSpec,
+    pub pk: PublicKey,
+    pub sk: SecretKey,
+}
+
+fn read_u32(bytes: &[u8], off: &mut usize) -> anyhow::Result<u32> {
+    anyhow::ensure!(bytes.len() >= *off + 4, "truncated task key");
+    let v = u32::from_le_bytes(bytes[*off..*off + 4].try_into().unwrap());
+    *off += 4;
+    Ok(v)
+}
+
+fn read_u64(bytes: &[u8], off: &mut usize) -> anyhow::Result<u64> {
+    anyhow::ensure!(bytes.len() >= *off + 8, "truncated task key");
+    let v = u64::from_le_bytes(bytes[*off..*off + 8].try_into().unwrap());
+    *off += 8;
+    Ok(v)
+}
+
+fn read_f64(bytes: &[u8], off: &mut usize) -> anyhow::Result<f64> {
+    Ok(f64::from_bits(read_u64(bytes, off)?))
+}
+
+impl TaskKey {
+    /// Serialize: fixed header, spec fields, model name, pk, sk, CRC-32.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let s = &self.spec;
+        let mut out = Vec::new();
+        out.extend_from_slice(&MAGIC.to_le_bytes());
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(s.crypto.0 as u32).to_le_bytes());
+        out.extend_from_slice(&(s.crypto.1 as u32).to_le_bytes());
+        out.extend_from_slice(&s.crypto.2.to_le_bytes());
+        out.extend_from_slice(&s.seed.to_le_bytes());
+        out.extend_from_slice(&(s.clients as u32).to_le_bytes());
+        out.extend_from_slice(&(s.rounds as u32).to_le_bytes());
+        out.extend_from_slice(&(s.local_steps as u32).to_le_bytes());
+        out.extend_from_slice(&s.lr.to_le_bytes());
+        out.extend_from_slice(&s.ratio.to_le_bytes());
+        out.push(selection_to_u8(s.selection));
+        out.push(granularity_to_u8(s.mask_granularity));
+        out.push(u8::from(s.dp_scale.is_some()));
+        out.push(0u8);
+        out.extend_from_slice(&s.dp_scale.unwrap_or(0.0).to_le_bytes());
+        out.extend_from_slice(&(s.samples_per_client as u32).to_le_bytes());
+        out.extend_from_slice(&s.skew.to_le_bytes());
+        out.extend_from_slice(&(s.synthetic_dim as u64).to_le_bytes());
+        let name = s.model.as_bytes();
+        assert!(name.len() <= u16::MAX as usize, "model name too long");
+        out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        out.extend_from_slice(name);
+        public_key_append(&self.pk, &mut out);
+        secret_key_append(&self.sk, &mut out);
+        let crc = crc32(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    /// Parse + validate a task-key file; returns the key and its rebuilt
+    /// crypto parameters.
+    pub fn from_bytes(bytes: &[u8]) -> anyhow::Result<(TaskKey, Arc<CkksParams>)> {
+        anyhow::ensure!(bytes.len() > 4, "truncated task key");
+        let (body, crc_bytes) = bytes.split_at(bytes.len() - 4);
+        anyhow::ensure!(
+            u32::from_le_bytes(crc_bytes.try_into().unwrap()) == crc32(body),
+            "task key crc mismatch"
+        );
+        let mut off = 0usize;
+        anyhow::ensure!(read_u32(body, &mut off)? == MAGIC, "bad task-key magic");
+        anyhow::ensure!(read_u32(body, &mut off)? == VERSION, "bad task-key version");
+        let n = read_u32(body, &mut off)? as usize;
+        let limbs = read_u32(body, &mut off)? as usize;
+        let scaling_bits = read_u32(body, &mut off)?;
+        let seed = read_u64(body, &mut off)?;
+        let clients = read_u32(body, &mut off)? as usize;
+        let rounds = read_u32(body, &mut off)? as usize;
+        let local_steps = read_u32(body, &mut off)? as usize;
+        let lr = f32::from_bits(read_u32(body, &mut off)?);
+        let ratio = read_f64(body, &mut off)?;
+        anyhow::ensure!(body.len() >= off + 4, "truncated task key");
+        let selection = selection_from_u8(body[off])?;
+        let mask_granularity = granularity_from_u8(body[off + 1])?;
+        let has_dp = body[off + 2];
+        anyhow::ensure!(has_dp <= 1, "bad dp flag");
+        anyhow::ensure!(body[off + 3] == 0, "bad task-key padding");
+        off += 4;
+        let dp_raw = read_f64(body, &mut off)?;
+        let dp_scale = (has_dp == 1).then_some(dp_raw);
+        let samples_per_client = read_u32(body, &mut off)? as usize;
+        let skew = read_f64(body, &mut off)?;
+        let synthetic_dim = read_u64(body, &mut off)? as usize;
+        anyhow::ensure!(body.len() >= off + 2, "truncated task key");
+        let name_len = u16::from_le_bytes(body[off..off + 2].try_into().unwrap()) as usize;
+        off += 2;
+        anyhow::ensure!(body.len() >= off + name_len, "truncated model name");
+        let model = std::str::from_utf8(&body[off..off + name_len])
+            .map_err(|_| anyhow::anyhow!("model name is not utf-8"))?
+            .to_string();
+        off += name_len;
+        anyhow::ensure!(clients >= 1, "task key declares no clients");
+        anyhow::ensure!(lr.is_finite(), "non-finite learning rate");
+        anyhow::ensure!(ratio.is_finite() && (0.0..=1.0).contains(&ratio), "bad ratio");
+        anyhow::ensure!(skew.is_finite(), "non-finite skew");
+        let params = Arc::new(CkksParams::new(n, limbs, scaling_bits)?);
+        let pk = public_key_read(body, &mut off, &params)?;
+        let sk = secret_key_read(body, &mut off, &params)?;
+        anyhow::ensure!(off == body.len(), "trailing bytes in task key");
+        let spec = TaskSpec {
+            model,
+            synthetic_dim,
+            clients,
+            rounds,
+            local_steps,
+            lr,
+            ratio,
+            selection,
+            mask_granularity,
+            dp_scale,
+            samples_per_client,
+            skew,
+            seed,
+            crypto: (n, limbs, scaling_bits),
+        };
+        Ok((TaskKey { spec, pk, sk }, params))
+    }
+
+    /// Write the file atomically — temp file + rename, so a `join` process
+    /// polling for the path's existence can never observe a partial key
+    /// (0600-equivalent permissions are the operator's responsibility —
+    /// the file contains the secret key).
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        crate::util::write_file_atomic(path, &self.to_bytes())
+            .map_err(|e| anyhow::anyhow!("cannot write task key {}: {e}", path.display()))
+    }
+
+    /// Read + parse a task-key file.
+    pub fn load(path: &std::path::Path) -> anyhow::Result<(TaskKey, Arc<CkksParams>)> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("cannot read task key {}: {e}", path.display()))?;
+        Self::from_bytes(&bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::prng::ChaChaRng;
+
+    fn fixture() -> TaskKey {
+        let params = CkksParams::new(256, 3, 30).unwrap();
+        let mut rng = ChaChaRng::from_seed(5, 0);
+        let (pk, sk) = crate::ckks::keys::keygen(&params, &mut rng);
+        let cfg = FlConfig {
+            model: "synthetic".into(),
+            clients: 3,
+            rounds: 4,
+            seed: 77,
+            dp_scale: Some(0.25),
+            ..Default::default()
+        };
+        TaskKey {
+            spec: TaskSpec::from_config(&cfg, &params),
+            pk,
+            sk,
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_spec_and_keys() {
+        let tk = fixture();
+        let bytes = tk.to_bytes();
+        let (back, params) = TaskKey::from_bytes(&bytes).unwrap();
+        assert_eq!(back.spec, tk.spec);
+        assert_eq!(params.n, 256);
+        assert_eq!(back.pk.b_ntt, tk.pk.b_ntt);
+        assert_eq!(back.pk.a_ntt, tk.pk.a_ntt);
+        assert_eq!(back.sk.s_ntt, tk.sk.s_ntt);
+    }
+
+    #[test]
+    fn corruption_and_truncation_rejected() {
+        let bytes = fixture().to_bytes();
+        // flip every 97th byte: crc (or a field validator) must catch it
+        for i in (0..bytes.len()).step_by(97) {
+            let mut b = bytes.clone();
+            b[i] ^= 0x40;
+            assert!(TaskKey::from_bytes(&b).is_err(), "flip at {i} accepted");
+        }
+        for cut in [0, 3, 16, bytes.len() / 2, bytes.len() - 1] {
+            assert!(TaskKey::from_bytes(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let tk = fixture();
+        let path = std::env::temp_dir().join(format!(
+            "fedml_he_taskkey_test_{}.key",
+            std::process::id()
+        ));
+        tk.save(&path).unwrap();
+        let (back, _) = TaskKey::load(&path).unwrap();
+        assert_eq!(back.spec, tk.spec);
+        std::fs::remove_file(&path).ok();
+    }
+}

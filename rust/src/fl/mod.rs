@@ -3,7 +3,9 @@
 
 pub mod data;
 pub mod model_meta;
+pub mod synthetic;
 pub mod trainer;
 
 pub use model_meta::{ModelInfo, TABLE4_MODELS};
+pub use synthetic::{SyntheticClient, SyntheticModel, SYNTHETIC_DEFAULT_DIM, SYNTHETIC_MODEL};
 pub use trainer::{LocalTrainer, Workload};

@@ -1,0 +1,181 @@
+//! Artifact-free synthetic workload: a deterministic pure-Rust "trainer"
+//! with the same client-facing surface as the AOT-artifact path.
+//!
+//! The multi-process `serve`/`join` deployment (DESIGN.md §9) and its CI
+//! smoke must run — and be *bitwise reproducible* — on machines without the
+//! PJRT artifacts. The `synthetic` model provides that: every quantity is a
+//! pure function of `(seed, client id, round)`, local training is an exact
+//! contraction toward a per-client target (so losses trend down and FedAvg
+//! converges), and **no RNG is consumed by training itself** — exactly like
+//! the artifact path, where the client's ChaCha stream feeds only
+//! encryption and DP noise. Two processes that run the same synthetic
+//! client therefore produce byte-identical updates.
+
+use crate::crypto::prng::ChaChaRng;
+
+/// Model name that selects the synthetic workload.
+pub const SYNTHETIC_MODEL: &str = "synthetic";
+
+/// Default flat parameter count of the synthetic model.
+pub const SYNTHETIC_DEFAULT_DIM: usize = 4096;
+
+/// The synthetic model family: a flat `dim`-parameter vector whose loss
+/// landscape for client `c` is `½‖p − t_c‖²` with a seeded target `t_c`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SyntheticModel {
+    pub dim: usize,
+    pub seed: u64,
+}
+
+impl SyntheticModel {
+    pub fn new(dim: usize, seed: u64) -> Self {
+        assert!(dim >= 1, "synthetic model needs at least one parameter");
+        SyntheticModel { dim, seed }
+    }
+
+    /// Deterministic initial global parameters (shared by every process of
+    /// a run — the out-of-band equivalent of the artifact init file).
+    pub fn init_params(&self) -> Vec<f32> {
+        let mut rng = ChaChaRng::from_seed(self.seed, 0xB007);
+        (0..self.dim)
+            .map(|_| (rng.normal_f64() * 0.05) as f32)
+            .collect()
+    }
+
+    /// Client `id`'s target vector (its "local data distribution").
+    pub fn target(&self, id: u64) -> Vec<f32> {
+        let mut rng = ChaChaRng::from_seed(self.seed, 0x7A36_0000 ^ id);
+        (0..self.dim)
+            .map(|_| (rng.normal_f64() * 0.5) as f32)
+            .collect()
+    }
+}
+
+/// One synthetic federated client. Mirrors `FlClient`'s surface (alpha,
+/// rng, sensitivity / train / evaluate) without touching the runtime.
+pub struct SyntheticClient {
+    pub id: u64,
+    pub alpha: f64,
+    pub model: SyntheticModel,
+    pub rng: ChaChaRng,
+    target: Vec<f32>,
+}
+
+impl SyntheticClient {
+    /// Build client `id` of `n_clients`; the rng stream id matches
+    /// `FlClient::new` so sim and remote drivers stay interchangeable.
+    pub fn new(model: SyntheticModel, id: u64, n_clients: usize) -> Self {
+        SyntheticClient {
+            id,
+            alpha: 1.0 / n_clients.max(1) as f64,
+            model,
+            rng: ChaChaRng::from_seed(model.seed, 0x1000 + id),
+            target: model.target(id),
+        }
+    }
+
+    /// Rebind this pooled slot to virtual cohort member `vid` for one round
+    /// (the synthetic analogue of `FlClient::bind_virtual`).
+    pub fn bind_virtual(&mut self, vid: u64, alpha: f64, client_seed: u64, round: u64) {
+        self.id = vid;
+        self.alpha = alpha;
+        self.rng = ChaChaRng::from_seed(client_seed.wrapping_add(round), 0x7000 ^ vid);
+        self.target = self.model.target(vid);
+    }
+
+    /// Local sensitivity map: |∂loss/∂p| = |p − t| at the global point.
+    pub fn sensitivity(&self, global: &[f32]) -> Vec<f32> {
+        assert_eq!(global.len(), self.model.dim, "global/model dim mismatch");
+        global
+            .iter()
+            .zip(self.target.iter())
+            .map(|(&p, &t)| (p - t).abs())
+            .collect()
+    }
+
+    /// `steps` exact gradient steps of `½‖p − t‖²`; returns the updated
+    /// local model and the pre-training loss (the convention of the
+    /// artifact trainer's reported mean loss: it trends down across
+    /// rounds as the global approaches the FedAvg fixed point).
+    pub fn train(&self, global: &[f32], steps: usize, lr: f32) -> (Vec<f32>, f32) {
+        assert_eq!(global.len(), self.model.dim, "global/model dim mismatch");
+        let mut p = global.to_vec();
+        let loss = self.loss(global);
+        let k = 1.0 - (1.0 - lr).powi(steps.max(1) as i32);
+        for (v, &t) in p.iter_mut().zip(self.target.iter()) {
+            // closed form of `steps` iterations of p ← p − lr·(p − t)
+            *v -= k * (*v - t);
+        }
+        (p, loss)
+    }
+
+    /// Mean squared distance to the local target.
+    pub fn loss(&self, global: &[f32]) -> f32 {
+        let mse: f64 = global
+            .iter()
+            .zip(self.target.iter())
+            .map(|(&p, &t)| ((p - t) as f64).powi(2))
+            .sum::<f64>()
+            / self.model.dim as f64;
+        mse as f32
+    }
+
+    /// Evaluation: (loss, pseudo-accuracy in (0, 1]).
+    pub fn evaluate(&self, global: &[f32]) -> (f32, f32) {
+        let l = self.loss(global);
+        (l, 1.0 / (1.0 + l))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn everything_is_deterministic() {
+        let m = SyntheticModel::new(128, 9);
+        assert_eq!(m.init_params(), m.init_params());
+        assert_eq!(m.target(3), m.target(3));
+        assert_ne!(m.target(3), m.target(4));
+        let c1 = SyntheticClient::new(m, 2, 4);
+        let c2 = SyntheticClient::new(m, 2, 4);
+        let g = m.init_params();
+        assert_eq!(c1.train(&g, 3, 0.1), c2.train(&g, 3, 0.1));
+        assert_eq!(c1.sensitivity(&g), c2.sensitivity(&g));
+    }
+
+    #[test]
+    fn training_contracts_toward_the_target() {
+        let m = SyntheticModel::new(256, 4);
+        let c = SyntheticClient::new(m, 0, 1);
+        let g = m.init_params();
+        let (p1, l0) = c.train(&g, 4, 0.2);
+        let (_, l1) = c.train(&p1, 4, 0.2);
+        assert!(l1 < l0, "loss did not decrease: {l0} -> {l1}");
+        // closed form equals literal iteration
+        let mut q = g.clone();
+        for _ in 0..4 {
+            for (v, &t) in q.iter_mut().zip(c.target.iter()) {
+                *v -= 0.2 * (*v - t);
+            }
+        }
+        for (a, b) in p1.iter().zip(q.iter()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn training_consumes_no_rng() {
+        let m = SyntheticModel::new(64, 7);
+        let mut c = SyntheticClient::new(m, 1, 2);
+        let before = c.rng.next_u64();
+        let mut c2 = SyntheticClient::new(m, 1, 2);
+        let g = m.init_params();
+        let _ = c2.train(&g, 8, 0.1);
+        let _ = c2.sensitivity(&g);
+        let _ = c2.evaluate(&g);
+        assert_eq!(c2.rng.next_u64(), before);
+        let _ = c.bind_virtual(5, 0.5, 123, 2);
+        assert_eq!(c.id, 5);
+    }
+}

@@ -41,6 +41,31 @@ pub mod util;
 /// Crate-wide result type (thin alias over `anyhow`).
 pub type Result<T> = anyhow::Result<T>;
 
+/// Write a final model as raw f32 little-endian bytes (the `--out-model`
+/// artifact the multi-process smoke compares bitwise across runs).
+fn write_model(path: &str, model: &[f32]) -> Result<()> {
+    let mut bytes = Vec::with_capacity(model.len() * 4);
+    for v in model {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(path, bytes)
+        .map_err(|e| anyhow::anyhow!("cannot write model to {path}: {e}"))
+}
+
+/// Poll for a file another process writes (serve's task-key/addr files).
+fn wait_for_file(path: &std::path::Path, wait: std::time::Duration) -> Result<()> {
+    let deadline = std::time::Instant::now() + wait;
+    while !path.exists() {
+        anyhow::ensure!(
+            std::time::Instant::now() < deadline,
+            "{} did not appear within {wait:?}",
+            path.display()
+        );
+        std::thread::sleep(std::time::Duration::from_millis(25));
+    }
+    Ok(())
+}
+
 /// CLI dispatch for the `fedml-he` binary.
 pub fn dispatch(args: util::cli::Args) -> Result<()> {
     if args.flag("verbose") {
@@ -50,11 +75,97 @@ pub fn dispatch(args: util::cli::Args) -> Result<()> {
     let (sub, _rest) = args.subcommand();
     match sub {
         Some("run") => {
-            let rt = runtime::Runtime::new(&artifacts)?;
             let cfg = coordinator::FlConfig::from_args(&args)?;
-            let server = coordinator::FlServer::new(&rt, cfg)?;
-            let (report, _global) = server.run()?;
+            let rt_holder;
+            let (report, global) = if cfg.model == fl::SYNTHETIC_MODEL {
+                coordinator::FlServer::standalone(cfg)?.run()?
+            } else {
+                rt_holder = runtime::Runtime::new(&artifacts)?;
+                coordinator::FlServer::new(&rt_holder, cfg)?.run()?
+            };
+            if let Some(p) = args.get("out-model") {
+                write_model(p, &global)?;
+            }
             println!("{}", report.to_json());
+            Ok(())
+        }
+        Some("serve") => {
+            // Multi-process server: write the out-of-band task key, listen,
+            // and drive N independent `join` processes (DESIGN.md §9).
+            let mut cfg = coordinator::FlConfig::from_args(&args)?;
+            cfg.transport = coordinator::Transport::Tcp;
+            let key_path = args.get("task-key").ok_or_else(|| {
+                anyhow::anyhow!("serve requires --task-key PATH (the out-of-band key file)")
+            })?;
+            let opts = coordinator::ServeOptions {
+                task_key: std::path::PathBuf::from(key_path),
+                addr_file: args.get("addr-file").map(std::path::PathBuf::from),
+            };
+            let rt_holder;
+            let (report, global) = if cfg.model == fl::SYNTHETIC_MODEL {
+                coordinator::FlServer::standalone(cfg)?.serve(&opts)?
+            } else {
+                rt_holder = runtime::Runtime::new(&artifacts)?;
+                coordinator::FlServer::new(&rt_holder, cfg)?.serve(&opts)?
+            };
+            if let Some(p) = args.get("out-model") {
+                write_model(p, &global)?;
+            }
+            println!("{}", report.to_json());
+            Ok(())
+        }
+        Some("join") => {
+            // One client process of a multi-process run: read the task key
+            // distributed out-of-band, dial the serve process, and run the
+            // client session loop to completion.
+            let key_path = args
+                .get("task-key")
+                .ok_or_else(|| anyhow::anyhow!("join requires --task-key PATH"))?;
+            let client_id: u64 = args
+                .parsed("client-id")?
+                .ok_or_else(|| anyhow::anyhow!("join requires --client-id K (0..clients)"))?;
+            let wait = std::time::Duration::from_secs_f64(
+                args.get_parsed_or("key-wait", 30.0f64).max(0.0),
+            );
+            wait_for_file(std::path::Path::new(key_path), wait)?;
+            let (key, _params) = coordinator::TaskKey::load(std::path::Path::new(key_path))?;
+            let addr = match args.get("connect") {
+                Some(a) => a.to_string(),
+                None => {
+                    let af = args.get("addr-file").ok_or_else(|| {
+                        anyhow::anyhow!("join requires --connect ADDR or --addr-file PATH")
+                    })?;
+                    wait_for_file(std::path::Path::new(af), wait)?;
+                    std::fs::read_to_string(af)?.trim().to_string()
+                }
+            };
+            let opts = transport::SessionOpts {
+                connect_retry: std::time::Duration::from_secs_f64(
+                    args.get_parsed_or("connect-retry", 30.0f64).max(1.0),
+                ),
+                round_wait: std::time::Duration::from_secs_f64(
+                    args.get_parsed_or("round-wait", 300.0f64).max(1.0),
+                ),
+                ..Default::default()
+            };
+            let rt_holder;
+            let rt_opt = if key.spec.model == fl::SYNTHETIC_MODEL {
+                None
+            } else {
+                rt_holder = runtime::Runtime::new(&artifacts)?;
+                Some(&rt_holder)
+            };
+            let global = coordinator::join_task(&addr, client_id, &key, rt_opt, opts)?;
+            if let Some(p) = args.get("out-model") {
+                write_model(p, &global)?;
+            }
+            println!(
+                "{}",
+                util::json::Json::obj(vec![
+                    ("client", client_id.into()),
+                    ("params", global.len().into()),
+                ])
+            );
             Ok(())
         }
         Some("params") => {
@@ -143,7 +254,8 @@ pub fn dispatch(args: util::cli::Args) -> Result<()> {
             Ok(())
         }
         Some(other) => anyhow::bail!(
-            "unknown subcommand '{other}' (expected: run | params | privacy-map | bench)"
+            "unknown subcommand '{other}' (expected: run | serve | join | params | \
+             privacy-map | bench)"
         ),
         None => {
             eprintln!("fedml-he — FedML-HE reproduction (Rust + JAX + Pallas via PJRT)");
@@ -159,7 +271,17 @@ pub fn dispatch(args: util::cli::Args) -> Result<()> {
             eprintln!("                --engine sequential|pipeline --shards S --quorum K");
             eprintln!("                --straggler-timeout SECS --population N");
             eprintln!("                --transport sim|tcp --listen ADDR --connect ADDR");
-            eprintln!("                --intake-max-wait SECS ...)");
+            eprintln!("                --intake-max-wait SECS --synthetic-params N");
+            eprintln!("                --out-model PATH ...)");
+            eprintln!("                (--model synthetic needs no artifacts; --transport tcp");
+            eprintln!("                runs the whole task over persistent loopback sessions)");
+            eprintln!("  serve         multi-process server: write --task-key PATH, listen, and");
+            eprintln!("                drive --clients N independent `join` processes");
+            eprintln!("                (--listen ADDR --addr-file PATH --join-wait SECS");
+            eprintln!("                --out-model PATH + the `run` task options)");
+            eprintln!("  join          one client process: --task-key PATH --client-id K");
+            eprintln!("                (--connect ADDR | --addr-file PATH) --key-wait SECS");
+            eprintln!("                --connect-retry SECS --round-wait SECS --out-model PATH");
             eprintln!("  params        print the CKKS context (--n --limbs --scaling-bits)");
             eprintln!("  privacy-map   compute a model's sensitivity map summary (--model --ratio)");
             eprintln!("  bench         how to regenerate every paper table/figure");

@@ -1,10 +1,11 @@
 //! Client-side upload driver: stream an [`EncryptedUpdate`] to the server's
 //! TCP intake, frame by frame.
 //!
-//! Two entry points:
+//! Two one-shot entry points (one connection per upload, the PR-4 uplink
+//! path kept for tests, demos and anonymous uploads):
 //!
-//! * [`upload_update`] — ship an already-encrypted update (the coordinator's
-//!   staged path, and the replay path for tests).
+//! * [`upload_update`] — ship an already-encrypted update (the replay path
+//!   for tests).
 //! * [`upload_encrypt_streaming`] — encrypt-and-upload: ciphertext chunks go
 //!   onto the socket **while later chunks are still being encrypted** by the
 //!   parallel [`SelectiveCodec`] worker pool
@@ -14,13 +15,21 @@
 //!   ciphertext body in memory.
 //!
 //! Both produce byte-identical uploads for the same update/rng.
+//!
+//! The persistent-session path ([`super::session::ClientSession`]) reuses
+//! the same [`FrameSink`] over one long-lived connection: `send_begin`
+//! opens a fresh per-upload receipt window, so a sink can carry many
+//! uploads (one per round) without reconnecting.
 
-use super::frame::{encode_begin, write_frame, FrameKind, PLAIN_CHUNK_VALUES};
+use super::frame::{
+    encode_begin, encode_end_timing, read_frame_into, write_frame, FrameKind,
+    BEGIN_PAYLOAD_BYTES, PLAIN_CHUNK_VALUES,
+};
 use crate::ckks::serialize::ciphertext_shard_append;
 use crate::ckks::{Ciphertext, PublicKey};
 use crate::crypto::prng::ChaChaRng;
 use crate::he_agg::{EncryptedUpdate, EncryptionMask, SelectiveCodec};
-use std::io::{BufWriter, Write};
+use std::io::{BufWriter, Read, Write};
 use std::net::TcpStream;
 use std::time::Duration;
 
@@ -60,51 +69,82 @@ pub struct UploadReceipt {
     pub acked: bool,
 }
 
-struct FrameSink {
+/// Frame writer over one (possibly long-lived) connection. Per-upload
+/// accounting restarts at each `send_begin`; `bytes_sent` is cumulative
+/// over the sink's lifetime.
+pub(crate) struct FrameSink {
     writer: BufWriter<TcpStream>,
     round: u64,
     /// Reused payload staging buffer for ciphertext frames.
     buf: Vec<u8>,
+    /// Cumulative frame bytes written over the sink's lifetime.
     bytes_sent: u64,
+    /// `bytes_sent` at the most recent BEGIN (receipt window start).
+    upload_base: u64,
+    /// Ciphertext frames of the current upload.
     ct_frames: usize,
 }
 
 impl FrameSink {
+    /// Wrap an already-connected stream (the persistent-session path).
+    pub(crate) fn over(stream: TcpStream, round: u64, write_buffer: usize) -> Self {
+        FrameSink {
+            writer: BufWriter::with_capacity(write_buffer.max(1024), stream),
+            round,
+            buf: Vec::new(),
+            bytes_sent: 0,
+            upload_base: 0,
+            ct_frames: 0,
+        }
+    }
+
+    /// Dial + wrap (the one-shot path). Returns the sink and a cloned read
+    /// half for the ACK.
     fn connect(addr: &str, cfg: &UploadConfig) -> anyhow::Result<(Self, TcpStream)> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true).ok();
         stream.set_read_timeout(Some(cfg.io_timeout))?;
         stream.set_write_timeout(Some(cfg.io_timeout))?;
         let reader = stream.try_clone()?;
-        Ok((
-            FrameSink {
-                writer: BufWriter::with_capacity(cfg.write_buffer.max(1024), stream),
-                round: cfg.round_id,
-                buf: Vec::new(),
-                bytes_sent: 0,
-                ct_frames: 0,
-            },
-            reader,
-        ))
+        Ok((Self::over(stream, cfg.round_id, cfg.write_buffer), reader))
     }
 
-    fn send(&mut self, kind: FrameKind, seq: u32, payload: &[u8]) -> std::io::Result<()> {
+    /// Switch the round id stamped on subsequent frames (persistent
+    /// sessions write mask-stage and per-round frames over one socket).
+    pub(crate) fn set_round(&mut self, round: u64) {
+        self.round = round;
+    }
+
+    /// Cumulative frame bytes written over the sink's lifetime.
+    pub(crate) fn total_bytes(&self) -> u64 {
+        self.bytes_sent
+    }
+
+    pub(crate) fn send(
+        &mut self,
+        kind: FrameKind,
+        seq: u32,
+        payload: &[u8],
+    ) -> std::io::Result<()> {
         self.bytes_sent += write_frame(&mut self.writer, self.round, kind, seq, payload)?;
         Ok(())
     }
 
-    fn send_begin(
+    pub(crate) fn send_begin(
         &mut self,
-        cfg: &UploadConfig,
+        client: u64,
+        alpha: f64,
         n_cts: usize,
         n_plain: usize,
         total: usize,
     ) -> std::io::Result<()> {
-        let p = encode_begin(cfg.client, cfg.alpha, n_cts, n_plain, total);
+        self.upload_base = self.bytes_sent;
+        self.ct_frames = 0;
+        let p = encode_begin(client, alpha, n_cts, n_plain, total);
         self.send(FrameKind::Begin, 0, &p)
     }
 
-    fn send_ct(&mut self, seq: usize, ct: &Ciphertext) -> std::io::Result<()> {
+    pub(crate) fn send_ct(&mut self, seq: usize, ct: &Ciphertext) -> std::io::Result<()> {
         let limbs = ct.c0.num_limbs();
         self.buf.clear();
         ciphertext_shard_append(ct, 0, limbs, &mut self.buf);
@@ -117,7 +157,7 @@ impl FrameSink {
         r
     }
 
-    fn send_plain(&mut self, plain: &[f32]) -> std::io::Result<()> {
+    pub(crate) fn send_plain(&mut self, plain: &[f32]) -> std::io::Result<()> {
         for (seq, chunk) in plain.chunks(PLAIN_CHUNK_VALUES).enumerate() {
             self.buf.clear();
             self.buf.reserve(chunk.len() * 4);
@@ -132,35 +172,52 @@ impl FrameSink {
         Ok(())
     }
 
-    /// END + flush, then wait for the server's ACK on `reader`.
-    fn finish(mut self, reader: &mut TcpStream) -> anyhow::Result<UploadReceipt> {
-        self.send(FrameKind::End, 0, &[])?;
+    pub(crate) fn flush(&mut self) -> std::io::Result<()> {
+        self.writer.flush()
+    }
+
+    /// END (optionally carrying measured local metrics) + flush, then wait
+    /// for the server's ACK on `reader`. Non-consuming: a persistent
+    /// session calls this once per round over the same sink.
+    pub(crate) fn end_and_ack<R: Read>(
+        &mut self,
+        reader: &mut R,
+        read_buf: &mut Vec<u8>,
+        metrics: Option<(f64, f64, f32)>,
+    ) -> anyhow::Result<UploadReceipt> {
+        match metrics {
+            Some((train, encrypt, loss)) => {
+                self.send(FrameKind::End, 0, &encode_end_timing(train, encrypt, loss))?
+            }
+            None => self.send(FrameKind::End, 0, &[])?,
+        }
         self.writer.flush()?;
-        let ack =
-            super::frame::read_frame(reader, self.round, super::frame::BEGIN_PAYLOAD_BYTES)?;
-        anyhow::ensure!(ack.kind == FrameKind::Ack, "expected ACK, got {:?}", ack.kind);
+        let (kind, _) = read_frame_into(reader, self.round, BEGIN_PAYLOAD_BYTES, read_buf)?;
+        anyhow::ensure!(kind == FrameKind::Ack, "expected ACK, got {kind:?}");
         Ok(UploadReceipt {
-            bytes_sent: self.bytes_sent,
+            bytes_sent: self.bytes_sent - self.upload_base,
             ct_frames: self.ct_frames,
             acked: true,
         })
     }
 }
 
-/// Upload an already-encrypted update. Frames stream through the bounded
-/// write buffer; returns once the server acknowledges the END frame.
+/// Upload an already-encrypted update over a fresh connection. Frames
+/// stream through the bounded write buffer; returns once the server
+/// acknowledges the END frame.
 pub fn upload_update(
     addr: &str,
     cfg: &UploadConfig,
     update: &EncryptedUpdate,
 ) -> anyhow::Result<UploadReceipt> {
     let (mut sink, mut reader) = FrameSink::connect(addr, cfg)?;
-    sink.send_begin(cfg, update.cts.len(), update.plain.len(), update.total)?;
+    sink.send_begin(cfg.client, cfg.alpha, update.cts.len(), update.plain.len(), update.total)?;
     for (seq, ct) in update.cts.iter().enumerate() {
         sink.send_ct(seq, ct)?;
     }
     sink.send_plain(&update.plain)?;
-    sink.finish(&mut reader)
+    let mut ack_buf = Vec::new();
+    sink.end_and_ack(&mut reader, &mut ack_buf, None)
 }
 
 /// Encrypt-and-upload: chunk `c` is framed onto the socket while chunks
@@ -180,7 +237,7 @@ pub fn upload_encrypt_streaming(
     let (mut sink, mut reader) = FrameSink::connect(addr, cfg)?;
     let n_cts = codec.ct_count(mask.encrypted_count());
     let n_plain = mask.total() - mask.encrypted_count();
-    sink.send_begin(cfg, n_cts, n_plain, mask.total())?;
+    sink.send_begin(cfg.client, cfg.alpha, n_cts, n_plain, mask.total())?;
     // Stream ciphertext chunks as the worker pool finishes them. Encryption
     // keeps running after a socket error; the first error is kept and
     // reported once the (deterministic) rng stream has fully advanced.
@@ -201,7 +258,8 @@ pub fn upload_encrypt_streaming(
         plain.len()
     );
     sink.send_plain(&plain)?;
-    sink.finish(&mut reader)
+    let mut ack_buf = Vec::new();
+    sink.end_and_ack(&mut reader, &mut ack_buf, None)
 }
 
 /// Failure injection for tests and demos: send BEGIN plus the first
@@ -214,12 +272,12 @@ pub fn upload_partial_then_disconnect(
     ct_frames: usize,
 ) -> anyhow::Result<u64> {
     let (mut sink, _reader) = FrameSink::connect(addr, cfg)?;
-    sink.send_begin(cfg, update.cts.len(), update.plain.len(), update.total)?;
+    sink.send_begin(cfg.client, cfg.alpha, update.cts.len(), update.plain.len(), update.total)?;
     for (seq, ct) in update.cts.iter().take(ct_frames).enumerate() {
         sink.send_ct(seq, ct)?;
     }
-    sink.writer.flush()?;
-    let sent = sink.bytes_sent;
+    sink.flush()?;
+    let sent = sink.total_bytes();
     drop(sink); // closes the socket with the upload incomplete
     Ok(sent)
 }

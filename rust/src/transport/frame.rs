@@ -1,4 +1,4 @@
-//! Length-framed binary upload protocol (DESIGN.md §8).
+//! Length-framed binary session protocol (DESIGN.md §8–§9).
 //!
 //! Every message on the wire is one frame:
 //!
@@ -6,12 +6,21 @@
 //! magic    u32   = 0x46485450 ("FHTP")
 //! version  u32   = 1
 //! round    u64   round id (both sides reject skew)
-//! kind     u32   frame kind (BEGIN/CT_CHUNK/PLAIN/END/ACK)
+//! kind     u32   frame kind (see [`FrameKind`])
 //! seq      u32   chunk sequence (ciphertext index / plaintext chunk index)
 //! len      u32   payload byte length
 //! payload  len bytes
 //! crc      u32   CRC-32 (IEEE) of the payload
 //! ```
+//!
+//! Uplink kinds (client → server): BEGIN/CT_CHUNK/PLAIN/END plus the
+//! session handshake HELLO. Downlink kinds (server → client): ACK, WELCOME,
+//! MASK and DOWN_BEGIN/CT_CHUNK/PLAIN/DOWN_END (with a FIN flag in the
+//! DOWN_BEGIN preamble) — the persistent-session broadcast path of
+//! DESIGN.md §9. Handshake frames travel under
+//! [`CONTROL_ROUND`], the mask-agreement stage under [`MASK_ROUND`], and
+//! training round `r` under round id `r`, so one duplex connection serves
+//! the whole task without rounds bleeding into each other.
 //!
 //! The reader validates magic, version, round, kind and `len` **before**
 //! allocating the payload buffer: `len` is capped by a params-derived bound
@@ -19,7 +28,9 @@
 //! drive an allocation beyond one legitimate frame. Truncation (EOF anywhere
 //! inside a frame), CRC mismatch, version skew and unknown kinds all return
 //! `Err` — the connection's upload is then discarded as a dropped straggler,
-//! never a panic or a poisoned round.
+//! never a panic or a poisoned round. [`read_frame_into`] reuses one
+//! per-connection payload buffer across frames, so steady-state frame reads
+//! are allocation-free (gated by `tests/zero_alloc.rs`).
 
 use crate::ckks::serialize::shard_wire_bytes;
 use crate::ckks::CkksParams;
@@ -35,8 +46,36 @@ pub const FRAME_HEADER_BYTES: usize = 28;
 pub const FRAME_TRAILER_BYTES: usize = 4;
 /// BEGIN payload: client(8) alpha(8) n_cts(4) n_plain(4) total(8).
 pub const BEGIN_PAYLOAD_BYTES: usize = 32;
+/// END payload when the client reports its local compute metrics:
+/// train_secs(8 f64) encrypt_secs(8 f64) loss(4 f32) pad(4). An empty END
+/// is also accepted (metrics default to zero).
+pub const END_TIMING_PAYLOAD_BYTES: usize = 24;
+/// HELLO payload: client(8).
+pub const HELLO_PAYLOAD_BYTES: usize = 8;
+/// WELCOME payload: next round the server will serve on this session (8).
+pub const WELCOME_PAYLOAD_BYTES: usize = 8;
+/// DOWN_BEGIN payload: alpha(8) alpha_mass(8) n_cts(4) n_plain(4) total(8)
+/// flags(4).
+pub const DOWN_BEGIN_PAYLOAD_BYTES: usize = 36;
 /// f32 values per PLAIN frame (256 KiB of payload).
 pub const PLAIN_CHUNK_VALUES: usize = 65_536;
+
+/// Round id carried by session-handshake frames (HELLO/WELCOME) — outside
+/// the training-round id space.
+pub const CONTROL_ROUND: u64 = u64::MAX;
+/// Round id of the mask-agreement stage (sensitivity uploads + the MASK
+/// broadcast), which precedes training round 0.
+pub const MASK_ROUND: u64 = u64::MAX - 1;
+
+/// DOWN_BEGIN flag: the receiving client participates in this round
+/// (train + encrypt + upload).
+pub const DOWN_FLAG_PARTICIPATE: u32 = 1;
+/// DOWN_BEGIN flag: ciphertext/plain frames carrying the previous round's
+/// partially-encrypted aggregate follow before DOWN_END.
+pub const DOWN_FLAG_HAS_AGG: u32 = 2;
+/// DOWN_BEGIN flag: the task is complete after this downlink; the client
+/// applies the carried aggregate (if any) and exits its session loop.
+pub const DOWN_FLAG_FIN: u32 = 4;
 
 /// What a frame carries.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -45,13 +84,30 @@ pub enum FrameKind {
     Begin = 1,
     /// One ciphertext chunk: a full-limb-range shard view
     /// (`ckks::serialize::ciphertext_shard_to_bytes(ct, 0, limbs)`).
+    /// Travels uplink (update chunks) and downlink (aggregate chunks).
     CtChunk = 2,
     /// A slice of the compacted plaintext remainder (f32 LE, in order).
+    /// Travels uplink and downlink like [`FrameKind::CtChunk`].
     Plain = 3,
-    /// Upload complete (empty payload); the server stamps the arrival here.
+    /// Upload complete; the server stamps the arrival here. Payload is
+    /// empty or the client's measured timings
+    /// ([`END_TIMING_PAYLOAD_BYTES`]).
     End = 4,
     /// Server receipt (u32 LE status, 0 = received).
     Ack = 5,
+    /// Session handshake, client → server: claim a persistent client slot
+    /// (a reconnect with the same id rebinds the slot — DESIGN.md §9).
+    Hello = 6,
+    /// Session handshake reply, server → client: slot accepted.
+    Welcome = 7,
+    /// Downlink broadcast of the agreed encryption mask (run-delta bytes,
+    /// `he_agg::mask::MaskLayout` wire format).
+    Mask = 8,
+    /// Downlink round preamble: this client's normalized FedAvg weight,
+    /// the carried aggregate's renormalizer + shape, and the round flags.
+    DownBegin = 9,
+    /// Downlink round complete (empty payload).
+    DownEnd = 10,
 }
 
 impl FrameKind {
@@ -62,6 +118,11 @@ impl FrameKind {
             3 => FrameKind::Plain,
             4 => FrameKind::End,
             5 => FrameKind::Ack,
+            6 => FrameKind::Hello,
+            7 => FrameKind::Welcome,
+            8 => FrameKind::Mask,
+            9 => FrameKind::DownBegin,
+            10 => FrameKind::DownEnd,
             other => anyhow::bail!("unknown frame kind {other}"),
         })
     }
@@ -90,6 +151,18 @@ pub fn frame_payload_cap(params: &CkksParams) -> usize {
     shard_wire_bytes(params, 0, params.num_limbs())
         .max(PLAIN_CHUNK_VALUES * 4)
         .max(BEGIN_PAYLOAD_BYTES)
+}
+
+/// Upper bound on a MASK downlink payload for a `total`-parameter model.
+/// The run-delta wire format (`he_agg::mask::MaskLayout::to_bytes`) is a
+/// 12-byte header plus two varints per run; a mask over `total` params has
+/// at most `⌈total/2⌉` runs (alternating mask) and each run's two varints
+/// cost at most 10 bytes, so `5·total` dominates every legitimate mask —
+/// including paper-scale fragmented random masks. The client-side reader
+/// trusts the server it dialed more than the server trusts anonymous
+/// uploaders, but the cap still bounds any single allocation.
+pub fn mask_payload_cap(total: usize) -> usize {
+    64 + 5 * total.max(16)
 }
 
 const fn crc_table() -> [u32; 256] {
@@ -145,13 +218,19 @@ fn read_exact_or(r: &mut impl Read, buf: &mut [u8], what: &str) -> anyhow::Resul
         .map_err(|e| anyhow::anyhow!("truncated {what}: {e}"))
 }
 
-/// Read and validate one frame. `max_payload` bounds the allocation made for
-/// the declared payload length ([`frame_payload_cap`] on the server side).
-pub fn read_frame<R: Read>(
+/// Read and validate one frame into a caller-pooled payload buffer —
+/// steady-state frame reads make **zero heap allocations** once the buffer
+/// has grown to the connection's largest frame (gated by
+/// `tests/zero_alloc.rs`). `max_payload` bounds the buffer growth for the
+/// declared payload length ([`frame_payload_cap`], or its max with
+/// [`mask_payload_cap`] when a MASK broadcast may arrive). Returns
+/// `(kind, seq)`; the payload is in `payload[..]` on success.
+pub fn read_frame_into<R: Read>(
     r: &mut R,
     expect_round: u64,
     max_payload: usize,
-) -> anyhow::Result<Frame> {
+    payload: &mut Vec<u8>,
+) -> anyhow::Result<(FrameKind, u32)> {
     let mut hdr = [0u8; FRAME_HEADER_BYTES];
     read_exact_or(r, &mut hdr, "frame header")?;
     let magic = u32::from_le_bytes(hdr[0..4].try_into().unwrap());
@@ -173,14 +252,27 @@ pub fn read_frame<R: Read>(
         len <= max_payload,
         "declared payload length {len} exceeds cap {max_payload}"
     );
-    let mut payload = vec![0u8; len];
-    read_exact_or(r, &mut payload, "frame payload")?;
+    payload.clear();
+    payload.resize(len, 0);
+    read_exact_or(r, payload, "frame payload")?;
     let mut crc = [0u8; FRAME_TRAILER_BYTES];
     read_exact_or(r, &mut crc, "frame crc")?;
     anyhow::ensure!(
-        u32::from_le_bytes(crc) == crc32(&payload),
+        u32::from_le_bytes(crc) == crc32(payload),
         "frame crc mismatch"
     );
+    Ok((kind, seq))
+}
+
+/// Read and validate one frame into a fresh buffer (allocating convenience
+/// wrapper over [`read_frame_into`]).
+pub fn read_frame<R: Read>(
+    r: &mut R,
+    expect_round: u64,
+    max_payload: usize,
+) -> anyhow::Result<Frame> {
+    let mut payload = Vec::new();
+    let (kind, seq) = read_frame_into(r, expect_round, max_payload, &mut payload)?;
     Ok(Frame { kind, seq, payload })
 }
 
@@ -218,6 +310,164 @@ pub fn decode_begin(p: &[u8]) -> anyhow::Result<(u64, f64, usize, usize, usize)>
         "FedAvg weight out of range: {alpha}"
     );
     Ok((client, alpha, n_cts, n_plain, total))
+}
+
+/// Encode an END payload carrying the client's measured local metrics.
+pub fn encode_end_timing(
+    train_secs: f64,
+    encrypt_secs: f64,
+    loss: f32,
+) -> [u8; END_TIMING_PAYLOAD_BYTES] {
+    let mut p = [0u8; END_TIMING_PAYLOAD_BYTES];
+    p[0..8].copy_from_slice(&train_secs.to_le_bytes());
+    p[8..16].copy_from_slice(&encrypt_secs.to_le_bytes());
+    p[16..20].copy_from_slice(&loss.to_le_bytes());
+    p
+}
+
+/// Decode an END payload: `(train_secs, encrypt_secs, loss)`. An empty
+/// payload (a client that does not report metrics) decodes to zeros; any
+/// other length, or non-finite / negative timings, is malformed.
+pub fn decode_end_timing(p: &[u8]) -> anyhow::Result<(f64, f64, f32)> {
+    if p.is_empty() {
+        return Ok((0.0, 0.0, 0.0));
+    }
+    anyhow::ensure!(
+        p.len() == END_TIMING_PAYLOAD_BYTES,
+        "END payload must be empty or {END_TIMING_PAYLOAD_BYTES} bytes, got {}",
+        p.len()
+    );
+    let train = f64::from_le_bytes(p[0..8].try_into().unwrap());
+    let encrypt = f64::from_le_bytes(p[8..16].try_into().unwrap());
+    let loss = f32::from_le_bytes(p[16..20].try_into().unwrap());
+    anyhow::ensure!(
+        p[20..24] == [0u8; 4],
+        "bad END payload padding"
+    );
+    anyhow::ensure!(
+        train.is_finite() && train >= 0.0 && encrypt.is_finite() && encrypt >= 0.0,
+        "END timings out of range: train {train}, encrypt {encrypt}"
+    );
+    anyhow::ensure!(loss.is_finite(), "non-finite END loss {loss}");
+    Ok((train, encrypt, loss))
+}
+
+/// Encode a HELLO payload.
+pub fn encode_hello(client: u64) -> [u8; HELLO_PAYLOAD_BYTES] {
+    client.to_le_bytes()
+}
+
+/// Decode a HELLO payload into the claimed client id.
+pub fn decode_hello(p: &[u8]) -> anyhow::Result<u64> {
+    anyhow::ensure!(
+        p.len() == HELLO_PAYLOAD_BYTES,
+        "HELLO payload must be {HELLO_PAYLOAD_BYTES} bytes, got {}",
+        p.len()
+    );
+    Ok(u64::from_le_bytes(p.try_into().unwrap()))
+}
+
+/// Encode a WELCOME payload (the next round the server will serve on this
+/// session; [`MASK_ROUND`] while the mask-agreement stage is pending).
+pub fn encode_welcome(next_round: u64) -> [u8; WELCOME_PAYLOAD_BYTES] {
+    next_round.to_le_bytes()
+}
+
+/// Decode a WELCOME payload.
+pub fn decode_welcome(p: &[u8]) -> anyhow::Result<u64> {
+    anyhow::ensure!(
+        p.len() == WELCOME_PAYLOAD_BYTES,
+        "WELCOME payload must be {WELCOME_PAYLOAD_BYTES} bytes, got {}",
+        p.len()
+    );
+    Ok(u64::from_le_bytes(p.try_into().unwrap()))
+}
+
+/// What a round's DOWN_BEGIN preamble declares.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DownBegin {
+    /// This client's normalized FedAvg weight for the round (0.0 when it
+    /// does not participate).
+    pub alpha: f64,
+    /// Renormalizer for the carried aggregate (Σ α over the accepted
+    /// participants of the previous round; 0.0 when no aggregate follows).
+    pub alpha_mass: f64,
+    pub n_cts: usize,
+    pub n_plain: usize,
+    pub total: usize,
+    pub participate: bool,
+    pub has_agg: bool,
+    pub fin: bool,
+}
+
+/// Encode a DOWN_BEGIN payload.
+pub fn encode_down_begin(d: &DownBegin) -> [u8; DOWN_BEGIN_PAYLOAD_BYTES] {
+    let mut p = [0u8; DOWN_BEGIN_PAYLOAD_BYTES];
+    p[0..8].copy_from_slice(&d.alpha.to_le_bytes());
+    p[8..16].copy_from_slice(&d.alpha_mass.to_le_bytes());
+    p[16..20].copy_from_slice(&(d.n_cts as u32).to_le_bytes());
+    p[20..24].copy_from_slice(&(d.n_plain as u32).to_le_bytes());
+    p[24..32].copy_from_slice(&(d.total as u64).to_le_bytes());
+    let mut flags = 0u32;
+    if d.participate {
+        flags |= DOWN_FLAG_PARTICIPATE;
+    }
+    if d.has_agg {
+        flags |= DOWN_FLAG_HAS_AGG;
+    }
+    if d.fin {
+        flags |= DOWN_FLAG_FIN;
+    }
+    p[32..36].copy_from_slice(&flags.to_le_bytes());
+    p
+}
+
+/// Decode and validate a DOWN_BEGIN payload.
+pub fn decode_down_begin(p: &[u8]) -> anyhow::Result<DownBegin> {
+    anyhow::ensure!(
+        p.len() == DOWN_BEGIN_PAYLOAD_BYTES,
+        "DOWN_BEGIN payload must be {DOWN_BEGIN_PAYLOAD_BYTES} bytes, got {}",
+        p.len()
+    );
+    let alpha = f64::from_le_bytes(p[0..8].try_into().unwrap());
+    let alpha_mass = f64::from_le_bytes(p[8..16].try_into().unwrap());
+    let n_cts = u32::from_le_bytes(p[16..20].try_into().unwrap()) as usize;
+    let n_plain = u32::from_le_bytes(p[20..24].try_into().unwrap()) as usize;
+    let total = u64::from_le_bytes(p[24..32].try_into().unwrap()) as usize;
+    let flags = u32::from_le_bytes(p[32..36].try_into().unwrap());
+    anyhow::ensure!(
+        flags & !(DOWN_FLAG_PARTICIPATE | DOWN_FLAG_HAS_AGG | DOWN_FLAG_FIN) == 0,
+        "unknown DOWN_BEGIN flags {flags:#x}"
+    );
+    let d = DownBegin {
+        alpha,
+        alpha_mass,
+        n_cts,
+        n_plain,
+        total,
+        participate: flags & DOWN_FLAG_PARTICIPATE != 0,
+        has_agg: flags & DOWN_FLAG_HAS_AGG != 0,
+        fin: flags & DOWN_FLAG_FIN != 0,
+    };
+    anyhow::ensure!(
+        d.alpha.is_finite() && (0.0..=1.0).contains(&d.alpha),
+        "downlink FedAvg weight out of range: {}",
+        d.alpha
+    );
+    anyhow::ensure!(
+        !d.participate || d.alpha > 0.0,
+        "participating round with zero FedAvg weight"
+    );
+    anyhow::ensure!(
+        d.alpha_mass.is_finite() && d.alpha_mass >= 0.0,
+        "downlink alpha mass out of range: {}",
+        d.alpha_mass
+    );
+    anyhow::ensure!(
+        !d.has_agg || d.alpha_mass > 0.0,
+        "aggregate downlink with zero alpha mass"
+    );
+    Ok(d)
 }
 
 #[cfg(test)]
@@ -300,14 +550,115 @@ mod tests {
 
     #[test]
     fn every_single_byte_corruption_parses_or_errors_never_panics() {
-        let payload = vec![7u8; 96];
-        let mut wire = Vec::new();
-        write_frame(&mut wire, 11, FrameKind::CtChunk, 2, &payload).unwrap();
-        for i in 0..wire.len() {
-            let mut b = wire.clone();
-            b[i] ^= 0x80;
-            let _ = read_frame(&mut Cursor::new(&b), 11, 4096);
+        // the sweep covers every frame kind of the duplex session protocol,
+        // including the downlink/session kinds of DESIGN.md §9
+        for kind in [
+            FrameKind::Begin,
+            FrameKind::CtChunk,
+            FrameKind::Plain,
+            FrameKind::End,
+            FrameKind::Ack,
+            FrameKind::Hello,
+            FrameKind::Welcome,
+            FrameKind::Mask,
+            FrameKind::DownBegin,
+            FrameKind::DownEnd,
+        ] {
+            let payload = vec![7u8; 96];
+            let mut wire = Vec::new();
+            write_frame(&mut wire, 11, kind, 2, &payload).unwrap();
+            for i in 0..wire.len() {
+                let mut b = wire.clone();
+                b[i] ^= 0x80;
+                let _ = read_frame(&mut Cursor::new(&b), 11, 4096);
+            }
         }
+    }
+
+    #[test]
+    fn session_payload_codecs_roundtrip_and_validate() {
+        // HELLO / WELCOME
+        assert_eq!(decode_hello(&encode_hello(42)).unwrap(), 42);
+        assert!(decode_hello(&[0u8; 7]).is_err());
+        assert_eq!(decode_welcome(&encode_welcome(MASK_ROUND)).unwrap(), MASK_ROUND);
+        assert!(decode_welcome(&[0u8; 9]).is_err());
+
+        // END metrics: empty is zeros, 24 bytes roundtrips, junk is rejected
+        assert_eq!(decode_end_timing(&[]).unwrap(), (0.0, 0.0, 0.0));
+        let t = encode_end_timing(1.25, 0.5, 0.75);
+        assert_eq!(decode_end_timing(&t).unwrap(), (1.25, 0.5, 0.75));
+        assert!(decode_end_timing(&t[..8]).is_err());
+        assert!(decode_end_timing(&encode_end_timing(f64::NAN, 0.0, 0.0)).is_err());
+        assert!(decode_end_timing(&encode_end_timing(-1.0, 0.0, 0.0)).is_err());
+        assert!(decode_end_timing(&encode_end_timing(0.0, 0.0, f32::NAN)).is_err());
+        let mut bad = encode_end_timing(1.0, 1.0, 1.0);
+        bad[23] = 7;
+        assert!(decode_end_timing(&bad).is_err());
+
+        // DOWN_BEGIN
+        let d = DownBegin {
+            alpha: 0.25,
+            alpha_mass: 0.75,
+            n_cts: 3,
+            n_plain: 1000,
+            total: 9000,
+            participate: true,
+            has_agg: true,
+            fin: false,
+        };
+        assert_eq!(decode_down_begin(&encode_down_begin(&d)).unwrap(), d);
+        // a non-participating fin downlink with no aggregate is legal
+        let fin = DownBegin {
+            alpha: 0.0,
+            alpha_mass: 0.0,
+            n_cts: 0,
+            n_plain: 0,
+            total: 0,
+            participate: false,
+            has_agg: false,
+            fin: true,
+        };
+        assert_eq!(decode_down_begin(&encode_down_begin(&fin)).unwrap(), fin);
+        // malformed: short, bad weight, participate w/o weight, agg w/o mass
+        assert!(decode_down_begin(&encode_down_begin(&d)[..35]).is_err());
+        for bad in [
+            DownBegin { alpha: f64::NAN, ..d },
+            DownBegin { alpha: 1.5, ..d },
+            DownBegin { alpha: 0.0, participate: true, ..d },
+            DownBegin { alpha_mass: 0.0, has_agg: true, ..d },
+            DownBegin { alpha_mass: f64::INFINITY, ..d },
+        ] {
+            assert!(
+                decode_down_begin(&encode_down_begin(&bad)).is_err(),
+                "{bad:?} accepted"
+            );
+        }
+        // unknown flag bits are rejected
+        let mut p = encode_down_begin(&d);
+        p[32..36].copy_from_slice(&0x80u32.to_le_bytes());
+        assert!(decode_down_begin(&p).is_err());
+    }
+
+    #[test]
+    fn pooled_read_reuses_one_buffer_across_frames() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, 4, FrameKind::CtChunk, 0, &[1u8; 512]).unwrap();
+        write_frame(&mut wire, 4, FrameKind::Plain, 1, &[2u8; 64]).unwrap();
+        write_frame(&mut wire, 4, FrameKind::End, 0, &[]).unwrap();
+        let mut cur = Cursor::new(&wire);
+        let mut buf = Vec::new();
+        let (k, _) = read_frame_into(&mut cur, 4, 4096, &mut buf).unwrap();
+        assert_eq!(k, FrameKind::CtChunk);
+        assert_eq!(buf.len(), 512);
+        let cap = buf.capacity();
+        let (k, seq) = read_frame_into(&mut cur, 4, 4096, &mut buf).unwrap();
+        assert_eq!((k, seq), (FrameKind::Plain, 1));
+        assert_eq!(buf.len(), 64);
+        assert_eq!(buf.capacity(), cap, "shrinking frame must reuse the buffer");
+        assert!(buf.iter().all(|&b| b == 2));
+        let (k, _) = read_frame_into(&mut cur, 4, 4096, &mut buf).unwrap();
+        assert_eq!(k, FrameKind::End);
+        assert!(buf.is_empty());
     }
 
     #[test]
@@ -331,5 +682,20 @@ mod tests {
         assert!(cap >= shard_wire_bytes(&params, 0, params.num_limbs()));
         assert!(cap >= PLAIN_CHUNK_VALUES * 4);
         assert!(cap >= BEGIN_PAYLOAD_BYTES);
+    }
+
+    #[test]
+    fn mask_cap_covers_worst_case_alternating_mask() {
+        // the most fragmented mask possible: every other parameter
+        // encrypted — its wire form must fit under the declared cap
+        let total = 10_000usize;
+        let runs: Vec<crate::he_agg::mask::Run> = (0..total / 2)
+            .map(|i| crate::he_agg::mask::Run { lo: 2 * i, hi: 2 * i + 1 })
+            .collect();
+        let mask = crate::he_agg::EncryptionMask::from_runs(total, runs);
+        assert_eq!(mask.encrypted.n_runs(), total / 2);
+        assert!(mask.to_bytes().len() <= mask_payload_cap(total));
+        // tiny models still get a sane floor
+        assert!(mask_payload_cap(1) >= 64);
     }
 }

@@ -12,7 +12,8 @@
 //! allocate beyond one legitimate frame ([`super::frame::frame_payload_cap`]).
 
 use super::frame::{
-    decode_begin, frame_payload_cap, read_frame, write_frame, FrameKind, BEGIN_PAYLOAD_BYTES,
+    decode_begin, decode_end_timing, frame_payload_cap, read_frame_into, write_frame, FrameKind,
+    BEGIN_PAYLOAD_BYTES,
 };
 use crate::agg_engine::Arrival;
 use crate::ckks::serialize::ciphertext_shard_from_bytes;
@@ -96,6 +97,13 @@ pub struct IntakeOutcome {
     pub bytes_received: u64,
     /// Wall-clock duration of the intake (accept-open to last handler done).
     pub elapsed_secs: f64,
+    /// Σ client-reported local training seconds over completed uploads
+    /// (END-frame metric payloads; zero for clients that do not report).
+    pub train_secs: f64,
+    /// Σ client-reported encryption seconds over completed uploads.
+    pub encrypt_secs: f64,
+    /// Σ client-reported training losses over completed uploads.
+    pub loss_sum: f64,
 }
 
 /// A bound TCP intake serving one round at a time.
@@ -142,6 +150,7 @@ impl TcpIntake {
         self.listener.set_nonblocking(true)?;
         let completed: Mutex<Vec<Arrival>> = Mutex::new(Vec::new());
         let failed: Mutex<Vec<u64>> = Mutex::new(Vec::new());
+        let timing_sums: Mutex<(f64, f64, f64)> = Mutex::new((0.0, 0.0, 0.0));
         let bytes = AtomicU64::new(0);
         // Set when the quorum-th upload completes: accept only until then +
         // straggler_timeout (an upload already in flight still finishes and
@@ -188,6 +197,7 @@ impl TcpIntake {
                         let completed = &completed;
                         let failed = &failed;
                         let bytes = &bytes;
+                        let timing_sums = &timing_sums;
                         let accept_cutoff = &accept_cutoff;
                         let settled = &settled;
                         let in_flight = &in_flight;
@@ -206,7 +216,14 @@ impl TcpIntake {
                             );
                             bytes.fetch_add(received, Ordering::Relaxed);
                             match result {
-                                Ok((client, alpha, update)) => {
+                                Ok(UploadFrames {
+                                    client,
+                                    alpha,
+                                    train_secs,
+                                    encrypt_secs,
+                                    loss,
+                                    update,
+                                }) => {
                                     let mut done = completed.lock().unwrap();
                                     if done.iter().any(|a| a.client == client) {
                                         // a retry after a lost ACK (or a
@@ -231,6 +248,12 @@ impl TcpIntake {
                                         });
                                         let n_done = done.len();
                                         drop(done);
+                                        {
+                                            let mut t = timing_sums.lock().unwrap();
+                                            t.0 += train_secs;
+                                            t.1 += encrypt_secs;
+                                            t.2 += loss as f64;
+                                        }
                                         // a completion after an earlier
                                         // failed attempt reuses the slot
                                         // that failure already settled
@@ -309,67 +332,108 @@ impl TcpIntake {
                 .total_cmp(&b.arrival_secs)
                 .then(a.client.cmp(&b.client))
         });
+        let (train_secs, encrypt_secs, loss_sum) = timing_sums.into_inner().unwrap();
         Ok(IntakeOutcome {
             arrivals,
             failed: failed.into_inner().unwrap(),
             bytes_received: bytes.load(Ordering::Relaxed),
             elapsed_secs: start.elapsed().as_secs_f64(),
+            train_secs,
+            encrypt_secs,
+            loss_sum,
         })
     }
 }
 
-/// Reassemble one client's upload off its socket. Any validation failure or
-/// disconnect returns `Err`; `seen_client`/`received` report partial
-/// progress either way.
+/// One reassembled upload (shared between the one-shot intake and the
+/// persistent-session collector).
+pub(crate) struct UploadFrames {
+    pub client: u64,
+    pub alpha: f64,
+    /// Client-reported local metrics from the END payload (zeros when the
+    /// client does not report them).
+    pub train_secs: f64,
+    pub encrypt_secs: f64,
+    pub loss: f32,
+    pub update: EncryptedUpdate,
+}
+
+/// Reassemble one client's upload off a connection. Any validation failure
+/// or disconnect returns `Err`; `seen_client`/`received` report partial
+/// progress either way. The ACK is written to `ack_stream` after a valid
+/// END.
 ///
-/// `deadline` is the intake-wide `max_wait` bound: it is re-checked before
-/// every frame and the socket read timeout is clamped to the time remaining,
-/// so a slowly-trickling connection cannot hold the round open much past
-/// `max_wait` (within one in-flight frame) by resetting the per-read timer.
-fn receive_update(
-    mut stream: TcpStream,
+/// `deadline()` is re-evaluated before every frame (the session collector
+/// tightens it once a quorum cutoff is known) and the socket read timeout
+/// is clamped to the time remaining, so a slowly-trickling connection
+/// cannot hold the round open much past the bound by resetting the
+/// per-read timer. `expect_client` pins the BEGIN identity (persistent
+/// sessions already know whose socket this is) and `expect_alpha` pins the
+/// declared FedAvg weight to the one the server assigned for the round —
+/// rejecting a skewed weight here keeps the upload out of both the
+/// aggregate *and* the round's metric sums; `payload` is the pooled
+/// per-connection frame buffer — steady-state frame reads allocate nothing
+/// (gated by `tests/zero_alloc.rs`).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn read_upload<R: std::io::Read, F: Fn() -> Instant>(
+    reader: &mut R,
+    stream: &TcpStream,
+    ack_stream: &TcpStream,
     params: &CkksParams,
     shape: UpdateShape,
-    cfg: &IntakeConfig,
-    deadline: Instant,
+    round_id: u64,
+    io_timeout: Duration,
+    deadline: &F,
+    expect_client: Option<u64>,
+    expect_alpha: Option<f64>,
     seen_client: &mut Option<u64>,
     received: &mut u64,
-) -> anyhow::Result<(u64, f64, EncryptedUpdate)> {
-    stream.set_nonblocking(false)?;
-    stream.set_write_timeout(Some(cfg.io_timeout))?;
+    payload: &mut Vec<u8>,
+) -> anyhow::Result<UploadFrames> {
     let cap = frame_payload_cap(params);
-    let mut reader = BufReader::new(stream.try_clone()?);
     let arm_read = |stream: &TcpStream| -> anyhow::Result<()> {
-        let remaining = deadline.saturating_duration_since(Instant::now());
-        anyhow::ensure!(
-            !remaining.is_zero(),
-            "upload exceeded the intake deadline"
-        );
-        stream.set_read_timeout(Some(remaining.min(cfg.io_timeout)))?;
+        let remaining = deadline().saturating_duration_since(Instant::now());
+        anyhow::ensure!(!remaining.is_zero(), "upload exceeded the intake deadline");
+        stream.set_read_timeout(Some(remaining.min(io_timeout)))?;
         Ok(())
+    };
+    let frame_bytes = |payload_len: usize| {
+        (super::frame::FRAME_HEADER_BYTES + payload_len + super::frame::FRAME_TRAILER_BYTES)
+            as u64
     };
 
     // BEGIN: identity + declared shape, checked against the round's shape.
-    arm_read(&stream)?;
-    let begin = read_frame(&mut reader, cfg.round_id, cap)?;
-    *received += begin.wire_bytes();
+    arm_read(stream)?;
+    let (kind, _) = read_frame_into(reader, round_id, cap, payload)?;
+    *received += frame_bytes(payload.len());
     anyhow::ensure!(
-        begin.kind == FrameKind::Begin,
-        "upload must start with BEGIN, got {:?}",
-        begin.kind
+        kind == FrameKind::Begin,
+        "upload must start with BEGIN, got {kind:?}"
     );
     anyhow::ensure!(
-        begin.payload.len() == BEGIN_PAYLOAD_BYTES,
+        payload.len() == BEGIN_PAYLOAD_BYTES,
         "BEGIN payload length {}",
-        begin.payload.len()
+        payload.len()
     );
-    let (client, alpha, n_cts, n_plain, total) = decode_begin(&begin.payload)?;
+    let (client, alpha, n_cts, n_plain, total) = decode_begin(payload)?;
     // rejected before the connection counts as "identified": the sentinel
     // would corrupt slot settling and straggler accounting downstream
     anyhow::ensure!(
         client != UNIDENTIFIED_CLIENT,
         "client id {client} is reserved"
     );
+    if let Some(expected) = expect_client {
+        anyhow::ensure!(
+            client == expected,
+            "session for client {expected} sent BEGIN for client {client}"
+        );
+    }
+    if let Some(expected) = expect_alpha {
+        anyhow::ensure!(
+            (alpha - expected).abs() <= 1e-9,
+            "client {client} declared FedAvg weight {alpha}, round assigned {expected}"
+        );
+    }
     *seen_client = Some(client);
     anyhow::ensure!(
         n_cts == shape.n_cts && n_plain == shape.n_plain && total == shape.total,
@@ -383,16 +447,17 @@ fn receive_update(
     let mut cts: Vec<Option<Ciphertext>> = (0..n_cts).map(|_| None).collect();
     let mut plain: Vec<f32> = Vec::with_capacity(n_plain);
     let mut next_plain_seq = 0u32;
+    let timing;
     loop {
-        arm_read(&stream)?;
-        let frame = read_frame(&mut reader, cfg.round_id, cap)?;
-        *received += frame.wire_bytes();
-        match frame.kind {
+        arm_read(stream)?;
+        let (kind, seq) = read_frame_into(reader, round_id, cap, payload)?;
+        *received += frame_bytes(payload.len());
+        match kind {
             FrameKind::CtChunk => {
-                let seq = frame.seq as usize;
+                let seq = seq as usize;
                 anyhow::ensure!(seq < n_cts, "ciphertext chunk {seq} out of range");
                 anyhow::ensure!(cts[seq].is_none(), "duplicate ciphertext chunk {seq}");
-                let shard = ciphertext_shard_from_bytes(&frame.payload, params)?;
+                let shard = ciphertext_shard_from_bytes(payload, params)?;
                 anyhow::ensure!(
                     shard.lo == 0 && shard.hi == params.num_limbs(),
                     "ciphertext chunk must carry the full limb range, got [{}, {})",
@@ -405,21 +470,20 @@ fn receive_update(
             }
             FrameKind::Plain => {
                 anyhow::ensure!(
-                    frame.seq == next_plain_seq,
-                    "plaintext chunk {} out of order (expected {next_plain_seq})",
-                    frame.seq
+                    seq == next_plain_seq,
+                    "plaintext chunk {seq} out of order (expected {next_plain_seq})"
                 );
                 next_plain_seq += 1;
                 anyhow::ensure!(
-                    frame.payload.len() % 4 == 0,
+                    payload.len() % 4 == 0,
                     "plaintext payload not f32-aligned"
                 );
-                let k = frame.payload.len() / 4;
+                let k = payload.len() / 4;
                 anyhow::ensure!(
                     plain.len() + k <= n_plain,
                     "plaintext remainder overflows the declared {n_plain} values"
                 );
-                for c in frame.payload.chunks_exact(4) {
+                for c in payload.chunks_exact(4) {
                     plain.push(f32::from_le_bytes(c.try_into().unwrap()));
                 }
             }
@@ -433,20 +497,57 @@ fn receive_update(
                     "upload sealed with {} of {n_plain} plaintext values",
                     plain.len()
                 );
+                timing = decode_end_timing(payload)?;
                 break;
             }
             FrameKind::Begin => anyhow::bail!("duplicate BEGIN frame"),
-            FrameKind::Ack => anyhow::bail!("unexpected ACK from client"),
+            other => anyhow::bail!("unexpected {other:?} frame in an upload"),
         }
     }
-    drop(reader);
-    write_frame(
-        &mut stream,
-        cfg.round_id,
-        FrameKind::Ack,
-        0,
-        &0u32.to_le_bytes(),
-    )?;
+    let mut ack_w = ack_stream;
+    write_frame(&mut ack_w, round_id, FrameKind::Ack, 0, &0u32.to_le_bytes())?;
     let cts: Vec<Ciphertext> = cts.into_iter().map(|c| c.unwrap()).collect();
-    Ok((client, alpha, EncryptedUpdate { cts, plain, total }))
+    Ok(UploadFrames {
+        client,
+        alpha,
+        train_secs: timing.0,
+        encrypt_secs: timing.1,
+        loss: timing.2,
+        update: EncryptedUpdate { cts, plain, total },
+    })
+}
+
+/// One-shot connection wrapper over [`read_upload`] (the anonymous uplink
+/// path of [`TcpIntake`]): fresh `BufReader` + pooled frame buffer per
+/// connection, intake-wide `max_wait` as the deadline.
+fn receive_update(
+    stream: TcpStream,
+    params: &CkksParams,
+    shape: UpdateShape,
+    cfg: &IntakeConfig,
+    deadline: Instant,
+    seen_client: &mut Option<u64>,
+    received: &mut u64,
+) -> anyhow::Result<UploadFrames> {
+    stream.set_nonblocking(false)?;
+    stream.set_write_timeout(Some(cfg.io_timeout))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    // Per-connection pooled payload buffer: every frame of this upload
+    // reuses it (ROADMAP follow-up: no per-frame payload Vec).
+    let mut payload = Vec::new();
+    read_upload(
+        &mut reader,
+        &stream,
+        &stream,
+        params,
+        shape,
+        cfg.round_id,
+        cfg.io_timeout,
+        &move || deadline,
+        None,
+        None,
+        seen_client,
+        received,
+        &mut payload,
+    )
 }

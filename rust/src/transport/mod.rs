@@ -19,6 +19,13 @@
 //!   driving the existing quorum/straggler policy, and a mid-upload
 //!   disconnect is absorbed as a dropped straggler — never a panic or a
 //!   poisoned round.
+//! * [`session`] — persistent duplex sessions (DESIGN.md §9): one
+//!   long-lived connection per client for the whole task, with a real
+//!   downlink broadcast (mask + per-round partially-encrypted aggregate as
+//!   frames), HELLO/WELCOME slot handshakes with rejoin, and per-round
+//!   upload collection feeding the same streaming-engine intake. This is
+//!   the transport behind `--transport tcp` and the multi-process
+//!   `serve`/`join` subcommands.
 //!
 //! Ciphertext frame payloads reuse the per-shard wire views of
 //! [`crate::ckks::serialize`] (a CT frame is a full-limb-range shard view,
@@ -31,12 +38,19 @@
 pub mod client;
 pub mod frame;
 pub mod intake;
+pub mod session;
 
 pub use client::{
     upload_encrypt_streaming, upload_partial_then_disconnect, upload_update, UploadConfig,
     UploadReceipt,
 };
-pub use frame::{crc32, frame_payload_cap, read_frame, write_frame, Frame, FrameKind};
+pub use frame::{
+    crc32, frame_payload_cap, mask_payload_cap, read_frame, read_frame_into, write_frame,
+    DownBegin, Frame, FrameKind, CONTROL_ROUND, MASK_ROUND,
+};
 pub use intake::{
     IntakeConfig, IntakeOutcome, TcpIntake, UpdateShape, UNIDENTIFIED_CLIENT,
+};
+pub use session::{
+    ClientSession, DownlinkOutcome, PeerSession, RoundDownlink, SessionHub, SessionOpts,
 };

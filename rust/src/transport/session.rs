@@ -1,0 +1,1081 @@
+//! Persistent duplex client sessions: the symmetric transport of
+//! DESIGN.md §9.
+//!
+//! PR-4's transport was uplink-only and one-shot — every upload dialed a
+//! fresh connection and the downlink broadcast never touched the wire. Here
+//! the client/server boundary is one long-lived duplex connection per
+//! client, serving the whole task:
+//!
+//! * **Handshake** — the client claims its slot with a HELLO frame
+//!   ([`super::frame::CONTROL_ROUND`]); the server replies WELCOME with the
+//!   next round it will serve. A reconnect with the same client id rebinds
+//!   the slot (disconnect-between-rounds → rejoin), replacing any dead
+//!   connection; the client's task state (global model, mask, rng streams)
+//!   lives in the client process, so nothing needs replaying.
+//! * **Downlink** — the server *pushes* real frames: the agreed encryption
+//!   mask (MASK, run-delta wire format) and, per round, the
+//!   partially-encrypted global aggregate (DOWN_BEGIN + CT_CHUNK/PLAIN +
+//!   DOWN_END, ciphertext payloads in the `ckks::serialize` per-shard wire
+//!   format). Downlink byte counts and wall-clock times are measured, not
+//!   simulated — they are what `FlReport` reports under `--transport tcp`.
+//! * **Uplink** — per-round uploads reuse the PR-4 frame sequence
+//!   (BEGIN..END) over the persistent socket, reassembled by the same
+//!   [`super::intake::read_upload`] validation path with a pooled
+//!   per-session frame buffer, stamped on completion, and offered to the
+//!   streaming aggregation engine as true `Arrival`s.
+//!
+//! Failure containment matches the intake: any per-session wire error
+//! kills that session only — the round completes from the uploads that
+//! landed, the client is reported as failed/straggler, and its slot is
+//! free to rejoin. Client ids remain unauthenticated (no TLS yet; see
+//! DESIGN.md §9 trust notes).
+
+use super::client::{FrameSink, UploadReceipt};
+use super::frame::{
+    decode_down_begin, decode_hello, decode_welcome, encode_down_begin, encode_hello,
+    encode_welcome, frame_payload_cap, mask_payload_cap, read_frame_into, write_frame, DownBegin,
+    FrameKind, CONTROL_ROUND, MASK_ROUND, PLAIN_CHUNK_VALUES, WELCOME_PAYLOAD_BYTES,
+};
+use super::intake::{read_upload, IntakeConfig, IntakeOutcome, UpdateShape, UNIDENTIFIED_CLIENT};
+use crate::agg_engine::Arrival;
+use crate::ckks::serialize::{ciphertext_shard_append, ciphertext_shard_from_bytes};
+use crate::ckks::{Ciphertext, CkksParams};
+use crate::he_agg::{EncryptedUpdate, EncryptionMask};
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// One server-side persistent session.
+pub struct PeerSession {
+    pub client: u64,
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+    /// Pooled frame payload buffer for this session's uplink reads.
+    read_buf: Vec<u8>,
+}
+
+/// What one downlink push put on the wire.
+#[derive(Debug, Clone, Default)]
+pub struct DownlinkOutcome {
+    /// Frame bytes written across all reached sessions.
+    pub bytes_sent: u64,
+    /// Wall-clock duration of the push (serialize + socket writes).
+    pub elapsed_secs: f64,
+    /// Clients whose session was missing or died mid-push (their slot is
+    /// freed for a rejoin).
+    pub failed: Vec<u64>,
+}
+
+/// A registered session, shared between the accept thread (rejoin
+/// replacement), the broadcast path, and per-round reader threads.
+type SharedSession = Arc<Mutex<PeerSession>>;
+
+struct HubShared {
+    listener: TcpListener,
+    params: Arc<CkksParams>,
+    sessions: Mutex<HashMap<u64, SharedSession>>,
+    /// Advertised in WELCOME: the next wire round this server will serve
+    /// ([`MASK_ROUND`] until the mask broadcast happens).
+    next_round: AtomicU64,
+    stop: AtomicBool,
+    /// Bound on concurrently-registered sessions (a flood of HELLOs with
+    /// distinct forged ids cannot grow the map without limit).
+    max_sessions: usize,
+    /// Live handshake threads (half-open connections awaiting HELLO) — a
+    /// connected-but-silent peer must never stall other joins/rejoins.
+    handshakes: AtomicUsize,
+    io_timeout: Duration,
+}
+
+/// The server's session registry: one background accept thread serving
+/// HELLO handshakes for the whole task, plus per-round broadcast/collect
+/// entry points called by the coordinator's phase machine.
+pub struct SessionHub {
+    shared: Arc<HubShared>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl SessionHub {
+    /// Bind the listen socket and start the accept thread. `max_sessions`
+    /// bounds the registry (use ≥ the expected client count; rejoins
+    /// replace their old entry and do not count twice).
+    pub fn bind(
+        addr: &str,
+        params: Arc<CkksParams>,
+        max_sessions: usize,
+    ) -> anyhow::Result<Self> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow::anyhow!("cannot bind session hub on {addr}: {e}"))?;
+        listener.set_nonblocking(true)?;
+        let shared = Arc::new(HubShared {
+            listener,
+            params,
+            sessions: Mutex::new(HashMap::new()),
+            next_round: AtomicU64::new(MASK_ROUND),
+            stop: AtomicBool::new(false),
+            max_sessions: max_sessions.max(1),
+            handshakes: AtomicUsize::new(0),
+            io_timeout: Duration::from_secs(10),
+        });
+        let accept_shared = shared.clone();
+        let accept = std::thread::spawn(move || accept_loop(accept_shared));
+        Ok(SessionHub {
+            shared,
+            accept: Some(accept),
+        })
+    }
+
+    /// The bound address (what clients dial).
+    pub fn local_addr(&self) -> anyhow::Result<SocketAddr> {
+        Ok(self.shared.listener.local_addr()?)
+    }
+
+    /// Advertise the next wire round (stamped into WELCOME replies so a
+    /// rejoining client can sanity-check where the task is).
+    pub fn set_next_round(&self, round: u64) {
+        self.shared.next_round.store(round, Ordering::Relaxed);
+    }
+
+    /// Client ids with a currently-registered session.
+    pub fn connected(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self.shared.sessions.lock().unwrap().keys().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    fn session(&self, client: u64) -> Option<SharedSession> {
+        self.shared.sessions.lock().unwrap().get(&client).cloned()
+    }
+
+    /// Drop whatever session currently occupies `client`'s slot (socket
+    /// shut down; the slot is free to rejoin).
+    pub fn drop_session(&self, client: u64) {
+        // take the entry first: holding the map lock while waiting on a
+        // session mutex would stall the accept thread behind a slow reader
+        let removed = self.shared.sessions.lock().unwrap().remove(&client);
+        if let Some(s) = removed {
+            // try_lock: if a reader still holds the session it is already
+            // failing out on its own timeouts
+            if let Ok(sess) = s.try_lock() {
+                sess.stream.shutdown(std::net::Shutdown::Both).ok();
+            }
+        }
+    }
+
+    /// Evict `client`'s slot **only if it still holds `observed`** — the
+    /// session the caller actually saw fail. Without the identity check, a
+    /// reader timing out on a dead connection could remove the fresh
+    /// session of a client that had already rejoined mid-round. The
+    /// observed (dead) session's socket is shut down either way.
+    fn drop_session_if(&self, client: u64, observed: &SharedSession) {
+        {
+            let mut map = self.shared.sessions.lock().unwrap();
+            let same = map
+                .get(&client)
+                .map(|s| Arc::ptr_eq(s, observed))
+                .unwrap_or(false);
+            if same {
+                map.remove(&client);
+            }
+        }
+        if let Ok(sess) = observed.try_lock() {
+            sess.stream.shutdown(std::net::Shutdown::Both).ok();
+        }
+    }
+
+    /// Block until `n` distinct clients hold sessions (the serve-side
+    /// handshake barrier). Errors after `wait` with the shortfall.
+    pub fn wait_for_clients(&self, n: usize, wait: Duration) -> anyhow::Result<Vec<u64>> {
+        let deadline = Instant::now() + wait;
+        loop {
+            let ids = self.connected();
+            if ids.len() >= n {
+                return Ok(ids);
+            }
+            anyhow::ensure!(
+                Instant::now() < deadline,
+                "only {}/{n} clients joined within {:.0?}",
+                ids.len(),
+                wait
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    /// Push the agreed mask to every listed client (MASK frame at
+    /// [`MASK_ROUND`]). Sessions that fail mid-push are dropped and
+    /// reported in the outcome.
+    pub fn broadcast_mask(&self, clients: &[u64], mask_bytes: &[u8]) -> DownlinkOutcome {
+        let start = Instant::now();
+        let mut out = DownlinkOutcome::default();
+        for &client in clients {
+            match self.push_to(client, |sess| {
+                // buffered: header/payload/crc leave as one segment, not
+                // three NODELAY'd writes
+                let mut w = BufWriter::new(&sess.stream);
+                let n = write_frame(&mut w, MASK_ROUND, FrameKind::Mask, 0, mask_bytes)?;
+                w.flush()?;
+                Ok(n)
+            }) {
+                Ok(bytes) => out.bytes_sent += bytes,
+                Err(e) => {
+                    // push_to already evicted the failed session
+                    crate::log_debug!("session", "mask downlink to {client} failed: {e}");
+                    out.failed.push(client);
+                }
+            }
+        }
+        out.elapsed_secs = start.elapsed().as_secs_f64();
+        out
+    }
+
+    /// Push one round's downlink to every listed client: the per-client
+    /// DOWN_BEGIN preamble, the shared aggregate (when `agg` is set and the
+    /// preamble's `has_agg` says so), and DOWN_END. The aggregate's chunk
+    /// payloads are serialized **once** and fanned out to every session —
+    /// O(model + N·frames), not O(N·model). Returns measured bytes and
+    /// wall time — the real downlink cost `FlReport` records under tcp.
+    pub fn broadcast_round(
+        &self,
+        round: u64,
+        plans: &[(u64, DownBegin)],
+        agg: Option<&EncryptedUpdate>,
+    ) -> DownlinkOutcome {
+        let start = Instant::now();
+        // pre-encode the shared aggregate's frame payloads once
+        let mut ct_payloads: Vec<Vec<u8>> = Vec::new();
+        let mut plain_payloads: Vec<Vec<u8>> = Vec::new();
+        if let Some(agg) = agg {
+            for ct in &agg.cts {
+                let mut b = Vec::new();
+                ciphertext_shard_append(ct, 0, ct.c0.num_limbs(), &mut b);
+                ct_payloads.push(b);
+            }
+            for chunk in agg.plain.chunks(PLAIN_CHUNK_VALUES) {
+                let mut b = Vec::with_capacity(chunk.len() * 4);
+                for &v in chunk {
+                    b.extend_from_slice(&v.to_le_bytes());
+                }
+                plain_payloads.push(b);
+            }
+        }
+        let mut out = DownlinkOutcome::default();
+        for (client, down) in plans {
+            let carried = (down.has_agg && agg.is_some())
+                .then_some((ct_payloads.as_slice(), plain_payloads.as_slice()));
+            match self.push_to(*client, |sess| push_round(sess, round, down, carried)) {
+                Ok(bytes) => out.bytes_sent += bytes,
+                Err(e) => {
+                    // push_to already evicted the failed session
+                    crate::log_debug!("session", "round {round} downlink to {client} failed: {e}");
+                    out.failed.push(*client);
+                }
+            }
+        }
+        out.elapsed_secs = start.elapsed().as_secs_f64();
+        out
+    }
+
+    /// Run a downlink write against `client`'s current session; on any io
+    /// failure the observed session (and only it — identity-checked) is
+    /// evicted so the slot can rejoin.
+    fn push_to<F>(&self, client: u64, f: F) -> anyhow::Result<u64>
+    where
+        F: FnOnce(&mut PeerSession) -> std::io::Result<u64>,
+    {
+        let sess = self
+            .session(client)
+            .ok_or_else(|| anyhow::anyhow!("no session for client {client}"))?;
+        let result = {
+            let mut guard = sess.lock().unwrap();
+            guard
+                .stream
+                .set_write_timeout(Some(self.shared.io_timeout))
+                .map_err(anyhow::Error::from)
+                .and_then(|_| f(&mut guard).map_err(anyhow::Error::from))
+        };
+        if result.is_err() {
+            self.drop_session_if(client, &sess);
+        }
+        result
+    }
+
+    /// Collect one round of uploads from the expected clients' persistent
+    /// sessions — the streaming-engine intake fed from sessions instead of
+    /// one-shot connections. `expected` pairs each client id with the
+    /// FedAvg weight the round assigned it (`None` = don't pin); an upload
+    /// declaring a different weight fails its session before touching the
+    /// round's arrivals or metric sums. Per-client reader threads
+    /// reassemble and stamp completions exactly like [`super::TcpIntake`];
+    /// a session that fails, misses the quorum cutoff, or is absent (never
+    /// joined / died at broadcast) lands in `failed` and its slot is
+    /// dropped for rejoin.
+    pub fn collect_round(
+        &self,
+        expected: &[(u64, Option<f64>)],
+        shape: UpdateShape,
+        cfg: &IntakeConfig,
+    ) -> IntakeOutcome {
+        let start = Instant::now();
+        let deadline = start + cfg.max_wait;
+        let completed: Mutex<Vec<Arrival>> = Mutex::new(Vec::new());
+        let failed: Mutex<Vec<u64>> = Mutex::new(Vec::new());
+        let timing_sums: Mutex<(f64, f64, f64)> = Mutex::new((0.0, 0.0, 0.0));
+        let bytes = std::sync::atomic::AtomicU64::new(0);
+        // Set when the quorum-th upload completes; readers clamp their
+        // per-frame deadline to it, so stragglers fail within one read
+        // timeout of the cutoff instead of holding the round to max_wait.
+        let cutoff: Mutex<Option<Instant>> = Mutex::new(None);
+        let params = &*self.shared.params;
+
+        std::thread::scope(|s| {
+            for &(client, expect_alpha) in expected {
+                let Some(arc) = self.session(client) else {
+                    failed.lock().unwrap().push(client);
+                    continue;
+                };
+                let completed = &completed;
+                let failed = &failed;
+                let timing_sums = &timing_sums;
+                let bytes = &bytes;
+                let cutoff = &cutoff;
+                let hub = &*self;
+                let cfg = cfg.clone();
+                s.spawn(move || {
+                    let mut guard = arc.lock().unwrap();
+                    let sess = &mut *guard;
+                    let mut seen: Option<u64> = None;
+                    let mut received = 0u64;
+                    let eff_deadline = || match *cutoff.lock().unwrap() {
+                        Some(c) => c.min(deadline),
+                        None => deadline,
+                    };
+                    let result = sess
+                        .stream
+                        .set_write_timeout(Some(cfg.io_timeout))
+                        .map_err(anyhow::Error::from)
+                        .and_then(|_| {
+                            read_upload(
+                                &mut sess.reader,
+                                &sess.stream,
+                                &sess.stream,
+                                params,
+                                shape,
+                                cfg.round_id,
+                                cfg.io_timeout,
+                                &eff_deadline,
+                                Some(client),
+                                expect_alpha,
+                                &mut seen,
+                                &mut received,
+                                &mut sess.read_buf,
+                            )
+                        });
+                    bytes.fetch_add(received, Ordering::Relaxed);
+                    match result {
+                        Ok(uf) => {
+                            let mut done = completed.lock().unwrap();
+                            // stamp inside the lock → stamps are monotone
+                            let t = start.elapsed().as_secs_f64();
+                            done.push(Arrival {
+                                client: uf.client,
+                                alpha: uf.alpha,
+                                arrival_secs: t,
+                                update: Arc::new(uf.update),
+                            });
+                            let n_done = done.len();
+                            drop(done);
+                            {
+                                let mut ts = timing_sums.lock().unwrap();
+                                ts.0 += uf.train_secs;
+                                ts.1 += uf.encrypt_secs;
+                                ts.2 += uf.loss as f64;
+                            }
+                            if let Some(q) = cfg.quorum {
+                                if n_done >= q.max(1) {
+                                    let mut cut = cutoff.lock().unwrap();
+                                    if cut.is_none() {
+                                        *cut = Some(Instant::now() + cfg.straggler_timeout);
+                                    }
+                                }
+                            }
+                        }
+                        Err(e) => {
+                            crate::log_debug!(
+                                "session",
+                                "round {} upload from client {client} failed: {e}",
+                                cfg.round_id
+                            );
+                            failed.lock().unwrap().push(client);
+                            drop(guard);
+                            // desynchronized socket (partial frames may be
+                            // in flight): kill *this* session and free the
+                            // slot — identity-checked so a client that
+                            // already rejoined is not evicted
+                            hub.drop_session_if(client, &arc);
+                        }
+                    }
+                });
+            }
+        });
+
+        let mut arrivals = completed.into_inner().unwrap();
+        arrivals.sort_by(|a, b| {
+            a.arrival_secs
+                .total_cmp(&b.arrival_secs)
+                .then(a.client.cmp(&b.client))
+        });
+        let (train_secs, encrypt_secs, loss_sum) = timing_sums.into_inner().unwrap();
+        IntakeOutcome {
+            arrivals,
+            failed: failed.into_inner().unwrap(),
+            bytes_received: bytes.load(Ordering::Relaxed),
+            elapsed_secs: start.elapsed().as_secs_f64(),
+            train_secs,
+            encrypt_secs,
+            loss_sum,
+        }
+    }
+
+    /// Stop accepting, close every session, and join the accept thread.
+    pub fn shutdown(&mut self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        let sessions: Vec<SharedSession> = {
+            let mut map = self.shared.sessions.lock().unwrap();
+            map.drain().map(|(_, s)| s).collect()
+        };
+        for s in sessions {
+            if let Ok(sess) = s.lock() {
+                sess.stream.shutdown(std::net::Shutdown::Both).ok();
+            }
+        }
+        if let Some(h) = self.accept.take() {
+            h.join().ok();
+        }
+    }
+}
+
+impl Drop for SessionHub {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Bound on concurrent half-open handshakes; connections beyond it are shed
+/// (a legitimate client's connect-retry loop will come back).
+const MAX_HANDSHAKES: usize = 32;
+
+/// Accept loop: serve HELLO handshakes for the whole task. A HELLO with a
+/// known client id *replaces* that client's session (rejoin); an unknown id
+/// registers a new slot, subject to the registry bound. Each handshake runs
+/// on its own (bounded, detached) thread so a connected-but-silent peer
+/// cannot stall other joins or mid-task rejoins behind its read timeout.
+fn accept_loop(shared: Arc<HubShared>) {
+    while !shared.stop.load(Ordering::Relaxed) {
+        match shared.listener.accept() {
+            Ok((stream, _peer)) => {
+                if shared.handshakes.load(Ordering::Relaxed) >= MAX_HANDSHAKES {
+                    drop(stream); // probe burst: shed load, clients retry
+                    continue;
+                }
+                shared.handshakes.fetch_add(1, Ordering::Relaxed);
+                let sh = shared.clone();
+                std::thread::spawn(move || {
+                    if let Err(e) = handshake(&sh, stream) {
+                        crate::log_debug!("session", "handshake failed: {e}");
+                    }
+                    sh.handshakes.fetch_sub(1, Ordering::Relaxed);
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::ConnectionAborted
+                        | std::io::ErrorKind::ConnectionReset
+                        | std::io::ErrorKind::Interrupted
+                ) => {}
+            Err(_) => {
+                // unrecoverable listener error: stop accepting; live
+                // sessions keep serving and the coordinator's wait/collect
+                // deadlines bound the damage
+                break;
+            }
+        }
+    }
+}
+
+fn handshake(shared: &HubShared, stream: TcpStream) -> anyhow::Result<()> {
+    stream.set_nonblocking(false)?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(shared.io_timeout))?;
+    stream.set_write_timeout(Some(shared.io_timeout))?;
+    // The session's persistent BufReader must read the HELLO: a throwaway
+    // reader could buffer (and then discard) bytes the client pipelines
+    // right behind its handshake.
+    let mut sess = PeerSession {
+        client: UNIDENTIFIED_CLIENT,
+        reader: BufReader::new(stream.try_clone()?),
+        stream,
+        read_buf: Vec::new(),
+    };
+    let (kind, _) = read_frame_into(
+        &mut sess.reader,
+        CONTROL_ROUND,
+        WELCOME_PAYLOAD_BYTES.max(super::frame::HELLO_PAYLOAD_BYTES),
+        &mut sess.read_buf,
+    )?;
+    anyhow::ensure!(kind == FrameKind::Hello, "expected HELLO, got {kind:?}");
+    let client = decode_hello(&sess.read_buf)?;
+    anyhow::ensure!(client != UNIDENTIFIED_CLIENT, "client id {client} is reserved");
+    sess.client = client;
+    // Publish-then-welcome, with the session mutex held across both: the
+    // registry entry must exist before the client sees WELCOME (so its
+    // immediate upload lands in the slot), but a coordinator broadcast
+    // that spots the fresh entry must not write MASK/DOWN_BEGIN before —
+    // or interleaved with — the WELCOME frame. Holding the mutex while
+    // writing WELCOME makes any concurrent `push_to` queue behind it.
+    let arc = Arc::new(Mutex::new(sess));
+    let guard = arc.lock().unwrap();
+    let replaced = {
+        let mut map = shared.sessions.lock().unwrap();
+        anyhow::ensure!(
+            map.contains_key(&client) || map.len() < shared.max_sessions,
+            "session registry full ({} slots)",
+            shared.max_sessions
+        );
+        map.insert(client, arc.clone())
+    };
+    // rejoin: the replaced (dead) session's socket is shut down, outside
+    // the map lock so a reader still draining it cannot stall accepts
+    if let Some(old) = replaced {
+        if let Ok(old) = old.try_lock() {
+            old.stream.shutdown(std::net::Shutdown::Both).ok();
+        }
+    }
+    let next = shared.next_round.load(Ordering::Relaxed);
+    let mut w = &guard.stream;
+    write_frame(
+        &mut w,
+        CONTROL_ROUND,
+        FrameKind::Welcome,
+        0,
+        &encode_welcome(next),
+    )?;
+    drop(guard);
+    Ok(())
+}
+
+/// Write one round's downlink frames to a session (preamble, the
+/// pre-encoded shared aggregate payloads when carried, DOWN_END); returns
+/// the bytes written.
+fn push_round(
+    sess: &mut PeerSession,
+    round: u64,
+    down: &DownBegin,
+    payloads: Option<(&[Vec<u8>], &[Vec<u8>])>,
+) -> std::io::Result<u64> {
+    // buffered writer: frame headers/trailers coalesce with their payloads
+    // instead of going out as separate NODELAY'd segments
+    let mut w = BufWriter::with_capacity(64 * 1024, &sess.stream);
+    let mut sent = write_frame(&mut w, round, FrameKind::DownBegin, 0, &encode_down_begin(down))?;
+    if let Some((cts, plains)) = payloads {
+        for (seq, p) in cts.iter().enumerate() {
+            sent += write_frame(&mut w, round, FrameKind::CtChunk, seq as u32, p)?;
+        }
+        for (seq, p) in plains.iter().enumerate() {
+            sent += write_frame(&mut w, round, FrameKind::Plain, seq as u32, p)?;
+        }
+    }
+    sent += write_frame(&mut w, round, FrameKind::DownEnd, 0, &[])?;
+    w.flush()?;
+    Ok(sent)
+}
+
+/// Session-level knobs for the client side.
+#[derive(Debug, Clone)]
+pub struct SessionOpts {
+    /// Per-frame socket timeout once a message has started flowing.
+    pub io_timeout: Duration,
+    /// How long to wait for the *next* downlink (covers the server's
+    /// aggregation + other clients' training between rounds).
+    pub round_wait: Duration,
+    /// Keep retrying the initial connect for this long (the serve process
+    /// may still be binding when a join process starts).
+    pub connect_retry: Duration,
+    /// Socket write-buffer capacity for uploads.
+    pub write_buffer: usize,
+}
+
+impl Default for SessionOpts {
+    fn default() -> Self {
+        SessionOpts {
+            io_timeout: Duration::from_secs(10),
+            round_wait: Duration::from_secs(300),
+            connect_retry: Duration::from_secs(10),
+            write_buffer: 256 * 1024,
+        }
+    }
+}
+
+/// One round's received downlink.
+#[derive(Debug, Clone)]
+pub struct RoundDownlink {
+    pub down: DownBegin,
+    /// The previous round's partially-encrypted aggregate (when
+    /// `down.has_agg`).
+    pub agg: Option<EncryptedUpdate>,
+    /// Frame bytes received for this downlink.
+    pub bytes: u64,
+}
+
+/// The client side of a persistent session (drives `join` processes and the
+/// in-process client threads of `--transport tcp`).
+pub struct ClientSession {
+    sink: FrameSink,
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+    read_buf: Vec<u8>,
+    params: Arc<CkksParams>,
+    opts: SessionOpts,
+    pub client: u64,
+    pub bytes_down: u64,
+}
+
+impl ClientSession {
+    /// Dial (with retry), claim the slot with HELLO, and wait for WELCOME.
+    /// Returns the session and the server's advertised next round.
+    pub fn connect(
+        addr: &str,
+        client: u64,
+        params: Arc<CkksParams>,
+        opts: SessionOpts,
+    ) -> anyhow::Result<(Self, u64)> {
+        let deadline = Instant::now() + opts.connect_retry;
+        let stream = loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => break s,
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        anyhow::bail!("cannot connect session to {addr}: {e}");
+                    }
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        };
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(opts.io_timeout))?;
+        // writes use the round-scale bound: an unprompted upload (the
+        // client pushes as soon as it is ready) legitimately blocks on a
+        // full socket buffer until the server reaches its collect phase —
+        // e.g. while other clients are still joining or receiving their
+        // downlinks. A dead server closes the socket, which fails the
+        // write immediately regardless of the timeout.
+        stream.set_write_timeout(Some(opts.round_wait))?;
+        let reader = BufReader::new(stream.try_clone()?);
+        let sink_stream = stream.try_clone()?;
+        let mut sess = ClientSession {
+            sink: FrameSink::over(sink_stream, CONTROL_ROUND, opts.write_buffer),
+            stream,
+            reader,
+            read_buf: Vec::new(),
+            params,
+            opts,
+            client,
+            bytes_down: 0,
+        };
+        sess.sink.send(FrameKind::Hello, 0, &encode_hello(client))?;
+        sess.sink.flush()?;
+        let (kind, _) = sess.read_downlink_frame(CONTROL_ROUND, sess.opts.io_timeout)?;
+        anyhow::ensure!(kind == FrameKind::Welcome, "expected WELCOME, got {kind:?}");
+        let next = decode_welcome(&sess.read_buf)?;
+        Ok((sess, next))
+    }
+
+    /// Total frame bytes this session has put on the wire.
+    pub fn bytes_up(&self) -> u64 {
+        self.sink.total_bytes()
+    }
+
+    fn read_downlink_frame(
+        &mut self,
+        round: u64,
+        timeout: Duration,
+    ) -> anyhow::Result<(FrameKind, u32)> {
+        let cap = frame_payload_cap(&self.params);
+        self.read_downlink_frame_with_cap(round, timeout, cap)
+    }
+
+    fn read_downlink_frame_with_cap(
+        &mut self,
+        round: u64,
+        timeout: Duration,
+        cap: usize,
+    ) -> anyhow::Result<(FrameKind, u32)> {
+        self.stream.set_read_timeout(Some(timeout))?;
+        let (kind, seq) = read_frame_into(&mut self.reader, round, cap, &mut self.read_buf)?;
+        self.bytes_down += (super::frame::FRAME_HEADER_BYTES
+            + self.read_buf.len()
+            + super::frame::FRAME_TRAILER_BYTES) as u64;
+        Ok((kind, seq))
+    }
+
+    /// Receive the mask broadcast ([`MASK_ROUND`]) for a `total`-parameter
+    /// model (sizes the one frame whose payload scales with the mask's run
+    /// count rather than with the crypto context).
+    pub fn recv_mask(&mut self, total: usize) -> anyhow::Result<EncryptionMask> {
+        let cap = frame_payload_cap(&self.params).max(mask_payload_cap(total));
+        let (kind, _) =
+            self.read_downlink_frame_with_cap(MASK_ROUND, self.opts.round_wait, cap)?;
+        anyhow::ensure!(kind == FrameKind::Mask, "expected MASK, got {kind:?}");
+        EncryptionMask::from_bytes(&self.read_buf)
+    }
+
+    /// Receive round `round`'s downlink: DOWN_BEGIN, the optional carried
+    /// aggregate (validated against `expect_shape` when given), DOWN_END.
+    pub fn recv_round(
+        &mut self,
+        round: u64,
+        expect_shape: Option<UpdateShape>,
+    ) -> anyhow::Result<RoundDownlink> {
+        let bytes0 = self.bytes_down;
+        let (kind, _) = self.read_downlink_frame(round, self.opts.round_wait)?;
+        anyhow::ensure!(kind == FrameKind::DownBegin, "expected DOWN_BEGIN, got {kind:?}");
+        let down = decode_down_begin(&self.read_buf)?;
+        if let (true, Some(shape)) = (down.has_agg, expect_shape) {
+            anyhow::ensure!(
+                down.n_cts == shape.n_cts
+                    && down.n_plain == shape.n_plain
+                    && down.total == shape.total,
+                "downlink shape ({}, {}, {}) does not match the round shape \
+                 ({}, {}, {})",
+                down.n_cts,
+                down.n_plain,
+                down.total,
+                shape.n_cts,
+                shape.n_plain,
+                shape.total
+            );
+        }
+        let mut agg = None;
+        if down.has_agg {
+            // when no shape is pinned, still bound what a declared preamble
+            // can make this side allocate up front
+            anyhow::ensure!(
+                down.n_cts <= 1 << 20 && down.n_plain <= down.total && down.total <= 1 << 31,
+                "implausible downlink shape ({}, {}, {})",
+                down.n_cts,
+                down.n_plain,
+                down.total
+            );
+            let mut cts: Vec<Option<Ciphertext>> = (0..down.n_cts).map(|_| None).collect();
+            let mut plain: Vec<f32> = Vec::with_capacity(down.n_plain);
+            let mut next_plain_seq = 0u32;
+            loop {
+                let (kind, seq) = self.read_downlink_frame(round, self.opts.io_timeout)?;
+                match kind {
+                    FrameKind::CtChunk => {
+                        let seq = seq as usize;
+                        anyhow::ensure!(seq < down.n_cts, "downlink chunk {seq} out of range");
+                        anyhow::ensure!(cts[seq].is_none(), "duplicate downlink chunk {seq}");
+                        let shard = ciphertext_shard_from_bytes(&self.read_buf, &self.params)?;
+                        anyhow::ensure!(
+                            shard.lo == 0 && shard.hi == self.params.num_limbs(),
+                            "downlink chunk must carry the full limb range"
+                        );
+                        let mut ct = Ciphertext::zero(&self.params);
+                        shard.scatter_into(&mut ct);
+                        cts[seq] = Some(ct);
+                    }
+                    FrameKind::Plain => {
+                        anyhow::ensure!(
+                            seq == next_plain_seq,
+                            "downlink plaintext chunk {seq} out of order"
+                        );
+                        next_plain_seq += 1;
+                        anyhow::ensure!(
+                            self.read_buf.len() % 4 == 0,
+                            "downlink plaintext payload not f32-aligned"
+                        );
+                        let k = self.read_buf.len() / 4;
+                        anyhow::ensure!(
+                            plain.len() + k <= down.n_plain,
+                            "downlink plaintext overflows the declared {} values",
+                            down.n_plain
+                        );
+                        for c in self.read_buf.chunks_exact(4) {
+                            plain.push(f32::from_le_bytes(c.try_into().unwrap()));
+                        }
+                    }
+                    FrameKind::DownEnd => {
+                        anyhow::ensure!(
+                            cts.iter().all(|c| c.is_some()),
+                            "downlink ended with missing ciphertext chunks"
+                        );
+                        anyhow::ensure!(
+                            plain.len() == down.n_plain,
+                            "downlink ended with {} of {} plaintext values",
+                            plain.len(),
+                            down.n_plain
+                        );
+                        break;
+                    }
+                    other => anyhow::bail!("unexpected {other:?} frame in a downlink"),
+                }
+            }
+            agg = Some(EncryptedUpdate {
+                cts: cts.into_iter().map(|c| c.unwrap()).collect(),
+                plain,
+                total: down.total,
+            });
+        } else {
+            let (kind, _) = self.read_downlink_frame(round, self.opts.io_timeout)?;
+            anyhow::ensure!(kind == FrameKind::DownEnd, "expected DOWN_END, got {kind:?}");
+        }
+        Ok(RoundDownlink {
+            down,
+            agg,
+            bytes: self.bytes_down - bytes0,
+        })
+    }
+
+    /// Upload one (already-encrypted) update over the session at wire round
+    /// `round`, reporting measured local metrics in the END frame, and wait
+    /// for the ACK.
+    pub fn upload(
+        &mut self,
+        round: u64,
+        alpha: f64,
+        update: &EncryptedUpdate,
+        metrics: Option<(f64, f64, f32)>,
+    ) -> anyhow::Result<UploadReceipt> {
+        self.sink.set_round(round);
+        self.sink
+            .send_begin(self.client, alpha, update.cts.len(), update.plain.len(), update.total)?;
+        for (seq, ct) in update.cts.iter().enumerate() {
+            self.sink.send_ct(seq, ct)?;
+        }
+        self.sink.send_plain(&update.plain)?;
+        // the ACK arrives once the server has reassembled the upload; give
+        // it the round-scale wait, not the per-frame one
+        self.stream.set_read_timeout(Some(self.opts.round_wait))?;
+        self.sink
+            .end_and_ack(&mut self.reader, &mut self.read_buf, metrics)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::prng::ChaChaRng;
+    use crate::he_agg::SelectiveCodec;
+
+    fn ctx() -> crate::ckks::CkksContext {
+        crate::ckks::CkksContext::new(256, 3, 30).unwrap()
+    }
+
+    #[test]
+    fn handshake_welcome_and_rejoin_replaces_slot() {
+        let c = ctx();
+        let mut hub = SessionHub::bind("127.0.0.1:0", c.params.clone(), 8).unwrap();
+        let addr = hub.local_addr().unwrap().to_string();
+        let opts = SessionOpts {
+            connect_retry: Duration::from_secs(5),
+            ..SessionOpts::default()
+        };
+        let (s1, next) = ClientSession::connect(&addr, 3, c.params.clone(), opts.clone()).unwrap();
+        assert_eq!(next, MASK_ROUND);
+        hub.wait_for_clients(1, Duration::from_secs(5)).unwrap();
+        assert_eq!(hub.connected(), vec![3]);
+        // rejoin with the same id replaces the slot, not a second entry
+        hub.set_next_round(2);
+        drop(s1);
+        let (_s2, next) = ClientSession::connect(&addr, 3, c.params.clone(), opts).unwrap();
+        assert_eq!(next, 2);
+        hub.wait_for_clients(1, Duration::from_secs(5)).unwrap();
+        assert_eq!(hub.connected(), vec![3]);
+        hub.shutdown();
+    }
+
+    #[test]
+    fn registry_bound_rejects_overflow_but_allows_rejoin() {
+        let c = ctx();
+        let mut hub = SessionHub::bind("127.0.0.1:0", c.params.clone(), 2).unwrap();
+        let addr = hub.local_addr().unwrap().to_string();
+        let opts = SessionOpts {
+            connect_retry: Duration::from_secs(5),
+            io_timeout: Duration::from_secs(2),
+            ..SessionOpts::default()
+        };
+        let (_a, _) = ClientSession::connect(&addr, 0, c.params.clone(), opts.clone()).unwrap();
+        let (_b, _) = ClientSession::connect(&addr, 1, c.params.clone(), opts.clone()).unwrap();
+        hub.wait_for_clients(2, Duration::from_secs(5)).unwrap();
+        // a third distinct id is refused (no WELCOME, connection dies)...
+        assert!(ClientSession::connect(&addr, 2, c.params.clone(), opts.clone()).is_err());
+        // ...but a rejoin of a registered id still works
+        let (_a2, _) = ClientSession::connect(&addr, 0, c.params.clone(), opts).unwrap();
+        hub.wait_for_clients(2, Duration::from_secs(5)).unwrap();
+        assert_eq!(hub.connected(), vec![0, 1]);
+        hub.shutdown();
+    }
+
+    #[test]
+    fn mask_and_round_downlink_reach_the_client() {
+        let c = ctx();
+        let codec = SelectiveCodec::new(c.clone());
+        let mut rng = ChaChaRng::from_seed(21, 0);
+        let (pk, _sk) = codec.ctx.keygen(&mut rng);
+        let total = 600usize;
+        let sens: Vec<f32> = (0..total).map(|i| ((i * 13) % 97) as f32).collect();
+        let mask = EncryptionMask::top_p(&sens, 0.3);
+        let model: Vec<f32> = (0..total).map(|i| (i as f32 * 0.01).sin()).collect();
+        let agg = codec.encrypt_update(&model, &mask, &pk, &mut rng);
+        let shape = UpdateShape::for_round(&codec.ctx, &mask);
+
+        let mut hub = SessionHub::bind("127.0.0.1:0", c.params.clone(), 4).unwrap();
+        let addr = hub.local_addr().unwrap().to_string();
+        let mask_bytes = mask.to_bytes();
+        let client_thread = {
+            let params = c.params.clone();
+            let mask_bytes_len = mask_bytes.len();
+            std::thread::spawn(move || {
+                let (mut sess, _) = ClientSession::connect(
+                    &addr,
+                    7,
+                    params,
+                    SessionOpts {
+                        connect_retry: Duration::from_secs(5),
+                        round_wait: Duration::from_secs(10),
+                        ..SessionOpts::default()
+                    },
+                )
+                .unwrap();
+                let got_mask = sess.recv_mask(total).unwrap();
+                assert_eq!(got_mask.to_bytes().len(), mask_bytes_len);
+                // round 0: no aggregate
+                let r0 = sess.recv_round(0, Some(shape)).unwrap();
+                assert!(r0.down.participate && !r0.down.has_agg && !r0.down.fin);
+                assert!(r0.agg.is_none());
+                // round 1: aggregate + fin
+                let r1 = sess.recv_round(1, Some(shape)).unwrap();
+                assert!(r1.down.fin && r1.down.has_agg);
+                assert!((r1.down.alpha_mass - 0.75).abs() < 1e-12);
+                assert!(r1.bytes > 0);
+                (got_mask, r1.agg.unwrap())
+            })
+        };
+        hub.wait_for_clients(1, Duration::from_secs(5)).unwrap();
+        let out = hub.broadcast_mask(&[7], &mask_bytes);
+        assert!(out.failed.is_empty());
+        assert!(out.bytes_sent > mask_bytes.len() as u64);
+        let d0 = DownBegin {
+            alpha: 1.0,
+            alpha_mass: 0.0,
+            n_cts: 0,
+            n_plain: 0,
+            total: 0,
+            participate: true,
+            has_agg: false,
+            fin: false,
+        };
+        let out = hub.broadcast_round(0, &[(7, d0)], None);
+        assert!(out.failed.is_empty());
+        let d1 = DownBegin {
+            alpha: 0.0,
+            alpha_mass: 0.75,
+            n_cts: agg.cts.len(),
+            n_plain: agg.plain.len(),
+            total: agg.total,
+            participate: false,
+            has_agg: true,
+            fin: true,
+        };
+        let out = hub.broadcast_round(1, &[(7, d1)], Some(&agg));
+        assert!(out.failed.is_empty());
+        assert!(out.bytes_sent > 0);
+
+        let (got_mask, got_agg) = client_thread.join().unwrap();
+        // the downlink aggregate arrives bitwise-identical
+        assert_eq!(got_agg.plain, agg.plain);
+        assert_eq!(got_agg.total, agg.total);
+        for (a, b) in got_agg.cts.iter().zip(agg.cts.iter()) {
+            assert_eq!(a.c0, b.c0);
+            assert_eq!(a.c1, b.c1);
+        }
+        assert_eq!(got_mask.encrypted_count(), mask.encrypted_count());
+        hub.shutdown();
+    }
+
+    #[test]
+    fn session_uploads_feed_collect_round() {
+        let c = ctx();
+        let codec = SelectiveCodec::new(c.clone());
+        let mut rng = ChaChaRng::from_seed(33, 0);
+        let (pk, _sk) = codec.ctx.keygen(&mut rng);
+        let total = 500usize;
+        let mask = EncryptionMask::full(total);
+        let shape = UpdateShape::for_round(&codec.ctx, &mask);
+        let mut hub = SessionHub::bind("127.0.0.1:0", c.params.clone(), 8).unwrap();
+        let addr = hub.local_addr().unwrap().to_string();
+        let mut threads = Vec::new();
+        for id in 0..3u64 {
+            let addr = addr.clone();
+            let params = c.params.clone();
+            let codec = SelectiveCodec::new(c.clone());
+            let pk = pk.clone();
+            let mask = mask.clone();
+            threads.push(std::thread::spawn(move || {
+                let (mut sess, _) = ClientSession::connect(
+                    &addr,
+                    id,
+                    params,
+                    SessionOpts {
+                        connect_retry: Duration::from_secs(5),
+                        ..SessionOpts::default()
+                    },
+                )
+                .unwrap();
+                let model: Vec<f32> =
+                    (0..total).map(|i| ((i as u64 + id * 31) as f32 * 0.003).cos()).collect();
+                let mut rng = ChaChaRng::from_seed(100 + id, 0);
+                let upd = codec.encrypt_update(&model, &mask, &pk, &mut rng);
+                let receipt = sess
+                    .upload(4, 1.0 / 3.0, &upd, Some((0.5, 0.25, 2.0)))
+                    .unwrap();
+                assert!(receipt.acked);
+                assert_eq!(receipt.ct_frames, upd.cts.len());
+            }));
+        }
+        hub.wait_for_clients(3, Duration::from_secs(5)).unwrap();
+        let outcome = hub.collect_round(
+            &[(0, Some(1.0 / 3.0)), (1, Some(1.0 / 3.0)), (2, None)],
+            shape,
+            &IntakeConfig {
+                round_id: 4,
+                expected_uploads: 3,
+                quorum: None,
+                straggler_timeout: Duration::from_secs(5),
+                max_wait: Duration::from_secs(20),
+                io_timeout: Duration::from_secs(5),
+            },
+        );
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(outcome.arrivals.len(), 3);
+        assert!(outcome.failed.is_empty());
+        assert!(outcome.bytes_received > 0);
+        // client-reported metrics are summed
+        assert!((outcome.train_secs - 1.5).abs() < 1e-9);
+        assert!((outcome.encrypt_secs - 0.75).abs() < 1e-9);
+        assert!((outcome.loss_sum - 6.0).abs() < 1e-9);
+        // the sessions survive the round (persistence across rounds)
+        assert_eq!(hub.connected().len(), 3);
+        hub.shutdown();
+    }
+}

@@ -11,6 +11,25 @@ pub mod logging;
 pub mod stats;
 pub mod table;
 
+/// Write a file atomically: temp sibling + rename, so another process that
+/// polls for the path's *existence* (the serve/join task-key and addr-file
+/// hand-off) can never observe a created-but-partially-written file.
+pub fn write_file_atomic(path: &std::path::Path, bytes: &[u8]) -> std::io::Result<()> {
+    let name = path
+        .file_name()
+        .and_then(|s| s.to_str())
+        .unwrap_or("file");
+    let tmp = path.with_file_name(format!(".{name}.tmp-{}", std::process::id()));
+    std::fs::write(&tmp, bytes)?;
+    match std::fs::rename(&tmp, path) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            std::fs::remove_file(&tmp).ok();
+            Err(e)
+        }
+    }
+}
+
 /// Format a byte count as a human-readable string (KiB/MiB/GiB), matching the
 /// unit style used in the paper's tables.
 pub fn human_bytes(bytes: u64) -> String {

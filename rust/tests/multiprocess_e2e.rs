@@ -1,0 +1,139 @@
+//! The ISSUE-5 acceptance gate at OS-process scale: one `serve` process and
+//! three independent `join` processes complete a full multi-round training
+//! run over loopback TCP — keys distributed out-of-band via the task-key
+//! file — and every process's final model is **bitwise identical** to the
+//! in-process `--transport sim` run with the same seed.
+//!
+//! Runs artifact-free (synthetic model); `CARGO_BIN_EXE_fedml-he` is built
+//! by cargo for integration tests.
+
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_fedml-he")
+}
+
+fn wait_with_timeout(child: &mut Child, secs: u64, name: &str) -> std::process::ExitStatus {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    loop {
+        match child.try_wait().unwrap() {
+            Some(status) => return status,
+            None => {
+                if Instant::now() >= deadline {
+                    child.kill().ok();
+                    let _ = child.wait();
+                    panic!("{name} did not exit within {secs}s");
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+#[test]
+fn serve_plus_three_join_processes_match_sim_bitwise() {
+    let dir = std::env::temp_dir().join(format!("fedml_he_mp_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let sim_model = dir.join("sim.bin");
+    let serve_model = dir.join("serve.bin");
+    let task_key = dir.join("task.key");
+    let addr_file = dir.join("addr");
+    let common = [
+        "--model",
+        "synthetic",
+        "--synthetic-params",
+        "2048",
+        "--clients",
+        "3",
+        "--rounds",
+        "3",
+        "--local-steps",
+        "2",
+        "--seed",
+        "29",
+        "--eval-every",
+        "0",
+        "--engine",
+        "pipeline",
+        "--shards",
+        "2",
+    ];
+
+    // in-process simulator reference
+    let status = Command::new(bin())
+        .arg("run")
+        .args(common)
+        .args(["--transport", "sim", "--out-model", sim_model.to_str().unwrap()])
+        .stdout(Stdio::null())
+        .status()
+        .unwrap();
+    assert!(status.success(), "sim reference run failed");
+
+    // one serve + three join OS processes over loopback
+    let mut serve = Command::new(bin())
+        .arg("serve")
+        .args(common)
+        .args([
+            "--listen",
+            "127.0.0.1:0",
+            "--task-key",
+            task_key.to_str().unwrap(),
+            "--addr-file",
+            addr_file.to_str().unwrap(),
+            "--join-wait",
+            "60",
+            "--out-model",
+            serve_model.to_str().unwrap(),
+        ])
+        .stdout(Stdio::null())
+        .spawn()
+        .unwrap();
+    let mut joins: Vec<(std::path::PathBuf, Child)> = Vec::new();
+    for id in 0..3 {
+        let out = dir.join(format!("join{id}.bin"));
+        let child = Command::new(bin())
+            .arg("join")
+            .args([
+                "--task-key",
+                task_key.to_str().unwrap(),
+                "--addr-file",
+                addr_file.to_str().unwrap(),
+                "--client-id",
+                &id.to_string(),
+                "--key-wait",
+                "60",
+                "--connect-retry",
+                "60",
+                "--out-model",
+                out.to_str().unwrap(),
+            ])
+            .stdout(Stdio::null())
+            .spawn()
+            .unwrap();
+        joins.push((out, child));
+    }
+    let status = wait_with_timeout(&mut serve, 120, "serve");
+    assert!(status.success(), "serve process failed");
+    for (i, (_, child)) in joins.iter_mut().enumerate() {
+        let status = wait_with_timeout(child, 60, "join");
+        assert!(status.success(), "join {i} failed");
+    }
+
+    // bitwise identity: sim == serve == every join
+    let sim_bytes = std::fs::read(&sim_model).unwrap();
+    assert_eq!(sim_bytes.len(), 2048 * 4);
+    let serve_bytes = std::fs::read(&serve_model).unwrap();
+    assert_eq!(
+        sim_bytes, serve_bytes,
+        "serve final model is not bitwise-identical to the sim run"
+    );
+    for (path, _) in &joins {
+        assert_eq!(
+            std::fs::read(path).unwrap(),
+            sim_bytes,
+            "a join process's final model diverged"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,296 @@
+//! Acceptance gates for the round-phase state machine and the persistent
+//! duplex session transport (DESIGN.md §9). Everything here runs on the
+//! artifact-free synthetic workload, so these are tier-1 tests on any
+//! machine:
+//!
+//! * a full multi-round `--transport tcp` run (client session threads over
+//!   loopback: real mask/global downlink frames, client-side decryption)
+//!   produces a final model **bitwise identical** to the same-seed
+//!   `--transport sim` run;
+//! * sim and tcp reports label their timing sources distinctly, and tcp
+//!   rounds report measured (non-simulated) downlink bytes;
+//! * a client that disconnects between rounds rejoins its persistent slot
+//!   and the next round completes with it.
+
+use fedml_he::coordinator::{FlConfig, FlServer, Selection, Transport};
+use fedml_he::crypto::prng::ChaChaRng;
+use fedml_he::he_agg::{native, EncryptionMask, SelectiveCodec};
+use fedml_he::transport::{
+    ClientSession, DownBegin, IntakeConfig, SessionHub, SessionOpts, UpdateShape,
+};
+use std::sync::mpsc;
+use std::time::Duration;
+
+/// Deterministic per-(client, round) model for the hub-level tests — a
+/// plain fn so spawned client threads can call it without borrows.
+fn client_model(total: usize, client: u64, round: u64) -> Vec<f32> {
+    (0..total)
+        .map(|i| ((i as u64 + 131 * client + 7 * round) as f32 * 0.003).sin())
+        .collect()
+}
+
+fn synthetic_cfg() -> FlConfig {
+    FlConfig {
+        model: "synthetic".into(),
+        synthetic_dim: 2048,
+        clients: 3,
+        rounds: 3,
+        local_steps: 2,
+        lr: 0.2,
+        ratio: 0.1,
+        selection: Selection::TopP,
+        dropout: 0.0,
+        eval_every: 3,
+        seed: 17,
+        engine: fedml_he::agg_engine::Engine::Pipeline,
+        shards: 2,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn synthetic_sim_run_trains_and_reports() {
+    let (report, global) = FlServer::standalone(synthetic_cfg()).unwrap().run().unwrap();
+    assert_eq!(report.rounds.len(), 3);
+    assert_eq!(global.len(), 2048);
+    assert!(global.iter().all(|v| v.is_finite()));
+    assert_eq!(report.timing_source, "simulated");
+    assert!(report.rounds.iter().all(|r| r.timing_source == "simulated"));
+    assert!((report.mask_ratio - 0.1).abs() < 0.01);
+    assert!(report.mask_bytes > 0 && report.mask_upload_bytes > 0);
+    assert!(!report.evals.is_empty());
+    // the synthetic objective is a contraction: losses trend down
+    let first = report.rounds.first().unwrap().train_loss;
+    let last = report.rounds.last().unwrap().train_loss;
+    assert!(last < first, "loss {first} -> {last}");
+    // the final aggregate is broadcast in the finale (sim accounting)
+    assert!(report.fin_downlink_bytes > 0);
+}
+
+#[test]
+fn tcp_run_bitwise_matches_sim_run_and_labels_timing() {
+    // The acceptance criterion of ISSUE 5, at thread scale: the same phase
+    // machine over persistent loopback sessions (mask + aggregate as real
+    // downlink frames, per-round uploads over one connection per client,
+    // client-side decryption) must produce a bitwise-identical final model
+    // to the in-process simulator for the same seed.
+    let sim_cfg = synthetic_cfg();
+    let mut tcp_cfg = synthetic_cfg();
+    tcp_cfg.transport = Transport::Tcp;
+    let (ra, ga) = FlServer::standalone(sim_cfg).unwrap().run().unwrap();
+    let (rb, gb) = FlServer::standalone(tcp_cfg).unwrap().run().unwrap();
+    assert_eq!(ga.len(), gb.len());
+    for (i, (a, b)) in ga.iter().zip(gb.iter()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "param {i}: {a} != {b}");
+    }
+    // regression (ISSUE 5 satellite): sim and tcp reports must label their
+    // timing sources distinctly — no more simulated broadcast charged to a
+    // tcp run
+    assert_eq!(ra.timing_source, "simulated");
+    assert_eq!(rb.timing_source, "measured");
+    assert!(rb.rounds.iter().all(|r| r.timing_source == "measured"));
+    // real downlink frames: measured bytes on the mask broadcast, on every
+    // aggregate-carrying round, and on the FIN downlink
+    assert!(rb.mask_downlink_bytes > 0);
+    assert_eq!(ra.mask_downlink_bytes, 0);
+    assert!(rb.rounds[1].download_bytes > 0);
+    assert!(rb.rounds[1].downlink_secs >= 0.0);
+    assert!(rb.fin_downlink_bytes > 0);
+    // uplink is real too
+    assert!(rb.rounds.iter().all(|r| r.upload_bytes > 0));
+    assert!(rb.rounds.iter().all(|r| r.stragglers_dropped == 0));
+    // client-reported metrics made it across the wire
+    assert!(rb.rounds.iter().all(|r| r.train_loss > 0.0));
+    // both runs evaluated the same pure synthetic objective
+    assert_eq!(ra.evals.len(), rb.evals.len());
+    for (a, b) in ra.evals.iter().zip(rb.evals.iter()) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+    }
+}
+
+#[test]
+fn tcp_run_with_dropout_completes() {
+    // Non-participating clients still receive every downlink (they need
+    // the next global) and the run completes — the HE dropout-robustness
+    // claim over the real transport.
+    let mut cfg = synthetic_cfg();
+    cfg.transport = Transport::Tcp;
+    cfg.clients = 4;
+    cfg.rounds = 4;
+    cfg.dropout = 0.4;
+    cfg.seed = 23;
+    cfg.eval_every = 0;
+    let (report, global) = FlServer::standalone(cfg).unwrap().run().unwrap();
+    assert_eq!(report.rounds.len(), 4);
+    assert!(global.iter().all(|v| v.is_finite()));
+    assert!(
+        report.rounds.iter().any(|r| r.participants < 4),
+        "dropout never struck in 4 rounds"
+    );
+    // a sim run with the same seed still agrees bitwise: dropout draws come
+    // from the same server rng stream in both transports
+    let mut sim = synthetic_cfg();
+    sim.clients = 4;
+    sim.rounds = 4;
+    sim.dropout = 0.4;
+    sim.seed = 23;
+    sim.eval_every = 0;
+    let (_, gs) = FlServer::standalone(sim).unwrap().run().unwrap();
+    for (a, b) in gs.iter().zip(global.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+#[test]
+fn client_disconnects_between_rounds_and_rejoins_its_slot() {
+    // Hub-level multi-round flow: client 1 completes round 0, loses its
+    // connection, reconnects with the same id (rejoin), and round 1
+    // completes with both clients — bitwise-identical aggregates to the
+    // in-process oracle throughout.
+    let ctx = fedml_he::ckks::CkksContext::new(256, 3, 30).unwrap();
+    let codec = SelectiveCodec::new(ctx.clone());
+    let mut rng = ChaChaRng::from_seed(5, 0);
+    let (pk, _sk) = codec.ctx.keygen(&mut rng);
+    let total = 700usize;
+    let mask = EncryptionMask::full(total);
+    let shape = UpdateShape::for_round(&codec.ctx, &mask);
+    let mut hub = SessionHub::bind("127.0.0.1:0", ctx.params.clone(), 8).unwrap();
+    let addr = hub.local_addr().unwrap().to_string();
+    let opts = SessionOpts {
+        connect_retry: Duration::from_secs(5),
+        round_wait: Duration::from_secs(20),
+        ..SessionOpts::default()
+    };
+    let icfg = |round: u64| IntakeConfig {
+        round_id: round,
+        expected_uploads: 2,
+        quorum: None,
+        straggler_timeout: Duration::from_secs(5),
+        max_wait: Duration::from_secs(20),
+        io_timeout: Duration::from_secs(5),
+    };
+    let encrypt = |client: u64, round: u64| {
+        let mut rng = ChaChaRng::from_seed(100 + client, round);
+        codec.encrypt_update(&client_model(total, client, round), &mask, &pk, &mut rng)
+    };
+
+    let (rejoined_tx, rejoined_rx) = mpsc::channel::<()>();
+    let mut threads = Vec::new();
+    for client in 0..2u64 {
+        let addr = addr.clone();
+        let params = ctx.params.clone();
+        let opts = opts.clone();
+        let codec = SelectiveCodec::new(ctx.clone());
+        let pk = pk.clone();
+        let mask = mask.clone();
+        let rejoined_tx = rejoined_tx.clone();
+        threads.push(std::thread::spawn(move || {
+            let (mut sess, _) =
+                ClientSession::connect(&addr, client, params.clone(), opts.clone()).unwrap();
+            // round 0
+            let dl = sess.recv_round(0, Some(shape)).unwrap();
+            assert!(dl.down.participate && !dl.down.has_agg);
+            let mut rng = ChaChaRng::from_seed(100 + client, 0);
+            let upd =
+                codec.encrypt_update(&client_model(total, client, 0), &mask, &pk, &mut rng);
+            sess.upload(0, 0.5, &upd, None).unwrap();
+            if client == 1 {
+                // lose the connection between rounds, then rejoin the slot
+                drop(sess);
+                let (s2, next) =
+                    ClientSession::connect(&addr, client, params, opts).unwrap();
+                assert_eq!(next, 1, "rejoin should resume at round 1");
+                sess = s2;
+                rejoined_tx.send(()).unwrap();
+            }
+            // round 1 carries round 0's aggregate
+            let dl = sess.recv_round(1, Some(shape)).unwrap();
+            assert!(dl.down.participate && dl.down.has_agg);
+            assert!(dl.agg.is_some());
+            let mut rng = ChaChaRng::from_seed(100 + client, 1);
+            let upd =
+                codec.encrypt_update(&client_model(total, client, 1), &mask, &pk, &mut rng);
+            sess.upload(1, 0.5, &upd, None).unwrap();
+            // fin
+            let dl = sess.recv_round(2, Some(shape)).unwrap();
+            assert!(dl.down.fin);
+        }));
+    }
+    drop(rejoined_tx);
+
+    hub.wait_for_clients(2, Duration::from_secs(10)).unwrap();
+    let plan = |alpha: f64| DownBegin {
+        alpha,
+        alpha_mass: 0.0,
+        n_cts: 0,
+        n_plain: 0,
+        total: 0,
+        participate: true,
+        has_agg: false,
+        fin: false,
+    };
+    // round 0: no aggregate yet
+    let out = hub.broadcast_round(0, &[(0, plan(0.5)), (1, plan(0.5))], None);
+    assert!(out.failed.is_empty());
+    hub.set_next_round(1);
+    let outcome = hub.collect_round(&[(0, Some(0.5)), (1, Some(0.5))], shape, &icfg(0));
+    assert_eq!(outcome.arrivals.len(), 2, "failed: {:?}", outcome.failed);
+    let oracle0 = native::aggregate(
+        &[encrypt(0, 0), encrypt(1, 0)],
+        &[0.5, 0.5],
+        &codec.ctx.params,
+    );
+    let mut arrivals = outcome.arrivals;
+    arrivals.sort_by_key(|a| a.client);
+    let agg0 = native::aggregate(
+        &[(*arrivals[0].update).clone(), (*arrivals[1].update).clone()],
+        &[0.5, 0.5],
+        &codec.ctx.params,
+    );
+    assert_eq!(agg0.plain, oracle0.plain);
+    for (a, b) in agg0.cts.iter().zip(oracle0.cts.iter()) {
+        assert_eq!(a.c0, b.c0);
+        assert_eq!(a.c1, b.c1);
+    }
+
+    // wait until client 1 has rejoined its slot before round 1's downlink
+    rejoined_rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("client 1 never rejoined");
+    let round1 = DownBegin {
+        alpha: 0.5,
+        alpha_mass: 1.0,
+        n_cts: agg0.cts.len(),
+        n_plain: agg0.plain.len(),
+        total: agg0.total,
+        participate: true,
+        has_agg: true,
+        fin: false,
+    };
+    let out = hub.broadcast_round(1, &[(0, round1), (1, round1)], Some(&agg0));
+    assert!(out.failed.is_empty(), "rejoined slot unusable: {:?}", out.failed);
+    let outcome = hub.collect_round(&[(0, Some(0.5)), (1, Some(0.5))], shape, &icfg(1));
+    assert_eq!(
+        outcome.arrivals.len(),
+        2,
+        "round 1 after rejoin failed: {:?}",
+        outcome.failed
+    );
+    // fin downlink so the client threads exit
+    let fin = DownBegin {
+        alpha: 0.0,
+        alpha_mass: 0.0,
+        n_cts: 0,
+        n_plain: 0,
+        total: 0,
+        participate: false,
+        has_agg: false,
+        fin: true,
+    };
+    let out = hub.broadcast_round(2, &[(0, fin), (1, fin)], None);
+    assert!(out.failed.is_empty());
+    for t in threads {
+        t.join().unwrap();
+    }
+    hub.shutdown();
+}

@@ -80,6 +80,40 @@ fn hot_paths_are_allocation_free_after_warmup() {
 }
 
 #[test]
+fn steady_state_frame_reads_are_allocation_free() {
+    // Pooled per-connection frame buffers (ROADMAP follow-up): once the
+    // buffer has grown to the connection's largest frame, reading further
+    // frames — including smaller ones — must not touch the allocator.
+    use fedml_he::transport::{read_frame_into, write_frame, FrameKind};
+    use std::io::Cursor;
+    let mut wire = Vec::new();
+    for i in 0..64u32 {
+        let payload = vec![(i % 251) as u8; 1024 + ((i as usize * 37) % 512)];
+        write_frame(&mut wire, 9, FrameKind::CtChunk, i, &payload).unwrap();
+    }
+    let mut buf = Vec::new();
+    // warm-up pass grows the pooled buffer to the largest frame seen
+    let mut cur = Cursor::new(&wire[..]);
+    for _ in 0..64 {
+        read_frame_into(&mut cur, 9, 1 << 20, &mut buf).unwrap();
+    }
+    let before = ALLOCS.load(Ordering::Relaxed);
+    let mut cur = Cursor::new(&wire[..]);
+    for i in 0..64u32 {
+        let (kind, seq) = read_frame_into(&mut cur, 9, 1 << 20, &mut buf).unwrap();
+        assert_eq!(kind, FrameKind::CtChunk);
+        assert_eq!(seq, i);
+    }
+    let after = ALLOCS.load(Ordering::Relaxed);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state frame reads allocated {} time(s)",
+        after - before
+    );
+}
+
+#[test]
 fn streaming_admission_never_clones_updates() {
     // Quorum/straggler admission must move the round's already-owned
     // arrivals, never deep-copy an update: offering N model-scale updates is
