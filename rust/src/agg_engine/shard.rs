@@ -218,6 +218,7 @@ impl ShardAccumulator {
 
     /// Seal the shard: one final modular reduction per unit.
     pub fn finalize(mut self) -> ShardCtSums {
+        let _span = crate::obs::span_arg("engine", "shard_finalize", self.absorbed as u64);
         self.fold();
         ShardCtSums {
             units: self.units,

@@ -173,6 +173,7 @@ impl<'p, 'm> RoundIntake<'p, 'm> {
             ),
         }
         self.arrivals.push(a);
+        crate::obs::metrics::intake_enqueued();
         if self.quorum_reached_at.is_none() {
             if let Some(q) = self.cfg.quorum {
                 if self.arrivals.len() >= q.max(1) {
@@ -214,6 +215,8 @@ impl<'p, 'm> RoundIntake<'p, 'm> {
     /// Seal the round: quorum/straggler filter, sharded aggregation,
     /// assembly. Consumes the intake.
     pub fn seal(mut self) -> anyhow::Result<(EncryptedUpdate, StreamStats)> {
+        let _span = crate::obs::span_arg("engine", "seal", self.arrivals.len() as u64);
+        crate::obs::metrics::intake_drained(self.arrivals.len() as u64);
         anyhow::ensure!(!self.arrivals.is_empty(), "streaming round with no arrivals");
         self.arrivals.sort_by(|a, b| {
             a.arrival_secs
@@ -235,6 +238,7 @@ impl<'p, 'm> RoundIntake<'p, 'm> {
             .partition_point(|a| a.arrival_secs <= cutoff)
             .max(quorum);
         self.arrivals.truncate(keep);
+        crate::obs::metrics::straggler_drops((offered - keep) as u64);
         let accepted = &self.arrivals;
         let stats = StreamStats {
             offered,
@@ -346,12 +350,15 @@ fn shard_worker(
     shard: usize,
     rx: mpsc::Receiver<WorkItem>,
 ) -> ShardOutput {
+    let _span = crate::obs::span_arg("engine", "shard_worker", shard as u64);
     let mut acc = ShardAccumulator::new(&plan, shard, params);
     let mut buffered: Vec<WorkItem> = Vec::new();
     while let Ok(item) = rx.recv() {
+        let _s = crate::obs::span_arg("engine", "shard_absorb", item.client);
         acc.absorb(&item.update, &item.weight);
         buffered.push(item);
     }
+    let _fold = crate::obs::span_arg("engine", "shard_fold_plain", shard as u64);
     buffered.sort_by_key(|i| i.client);
     let range = plan.plain_range(shard);
     let mut sums = vec![0.0f64; range.len()];

@@ -86,7 +86,11 @@ pub fn encrypt_into(
     let q0 = params.moduli[0];
 
     // Ephemeral ternary u, sampled straight into the pooled buffer and
-    // NTT'd per limb in place. (resize is a no-op after warm-up.)
+    // NTT'd per limb in place. (resize is a no-op after warm-up; the
+    // scratch-pool metric counts whether this call reallocated.)
+    crate::obs::metrics::scratch_pool(
+        scratch.u.capacity() >= num_limbs * n && scratch.e.capacity() >= n,
+    );
     scratch.u.resize(num_limbs * n, 0);
     scratch.e.resize(n, 0);
     sample_ternary_into(params, rng, &mut scratch.u);
@@ -158,6 +162,7 @@ pub fn decrypt_into(
     );
     let n = params.n;
     debug_assert_eq!(out.n, n, "output plaintext shape mismatch");
+    crate::obs::metrics::scratch_pool(scratch.t.capacity() >= params.num_limbs() * n);
     scratch.t.resize(params.num_limbs() * n, 0);
     scratch.t.copy_from_slice(ct.c1.flat());
     for l in 0..params.num_limbs() {

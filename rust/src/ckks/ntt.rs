@@ -120,6 +120,7 @@ impl NttTables {
     /// and aliasing stall from the inner loop.
     pub fn forward(&self, a: &mut [u64]) {
         assert_eq!(a.len(), self.n);
+        crate::obs::metrics::ntt_forward();
         let q = self.q;
         let two_q = 2 * q;
         let n = self.n;
@@ -165,6 +166,7 @@ impl NttTables {
     /// twiddle — no separate scaling sweep over the array.
     pub fn inverse(&self, a: &mut [u64]) {
         assert_eq!(a.len(), self.n);
+        crate::obs::metrics::ntt_inverse();
         let q = self.q;
         let two_q = 2 * q;
         let n = self.n;

@@ -377,6 +377,7 @@ pub(crate) fn phase_mask_agreement(
     participants: &mut [Box<dyn Participant + '_>],
     uplink: &Uplink,
 ) -> anyhow::Result<()> {
+    let _span = crate::obs::span("coordinator", "phase_mask_agreement");
     let cfg = &srv.cfg;
     let t = Instant::now();
     let mut mask_clock = SimClock::parallel();
@@ -532,6 +533,7 @@ pub(crate) fn phase_broadcast(
     round: usize,
     uplink: &Uplink,
 ) -> anyhow::Result<BroadcastPlan> {
+    let _span = crate::obs::span_arg("coordinator", "phase_broadcast", round as u64);
     let cfg = &srv.cfg;
     if let Uplink::Hub(hub) = uplink {
         hub.set_next_round(round as u64);
@@ -641,6 +643,7 @@ fn phase_collect_sim(
     plan: &BroadcastPlan,
     rm: &mut RoundMetrics,
 ) -> anyhow::Result<(EncryptedUpdate, f64)> {
+    let _span = crate::obs::span_arg("coordinator", "phase_collect", round as u64);
     let cfg = &srv.cfg;
     let mask = st.mask.as_ref().expect("mask agreed");
     let mut outs: Vec<SimRoundOutput> = Vec::with_capacity(plan.active.len());
@@ -739,6 +742,7 @@ fn phase_collect_hub(
     plan: &BroadcastPlan,
     rm: &mut RoundMetrics,
 ) -> anyhow::Result<(EncryptedUpdate, f64)> {
+    let _span = crate::obs::span_arg("coordinator", "phase_collect", round as u64);
     let cfg = &srv.cfg;
     let mask = st.mask.as_ref().expect("mask agreed");
     let shape = st.shape.expect("mask agreed");
@@ -815,6 +819,7 @@ pub(crate) fn phase_decrypt_apply(
     agg: EncryptedUpdate,
     alpha_mass: f64,
 ) -> anyhow::Result<f64> {
+    let _span = crate::obs::span("coordinator", "phase_decrypt_apply");
     let t = Instant::now();
     let mut global = srv.decrypt_global(
         &agg,
@@ -845,6 +850,7 @@ pub(crate) fn phase_eval(
     if cfg.eval_every == 0 || (round + 1) % cfg.eval_every != 0 {
         return Ok(());
     }
+    let _span = crate::obs::span_arg("coordinator", "phase_eval", round as u64);
     let mut l = 0.0f32;
     let mut a = 0.0f32;
     let mut n = 0usize;
@@ -883,6 +889,7 @@ pub(crate) fn phase_finale(
     participants: &mut [Box<dyn Participant + '_>],
     uplink: &Uplink,
 ) -> anyhow::Result<()> {
+    let _span = crate::obs::span("coordinator", "phase_finale");
     let cfg = &srv.cfg;
     let (agg, alpha_mass) = match &st.last_agg {
         Some((a, m)) => (Some(a), *m),
@@ -943,6 +950,7 @@ pub(crate) fn drive(
 ) -> anyhow::Result<()> {
     phase_mask_agreement(srv, st, participants, uplink)?;
     for round in 0..srv.cfg.rounds {
+        let _round_span = crate::obs::span_arg("coordinator", "round", round as u64);
         let comm0 = st.clock.comm_secs;
         let up0 = st.clock.bytes_up;
         let down0 = st.clock.bytes_down;

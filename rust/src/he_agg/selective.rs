@@ -153,6 +153,7 @@ impl SelectiveCodec {
         rng: &mut ChaChaRng,
         scratch: &mut CkksScratch,
     ) -> Ciphertext {
+        let _span = crate::obs::span_arg("codec", "encrypt_chunk", c as u64);
         let batch = self.ctx.batch();
         let lo = c * batch;
         let hi = (lo + batch).min(enc_values.len());
@@ -259,7 +260,8 @@ impl SelectiveCodec {
         if workers <= 1 {
             let mut scratch = CkksScratch::new(&self.ctx.params);
             let mut poly = RnsPoly::zero(&self.ctx.params);
-            for ct in cts {
+            for (c, ct) in cts.iter().enumerate() {
+                let _s = crate::obs::span_arg("codec", "decrypt_chunk", c as u64);
                 decrypt_into(&self.ctx.params, sk, ct, &mut scratch, &mut poly);
                 consume(self.ctx.encoder.decode(&poly, ct.n_values, ct.scale));
             }
@@ -272,7 +274,12 @@ impl SelectiveCodec {
                     s.spawn(move || {
                         let mut scratch = CkksScratch::new(&self.ctx.params);
                         let mut poly = RnsPoly::zero(&self.ctx.params);
-                        for ct in cts.iter().skip(w).step_by(workers) {
+                        for (i, ct) in cts.iter().skip(w).step_by(workers).enumerate() {
+                            let _s = crate::obs::span_arg(
+                                "codec",
+                                "decrypt_chunk",
+                                (w + i * workers) as u64,
+                            );
                             decrypt_into(&self.ctx.params, sk, ct, &mut scratch, &mut poly);
                             let values =
                                 self.ctx.encoder.decode(&poly, ct.n_values, ct.scale);

@@ -33,6 +33,7 @@ pub mod crypto;
 pub mod fl;
 pub mod he_agg;
 pub mod netsim;
+pub mod obs;
 pub mod privacy;
 pub mod runtime;
 pub mod transport;
@@ -66,9 +67,37 @@ fn wait_for_file(path: &std::path::Path, wait: std::time::Duration) -> Result<()
     Ok(())
 }
 
+/// Parse the observability flags shared by `run`/`serve` and arm the tracer
+/// before the round loop starts.
+fn obs_setup(args: &util::cli::Args) -> (Option<std::path::PathBuf>, Option<std::path::PathBuf>) {
+    let trace_out = args.get("trace-out").map(std::path::PathBuf::from);
+    let report_json = args.get("report-json").map(std::path::PathBuf::from);
+    if trace_out.is_some() {
+        obs::trace::set_enabled(true);
+    }
+    (trace_out, report_json)
+}
+
+/// Flush the `--trace-out` / `--report-json` artifacts after a run.
+fn obs_finish(
+    trace_out: Option<&std::path::Path>,
+    report_json: Option<&std::path::Path>,
+    report: &coordinator::FlReport,
+) -> Result<()> {
+    if let Some(p) = trace_out {
+        obs::write_chrome_trace(p)?;
+    }
+    if let Some(p) = report_json {
+        obs::write_run_report(p, report.to_json())?;
+    }
+    Ok(())
+}
+
 /// CLI dispatch for the `fedml-he` binary.
 pub fn dispatch(args: util::cli::Args) -> Result<()> {
-    if args.flag("verbose") {
+    if let Some(lvl) = args.get("log-level") {
+        util::logging::set_level(util::logging::Level::parse(lvl)?);
+    } else if args.flag("verbose") {
         util::logging::set_level(util::logging::Level::Debug);
     }
     let artifacts = args.get_or("artifacts", concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
@@ -76,6 +105,7 @@ pub fn dispatch(args: util::cli::Args) -> Result<()> {
     match sub {
         Some("run") => {
             let cfg = coordinator::FlConfig::from_args(&args)?;
+            let (trace_out, report_json) = obs_setup(&args);
             let rt_holder;
             let (report, global) = if cfg.model == fl::SYNTHETIC_MODEL {
                 coordinator::FlServer::standalone(cfg)?.run()?
@@ -86,6 +116,7 @@ pub fn dispatch(args: util::cli::Args) -> Result<()> {
             if let Some(p) = args.get("out-model") {
                 write_model(p, &global)?;
             }
+            obs_finish(trace_out.as_deref(), report_json.as_deref(), &report)?;
             println!("{}", report.to_json());
             Ok(())
         }
@@ -101,6 +132,13 @@ pub fn dispatch(args: util::cli::Args) -> Result<()> {
                 task_key: std::path::PathBuf::from(key_path),
                 addr_file: args.get("addr-file").map(std::path::PathBuf::from),
             };
+            let (trace_out, report_json) = obs_setup(&args);
+            let _ticker = match args.get_parsed_or("stats-every", 30.0f64) {
+                secs if secs > 0.0 => Some(obs::StatsTicker::start(
+                    std::time::Duration::from_secs_f64(secs),
+                )),
+                _ => None,
+            };
             let rt_holder;
             let (report, global) = if cfg.model == fl::SYNTHETIC_MODEL {
                 coordinator::FlServer::standalone(cfg)?.serve(&opts)?
@@ -111,6 +149,7 @@ pub fn dispatch(args: util::cli::Args) -> Result<()> {
             if let Some(p) = args.get("out-model") {
                 write_model(p, &global)?;
             }
+            obs_finish(trace_out.as_deref(), report_json.as_deref(), &report)?;
             println!("{}", report.to_json());
             Ok(())
         }
@@ -246,6 +285,25 @@ pub fn dispatch(args: util::cli::Args) -> Result<()> {
             );
             Ok(())
         }
+        Some("stats") => {
+            // Query a live coordinator's metrics over the session protocol
+            // (STATS frame; no task key needed — counters are not secret).
+            let addr = match args.get("connect") {
+                Some(a) => a.to_string(),
+                None => {
+                    let af = args.get("addr-file").ok_or_else(|| {
+                        anyhow::anyhow!("stats requires --connect ADDR or --addr-file PATH")
+                    })?;
+                    std::fs::read_to_string(af)?.trim().to_string()
+                }
+            };
+            let timeout = std::time::Duration::from_secs_f64(
+                args.get_parsed_or("timeout", 10.0f64).max(0.1),
+            );
+            let snapshot = transport::query_stats(&addr, timeout)?;
+            println!("{snapshot}");
+            Ok(())
+        }
         Some("bench") => {
             eprintln!("benchmarks are cargo bench targets; run e.g.:");
             eprintln!("  cargo bench --bench table4_models");
@@ -254,13 +312,13 @@ pub fn dispatch(args: util::cli::Args) -> Result<()> {
             Ok(())
         }
         Some(other) => anyhow::bail!(
-            "unknown subcommand '{other}' (expected: run | serve | join | params | \
+            "unknown subcommand '{other}' (expected: run | serve | join | stats | params | \
              privacy-map | bench)"
         ),
         None => {
             eprintln!("fedml-he — FedML-HE reproduction (Rust + JAX + Pallas via PJRT)");
             eprintln!();
-            eprintln!("usage: fedml-he <subcommand> [--options]");
+            eprintln!("usage: fedml-he <subcommand> [--options] [--log-level error|warn|info|debug]");
             eprintln!();
             eprintln!("subcommands:");
             eprintln!("  run           run a federated task (--model --clients --rounds --ratio");
@@ -275,13 +333,17 @@ pub fn dispatch(args: util::cli::Args) -> Result<()> {
             eprintln!("                --out-model PATH ...)");
             eprintln!("                (--model synthetic needs no artifacts; --transport tcp");
             eprintln!("                runs the whole task over persistent loopback sessions)");
+            eprintln!("                (--trace-out PATH --report-json PATH for observability)");
             eprintln!("  serve         multi-process server: write --task-key PATH, listen, and");
             eprintln!("                drive --clients N independent `join` processes");
             eprintln!("                (--listen ADDR --addr-file PATH --join-wait SECS");
+            eprintln!("                --stats-every SECS --trace-out PATH --report-json PATH");
             eprintln!("                --out-model PATH + the `run` task options)");
             eprintln!("  join          one client process: --task-key PATH --client-id K");
             eprintln!("                (--connect ADDR | --addr-file PATH) --key-wait SECS");
             eprintln!("                --connect-retry SECS --round-wait SECS --out-model PATH");
+            eprintln!("  stats         query a live coordinator's metrics over the session");
+            eprintln!("                protocol (--connect ADDR | --addr-file PATH) --timeout SECS");
             eprintln!("  params        print the CKKS context (--n --limbs --scaling-bits)");
             eprintln!("  privacy-map   compute a model's sensitivity map summary (--model --ratio)");
             eprintln!("  bench         how to regenerate every paper table/figure");

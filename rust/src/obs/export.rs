@@ -1,0 +1,121 @@
+//! Exporters for the tracing/metrics substrate: chrome://tracing JSON
+//! (`--trace-out`), the versioned run report (`--report-json`), and the
+//! periodic stderr stats ticker for long `serve` runs.
+
+use super::{metrics, trace};
+use crate::util::json::Json;
+use std::path::Path;
+use std::sync::mpsc;
+use std::time::Duration;
+
+/// Schema version stamped into the `--report-json` envelope. Bump on any
+/// breaking change to the envelope layout (CI diffs the committed
+/// `BENCH_perf.json` / report schemas against freshly generated ones).
+pub const REPORT_SCHEMA_VERSION: u64 = 1;
+
+/// Identifier stamped into the `--report-json` envelope.
+pub const REPORT_SCHEMA_NAME: &str = "fedml-he/run-report";
+
+/// Render every drained span as a chrome://tracing "complete" (`ph:"X"`)
+/// event. Load the file via `chrome://tracing` or <https://ui.perfetto.dev>.
+pub fn chrome_trace_json() -> Json {
+    let events: Vec<Json> = trace::drain()
+        .into_iter()
+        .map(|r| {
+            let mut args = vec![("depth", Json::from(u64::from(r.depth)))];
+            if r.has_arg {
+                args.push(("arg", Json::from(r.arg)));
+            }
+            Json::obj(vec![
+                ("name", r.name.into()),
+                ("cat", r.cat.into()),
+                ("ph", "X".into()),
+                ("ts", (r.start_ns as f64 / 1e3).into()),
+                ("dur", (r.dur_ns as f64 / 1e3).into()),
+                ("pid", 1u64.into()),
+                ("tid", r.tid.into()),
+                ("args", Json::obj(args)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", "ms".into()),
+    ])
+}
+
+/// Drain the tracer and write the chrome-trace file (atomic replace).
+pub fn write_chrome_trace(path: &Path) -> anyhow::Result<()> {
+    let json = chrome_trace_json();
+    let n_events = json
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .map_or(0, <[Json]>::len);
+    crate::util::write_file_atomic(path, json.to_string().as_bytes())?;
+    crate::log_info!("obs", "wrote {} trace events to {}", n_events, path.display());
+    Ok(())
+}
+
+/// Wrap a run's report (`FlReport::to_json()` or bench output) in the
+/// versioned envelope together with the metrics snapshot.
+pub fn run_report(report: Json) -> Json {
+    let (spans_recorded, spans_dropped) = trace::stats();
+    Json::obj(vec![
+        ("schema", REPORT_SCHEMA_NAME.into()),
+        ("version", REPORT_SCHEMA_VERSION.into()),
+        ("report", report),
+        ("metrics", metrics::snapshot()),
+        (
+            "trace",
+            Json::obj(vec![
+                ("spans_recorded", spans_recorded.into()),
+                ("spans_dropped", spans_dropped.into()),
+            ]),
+        ),
+    ])
+}
+
+/// Write the enveloped run report (atomic replace).
+pub fn write_run_report(path: &Path, report: Json) -> anyhow::Result<()> {
+    crate::util::write_file_atomic(path, run_report(report).to_string().as_bytes())?;
+    crate::log_info!("obs", "wrote run report to {}", path.display());
+    Ok(())
+}
+
+/// Periodic one-line stderr stats summary for long `serve` runs. Emits
+/// [`metrics::summary_line`] every `period` until dropped.
+pub struct StatsTicker {
+    stop: mpsc::Sender<()>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl StatsTicker {
+    /// Start the ticker thread.
+    pub fn start(period: Duration) -> StatsTicker {
+        let (stop, rx) = mpsc::channel::<()>();
+        let handle = std::thread::Builder::new()
+            .name("stats-ticker".into())
+            .spawn(move || loop {
+                match rx.recv_timeout(period) {
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        crate::log_info!("stats", "{}", metrics::summary_line());
+                    }
+                    _ => return,
+                }
+            })
+            .expect("spawn stats ticker");
+        StatsTicker {
+            stop,
+            handle: Some(handle),
+        }
+    }
+}
+
+impl Drop for StatsTicker {
+    fn drop(&mut self) {
+        let _ = self.stop.send(());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,427 @@
+//! Global metrics registry: a fixed set of counters, gauges and histograms
+//! over static atomics.
+//!
+//! Everything here is wait-free and allocation-free on the record side —
+//! one `Relaxed` `fetch_add`/`fetch_max` per event — so the transport frame
+//! loop, the streaming-intake admission path and the CKKS kernels can
+//! record unconditionally without violating the `tests/zero_alloc.rs`
+//! steady-state gates or perturbing the deterministic RNG streams.
+//! Snapshotting ([`snapshot`]) allocates (it builds a [`Json`] tree) and is
+//! only called from exporters, the stats ticker and the STATS frame
+//! handler.
+//!
+//! Counter totals are exact: recording uses `fetch_add`, so concurrent
+//! recorders never lose increments (gated by the serial-oracle test in
+//! `tests/obs.rs`). A snapshot taken while recorders are live is a
+//! near-point-in-time view — individual counters are exact totals at their
+//! read instant, but the set is not read atomically as a group.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Wire frame-kind ids this registry tracks (index 0 is "unknown"; ids
+/// mirror `transport::FrameKind as u32`). Kept in lockstep with the
+/// transport enum by a consistency test — `obs` itself stays
+/// transport-free.
+pub const N_FRAME_KINDS: usize = 13;
+
+/// Human names for the tracked frame kinds, indexed by wire id.
+pub const FRAME_KIND_NAMES: [&str; N_FRAME_KINDS] = [
+    "unknown",
+    "begin",
+    "ct_chunk",
+    "plain",
+    "end",
+    "ack",
+    "hello",
+    "welcome",
+    "mask",
+    "down_begin",
+    "down_end",
+    "stats",
+    "stats_reply",
+];
+
+/// Log₂-bucketed latency histogram (nanoseconds): bucket `i` counts samples
+/// in `[2^i, 2^{i+1})` ns, so 40 buckets span 1 ns to ~18 minutes.
+pub const HIST_BUCKETS: usize = 40;
+
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO: AtomicU64 = AtomicU64::new(0);
+
+/// Frames/bytes in one direction, indexed by wire kind id.
+struct FrameDir {
+    frames: [AtomicU64; N_FRAME_KINDS],
+    bytes: [AtomicU64; N_FRAME_KINDS],
+}
+
+impl FrameDir {
+    const fn new() -> Self {
+        FrameDir { frames: [ZERO; N_FRAME_KINDS], bytes: [ZERO; N_FRAME_KINDS] }
+    }
+
+    fn record(&self, kind_id: u32, wire_bytes: u64) {
+        let idx = (kind_id as usize).min(N_FRAME_KINDS - 1);
+        let idx = if kind_id as usize >= N_FRAME_KINDS { 0 } else { idx };
+        self.frames[idx].fetch_add(1, Ordering::Relaxed);
+        self.bytes[idx].fetch_add(wire_bytes, Ordering::Relaxed);
+    }
+
+    fn to_json(&self) -> (Json, Json) {
+        let frames = Json::Obj(
+            FRAME_KIND_NAMES
+                .iter()
+                .enumerate()
+                .map(|(i, name)| {
+                    (name.to_string(), self.frames[i].load(Ordering::Relaxed).into())
+                })
+                .collect(),
+        );
+        let bytes = Json::Obj(
+            FRAME_KIND_NAMES
+                .iter()
+                .enumerate()
+                .map(|(i, name)| {
+                    (name.to_string(), self.bytes[i].load(Ordering::Relaxed).into())
+                })
+                .collect(),
+        );
+        (frames, bytes)
+    }
+
+    fn reset(&self) {
+        for c in self.frames.iter().chain(self.bytes.iter()) {
+            c.store(0, Ordering::Relaxed);
+        }
+    }
+
+    fn total_frames(&self) -> u64 {
+        self.frames.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    fn total_bytes(&self) -> u64 {
+        self.bytes.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+}
+
+/// A gauge with a high-water mark (used for the intake queue depth).
+struct Gauge {
+    value: AtomicU64,
+    peak: AtomicU64,
+}
+
+impl Gauge {
+    const fn new() -> Self {
+        Gauge { value: AtomicU64::new(0), peak: AtomicU64::new(0) }
+    }
+
+    fn add(&self, n: u64) {
+        let v = self.value.fetch_add(n, Ordering::Relaxed) + n;
+        self.peak.fetch_max(v, Ordering::Relaxed);
+    }
+
+    fn sub(&self, n: u64) {
+        // saturating: a missed add (process restart mid-round) must not wrap
+        let _ = self
+            .value
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                Some(v.saturating_sub(n))
+            });
+    }
+}
+
+/// Fixed-bucket log₂ histogram over nanosecond samples.
+struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Histogram {
+    const fn new() -> Self {
+        Histogram {
+            buckets: [ZERO; HIST_BUCKETS],
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    fn record_ns(&self, ns: u64) {
+        let idx = (63 - ns.max(1).leading_zeros() as usize).min(HIST_BUCKETS - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    fn to_json(&self) -> Json {
+        let count = self.count.load(Ordering::Relaxed);
+        let sum_ns = self.sum_ns.load(Ordering::Relaxed);
+        let buckets: Vec<Json> = self
+            .buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed).into())
+            .collect();
+        Json::obj(vec![
+            ("count", count.into()),
+            ("sum_secs", (sum_ns as f64 * 1e-9).into()),
+            ("max_secs", (self.max_ns.load(Ordering::Relaxed) as f64 * 1e-9).into()),
+            (
+                "mean_secs",
+                (if count == 0 { 0.0 } else { sum_ns as f64 * 1e-9 / count as f64 }).into(),
+            ),
+            ("log2_ns_buckets", Json::Arr(buckets)),
+        ])
+    }
+
+    fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum_ns.store(0, Ordering::Relaxed);
+        self.max_ns.store(0, Ordering::Relaxed);
+    }
+}
+
+struct Registry {
+    sent: FrameDir,
+    received: FrameDir,
+    crc_rejects: AtomicU64,
+    frame_rejects: AtomicU64,
+    straggler_drops: AtomicU64,
+    rejoins: AtomicU64,
+    scratch_pool_hits: AtomicU64,
+    scratch_pool_misses: AtomicU64,
+    ntt_forward: AtomicU64,
+    ntt_inverse: AtomicU64,
+    intake_offered: AtomicU64,
+    intake_queue: Gauge,
+    session_rtt: Histogram,
+}
+
+static REGISTRY: Registry = Registry {
+    sent: FrameDir::new(),
+    received: FrameDir::new(),
+    crc_rejects: AtomicU64::new(0),
+    frame_rejects: AtomicU64::new(0),
+    straggler_drops: AtomicU64::new(0),
+    rejoins: AtomicU64::new(0),
+    scratch_pool_hits: AtomicU64::new(0),
+    scratch_pool_misses: AtomicU64::new(0),
+    ntt_forward: AtomicU64::new(0),
+    ntt_inverse: AtomicU64::new(0),
+    intake_offered: AtomicU64::new(0),
+    intake_queue: Gauge::new(),
+    session_rtt: Histogram::new(),
+};
+
+/// One frame put on the wire (`kind_id` = `FrameKind as u32`).
+#[inline]
+pub fn frame_sent(kind_id: u32, wire_bytes: u64) {
+    REGISTRY.sent.record(kind_id, wire_bytes);
+}
+
+/// One validated frame read off the wire.
+#[inline]
+pub fn frame_received(kind_id: u32, wire_bytes: u64) {
+    REGISTRY.received.record(kind_id, wire_bytes);
+}
+
+/// A frame rejected by the payload CRC check.
+#[inline]
+pub fn crc_reject() {
+    REGISTRY.crc_rejects.fetch_add(1, Ordering::Relaxed);
+    REGISTRY.frame_rejects.fetch_add(1, Ordering::Relaxed);
+}
+
+/// A frame rejected before the CRC (bad magic/version/round/kind/length).
+#[inline]
+pub fn frame_reject() {
+    REGISTRY.frame_rejects.fetch_add(1, Ordering::Relaxed);
+}
+
+/// `n` uploads dropped by the quorum/straggler cutoff.
+#[inline]
+pub fn straggler_drops(n: u64) {
+    REGISTRY.straggler_drops.fetch_add(n, Ordering::Relaxed);
+}
+
+/// A HELLO that replaced a registered session (disconnect → rejoin).
+#[inline]
+pub fn rejoin() {
+    REGISTRY.rejoins.fetch_add(1, Ordering::Relaxed);
+}
+
+/// One pooled-scratch kernel call; `hit` = every staging buffer was already
+/// at capacity (the steady state `tests/zero_alloc.rs` gates).
+#[inline]
+pub fn scratch_pool(hit: bool) {
+    if hit {
+        REGISTRY.scratch_pool_hits.fetch_add(1, Ordering::Relaxed);
+    } else {
+        REGISTRY.scratch_pool_misses.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// One forward NTT over a limb.
+#[inline]
+pub fn ntt_forward() {
+    REGISTRY.ntt_forward.fetch_add(1, Ordering::Relaxed);
+}
+
+/// One inverse NTT over a limb.
+#[inline]
+pub fn ntt_inverse() {
+    REGISTRY.ntt_inverse.fetch_add(1, Ordering::Relaxed);
+}
+
+/// An arrival admitted to the streaming intake (queue depth +1).
+#[inline]
+pub fn intake_enqueued() {
+    REGISTRY.intake_offered.fetch_add(1, Ordering::Relaxed);
+    REGISTRY.intake_queue.add(1);
+}
+
+/// `n` queued arrivals drained by a round seal (queue depth −n).
+#[inline]
+pub fn intake_drained(n: u64) {
+    REGISTRY.intake_queue.sub(n);
+}
+
+/// One measured session round trip (client END→ACK).
+#[inline]
+pub fn session_rtt_secs(secs: f64) {
+    if secs.is_finite() && secs >= 0.0 {
+        REGISTRY.session_rtt.record_ns((secs * 1e9) as u64);
+    }
+}
+
+/// Point-in-time JSON view of every metric (stable key set — the
+/// `--report-json` schema and the STATS frame payload).
+pub fn snapshot() -> Json {
+    let (sent_frames, sent_bytes) = REGISTRY.sent.to_json();
+    let (recv_frames, recv_bytes) = REGISTRY.received.to_json();
+    let (spans_recorded, spans_dropped) = super::trace::stats();
+    Json::obj(vec![
+        ("frames_sent", sent_frames),
+        ("bytes_sent", sent_bytes),
+        ("frames_received", recv_frames),
+        ("bytes_received", recv_bytes),
+        ("crc_rejects", REGISTRY.crc_rejects.load(Ordering::Relaxed).into()),
+        ("frame_rejects", REGISTRY.frame_rejects.load(Ordering::Relaxed).into()),
+        (
+            "straggler_drops",
+            REGISTRY.straggler_drops.load(Ordering::Relaxed).into(),
+        ),
+        ("rejoins", REGISTRY.rejoins.load(Ordering::Relaxed).into()),
+        (
+            "scratch_pool_hits",
+            REGISTRY.scratch_pool_hits.load(Ordering::Relaxed).into(),
+        ),
+        (
+            "scratch_pool_misses",
+            REGISTRY.scratch_pool_misses.load(Ordering::Relaxed).into(),
+        ),
+        ("ntt_forward", REGISTRY.ntt_forward.load(Ordering::Relaxed).into()),
+        ("ntt_inverse", REGISTRY.ntt_inverse.load(Ordering::Relaxed).into()),
+        (
+            "intake_offered",
+            REGISTRY.intake_offered.load(Ordering::Relaxed).into(),
+        ),
+        (
+            "intake_queue_depth",
+            REGISTRY.intake_queue.value.load(Ordering::Relaxed).into(),
+        ),
+        (
+            "intake_queue_peak",
+            REGISTRY.intake_queue.peak.load(Ordering::Relaxed).into(),
+        ),
+        ("session_rtt", REGISTRY.session_rtt.to_json()),
+        ("spans_recorded", spans_recorded.into()),
+        ("spans_dropped", spans_dropped.into()),
+    ])
+}
+
+/// One-line human summary (the periodic `serve` stderr ticker).
+pub fn summary_line() -> String {
+    format!(
+        "rx {} frames / {} · tx {} frames / {} · rejects {} (crc {}) · stragglers {} · \
+         rejoins {} · ntt {} · intake q {} (peak {}) · rtt n={}",
+        REGISTRY.received.total_frames(),
+        crate::util::human_bytes(REGISTRY.received.total_bytes()),
+        REGISTRY.sent.total_frames(),
+        crate::util::human_bytes(REGISTRY.sent.total_bytes()),
+        REGISTRY.frame_rejects.load(Ordering::Relaxed),
+        REGISTRY.crc_rejects.load(Ordering::Relaxed),
+        REGISTRY.straggler_drops.load(Ordering::Relaxed),
+        REGISTRY.rejoins.load(Ordering::Relaxed),
+        REGISTRY.ntt_forward.load(Ordering::Relaxed)
+            + REGISTRY.ntt_inverse.load(Ordering::Relaxed),
+        REGISTRY.intake_queue.value.load(Ordering::Relaxed),
+        REGISTRY.intake_queue.peak.load(Ordering::Relaxed),
+        REGISTRY.session_rtt.count.load(Ordering::Relaxed),
+    )
+}
+
+/// Zero every metric (test isolation; production never resets).
+pub fn reset() {
+    REGISTRY.sent.reset();
+    REGISTRY.received.reset();
+    for c in [
+        &REGISTRY.crc_rejects,
+        &REGISTRY.frame_rejects,
+        &REGISTRY.straggler_drops,
+        &REGISTRY.rejoins,
+        &REGISTRY.scratch_pool_hits,
+        &REGISTRY.scratch_pool_misses,
+        &REGISTRY.ntt_forward,
+        &REGISTRY.ntt_inverse,
+        &REGISTRY.intake_offered,
+        &REGISTRY.intake_queue.value,
+        &REGISTRY.intake_queue.peak,
+    ] {
+        c.store(0, Ordering::Relaxed);
+    }
+    REGISTRY.session_rtt.reset();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gauge_tracks_peak_and_saturates() {
+        let g = Gauge::new();
+        g.add(3);
+        g.add(2);
+        g.sub(4);
+        assert_eq!(g.value.load(Ordering::Relaxed), 1);
+        assert_eq!(g.peak.load(Ordering::Relaxed), 5);
+        g.sub(10); // saturating, never wraps
+        assert_eq!(g.value.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn histogram_buckets_by_log2() {
+        let h = Histogram::new();
+        h.record_ns(1);
+        h.record_ns(1024);
+        h.record_ns(1025);
+        h.record_ns(u64::MAX); // clamps into the last bucket
+        assert_eq!(h.buckets[0].load(Ordering::Relaxed), 1);
+        assert_eq!(h.buckets[10].load(Ordering::Relaxed), 2);
+        assert_eq!(h.buckets[HIST_BUCKETS - 1].load(Ordering::Relaxed), 1);
+        assert_eq!(h.count.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn unknown_frame_kind_lands_in_slot_zero() {
+        let d = FrameDir::new();
+        d.record(999, 64);
+        assert_eq!(d.frames[0].load(Ordering::Relaxed), 1);
+        assert_eq!(d.bytes[0].load(Ordering::Relaxed), 64);
+    }
+}

@@ -1,0 +1,31 @@
+//! Observability substrate: structured tracing + global metrics (DESIGN.md
+//! §10).
+//!
+//! Three pieces, all dependency-free (no crates.io in the offline image) and
+//! safe to leave compiled into the hot paths:
+//!
+//! * [`metrics`] — a fixed global registry of counters/gauges/histograms
+//!   (frames and bytes by kind, CRC rejects, straggler drops, rejoins,
+//!   scratch-pool hits, NTT invocations, intake queue depth, per-session
+//!   RTT). Recording is one relaxed atomic op — no locks, no allocation —
+//!   so the `tests/zero_alloc.rs` gates stay green with instrumentation
+//!   enabled.
+//! * [`trace`] — a span tracer over per-thread lock-free ring buffers.
+//!   Disabled (the default) a span costs one atomic load; enabled it writes
+//!   one fixed-size record into a pre-allocated per-thread ring (oldest
+//!   spans overwritten on overflow, never a reallocation). Spans are
+//!   hierarchical: coordinator phases wrap codec chunks wrap frame I/O.
+//! * [`export`] — exporters: chrome://tracing JSON (`--trace-out`), the
+//!   versioned machine-readable run report (`--report-json`), and the
+//!   periodic one-line stderr stats summary for long `serve` runs.
+//!
+//! The live-query path (STATS frame + `stats` CLI subcommand) lives in
+//! [`crate::transport`] — it serializes [`metrics::snapshot`] over the
+//! session protocol; this module stays transport-free.
+
+pub mod export;
+pub mod metrics;
+pub mod trace;
+
+pub use export::{run_report, write_chrome_trace, write_run_report, StatsTicker};
+pub use trace::{span, span_arg, Span};

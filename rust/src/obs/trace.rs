@@ -1,0 +1,253 @@
+//! Span tracer over per-thread lock-free ring buffers.
+//!
+//! Design constraints (DESIGN.md §10):
+//!
+//! * **Disabled is free.** Tracing is off unless `--trace-out` was passed.
+//!   A disabled [`span`] call is one relaxed atomic load and returns an
+//!   inert guard — no clock read, no thread-local touch, no allocation.
+//! * **Enabled never reallocates in steady state.** Each thread lazily
+//!   registers one pre-allocated ring of [`RING_CAPACITY`] fixed-size
+//!   [`SpanRecord`]s on its first span. Recording a finished span writes
+//!   one slot and bumps an atomic head; on overflow the oldest records are
+//!   overwritten (and counted as dropped), the ring never grows. The first
+//!   span on a thread allocates the ring — hot loops that must satisfy the
+//!   `tests/zero_alloc.rs` gates pay that once during warm-up, like every
+//!   other pooled buffer.
+//! * **Single-writer rings.** Only the owning thread writes its ring;
+//!   [`drain`] is called after workers quiesce (end of run / test), so the
+//!   Release store on `head` paired with the Acquire load in the reader is
+//!   enough — no per-slot locks.
+//!
+//! Span identity is two `&'static str`s (category + name) plus one `u64`
+//! argument (chunk index, round number, frame seq…): everything `Copy`, so
+//! a record is a plain memcpy into the ring.
+
+use std::cell::{Cell, UnsafeCell};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Spans kept per thread; older spans are overwritten once a thread has
+/// recorded more than this many. 16384 records × 64 B ≈ 1 MiB per thread —
+/// comfortably holds a multi-round loopback run.
+pub const RING_CAPACITY: usize = 16384;
+
+/// One finished span, fixed-size and `Copy`.
+#[derive(Debug, Clone, Copy)]
+pub struct SpanRecord {
+    /// Category: `"coordinator"`, `"codec"`, `"engine"`, `"transport"`.
+    pub cat: &'static str,
+    /// Span name within the category, e.g. `"phase_collect"`.
+    pub name: &'static str,
+    /// Start offset from the process trace epoch, nanoseconds.
+    pub start_ns: u64,
+    /// Span duration, nanoseconds.
+    pub dur_ns: u64,
+    /// Tracer-assigned thread id (dense, stable per thread).
+    pub tid: u64,
+    /// Free-form numeric argument (round, chunk index, frame seq…).
+    pub arg: u64,
+    /// Whether `arg` was set (distinguishes "0" from "none").
+    pub has_arg: bool,
+    /// Nesting depth on the recording thread at span open (0 = top level).
+    pub depth: u32,
+}
+
+const EMPTY: SpanRecord = SpanRecord {
+    cat: "",
+    name: "",
+    start_ns: 0,
+    dur_ns: 0,
+    tid: 0,
+    arg: 0,
+    has_arg: false,
+    depth: 0,
+};
+
+/// Per-thread pre-allocated span storage. `head` counts records ever
+/// written; slot `head % RING_CAPACITY` is the next write target.
+struct Ring {
+    tid: u64,
+    slots: Box<[UnsafeCell<SpanRecord>]>,
+    head: AtomicU64,
+}
+
+// SAFETY: slots are written only by the owning thread (via the `RING`
+// thread-local); other threads only read, and only via `drain`/`stats`
+// after observing `head` with Acquire ordering. A concurrent reader may see
+// a torn in-progress slot, but `drain` is documented to run after writer
+// threads quiesce, and `stats` reads only the atomic head.
+unsafe impl Sync for Ring {}
+
+impl Ring {
+    fn new(tid: u64) -> Self {
+        Ring {
+            tid,
+            slots: (0..RING_CAPACITY)
+                .map(|_| UnsafeCell::new(EMPTY))
+                .collect(),
+            head: AtomicU64::new(0),
+        }
+    }
+
+    /// Owner-thread-only append.
+    fn push(&self, mut rec: SpanRecord) {
+        rec.tid = self.tid;
+        let head = self.head.load(Ordering::Relaxed);
+        let slot = self.slots[(head % RING_CAPACITY as u64) as usize].get();
+        // SAFETY: single writer (owner thread); readers wait for quiesce.
+        unsafe { *slot = rec };
+        self.head.store(head + 1, Ordering::Release);
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_TID: AtomicU64 = AtomicU64::new(0);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+fn registry() -> &'static Mutex<Vec<Arc<Ring>>> {
+    static REGISTRY: OnceLock<Mutex<Vec<Arc<Ring>>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    static RING: Arc<Ring> = {
+        let ring = Arc::new(Ring::new(NEXT_TID.fetch_add(1, Ordering::Relaxed)));
+        registry().lock().unwrap().push(ring.clone());
+        ring
+    };
+    static DEPTH: Cell<u32> = const { Cell::new(0) };
+}
+
+/// Turn the tracer on or off (off by default; `--trace-out` turns it on
+/// before the run starts).
+pub fn set_enabled(on: bool) {
+    if on {
+        // Pin the epoch before any span so start offsets are non-negative.
+        EPOCH.get_or_init(Instant::now);
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether spans are currently being recorded.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+fn now_ns() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// RAII span guard: records one [`SpanRecord`] on drop. Inert (all-`None`)
+/// when the tracer is disabled at open time.
+pub struct Span {
+    live: Option<LiveSpan>,
+}
+
+struct LiveSpan {
+    cat: &'static str,
+    name: &'static str,
+    start_ns: u64,
+    arg: Option<u64>,
+    depth: u32,
+}
+
+/// Open a span; it closes (and records) when the returned guard drops.
+#[inline]
+pub fn span(cat: &'static str, name: &'static str) -> Span {
+    open(cat, name, None)
+}
+
+/// [`span`] with a numeric argument (round, chunk index, frame seq…).
+#[inline]
+pub fn span_arg(cat: &'static str, name: &'static str, arg: u64) -> Span {
+    open(cat, name, Some(arg))
+}
+
+#[inline]
+fn open(cat: &'static str, name: &'static str, arg: Option<u64>) -> Span {
+    if !enabled() {
+        return Span { live: None };
+    }
+    let depth = DEPTH.with(|d| {
+        let v = d.get();
+        d.set(v + 1);
+        v
+    });
+    Span {
+        live: Some(LiveSpan {
+            cat,
+            name,
+            start_ns: now_ns(),
+            arg,
+            depth,
+        }),
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(live) = self.live.take() else { return };
+        let end_ns = now_ns();
+        DEPTH.with(|d| d.set(d.get().saturating_sub(1)));
+        RING.with(|ring| {
+            ring.push(SpanRecord {
+                cat: live.cat,
+                name: live.name,
+                start_ns: live.start_ns,
+                dur_ns: end_ns.saturating_sub(live.start_ns),
+                tid: 0, // assigned by Ring::push
+                arg: live.arg.unwrap_or(0),
+                has_arg: live.arg.is_some(),
+                depth: live.depth,
+            })
+        });
+    }
+}
+
+/// Collect every recorded span, oldest-first per thread. Call after worker
+/// threads quiesce (end of run); records overwritten by ring overflow are
+/// gone (see [`stats`] for the drop count).
+pub fn drain() -> Vec<SpanRecord> {
+    let rings = registry().lock().unwrap();
+    let mut out = Vec::new();
+    for ring in rings.iter() {
+        let head = ring.head.load(Ordering::Acquire);
+        let len = head.min(RING_CAPACITY as u64);
+        let start = head - len;
+        for i in start..head {
+            let slot = ring.slots[(i % RING_CAPACITY as u64) as usize].get();
+            // SAFETY: writers have quiesced (drain contract) and `head` was
+            // read with Acquire, so every slot below it is fully written.
+            out.push(unsafe { *slot });
+        }
+    }
+    out.sort_by_key(|r| r.start_ns);
+    out
+}
+
+/// `(recorded, dropped)` span totals across all threads. `recorded` is the
+/// number of spans still resident in rings; `dropped` were overwritten by
+/// ring overflow.
+pub fn stats() -> (u64, u64) {
+    let rings = registry().lock().unwrap();
+    let mut recorded = 0u64;
+    let mut dropped = 0u64;
+    for ring in rings.iter() {
+        let head = ring.head.load(Ordering::Acquire);
+        let resident = head.min(RING_CAPACITY as u64);
+        recorded += resident;
+        dropped += head - resident;
+    }
+    (recorded, dropped)
+}
+
+/// Reset every ring (test isolation). Rings stay registered and allocated;
+/// only their heads rewind.
+pub fn clear() {
+    let rings = registry().lock().unwrap();
+    for ring in rings.iter() {
+        ring.head.store(0, Ordering::Release);
+    }
+}

@@ -185,6 +185,7 @@ impl FrameSink {
         read_buf: &mut Vec<u8>,
         metrics: Option<(f64, f64, f32)>,
     ) -> anyhow::Result<UploadReceipt> {
+        let _span = crate::obs::span("transport", "end_and_ack");
         match metrics {
             Some((train, encrypt, loss)) => {
                 self.send(FrameKind::End, 0, &encode_end_timing(train, encrypt, loss))?
@@ -192,7 +193,11 @@ impl FrameSink {
             None => self.send(FrameKind::End, 0, &[])?,
         }
         self.writer.flush()?;
+        // END→ACK round trip: the server's receipt stamps the far end, so
+        // this is the wire+reassembly latency the RTT histogram tracks
+        let t0 = std::time::Instant::now();
         let (kind, _) = read_frame_into(reader, self.round, BEGIN_PAYLOAD_BYTES, read_buf)?;
+        crate::obs::metrics::session_rtt_secs(t0.elapsed().as_secs_f64());
         anyhow::ensure!(kind == FrameKind::Ack, "expected ACK, got {kind:?}");
         Ok(UploadReceipt {
             bytes_sent: self.bytes_sent - self.upload_base,

@@ -20,7 +20,10 @@
 //! DESIGN.md §9. Handshake frames travel under
 //! [`CONTROL_ROUND`], the mask-agreement stage under [`MASK_ROUND`], and
 //! training round `r` under round id `r`, so one duplex connection serves
-//! the whole task without rounds bleeding into each other.
+//! the whole task without rounds bleeding into each other. A STATS frame in
+//! place of a HELLO queries the coordinator's live metrics snapshot
+//! (STATS_REPLY carries JSON; the `stats` CLI subcommand) without claiming
+//! a session slot.
 //!
 //! The reader validates magic, version, round, kind and `len` **before**
 //! allocating the payload buffer: `len` is capped by a params-derived bound
@@ -108,10 +111,18 @@ pub enum FrameKind {
     DownBegin = 9,
     /// Downlink round complete (empty payload).
     DownEnd = 10,
+    /// Metrics query, client → server, under [`CONTROL_ROUND`] in place of
+    /// a HELLO (empty payload). The server answers with
+    /// [`FrameKind::StatsReply`] and closes — no session slot is claimed.
+    Stats = 11,
+    /// Metrics query reply, server → client: the coordinator's
+    /// `obs::metrics::snapshot()` as UTF-8 JSON.
+    StatsReply = 12,
 }
 
 impl FrameKind {
-    fn from_u32(v: u32) -> anyhow::Result<Self> {
+    /// Decode a wire kind id (the inverse of `kind as u32`).
+    pub fn from_u32(v: u32) -> anyhow::Result<Self> {
         Ok(match v {
             1 => FrameKind::Begin,
             2 => FrameKind::CtChunk,
@@ -123,6 +134,8 @@ impl FrameKind {
             8 => FrameKind::Mask,
             9 => FrameKind::DownBegin,
             10 => FrameKind::DownEnd,
+            11 => FrameKind::Stats,
+            12 => FrameKind::StatsReply,
             other => anyhow::bail!("unknown frame kind {other}"),
         })
     }
@@ -210,7 +223,9 @@ pub fn write_frame<W: Write>(
     w.write_all(&hdr)?;
     w.write_all(payload)?;
     w.write_all(&crc32(payload).to_le_bytes())?;
-    Ok((FRAME_HEADER_BYTES + payload.len() + FRAME_TRAILER_BYTES) as u64)
+    let wire = (FRAME_HEADER_BYTES + payload.len() + FRAME_TRAILER_BYTES) as u64;
+    crate::obs::metrics::frame_sent(kind as u32, wire);
+    Ok(wire)
 }
 
 fn read_exact_or(r: &mut impl Read, buf: &mut [u8], what: &str) -> anyhow::Result<()> {
@@ -233,33 +248,49 @@ pub fn read_frame_into<R: Read>(
 ) -> anyhow::Result<(FrameKind, u32)> {
     let mut hdr = [0u8; FRAME_HEADER_BYTES];
     read_exact_or(r, &mut hdr, "frame header")?;
+    // validation failures feed the reject counters (DESIGN.md §10) — errors
+    // are off the hot path, the success path records one atomic add
+    let reject = |msg: String| {
+        crate::obs::metrics::frame_reject();
+        anyhow::anyhow!(msg)
+    };
     let magic = u32::from_le_bytes(hdr[0..4].try_into().unwrap());
-    anyhow::ensure!(magic == FRAME_MAGIC, "bad frame magic {magic:#010x}");
+    if magic != FRAME_MAGIC {
+        return Err(reject(format!("bad frame magic {magic:#010x}")));
+    }
     let version = u32::from_le_bytes(hdr[4..8].try_into().unwrap());
-    anyhow::ensure!(
-        version == PROTOCOL_VERSION,
-        "protocol version skew: got {version}, expected {PROTOCOL_VERSION}"
-    );
+    if version != PROTOCOL_VERSION {
+        return Err(reject(format!(
+            "protocol version skew: got {version}, expected {PROTOCOL_VERSION}"
+        )));
+    }
     let round = u64::from_le_bytes(hdr[8..16].try_into().unwrap());
-    anyhow::ensure!(
-        round == expect_round,
-        "frame for round {round}, expected {expect_round}"
-    );
-    let kind = FrameKind::from_u32(u32::from_le_bytes(hdr[16..20].try_into().unwrap()))?;
+    if round != expect_round {
+        return Err(reject(format!(
+            "frame for round {round}, expected {expect_round}"
+        )));
+    }
+    let kind = FrameKind::from_u32(u32::from_le_bytes(hdr[16..20].try_into().unwrap()))
+        .map_err(|e| reject(e.to_string()))?;
     let seq = u32::from_le_bytes(hdr[20..24].try_into().unwrap());
     let len = u32::from_le_bytes(hdr[24..28].try_into().unwrap()) as usize;
-    anyhow::ensure!(
-        len <= max_payload,
-        "declared payload length {len} exceeds cap {max_payload}"
-    );
+    if len > max_payload {
+        return Err(reject(format!(
+            "declared payload length {len} exceeds cap {max_payload}"
+        )));
+    }
     payload.clear();
     payload.resize(len, 0);
     read_exact_or(r, payload, "frame payload")?;
     let mut crc = [0u8; FRAME_TRAILER_BYTES];
     read_exact_or(r, &mut crc, "frame crc")?;
-    anyhow::ensure!(
-        u32::from_le_bytes(crc) == crc32(payload),
-        "frame crc mismatch"
+    if u32::from_le_bytes(crc) != crc32(payload) {
+        crate::obs::metrics::crc_reject();
+        anyhow::bail!("frame crc mismatch");
+    }
+    crate::obs::metrics::frame_received(
+        kind as u32,
+        (FRAME_HEADER_BYTES + len + FRAME_TRAILER_BYTES) as u64,
     );
     Ok((kind, seq))
 }
@@ -563,6 +594,8 @@ mod tests {
             FrameKind::Mask,
             FrameKind::DownBegin,
             FrameKind::DownEnd,
+            FrameKind::Stats,
+            FrameKind::StatsReply,
         ] {
             let payload = vec![7u8; 96];
             let mut wire = Vec::new();

@@ -16,8 +16,7 @@ use super::frame::{
     BEGIN_PAYLOAD_BYTES,
 };
 use crate::agg_engine::Arrival;
-use crate::ckks::serialize::ciphertext_shard_from_bytes;
-use crate::ckks::{Ciphertext, CkksContext, CkksParams};
+use crate::ckks::{CkksContext, CkksParams};
 use crate::he_agg::{EncryptedUpdate, EncryptionMask};
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -444,59 +443,17 @@ pub(crate) fn read_upload<R: std::io::Read, F: Fn() -> Instant>(
         shape.total
     );
 
-    let mut cts: Vec<Option<Ciphertext>> = (0..n_cts).map(|_| None).collect();
-    let mut plain: Vec<f32> = Vec::with_capacity(n_plain);
-    let mut next_plain_seq = 0u32;
+    let _span = crate::obs::span_arg("transport", "read_upload", client);
+    let mut asm = super::reassembly::ChunkAssembler::new(n_cts, n_plain, total);
     let timing;
     loop {
         arm_read(stream)?;
         let (kind, seq) = read_frame_into(reader, round_id, cap, payload)?;
         *received += frame_bytes(payload.len());
         match kind {
-            FrameKind::CtChunk => {
-                let seq = seq as usize;
-                anyhow::ensure!(seq < n_cts, "ciphertext chunk {seq} out of range");
-                anyhow::ensure!(cts[seq].is_none(), "duplicate ciphertext chunk {seq}");
-                let shard = ciphertext_shard_from_bytes(payload, params)?;
-                anyhow::ensure!(
-                    shard.lo == 0 && shard.hi == params.num_limbs(),
-                    "ciphertext chunk must carry the full limb range, got [{}, {})",
-                    shard.lo,
-                    shard.hi
-                );
-                let mut ct = Ciphertext::zero(params);
-                shard.scatter_into(&mut ct);
-                cts[seq] = Some(ct);
-            }
-            FrameKind::Plain => {
-                anyhow::ensure!(
-                    seq == next_plain_seq,
-                    "plaintext chunk {seq} out of order (expected {next_plain_seq})"
-                );
-                next_plain_seq += 1;
-                anyhow::ensure!(
-                    payload.len() % 4 == 0,
-                    "plaintext payload not f32-aligned"
-                );
-                let k = payload.len() / 4;
-                anyhow::ensure!(
-                    plain.len() + k <= n_plain,
-                    "plaintext remainder overflows the declared {n_plain} values"
-                );
-                for c in payload.chunks_exact(4) {
-                    plain.push(f32::from_le_bytes(c.try_into().unwrap()));
-                }
-            }
+            FrameKind::CtChunk => asm.accept_ct(params, seq, payload)?,
+            FrameKind::Plain => asm.accept_plain(seq, payload)?,
             FrameKind::End => {
-                anyhow::ensure!(
-                    cts.iter().all(|c| c.is_some()),
-                    "upload sealed with missing ciphertext chunks"
-                );
-                anyhow::ensure!(
-                    plain.len() == n_plain,
-                    "upload sealed with {} of {n_plain} plaintext values",
-                    plain.len()
-                );
                 timing = decode_end_timing(payload)?;
                 break;
             }
@@ -504,16 +461,16 @@ pub(crate) fn read_upload<R: std::io::Read, F: Fn() -> Instant>(
             other => anyhow::bail!("unexpected {other:?} frame in an upload"),
         }
     }
+    let update = asm.finish()?;
     let mut ack_w = ack_stream;
     write_frame(&mut ack_w, round_id, FrameKind::Ack, 0, &0u32.to_le_bytes())?;
-    let cts: Vec<Ciphertext> = cts.into_iter().map(|c| c.unwrap()).collect();
     Ok(UploadFrames {
         client,
         alpha,
         train_secs: timing.0,
         encrypt_secs: timing.1,
         loss: timing.2,
-        update: EncryptedUpdate { cts, plain, total },
+        update,
     })
 }
 

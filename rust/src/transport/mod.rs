@@ -38,6 +38,7 @@
 pub mod client;
 pub mod frame;
 pub mod intake;
+pub(crate) mod reassembly;
 pub mod session;
 
 pub use client::{
@@ -52,5 +53,6 @@ pub use intake::{
     IntakeConfig, IntakeOutcome, TcpIntake, UpdateShape, UNIDENTIFIED_CLIENT,
 };
 pub use session::{
-    ClientSession, DownlinkOutcome, PeerSession, RoundDownlink, SessionHub, SessionOpts,
+    query_stats, ClientSession, DownlinkOutcome, PeerSession, RoundDownlink, SessionHub,
+    SessionOpts, STATS_REPLY_MAX_BYTES,
 };

@@ -1,0 +1,161 @@
+//! Chunked-update reassembly shared by the uplink (`intake::read_upload`)
+//! and downlink (`ClientSession::recv_round`) paths.
+//!
+//! Both directions stream one [`crate::he_agg::EncryptedUpdate`] as
+//! CT_CHUNK frames (full-limb shard views, any order, no duplicates) plus
+//! in-order PLAIN frames (f32 LE), terminated by an END/DOWN_END frame.
+//! The validation rules are identical, so both loops feed this assembler —
+//! one instrumented, fuzz-hardened implementation instead of two
+//! hand-kept copies (ROADMAP item 1 follow-up).
+
+use crate::ckks::serialize::ciphertext_shard_from_bytes;
+use crate::ckks::{Ciphertext, CkksParams};
+use crate::he_agg::EncryptedUpdate;
+
+/// Incremental reassembly of one chunked update against a declared shape.
+pub(crate) struct ChunkAssembler {
+    n_plain: usize,
+    total: usize,
+    cts: Vec<Option<Ciphertext>>,
+    plain: Vec<f32>,
+    next_plain_seq: u32,
+}
+
+impl ChunkAssembler {
+    /// Start reassembly toward a declared `(n_cts, n_plain, total)` shape
+    /// (the BEGIN/DOWN_BEGIN preamble, already validated by the caller).
+    pub fn new(n_cts: usize, n_plain: usize, total: usize) -> Self {
+        ChunkAssembler {
+            n_plain,
+            total,
+            cts: (0..n_cts).map(|_| None).collect(),
+            plain: Vec::with_capacity(n_plain),
+            next_plain_seq: 0,
+        }
+    }
+
+    /// Accept one CT_CHUNK payload: in-range seq, no duplicates, and the
+    /// shard must cover the full limb range.
+    pub fn accept_ct(
+        &mut self,
+        params: &CkksParams,
+        seq: u32,
+        payload: &[u8],
+    ) -> anyhow::Result<()> {
+        let _s = crate::obs::span_arg("transport", "assemble_ct", u64::from(seq));
+        let seq = seq as usize;
+        anyhow::ensure!(seq < self.cts.len(), "ciphertext chunk {seq} out of range");
+        anyhow::ensure!(self.cts[seq].is_none(), "duplicate ciphertext chunk {seq}");
+        let shard = ciphertext_shard_from_bytes(payload, params)?;
+        anyhow::ensure!(
+            shard.lo == 0 && shard.hi == params.num_limbs(),
+            "ciphertext chunk must carry the full limb range, got [{}, {})",
+            shard.lo,
+            shard.hi
+        );
+        let mut ct = Ciphertext::zero(params);
+        shard.scatter_into(&mut ct);
+        self.cts[seq] = Some(ct);
+        Ok(())
+    }
+
+    /// Accept one PLAIN payload: in-order seq, f32-aligned, within the
+    /// declared value count.
+    pub fn accept_plain(&mut self, seq: u32, payload: &[u8]) -> anyhow::Result<()> {
+        let _s = crate::obs::span_arg("transport", "assemble_plain", u64::from(seq));
+        anyhow::ensure!(
+            seq == self.next_plain_seq,
+            "plaintext chunk {seq} out of order (expected {})",
+            self.next_plain_seq
+        );
+        self.next_plain_seq += 1;
+        anyhow::ensure!(payload.len() % 4 == 0, "plaintext payload not f32-aligned");
+        let k = payload.len() / 4;
+        anyhow::ensure!(
+            self.plain.len() + k <= self.n_plain,
+            "plaintext remainder overflows the declared {} values",
+            self.n_plain
+        );
+        for c in payload.chunks_exact(4) {
+            self.plain.push(f32::from_le_bytes(c.try_into().unwrap()));
+        }
+        Ok(())
+    }
+
+    /// Seal the update (the END/DOWN_END frame arrived): every declared
+    /// chunk must be present.
+    pub fn finish(self) -> anyhow::Result<EncryptedUpdate> {
+        anyhow::ensure!(
+            self.cts.iter().all(|c| c.is_some()),
+            "update sealed with missing ciphertext chunks"
+        );
+        anyhow::ensure!(
+            self.plain.len() == self.n_plain,
+            "update sealed with {} of {} plaintext values",
+            self.plain.len(),
+            self.n_plain
+        );
+        Ok(EncryptedUpdate {
+            cts: self.cts.into_iter().map(|c| c.unwrap()).collect(),
+            plain: self.plain,
+            total: self.total,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::serialize::ciphertext_shard_to_bytes;
+
+    fn params() -> CkksParams {
+        CkksParams::new(256, 3, 30).unwrap()
+    }
+
+    fn ct_bytes(p: &CkksParams) -> Vec<u8> {
+        ciphertext_shard_to_bytes(&Ciphertext::zero(p), 0, p.num_limbs())
+    }
+
+    #[test]
+    fn reassembles_out_of_order_cts_and_in_order_plain() {
+        let p = params();
+        let mut a = ChunkAssembler::new(2, 3, 100);
+        a.accept_ct(&p, 1, &ct_bytes(&p)).unwrap();
+        a.accept_ct(&p, 0, &ct_bytes(&p)).unwrap();
+        a.accept_plain(0, &1.0f32.to_le_bytes()).unwrap();
+        let mut two = Vec::new();
+        two.extend_from_slice(&2.0f32.to_le_bytes());
+        two.extend_from_slice(&3.0f32.to_le_bytes());
+        a.accept_plain(1, &two).unwrap();
+        let u = a.finish().unwrap();
+        assert_eq!(u.cts.len(), 2);
+        assert_eq!(u.plain, vec![1.0, 2.0, 3.0]);
+        assert_eq!(u.total, 100);
+    }
+
+    #[test]
+    fn rejects_malformed_sequences() {
+        let p = params();
+        // duplicate ct
+        let mut a = ChunkAssembler::new(1, 0, 1);
+        a.accept_ct(&p, 0, &ct_bytes(&p)).unwrap();
+        assert!(a.accept_ct(&p, 0, &ct_bytes(&p)).is_err());
+        // out-of-range ct
+        let mut a = ChunkAssembler::new(1, 0, 1);
+        assert!(a.accept_ct(&p, 1, &ct_bytes(&p)).is_err());
+        // out-of-order plain
+        let mut a = ChunkAssembler::new(0, 2, 2);
+        assert!(a.accept_plain(1, &0.0f32.to_le_bytes()).is_err());
+        // unaligned plain
+        let mut a = ChunkAssembler::new(0, 2, 2);
+        assert!(a.accept_plain(0, &[0u8; 3]).is_err());
+        // plain overflow
+        let mut a = ChunkAssembler::new(0, 1, 1);
+        assert!(a.accept_plain(0, &[0u8; 8]).is_err());
+        // incomplete at seal: missing ct, then missing plain
+        let a = ChunkAssembler::new(1, 0, 1);
+        assert!(a.finish().is_err());
+        let a = ChunkAssembler::new(0, 1, 1);
+        assert!(a.finish().is_err());
+    }
+}

@@ -38,8 +38,8 @@ use super::frame::{
 };
 use super::intake::{read_upload, IntakeConfig, IntakeOutcome, UpdateShape, UNIDENTIFIED_CLIENT};
 use crate::agg_engine::Arrival;
-use crate::ckks::serialize::{ciphertext_shard_append, ciphertext_shard_from_bytes};
-use crate::ckks::{Ciphertext, CkksParams};
+use crate::ckks::serialize::ciphertext_shard_append;
+use crate::ckks::CkksParams;
 use crate::he_agg::{EncryptedUpdate, EncryptionMask};
 use std::collections::HashMap;
 use std::io::{BufReader, BufWriter, Write};
@@ -530,6 +530,15 @@ fn handshake(shared: &HubShared, stream: TcpStream) -> anyhow::Result<()> {
         WELCOME_PAYLOAD_BYTES.max(super::frame::HELLO_PAYLOAD_BYTES),
         &mut sess.read_buf,
     )?;
+    if kind == FrameKind::Stats {
+        // live metrics query (the `stats` CLI subcommand): answer with the
+        // snapshot and close — no session slot is claimed, so probes can
+        // never evict or exhaust client registrations
+        let snap = crate::obs::metrics::snapshot().to_string();
+        let mut w = &sess.stream;
+        write_frame(&mut w, CONTROL_ROUND, FrameKind::StatsReply, 0, snap.as_bytes())?;
+        return Ok(());
+    }
     anyhow::ensure!(kind == FrameKind::Hello, "expected HELLO, got {kind:?}");
     let client = decode_hello(&sess.read_buf)?;
     anyhow::ensure!(client != UNIDENTIFIED_CLIENT, "client id {client} is reserved");
@@ -554,6 +563,7 @@ fn handshake(shared: &HubShared, stream: TcpStream) -> anyhow::Result<()> {
     // rejoin: the replaced (dead) session's socket is shut down, outside
     // the map lock so a reader still draining it cannot stall accepts
     if let Some(old) = replaced {
+        crate::obs::metrics::rejoin();
         if let Ok(old) = old.try_lock() {
             old.stream.shutdown(std::net::Shutdown::Both).ok();
         }
@@ -571,6 +581,32 @@ fn handshake(shared: &HubShared, stream: TcpStream) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Upper bound on a STATS_REPLY payload (a metrics snapshot is a few KiB of
+/// JSON; 1 MiB caps what a malicious "server" can make the querier
+/// allocate).
+pub const STATS_REPLY_MAX_BYTES: usize = 1 << 20;
+
+/// Query a live coordinator's metrics snapshot over the session protocol:
+/// dial `addr`, send a STATS frame in place of a HELLO, parse the JSON
+/// STATS_REPLY. The server answers and closes without registering a
+/// session, so this is safe against a coordinator mid-round.
+pub fn query_stats(addr: &str, timeout: Duration) -> anyhow::Result<crate::util::json::Json> {
+    let stream = TcpStream::connect(addr)
+        .map_err(|e| anyhow::anyhow!("cannot connect stats query to {addr}: {e}"))?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    let mut w = &stream;
+    write_frame(&mut w, CONTROL_ROUND, FrameKind::Stats, 0, &[])?;
+    let mut reader = BufReader::new(stream);
+    let mut buf = Vec::new();
+    let (kind, _) = read_frame_into(&mut reader, CONTROL_ROUND, STATS_REPLY_MAX_BYTES, &mut buf)?;
+    anyhow::ensure!(kind == FrameKind::StatsReply, "expected STATS_REPLY, got {kind:?}");
+    crate::util::json::Json::parse(
+        std::str::from_utf8(&buf).map_err(|e| anyhow::anyhow!("non-UTF-8 stats reply: {e}"))?,
+    )
+}
+
 /// Write one round's downlink frames to a session (preamble, the
 /// pre-encoded shared aggregate payloads when carried, DOWN_END); returns
 /// the bytes written.
@@ -580,6 +616,7 @@ fn push_round(
     down: &DownBegin,
     payloads: Option<(&[Vec<u8>], &[Vec<u8>])>,
 ) -> std::io::Result<u64> {
+    let _span = crate::obs::span_arg("transport", "push_round", round);
     // buffered writer: frame headers/trailers coalesce with their payloads
     // instead of going out as separate NODELAY'd segments
     let mut w = BufWriter::with_capacity(64 * 1024, &sess.stream);
@@ -743,6 +780,7 @@ impl ClientSession {
         round: u64,
         expect_shape: Option<UpdateShape>,
     ) -> anyhow::Result<RoundDownlink> {
+        let _span = crate::obs::span_arg("transport", "recv_round", round);
         let bytes0 = self.bytes_down;
         let (kind, _) = self.read_downlink_frame(round, self.opts.round_wait)?;
         anyhow::ensure!(kind == FrameKind::DownBegin, "expected DOWN_BEGIN, got {kind:?}");
@@ -773,66 +811,18 @@ impl ClientSession {
                 down.n_plain,
                 down.total
             );
-            let mut cts: Vec<Option<Ciphertext>> = (0..down.n_cts).map(|_| None).collect();
-            let mut plain: Vec<f32> = Vec::with_capacity(down.n_plain);
-            let mut next_plain_seq = 0u32;
+            let mut asm =
+                super::reassembly::ChunkAssembler::new(down.n_cts, down.n_plain, down.total);
             loop {
                 let (kind, seq) = self.read_downlink_frame(round, self.opts.io_timeout)?;
                 match kind {
-                    FrameKind::CtChunk => {
-                        let seq = seq as usize;
-                        anyhow::ensure!(seq < down.n_cts, "downlink chunk {seq} out of range");
-                        anyhow::ensure!(cts[seq].is_none(), "duplicate downlink chunk {seq}");
-                        let shard = ciphertext_shard_from_bytes(&self.read_buf, &self.params)?;
-                        anyhow::ensure!(
-                            shard.lo == 0 && shard.hi == self.params.num_limbs(),
-                            "downlink chunk must carry the full limb range"
-                        );
-                        let mut ct = Ciphertext::zero(&self.params);
-                        shard.scatter_into(&mut ct);
-                        cts[seq] = Some(ct);
-                    }
-                    FrameKind::Plain => {
-                        anyhow::ensure!(
-                            seq == next_plain_seq,
-                            "downlink plaintext chunk {seq} out of order"
-                        );
-                        next_plain_seq += 1;
-                        anyhow::ensure!(
-                            self.read_buf.len() % 4 == 0,
-                            "downlink plaintext payload not f32-aligned"
-                        );
-                        let k = self.read_buf.len() / 4;
-                        anyhow::ensure!(
-                            plain.len() + k <= down.n_plain,
-                            "downlink plaintext overflows the declared {} values",
-                            down.n_plain
-                        );
-                        for c in self.read_buf.chunks_exact(4) {
-                            plain.push(f32::from_le_bytes(c.try_into().unwrap()));
-                        }
-                    }
-                    FrameKind::DownEnd => {
-                        anyhow::ensure!(
-                            cts.iter().all(|c| c.is_some()),
-                            "downlink ended with missing ciphertext chunks"
-                        );
-                        anyhow::ensure!(
-                            plain.len() == down.n_plain,
-                            "downlink ended with {} of {} plaintext values",
-                            plain.len(),
-                            down.n_plain
-                        );
-                        break;
-                    }
+                    FrameKind::CtChunk => asm.accept_ct(&self.params, seq, &self.read_buf)?,
+                    FrameKind::Plain => asm.accept_plain(seq, &self.read_buf)?,
+                    FrameKind::DownEnd => break,
                     other => anyhow::bail!("unexpected {other:?} frame in a downlink"),
                 }
             }
-            agg = Some(EncryptedUpdate {
-                cts: cts.into_iter().map(|c| c.unwrap()).collect(),
-                plain,
-                total: down.total,
-            });
+            agg = Some(asm.finish()?);
         } else {
             let (kind, _) = self.read_downlink_frame(round, self.opts.io_timeout)?;
             anyhow::ensure!(kind == FrameKind::DownEnd, "expected DOWN_END, got {kind:?}");

@@ -14,6 +14,21 @@ pub enum Level {
     Debug = 3,
 }
 
+impl Level {
+    /// Parse a `--log-level` value.
+    pub fn parse(s: &str) -> anyhow::Result<Level> {
+        Ok(match s {
+            "error" => Level::Error,
+            "warn" => Level::Warn,
+            "info" => Level::Info,
+            "debug" => Level::Debug,
+            other => anyhow::bail!(
+                "unknown log level {other:?} (expected error|warn|info|debug)"
+            ),
+        })
+    }
+}
+
 static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
 
 static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
@@ -76,6 +91,15 @@ macro_rules! log_error {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn parse_accepts_the_four_levels_only() {
+        assert_eq!(Level::parse("error").unwrap(), Level::Error);
+        assert_eq!(Level::parse("warn").unwrap(), Level::Warn);
+        assert_eq!(Level::parse("info").unwrap(), Level::Info);
+        assert_eq!(Level::parse("debug").unwrap(), Level::Debug);
+        assert!(Level::parse("trace").is_err());
+    }
 
     #[test]
     fn level_ordering() {

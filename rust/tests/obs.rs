@@ -1,0 +1,243 @@
+//! Observability substrate gates (DESIGN.md §10): the metrics registry
+//! under concurrent recording, trace-ring overflow accounting, and the
+//! golden schemas of the `--report-json` / `--trace-out` exporters.
+//!
+//! Metrics and the tracer are process-global, so every test serializes on
+//! one mutex and resets both before making assertions.
+
+use fedml_he::obs::{self, metrics, trace};
+use fedml_he::transport::FrameKind;
+use fedml_he::util::json::Json;
+use std::sync::Mutex;
+
+static GLOBAL_STATE: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    GLOBAL_STATE.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+#[test]
+fn concurrent_recording_matches_serial_oracle() {
+    let _g = lock();
+    metrics::reset();
+    const THREADS: u64 = 8;
+    const ITERS: u64 = 1000;
+    std::thread::scope(|s| {
+        for _ in 0..THREADS {
+            s.spawn(|| {
+                for i in 0..ITERS {
+                    metrics::frame_sent(FrameKind::CtChunk as u32, 100);
+                    metrics::frame_received(FrameKind::Ack as u32, 36);
+                    metrics::crc_reject();
+                    metrics::straggler_drops(2);
+                    metrics::rejoin();
+                    metrics::scratch_pool(i % 2 == 0);
+                    metrics::ntt_forward();
+                    metrics::ntt_inverse();
+                    metrics::intake_enqueued();
+                    metrics::session_rtt_secs(1e-6 * (i + 1) as f64);
+                }
+                metrics::intake_drained(ITERS);
+            });
+        }
+    });
+    let snap = metrics::snapshot();
+    let total = THREADS * ITERS;
+    let get = |k: &str| snap.get(k).and_then(Json::as_u64).unwrap();
+    assert_eq!(
+        snap.get("frames_sent").unwrap().get("ct_chunk").unwrap().as_u64(),
+        Some(total)
+    );
+    assert_eq!(
+        snap.get("bytes_sent").unwrap().get("ct_chunk").unwrap().as_u64(),
+        Some(total * 100)
+    );
+    assert_eq!(
+        snap.get("frames_received").unwrap().get("ack").unwrap().as_u64(),
+        Some(total)
+    );
+    assert_eq!(get("crc_rejects"), total);
+    assert_eq!(get("frame_rejects"), total); // crc rejects fold in
+    assert_eq!(get("straggler_drops"), 2 * total);
+    assert_eq!(get("rejoins"), total);
+    assert_eq!(get("scratch_pool_hits"), total / 2);
+    assert_eq!(get("scratch_pool_misses"), total / 2);
+    assert_eq!(get("ntt_forward"), total);
+    assert_eq!(get("ntt_inverse"), total);
+    assert_eq!(get("intake_offered"), total);
+    assert_eq!(get("intake_queue_depth"), 0);
+    assert!(get("intake_queue_peak") >= ITERS); // at least one thread's burst
+    assert_eq!(
+        snap.get("session_rtt").unwrap().get("count").unwrap().as_u64(),
+        Some(total)
+    );
+    metrics::reset();
+    let snap = metrics::snapshot();
+    assert_eq!(get_in(&snap, "crc_rejects"), 0);
+    assert_eq!(
+        snap.get("frames_sent").unwrap().get("ct_chunk").unwrap().as_u64(),
+        Some(0)
+    );
+}
+
+fn get_in(snap: &Json, k: &str) -> u64 {
+    snap.get(k).and_then(Json::as_u64).unwrap()
+}
+
+#[test]
+fn trace_ring_overflow_drops_oldest_and_counts() {
+    let _g = lock();
+    trace::clear();
+    trace::set_enabled(true);
+    const EXTRA: usize = 250;
+    for i in 0..trace::RING_CAPACITY + EXTRA {
+        let _s = obs::span_arg("test", "overflow", i as u64);
+    }
+    trace::set_enabled(false);
+    let spans = trace::drain();
+    let ours: Vec<_> = spans.iter().filter(|r| r.cat == "test").collect();
+    assert_eq!(ours.len(), trace::RING_CAPACITY);
+    // oldest EXTRA spans were overwritten: the survivors start at EXTRA
+    assert_eq!(ours.first().unwrap().arg, EXTRA as u64);
+    assert_eq!(ours.last().unwrap().arg, (trace::RING_CAPACITY + EXTRA - 1) as u64);
+    let (recorded, dropped) = trace::stats();
+    assert_eq!(recorded, trace::RING_CAPACITY as u64);
+    assert_eq!(dropped, EXTRA as u64);
+    trace::clear();
+}
+
+#[test]
+fn disabled_spans_record_nothing() {
+    let _g = lock();
+    trace::clear();
+    assert!(!trace::enabled());
+    for _ in 0..64 {
+        let _s = obs::span("test", "inert");
+    }
+    assert_eq!(trace::drain().len(), 0);
+}
+
+#[test]
+fn chrome_trace_schema_holds() {
+    let _g = lock();
+    trace::clear();
+    trace::set_enabled(true);
+    {
+        let _outer = obs::span("coordinator", "round");
+        let _inner = obs::span_arg("codec", "encrypt_chunk", 3);
+    }
+    trace::set_enabled(false);
+    let doc = obs::export::chrome_trace_json();
+    assert_eq!(doc.get("displayTimeUnit").unwrap().as_str(), Some("ms"));
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    assert_eq!(events.len(), 2);
+    for ev in events {
+        assert_eq!(ev.get("ph").unwrap().as_str(), Some("X"));
+        assert!(ev.get("name").unwrap().as_str().is_some());
+        assert!(ev.get("cat").unwrap().as_str().is_some());
+        assert!(ev.get("ts").unwrap().as_f64().is_some());
+        assert!(ev.get("dur").unwrap().as_f64().is_some());
+        assert!(ev.get("pid").unwrap().as_u64().is_some());
+        assert!(ev.get("tid").unwrap().as_u64().is_some());
+        assert!(ev.get("args").unwrap().get("depth").is_some());
+    }
+    // the inner span closed first and carries its argument + depth 1
+    let inner = events
+        .iter()
+        .find(|e| e.get("name").unwrap().as_str() == Some("encrypt_chunk"))
+        .unwrap();
+    assert_eq!(inner.get("args").unwrap().get("arg").unwrap().as_u64(), Some(3));
+    assert_eq!(inner.get("args").unwrap().get("depth").unwrap().as_u64(), Some(1));
+    // serialized form round-trips through the JSON parser
+    let reparsed = Json::parse(&doc.to_string()).unwrap();
+    assert_eq!(
+        reparsed.get("traceEvents").unwrap().as_arr().unwrap().len(),
+        2
+    );
+    trace::clear();
+}
+
+#[test]
+fn run_report_envelope_schema_holds() {
+    let _g = lock();
+    metrics::reset();
+    trace::clear();
+    let report = Json::obj(vec![("rounds", Json::Arr(vec![])), ("clients", 3u64.into())]);
+    let env = obs::run_report(report);
+    assert_eq!(
+        env.get("schema").unwrap().as_str(),
+        Some(obs::export::REPORT_SCHEMA_NAME)
+    );
+    assert_eq!(
+        env.get("version").unwrap().as_u64(),
+        Some(obs::export::REPORT_SCHEMA_VERSION)
+    );
+    assert_eq!(env.get("report").unwrap().get("clients").unwrap().as_u64(), Some(3));
+    let m = env.get("metrics").unwrap();
+    for key in [
+        "frames_sent",
+        "bytes_sent",
+        "frames_received",
+        "bytes_received",
+        "crc_rejects",
+        "frame_rejects",
+        "straggler_drops",
+        "rejoins",
+        "scratch_pool_hits",
+        "scratch_pool_misses",
+        "ntt_forward",
+        "ntt_inverse",
+        "intake_offered",
+        "intake_queue_depth",
+        "intake_queue_peak",
+        "session_rtt",
+        "spans_recorded",
+        "spans_dropped",
+    ] {
+        assert!(m.get(key).is_some(), "metrics snapshot missing key {key}");
+    }
+    let rtt = m.get("session_rtt").unwrap();
+    for key in ["count", "sum_secs", "max_secs", "mean_secs", "log2_ns_buckets"] {
+        assert!(rtt.get(key).is_some(), "rtt histogram missing key {key}");
+    }
+    assert!(env.get("trace").unwrap().get("spans_recorded").is_some());
+    assert!(env.get("trace").unwrap().get("spans_dropped").is_some());
+    // every per-kind frame counter uses the shared name table
+    let sent = m.get("frames_sent").unwrap().as_obj().unwrap();
+    assert_eq!(sent.len(), metrics::N_FRAME_KINDS);
+    for name in metrics::FRAME_KIND_NAMES {
+        assert!(sent.contains_key(name), "frames_sent missing kind {name}");
+    }
+}
+
+/// `obs` deliberately has no dependency on `transport`, so the name table
+/// is kept in lockstep with [`FrameKind`] by this gate: every wire id above
+/// zero decodes to a kind, ids beyond the table don't, and the snapshot
+/// keys match the enum variants' snake_case names.
+#[test]
+fn frame_kind_name_table_matches_wire_enum() {
+    for id in 1..metrics::N_FRAME_KINDS as u32 {
+        let kind = FrameKind::from_u32(id)
+            .unwrap_or_else(|_| panic!("wire id {id} named in FRAME_KIND_NAMES but not decodable"));
+        let snake: String = format!("{kind:?}")
+            .chars()
+            .enumerate()
+            .flat_map(|(i, c)| {
+                if c.is_uppercase() && i > 0 {
+                    vec!['_', c.to_ascii_lowercase()]
+                } else {
+                    vec![c.to_ascii_lowercase()]
+                }
+            })
+            .collect();
+        assert_eq!(
+            metrics::FRAME_KIND_NAMES[id as usize], snake,
+            "name table out of sync at wire id {id}"
+        );
+    }
+    assert!(
+        FrameKind::from_u32(metrics::N_FRAME_KINDS as u32).is_err(),
+        "FrameKind grew past the metrics name table — extend N_FRAME_KINDS"
+    );
+    assert_eq!(metrics::FRAME_KIND_NAMES[0], "unknown");
+}
