@@ -217,6 +217,42 @@ fn run_core(smoke: bool) {
         params.ntt[0].inverse(&mut buf);
     }) / 2.0;
 
+    // --- primitive: scalar vs vector butterflies on the same lazy NTT
+    // (the §Perf SIMD delta; falls back to scalar-vs-scalar on hosts
+    // without a vector unit, reported via the kernel name below).
+    let scalar_k = fedml_he::ckks::simd::scalar();
+    let ntt_scalar_s = time_iters(ntt_iters, || {
+        params.ntt[0].forward_with(scalar_k, &mut buf);
+        params.ntt[0].inverse_with(scalar_k, &mut buf);
+    }) / 2.0;
+    let simd_k = fedml_he::ckks::simd::detected_simd();
+    let ntt_simd_s = match simd_k {
+        Some(k) => {
+            time_iters(ntt_iters, || {
+                params.ntt[0].forward_with(k, &mut buf);
+                params.ntt[0].inverse_with(k, &mut buf);
+            }) / 2.0
+        }
+        None => ntt_scalar_s,
+    };
+    let simd_name = simd_k.map_or("scalar", |k| k.name());
+
+    // --- packing: run-aware vs chunk-aligned ciphertext counts for the
+    // BERT layer mask (p = 0.1). Pure layout arithmetic — deterministic and
+    // identical in smoke and full mode, so CI diffs the values exactly.
+    let bert = fedml_he::fl::model_meta::lookup("bert").unwrap();
+    let spans = bert.layer_spans();
+    let scores: Vec<f32> = (0..spans.len()).map(|i| ((i * 37) % 101) as f32).collect();
+    let bert_mask = fedml_he::he_agg::EncryptionMask::from_layer_scores(
+        bert.params as usize,
+        &scores,
+        &spans,
+        0.1,
+    );
+    let pack_batch = 4096usize;
+    let run_aware = fedml_he::he_agg::PackingPlan::run_aware(bert_mask.runs(), pack_batch);
+    let chunk_aligned = fedml_he::he_agg::PackingPlan::chunk_aligned(bert_mask.runs(), pack_batch);
+
     let pk_b = seed::VecPoly::from_rns(&pk.b_ntt);
     let pk_a = seed::VecPoly::from_rns(&pk.a_ntt);
 
@@ -323,6 +359,23 @@ fn run_core(smoke: bool) {
         fedml_he::util::human_secs(ntt_lazy_s),
         ntt_ref_s / ntt_lazy_s
     );
+    println!(
+        "NTT kernels (n={}): scalar {} vs {} {} ({:.2}x)",
+        params.n,
+        fedml_he::util::human_secs(ntt_scalar_s),
+        simd_name,
+        fedml_he::util::human_secs(ntt_simd_s),
+        ntt_scalar_s / ntt_simd_s
+    );
+    println!(
+        "BERT packing (p=0.1, batch {pack_batch}): run-aware {} cts at {:.4} utilization \
+         vs chunk-aligned {} cts at {:.4} ({} fewer)",
+        run_aware.n_cts(),
+        run_aware.slot_utilization(),
+        chunk_aligned.n_cts(),
+        chunk_aligned.slot_utilization(),
+        chunk_aligned.n_cts() - run_aware.n_cts()
+    );
 
     let out = Json::obj(vec![
         ("bench", "perf_hotpath".into()),
@@ -343,6 +396,33 @@ fn run_core(smoke: bool) {
                 ("ntt_reference_s", ntt_ref_s.into()),
                 ("ntt_lazy_s", ntt_lazy_s.into()),
                 ("ntt_speedup", (ntt_ref_s / ntt_lazy_s).into()),
+                ("ntt_scalar_s", ntt_scalar_s.into()),
+                ("ntt_simd_s", ntt_simd_s.into()),
+                ("ntt_simd_speedup", (ntt_scalar_s / ntt_simd_s).into()),
+                ("ntt_kernel", simd_name.into()),
+            ]),
+        ),
+        (
+            "packing",
+            Json::obj(vec![
+                ("model", "bert".into()),
+                ("mask_p", 0.1.into()),
+                ("batch", pack_batch.into()),
+                ("encrypted", bert_mask.encrypted_count().into()),
+                ("run_aware_cts", run_aware.n_cts().into()),
+                (
+                    "run_aware_slot_utilization",
+                    run_aware.slot_utilization().into(),
+                ),
+                ("chunk_aligned_cts", chunk_aligned.n_cts().into()),
+                (
+                    "chunk_aligned_slot_utilization",
+                    chunk_aligned.slot_utilization().into(),
+                ),
+                (
+                    "ct_reduction",
+                    (chunk_aligned.n_cts() - run_aware.n_cts()).into(),
+                ),
             ]),
         ),
         ("models", Json::Obj(models_json)),

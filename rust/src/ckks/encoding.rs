@@ -120,6 +120,15 @@ pub struct Encoder {
     zeta_inv: Vec<C64>,
 }
 
+/// Pooled staging buffers for [`Encoder::encode_into`]: the FFT evaluation
+/// vector and the wide signed coefficients, reused across chunks so the
+/// per-round encode fan-out allocates nothing after warm-up.
+#[derive(Default)]
+pub struct EncodeScratch {
+    e: Vec<C64>,
+    coeffs: Vec<i128>,
+}
+
 impl Encoder {
     pub fn new(params: Arc<CkksParams>) -> Self {
         let n = params.n;
@@ -146,25 +155,38 @@ impl Encoder {
 
     /// Encode up to `batch()` real values at scale Δ into an RNS plaintext.
     pub fn encode(&self, values: &[f64]) -> RnsPoly {
+        let mut scratch = EncodeScratch::default();
+        let mut out = RnsPoly::zero(&self.params);
+        self.encode_into(values, &mut scratch, &mut out);
+        out
+    }
+
+    /// [`Self::encode`] into a caller-owned plaintext, staging the FFT
+    /// evaluation vector and wide coefficients in pooled scratch —
+    /// allocation-free after warm-up (§Perf: the codec's per-chunk encrypt
+    /// fan-out goes through here so steady-state rounds stop allocating).
+    /// Bitwise identical to [`Self::encode`].
+    pub fn encode_into(&self, values: &[f64], scratch: &mut EncodeScratch, out: &mut RnsPoly) {
         let n = self.params.n;
         let half = n / 2;
         assert!(values.len() <= half, "too many values for one plaintext");
+        let EncodeScratch { e, coeffs } = scratch;
         // Conjugate-symmetric evaluation vector.
-        let mut e = vec![C64::default(); n];
+        e.clear();
+        e.resize(n, C64::default());
         for (j, &v) in values.iter().enumerate() {
             e[j] = C64::new(v, 0.0);
             e[n - 1 - j] = C64::new(v, 0.0); // conj of a real value
         }
-        self.fft.inverse(&mut e);
+        self.fft.inverse(e);
         let delta = self.params.delta();
-        let coeffs: Vec<i128> = (0..n)
-            .map(|k| {
-                let u = e[k].mul(self.zeta_inv[k]);
-                // u is real up to fp error by conjugate symmetry.
-                (u.re * delta).round() as i128
-            })
-            .collect();
-        RnsPoly::from_signed_wide(&self.params, &coeffs)
+        coeffs.clear();
+        coeffs.extend((0..n).map(|k| {
+            let u = e[k].mul(self.zeta_inv[k]);
+            // u is real up to fp error by conjugate symmetry.
+            (u.re * delta).round() as i128
+        }));
+        out.assign_signed_wide(&self.params, coeffs);
     }
 
     /// Decode `n_values` slots from a coefficient-domain plaintext at the

@@ -25,9 +25,10 @@ pub mod ops;
 pub mod params;
 pub mod poly;
 pub mod serialize;
+pub mod simd;
 pub mod threshold;
 
-pub use encoding::Encoder;
+pub use encoding::{EncodeScratch, Encoder};
 pub use encrypt::{decrypt, decrypt_into, encrypt, encrypt_into, Ciphertext};
 pub use keys::{keygen, PublicKey, SecretKey};
 pub use params::CkksParams;

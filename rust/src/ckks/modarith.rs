@@ -70,6 +70,13 @@ impl Barrett {
         }
     }
 
+    /// The precomputed ⌊2^62/q⌋ magic — the SIMD kernels splat it into
+    /// vector lanes (crate-internal; < 2^32 whenever q > 2^30).
+    #[inline(always)]
+    pub(crate) fn magic(&self) -> u64 {
+        self.m
+    }
+
     /// Reduce a value < 2^62.
     #[inline(always)]
     pub fn reduce(&self, t: u64) -> u64 {

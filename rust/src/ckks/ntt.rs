@@ -24,6 +24,7 @@
 
 use super::modarith::{bit_reverse, inv_mod, mul_mod};
 use super::params::primitive_root_2n;
+use super::simd::NttKernel;
 
 /// Precomputed tables for one (q, n) pair.
 pub struct NttTables {
@@ -53,7 +54,7 @@ fn shoup_precompute(w: u64, q: u64) -> u64 {
 /// Shoup modular multiplication: `a·w mod q` given `w_shoup = ⌊w·2^64/q⌋`.
 /// Result is in [0, q).
 #[inline(always)]
-fn mul_mod_shoup(a: u64, w: u64, w_shoup: u64, q: u64) -> u64 {
+pub(crate) fn mul_mod_shoup(a: u64, w: u64, w_shoup: u64, q: u64) -> u64 {
     let r = mul_mod_shoup_lazy(a, w, w_shoup, q);
     if r >= q {
         r - q
@@ -66,7 +67,7 @@ fn mul_mod_shoup(a: u64, w: u64, w_shoup: u64, q: u64) -> u64 {
 /// subtract of the Harvey butterflies. Valid whenever `a·w < 2^64` (here
 /// a < 4q < 2^33 and w < q < 2^31).
 #[inline(always)]
-fn mul_mod_shoup_lazy(a: u64, w: u64, w_shoup: u64, q: u64) -> u64 {
+pub(crate) fn mul_mod_shoup_lazy(a: u64, w: u64, w_shoup: u64, q: u64) -> u64 {
     let hi = ((a as u128 * w_shoup as u128) >> 64) as u64;
     let r = a.wrapping_mul(w).wrapping_sub(hi.wrapping_mul(q));
     debug_assert!(r < 2 * q);
@@ -115,46 +116,39 @@ impl NttTables {
     ///
     /// §Perf: Harvey lazy butterflies — values ride in [0, 4q), the only
     /// reduction inside the loop is one conditional subtract of 2q on the
-    /// even wing; a single sweep at the end reduces to [0, q). `split_at_mut`
-    /// exposes the two wings as separate slices, removing every bounds check
-    /// and aliasing stall from the inner loop.
+    /// even wing; a single sweep at the end reduces to [0, q). The butterfly
+    /// stages run on the process-wide dispatched kernel
+    /// ([`crate::ckks::simd::active`]): AVX2 lanes where the host supports
+    /// them, the portable scalar loops otherwise — bitwise identical either
+    /// way.
     pub fn forward(&self, a: &mut [u64]) {
-        assert_eq!(a.len(), self.n);
+        let k = crate::ckks::simd::active();
         crate::obs::metrics::ntt_forward();
+        crate::obs::metrics::ntt_kernel(k.is_simd());
+        self.forward_with(k, a);
+    }
+
+    /// [`Self::forward`] on an explicit kernel (differential tests and the
+    /// bench drive both dispatch paths through this).
+    pub fn forward_with(&self, k: &dyn NttKernel, a: &mut [u64]) {
+        assert_eq!(a.len(), self.n);
         let q = self.q;
-        let two_q = 2 * q;
         let n = self.n;
         let mut t = n;
         let mut m = 1;
         while m < n {
             t >>= 1;
-            for i in 0..m {
-                let j1 = 2 * i * t;
-                let s = self.psi_rev[m + i];
-                let s_shoup = self.psi_rev_shoup[m + i];
-                let (lo, hi) = a[j1..j1 + 2 * t].split_at_mut(t);
-                for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
-                    let mut u = *x; // < 4q
-                    if u >= two_q {
-                        u -= two_q;
-                    }
-                    let v = mul_mod_shoup_lazy(*y, s, s_shoup, q); // < 2q
-                    *x = u + v; // < 4q
-                    *y = u + two_q - v; // < 4q
-                }
-            }
+            k.forward_stage(
+                a,
+                m,
+                t,
+                &self.psi_rev[m..2 * m],
+                &self.psi_rev_shoup[m..2 * m],
+                q,
+            );
             m <<= 1;
         }
-        for x in a.iter_mut() {
-            let mut v = *x;
-            if v >= two_q {
-                v -= two_q;
-            }
-            if v >= q {
-                v -= q;
-            }
-            *x = v;
-        }
+        k.forward_finish(a, q);
     }
 
     /// In-place inverse negacyclic NTT (inverse of [`Self::forward`]).
@@ -163,51 +157,47 @@ impl NttTables {
     /// §Perf: lazy butterflies keep values in [0, 2q); the final
     /// Gentleman–Sande stage, the n^{-1} scaling and the full reduction are
     /// fused into one pass using the precomputed `ψ^{-bitrev(1)}·n^{-1}`
-    /// twiddle — no separate scaling sweep over the array.
+    /// twiddle — no separate scaling sweep over the array. Stages dispatch
+    /// to the same runtime-selected kernel as [`Self::forward`].
     pub fn inverse(&self, a: &mut [u64]) {
-        assert_eq!(a.len(), self.n);
+        let k = crate::ckks::simd::active();
         crate::obs::metrics::ntt_inverse();
+        crate::obs::metrics::ntt_kernel(k.is_simd());
+        self.inverse_with(k, a);
+    }
+
+    /// [`Self::inverse`] on an explicit kernel.
+    pub fn inverse_with(&self, k: &dyn NttKernel, a: &mut [u64]) {
+        assert_eq!(a.len(), self.n);
         let q = self.q;
-        let two_q = 2 * q;
         let n = self.n;
         let mut t = 1;
         let mut m = n;
         while m > 2 {
             let h = m >> 1;
-            let mut j1 = 0;
-            for i in 0..h {
-                let s = self.inv_psi_rev[h + i];
-                let s_shoup = self.inv_psi_rev_shoup[h + i];
-                let (lo, hi) = a[j1..j1 + 2 * t].split_at_mut(t);
-                for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
-                    let u = *x; // < 2q
-                    let v = *y; // < 2q
-                    let mut sum = u + v; // < 4q
-                    if sum >= two_q {
-                        sum -= two_q;
-                    }
-                    *x = sum; // < 2q
-                    *y = mul_mod_shoup_lazy(u + two_q - v, s, s_shoup, q); // < 2q
-                }
-                j1 += 2 * t;
-            }
+            k.inverse_stage(
+                a,
+                h,
+                t,
+                &self.inv_psi_rev[h..2 * h],
+                &self.inv_psi_rev_shoup[h..2 * h],
+                q,
+            );
             t <<= 1;
             m = h;
         }
         // Fused final stage (m = 2): one butterfly pass over the two halves
         // with n^{-1} folded into both wings, fully reducing on the way out.
         let (lo, hi) = a.split_at_mut(n / 2);
-        for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
-            let u = *x; // < 2q
-            let v = *y; // < 2q
-            *x = mul_mod_shoup(u + v, self.n_inv, self.n_inv_shoup, q);
-            *y = mul_mod_shoup(
-                u + two_q - v,
-                self.inv_psi_last,
-                self.inv_psi_last_shoup,
-                q,
-            );
-        }
+        k.inverse_finish(
+            lo,
+            hi,
+            self.n_inv,
+            self.n_inv_shoup,
+            self.inv_psi_last,
+            self.inv_psi_last_shoup,
+            q,
+        );
     }
 
     /// The seed (pre-lazy) forward butterflies: fully reduced after every

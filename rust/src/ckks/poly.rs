@@ -115,30 +115,33 @@ impl RnsPoly {
     /// for |c| < 2^90 (hi < 2^26 < q so hi needs no reduction), which covers
     /// every encoding scale the scheme admits.
     pub fn from_signed_wide(params: &CkksParams, coeffs: &[i128]) -> Self {
+        let mut p = RnsPoly::zero(params);
+        p.assign_signed_wide(params, coeffs);
+        p
+    }
+
+    /// In-place body of [`Self::from_signed_wide`]: overwrite this
+    /// polynomial with the per-limb reduction of `coeffs` — allocation-free,
+    /// the encoder's pooled-arena path (§Perf). The receiver must already
+    /// have this parameter set's shape.
+    pub fn assign_signed_wide(&mut self, params: &CkksParams, coeffs: &[i128]) {
         assert_eq!(coeffs.len(), params.n);
-        let mut data = Vec::with_capacity(params.num_limbs() * params.n);
-        for (l, &q) in params.moduli.iter().enumerate() {
+        assert_eq!(self.n, params.n, "output polynomial shape mismatch");
+        assert_eq!(self.num_limbs, params.num_limbs(), "output limb mismatch");
+        for (l, limb) in self.data.chunks_exact_mut(self.n).enumerate() {
+            let q = params.moduli[l];
             let br = params.barrett[l];
             let two64 = ((1u128 << 64) % q as u128) as u64;
-            data.extend(coeffs.iter().map(|&c| {
+            for (d, &c) in limb.iter_mut().zip(coeffs.iter()) {
                 let abs = c.unsigned_abs();
                 debug_assert!(abs < 1u128 << 90, "encoding overflow");
                 let hi = (abs >> 64) as u64; // < 2^26 < q
                 let lo = (abs as u64) % q;
                 let r = add_mod(br.mul(hi, two64), lo, q);
-                if c < 0 {
-                    neg_mod(r, q)
-                } else {
-                    r
-                }
-            }));
+                *d = if c < 0 { neg_mod(r, q) } else { r };
+            }
         }
-        RnsPoly {
-            n: params.n,
-            num_limbs: params.num_limbs(),
-            data,
-            ntt_form: false,
-        }
+        self.ntt_form = false;
     }
 
     /// Uniform random polynomial over R_Q (public `a` of the key pair).

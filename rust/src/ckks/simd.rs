@@ -1,0 +1,657 @@
+//! Runtime-dispatched vector kernels for the CKKS hot core (§Perf).
+//!
+//! The NTT butterflies and the per-limb Barrett weighted-sum loops are the
+//! two inner loops every aggregation round flows through. This module puts
+//! them behind a small [`NttKernel`] trait with two implementations:
+//!
+//! - [`ScalarKernel`] — the portable loops, verbatim the arithmetic that
+//!   lived inline in `ntt.rs` / `ops.rs` / `agg_engine/shard.rs` before this
+//!   module existed. Always available; also the fallback for vector tails.
+//! - `Avx2Kernel` — AVX2 butterflies and Barrett reductions, four lanes per
+//!   iteration, built from `pmuludq` (32×32→64) partial products. Selected
+//!   only after `is_x86_feature_detected!("avx2")`, so its safe trait
+//!   methods are sound on any host that can obtain a handle to it.
+//!
+//! **Bitwise contract:** every kernel must produce outputs bitwise identical
+//! to [`ScalarKernel`] (and therefore to the seed reference butterflies kept
+//! in `ntt.rs` as the differential oracle). The AVX2 paths achieve this by
+//! computing the *exact* same integers — the partial-product decompositions
+//! below are exact under the crate-wide bounds q < 2^31 (so lazy values are
+//! < 4q < 2^33 and Barrett magics fit 32 bits), never approximations. The
+//! `tests/simd_ntt.rs` sweep pins this across every generated prime and
+//! ring degree on both dispatch paths.
+//!
+//! Dispatch is process-global ([`active`]) with an environment override:
+//! setting `FEDML_HE_NTT_KERNEL=scalar` forces the portable kernel even on
+//! hosts with AVX2 (CI runs the whole tier-1 suite both ways). A NEON
+//! implementation slots in as a third `NttKernel` impl behind the same
+//! trait — nothing outside this module changes.
+
+use std::sync::OnceLock;
+
+use super::modarith::Barrett;
+use super::ntt::{mul_mod_shoup, mul_mod_shoup_lazy};
+
+/// Environment variable consulted once per process by [`active`]:
+/// `scalar` forces [`ScalarKernel`]; any other value (or unset) auto-detects.
+pub const KERNEL_ENV: &str = "FEDML_HE_NTT_KERNEL";
+
+/// One vectorizable inner-loop backend for the CKKS hot core.
+///
+/// Stage methods receive the twiddle slices for that stage (the tables stay
+/// private to `NttTables`); weighted methods receive the limb's Barrett
+/// reducer. Implementations must be bitwise identical to [`ScalarKernel`].
+pub trait NttKernel: Sync {
+    /// Display name ("scalar", "avx2", ...).
+    fn name(&self) -> &'static str;
+
+    /// True for vectorized implementations (drives the obs kernel counters).
+    fn is_simd(&self) -> bool;
+
+    /// One forward Cooley–Tukey stage: `m` butterfly groups of width `t`
+    /// over `a` (len 2·m·t), group `i` twiddled by `psi[i]`. Values ride in
+    /// [0, 4q) (Harvey lazy reduction).
+    fn forward_stage(
+        &self,
+        a: &mut [u64],
+        m: usize,
+        t: usize,
+        psi: &[u64],
+        psi_shoup: &[u64],
+        q: u64,
+    );
+
+    /// Final forward sweep: reduce every element from [0, 4q) to [0, q).
+    fn forward_finish(&self, a: &mut [u64], q: u64);
+
+    /// One inverse Gentleman–Sande stage: `h` butterfly groups of width `t`,
+    /// group `i` twiddled by `psi[i]`. Values ride in [0, 2q).
+    fn inverse_stage(
+        &self,
+        a: &mut [u64],
+        h: usize,
+        t: usize,
+        psi: &[u64],
+        psi_shoup: &[u64],
+        q: u64,
+    );
+
+    /// Fused final inverse stage over the two half-arrays with n^{-1} folded
+    /// into both wings, fully reducing on the way out.
+    fn inverse_finish(
+        &self,
+        lo: &mut [u64],
+        hi: &mut [u64],
+        n_inv: u64,
+        n_inv_shoup: u64,
+        psi_last: u64,
+        psi_last_shoup: u64,
+        q: u64,
+    );
+
+    /// `dst[i] = src[i]·w mod q` for reduced `src` and `w` (the weighted-sum
+    /// init pass of `ops.rs` / `agg_engine/shard.rs`).
+    fn weighted_init(&self, dst: &mut [u64], src: &[u64], w: u64, br: Barrett);
+
+    /// `dst[i] += src[i]·w mod q` — plain u64 accumulation of Barrett
+    /// products; callers fold (reduce) before 2^62 can overflow.
+    fn weighted_accumulate(&self, dst: &mut [u64], src: &[u64], w: u64, br: Barrett);
+
+    /// Barrett-reduce every accumulator (each < 2^62) to [0, q).
+    fn reduce_slice(&self, dst: &mut [u64], br: Barrett);
+}
+
+/// Portable reference kernel: the exact scalar loops the vector kernels are
+/// measured against.
+pub struct ScalarKernel;
+
+impl NttKernel for ScalarKernel {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn is_simd(&self) -> bool {
+        false
+    }
+
+    fn forward_stage(
+        &self,
+        a: &mut [u64],
+        m: usize,
+        t: usize,
+        psi: &[u64],
+        psi_shoup: &[u64],
+        q: u64,
+    ) {
+        let two_q = 2 * q;
+        for i in 0..m {
+            let j1 = 2 * i * t;
+            let s = psi[i];
+            let s_shoup = psi_shoup[i];
+            let (lo, hi) = a[j1..j1 + 2 * t].split_at_mut(t);
+            for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
+                let mut u = *x; // < 4q
+                if u >= two_q {
+                    u -= two_q;
+                }
+                let v = mul_mod_shoup_lazy(*y, s, s_shoup, q); // < 2q
+                *x = u + v; // < 4q
+                *y = u + two_q - v; // < 4q
+            }
+        }
+    }
+
+    fn forward_finish(&self, a: &mut [u64], q: u64) {
+        let two_q = 2 * q;
+        for x in a.iter_mut() {
+            let mut v = *x;
+            if v >= two_q {
+                v -= two_q;
+            }
+            if v >= q {
+                v -= q;
+            }
+            *x = v;
+        }
+    }
+
+    fn inverse_stage(
+        &self,
+        a: &mut [u64],
+        h: usize,
+        t: usize,
+        psi: &[u64],
+        psi_shoup: &[u64],
+        q: u64,
+    ) {
+        let two_q = 2 * q;
+        let mut j1 = 0;
+        for i in 0..h {
+            let s = psi[i];
+            let s_shoup = psi_shoup[i];
+            let (lo, hi) = a[j1..j1 + 2 * t].split_at_mut(t);
+            for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
+                let u = *x; // < 2q
+                let v = *y; // < 2q
+                let mut sum = u + v; // < 4q
+                if sum >= two_q {
+                    sum -= two_q;
+                }
+                *x = sum; // < 2q
+                *y = mul_mod_shoup_lazy(u + two_q - v, s, s_shoup, q); // < 2q
+            }
+            j1 += 2 * t;
+        }
+    }
+
+    fn inverse_finish(
+        &self,
+        lo: &mut [u64],
+        hi: &mut [u64],
+        n_inv: u64,
+        n_inv_shoup: u64,
+        psi_last: u64,
+        psi_last_shoup: u64,
+        q: u64,
+    ) {
+        let two_q = 2 * q;
+        for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
+            let u = *x; // < 2q
+            let v = *y; // < 2q
+            *x = mul_mod_shoup(u + v, n_inv, n_inv_shoup, q);
+            *y = mul_mod_shoup(u + two_q - v, psi_last, psi_last_shoup, q);
+        }
+    }
+
+    fn weighted_init(&self, dst: &mut [u64], src: &[u64], w: u64, br: Barrett) {
+        for (d, &s) in dst.iter_mut().zip(src.iter()) {
+            *d = br.mul(s, w);
+        }
+    }
+
+    fn weighted_accumulate(&self, dst: &mut [u64], src: &[u64], w: u64, br: Barrett) {
+        for (d, &s) in dst.iter_mut().zip(src.iter()) {
+            *d += br.mul(s, w);
+        }
+    }
+
+    fn reduce_slice(&self, dst: &mut [u64], br: Barrett) {
+        for d in dst.iter_mut() {
+            *d = br.reduce(*d);
+        }
+    }
+}
+
+static SCALAR: ScalarKernel = ScalarKernel;
+
+/// The portable kernel (always available).
+pub fn scalar() -> &'static dyn NttKernel {
+    &SCALAR
+}
+
+/// The best vector kernel the host supports, if any.
+pub fn detected_simd() -> Option<&'static dyn NttKernel> {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return Some(&avx2::AVX2);
+        }
+    }
+    None
+}
+
+/// Kernel selection as a pure function of the override value — the logic
+/// behind [`active`], exposed for tests: `Some("scalar")` forces the
+/// portable kernel, anything else auto-detects.
+pub fn kernel_for(env_override: Option<&str>) -> &'static dyn NttKernel {
+    match env_override {
+        Some("scalar") => scalar(),
+        _ => detected_simd().unwrap_or_else(scalar),
+    }
+}
+
+static ACTIVE: OnceLock<&'static dyn NttKernel> = OnceLock::new();
+
+/// The process-wide dispatched kernel: [`KERNEL_ENV`] override, else the
+/// best detected vector kernel, else scalar. Resolved once per process.
+pub fn active() -> &'static dyn NttKernel {
+    *ACTIVE.get_or_init(|| kernel_for(std::env::var(KERNEL_ENV).ok().as_deref()))
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! AVX2 lane math. There is no 64×64→128 multiply and no unsigned
+    //! 64-bit compare in AVX2, so everything is built from `pmuludq`
+    //! (32×32→64 on the low halves of each lane) and signed compares —
+    //! both exact under the crate's bounds:
+    //!
+    //! - Shoup operands are < 4q < 2^33, so their high 32-bit half is 0 or
+    //!   1 and the 4-product mulhi decomposition cannot overflow its
+    //!   carry-save accumulator (max 2^64 − 1).
+    //! - Twiddles / weights / moduli are < 2^31, so low-64 products need
+    //!   only two `pmuludq`.
+    //! - Barrett magics ⌊2^62/q⌋ fit 32 bits for q > 2^30 (every generated
+    //!   prime); the wrappers below verify that at runtime and fall back to
+    //!   scalar otherwise.
+    //! - Every compared value is < 2^62, so signed `cmpgt` orders them
+    //!   correctly.
+
+    use super::{Barrett, NttKernel, ScalarKernel};
+    use std::arch::x86_64::{
+        __m256i, _mm256_add_epi64, _mm256_andnot_si256, _mm256_cmpgt_epi64, _mm256_loadu_si256,
+        _mm256_mul_epu32, _mm256_or_si256, _mm256_set1_epi64x, _mm256_slli_epi64,
+        _mm256_srli_epi64, _mm256_storeu_si256, _mm256_sub_epi64,
+    };
+
+    pub(super) struct Avx2Kernel {
+        _private: (),
+    }
+
+    /// Sole instance; only reachable through `detected_simd()`, which gates
+    /// on runtime AVX2 detection — the soundness condition for the safe
+    /// trait methods below.
+    pub(super) static AVX2: Avx2Kernel = Avx2Kernel { _private: () };
+
+    const LANES: usize = 4;
+
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn splat(x: u64) -> __m256i {
+        _mm256_set1_epi64x(x as i64)
+    }
+
+    /// Low 64 bits of `a·b` per lane, exact when `b < 2^32` and `a·b < 2^64`.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn mul_lo_small(a: __m256i, b: __m256i) -> __m256i {
+        let lo = _mm256_mul_epu32(a, b);
+        let hi = _mm256_mul_epu32(_mm256_srli_epi64(a, 32), b);
+        _mm256_add_epi64(lo, _mm256_slli_epi64(hi, 32))
+    }
+
+    /// High 64 bits of `a·b` per lane, exact for `a < 2^33` (so `a >> 32`
+    /// is 0 or 1 and the carry-save middle term stays below 2^64).
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn mul_hi_narrow(a: __m256i, b: __m256i) -> __m256i {
+        let a_hi = _mm256_srli_epi64(a, 32);
+        let b_hi = _mm256_srli_epi64(b, 32);
+        let p00 = _mm256_mul_epu32(a, b);
+        let p01 = _mm256_mul_epu32(a, b_hi);
+        let p10 = _mm256_mul_epu32(a_hi, b);
+        let p11 = _mm256_mul_epu32(a_hi, b_hi);
+        let mid = _mm256_add_epi64(_mm256_add_epi64(p01, p10), _mm256_srli_epi64(p00, 32));
+        _mm256_add_epi64(p11, _mm256_srli_epi64(mid, 32))
+    }
+
+    /// `x − b` where `x ≥ b`, else `x` (signed compare is exact: both
+    /// operands < 2^62).
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn csub(x: __m256i, b: __m256i) -> __m256i {
+        let lt = _mm256_cmpgt_epi64(b, x);
+        _mm256_sub_epi64(x, _mm256_andnot_si256(lt, b))
+    }
+
+    /// Lazy Shoup product per lane: `a·w − ⌊a·w_shoup/2^64⌋·q ∈ [0, 2q)`
+    /// for `a < 4q < 2^33`, `w < q < 2^31` — the vector twin of
+    /// `ntt::mul_mod_shoup_lazy`, bit for bit.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn shoup_lazy(a: __m256i, w: __m256i, w_shoup: __m256i, q: __m256i) -> __m256i {
+        let hi = mul_hi_narrow(a, w_shoup);
+        let aw = mul_lo_small(a, w);
+        let hq = mul_lo_small(hi, q);
+        _mm256_sub_epi64(aw, hq)
+    }
+
+    /// Fully reduced Shoup product: lazy then one conditional subtract.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn shoup_full(a: __m256i, w: __m256i, w_shoup: __m256i, q: __m256i) -> __m256i {
+        csub(shoup_lazy(a, w, w_shoup, q), q)
+    }
+
+    /// Barrett reduction per lane: `t − ⌊t·m/2^62⌋·q` then a conditional
+    /// subtract, exact for `t < 2^62` and `m < 2^32` — the vector twin of
+    /// `Barrett::reduce`/`Barrett::mul`'s reduction half.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn barrett_reduce(t: __m256i, m: __m256i, q: __m256i) -> __m256i {
+        let t_hi = _mm256_srli_epi64(t, 32);
+        let p00 = _mm256_mul_epu32(t, m);
+        let p10 = _mm256_mul_epu32(t_hi, m);
+        // t·m as hi64/lo64 via carry-save: full = p10·2^32 + p00.
+        let hi64 = _mm256_srli_epi64(_mm256_add_epi64(p10, _mm256_srli_epi64(p00, 32)), 32);
+        let lo64 = _mm256_add_epi64(_mm256_slli_epi64(p10, 32), p00);
+        // ⌊t·m/2^62⌋ = hi64·4 | lo64»62 (< 2^32, so the low-product below
+        // is exact).
+        let quot = _mm256_or_si256(_mm256_slli_epi64(hi64, 2), _mm256_srli_epi64(lo64, 62));
+        let r = _mm256_sub_epi64(t, mul_lo_small(quot, q));
+        csub(r, q)
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn forward_stage_avx2(
+        a: &mut [u64],
+        m: usize,
+        t: usize,
+        psi: &[u64],
+        psi_shoup: &[u64],
+        q: u64,
+    ) {
+        let qv = splat(q);
+        let two_qv = splat(2 * q);
+        for i in 0..m {
+            let j1 = 2 * i * t;
+            let s = splat(psi[i]);
+            let s_sh = splat(psi_shoup[i]);
+            let (lo, hi) = a[j1..j1 + 2 * t].split_at_mut(t);
+            let mut j = 0;
+            // t is a power of two ≥ 4 here: no tail.
+            while j < t {
+                let xp = lo.as_mut_ptr().add(j).cast::<__m256i>();
+                let yp = hi.as_mut_ptr().add(j).cast::<__m256i>();
+                let x = _mm256_loadu_si256(xp);
+                let y = _mm256_loadu_si256(yp);
+                let u = csub(x, two_qv);
+                let v = shoup_lazy(y, s, s_sh, qv);
+                _mm256_storeu_si256(xp, _mm256_add_epi64(u, v));
+                _mm256_storeu_si256(yp, _mm256_add_epi64(u, _mm256_sub_epi64(two_qv, v)));
+                j += LANES;
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn forward_finish_avx2(a: &mut [u64], q: u64) {
+        let qv = splat(q);
+        let two_qv = splat(2 * q);
+        let mut chunks = a.chunks_exact_mut(LANES);
+        for c in chunks.by_ref() {
+            let p = c.as_mut_ptr().cast::<__m256i>();
+            let x = _mm256_loadu_si256(p);
+            _mm256_storeu_si256(p, csub(csub(x, two_qv), qv));
+        }
+        ScalarKernel.forward_finish(chunks.into_remainder(), q);
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn inverse_stage_avx2(
+        a: &mut [u64],
+        h: usize,
+        t: usize,
+        psi: &[u64],
+        psi_shoup: &[u64],
+        q: u64,
+    ) {
+        let qv = splat(q);
+        let two_qv = splat(2 * q);
+        let mut j1 = 0;
+        for i in 0..h {
+            let s = splat(psi[i]);
+            let s_sh = splat(psi_shoup[i]);
+            let (lo, hi) = a[j1..j1 + 2 * t].split_at_mut(t);
+            let mut j = 0;
+            while j < t {
+                let xp = lo.as_mut_ptr().add(j).cast::<__m256i>();
+                let yp = hi.as_mut_ptr().add(j).cast::<__m256i>();
+                let u = _mm256_loadu_si256(xp);
+                let v = _mm256_loadu_si256(yp);
+                let sum = csub(_mm256_add_epi64(u, v), two_qv);
+                let diff = _mm256_add_epi64(u, _mm256_sub_epi64(two_qv, v));
+                _mm256_storeu_si256(xp, sum);
+                _mm256_storeu_si256(yp, shoup_lazy(diff, s, s_sh, qv));
+                j += LANES;
+            }
+            j1 += 2 * t;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn inverse_finish_avx2(
+        lo: &mut [u64],
+        hi: &mut [u64],
+        n_inv: u64,
+        n_inv_shoup: u64,
+        psi_last: u64,
+        psi_last_shoup: u64,
+        q: u64,
+    ) {
+        let qv = splat(q);
+        let two_qv = splat(2 * q);
+        let ni = splat(n_inv);
+        let ni_sh = splat(n_inv_shoup);
+        let pl = splat(psi_last);
+        let pl_sh = splat(psi_last_shoup);
+        let half = lo.len();
+        let vec_end = half - half % LANES;
+        let mut j = 0;
+        while j < vec_end {
+            let xp = lo.as_mut_ptr().add(j).cast::<__m256i>();
+            let yp = hi.as_mut_ptr().add(j).cast::<__m256i>();
+            let u = _mm256_loadu_si256(xp);
+            let v = _mm256_loadu_si256(yp);
+            let sum = _mm256_add_epi64(u, v);
+            let diff = _mm256_add_epi64(u, _mm256_sub_epi64(two_qv, v));
+            _mm256_storeu_si256(xp, shoup_full(sum, ni, ni_sh, qv));
+            _mm256_storeu_si256(yp, shoup_full(diff, pl, pl_sh, qv));
+            j += LANES;
+        }
+        ScalarKernel.inverse_finish(
+            &mut lo[vec_end..],
+            &mut hi[vec_end..],
+            n_inv,
+            n_inv_shoup,
+            psi_last,
+            psi_last_shoup,
+            q,
+        );
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn weighted_init_avx2(dst: &mut [u64], src: &[u64], w: u64, br: Barrett) {
+        let qv = splat(br.q);
+        let mv = splat(br.magic());
+        let wv = splat(w);
+        let n = dst.len();
+        let vec_end = n - n % LANES;
+        let mut j = 0;
+        while j < vec_end {
+            let sp = src.as_ptr().add(j).cast::<__m256i>();
+            let dp = dst.as_mut_ptr().add(j).cast::<__m256i>();
+            // src and w are both < q < 2^31: one pmuludq is the exact product.
+            let t = _mm256_mul_epu32(_mm256_loadu_si256(sp), wv);
+            _mm256_storeu_si256(dp, barrett_reduce(t, mv, qv));
+            j += LANES;
+        }
+        ScalarKernel.weighted_init(&mut dst[vec_end..], &src[vec_end..], w, br);
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn weighted_accumulate_avx2(dst: &mut [u64], src: &[u64], w: u64, br: Barrett) {
+        let qv = splat(br.q);
+        let mv = splat(br.magic());
+        let wv = splat(w);
+        let n = dst.len();
+        let vec_end = n - n % LANES;
+        let mut j = 0;
+        while j < vec_end {
+            let sp = src.as_ptr().add(j).cast::<__m256i>();
+            let dp = dst.as_mut_ptr().add(j).cast::<__m256i>();
+            let t = _mm256_mul_epu32(_mm256_loadu_si256(sp), wv);
+            let prod = barrett_reduce(t, mv, qv);
+            let acc = _mm256_add_epi64(_mm256_loadu_si256(dp), prod);
+            _mm256_storeu_si256(dp, acc);
+            j += LANES;
+        }
+        ScalarKernel.weighted_accumulate(&mut dst[vec_end..], &src[vec_end..], w, br);
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn reduce_slice_avx2(dst: &mut [u64], br: Barrett) {
+        let qv = splat(br.q);
+        let mv = splat(br.magic());
+        let n = dst.len();
+        let vec_end = n - n % LANES;
+        let mut j = 0;
+        while j < vec_end {
+            let dp = dst.as_mut_ptr().add(j).cast::<__m256i>();
+            let t = _mm256_loadu_si256(dp);
+            _mm256_storeu_si256(dp, barrett_reduce(t, mv, qv));
+            j += LANES;
+        }
+        ScalarKernel.reduce_slice(&mut dst[vec_end..], br);
+    }
+
+    impl NttKernel for Avx2Kernel {
+        fn name(&self) -> &'static str {
+            "avx2"
+        }
+
+        fn is_simd(&self) -> bool {
+            true
+        }
+
+        fn forward_stage(
+            &self,
+            a: &mut [u64],
+            m: usize,
+            t: usize,
+            psi: &[u64],
+            psi_shoup: &[u64],
+            q: u64,
+        ) {
+            if t >= LANES {
+                // Sound: AVX2 presence was verified before this handle
+                // could be obtained.
+                unsafe { forward_stage_avx2(a, m, t, psi, psi_shoup, q) }
+            } else {
+                // The last two stages (t ∈ {1, 2}) interleave wings too
+                // tightly for 4-lane loads; they are O(n) scalar work.
+                ScalarKernel.forward_stage(a, m, t, psi, psi_shoup, q);
+            }
+        }
+
+        fn forward_finish(&self, a: &mut [u64], q: u64) {
+            unsafe { forward_finish_avx2(a, q) }
+        }
+
+        fn inverse_stage(
+            &self,
+            a: &mut [u64],
+            h: usize,
+            t: usize,
+            psi: &[u64],
+            psi_shoup: &[u64],
+            q: u64,
+        ) {
+            if t >= LANES {
+                unsafe { inverse_stage_avx2(a, h, t, psi, psi_shoup, q) }
+            } else {
+                ScalarKernel.inverse_stage(a, h, t, psi, psi_shoup, q);
+            }
+        }
+
+        fn inverse_finish(
+            &self,
+            lo: &mut [u64],
+            hi: &mut [u64],
+            n_inv: u64,
+            n_inv_shoup: u64,
+            psi_last: u64,
+            psi_last_shoup: u64,
+            q: u64,
+        ) {
+            unsafe { inverse_finish_avx2(lo, hi, n_inv, n_inv_shoup, psi_last, psi_last_shoup, q) }
+        }
+
+        fn weighted_init(&self, dst: &mut [u64], src: &[u64], w: u64, br: Barrett) {
+            if br.magic() >> 32 != 0 {
+                ScalarKernel.weighted_init(dst, src, w, br);
+            } else {
+                unsafe { weighted_init_avx2(dst, src, w, br) }
+            }
+        }
+
+        fn weighted_accumulate(&self, dst: &mut [u64], src: &[u64], w: u64, br: Barrett) {
+            if br.magic() >> 32 != 0 {
+                ScalarKernel.weighted_accumulate(dst, src, w, br);
+            } else {
+                unsafe { weighted_accumulate_avx2(dst, src, w, br) }
+            }
+        }
+
+        fn reduce_slice(&self, dst: &mut [u64], br: Barrett) {
+            if br.magic() >> 32 != 0 {
+                ScalarKernel.reduce_slice(dst, br);
+            } else {
+                unsafe { reduce_slice_avx2(dst, br) }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn env_override_forces_scalar() {
+        assert_eq!(kernel_for(Some("scalar")).name(), "scalar");
+        assert!(!kernel_for(Some("scalar")).is_simd());
+    }
+
+    #[test]
+    fn unknown_override_auto_detects() {
+        let auto = kernel_for(None).name();
+        assert_eq!(kernel_for(Some("definitely-not-a-kernel")).name(), auto);
+        assert_eq!(kernel_for(Some("avx2")).name(), auto);
+    }
+
+    #[test]
+    fn active_is_a_known_kernel() {
+        let k = active();
+        assert!(k.name() == "scalar" || k.name() == "avx2");
+    }
+}

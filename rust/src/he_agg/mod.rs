@@ -4,6 +4,9 @@
 //! * [`mask`] — sensitivity-ranked encryption masks (top-p, random, layer
 //!   heuristics) over a run-length interval layout ([`mask::MaskLayout`]):
 //!   O(runs) memory and wire bytes, segment-copy gather/scatter.
+//! * [`packing`] — run-aware ciphertext packing plans: how mask runs are
+//!   cut into CKKS chunks (tight compacted layout vs the padded grid
+//!   baseline the regression gate measures against).
 //! * [`selective`] — split a flat parameter vector into an encrypted part
 //!   (CKKS ciphertexts) and a compacted plaintext part, and merge back.
 //! * [`native`] — pure-Rust aggregation (oracle + arbitrary-shape fallback).
@@ -16,8 +19,10 @@
 
 pub mod mask;
 pub mod native;
+pub mod packing;
 pub mod selective;
 pub mod xla;
 
 pub use mask::{EncryptionMask, MaskLayout, Run};
-pub use selective::{EncryptedUpdate, SelectiveCodec};
+pub use packing::{PackingMode, PackingPlan};
+pub use selective::{CtArena, EncryptedUpdate, SelectiveCodec};

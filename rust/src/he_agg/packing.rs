@@ -1,0 +1,265 @@
+//! Run-aware ciphertext packing plans (§Perf).
+//!
+//! A selective-encryption round packs the masked parameters into CKKS
+//! ciphertexts of `batch = n/2` slots each. How the mask's runs are cut
+//! into chunks decides the ciphertext count — the dominant term in both
+//! the fig14b bandwidth curves and the server's per-round compute:
+//!
+//! - **Run-aware** ([`PackingPlan::run_aware`]): gather segments are packed
+//!   tightly against [`Run`] boundaries in compacted order — a chunk keeps
+//!   filling across run edges until all `batch` slots are used, so the
+//!   ciphertext count is the information-theoretic floor `⌈k/batch⌉` and
+//!   slot utilization approaches 100%. This is the layout
+//!   [`super::selective::SelectiveCodec`] encrypts, and it is what keeps
+//!   the ciphertext stream (and therefore `ShardPlan`/`agg_engine` sums)
+//!   bitwise identical for any worker or shard count: chunk contents are a
+//!   pure function of the mask, never of the execution schedule.
+//! - **Chunk-aligned** ([`PackingPlan::chunk_aligned`]): the naive grid
+//!   layout that cuts the *flat parameter space* at multiples of `batch`
+//!   and keeps every window a run touches. Slots between the window edge
+//!   and the run edge are padding, so fragmented masks (e.g. BERT-scale
+//!   layer-granularity selections) pay for slots they never fill. Kept as
+//!   the measured baseline for the packing regression gate and
+//!   `perf_hotpath` — not an encryption path.
+//!
+//! Both constructors are deterministic in the mask alone; the per-chunk
+//! segment lists drive the codec's gather directly, which removes the
+//! whole-model staging copy the codec used to build before chunking.
+
+use super::mask::Run;
+
+/// How gather segments are assigned to ciphertext chunks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PackingMode {
+    /// Tight compacted packing against run boundaries (the codec layout).
+    RunAware,
+    /// Grid windows of `batch` over the flat parameter space (baseline).
+    ChunkAligned,
+}
+
+/// A concrete assignment of mask runs to ciphertext chunks: for each chunk,
+/// the absolute-index segments whose values it carries, in order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackingPlan {
+    mode: PackingMode,
+    batch: usize,
+    /// Per-chunk gather segments (absolute parameter indices, in order).
+    chunks: Vec<Vec<Run>>,
+    /// Masked values carried (Σ segment lengths over all chunks).
+    slots_used: usize,
+}
+
+impl PackingPlan {
+    /// Tight packing: walk the runs in order, splitting only where a chunk
+    /// fills all `batch` slots. `n_cts() == ⌈k/batch⌉` for `k` masked
+    /// values — no padding except in the final chunk.
+    pub fn run_aware(runs: &[Run], batch: usize) -> Self {
+        assert!(batch >= 1, "batch must be positive");
+        let mut chunks = Vec::new();
+        let mut cur: Vec<Run> = Vec::new();
+        let mut cur_len = 0usize;
+        let mut slots_used = 0usize;
+        for r in runs {
+            let mut lo = r.lo;
+            while lo < r.hi {
+                let take = (batch - cur_len).min(r.hi - lo);
+                cur.push(Run { lo, hi: lo + take });
+                cur_len += take;
+                slots_used += take;
+                lo += take;
+                if cur_len == batch {
+                    chunks.push(std::mem::take(&mut cur));
+                    cur_len = 0;
+                }
+            }
+        }
+        if !cur.is_empty() {
+            chunks.push(cur);
+        }
+        PackingPlan {
+            mode: PackingMode::RunAware,
+            batch,
+            chunks,
+            slots_used,
+        }
+    }
+
+    /// Grid baseline: one chunk per `batch`-aligned window of the flat
+    /// parameter space that intersects the mask; run fragments keep their
+    /// in-window positions, so unaligned run edges waste slots.
+    pub fn chunk_aligned(runs: &[Run], batch: usize) -> Self {
+        assert!(batch >= 1, "batch must be positive");
+        let mut chunks: Vec<Vec<Run>> = Vec::new();
+        let mut cur: Vec<Run> = Vec::new();
+        let mut cur_window = usize::MAX;
+        let mut slots_used = 0usize;
+        for r in runs {
+            let mut lo = r.lo;
+            while lo < r.hi {
+                let window = lo / batch;
+                let hi = r.hi.min((window + 1) * batch);
+                if window != cur_window {
+                    if !cur.is_empty() {
+                        chunks.push(std::mem::take(&mut cur));
+                    }
+                    cur_window = window;
+                }
+                cur.push(Run { lo, hi });
+                slots_used += hi - lo;
+                lo = hi;
+            }
+        }
+        if !cur.is_empty() {
+            chunks.push(cur);
+        }
+        PackingPlan {
+            mode: PackingMode::ChunkAligned,
+            batch,
+            chunks,
+            slots_used,
+        }
+    }
+
+    pub fn mode(&self) -> PackingMode {
+        self.mode
+    }
+
+    /// Slots per ciphertext this plan was cut for.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Ciphertexts the plan produces.
+    pub fn n_cts(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// Masked values carried across all chunks.
+    pub fn slots_used(&self) -> usize {
+        self.slots_used
+    }
+
+    /// CKKS slots allocated across all chunks (`n_cts · batch`).
+    pub fn slots_total(&self) -> usize {
+        self.n_cts() * self.batch
+    }
+
+    /// Fraction of allocated slots that carry a masked value (1.0 for an
+    /// empty plan — nothing allocated, nothing wasted).
+    pub fn slot_utilization(&self) -> f64 {
+        if self.slots_total() == 0 {
+            1.0
+        } else {
+            self.slots_used as f64 / self.slots_total() as f64
+        }
+    }
+
+    /// Gather segments of chunk `c` (absolute parameter indices, in order).
+    pub fn segments(&self, c: usize) -> &[Run] {
+        &self.chunks[c]
+    }
+
+    /// Values carried by chunk `c`.
+    pub fn chunk_len(&self, c: usize) -> usize {
+        self.chunks[c].iter().map(|r| r.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::model_meta;
+    use crate::he_agg::mask::EncryptionMask;
+
+    fn runs(spec: &[(usize, usize)]) -> Vec<Run> {
+        spec.iter().map(|&(lo, hi)| Run { lo, hi }).collect()
+    }
+
+    #[test]
+    fn run_aware_hits_ciphertext_floor() {
+        // 3 runs of 5 values each over batch 8: 15 values → 2 chunks, the
+        // first spanning two run edges without padding.
+        let plan = PackingPlan::run_aware(&runs(&[(0, 5), (10, 15), (20, 25)]), 8);
+        assert_eq!(plan.n_cts(), 2);
+        assert_eq!(plan.slots_used(), 15);
+        assert_eq!(plan.chunk_len(0), 8);
+        assert_eq!(plan.chunk_len(1), 7);
+        assert_eq!(
+            plan.segments(0),
+            &runs(&[(0, 5), (10, 13)])[..],
+            "first chunk packs across the run edge"
+        );
+        assert_eq!(plan.segments(1), &runs(&[(13, 15), (20, 25)])[..]);
+    }
+
+    #[test]
+    fn chunk_aligned_pads_at_run_edges() {
+        // The same 15 values land in 3 grid windows (0..8, 8..16, 16..24 —
+        // and 24..32 for the tail), wasting slots at every unaligned edge.
+        let plan = PackingPlan::chunk_aligned(&runs(&[(0, 5), (10, 15), (20, 25)]), 8);
+        assert_eq!(plan.slots_used(), 15);
+        assert!(plan.n_cts() > 2, "grid layout cannot hit the floor here");
+        assert!(plan.slot_utilization() < 0.7);
+    }
+
+    #[test]
+    fn run_aware_matches_ct_count_formula() {
+        for (spec, batch) in [
+            (vec![(0usize, 100usize)], 16usize),
+            (vec![(3, 20), (40, 41), (50, 90)], 8),
+            (vec![(0, 1)], 4096),
+            (vec![], 64),
+        ] {
+            let rs = runs(&spec);
+            let k: usize = rs.iter().map(|r| r.len()).sum();
+            let plan = PackingPlan::run_aware(&rs, batch);
+            assert_eq!(plan.n_cts(), k.div_ceil(batch));
+            assert_eq!(plan.slots_used(), k);
+            // Segments reproduce the mask exactly, in order.
+            let mut flat = Vec::new();
+            for c in 0..plan.n_cts() {
+                for seg in plan.segments(c) {
+                    flat.extend(seg.lo..seg.hi);
+                }
+            }
+            let expect: Vec<usize> = rs.iter().flat_map(|r| r.lo..r.hi).collect();
+            assert_eq!(flat, expect);
+        }
+    }
+
+    #[test]
+    fn aligned_mask_is_identical_under_both_modes() {
+        // Runs already cut at batch multiples: the grid baseline degenerates
+        // to the tight packing (same counts, full utilization).
+        let rs = runs(&[(0, 128), (256, 384)]);
+        let ra = PackingPlan::run_aware(&rs, 128);
+        let ca = PackingPlan::chunk_aligned(&rs, 128);
+        assert_eq!(ra.n_cts(), ca.n_cts());
+        assert_eq!(ra.slot_utilization(), 1.0);
+        assert_eq!(ca.slot_utilization(), 1.0);
+    }
+
+    /// The regression gate of ISSUE 7 / ROADMAP item 5 in unit-test form:
+    /// on the BERT-scale layer-granularity mask the run-aware plan must
+    /// produce strictly fewer ciphertexts than the chunk-aligned baseline.
+    #[test]
+    fn bert_layer_mask_run_aware_beats_chunk_aligned() {
+        let info = model_meta::lookup("bert").expect("bert in registry");
+        let total = info.params as usize;
+        let spans = info.layer_spans();
+        let scores: Vec<f32> = (0..spans.len()).map(|i| ((i * 37) % 101) as f32).collect();
+        let mask = EncryptionMask::from_layer_scores(total, &scores, &spans, 0.1);
+        let batch = 4096; // the paper's default packing batch (n = 8192)
+        let run_aware = PackingPlan::run_aware(mask.runs(), batch);
+        let chunk_aligned = PackingPlan::chunk_aligned(mask.runs(), batch);
+        assert_eq!(run_aware.n_cts(), mask.encrypted_count().div_ceil(batch));
+        assert!(
+            run_aware.n_cts() < chunk_aligned.n_cts(),
+            "packing regression: run-aware {} vs chunk-aligned {}",
+            run_aware.n_cts(),
+            chunk_aligned.n_cts()
+        );
+        assert!(run_aware.slot_utilization() > chunk_aligned.slot_utilization());
+        assert!(run_aware.slot_utilization() > 0.999);
+    }
+}

@@ -18,13 +18,25 @@
 //! the produced ciphertexts are bitwise identical for any worker count —
 //! client-side cost scales with cores the way the server's `agg_engine`
 //! already does.
+//!
+//! §Perf (run-aware packing + ciphertext arena): the encrypt fan-out is
+//! driven by a [`PackingPlan`] cut tightly against the mask's run
+//! boundaries — each worker gathers chunk `c`'s segments straight from the
+//! model into a batch-sized staging buffer, so the whole-model f64 staging
+//! vector the codec used to build (hundreds of MB at BERT scale) is gone.
+//! Output ciphertexts come from a caller-supplied [`CtArena`] free list and
+//! plaintexts are encoded in place ([`crate::ckks::Encoder::encode_into`]),
+//! so a steady-state round allocates nothing per chunk — gated by the
+//! counting allocator in `tests/zero_alloc.rs`.
 
 use super::mask::{EncryptionMask, MaskLayout, Run};
+use super::packing::PackingPlan;
 use crate::ckks::{
-    decrypt_into, encrypt_into, Ciphertext, CkksContext, CkksScratch, PublicKey, RnsPoly,
-    SecretKey,
+    decrypt_into, encrypt_into, Ciphertext, CkksContext, CkksParams, CkksScratch, EncodeScratch,
+    PublicKey, RnsPoly, SecretKey,
 };
 use crate::crypto::prng::ChaChaRng;
+use std::sync::Mutex;
 
 /// One client's (selectively) encrypted model update.
 #[derive(Debug, Clone)]
@@ -51,6 +63,79 @@ impl EncryptedUpdate {
     /// with whichever shard owns its range).
     pub fn limb_shard_wire_bytes(&self, ctx: &CkksContext, lo: usize, hi: usize) -> usize {
         self.cts.len() * crate::ckks::serialize::shard_wire_bytes(&ctx.params, lo, hi)
+    }
+}
+
+/// A shape-checked free list of ciphertext buffers shared across rounds
+/// (§Perf): `take` pops a pooled buffer (or allocates on a cold pool), the
+/// consumer calls [`CtArena::recycle`] once the ciphertext has left for the
+/// wire, and the next chunk's encrypt reuses it. [`encrypt_into`] fully
+/// overwrites both components (proved by the dirty-buffer test in
+/// `ckks::encrypt`), so recycled buffers need no zeroing and the ciphertext
+/// stream stays bitwise identical to the allocating path.
+pub struct CtArena {
+    free: Mutex<Vec<Ciphertext>>,
+}
+
+impl CtArena {
+    pub fn new() -> Self {
+        CtArena { free: Mutex::new(Vec::new()) }
+    }
+
+    /// Pop a pooled buffer of this parameter set's shape, or allocate one.
+    /// Foreign-shaped buffers (an arena outliving a context change) are
+    /// dropped rather than handed out.
+    pub fn take(&self, params: &CkksParams) -> Ciphertext {
+        let mut free = self.free.lock().unwrap();
+        while let Some(ct) = free.pop() {
+            if ct.c0.n == params.n && ct.c0.num_limbs() == params.num_limbs() {
+                return ct;
+            }
+        }
+        drop(free);
+        Ciphertext::zero(params)
+    }
+
+    /// Return a ciphertext buffer to the pool for the next `take`.
+    pub fn recycle(&self, ct: Ciphertext) {
+        self.free.lock().unwrap().push(ct);
+    }
+
+    /// Buffers currently pooled (waiting for a `take`).
+    pub fn len(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Default for CtArena {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Per-worker staging for the plan-driven chunk encrypt: the gathered f64
+/// chunk values, pooled encode buffers, the encoded plaintext and the CKKS
+/// scratch. One stage lives per worker for a whole call, so the per-chunk
+/// path allocates nothing after warm-up.
+struct ChunkStage {
+    values: Vec<f64>,
+    encode: EncodeScratch,
+    pt: RnsPoly,
+    scratch: CkksScratch,
+}
+
+impl ChunkStage {
+    fn new(params: &CkksParams) -> Self {
+        ChunkStage {
+            values: Vec::with_capacity(params.n / 2),
+            encode: EncodeScratch::default(),
+            pt: RnsPoly::zero(params),
+            scratch: CkksScratch::new(params),
+        }
     }
 }
 
@@ -143,24 +228,36 @@ impl SelectiveCodec {
         k.div_ceil(self.ctx.batch())
     }
 
-    /// Encode + encrypt chunk `c` of the compacted value vector into a
-    /// caller-pooled ciphertext shape (the per-worker unit of work).
+    /// Encode + encrypt chunk `c` of the packing plan (the per-worker unit
+    /// of work): gather the chunk's segments straight from the model, encode
+    /// into the stage's pooled plaintext and encrypt into an arena-pooled
+    /// ciphertext — allocation-free after warm-up.
     fn encrypt_one_chunk(
         &self,
-        enc_values: &[f64],
+        model: &[f32],
+        plan: &PackingPlan,
         c: usize,
         pk: &PublicKey,
         rng: &mut ChaChaRng,
-        scratch: &mut CkksScratch,
+        stage: &mut ChunkStage,
+        arena: &CtArena,
     ) -> Ciphertext {
         let _span = crate::obs::span_arg("codec", "encrypt_chunk", c as u64);
-        let batch = self.ctx.batch();
-        let lo = c * batch;
-        let hi = (lo + batch).min(enc_values.len());
-        let chunk = &enc_values[lo..hi];
-        let pt = self.ctx.encoder.encode(chunk);
-        let mut ct = Ciphertext::zero(&self.ctx.params);
-        encrypt_into(&self.ctx.params, pk, &pt, chunk.len(), rng, scratch, &mut ct);
+        stage.values.clear();
+        for seg in plan.segments(c) {
+            stage.values.extend(model[seg.lo..seg.hi].iter().map(|&v| v as f64));
+        }
+        self.ctx.encoder.encode_into(&stage.values, &mut stage.encode, &mut stage.pt);
+        let mut ct = arena.take(&self.ctx.params);
+        encrypt_into(
+            &self.ctx.params,
+            pk,
+            &stage.pt,
+            stage.values.len(),
+            rng,
+            &mut stage.scratch,
+            &mut ct,
+        );
         ct
     }
 
@@ -184,28 +281,44 @@ impl SelectiveCodec {
         mask: &EncryptionMask,
         pk: &PublicKey,
         rng: &mut ChaChaRng,
+        consume: impl FnMut(usize, Ciphertext),
+    ) -> (Vec<f32>, usize) {
+        self.encrypt_update_streamed_with_arena(params, mask, pk, rng, &CtArena::new(), consume)
+    }
+
+    /// [`Self::encrypt_update_streamed`] drawing output ciphertexts from a
+    /// caller-owned [`CtArena`]: the consumer recycles each buffer once it
+    /// has left for the wire, so a steady-state round allocates no
+    /// ciphertext buffers at all. Chunk cuts come from
+    /// [`PackingPlan::run_aware`] over the mask's runs — each worker gathers
+    /// its chunk's segments straight from `params`, so no whole-model f64
+    /// staging vector is ever built. The ciphertext stream is bitwise
+    /// identical for any arena state, worker count or consumer speed.
+    pub fn encrypt_update_streamed_with_arena(
+        &self,
+        params: &[f32],
+        mask: &EncryptionMask,
+        pk: &PublicKey,
+        rng: &mut ChaChaRng,
+        arena: &CtArena,
         mut consume: impl FnMut(usize, Ciphertext),
     ) -> (Vec<f32>, usize) {
         assert_eq!(params.len(), mask.total(), "mask/params length mismatch");
-        let batch = self.ctx.batch();
-        // Encrypted part: gather run segments into the f64 staging buffer.
-        let mut enc_values: Vec<f64> = Vec::with_capacity(mask.encrypted_count());
-        for r in mask.runs() {
-            enc_values.extend(params[r.lo..r.hi].iter().map(|&v| v as f64));
-        }
+        let plan = PackingPlan::run_aware(mask.runs(), self.ctx.batch());
+        crate::obs::metrics::pack_slots(plan.slots_used() as u64, plan.slots_total() as u64);
         // Plaintext part: segment memcpy along the complement runs.
         let plain_layout = mask.plaintext_layout();
         let mut plain: Vec<f32> = Vec::with_capacity(plain_layout.count());
         for r in plain_layout.runs() {
             plain.extend_from_slice(&params[r.lo..r.hi]);
         }
-        let n_chunks = enc_values.len().div_ceil(batch);
+        let n_chunks = plan.n_cts();
         let chunk_rngs: Vec<ChaChaRng> = (0..n_chunks).map(|c| rng.fork(c as u64)).collect();
         let workers = self.workers.min(n_chunks).max(1);
         if workers <= 1 {
-            let mut scratch = CkksScratch::new(&self.ctx.params);
-            for (c, mut chunk_rng) in chunk_rngs.into_iter().enumerate() {
-                let ct = self.encrypt_one_chunk(&enc_values, c, pk, &mut chunk_rng, &mut scratch);
+            let mut stage = ChunkStage::new(&self.ctx.params);
+            for (c, mut r) in chunk_rngs.into_iter().enumerate() {
+                let ct = self.encrypt_one_chunk(params, &plan, c, pk, &mut r, &mut stage, arena);
                 consume(c, ct);
             }
         } else {
@@ -215,18 +328,25 @@ impl SelectiveCodec {
             for (c, r) in chunk_rngs.into_iter().enumerate() {
                 worker_rngs[c % workers].push(r);
             }
-            let enc_values = &enc_values;
+            let plan = &plan;
             std::thread::scope(|s| {
                 let mut rxs = Vec::with_capacity(workers);
                 for (w, mut rngs_w) in worker_rngs.into_iter().enumerate() {
                     let (tx, rx) = std::sync::mpsc::sync_channel::<Ciphertext>(2);
                     rxs.push(rx);
                     s.spawn(move || {
-                        let mut scratch = CkksScratch::new(&self.ctx.params);
+                        let mut stage = ChunkStage::new(&self.ctx.params);
                         for (i, chunk_rng) in rngs_w.iter_mut().enumerate() {
                             let c = w + i * workers;
-                            let ct =
-                                self.encrypt_one_chunk(enc_values, c, pk, chunk_rng, &mut scratch);
+                            let ct = self.encrypt_one_chunk(
+                                params,
+                                plan,
+                                c,
+                                pk,
+                                chunk_rng,
+                                &mut stage,
+                                arena,
+                            );
                             if tx.send(ct).is_err() {
                                 break; // consumer side gone
                             }
@@ -519,6 +639,78 @@ mod tests {
             assert_eq!(*c, i, "chunks must stream in order");
             assert_eq!(ct, &baseline.cts[i], "chunk {i} differs");
         }
+    }
+
+    #[test]
+    fn arena_encrypt_is_identical_and_reuses_buffers() {
+        // Pooled-ciphertext gate: drawing outputs from a dirty arena must
+        // not change a single ciphertext bit, and recycling must keep the
+        // pool size stable (no fresh buffers) on the next round.
+        let ctx = small_ctx();
+        let (pk, _) = {
+            let mut krng = ChaChaRng::from_seed(61, 0);
+            ctx.keygen(&mut krng)
+        };
+        let total = 1500;
+        let model: Vec<f32> = (0..total).map(|i| (i as f32 * 0.019).cos()).collect();
+        let sens: Vec<f32> = (0..total).map(|i| ((i * 17) % 509) as f32).collect();
+        let mask = EncryptionMask::top_p(&sens, 0.8);
+        for workers in [1usize, 3] {
+            let codec = SelectiveCodec::with_workers(ctx.clone(), workers);
+            let baseline = {
+                let mut rng = ChaChaRng::from_seed(62, 0);
+                codec.encrypt_update(&model, &mask, &pk, &mut rng)
+            };
+            let arena = CtArena::new();
+            // Poison the pool with garbage-filled buffers of the right
+            // shape: every word must be rewritten by the encrypt.
+            let mut dirty_rng = ChaChaRng::from_seed(63, 0);
+            for _ in 0..2 {
+                let mut ct = Ciphertext::zero(&codec.ctx.params);
+                ct.c0 = RnsPoly::sample_uniform(&codec.ctx.params, &mut dirty_rng);
+                ct.c1 = RnsPoly::sample_uniform(&codec.ctx.params, &mut dirty_rng);
+                arena.recycle(ct);
+            }
+            let mut rng = ChaChaRng::from_seed(62, 0);
+            let mut got: Vec<Ciphertext> = Vec::new();
+            let (plain, n) = codec
+                .encrypt_update_streamed_with_arena(&model, &mask, &pk, &mut rng, &arena, |c, ct| {
+                    assert_eq!(c, got.len(), "chunks must stream in order");
+                    got.push(ct);
+                });
+            assert_eq!(n, baseline.cts.len(), "workers={workers}");
+            assert_eq!(plain, baseline.plain, "workers={workers}");
+            assert_eq!(got, baseline.cts, "workers={workers}: arena stream differs");
+            // Recycle the round's outputs: the pool now covers the next
+            // round entirely, and `take` keeps draining it.
+            let before = arena.len();
+            for ct in got {
+                arena.recycle(ct);
+            }
+            assert_eq!(arena.len(), before + n);
+            let mut rng = ChaChaRng::from_seed(62, 0);
+            let (_, n2) = codec
+                .encrypt_update_streamed_with_arena(&model, &mask, &pk, &mut rng, &arena, |i, ct| {
+                    assert_eq!(ct, baseline.cts[i], "recycled chunk {i} differs");
+                    arena.recycle(ct);
+                });
+            assert_eq!(n2, n);
+            assert!(arena.len() >= n, "recycled buffers must return to the pool");
+        }
+    }
+
+    #[test]
+    fn arena_drops_foreign_shapes() {
+        // A buffer from a different parameter set must never be handed out.
+        let ctx = small_ctx();
+        let other = CkksContext::new(256, 3, 30).unwrap();
+        let arena = CtArena::new();
+        arena.recycle(Ciphertext::zero(&other.params));
+        assert_eq!(arena.len(), 1);
+        let ct = arena.take(&ctx.params);
+        assert_eq!(ct.c0.n, ctx.params.n);
+        assert_eq!(ct.c0.num_limbs(), ctx.params.num_limbs());
+        assert!(arena.is_empty(), "foreign-shaped buffer should be dropped");
     }
 
     #[test]

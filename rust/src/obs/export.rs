@@ -11,7 +11,9 @@ use std::time::Duration;
 /// Schema version stamped into the `--report-json` envelope. Bump on any
 /// breaking change to the envelope layout (CI diffs the committed
 /// `BENCH_perf.json` / report schemas against freshly generated ones).
-pub const REPORT_SCHEMA_VERSION: u64 = 1;
+/// (v2: NTT kernel-dispatch counters and run-aware packing slot gauges
+/// joined the metrics snapshot.)
+pub const REPORT_SCHEMA_VERSION: u64 = 2;
 
 /// Identifier stamped into the `--report-json` envelope.
 pub const REPORT_SCHEMA_NAME: &str = "fedml-he/run-report";

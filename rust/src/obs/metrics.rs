@@ -197,6 +197,10 @@ struct Registry {
     scratch_pool_misses: AtomicU64,
     ntt_forward: AtomicU64,
     ntt_inverse: AtomicU64,
+    ntt_kernel_avx2: AtomicU64,
+    ntt_kernel_scalar: AtomicU64,
+    pack_slots_used: AtomicU64,
+    pack_slots_total: AtomicU64,
     intake_offered: AtomicU64,
     intake_queue: Gauge,
     session_rtt: Histogram,
@@ -213,6 +217,10 @@ static REGISTRY: Registry = Registry {
     scratch_pool_misses: AtomicU64::new(0),
     ntt_forward: AtomicU64::new(0),
     ntt_inverse: AtomicU64::new(0),
+    ntt_kernel_avx2: AtomicU64::new(0),
+    ntt_kernel_scalar: AtomicU64::new(0),
+    pack_slots_used: AtomicU64::new(0),
+    pack_slots_total: AtomicU64::new(0),
     intake_offered: AtomicU64::new(0),
     intake_queue: Gauge::new(),
     session_rtt: Histogram::new(),
@@ -278,6 +286,28 @@ pub fn ntt_inverse() {
     REGISTRY.ntt_inverse.fetch_add(1, Ordering::Relaxed);
 }
 
+/// One NTT dispatch through the active butterfly kernel; `simd` = a
+/// vectorized kernel (AVX2) was selected, else the portable scalar path
+/// (see `ckks::simd::active` and the `FEDML_HE_NTT_KERNEL` override).
+#[inline]
+pub fn ntt_kernel(simd: bool) {
+    if simd {
+        REGISTRY.ntt_kernel_avx2.fetch_add(1, Ordering::Relaxed);
+    } else {
+        REGISTRY.ntt_kernel_scalar.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// One packing plan cut by the selective codec: `used` slots carry masked
+/// values out of `total` allocated CKKS slots (`n_cts · batch`). The
+/// snapshot derives the run-aware slot-utilization gauge from the running
+/// totals.
+#[inline]
+pub fn pack_slots(used: u64, total: u64) {
+    REGISTRY.pack_slots_used.fetch_add(used, Ordering::Relaxed);
+    REGISTRY.pack_slots_total.fetch_add(total, Ordering::Relaxed);
+}
+
 /// An arrival admitted to the streaming intake (queue depth +1).
 #[inline]
 pub fn intake_enqueued() {
@@ -296,6 +326,18 @@ pub fn intake_drained(n: u64) {
 pub fn session_rtt_secs(secs: f64) {
     if secs.is_finite() && secs >= 0.0 {
         REGISTRY.session_rtt.record_ns((secs * 1e9) as u64);
+    }
+}
+
+/// Run-aware packing slot utilization over every plan cut so far
+/// (`used / total`; 0.0 before the first plan).
+fn pack_slot_utilization() -> f64 {
+    let used = REGISTRY.pack_slots_used.load(Ordering::Relaxed);
+    let total = REGISTRY.pack_slots_total.load(Ordering::Relaxed);
+    if total == 0 {
+        0.0
+    } else {
+        used as f64 / total as f64
     }
 }
 
@@ -327,6 +369,23 @@ pub fn snapshot() -> Json {
         ),
         ("ntt_forward", REGISTRY.ntt_forward.load(Ordering::Relaxed).into()),
         ("ntt_inverse", REGISTRY.ntt_inverse.load(Ordering::Relaxed).into()),
+        (
+            "ntt_kernel_avx2",
+            REGISTRY.ntt_kernel_avx2.load(Ordering::Relaxed).into(),
+        ),
+        (
+            "ntt_kernel_scalar",
+            REGISTRY.ntt_kernel_scalar.load(Ordering::Relaxed).into(),
+        ),
+        (
+            "pack_slots_used",
+            REGISTRY.pack_slots_used.load(Ordering::Relaxed).into(),
+        ),
+        (
+            "pack_slots_total",
+            REGISTRY.pack_slots_total.load(Ordering::Relaxed).into(),
+        ),
+        ("pack_slot_utilization", pack_slot_utilization().into()),
         (
             "intake_offered",
             REGISTRY.intake_offered.load(Ordering::Relaxed).into(),
@@ -379,6 +438,10 @@ pub fn reset() {
         &REGISTRY.scratch_pool_misses,
         &REGISTRY.ntt_forward,
         &REGISTRY.ntt_inverse,
+        &REGISTRY.ntt_kernel_avx2,
+        &REGISTRY.ntt_kernel_scalar,
+        &REGISTRY.pack_slots_used,
+        &REGISTRY.pack_slots_total,
         &REGISTRY.intake_offered,
         &REGISTRY.intake_queue.value,
         &REGISTRY.intake_queue.peak,

@@ -28,7 +28,7 @@ use super::frame::{
 use crate::ckks::serialize::ciphertext_shard_append;
 use crate::ckks::{Ciphertext, PublicKey};
 use crate::crypto::prng::ChaChaRng;
-use crate::he_agg::{EncryptedUpdate, EncryptionMask, SelectiveCodec};
+use crate::he_agg::{CtArena, EncryptedUpdate, EncryptionMask, SelectiveCodec};
 use std::io::{BufWriter, Read, Write};
 use std::net::TcpStream;
 use std::time::Duration;
@@ -246,14 +246,20 @@ pub fn upload_encrypt_streaming(
     // Stream ciphertext chunks as the worker pool finishes them. Encryption
     // keeps running after a socket error; the first error is kept and
     // reported once the (deterministic) rng stream has fully advanced.
+    // Each serialized chunk's buffer is recycled into the arena, so the
+    // upload keeps O(workers) ciphertext buffers live regardless of model
+    // size.
+    let arena = CtArena::new();
     let mut io_err: Option<std::io::Error> = None;
-    let (plain, ct_frames) = codec.encrypt_update_streamed(model, mask, pk, rng, |seq, ct| {
-        if io_err.is_none() {
-            if let Err(e) = sink.send_ct(seq, &ct) {
-                io_err = Some(e);
+    let (plain, ct_frames) =
+        codec.encrypt_update_streamed_with_arena(model, mask, pk, rng, &arena, |seq, ct| {
+            if io_err.is_none() {
+                if let Err(e) = sink.send_ct(seq, &ct) {
+                    io_err = Some(e);
+                }
             }
-        }
-    });
+            arena.recycle(ct);
+        });
     if let Some(e) = io_err {
         return Err(e.into());
     }

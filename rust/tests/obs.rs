@@ -34,6 +34,8 @@ fn concurrent_recording_matches_serial_oracle() {
                     metrics::scratch_pool(i % 2 == 0);
                     metrics::ntt_forward();
                     metrics::ntt_inverse();
+                    metrics::ntt_kernel(i % 2 == 0);
+                    metrics::pack_slots(3, 4);
                     metrics::intake_enqueued();
                     metrics::session_rtt_secs(1e-6 * (i + 1) as f64);
                 }
@@ -64,6 +66,15 @@ fn concurrent_recording_matches_serial_oracle() {
     assert_eq!(get("scratch_pool_misses"), total / 2);
     assert_eq!(get("ntt_forward"), total);
     assert_eq!(get("ntt_inverse"), total);
+    assert_eq!(get("ntt_kernel_avx2"), total / 2);
+    assert_eq!(get("ntt_kernel_scalar"), total / 2);
+    assert_eq!(get("pack_slots_used"), 3 * total);
+    assert_eq!(get("pack_slots_total"), 4 * total);
+    // derived gauge: 3/4 of all allocated slots carried values
+    assert_eq!(
+        snap.get("pack_slot_utilization").and_then(Json::as_f64),
+        Some(0.75)
+    );
     assert_eq!(get("intake_offered"), total);
     assert_eq!(get("intake_queue_depth"), 0);
     assert!(get("intake_queue_peak") >= ITERS); // at least one thread's burst
@@ -187,6 +198,11 @@ fn run_report_envelope_schema_holds() {
         "scratch_pool_misses",
         "ntt_forward",
         "ntt_inverse",
+        "ntt_kernel_avx2",
+        "ntt_kernel_scalar",
+        "pack_slots_used",
+        "pack_slots_total",
+        "pack_slot_utilization",
         "intake_offered",
         "intake_queue_depth",
         "intake_queue_peak",

@@ -1,0 +1,136 @@
+//! §Perf differential gates for the runtime-dispatched NTT kernels
+//! (`ckks::simd`). Every kernel reachable through dispatch — the portable
+//! scalar loops, the detected vector kernel, and whatever `active()` picked
+//! for this process — must be **bitwise identical** to the seed reference
+//! butterflies kept in `ntt.rs`, across every generated prime and the full
+//! ring-degree range, on random and extremal coefficient patterns. The
+//! weighted-sum trait methods get the same treatment against plain Barrett
+//! arithmetic.
+//!
+//! CI runs this binary twice: once with auto-detection (exercising the
+//! vector kernel on AVX2 runners) and once under `FEDML_HE_NTT_KERNEL=scalar`
+//! (pinning the forced-scalar override end to end).
+
+use fedml_he::ckks::modarith::Barrett;
+use fedml_he::ckks::ntt::NttTables;
+use fedml_he::ckks::params::generate_ntt_primes;
+use fedml_he::ckks::simd::{self, NttKernel};
+use fedml_he::crypto::prng::ChaChaRng;
+
+const DEGREES: [usize; 6] = [16, 64, 256, 1024, 4096, 8192];
+
+/// One full differential sweep of `k` against the reference butterflies:
+/// forward and inverse transforms bitwise equal, outputs fully reduced,
+/// exact roundtrip — for every generated prime × ring degree, on a random
+/// vector plus the extremal patterns (all q−1, all zero, spike at n−1).
+fn sweep(k: &dyn NttKernel) {
+    for &q in &generate_ntt_primes(4) {
+        for n in DEGREES {
+            let t = NttTables::new(q, n);
+            let mut rng = ChaChaRng::from_seed(q ^ n as u64, 7);
+            let mut patterns: Vec<Vec<u64>> = vec![
+                (0..n).map(|_| rng.uniform_u64(q)).collect(),
+                vec![q - 1; n],
+                vec![0; n],
+            ];
+            let mut spike = vec![0u64; n];
+            spike[n - 1] = q - 1;
+            patterns.push(spike);
+            for orig in patterns {
+                let mut got = orig.clone();
+                let mut want = orig.clone();
+                t.forward_with(k, &mut got);
+                t.forward_reference(&mut want);
+                assert_eq!(got, want, "[{}] forward mismatch q={q} n={n}", k.name());
+                assert!(
+                    got.iter().all(|&x| x < q),
+                    "[{}] forward output not fully reduced q={q} n={n}",
+                    k.name()
+                );
+                t.inverse_with(k, &mut got);
+                t.inverse_reference(&mut want);
+                assert_eq!(got, want, "[{}] inverse mismatch q={q} n={n}", k.name());
+                assert!(
+                    got.iter().all(|&x| x < q),
+                    "[{}] inverse output not fully reduced q={q} n={n}",
+                    k.name()
+                );
+                assert_eq!(got, orig, "[{}] roundtrip mismatch q={q} n={n}", k.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn scalar_kernel_matches_reference_everywhere() {
+    sweep(simd::scalar());
+}
+
+#[test]
+fn detected_simd_kernel_matches_reference_everywhere() {
+    if let Some(k) = simd::detected_simd() {
+        assert!(k.is_simd());
+        sweep(k);
+    }
+    // Hosts without a vector unit have nothing to differentially test here;
+    // the scalar sweep above is the whole story for them.
+}
+
+#[test]
+fn dispatch_paths_match_reference_everywhere() {
+    // Both values `kernel_for` can resolve to, plus the process-wide pick
+    // (which honours FEDML_HE_NTT_KERNEL — CI runs this both ways).
+    let forced = simd::kernel_for(Some("scalar"));
+    assert_eq!(forced.name(), "scalar");
+    sweep(forced);
+    sweep(simd::kernel_for(None));
+    sweep(simd::active());
+}
+
+#[test]
+fn weighted_kernel_methods_match_scalar_barrett_math() {
+    let mut kernels: Vec<&dyn NttKernel> = vec![simd::scalar()];
+    if let Some(k) = simd::detected_simd() {
+        kernels.push(k);
+    }
+    for &q in &generate_ntt_primes(4) {
+        let br = Barrett::new(q);
+        // Lengths straddle the 4-lane width: pure tails, exact multiples,
+        // and multiples-plus-tail all take distinct code paths.
+        for len in [1usize, 3, 4, 7, 64, 1001] {
+            let mut rng = ChaChaRng::from_seed(q ^ len as u64, 9);
+            let src: Vec<u64> = (0..len).map(|_| rng.uniform_u64(q)).collect();
+            let w = rng.uniform_u64(q);
+            for k in &kernels {
+                let mut got = vec![0u64; len];
+                k.weighted_init(&mut got, &src, w, br);
+                let mut want = vec![0u64; len];
+                for (d, &s) in want.iter_mut().zip(&src) {
+                    *d = br.mul(s, w);
+                }
+                assert_eq!(got, want, "[{}] weighted_init q={q} len={len}", k.name());
+
+                // Accumulate on top of near-maximal accumulators: the sums
+                // land just under the 2^62 Barrett bound callers fold at.
+                let base: Vec<u64> = (0..len).map(|i| (1u64 << 61) - 1 - i as u64).collect();
+                let mut got = base.clone();
+                k.weighted_accumulate(&mut got, &src, w, br);
+                let mut want = base.clone();
+                for (d, &s) in want.iter_mut().zip(&src) {
+                    *d += br.mul(s, w);
+                }
+                assert_eq!(
+                    got, want,
+                    "[{}] weighted_accumulate q={q} len={len}",
+                    k.name()
+                );
+
+                // Fold those accumulators back to [0, q).
+                k.reduce_slice(&mut got, br);
+                let want_red: Vec<u64> = want.iter().map(|&t| br.reduce(t)).collect();
+                assert_eq!(got, want_red, "[{}] reduce_slice q={q} len={len}", k.name());
+                assert!(got.iter().all(|&x| x < q));
+            }
+        }
+    }
+}

@@ -13,7 +13,7 @@ use fedml_he::ckks::{
     decrypt_into, encrypt_into, keygen, ops, Ciphertext, CkksParams, CkksScratch, RnsPoly,
 };
 use fedml_he::crypto::prng::ChaChaRng;
-use fedml_he::he_agg::EncryptedUpdate;
+use fedml_he::he_agg::{CtArena, EncryptedUpdate, EncryptionMask, SelectiveCodec};
 use std::sync::Arc;
 
 struct CountingAlloc;
@@ -77,6 +77,54 @@ fn hot_paths_are_allocation_free_after_warmup() {
     // Sanity: the loop really did useful work (fresh randomness each pass).
     assert!(ct.c0.limb(0).iter().any(|&x| x != 0));
     assert_eq!(agg.n_values, 128);
+}
+
+#[test]
+fn warm_arena_rounds_stop_allocating_ciphertext_buffers() {
+    // Pooled-ciphertext gate (§Perf): once the arena holds one round's
+    // buffers, subsequent rounds draw every output ciphertext from the pool
+    // — the two limb buffers per chunk (the model-scale allocations) must
+    // disappear from the steady state, and the remaining per-call
+    // bookkeeping must be exactly stable from round to round.
+    let ctx = fedml_he::ckks::CkksContext::new(256, 3, 30).unwrap();
+    let codec = SelectiveCodec::with_workers(ctx, 1);
+    let mut rng = ChaChaRng::from_seed(21, 0);
+    let (pk, _) = codec.ctx.keygen(&mut rng);
+    let n_chunks = 8usize;
+    let total = n_chunks * codec.ctx.batch();
+    let model: Vec<f32> = (0..total).map(|i| (i as f32 * 0.01).sin()).collect();
+    let mask = EncryptionMask::full(total);
+    let arena = CtArena::new();
+    let round = |rng: &mut ChaChaRng| {
+        let mut n = 0usize;
+        codec.encrypt_update_streamed_with_arena(&model, &mask, &pk, rng, &arena, |_, ct| {
+            n += 1;
+            arena.recycle(ct);
+        });
+        n
+    };
+    // Cold round: every ciphertext buffer is freshly allocated.
+    let before = ALLOCS.load(Ordering::Relaxed);
+    assert_eq!(round(&mut rng), n_chunks);
+    let cold = ALLOCS.load(Ordering::Relaxed) - before;
+    // Warm rounds: all chunks come from the (now full) pool.
+    let before = ALLOCS.load(Ordering::Relaxed);
+    assert_eq!(round(&mut rng), n_chunks);
+    let warm1 = ALLOCS.load(Ordering::Relaxed) - before;
+    let before = ALLOCS.load(Ordering::Relaxed);
+    assert_eq!(round(&mut rng), n_chunks);
+    let warm2 = ALLOCS.load(Ordering::Relaxed) - before;
+    assert!(
+        cold >= warm1 + 2 * n_chunks,
+        "warm arena round saved only {} of the {} ciphertext-buffer \
+         allocations (cold {cold}, warm {warm1})",
+        cold.saturating_sub(warm1),
+        2 * n_chunks
+    );
+    assert_eq!(
+        warm1, warm2,
+        "steady-state arena rounds must have identical allocation counts"
+    );
 }
 
 #[test]
