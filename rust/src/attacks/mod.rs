@@ -1,8 +1,11 @@
 //! Privacy attacks used to evaluate the selection defense (§4.2.2):
 //! DLG gradient inversion on image models (Fig. 9) and embedding-gradient
 //! token recovery on the transformer (Fig. 10 analog), plus the similarity
-//! metrics that score them.
+//! metrics that score them — and the adversarial *transport* harness
+//! ([`transport`]) that drives live authenticated sessions through
+//! scripted wire adversaries (DESIGN.md §12).
 
 pub mod dlg;
 pub mod metrics;
 pub mod nlp;
+pub mod transport;

@@ -77,6 +77,38 @@ impl Transport {
     }
 }
 
+/// Session wire-authentication mode (`--wire-auth {none,mac}`, DESIGN.md
+/// §12). The default comes from the `FEDML_HE_WIRE_AUTH` environment
+/// variable when set (mirroring `FEDML_HE_NTT_KERNEL`), so CI can run the
+/// whole tier-1 suite once per mode without touching every invocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireAuth {
+    /// Legacy plaintext control plane: CRC only, unauthenticated HELLO.
+    None,
+    /// Challenge/response handshake + per-frame SipHash-2-4 tags with a
+    /// session-monotone replay window.
+    Mac,
+}
+
+impl WireAuth {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "none" => WireAuth::None,
+            "mac" => WireAuth::Mac,
+            other => anyhow::bail!("unknown wire-auth mode '{other}' (expected: none | mac)"),
+        })
+    }
+
+    /// Process-wide default: `FEDML_HE_WIRE_AUTH` when set and valid,
+    /// else [`WireAuth::None`].
+    pub fn env_default() -> Self {
+        match std::env::var("FEDML_HE_WIRE_AUTH") {
+            Ok(v) => WireAuth::parse(v.trim()).unwrap_or(WireAuth::None),
+            Err(_) => WireAuth::None,
+        }
+    }
+}
+
 /// Aggregation backend.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Backend {
@@ -164,6 +196,14 @@ pub struct FlConfig {
     /// (`--round-wait`) — covers server aggregation plus the other
     /// clients' training between rounds.
     pub round_wait: f64,
+    /// Session wire-authentication mode (`--wire-auth`).
+    pub wire_auth: WireAuth,
+    /// Connect/rejoin attempts before a client session gives up
+    /// (`--connect-retries`; 0 = fail fast on the first refusal).
+    pub connect_retries: u32,
+    /// Base delay in milliseconds for the capped exponential connect
+    /// backoff (`--retry-base-ms`; jittered, doubling per attempt).
+    pub retry_base_ms: u64,
 }
 
 impl Default for FlConfig {
@@ -199,6 +239,9 @@ impl Default for FlConfig {
             synthetic_dim: crate::fl::SYNTHETIC_DEFAULT_DIM,
             join_wait: 120.0,
             round_wait: 300.0,
+            wire_auth: WireAuth::env_default(),
+            connect_retries: 5,
+            retry_base_ms: 50,
         }
     }
 }
@@ -257,6 +300,12 @@ impl FlConfig {
             synthetic_dim: args.get_parsed_or("synthetic-params", d.synthetic_dim),
             join_wait: args.get_parsed_or("join-wait", d.join_wait),
             round_wait: args.get_parsed_or("round-wait", d.round_wait),
+            wire_auth: match args.get("wire-auth") {
+                Some(v) => WireAuth::parse(&v)?,
+                None => d.wire_auth,
+            },
+            connect_retries: args.get_parsed_or("connect-retries", d.connect_retries),
+            retry_base_ms: args.get_parsed_or("retry-base-ms", d.retry_base_ms),
         })
     }
 
@@ -330,6 +379,21 @@ mod tests {
     }
 
     #[test]
+    fn wire_auth_parses() {
+        let args = Args::parse_from(
+            "run --wire-auth mac --connect-retries 9 --retry-base-ms 10"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let c = FlConfig::from_args(&args).unwrap();
+        assert_eq!(c.wire_auth, WireAuth::Mac);
+        assert_eq!(c.connect_retries, 9);
+        assert_eq!(c.retry_base_ms, 10);
+        assert_eq!(WireAuth::parse("none").unwrap(), WireAuth::None);
+        assert!(WireAuth::parse("tls").is_err());
+    }
+
+    #[test]
     fn mask_granularity_parses() {
         let args = Args::parse_from(
             "run --mask-granularity layer"
@@ -379,6 +443,9 @@ mod tests {
             "run --mask-granularity tensor",
             "run --transport udp",
             "run --intake-max-wait soon",
+            "run --wire-auth hmac",
+            "run --connect-retries lots",
+            "run --retry-base-ms soon",
         ] {
             let args = Args::parse_from(bad.split_whitespace().map(String::from));
             assert!(FlConfig::from_args(&args).is_err(), "{bad}");

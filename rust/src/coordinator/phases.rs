@@ -46,8 +46,8 @@ use crate::he_agg::{selective, EncryptedUpdate, EncryptionMask, SelectiveCodec};
 use crate::netsim::{concurrent_arrivals, SimClock};
 use crate::runtime::Runtime;
 use crate::transport::{
-    ClientSession, DownBegin, IntakeConfig, SessionHub, SessionOpts, UpdateShape, MASK_ROUND,
-    UNIDENTIFIED_CLIENT,
+    ClientSession, DownBegin, IntakeConfig, RoundDownlink, SessionHub, SessionOpts, UpdateShape,
+    MASK_ROUND, UNIDENTIFIED_CLIENT,
 };
 use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
@@ -1010,12 +1010,51 @@ pub struct ClientLoopCfg {
     pub opts: SessionOpts,
 }
 
+/// Burn one unit of the rejoin budget and reconnect; errors with the
+/// original failure once the budget is exhausted. Each attempt runs the
+/// full [`ClientSession::connect`] (backoff dial + handshake), and the
+/// server-side handshake replays the in-flight stage's downlink.
+fn rejoin_session(
+    cfg: &ClientLoopCfg,
+    codec: &SelectiveCodec,
+    rejoins_left: &mut u32,
+    err: anyhow::Error,
+) -> anyhow::Result<ClientSession> {
+    let mut last = err;
+    while *rejoins_left > 0 {
+        *rejoins_left -= 1;
+        crate::log_debug!(
+            "client",
+            "client {}: session lost ({last}); rejoining ({} attempts left)",
+            cfg.client,
+            rejoins_left
+        );
+        match ClientSession::connect(
+            &cfg.addr,
+            cfg.client,
+            codec.ctx.params.clone(),
+            cfg.opts.clone(),
+        ) {
+            Ok((sess, _next)) => return Ok(sess),
+            Err(e) => last = e,
+        }
+    }
+    Err(last.context("session lost and the rejoin budget is exhausted"))
+}
+
 /// The client main loop, shared verbatim by `join` processes and the
 /// in-process client threads of `--transport tcp`: connect + HELLO, upload
 /// the encrypted sensitivity map (TopP), receive the mask, then per round
 /// receive the downlink (decrypt + renormalize the carried aggregate with
 /// the secret key — the client-side half of Algorithm 1), train, encrypt,
 /// upload. Exits on the FIN downlink; returns the final global model.
+///
+/// Wire faults do not kill the task while the rejoin budget
+/// (`opts.connect_retries`) lasts: a failed receive or upload reconnects,
+/// the server's handshake replays the current stage's downlink, and the
+/// loop's round counter skips downlinks it already processed (wire round
+/// below its own) or fast-forwards to a later round the task moved on to
+/// while the client was gone.
 pub fn client_session_loop(
     cfg: &ClientLoopCfg,
     codec: &SelectiveCodec,
@@ -1032,6 +1071,8 @@ pub fn client_session_loop(
     )?;
     let mut global = init_global;
     let total = global.len();
+    // rejoin budget for the whole task
+    let mut rejoins_left = cfg.opts.connect_retries;
 
     // Mask-agreement stage (TopP only): encrypted sensitivity uplink.
     if cfg.selection == Selection::TopP {
@@ -1047,9 +1088,19 @@ pub fn client_session_loop(
             plain: Vec::new(),
             total: map_len,
         };
-        sess.upload(MASK_ROUND, core.alpha(), &upd, None)?;
+        loop {
+            match sess.upload(MASK_ROUND, core.alpha(), &upd, None) {
+                Ok(_) => break,
+                Err(e) => sess = rejoin_session(cfg, codec, &mut rejoins_left, e)?,
+            }
+        }
     }
-    let mask = sess.recv_mask(total)?;
+    let mask = loop {
+        match sess.recv_mask(total) {
+            Ok(m) => break m,
+            Err(e) => sess = rejoin_session(cfg, codec, &mut rejoins_left, e)?,
+        }
+    };
     anyhow::ensure!(
         mask.total() == total,
         "agreed mask covers {} params, local model has {total}",
@@ -1058,8 +1109,26 @@ pub fn client_session_loop(
     let shape = UpdateShape::for_round(&codec.ctx, &mask);
 
     let mut round: u64 = 0;
+    // A downlink drained during an upload retry that turned out to belong
+    // to a *later* round (the server closed this client's upload window
+    // and moved on) — processed by the next loop iteration.
+    let mut carry: Option<(u64, RoundDownlink)> = None;
     loop {
-        let dl = sess.recv_round(round, Some(shape))?;
+        let (wire_round, dl) = match carry.take() {
+            Some(x) => x,
+            None => match sess.recv_round_any(Some(shape), total) {
+                Ok(x) => x,
+                Err(e) => {
+                    sess = rejoin_session(cfg, codec, &mut rejoins_left, e)?;
+                    continue;
+                }
+            },
+        };
+        if wire_round < round {
+            // a rejoin replay of a downlink this client already processed
+            continue;
+        }
+        round = wire_round;
         if let Some(agg) = &dl.agg {
             let mut g = codec.decrypt_update(agg, &mask, sk);
             // identical renormalization (and skip-condition) to the
@@ -1081,12 +1150,35 @@ pub fn client_session_loop(
             let t = Instant::now();
             let upd = core.encrypt(codec, &mut local, &mask, pk, cfg.dp_scale);
             let encrypt_secs = t.elapsed().as_secs_f64();
-            sess.upload(
-                round,
-                dl.down.alpha,
-                &upd,
-                Some((train_secs, encrypt_secs, loss)),
-            )?;
+            loop {
+                match sess.upload(
+                    round,
+                    dl.down.alpha,
+                    &upd,
+                    Some((train_secs, encrypt_secs, loss)),
+                ) {
+                    Ok(_) => break,
+                    Err(e) => {
+                        sess = rejoin_session(cfg, codec, &mut rejoins_left, e)?;
+                        // The rejoin handshake replays the in-flight
+                        // stage's downlink; drain it so the retry's ACK is
+                        // the next frame on the read path. A replay of the
+                        // current round means the server is still
+                        // collecting — retry the upload; a later round
+                        // means this client's window closed — carry it.
+                        match sess.recv_round_any(Some(shape), total) {
+                            Ok((r, d)) if r > round => {
+                                carry = Some((r, d));
+                                break;
+                            }
+                            Ok(_) => {}
+                            Err(e) => {
+                                sess = rejoin_session(cfg, codec, &mut rejoins_left, e)?;
+                            }
+                        }
+                    }
+                }
+            }
         }
         round += 1;
     }
@@ -1102,7 +1194,7 @@ pub fn join_task(
     client_id: u64,
     key: &TaskKey,
     rt: Option<&Runtime>,
-    opts: SessionOpts,
+    mut opts: SessionOpts,
 ) -> anyhow::Result<Vec<f32>> {
     let spec = &key.spec;
     anyhow::ensure!(
@@ -1111,6 +1203,14 @@ pub fn join_task(
         spec.clients,
         spec.clients - 1
     );
+    // the wire-auth mode travels in the task key, so `join` auto-selects
+    // it — a client can never be silently downgraded by the socket peer
+    if spec.wire_auth == crate::coordinator::config::WireAuth::Mac {
+        opts.auth = Some(crate::crypto::mac::derive_client_key(
+            &key.mac_root,
+            client_id,
+        ));
+    }
     let params = spec.params()?;
     let ctx = CkksContext {
         encoder: Arc::new(crate::ckks::Encoder::new(params.clone())),

@@ -18,7 +18,7 @@
 //!   key file (DESIGN.md §9). Same phases, same bytes, bitwise-identical
 //!   final model for the same seed.
 
-use super::config::{Backend, FlConfig, KeyMode, Transport};
+use super::config::{Backend, FlConfig, KeyMode, Transport, WireAuth};
 use super::key_authority::KeyMaterial;
 use super::phases::{self, Participant, RemoteParticipant, SimParticipant, Uplink};
 use super::taskkey::{TaskKey, TaskSpec};
@@ -389,8 +389,24 @@ impl<'a> FlServer<'a> {
         SessionOpts {
             round_wait: Duration::from_secs_f64(self.cfg.round_wait.max(1.0)),
             connect_retry: Duration::from_secs_f64(self.cfg.join_wait.max(1.0)),
+            connect_retries: self.cfg.connect_retries,
+            retry_base: Duration::from_millis(self.cfg.retry_base_ms.max(1)),
             ..SessionOpts::default()
         }
+    }
+
+    /// The task's MAC root under `--wire-auth mac`: fresh OS entropy per
+    /// run — never derived from `cfg.seed`, which is public and pins the
+    /// (deterministic) model trajectory, not secrets.
+    fn draw_mac_root(&self) -> anyhow::Result<Option<[u8; 32]>> {
+        if self.cfg.wire_auth != WireAuth::Mac {
+            return Ok(None);
+        }
+        let mut root = [0u8; 32];
+        ChaChaRng::from_os_entropy()
+            .map_err(|e| anyhow::anyhow!("cannot draw the task mac root: {e}"))?
+            .fill_bytes(&mut root);
+        Ok(Some(root))
     }
 
     /// Run the full federated task. Returns the report and the final
@@ -430,10 +446,12 @@ impl<'a> FlServer<'a> {
         };
         let pk = pk.clone();
         let sk = sk.clone();
-        let mut hub = SessionHub::bind(
+        let mac_root = self.draw_mac_root()?;
+        let mut hub = SessionHub::bind_with_auth(
             &cfg.listen,
             self.codec.ctx.params.clone(),
             cfg.clients * 2 + 8,
+            mac_root,
         )?;
         let addr = match &cfg.connect {
             Some(a) => a.clone(),
@@ -448,6 +466,10 @@ impl<'a> FlServer<'a> {
         let drive_result = std::thread::scope(|s| {
             let mut handles = Vec::with_capacity(cfg.clients);
             for (id, core) in cores.into_iter().enumerate() {
+                let mut opts = self.session_opts();
+                if let Some(root) = &mac_root {
+                    opts.auth = Some(crate::crypto::mac::derive_client_key(root, id as u64));
+                }
                 let lcfg = phases::ClientLoopCfg {
                     addr: addr.clone(),
                     client: id as u64,
@@ -458,7 +480,7 @@ impl<'a> FlServer<'a> {
                     local_steps: cfg.local_steps,
                     lr: cfg.lr,
                     dp_scale: cfg.dp_scale,
-                    opts: self.session_opts(),
+                    opts,
                 };
                 let codec = &self.codec;
                 let pk = pk.clone();
@@ -528,18 +550,24 @@ impl<'a> FlServer<'a> {
         let KeyMaterial::SingleKey { pk, sk } = &st.keys else {
             anyhow::bail!("serve requires single-key material");
         };
+        // the mac root rides the task key (the same trusted side channel
+        // as the secret key), so join processes derive their per-client
+        // keys without any on-wire key exchange
+        let mac_root = self.draw_mac_root()?;
         let task_key = TaskKey {
             spec: TaskSpec::from_config(cfg, &self.codec.ctx.params),
             pk: pk.clone(),
             sk: sk.clone(),
+            mac_root: mac_root.unwrap_or([0u8; 32]),
         };
         // key file first, then listen: a join process that sees the file
         // can immediately dial (with connect retry) without racing the bind
         task_key.save(&opts.task_key)?;
-        let mut hub = SessionHub::bind(
+        let mut hub = SessionHub::bind_with_auth(
             &cfg.listen,
             self.codec.ctx.params.clone(),
             cfg.clients * 2 + 8,
+            mac_root,
         )?;
         let addr = hub.local_addr()?;
         if let Some(p) = &opts.addr_file {

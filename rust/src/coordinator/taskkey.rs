@@ -10,13 +10,17 @@
 //!
 //! **Trust model.** The file is the paper's "key agreement" stage collapsed
 //! to a file handed out over a trusted side channel: whoever can read it
-//! can decrypt aggregates, so it must never travel over the unauthenticated
-//! session socket. Client ids remain unauthenticated on the wire (any peer
-//! that knows the listen address can claim a slot) and the transport is
-//! plaintext TCP — TLS + client authentication are future work, recorded in
-//! DESIGN.md §9.
+//! can decrypt aggregates, so it must never travel over the session socket.
+//! Since v2 the file also carries the 32-byte `mac_root` from which every
+//! client derives its per-client MAC key (`crypto::mac::derive_client_key`)
+//! — under `--wire-auth mac` the HELLO/WELCOME handshake is a server-nonce
+//! challenge/response and every post-handshake frame carries a keyed tag,
+//! so client ids can no longer be forged by any peer that merely knows the
+//! listen address (DESIGN.md §12). The transport itself remains plaintext
+//! TCP: the MAC layer gives integrity and identity, not confidentiality —
+//! which the HE layer already provides for everything that matters.
 
-use super::config::{FlConfig, MaskGranularity, Selection};
+use super::config::{FlConfig, MaskGranularity, Selection, WireAuth};
 use crate::ckks::keys::{PublicKey, SecretKey};
 use crate::ckks::serialize::{
     public_key_append, public_key_read, secret_key_append, secret_key_read,
@@ -26,7 +30,7 @@ use crate::transport::frame::crc32;
 use std::sync::Arc;
 
 const MAGIC: u32 = 0x4648_544B; // "FHTK"
-const VERSION: u32 = 1;
+const VERSION: u32 = 2; // v2: wire-auth mode tag + 32-byte mac_root
 
 /// The task parameters every process of a multi-process run must share.
 #[derive(Debug, Clone, PartialEq)]
@@ -47,6 +51,10 @@ pub struct TaskSpec {
     pub seed: u64,
     /// Crypto context as `(n, num_limbs, scaling_bits)`.
     pub crypto: (usize, usize, u32),
+    /// Wire-authentication mode every participant must run in lockstep
+    /// (`join` auto-selects it from here; a mode mismatch fails loudly at
+    /// the handshake).
+    pub wire_auth: WireAuth,
 }
 
 impl TaskSpec {
@@ -67,6 +75,7 @@ impl TaskSpec {
             skew: cfg.skew,
             seed: cfg.seed,
             crypto: (params.n, params.num_limbs(), params.scaling_bits),
+            wire_auth: cfg.wire_auth,
         }
     }
 
@@ -111,11 +120,31 @@ fn granularity_from_u8(v: u8) -> anyhow::Result<MaskGranularity> {
     })
 }
 
+fn wire_auth_to_u8(w: WireAuth) -> u8 {
+    match w {
+        WireAuth::None => 0,
+        WireAuth::Mac => 1,
+    }
+}
+
+fn wire_auth_from_u8(v: u8) -> anyhow::Result<WireAuth> {
+    Ok(match v {
+        0 => WireAuth::None,
+        1 => WireAuth::Mac,
+        other => anyhow::bail!("unknown wire-auth tag {other}"),
+    })
+}
+
 /// The complete out-of-band distribution artifact: spec + key material.
 pub struct TaskKey {
     pub spec: TaskSpec,
     pub pk: PublicKey,
     pub sk: SecretKey,
+    /// Root of the per-client MAC key hierarchy (DESIGN.md §12). Drawn
+    /// from OS entropy at `serve` time — never from `cfg.seed`, which is
+    /// public and pins the (deterministic) model trajectory, not secrets.
+    /// All-zeros when `wire_auth` is [`WireAuth::None`].
+    pub mac_root: [u8; 32],
 }
 
 fn read_u32(bytes: &[u8], off: &mut usize) -> anyhow::Result<u32> {
@@ -155,7 +184,7 @@ impl TaskKey {
         out.push(selection_to_u8(s.selection));
         out.push(granularity_to_u8(s.mask_granularity));
         out.push(u8::from(s.dp_scale.is_some()));
-        out.push(0u8);
+        out.push(wire_auth_to_u8(s.wire_auth));
         out.extend_from_slice(&s.dp_scale.unwrap_or(0.0).to_le_bytes());
         out.extend_from_slice(&(s.samples_per_client as u32).to_le_bytes());
         out.extend_from_slice(&s.skew.to_le_bytes());
@@ -166,6 +195,7 @@ impl TaskKey {
         out.extend_from_slice(name);
         public_key_append(&self.pk, &mut out);
         secret_key_append(&self.sk, &mut out);
+        out.extend_from_slice(&self.mac_root);
         let crc = crc32(&out);
         out.extend_from_slice(&crc.to_le_bytes());
         out
@@ -197,7 +227,7 @@ impl TaskKey {
         let mask_granularity = granularity_from_u8(body[off + 1])?;
         let has_dp = body[off + 2];
         anyhow::ensure!(has_dp <= 1, "bad dp flag");
-        anyhow::ensure!(body[off + 3] == 0, "bad task-key padding");
+        let wire_auth = wire_auth_from_u8(body[off + 3])?;
         off += 4;
         let dp_raw = read_f64(body, &mut off)?;
         let dp_scale = (has_dp == 1).then_some(dp_raw);
@@ -219,6 +249,10 @@ impl TaskKey {
         let params = Arc::new(CkksParams::new(n, limbs, scaling_bits)?);
         let pk = public_key_read(body, &mut off, &params)?;
         let sk = secret_key_read(body, &mut off, &params)?;
+        anyhow::ensure!(body.len() >= off + 32, "truncated mac root");
+        let mut mac_root = [0u8; 32];
+        mac_root.copy_from_slice(&body[off..off + 32]);
+        off += 32;
         anyhow::ensure!(off == body.len(), "trailing bytes in task key");
         let spec = TaskSpec {
             model,
@@ -235,8 +269,9 @@ impl TaskKey {
             skew,
             seed,
             crypto: (n, limbs, scaling_bits),
+            wire_auth,
         };
-        Ok((TaskKey { spec, pk, sk }, params))
+        Ok((TaskKey { spec, pk, sk, mac_root }, params))
     }
 
     /// Write the file atomically — temp file + rename, so a `join` process
@@ -271,12 +306,18 @@ mod tests {
             rounds: 4,
             seed: 77,
             dp_scale: Some(0.25),
+            wire_auth: WireAuth::Mac,
             ..Default::default()
         };
+        let mut mac_root = [0u8; 32];
+        for (i, b) in mac_root.iter_mut().enumerate() {
+            *b = (i as u8).wrapping_mul(41);
+        }
         TaskKey {
             spec: TaskSpec::from_config(&cfg, &params),
             pk,
             sk,
+            mac_root,
         }
     }
 
@@ -286,6 +327,8 @@ mod tests {
         let bytes = tk.to_bytes();
         let (back, params) = TaskKey::from_bytes(&bytes).unwrap();
         assert_eq!(back.spec, tk.spec);
+        assert_eq!(back.spec.wire_auth, WireAuth::Mac);
+        assert_eq!(back.mac_root, tk.mac_root);
         assert_eq!(params.n, 256);
         assert_eq!(back.pk.b_ntt, tk.pk.b_ntt);
         assert_eq!(back.pk.a_ntt, tk.pk.a_ntt);

@@ -1,0 +1,247 @@
+//! Keyed frame authentication for the session wire (DESIGN.md §12).
+//!
+//! A from-scratch SipHash-2-4 produces the 64-bit truncated tags that
+//! authenticate every post-handshake frame, and a small KDF chain derives
+//! the key hierarchy distributed out-of-band via the task-key file:
+//!
+//! ```text
+//! task mac_root (32 B, OS entropy, in the task key file)
+//!   └─ per-client key   = ChaCha20(root, nonce = client_id)   [derive_client_key]
+//!        └─ session key = SipHash-KDF(client key, server nonce) [derive_session_key]
+//! ```
+//!
+//! SipHash is a keyed PRF designed exactly for this setting — short
+//! authenticators over untrusted input with a secret key — and is tiny
+//! enough to implement from primary sources (the reference test vectors
+//! below pin the implementation). The 64-bit tag is deliberate: the wire
+//! already rejects malformed frames via CRC, the MAC only has to defeat
+//! *online* forgery against a live session, and 2⁻⁶⁴ per-frame forgery
+//! probability with a monotone sequence number is far below the session
+//! frame budget.
+
+use crate::crypto::prng::ChaChaRng;
+
+/// 256-bit MAC key. Only the first 16 bytes feed SipHash (its native key
+/// size); the remaining 16 participate in the session KDF so the full
+/// 256 bits of derived entropy matter.
+#[derive(Clone, PartialEq, Eq)]
+pub struct MacKey(pub [u8; 32]);
+
+impl std::fmt::Debug for MacKey {
+    /// Key material must never reach logs or error strings.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "MacKey(..)")
+    }
+}
+
+#[inline(always)]
+fn sipround(v: &mut [u64; 4]) {
+    v[0] = v[0].wrapping_add(v[1]);
+    v[1] = v[1].rotate_left(13) ^ v[0];
+    v[0] = v[0].rotate_left(32);
+    v[2] = v[2].wrapping_add(v[3]);
+    v[3] = v[3].rotate_left(16) ^ v[2];
+    v[0] = v[0].wrapping_add(v[3]);
+    v[3] = v[3].rotate_left(21) ^ v[0];
+    v[2] = v[2].wrapping_add(v[1]);
+    v[1] = v[1].rotate_left(17) ^ v[2];
+    v[2] = v[2].rotate_left(32);
+}
+
+#[inline(always)]
+fn compress(v: &mut [u64; 4], m: u64) {
+    v[3] ^= m;
+    sipround(v);
+    sipround(v);
+    v[0] ^= m;
+}
+
+/// SipHash-2-4 over the concatenation of `parts` (scatter/gather input so
+/// callers never materialize `dir ‖ seq ‖ header ‖ payload ‖ crc`).
+pub fn tag64(key: &MacKey, parts: &[&[u8]]) -> u64 {
+    let k0 = u64::from_le_bytes(key.0[0..8].try_into().unwrap());
+    let k1 = u64::from_le_bytes(key.0[8..16].try_into().unwrap());
+    let mut v = [
+        k0 ^ 0x736f_6d65_7073_6575,
+        k1 ^ 0x646f_7261_6e64_6f6d,
+        k0 ^ 0x6c79_6765_6e65_7261,
+        k1 ^ 0x7465_6462_7974_6573,
+    ];
+    let mut buf = [0u8; 8];
+    let mut fill = 0usize;
+    let mut total = 0u64;
+    for part in parts {
+        let mut p: &[u8] = part;
+        total = total.wrapping_add(p.len() as u64);
+        // top up the straddling word first
+        if fill > 0 {
+            let take = (8 - fill).min(p.len());
+            buf[fill..fill + take].copy_from_slice(&p[..take]);
+            fill += take;
+            p = &p[take..];
+            if fill == 8 {
+                compress(&mut v, u64::from_le_bytes(buf));
+                fill = 0;
+            }
+        }
+        // bulk: whole aligned words straight from the part
+        let mut chunks = p.chunks_exact(8);
+        for c in &mut chunks {
+            compress(&mut v, u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let rem = chunks.remainder();
+        buf[..rem.len()].copy_from_slice(rem);
+        fill = rem.len();
+    }
+    // final word: remaining bytes plus the total length in the top byte
+    let mut last = (total & 0xff) << 56;
+    for (i, &b) in buf[..fill].iter().enumerate() {
+        last |= (b as u64) << (8 * i);
+    }
+    compress(&mut v, last);
+    v[2] ^= 0xff;
+    for _ in 0..4 {
+        sipround(&mut v);
+    }
+    v[0] ^ v[1] ^ v[2] ^ v[3]
+}
+
+/// Derive client `client_id`'s long-lived MAC key from the task root key.
+/// The derivation is a ChaCha20 stream keyed by the root with the client id
+/// as nonce — forward-secure in the root (learning one client key reveals
+/// nothing about siblings or the root).
+pub fn derive_client_key(root: &[u8; 32], client_id: u64) -> MacKey {
+    let mut nonce = [0u8; 12];
+    nonce[..8].copy_from_slice(&client_id.to_le_bytes());
+    let mut rng = ChaChaRng::new(root, &nonce);
+    let mut k = [0u8; 32];
+    rng.fill_bytes(&mut k);
+    MacKey(k)
+}
+
+/// Derive the per-session key from a client key and the server's 16-byte
+/// handshake nonce. Domain-separated SipHash-KDF: four tagged blocks, each
+/// folding in the nonce, a block index, and the client key's upper half
+/// (the bytes SipHash itself never consumes).
+pub fn derive_session_key(client_key: &MacKey, nonce: &[u8; 16]) -> MacKey {
+    let mut k = [0u8; 32];
+    for (i, chunk) in k.chunks_exact_mut(8).enumerate() {
+        let t = tag64(
+            client_key,
+            &[
+                b"fedml-he/session-kdf",
+                nonce,
+                &[i as u8],
+                &client_key.0[16..],
+            ],
+        );
+        chunk.copy_from_slice(&t.to_le_bytes());
+    }
+    MacKey(k)
+}
+
+/// Challenge/response proof tag: the CHALLENGE_RESP payload carries this
+/// over (nonce, client id) under the freshly derived session key, proving
+/// possession of the client key without ever sending key bytes.
+pub fn handshake_tag(session_key: &MacKey, nonce: &[u8; 16], client_id: u64) -> u64 {
+    tag64(
+        session_key,
+        &[b"fedml-he/hello", nonce, &client_id.to_le_bytes()],
+    )
+}
+
+/// Per-frame authenticator: direction byte (1 = client→server, 2 =
+/// server→client, so reflected frames never verify) ‖ the session-monotone
+/// auth sequence ‖ the full frame header ‖ payload ‖ CRC.
+pub fn frame_tag(key: &MacKey, dir: u8, auth_seq: u32, hdr: &[u8], payload: &[u8], crc: u32) -> u64 {
+    tag64(
+        key,
+        &[
+            &[dir],
+            &auth_seq.to_le_bytes(),
+            hdr,
+            payload,
+            &crc.to_le_bytes(),
+        ],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ref_key() -> MacKey {
+        let mut k = [0u8; 32];
+        for (i, b) in k.iter_mut().enumerate().take(16) {
+            *b = i as u8;
+        }
+        MacKey(k)
+    }
+
+    #[test]
+    fn siphash24_reference_vectors() {
+        // Aumasson & Bernstein's reference vectors: key 00..0f, message
+        // 00,01,02,... of increasing length.
+        let key = ref_key();
+        let msg: Vec<u8> = (0..8u8).collect();
+        assert_eq!(tag64(&key, &[&[]]), 0x726f_db47_dd0e_0e31);
+        assert_eq!(tag64(&key, &[&msg[..1]]), 0x74f8_39c5_93dc_67fd);
+        assert_eq!(tag64(&key, &[&msg[..7]]), 0xab02_00f5_8b01_d137);
+        assert_eq!(tag64(&key, &[&msg[..8]]), 0x93f5_f579_9a93_2462);
+    }
+
+    #[test]
+    fn scattered_parts_match_contiguous_input() {
+        let key = ref_key();
+        let data: Vec<u8> = (0..64u8).map(|i| i.wrapping_mul(37)).collect();
+        let whole = tag64(&key, &[&data]);
+        assert_eq!(tag64(&key, &[&data[..1], &data[1..]]), whole);
+        assert_eq!(tag64(&key, &[&data[..5], &data[5..13], &data[13..]]), whole);
+        let singles: Vec<&[u8]> = data.chunks(1).collect();
+        assert_eq!(tag64(&key, &singles), whole);
+        // part boundaries are NOT authenticated structure: only bytes are
+        assert_ne!(tag64(&key, &[&data[..32]]), whole);
+    }
+
+    #[test]
+    fn key_hierarchy_separates_clients_and_sessions() {
+        let root = [7u8; 32];
+        let a = derive_client_key(&root, 0);
+        let b = derive_client_key(&root, 1);
+        assert_ne!(a.0, b.0);
+        // deterministic per (root, id)
+        assert_eq!(derive_client_key(&root, 0).0, a.0);
+        let n1 = [1u8; 16];
+        let n2 = [2u8; 16];
+        let s1 = derive_session_key(&a, &n1);
+        let s2 = derive_session_key(&a, &n2);
+        assert_ne!(s1.0, s2.0, "fresh nonce must give a fresh session key");
+        assert_ne!(s1.0, a.0);
+        assert_ne!(
+            handshake_tag(&s1, &n1, 0),
+            handshake_tag(&derive_session_key(&b, &n1), &n1, 0)
+        );
+    }
+
+    #[test]
+    fn frame_tags_bind_direction_sequence_and_content() {
+        let key = ref_key();
+        let hdr = [0x11u8; 28];
+        let payload = [0x22u8; 40];
+        let t = frame_tag(&key, 1, 7, &hdr, &payload, 0xdead_beef);
+        assert_ne!(t, frame_tag(&key, 2, 7, &hdr, &payload, 0xdead_beef));
+        assert_ne!(t, frame_tag(&key, 1, 8, &hdr, &payload, 0xdead_beef));
+        assert_ne!(t, frame_tag(&key, 1, 7, &hdr, &payload, 0xdead_bee0));
+        let mut p2 = payload;
+        p2[0] ^= 1;
+        assert_ne!(t, frame_tag(&key, 1, 7, &hdr, &p2, 0xdead_beef));
+        assert_eq!(t, frame_tag(&key, 1, 7, &hdr, &payload, 0xdead_beef));
+    }
+
+    #[test]
+    fn debug_never_prints_key_bytes() {
+        let k = MacKey([0xabu8; 32]);
+        let s = format!("{k:?}");
+        assert!(!s.contains("ab") && !s.contains("171"), "leaked: {s}");
+    }
+}

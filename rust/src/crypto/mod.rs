@@ -1,8 +1,11 @@
 //! Cryptographic substrates built from scratch: a ChaCha20-based CSPRNG,
 //! Shamir secret sharing over a prime field (used by the threshold-HE key
-//! management of Appendix B), and the Laplace mechanism for the optional
-//! local differential-privacy noise of Algorithm 1.
+//! management of Appendix B), the Laplace mechanism for the optional
+//! local differential-privacy noise of Algorithm 1, and the SipHash-2-4
+//! frame-authentication keys/tags of the hardened session wire
+//! (DESIGN.md §12).
 
 pub mod dp;
+pub mod mac;
 pub mod prng;
 pub mod shamir;

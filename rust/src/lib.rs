@@ -185,6 +185,13 @@ pub fn dispatch(args: util::cli::Args) -> Result<()> {
                 round_wait: std::time::Duration::from_secs_f64(
                     args.get_parsed_or("round-wait", 300.0f64).max(1.0),
                 ),
+                // dial backoff + mid-task rejoin budget (0 = fail fast)
+                connect_retries: args.get_parsed_or("connect-retries", 5u32),
+                retry_base: std::time::Duration::from_millis(
+                    args.get_parsed_or("retry-base-ms", 50u64).max(1),
+                ),
+                // the wire-auth mode and MAC key come from the task key
+                // itself, inside join_task — never from the socket peer
                 ..Default::default()
             };
             let rt_holder;
@@ -302,6 +309,14 @@ pub fn dispatch(args: util::cli::Args) -> Result<()> {
             );
             let snapshot = transport::query_stats(&addr, timeout)?;
             println!("{snapshot}");
+            // wire-security counters at a glance (also inside the JSON)
+            let count = |k: &str| snapshot.get(k).and_then(|v| v.as_u64()).unwrap_or(0);
+            eprintln!(
+                "wire: auth_rejects {} replay_rejects {} chaos_injected {}",
+                count("auth_rejects"),
+                count("replay_rejects"),
+                count("chaos_injected")
+            );
             Ok(())
         }
         Some("bench") => {
@@ -329,6 +344,7 @@ pub fn dispatch(args: util::cli::Args) -> Result<()> {
             eprintln!("                --engine sequential|pipeline --shards S --quorum K");
             eprintln!("                --straggler-timeout SECS --population N");
             eprintln!("                --transport sim|tcp --listen ADDR --connect ADDR");
+            eprintln!("                --wire-auth none|mac --connect-retries N --retry-base-ms MS");
             eprintln!("                --intake-max-wait SECS --synthetic-params N");
             eprintln!("                --out-model PATH ...)");
             eprintln!("                (--model synthetic needs no artifacts; --transport tcp");
@@ -342,6 +358,8 @@ pub fn dispatch(args: util::cli::Args) -> Result<()> {
             eprintln!("  join          one client process: --task-key PATH --client-id K");
             eprintln!("                (--connect ADDR | --addr-file PATH) --key-wait SECS");
             eprintln!("                --connect-retry SECS --round-wait SECS --out-model PATH");
+            eprintln!("                --connect-retries N --retry-base-ms MS (rejoin budget +");
+            eprintln!("                dial backoff; wire-auth mode rides the task key)");
             eprintln!("  stats         query a live coordinator's metrics over the session");
             eprintln!("                protocol (--connect ADDR | --addr-file PATH) --timeout SECS");
             eprintln!("  params        print the CKKS context (--n --limbs --scaling-bits)");

@@ -12,8 +12,10 @@ use std::time::Duration;
 /// breaking change to the envelope layout (CI diffs the committed
 /// `BENCH_perf.json` / report schemas against freshly generated ones).
 /// (v2: NTT kernel-dispatch counters and run-aware packing slot gauges
-/// joined the metrics snapshot.)
-pub const REPORT_SCHEMA_VERSION: u64 = 2;
+/// joined the metrics snapshot. v3: wire-auth and chaos counters —
+/// `auth_rejects`, `replay_rejects`, `chaos_injected` — joined the
+/// snapshot alongside the challenge/challenge_resp frame kinds.)
+pub const REPORT_SCHEMA_VERSION: u64 = 3;
 
 /// Identifier stamped into the `--report-json` envelope.
 pub const REPORT_SCHEMA_NAME: &str = "fedml-he/run-report";

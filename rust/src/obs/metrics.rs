@@ -23,7 +23,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 /// mirror `transport::FrameKind as u32`). Kept in lockstep with the
 /// transport enum by a consistency test — `obs` itself stays
 /// transport-free.
-pub const N_FRAME_KINDS: usize = 13;
+pub const N_FRAME_KINDS: usize = 15;
 
 /// Human names for the tracked frame kinds, indexed by wire id.
 pub const FRAME_KIND_NAMES: [&str; N_FRAME_KINDS] = [
@@ -40,6 +40,8 @@ pub const FRAME_KIND_NAMES: [&str; N_FRAME_KINDS] = [
     "down_end",
     "stats",
     "stats_reply",
+    "challenge",
+    "challenge_resp",
 ];
 
 /// Log₂-bucketed latency histogram (nanoseconds): bucket `i` counts samples
@@ -191,6 +193,9 @@ struct Registry {
     received: FrameDir,
     crc_rejects: AtomicU64,
     frame_rejects: AtomicU64,
+    auth_rejects: AtomicU64,
+    replay_rejects: AtomicU64,
+    chaos_injected: AtomicU64,
     straggler_drops: AtomicU64,
     rejoins: AtomicU64,
     scratch_pool_hits: AtomicU64,
@@ -211,6 +216,9 @@ static REGISTRY: Registry = Registry {
     received: FrameDir::new(),
     crc_rejects: AtomicU64::new(0),
     frame_rejects: AtomicU64::new(0),
+    auth_rejects: AtomicU64::new(0),
+    replay_rejects: AtomicU64::new(0),
+    chaos_injected: AtomicU64::new(0),
     straggler_drops: AtomicU64::new(0),
     rejoins: AtomicU64::new(0),
     scratch_pool_hits: AtomicU64::new(0),
@@ -249,6 +257,47 @@ pub fn crc_reject() {
 #[inline]
 pub fn frame_reject() {
     REGISTRY.frame_rejects.fetch_add(1, Ordering::Relaxed);
+}
+
+/// An authenticated frame whose MAC tag (or handshake proof) failed to
+/// verify — a forgery, corruption, or key/direction confusion.
+#[inline]
+pub fn auth_reject() {
+    REGISTRY.auth_rejects.fetch_add(1, Ordering::Relaxed);
+    REGISTRY.frame_rejects.fetch_add(1, Ordering::Relaxed);
+}
+
+/// An authenticated frame whose tag verified but whose auth sequence was
+/// not strictly monotone — a replayed (or duplicated) frame, discarded.
+#[inline]
+pub fn replay_reject() {
+    REGISTRY.replay_rejects.fetch_add(1, Ordering::Relaxed);
+    REGISTRY.frame_rejects.fetch_add(1, Ordering::Relaxed);
+}
+
+/// One fault (drop/corrupt/delay/duplicate/disconnect) injected by the
+/// deterministic chaos layer (`transport::chaos`).
+#[inline]
+pub fn chaos_injected() {
+    REGISTRY.chaos_injected.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Current auth-reject total (test support: assertions use deltas because
+/// the registry is process-global and tests run in parallel).
+pub fn snapshot_auth_rejects() -> u64 {
+    REGISTRY.auth_rejects.load(Ordering::Relaxed)
+}
+
+/// Current replay-reject total (test support, delta-based like
+/// [`snapshot_auth_rejects`]).
+pub fn snapshot_replay_rejects() -> u64 {
+    REGISTRY.replay_rejects.load(Ordering::Relaxed)
+}
+
+/// Current chaos-injection total (test support, delta-based like
+/// [`snapshot_auth_rejects`]).
+pub fn snapshot_chaos_injected() -> u64 {
+    REGISTRY.chaos_injected.load(Ordering::Relaxed)
 }
 
 /// `n` uploads dropped by the quorum/straggler cutoff.
@@ -354,6 +403,15 @@ pub fn snapshot() -> Json {
         ("bytes_received", recv_bytes),
         ("crc_rejects", REGISTRY.crc_rejects.load(Ordering::Relaxed).into()),
         ("frame_rejects", REGISTRY.frame_rejects.load(Ordering::Relaxed).into()),
+        ("auth_rejects", REGISTRY.auth_rejects.load(Ordering::Relaxed).into()),
+        (
+            "replay_rejects",
+            REGISTRY.replay_rejects.load(Ordering::Relaxed).into(),
+        ),
+        (
+            "chaos_injected",
+            REGISTRY.chaos_injected.load(Ordering::Relaxed).into(),
+        ),
         (
             "straggler_drops",
             REGISTRY.straggler_drops.load(Ordering::Relaxed).into(),
@@ -407,14 +465,16 @@ pub fn snapshot() -> Json {
 /// One-line human summary (the periodic `serve` stderr ticker).
 pub fn summary_line() -> String {
     format!(
-        "rx {} frames / {} · tx {} frames / {} · rejects {} (crc {}) · stragglers {} · \
-         rejoins {} · ntt {} · intake q {} (peak {}) · rtt n={}",
+        "rx {} frames / {} · tx {} frames / {} · rejects {} (crc {} auth {} replay {}) · \
+         stragglers {} · rejoins {} · ntt {} · intake q {} (peak {}) · rtt n={}",
         REGISTRY.received.total_frames(),
         crate::util::human_bytes(REGISTRY.received.total_bytes()),
         REGISTRY.sent.total_frames(),
         crate::util::human_bytes(REGISTRY.sent.total_bytes()),
         REGISTRY.frame_rejects.load(Ordering::Relaxed),
         REGISTRY.crc_rejects.load(Ordering::Relaxed),
+        REGISTRY.auth_rejects.load(Ordering::Relaxed),
+        REGISTRY.replay_rejects.load(Ordering::Relaxed),
         REGISTRY.straggler_drops.load(Ordering::Relaxed),
         REGISTRY.rejoins.load(Ordering::Relaxed),
         REGISTRY.ntt_forward.load(Ordering::Relaxed)
@@ -432,6 +492,9 @@ pub fn reset() {
     for c in [
         &REGISTRY.crc_rejects,
         &REGISTRY.frame_rejects,
+        &REGISTRY.auth_rejects,
+        &REGISTRY.replay_rejects,
+        &REGISTRY.chaos_injected,
         &REGISTRY.straggler_drops,
         &REGISTRY.rejoins,
         &REGISTRY.scratch_pool_hits,

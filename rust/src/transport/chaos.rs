@@ -1,0 +1,381 @@
+//! Deterministic fault injection between the frame codec and the socket
+//! (DESIGN.md §12).
+//!
+//! [`ChaosWriter`] wraps any byte sink a [`super::client::FrameSink`] (or a
+//! raw test writer) flushes into, reassembles the byte stream into whole
+//! wire frames using only the public frame layout (length field at a fixed
+//! header offset), and applies a seeded schedule of faults per frame:
+//! **drop**, **corrupt** (single byte flip), **delay**, **duplicate**, and
+//! a one-shot mid-frame **disconnect**. Every decision comes from a
+//! [`ChaChaRng`] keyed by the schedule seed, so a failing adversarial run
+//! replays exactly from its seed.
+//!
+//! Two deliberate properties keep injected faults *semantically* visible
+//! instead of degenerating into stream desync:
+//!
+//! * corruption never touches the header length field, so the receiver
+//!   still parses frame boundaries and the damage surfaces as a CRC or
+//!   MAC reject (counted) rather than a garbled stream;
+//! * duplication re-sends the exact wire bytes — under `--wire-auth mac`
+//!   that is precisely a replayed frame, which the receiver's monotone
+//!   auth-sequence check must discard.
+
+use crate::crypto::prng::ChaChaRng;
+use crate::obs::metrics;
+use std::io::Write;
+
+use super::frame::{AUTH_TRAILER_BYTES, FRAME_HEADER_BYTES, FRAME_TRAILER_BYTES};
+
+/// Byte offset of the little-endian payload-length field in the header.
+const LEN_OFFSET: usize = 24;
+/// Byte offset of the round id in the header (for `only_round` targeting).
+const ROUND_OFFSET: usize = 8;
+
+/// A seeded per-frame fault schedule. Rates are per-mille (0..=1000) and
+/// evaluated in a fixed order (drop, corrupt, duplicate, delay) with at
+/// most one fault per frame; `disconnect_at_frame` takes precedence over
+/// everything when its eligible-frame index comes up.
+#[derive(Debug, Clone)]
+pub struct ChaosConfig {
+    /// Schedule seed: same seed + same frame stream = same faults.
+    pub seed: u64,
+    /// Probability (‰) an eligible frame is silently not written.
+    pub drop_per_mille: u16,
+    /// Probability (‰) one byte of an eligible frame is flipped.
+    pub corrupt_per_mille: u16,
+    /// Probability (‰) an eligible frame's exact bytes are written twice.
+    pub duplicate_per_mille: u16,
+    /// Probability (‰) an eligible frame is delayed by [`Self::delay_ms`].
+    pub delay_per_mille: u16,
+    /// Delay applied by a delay fault, in milliseconds.
+    pub delay_ms: u64,
+    /// After writing half of the Nth *eligible* frame, sever the
+    /// connection: invoke the disconnect hook and fail the write.
+    pub disconnect_at_frame: Option<u64>,
+    /// Number of leading frames exempt from all faults (lets handshake
+    /// and mask-stage traffic through untouched).
+    pub immune_prefix: u64,
+    /// When set, only frames stamped with this round id are eligible —
+    /// robust targeting of e.g. "round 0 uploads" regardless of how many
+    /// handshake/mask frames precede them.
+    pub only_round: Option<u64>,
+    /// Whether frames on this stream carry the 12-byte auth trailer
+    /// (`--wire-auth mac`) — needed to compute frame boundaries.
+    pub authed: bool,
+}
+
+impl ChaosConfig {
+    /// A schedule that injects nothing (passthrough).
+    pub fn passthrough(seed: u64) -> Self {
+        ChaosConfig {
+            seed,
+            drop_per_mille: 0,
+            corrupt_per_mille: 0,
+            duplicate_per_mille: 0,
+            delay_per_mille: 0,
+            delay_ms: 0,
+            disconnect_at_frame: None,
+            immune_prefix: 0,
+            only_round: None,
+            authed: false,
+        }
+    }
+}
+
+enum Fault {
+    Pass,
+    Drop,
+    Corrupt,
+    Duplicate,
+    Delay,
+}
+
+/// The interposed sink. Buffers bytes until a whole frame is available,
+/// rolls the schedule, then forwards (or drops/mauls/replays) the frame.
+pub struct ChaosWriter<W: Write> {
+    inner: W,
+    cfg: ChaosConfig,
+    rng: ChaChaRng,
+    buf: Vec<u8>,
+    /// Total frames seen (for `immune_prefix`).
+    frames_seen: u64,
+    /// Eligible frames seen (for `disconnect_at_frame`).
+    eligible_seen: u64,
+    /// Invoked when the disconnect fault fires — typically shuts down the
+    /// underlying `TcpStream` both ways so the reader side dies too.
+    on_disconnect: Option<Box<dyn FnMut() + Send>>,
+    /// Set after the disconnect fault: every later write fails.
+    severed: bool,
+}
+
+impl<W: Write> ChaosWriter<W> {
+    pub fn new(inner: W, cfg: ChaosConfig) -> Self {
+        let rng = ChaChaRng::from_seed(cfg.seed, u64::from_le_bytes(*b"chaoswr\0"));
+        ChaosWriter {
+            inner,
+            cfg,
+            rng,
+            buf: Vec::new(),
+            frames_seen: 0,
+            eligible_seen: 0,
+            on_disconnect: None,
+            severed: false,
+        }
+    }
+
+    /// Register the hook the disconnect fault fires (e.g. a
+    /// `TcpStream::shutdown` on a clone of the socket).
+    pub fn on_disconnect(mut self, hook: Box<dyn FnMut() + Send>) -> Self {
+        self.on_disconnect = Some(hook);
+        self
+    }
+
+    /// Wire length of the frame starting at `buf[0]`, once the header is
+    /// complete; `None` until enough bytes have arrived.
+    fn frame_len(&self) -> Option<usize> {
+        if self.buf.len() < FRAME_HEADER_BYTES {
+            return None;
+        }
+        let len = u32::from_le_bytes(self.buf[LEN_OFFSET..LEN_OFFSET + 4].try_into().unwrap())
+            as usize;
+        let trailer = if self.cfg.authed { AUTH_TRAILER_BYTES } else { 0 };
+        Some(FRAME_HEADER_BYTES + len + FRAME_TRAILER_BYTES + trailer)
+    }
+
+    fn roll(&mut self, per_mille: u16) -> bool {
+        per_mille > 0 && self.rng.next_u64() % 1000 < u64::from(per_mille)
+    }
+
+    /// Apply the schedule to one complete frame held in `frame`.
+    fn emit(&mut self, frame: &[u8]) -> std::io::Result<()> {
+        let idx = self.frames_seen;
+        self.frames_seen += 1;
+        let round =
+            u64::from_le_bytes(frame[ROUND_OFFSET..ROUND_OFFSET + 8].try_into().unwrap());
+        let round_ok = match self.cfg.only_round {
+            Some(r) => r == round,
+            None => true,
+        };
+        let eligible = idx >= self.cfg.immune_prefix && round_ok;
+        if !eligible {
+            return self.inner.write_all(frame);
+        }
+        let eidx = self.eligible_seen;
+        self.eligible_seen += 1;
+        if self.cfg.disconnect_at_frame == Some(eidx) {
+            metrics::chaos_injected();
+            self.inner.write_all(&frame[..frame.len() / 2])?;
+            self.inner.flush().ok();
+            if let Some(hook) = self.on_disconnect.as_mut() {
+                hook();
+            }
+            self.severed = true;
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::ConnectionReset,
+                "chaos: injected mid-frame disconnect",
+            ));
+        }
+        let fault = if self.roll(self.cfg.drop_per_mille) {
+            Fault::Drop
+        } else if self.roll(self.cfg.corrupt_per_mille) {
+            Fault::Corrupt
+        } else if self.roll(self.cfg.duplicate_per_mille) {
+            Fault::Duplicate
+        } else if self.roll(self.cfg.delay_per_mille) {
+            Fault::Delay
+        } else {
+            Fault::Pass
+        };
+        match fault {
+            Fault::Pass => self.inner.write_all(frame),
+            Fault::Drop => {
+                metrics::chaos_injected();
+                Ok(())
+            }
+            Fault::Corrupt => {
+                metrics::chaos_injected();
+                // flip one byte anywhere except the length field, so the
+                // receiver keeps frame sync and rejects via MAC/CRC
+                let eligible_bytes = frame.len() - 4;
+                let mut pos = (self.rng.next_u64() % eligible_bytes as u64) as usize;
+                if pos >= LEN_OFFSET {
+                    pos += 4;
+                }
+                let mut mauled = frame.to_vec();
+                mauled[pos] ^= 1 << (self.rng.next_u64() % 8);
+                self.inner.write_all(&mauled)
+            }
+            Fault::Duplicate => {
+                metrics::chaos_injected();
+                self.inner.write_all(frame)?;
+                self.inner.write_all(frame)
+            }
+            Fault::Delay => {
+                metrics::chaos_injected();
+                std::thread::sleep(std::time::Duration::from_millis(self.cfg.delay_ms));
+                self.inner.write_all(frame)
+            }
+        }
+    }
+}
+
+impl<W: Write> Write for ChaosWriter<W> {
+    fn write(&mut self, bytes: &[u8]) -> std::io::Result<usize> {
+        if self.severed {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::ConnectionReset,
+                "chaos: connection severed",
+            ));
+        }
+        self.buf.extend_from_slice(bytes);
+        while let Some(total) = self.frame_len() {
+            if self.buf.len() < total {
+                break;
+            }
+            let frame: Vec<u8> = self.buf.drain(..total).collect();
+            self.emit(&frame)?;
+        }
+        Ok(bytes.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        if self.severed {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::ConnectionReset,
+                "chaos: connection severed",
+            ));
+        }
+        self.inner.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::frame::{write_frame, FrameKind};
+
+    fn frames(n: usize, round: u64) -> Vec<u8> {
+        let mut out = Vec::new();
+        for i in 0..n {
+            let payload = vec![i as u8; 24];
+            write_frame(&mut out, round, FrameKind::Plain, i as u32, &payload).unwrap();
+        }
+        out
+    }
+
+    fn drive(cfg: ChaosConfig, wire: &[u8]) -> std::io::Result<Vec<u8>> {
+        let mut out = Vec::new();
+        let mut w = ChaosWriter::new(&mut out, cfg);
+        // feed in awkward chunk sizes to exercise reassembly
+        for chunk in wire.chunks(13) {
+            w.write_all(chunk)?;
+        }
+        w.flush()?;
+        drop(w);
+        Ok(out)
+    }
+
+    #[test]
+    fn passthrough_is_byte_identical_in_any_chunking() {
+        let wire = frames(5, 3);
+        let out = drive(ChaosConfig::passthrough(9), &wire).unwrap();
+        assert_eq!(out, wire);
+    }
+
+    #[test]
+    fn drop_removes_eligible_frames_only() {
+        let wire = frames(4, 0);
+        let one = frames(1, 0);
+        let cfg = ChaosConfig {
+            drop_per_mille: 1000,
+            immune_prefix: 1,
+            ..ChaosConfig::passthrough(1)
+        };
+        let out = drive(cfg, &wire).unwrap();
+        assert_eq!(out, one, "only the immune first frame survives");
+    }
+
+    #[test]
+    fn only_round_filter_protects_other_rounds() {
+        let mut wire = frames(2, 0);
+        wire.extend_from_slice(&frames(2, 1));
+        let cfg = ChaosConfig {
+            drop_per_mille: 1000,
+            only_round: Some(1),
+            ..ChaosConfig::passthrough(2)
+        };
+        let out = drive(cfg, &wire).unwrap();
+        assert_eq!(out, frames(2, 0), "round-0 frames untouched, round-1 dropped");
+    }
+
+    #[test]
+    fn corruption_preserves_frame_boundaries() {
+        let wire = frames(6, 0);
+        let cfg = ChaosConfig {
+            corrupt_per_mille: 1000,
+            ..ChaosConfig::passthrough(3)
+        };
+        let out = drive(cfg, &wire).unwrap();
+        assert_eq!(out.len(), wire.len());
+        assert_ne!(out, wire, "every frame took a byte flip");
+        // every length field intact → receiver keeps frame sync
+        let mut off = 0;
+        while off < out.len() {
+            assert_eq!(out[off + 24..off + 28], wire[off + 24..off + 28]);
+            let len =
+                u32::from_le_bytes(out[off + 24..off + 28].try_into().unwrap()) as usize;
+            off += 28 + len + 4;
+        }
+        assert_eq!(off, out.len());
+    }
+
+    #[test]
+    fn duplicate_replays_exact_wire_bytes() {
+        let wire = frames(2, 0);
+        let cfg = ChaosConfig {
+            duplicate_per_mille: 1000,
+            ..ChaosConfig::passthrough(4)
+        };
+        let out = drive(cfg, &wire).unwrap();
+        assert_eq!(out.len(), wire.len() * 2);
+        let one = frames(1, 0);
+        assert_eq!(&out[..one.len()], &out[one.len()..2 * one.len()]);
+    }
+
+    #[test]
+    fn disconnect_fires_hook_and_severs_the_stream() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+        let wire = frames(3, 0);
+        let fired = Arc::new(AtomicBool::new(false));
+        let f2 = fired.clone();
+        let cfg = ChaosConfig {
+            disconnect_at_frame: Some(1),
+            ..ChaosConfig::passthrough(5)
+        };
+        let mut out = Vec::new();
+        let mut w = ChaosWriter::new(&mut out, cfg)
+            .on_disconnect(Box::new(move || f2.store(true, Ordering::SeqCst)));
+        let err = w.write_all(&wire).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::ConnectionReset);
+        assert!(fired.load(Ordering::SeqCst));
+        assert!(w.write_all(&[0u8; 4]).is_err(), "stream stays severed");
+        let one = frames(1, 0);
+        // frame 0 intact, frame 1 cut mid-frame
+        assert!(out.len() > one.len() && out.len() < 2 * one.len());
+    }
+
+    #[test]
+    fn same_seed_same_faults() {
+        let wire = frames(16, 0);
+        let cfg = ChaosConfig {
+            drop_per_mille: 300,
+            corrupt_per_mille: 300,
+            duplicate_per_mille: 300,
+            ..ChaosConfig::passthrough(77)
+        };
+        let a = drive(cfg.clone(), &wire).unwrap();
+        let b = drive(cfg, &wire).unwrap();
+        assert_eq!(a, b);
+    }
+}

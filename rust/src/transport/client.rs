@@ -4,8 +4,12 @@
 //! Two one-shot entry points (one connection per upload, the PR-4 uplink
 //! path kept for tests, demos and anonymous uploads):
 //!
-//! * [`upload_update`] — ship an already-encrypted update (the replay path
-//!   for tests).
+//! * [`upload_update`] — ship an already-encrypted update. Tests and demos
+//!   use it to *re-upload* a prepared update over a fresh connection — a
+//!   benign, intentional re-send, not to be confused with a replayed
+//!   *frame*: under `--wire-auth mac` any byte-identical frame repeated
+//!   into a live session fails the monotone auth-sequence check and is
+//!   discarded with `replay_rejects` incremented (DESIGN.md §12).
 //! * [`upload_encrypt_streaming`] — encrypt-and-upload: ciphertext chunks go
 //!   onto the socket **while later chunks are still being encrypted** by the
 //!   parallel [`SelectiveCodec`] worker pool
@@ -22,8 +26,8 @@
 //! uploads (one per round) without reconnecting.
 
 use super::frame::{
-    encode_begin, encode_end_timing, read_frame_into, write_frame, FrameKind,
-    BEGIN_PAYLOAD_BYTES, PLAIN_CHUNK_VALUES,
+    encode_begin, encode_end_timing, read_frame_into_with, write_frame_with, FrameKind,
+    RxAuth, TxAuth, BEGIN_PAYLOAD_BYTES, PLAIN_CHUNK_VALUES,
 };
 use crate::ckks::serialize::ciphertext_shard_append;
 use crate::ckks::{Ciphertext, PublicKey};
@@ -73,8 +77,10 @@ pub struct UploadReceipt {
 /// accounting restarts at each `send_begin`; `bytes_sent` is cumulative
 /// over the sink's lifetime.
 pub(crate) struct FrameSink {
-    writer: BufWriter<TcpStream>,
+    writer: BufWriter<Box<dyn Write + Send>>,
     round: u64,
+    /// Outbound frame authenticator (`--wire-auth mac`); `None` = legacy.
+    auth: Option<TxAuth>,
     /// Reused payload staging buffer for ciphertext frames.
     buf: Vec<u8>,
     /// Cumulative frame bytes written over the sink's lifetime.
@@ -88,14 +94,29 @@ pub(crate) struct FrameSink {
 impl FrameSink {
     /// Wrap an already-connected stream (the persistent-session path).
     pub(crate) fn over(stream: TcpStream, round: u64, write_buffer: usize) -> Self {
+        Self::over_writer(Box::new(stream), round, write_buffer)
+    }
+
+    /// Wrap an arbitrary byte sink — the chaos layer interposes here.
+    pub(crate) fn over_writer(
+        writer: Box<dyn Write + Send>,
+        round: u64,
+        write_buffer: usize,
+    ) -> Self {
         FrameSink {
-            writer: BufWriter::with_capacity(write_buffer.max(1024), stream),
+            writer: BufWriter::with_capacity(write_buffer.max(1024), writer),
             round,
+            auth: None,
             buf: Vec::new(),
             bytes_sent: 0,
             upload_base: 0,
             ct_frames: 0,
         }
+    }
+
+    /// Install (or clear) the outbound frame authenticator.
+    pub(crate) fn set_auth(&mut self, auth: Option<TxAuth>) {
+        self.auth = auth;
     }
 
     /// Dial + wrap (the one-shot path). Returns the sink and a cloned read
@@ -126,7 +147,8 @@ impl FrameSink {
         seq: u32,
         payload: &[u8],
     ) -> std::io::Result<()> {
-        self.bytes_sent += write_frame(&mut self.writer, self.round, kind, seq, payload)?;
+        self.bytes_sent +=
+            write_frame_with(&mut self.writer, self.round, kind, seq, payload, &mut self.auth)?;
         Ok(())
     }
 
@@ -184,6 +206,7 @@ impl FrameSink {
         reader: &mut R,
         read_buf: &mut Vec<u8>,
         metrics: Option<(f64, f64, f32)>,
+        rx: &mut Option<RxAuth>,
     ) -> anyhow::Result<UploadReceipt> {
         let _span = crate::obs::span("transport", "end_and_ack");
         match metrics {
@@ -196,7 +219,8 @@ impl FrameSink {
         // END→ACK round trip: the server's receipt stamps the far end, so
         // this is the wire+reassembly latency the RTT histogram tracks
         let t0 = std::time::Instant::now();
-        let (kind, _) = read_frame_into(reader, self.round, BEGIN_PAYLOAD_BYTES, read_buf)?;
+        let (kind, _) =
+            read_frame_into_with(reader, self.round, BEGIN_PAYLOAD_BYTES, read_buf, rx)?;
         crate::obs::metrics::session_rtt_secs(t0.elapsed().as_secs_f64());
         anyhow::ensure!(kind == FrameKind::Ack, "expected ACK, got {kind:?}");
         Ok(UploadReceipt {
@@ -222,7 +246,7 @@ pub fn upload_update(
     }
     sink.send_plain(&update.plain)?;
     let mut ack_buf = Vec::new();
-    sink.end_and_ack(&mut reader, &mut ack_buf, None)
+    sink.end_and_ack(&mut reader, &mut ack_buf, None, &mut None)
 }
 
 /// Encrypt-and-upload: chunk `c` is framed onto the socket while chunks
@@ -270,7 +294,7 @@ pub fn upload_encrypt_streaming(
     );
     sink.send_plain(&plain)?;
     let mut ack_buf = Vec::new();
-    sink.end_and_ack(&mut reader, &mut ack_buf, None)
+    sink.end_and_ack(&mut reader, &mut ack_buf, None, &mut None)
 }
 
 /// Failure injection for tests and demos: send BEGIN plus the first
@@ -291,4 +315,38 @@ pub fn upload_partial_then_disconnect(
     let sent = sink.total_bytes();
     drop(sink); // closes the socket with the upload incomplete
     Ok(sent)
+}
+
+/// Dial with capped exponential backoff + jitter: attempt 0 is immediate,
+/// then up to `retries` more attempts sleep `base · 2^k` each (capped at
+/// 5 s), jittered ±50% from a seeded [`ChaChaRng`] so a cohort of clients
+/// restarting together doesn't reconnect in lockstep. `retries == 0`
+/// restores the legacy fail-fast connect.
+pub fn connect_with_backoff(
+    addr: &str,
+    retries: u32,
+    base: Duration,
+    seed: u64,
+) -> anyhow::Result<TcpStream> {
+    const CAP: Duration = Duration::from_secs(5);
+    let mut jitter = ChaChaRng::from_seed(seed, u64::from_le_bytes(*b"backoff\0"));
+    let mut last_err = None;
+    for attempt in 0..=retries {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => last_err = Some(e),
+        }
+        if attempt == retries {
+            break;
+        }
+        let exp = base.saturating_mul(1u32 << attempt.min(16)).min(CAP);
+        // ±50%: scale by a factor in [0.5, 1.5)
+        let factor = 0.5 + (jitter.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
+        std::thread::sleep(exp.mul_f64(factor));
+    }
+    Err(anyhow::anyhow!(
+        "connect to {addr} failed after {} attempt(s): {}",
+        retries as u64 + 1,
+        last_err.expect("at least one attempt")
+    ))
 }

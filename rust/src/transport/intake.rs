@@ -12,8 +12,8 @@
 //! allocate beyond one legitimate frame ([`super::frame::frame_payload_cap`]).
 
 use super::frame::{
-    decode_begin, decode_end_timing, frame_payload_cap, read_frame_into, write_frame, FrameKind,
-    BEGIN_PAYLOAD_BYTES,
+    decode_begin, decode_end_timing, frame_payload_cap, read_frame_into_with, write_frame_with,
+    FrameKind, RxAuth, TxAuth, AUTH_TRAILER_BYTES, BEGIN_PAYLOAD_BYTES,
 };
 use crate::agg_engine::Arrival;
 use crate::ckks::{CkksContext, CkksParams};
@@ -372,7 +372,9 @@ pub(crate) struct UploadFrames {
 /// rejecting a skewed weight here keeps the upload out of both the
 /// aggregate *and* the round's metric sums; `payload` is the pooled
 /// per-connection frame buffer — steady-state frame reads allocate nothing
-/// (gated by `tests/zero_alloc.rs`).
+/// (gated by `tests/zero_alloc.rs`). Under `--wire-auth mac`, `rx` verifies
+/// every inbound frame's auth trailer (replayed/forged frames are counted
+/// and discarded inside the frame reader) and `tx` tags the ACK.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn read_upload<R: std::io::Read, F: Fn() -> Instant>(
     reader: &mut R,
@@ -388,6 +390,8 @@ pub(crate) fn read_upload<R: std::io::Read, F: Fn() -> Instant>(
     seen_client: &mut Option<u64>,
     received: &mut u64,
     payload: &mut Vec<u8>,
+    rx: &mut Option<RxAuth>,
+    tx: &mut Option<TxAuth>,
 ) -> anyhow::Result<UploadFrames> {
     let cap = frame_payload_cap(params);
     let arm_read = |stream: &TcpStream| -> anyhow::Result<()> {
@@ -396,14 +400,17 @@ pub(crate) fn read_upload<R: std::io::Read, F: Fn() -> Instant>(
         stream.set_read_timeout(Some(remaining.min(io_timeout)))?;
         Ok(())
     };
+    let auth_extra = if rx.is_some() { AUTH_TRAILER_BYTES } else { 0 };
     let frame_bytes = |payload_len: usize| {
-        (super::frame::FRAME_HEADER_BYTES + payload_len + super::frame::FRAME_TRAILER_BYTES)
-            as u64
+        (super::frame::FRAME_HEADER_BYTES
+            + payload_len
+            + super::frame::FRAME_TRAILER_BYTES
+            + auth_extra) as u64
     };
 
     // BEGIN: identity + declared shape, checked against the round's shape.
     arm_read(stream)?;
-    let (kind, _) = read_frame_into(reader, round_id, cap, payload)?;
+    let (kind, _) = read_frame_into_with(reader, round_id, cap, payload, rx)?;
     *received += frame_bytes(payload.len());
     anyhow::ensure!(
         kind == FrameKind::Begin,
@@ -448,7 +455,7 @@ pub(crate) fn read_upload<R: std::io::Read, F: Fn() -> Instant>(
     let timing;
     loop {
         arm_read(stream)?;
-        let (kind, seq) = read_frame_into(reader, round_id, cap, payload)?;
+        let (kind, seq) = read_frame_into_with(reader, round_id, cap, payload, rx)?;
         *received += frame_bytes(payload.len());
         match kind {
             FrameKind::CtChunk => asm.accept_ct(params, seq, payload)?,
@@ -463,7 +470,7 @@ pub(crate) fn read_upload<R: std::io::Read, F: Fn() -> Instant>(
     }
     let update = asm.finish()?;
     let mut ack_w = ack_stream;
-    write_frame(&mut ack_w, round_id, FrameKind::Ack, 0, &0u32.to_le_bytes())?;
+    write_frame_with(&mut ack_w, round_id, FrameKind::Ack, 0, &0u32.to_le_bytes(), tx)?;
     Ok(UploadFrames {
         client,
         alpha,
@@ -506,5 +513,7 @@ fn receive_update(
         seen_client,
         received,
         &mut payload,
+        &mut None,
+        &mut None,
     )
 }

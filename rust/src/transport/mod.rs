@@ -25,7 +25,13 @@
 //!   frames), HELLO/WELCOME slot handshakes with rejoin, and per-round
 //!   upload collection feeding the same streaming-engine intake. This is
 //!   the transport behind `--transport tcp` and the multi-process
-//!   `serve`/`join` subcommands.
+//!   `serve`/`join` subcommands. Under `--wire-auth mac` (DESIGN.md §12)
+//!   the handshake runs a keyed challenge/response and every session
+//!   frame carries a truncated keyed-hash tag + monotone sequence number
+//!   (replay rejection).
+//! * [`chaos`] — deterministic fault injection between the frame codec and
+//!   the socket (seeded drop/corrupt/delay/duplicate/disconnect schedules)
+//!   for the adversarial transport harness in `crate::attacks`.
 //!
 //! Ciphertext frame payloads reuse the per-shard wire views of
 //! [`crate::ckks::serialize`] (a CT frame is a full-limb-range shard view,
@@ -35,15 +41,17 @@
 //! (`--listen`/`--connect` pick the socket addresses); see DESIGN.md §8 for
 //! the frame diagram, arrival-stamp semantics and failure matrix.
 
+pub mod chaos;
 pub mod client;
 pub mod frame;
 pub mod intake;
 pub(crate) mod reassembly;
 pub mod session;
 
+pub use chaos::{ChaosConfig, ChaosWriter};
 pub use client::{
-    upload_encrypt_streaming, upload_partial_then_disconnect, upload_update, UploadConfig,
-    UploadReceipt,
+    connect_with_backoff, upload_encrypt_streaming, upload_partial_then_disconnect,
+    upload_update, UploadConfig, UploadReceipt,
 };
 pub use frame::{
     crc32, frame_payload_cap, mask_payload_cap, read_frame, read_frame_into, write_frame,

@@ -27,25 +27,40 @@
 //! Failure containment matches the intake: any per-session wire error
 //! kills that session only — the round completes from the uploads that
 //! landed, the client is reported as failed/straggler, and its slot is
-//! free to rejoin. Client ids remain unauthenticated (no TLS yet; see
-//! DESIGN.md §9 trust notes).
+//! free to rejoin. Under `--wire-auth mac` (DESIGN.md §12) the handshake
+//! additionally runs a server-nonce challenge/response keyed by the
+//! client's MAC key from the task-key file, every post-handshake frame
+//! carries a truncated keyed-hash tag plus a monotone auth sequence
+//! (replay rejection), and a rejoining session is replayed the current
+//! stage's downlink so a mid-round disconnect resumes instead of
+//! stalling. With `--wire-auth none` the legacy unauthenticated wire is
+//! preserved bit-for-bit.
 
-use super::client::{FrameSink, UploadReceipt};
+use super::chaos::{ChaosConfig, ChaosWriter};
+use super::client::{connect_with_backoff, FrameSink, UploadReceipt};
 use super::frame::{
-    decode_down_begin, decode_hello, decode_welcome, encode_down_begin, encode_hello,
-    encode_welcome, frame_payload_cap, mask_payload_cap, read_frame_into, write_frame, DownBegin,
-    FrameKind, CONTROL_ROUND, MASK_ROUND, PLAIN_CHUNK_VALUES, WELCOME_PAYLOAD_BYTES,
+    decode_challenge, decode_challenge_resp, decode_down_begin, decode_hello, decode_welcome,
+    encode_challenge, encode_challenge_resp, encode_down_begin, encode_hello, encode_welcome,
+    frame_payload_cap, mask_payload_cap, read_frame_any_round_into_with, read_frame_into,
+    write_frame, write_frame_with, DownBegin, FrameKind, RxAuth, TxAuth, AUTH_DIR_DOWN,
+    AUTH_DIR_UP, AUTH_TRAILER_BYTES, CHALLENGE_RESP_PAYLOAD_BYTES, CONTROL_ROUND,
+    FRAME_HEADER_BYTES, FRAME_TRAILER_BYTES, MASK_ROUND, PLAIN_CHUNK_VALUES,
+    WELCOME_PAYLOAD_BYTES,
 };
-use super::intake::{read_upload, IntakeConfig, IntakeOutcome, UpdateShape, UNIDENTIFIED_CLIENT};
+use super::intake::{
+    read_upload, IntakeConfig, IntakeOutcome, UpdateShape, UploadFrames, UNIDENTIFIED_CLIENT,
+};
 use crate::agg_engine::Arrival;
 use crate::ckks::serialize::ciphertext_shard_append;
 use crate::ckks::CkksParams;
+use crate::crypto::mac::{self, MacKey};
+use crate::crypto::prng::ChaChaRng;
 use crate::he_agg::{EncryptedUpdate, EncryptionMask};
 use std::collections::HashMap;
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// One server-side persistent session.
@@ -55,6 +70,10 @@ pub struct PeerSession {
     reader: BufReader<TcpStream>,
     /// Pooled frame payload buffer for this session's uplink reads.
     read_buf: Vec<u8>,
+    /// Outbound (server→client) frame authenticator; `None` = legacy wire.
+    tx: Option<TxAuth>,
+    /// Inbound (client→server) frame authenticator.
+    rx: Option<RxAuth>,
 }
 
 /// What one downlink push put on the wire.
@@ -73,6 +92,28 @@ pub struct DownlinkOutcome {
 /// replacement), the broadcast path, and per-round reader threads.
 type SharedSession = Arc<Mutex<PeerSession>>;
 
+/// The most recent downlink of each stage, kept so a mid-round rejoin can
+/// be replayed what it missed (the aggregate payloads are shared with the
+/// broadcast path via `Arc` — caching copies nothing model-sized).
+#[derive(Default)]
+struct DownlinkCache {
+    /// Serialized agreed mask (the MASK broadcast payload).
+    mask: Option<Vec<u8>>,
+    /// The in-flight round's downlink: per-client preambles + the shared
+    /// aggregate's pre-encoded frame payloads.
+    round: Option<RoundSnapshot>,
+}
+
+struct RoundSnapshot {
+    round: u64,
+    plans: Vec<(u64, DownBegin)>,
+    /// Whether the broadcast actually carried aggregate payloads (guards a
+    /// replay against a preamble whose chunks were never encoded).
+    has_payloads: bool,
+    ct_payloads: Arc<Vec<Vec<u8>>>,
+    plain_payloads: Arc<Vec<Vec<u8>>>,
+}
+
 struct HubShared {
     listener: TcpListener,
     params: Arc<CkksParams>,
@@ -88,6 +129,11 @@ struct HubShared {
     /// connected-but-silent peer must never stall other joins/rejoins.
     handshakes: AtomicUsize,
     io_timeout: Duration,
+    /// Task MAC root (`--wire-auth mac`): per-client keys derive from it;
+    /// `None` = legacy unauthenticated wire.
+    auth_root: Option<[u8; 32]>,
+    /// Replay state for mid-round rejoins.
+    downlink: Mutex<DownlinkCache>,
 }
 
 /// The server's session registry: one background accept thread serving
@@ -107,6 +153,18 @@ impl SessionHub {
         params: Arc<CkksParams>,
         max_sessions: usize,
     ) -> anyhow::Result<Self> {
+        Self::bind_with_auth(addr, params, max_sessions, None)
+    }
+
+    /// [`Self::bind`] with an optional task MAC root (`--wire-auth mac`):
+    /// when set, every handshake runs the challenge/response and every
+    /// session frame in both directions is authenticated.
+    pub fn bind_with_auth(
+        addr: &str,
+        params: Arc<CkksParams>,
+        max_sessions: usize,
+        auth_root: Option<[u8; 32]>,
+    ) -> anyhow::Result<Self> {
         let listener = TcpListener::bind(addr)
             .map_err(|e| anyhow::anyhow!("cannot bind session hub on {addr}: {e}"))?;
         listener.set_nonblocking(true)?;
@@ -119,6 +177,8 @@ impl SessionHub {
             max_sessions: max_sessions.max(1),
             handshakes: AtomicUsize::new(0),
             io_timeout: Duration::from_secs(10),
+            auth_root,
+            downlink: Mutex::new(DownlinkCache::default()),
         });
         let accept_shared = shared.clone();
         let accept = std::thread::spawn(move || accept_loop(accept_shared));
@@ -210,13 +270,17 @@ impl SessionHub {
     /// reported in the outcome.
     pub fn broadcast_mask(&self, clients: &[u64], mask_bytes: &[u8]) -> DownlinkOutcome {
         let start = Instant::now();
+        // cache before pushing: a session that dies mid-push (or is still
+        // mid-rejoin) is replayed the mask at its next handshake
+        self.shared.downlink.lock().unwrap().mask = Some(mask_bytes.to_vec());
         let mut out = DownlinkOutcome::default();
         for &client in clients {
             match self.push_to(client, |sess| {
                 // buffered: header/payload/crc leave as one segment, not
                 // three NODELAY'd writes
                 let mut w = BufWriter::new(&sess.stream);
-                let n = write_frame(&mut w, MASK_ROUND, FrameKind::Mask, 0, mask_bytes)?;
+                let n =
+                    write_frame_with(&mut w, MASK_ROUND, FrameKind::Mask, 0, mask_bytes, &mut sess.tx)?;
                 w.flush()?;
                 Ok(n)
             }) {
@@ -261,6 +325,20 @@ impl SessionHub {
                 }
                 plain_payloads.push(b);
             }
+        }
+        let ct_payloads = Arc::new(ct_payloads);
+        let plain_payloads = Arc::new(plain_payloads);
+        // cache before pushing (Arc-shared payloads — no copy): a client
+        // whose downlink push fails can rejoin and be replayed this round
+        {
+            let mut cache = self.shared.downlink.lock().unwrap();
+            cache.round = Some(RoundSnapshot {
+                round,
+                plans: plans.to_vec(),
+                has_payloads: agg.is_some(),
+                ct_payloads: ct_payloads.clone(),
+                plain_payloads: plain_payloads.clone(),
+            });
         }
         let mut out = DownlinkOutcome::default();
         for (client, down) in plans {
@@ -309,10 +387,16 @@ impl SessionHub {
     /// FedAvg weight the round assigned it (`None` = don't pin); an upload
     /// declaring a different weight fails its session before touching the
     /// round's arrivals or metric sums. Per-client reader threads
-    /// reassemble and stamp completions exactly like [`super::TcpIntake`];
-    /// a session that fails, misses the quorum cutoff, or is absent (never
-    /// joined / died at broadcast) lands in `failed` and its slot is
-    /// dropped for rejoin.
+    /// reassemble and stamp completions exactly like [`super::TcpIntake`].
+    ///
+    /// Sessions are polled, not snapshotted: a client whose session fails
+    /// mid-upload (or was absent at collect start — e.g. it disconnected
+    /// during the broadcast) may **rejoin and retry** until the straggler
+    /// window `cfg.straggler_timeout` (clamped by the quorum cutoff and
+    /// `max_wait`) closes; only then does it land in `failed` with its
+    /// slot dropped. The rejoin window is what lets a mid-broadcast
+    /// disconnect resume via the handshake's downlink replay instead of
+    /// failing the round.
     pub fn collect_round(
         &self,
         expected: &[(u64, Option<f64>)],
@@ -321,95 +405,103 @@ impl SessionHub {
     ) -> IntakeOutcome {
         let start = Instant::now();
         let deadline = start + cfg.max_wait;
-        let completed: Mutex<Vec<Arrival>> = Mutex::new(Vec::new());
-        let failed: Mutex<Vec<u64>> = Mutex::new(Vec::new());
-        let timing_sums: Mutex<(f64, f64, f64)> = Mutex::new((0.0, 0.0, 0.0));
-        let bytes = std::sync::atomic::AtomicU64::new(0);
+        let mut arrivals: Vec<Arrival> = Vec::new();
+        let mut failed: Vec<u64> = Vec::new();
+        let mut sums = (0.0f64, 0.0f64, 0.0f64);
+        let mut bytes = 0u64;
         // Set when the quorum-th upload completes; readers clamp their
         // per-frame deadline to it, so stragglers fail within one read
         // timeout of the cutoff instead of holding the round to max_wait.
         let cutoff: Mutex<Option<Instant>> = Mutex::new(None);
         let params = &*self.shared.params;
 
+        #[derive(Clone, Copy, PartialEq, Eq)]
+        enum Slot {
+            /// No live reader: waiting for a (re)joined session.
+            Pending,
+            /// A reader thread owns the client's current session.
+            Reading,
+            Done,
+            Failed,
+        }
+        let mut slots = vec![Slot::Pending; expected.len()];
+        // the session arc each slot last spawned a reader on — a failed
+        // slot retries only when a *different* (rejoined) session appears
+        let mut tried: Vec<Option<usize>> = vec![None; expected.len()];
+
         std::thread::scope(|s| {
-            for &(client, expect_alpha) in expected {
-                let Some(arc) = self.session(client) else {
-                    failed.lock().unwrap().push(client);
-                    continue;
-                };
-                let completed = &completed;
-                let failed = &failed;
-                let timing_sums = &timing_sums;
-                let bytes = &bytes;
-                let cutoff = &cutoff;
-                let hub = &*self;
-                let cfg = cfg.clone();
-                s.spawn(move || {
-                    let mut guard = arc.lock().unwrap();
-                    let sess = &mut *guard;
-                    let mut seen: Option<u64> = None;
-                    let mut received = 0u64;
-                    let eff_deadline = || match *cutoff.lock().unwrap() {
+            let (res_tx, res_rx) = mpsc::channel::<(usize, anyhow::Result<UploadFrames>, u64)>();
+            let mut in_flight = 0usize;
+            loop {
+                // pending slots fail once the rejoin window closes: the
+                // straggler timeout, tightened by the quorum cutoff and
+                // the round deadline
+                let rejoin_until = {
+                    let cut = match *cutoff.lock().unwrap() {
                         Some(c) => c.min(deadline),
                         None => deadline,
                     };
-                    let result = sess
-                        .stream
-                        .set_write_timeout(Some(cfg.io_timeout))
-                        .map_err(anyhow::Error::from)
-                        .and_then(|_| {
-                            read_upload(
-                                &mut sess.reader,
-                                &sess.stream,
-                                &sess.stream,
-                                params,
-                                shape,
-                                cfg.round_id,
-                                cfg.io_timeout,
-                                &eff_deadline,
-                                Some(client),
-                                expect_alpha,
-                                &mut seen,
-                                &mut received,
-                                &mut sess.read_buf,
-                            )
-                        });
-                    bytes.fetch_add(received, Ordering::Relaxed);
-                    match result {
-                        Ok(uf) => {
-                            let mut done = completed.lock().unwrap();
-                            // stamp inside the lock → stamps are monotone
-                            let t = start.elapsed().as_secs_f64();
-                            done.push(Arrival {
-                                client: uf.client,
-                                alpha: uf.alpha,
-                                arrival_secs: t,
-                                update: Arc::new(uf.update),
-                            });
-                            let n_done = done.len();
-                            drop(done);
-                            {
-                                let mut ts = timing_sums.lock().unwrap();
-                                ts.0 += uf.train_secs;
-                                ts.1 += uf.encrypt_secs;
-                                ts.2 += uf.loss as f64;
-                            }
-                            if let Some(q) = cfg.quorum {
-                                if n_done >= q.max(1) {
-                                    let mut cut = cutoff.lock().unwrap();
-                                    if cut.is_none() {
-                                        *cut = Some(Instant::now() + cfg.straggler_timeout);
-                                    }
-                                }
-                            }
+                    (start + cfg.straggler_timeout).min(cut)
+                };
+                for (i, &(client, expect_alpha)) in expected.iter().enumerate() {
+                    if slots[i] != Slot::Pending {
+                        continue;
+                    }
+                    let fresh = self
+                        .session(client)
+                        .filter(|arc| tried[i] != Some(Arc::as_ptr(arc) as usize));
+                    let Some(arc) = fresh else {
+                        if Instant::now() >= rejoin_until {
+                            slots[i] = Slot::Failed;
+                            failed.push(client);
                         }
-                        Err(e) => {
+                        continue;
+                    };
+                    tried[i] = Some(Arc::as_ptr(&arc) as usize);
+                    slots[i] = Slot::Reading;
+                    in_flight += 1;
+                    let res_tx = res_tx.clone();
+                    let cutoff = &cutoff;
+                    let hub = &*self;
+                    let cfg = cfg.clone();
+                    s.spawn(move || {
+                        let mut guard = arc.lock().unwrap();
+                        let sess = &mut *guard;
+                        let mut seen: Option<u64> = None;
+                        let mut received = 0u64;
+                        let eff_deadline = || match *cutoff.lock().unwrap() {
+                            Some(c) => c.min(deadline),
+                            None => deadline,
+                        };
+                        let result = sess
+                            .stream
+                            .set_write_timeout(Some(cfg.io_timeout))
+                            .map_err(anyhow::Error::from)
+                            .and_then(|_| {
+                                read_upload(
+                                    &mut sess.reader,
+                                    &sess.stream,
+                                    &sess.stream,
+                                    params,
+                                    shape,
+                                    cfg.round_id,
+                                    cfg.io_timeout,
+                                    &eff_deadline,
+                                    Some(client),
+                                    expect_alpha,
+                                    &mut seen,
+                                    &mut received,
+                                    &mut sess.read_buf,
+                                    &mut sess.rx,
+                                    &mut sess.tx,
+                                )
+                            });
+                        if let Err(e) = &result {
                             crate::log_debug!(
                                 "session",
                                 "round {} upload from client {client} failed: {e}",
                                 cfg.round_id
                             );
-                            failed.lock().unwrap().push(client);
                             drop(guard);
                             // desynchronized socket (partial frames may be
                             // in flight): kill *this* session and free the
@@ -417,26 +509,70 @@ impl SessionHub {
                             // already rejoined is not evicted
                             hub.drop_session_if(client, &arc);
                         }
+                        let _ = res_tx.send((i, result, received));
+                    });
+                }
+                if in_flight == 0
+                    && slots.iter().all(|s| matches!(s, Slot::Done | Slot::Failed))
+                {
+                    break;
+                }
+                match res_rx.recv_timeout(Duration::from_millis(5)) {
+                    Ok((i, result, received)) => {
+                        in_flight -= 1;
+                        bytes += received;
+                        match result {
+                            Ok(uf) => {
+                                slots[i] = Slot::Done;
+                                // stamped in arrival order on this (single)
+                                // collector thread → stamps are monotone
+                                arrivals.push(Arrival {
+                                    client: uf.client,
+                                    alpha: uf.alpha,
+                                    arrival_secs: start.elapsed().as_secs_f64(),
+                                    update: Arc::new(uf.update),
+                                });
+                                sums.0 += uf.train_secs;
+                                sums.1 += uf.encrypt_secs;
+                                sums.2 += uf.loss as f64;
+                                if let Some(q) = cfg.quorum {
+                                    if arrivals.len() >= q.max(1) {
+                                        let mut cut = cutoff.lock().unwrap();
+                                        if cut.is_none() {
+                                            *cut =
+                                                Some(Instant::now() + cfg.straggler_timeout);
+                                        }
+                                    }
+                                }
+                            }
+                            Err(_) => {
+                                // the reader evicted its dead session; back
+                                // to Pending — a rejoined session (a
+                                // different arc) restarts it while the
+                                // rejoin window is open
+                                slots[i] = Slot::Pending;
+                            }
+                        }
                     }
-                });
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
             }
         });
 
-        let mut arrivals = completed.into_inner().unwrap();
         arrivals.sort_by(|a, b| {
             a.arrival_secs
                 .total_cmp(&b.arrival_secs)
                 .then(a.client.cmp(&b.client))
         });
-        let (train_secs, encrypt_secs, loss_sum) = timing_sums.into_inner().unwrap();
         IntakeOutcome {
             arrivals,
-            failed: failed.into_inner().unwrap(),
-            bytes_received: bytes.load(Ordering::Relaxed),
+            failed,
+            bytes_received: bytes,
             elapsed_secs: start.elapsed().as_secs_f64(),
-            train_secs,
-            encrypt_secs,
-            loss_sum,
+            train_secs: sums.0,
+            encrypt_secs: sums.1,
+            loss_sum: sums.2,
         }
     }
 
@@ -523,6 +659,8 @@ fn handshake(shared: &HubShared, stream: TcpStream) -> anyhow::Result<()> {
         reader: BufReader::new(stream.try_clone()?),
         stream,
         read_buf: Vec::new(),
+        tx: None,
+        rx: None,
     };
     let (kind, _) = read_frame_into(
         &mut sess.reader,
@@ -533,7 +671,8 @@ fn handshake(shared: &HubShared, stream: TcpStream) -> anyhow::Result<()> {
     if kind == FrameKind::Stats {
         // live metrics query (the `stats` CLI subcommand): answer with the
         // snapshot and close — no session slot is claimed, so probes can
-        // never evict or exhaust client registrations
+        // never evict or exhaust client registrations (and no key is
+        // required: the snapshot is diagnostic, not task state)
         let snap = crate::obs::metrics::snapshot().to_string();
         let mut w = &sess.stream;
         write_frame(&mut w, CONTROL_ROUND, FrameKind::StatsReply, 0, snap.as_bytes())?;
@@ -543,6 +682,57 @@ fn handshake(shared: &HubShared, stream: TcpStream) -> anyhow::Result<()> {
     let client = decode_hello(&sess.read_buf)?;
     anyhow::ensure!(client != UNIDENTIFIED_CLIENT, "client id {client} is reserved");
     sess.client = client;
+    // --wire-auth mac: challenge/response *before* the slot is touched. The
+    // nonce is fresh OS entropy, so a recorded handshake never verifies
+    // against a new challenge; a forged HELLO dies here with
+    // `auth_rejects` bumped and no session state disturbed — identity
+    // claims alone can no longer steal a registered slot.
+    if let Some(root) = &shared.auth_root {
+        let mut nonce = [0u8; 16];
+        ChaChaRng::from_os_entropy()
+            .map_err(|e| anyhow::anyhow!("cannot draw a challenge nonce: {e}"))?
+            .fill_bytes(&mut nonce);
+        {
+            let mut w = &sess.stream;
+            write_frame(&mut w, CONTROL_ROUND, FrameKind::Challenge, 0, &encode_challenge(&nonce))?;
+        }
+        let (kind, _) = read_frame_into(
+            &mut sess.reader,
+            CONTROL_ROUND,
+            CHALLENGE_RESP_PAYLOAD_BYTES,
+            &mut sess.read_buf,
+        )?;
+        anyhow::ensure!(
+            kind == FrameKind::ChallengeResp,
+            "expected CHALLENGE_RESP, got {kind:?} (client not in --wire-auth mac?)"
+        );
+        let (echoed, tag) = decode_challenge_resp(&sess.read_buf)?;
+        let skey = mac::derive_session_key(&mac::derive_client_key(root, client), &nonce);
+        if echoed != client || tag != mac::handshake_tag(&skey, &nonce, client) {
+            crate::obs::metrics::auth_reject();
+            anyhow::bail!("client {client} failed the handshake challenge");
+        }
+        sess.rx = Some(RxAuth::new(MacKey(skey.0), AUTH_DIR_UP));
+        sess.tx = Some(TxAuth::new(skey, AUTH_DIR_DOWN));
+    }
+    // Snapshot the replay state up front (Arc-shared payloads, no copy) so
+    // the downlink lock is never held while writing to a socket.
+    let (replay_mask, replay_round) = {
+        let cache = shared.downlink.lock().unwrap();
+        let mask = cache.mask.clone();
+        let snap = cache.round.as_ref().and_then(|snap| {
+            snap.plans.iter().find(|(id, _)| *id == client).map(|(_, down)| {
+                (
+                    snap.round,
+                    *down,
+                    snap.has_payloads,
+                    snap.ct_payloads.clone(),
+                    snap.plain_payloads.clone(),
+                )
+            })
+        });
+        (mask, snap)
+    };
     // Publish-then-welcome, with the session mutex held across both: the
     // registry entry must exist before the client sees WELCOME (so its
     // immediate upload lands in the slot), but a coordinator broadcast
@@ -550,7 +740,7 @@ fn handshake(shared: &HubShared, stream: TcpStream) -> anyhow::Result<()> {
     // or interleaved with — the WELCOME frame. Holding the mutex while
     // writing WELCOME makes any concurrent `push_to` queue behind it.
     let arc = Arc::new(Mutex::new(sess));
-    let guard = arc.lock().unwrap();
+    let mut guard = arc.lock().unwrap();
     let replaced = {
         let mut map = shared.sessions.lock().unwrap();
         anyhow::ensure!(
@@ -569,14 +759,33 @@ fn handshake(shared: &HubShared, stream: TcpStream) -> anyhow::Result<()> {
         }
     }
     let next = shared.next_round.load(Ordering::Relaxed);
-    let mut w = &guard.stream;
-    write_frame(
-        &mut w,
-        CONTROL_ROUND,
-        FrameKind::Welcome,
-        0,
-        &encode_welcome(next),
-    )?;
+    {
+        let sess = &mut *guard;
+        let mut w = BufWriter::new(&sess.stream);
+        write_frame_with(
+            &mut w,
+            CONTROL_ROUND,
+            FrameKind::Welcome,
+            0,
+            &encode_welcome(next),
+            &mut sess.tx,
+        )?;
+        // Mid-round rejoin replay: still under the session guard (so a
+        // concurrent coordinator push queues behind it), re-send the
+        // current stage's downlink — the agreed mask and the in-flight
+        // round's preamble/aggregate. A fresh pre-broadcast join sees an
+        // empty cache and gets only the WELCOME; the client side discards
+        // downlinks it has already processed.
+        if let Some(mask) = &replay_mask {
+            write_frame_with(&mut w, MASK_ROUND, FrameKind::Mask, 0, mask, &mut sess.tx)?;
+        }
+        if let Some((round, down, has_payloads, cts, plains)) = &replay_round {
+            let carried = (down.has_agg && *has_payloads)
+                .then(|| (cts.as_slice(), plains.as_slice()));
+            write_round_frames(&mut w, *round, down, carried, &mut sess.tx)?;
+        }
+        w.flush()?;
+    }
     drop(guard);
     Ok(())
 }
@@ -620,17 +829,32 @@ fn push_round(
     // buffered writer: frame headers/trailers coalesce with their payloads
     // instead of going out as separate NODELAY'd segments
     let mut w = BufWriter::with_capacity(64 * 1024, &sess.stream);
-    let mut sent = write_frame(&mut w, round, FrameKind::DownBegin, 0, &encode_down_begin(down))?;
+    let sent = write_round_frames(&mut w, round, down, payloads, &mut sess.tx)?;
+    w.flush()?;
+    Ok(sent)
+}
+
+/// The round-downlink frame sequence (preamble, carried payloads, DOWN_END)
+/// against an arbitrary writer — shared by the broadcast path and the
+/// handshake's mid-round rejoin replay.
+fn write_round_frames<W: Write>(
+    w: &mut W,
+    round: u64,
+    down: &DownBegin,
+    payloads: Option<(&[Vec<u8>], &[Vec<u8>])>,
+    auth: &mut Option<TxAuth>,
+) -> std::io::Result<u64> {
+    let mut sent =
+        write_frame_with(w, round, FrameKind::DownBegin, 0, &encode_down_begin(down), auth)?;
     if let Some((cts, plains)) = payloads {
         for (seq, p) in cts.iter().enumerate() {
-            sent += write_frame(&mut w, round, FrameKind::CtChunk, seq as u32, p)?;
+            sent += write_frame_with(w, round, FrameKind::CtChunk, seq as u32, p, auth)?;
         }
         for (seq, p) in plains.iter().enumerate() {
-            sent += write_frame(&mut w, round, FrameKind::Plain, seq as u32, p)?;
+            sent += write_frame_with(w, round, FrameKind::Plain, seq as u32, p, auth)?;
         }
     }
-    sent += write_frame(&mut w, round, FrameKind::DownEnd, 0, &[])?;
-    w.flush()?;
+    sent += write_frame_with(w, round, FrameKind::DownEnd, 0, &[], auth)?;
     Ok(sent)
 }
 
@@ -647,6 +871,19 @@ pub struct SessionOpts {
     pub connect_retry: Duration,
     /// Socket write-buffer capacity for uploads.
     pub write_buffer: usize,
+    /// This client's MAC key (`--wire-auth mac`): drives the handshake
+    /// challenge/response and both directions' frame auth. `None` = legacy
+    /// unauthenticated wire.
+    pub auth: Option<MacKey>,
+    /// Fault-injection schedule interposed on this client's uplink
+    /// (tests/adversarial harness only).
+    pub chaos: Option<ChaosConfig>,
+    /// Dial attempts beyond the first per connect (capped exponential
+    /// backoff with jitter); also the session loop's mid-task rejoin
+    /// budget. `0` restores fail-fast connects and no rejoins.
+    pub connect_retries: u32,
+    /// Base backoff delay for connect retries.
+    pub retry_base: Duration,
 }
 
 impl Default for SessionOpts {
@@ -656,6 +893,10 @@ impl Default for SessionOpts {
             round_wait: Duration::from_secs(300),
             connect_retry: Duration::from_secs(10),
             write_buffer: 256 * 1024,
+            auth: None,
+            chaos: None,
+            connect_retries: 5,
+            retry_base: Duration::from_millis(50),
         }
     }
 }
@@ -680,13 +921,17 @@ pub struct ClientSession {
     read_buf: Vec<u8>,
     params: Arc<CkksParams>,
     opts: SessionOpts,
+    /// Inbound (server→client) frame authenticator; `None` = legacy wire.
+    rx: Option<RxAuth>,
     pub client: u64,
     pub bytes_down: u64,
 }
 
 impl ClientSession {
-    /// Dial (with retry), claim the slot with HELLO, and wait for WELCOME.
-    /// Returns the session and the server's advertised next round.
+    /// Dial (with capped exponential backoff inside the connect window),
+    /// claim the slot with HELLO — running the challenge/response first
+    /// when a MAC key is configured — and wait for WELCOME. Returns the
+    /// session and the server's advertised next round.
     pub fn connect(
         addr: &str,
         client: u64,
@@ -695,7 +940,7 @@ impl ClientSession {
     ) -> anyhow::Result<(Self, u64)> {
         let deadline = Instant::now() + opts.connect_retry;
         let stream = loop {
-            match TcpStream::connect(addr) {
+            match connect_with_backoff(addr, opts.connect_retries, opts.retry_base, client) {
                 Ok(s) => break s,
                 Err(e) => {
                     if Instant::now() >= deadline {
@@ -716,18 +961,54 @@ impl ClientSession {
         stream.set_write_timeout(Some(opts.round_wait))?;
         let reader = BufReader::new(stream.try_clone()?);
         let sink_stream = stream.try_clone()?;
+        let sink = match &opts.chaos {
+            Some(cfg) => {
+                // the fault injector needs the wire's actual frame length
+                // (auth trailer included) to split frames correctly, and
+                // must be able to sever the *read* half too so a scripted
+                // disconnect kills the whole session, not just the uplink
+                let mut ccfg = cfg.clone();
+                ccfg.authed = opts.auth.is_some();
+                let hook_stream = stream.try_clone()?;
+                let w = ChaosWriter::new(sink_stream, ccfg).on_disconnect(Box::new(move || {
+                    hook_stream.shutdown(std::net::Shutdown::Both).ok();
+                }));
+                FrameSink::over_writer(Box::new(w), CONTROL_ROUND, opts.write_buffer)
+            }
+            None => FrameSink::over(sink_stream, CONTROL_ROUND, opts.write_buffer),
+        };
         let mut sess = ClientSession {
-            sink: FrameSink::over(sink_stream, CONTROL_ROUND, opts.write_buffer),
+            sink,
             stream,
             reader,
             read_buf: Vec::new(),
             params,
             opts,
+            rx: None,
             client,
             bytes_down: 0,
         };
         sess.sink.send(FrameKind::Hello, 0, &encode_hello(client))?;
         sess.sink.flush()?;
+        if let Some(key) = sess.opts.auth.clone() {
+            // server-nonce challenge/response (DESIGN.md §12): both
+            // handshake frames ride unauthenticated; the derived session
+            // key then arms per-frame auth in both directions, so even
+            // WELCOME is tagged.
+            let (kind, _) = sess.read_downlink_frame(CONTROL_ROUND, sess.opts.io_timeout)?;
+            anyhow::ensure!(
+                kind == FrameKind::Challenge,
+                "expected CHALLENGE, got {kind:?} (server not in --wire-auth mac?)"
+            );
+            let nonce = decode_challenge(&sess.read_buf)?;
+            let skey = mac::derive_session_key(&key, &nonce);
+            let tag = mac::handshake_tag(&skey, &nonce, client);
+            sess.sink
+                .send(FrameKind::ChallengeResp, 0, &encode_challenge_resp(client, tag))?;
+            sess.sink.flush()?;
+            sess.sink.set_auth(Some(TxAuth::new(skey.clone(), AUTH_DIR_UP)));
+            sess.rx = Some(RxAuth::new(skey, AUTH_DIR_DOWN));
+        }
         let (kind, _) = sess.read_downlink_frame(CONTROL_ROUND, sess.opts.io_timeout)?;
         anyhow::ensure!(kind == FrameKind::Welcome, "expected WELCOME, got {kind:?}");
         let next = decode_welcome(&sess.read_buf)?;
@@ -748,17 +1029,34 @@ impl ClientSession {
         self.read_downlink_frame_with_cap(round, timeout, cap)
     }
 
+    /// Read one frame from the downlink regardless of its wire round,
+    /// verifying auth (and rejecting replays) when armed. Returns the
+    /// frame's `(round, kind, seq)`.
+    fn read_any_frame(
+        &mut self,
+        timeout: Duration,
+        cap: usize,
+    ) -> anyhow::Result<(u64, FrameKind, u32)> {
+        self.stream.set_read_timeout(Some(timeout))?;
+        let (round, kind, seq) =
+            read_frame_any_round_into_with(&mut self.reader, cap, &mut self.read_buf, &mut self.rx)?;
+        let auth_extra = if self.rx.is_some() { AUTH_TRAILER_BYTES } else { 0 };
+        self.bytes_down +=
+            (FRAME_HEADER_BYTES + self.read_buf.len() + FRAME_TRAILER_BYTES + auth_extra) as u64;
+        Ok((round, kind, seq))
+    }
+
     fn read_downlink_frame_with_cap(
         &mut self,
         round: u64,
         timeout: Duration,
         cap: usize,
     ) -> anyhow::Result<(FrameKind, u32)> {
-        self.stream.set_read_timeout(Some(timeout))?;
-        let (kind, seq) = read_frame_into(&mut self.reader, round, cap, &mut self.read_buf)?;
-        self.bytes_down += (super::frame::FRAME_HEADER_BYTES
-            + self.read_buf.len()
-            + super::frame::FRAME_TRAILER_BYTES) as u64;
+        let (got, kind, seq) = self.read_any_frame(timeout, cap)?;
+        if got != round {
+            crate::obs::metrics::frame_reject();
+            anyhow::bail!("frame for round {got} while expecting round {round}");
+        }
         Ok((kind, seq))
     }
 
@@ -785,6 +1083,46 @@ impl ClientSession {
         let (kind, _) = self.read_downlink_frame(round, self.opts.round_wait)?;
         anyhow::ensure!(kind == FrameKind::DownBegin, "expected DOWN_BEGIN, got {kind:?}");
         let down = decode_down_begin(&self.read_buf)?;
+        self.finish_round_downlink(round, down, expect_shape, bytes0)
+    }
+
+    /// Like [`Self::recv_round`] but accepts whatever wire round the server
+    /// is currently serving — the rejoin path, where a reconnected client is
+    /// replayed the in-flight round's downlink and may first re-receive the
+    /// MASK broadcast (discarded here: the client already holds the agreed
+    /// mask). Returns the wire round alongside the downlink so the caller
+    /// can fast-forward its own round counter.
+    pub fn recv_round_any(
+        &mut self,
+        expect_shape: Option<UpdateShape>,
+        mask_total: usize,
+    ) -> anyhow::Result<(u64, RoundDownlink)> {
+        let _span = crate::obs::span("transport", "recv_round_any");
+        let cap = frame_payload_cap(&self.params).max(mask_payload_cap(mask_total));
+        loop {
+            let bytes0 = self.bytes_down;
+            let (round, kind, _) = self.read_any_frame(self.opts.round_wait, cap)?;
+            match kind {
+                FrameKind::Mask => continue,
+                FrameKind::DownBegin => {
+                    let down = decode_down_begin(&self.read_buf)?;
+                    let out = self.finish_round_downlink(round, down, expect_shape, bytes0)?;
+                    return Ok((round, out));
+                }
+                other => anyhow::bail!("expected DOWN_BEGIN, got {other:?}"),
+            }
+        }
+    }
+
+    /// Shared tail of a round downlink once DOWN_BEGIN is decoded: shape
+    /// validation, chunk reassembly, DOWN_END.
+    fn finish_round_downlink(
+        &mut self,
+        round: u64,
+        down: DownBegin,
+        expect_shape: Option<UpdateShape>,
+        bytes0: u64,
+    ) -> anyhow::Result<RoundDownlink> {
         if let (true, Some(shape)) = (down.has_agg, expect_shape) {
             anyhow::ensure!(
                 down.n_cts == shape.n_cts
@@ -855,7 +1193,7 @@ impl ClientSession {
         // it the round-scale wait, not the per-frame one
         self.stream.set_read_timeout(Some(self.opts.round_wait))?;
         self.sink
-            .end_and_ack(&mut self.reader, &mut self.read_buf, metrics)
+            .end_and_ack(&mut self.reader, &mut self.read_buf, metrics, &mut self.rx)
     }
 }
 
@@ -1066,6 +1404,95 @@ mod tests {
         assert!((outcome.loss_sum - 6.0).abs() < 1e-9);
         // the sessions survive the round (persistence across rounds)
         assert_eq!(hub.connected().len(), 3);
+        hub.shutdown();
+    }
+
+    #[test]
+    fn mac_handshake_and_authed_downlink() {
+        let c = ctx();
+        let root = [0x5Au8; 32];
+        let mut hub =
+            SessionHub::bind_with_auth("127.0.0.1:0", c.params.clone(), 8, Some(root)).unwrap();
+        let addr = hub.local_addr().unwrap().to_string();
+        let opts = SessionOpts {
+            connect_retry: Duration::from_secs(5),
+            auth: Some(crate::crypto::mac::derive_client_key(&root, 9)),
+            ..SessionOpts::default()
+        };
+        let client_thread = {
+            let params = c.params.clone();
+            std::thread::spawn(move || {
+                let (mut sess, next) =
+                    ClientSession::connect(&addr, 9, params, opts).unwrap();
+                assert_eq!(next, MASK_ROUND);
+                // the mask downlink arrives through the authed path
+                let mask = sess.recv_mask(64).unwrap();
+                assert_eq!(mask.total(), 64);
+            })
+        };
+        hub.wait_for_clients(1, Duration::from_secs(5)).unwrap();
+        let mask_bytes = EncryptionMask::full(64).to_bytes();
+        let out = hub.broadcast_mask(&[9], &mask_bytes);
+        assert!(out.failed.is_empty());
+        client_thread.join().unwrap();
+        hub.shutdown();
+    }
+
+    #[test]
+    fn mac_wrong_key_is_rejected_before_the_slot() {
+        let c = ctx();
+        let root = [0x11u8; 32];
+        let mut hub =
+            SessionHub::bind_with_auth("127.0.0.1:0", c.params.clone(), 8, Some(root)).unwrap();
+        let addr = hub.local_addr().unwrap().to_string();
+        let before = crate::obs::metrics::snapshot_auth_rejects();
+        let opts = SessionOpts {
+            connect_retry: Duration::from_secs(2),
+            io_timeout: Duration::from_secs(2),
+            // a forged identity: the key of client 3, claiming client 4
+            auth: Some(crate::crypto::mac::derive_client_key(&root, 3)),
+            connect_retries: 0,
+            ..SessionOpts::default()
+        };
+        assert!(ClientSession::connect(&addr, 4, c.params.clone(), opts).is_err());
+        assert!(crate::obs::metrics::snapshot_auth_rejects() > before);
+        // the failed challenge never claimed a session slot
+        assert!(hub.connected().is_empty());
+        hub.shutdown();
+    }
+
+    #[test]
+    fn wire_auth_mode_mismatch_fails_loudly() {
+        let c = ctx();
+        // mac hub, legacy client: the CHALLENGE arrives where WELCOME was
+        // expected
+        let mut hub =
+            SessionHub::bind_with_auth("127.0.0.1:0", c.params.clone(), 8, Some([7u8; 32]))
+                .unwrap();
+        let addr = hub.local_addr().unwrap().to_string();
+        let opts = SessionOpts {
+            connect_retry: Duration::from_secs(2),
+            io_timeout: Duration::from_secs(2),
+            connect_retries: 0,
+            ..SessionOpts::default()
+        };
+        let err = ClientSession::connect(&addr, 1, c.params.clone(), opts.clone())
+            .err()
+            .expect("legacy client must not pass a mac handshake");
+        assert!(err.to_string().contains("WELCOME"), "unexpected error: {err}");
+        hub.shutdown();
+
+        // legacy hub, mac client: no CHALLENGE ever arrives
+        let mut hub = SessionHub::bind("127.0.0.1:0", c.params.clone(), 8).unwrap();
+        let addr = hub.local_addr().unwrap().to_string();
+        let opts = SessionOpts {
+            auth: Some(crate::crypto::mac::derive_client_key(&[7u8; 32], 1)),
+            ..opts
+        };
+        let err = ClientSession::connect(&addr, 1, c.params.clone(), opts)
+            .err()
+            .expect("mac client must not pass a legacy handshake");
+        assert!(err.to_string().contains("CHALLENGE"), "unexpected error: {err}");
         hub.shutdown();
     }
 }

@@ -192,6 +192,9 @@ fn run_report_envelope_schema_holds() {
         "bytes_received",
         "crc_rejects",
         "frame_rejects",
+        "auth_rejects",
+        "replay_rejects",
+        "chaos_injected",
         "straggler_drops",
         "rejoins",
         "scratch_pool_hits",

@@ -16,7 +16,7 @@ use fedml_he::coordinator::{FlConfig, FlServer, Selection, Transport};
 use fedml_he::crypto::prng::ChaChaRng;
 use fedml_he::he_agg::{native, EncryptionMask, SelectiveCodec};
 use fedml_he::transport::{
-    ClientSession, DownBegin, IntakeConfig, SessionHub, SessionOpts, UpdateShape,
+    ChaosConfig, ClientSession, DownBegin, IntakeConfig, SessionHub, SessionOpts, UpdateShape,
 };
 use std::sync::mpsc;
 use std::time::Duration;
@@ -139,6 +139,192 @@ fn tcp_run_with_dropout_completes() {
     for (a, b) in gs.iter().zip(global.iter()) {
         assert_eq!(a.to_bits(), b.to_bits());
     }
+}
+
+#[test]
+fn injected_disconnect_is_bridged_by_the_rejoin_replay() {
+    // ISSUE 8 satellite: a chaos-injected disconnect severs client 1 while
+    // its round-0 END frame is on the wire, so the server fails its upload
+    // AND the round-1 broadcast goes out against the dead socket. The
+    // rejoining client must recover the whole round-1 downlink (mask +
+    // DOWN_BEGIN + aggregate frames) purely from the handshake replay
+    // cache, and round 1 must then seal bitwise identical to the oracle.
+    let ctx = fedml_he::ckks::CkksContext::new(256, 3, 30).unwrap();
+    let codec = SelectiveCodec::new(ctx.clone());
+    let mut rng = ChaChaRng::from_seed(9, 0);
+    let (pk, _sk) = codec.ctx.keygen(&mut rng);
+    let total = 700usize;
+    // full mask: the uplink is HELLO, BEGIN, n_cts CT chunks, END — which
+    // pins the injected disconnect onto the END frame deterministically
+    let mask = EncryptionMask::full(total);
+    let shape = UpdateShape::for_round(&codec.ctx, &mask);
+    let end_frame = (2 + shape.n_cts + 1) as u64;
+    let mut hub = SessionHub::bind("127.0.0.1:0", ctx.params.clone(), 8).unwrap();
+    let addr = hub.local_addr().unwrap().to_string();
+    let opts = SessionOpts {
+        connect_retry: Duration::from_secs(5),
+        round_wait: Duration::from_secs(20),
+        io_timeout: Duration::from_secs(5),
+        ..SessionOpts::default()
+    };
+    let encrypt = |client: u64, round: u64| {
+        let mut rng = ChaChaRng::from_seed(300 + client, round);
+        codec.encrypt_update(&client_model(total, client, round), &mask, &pk, &mut rng)
+    };
+    let mask_bytes = mask.to_bytes();
+
+    let (rejoin_tx, rejoin_rx) = mpsc::channel::<()>();
+    let mut rejoin_rx = Some(rejoin_rx);
+    let mut threads = Vec::new();
+    for client in 0..2u64 {
+        let addr = addr.clone();
+        let params = ctx.params.clone();
+        let mut opts = opts.clone();
+        let codec = SelectiveCodec::new(ctx.clone());
+        let pk = pk.clone();
+        let mask = mask.clone();
+        let rejoin_rx = if client == 1 { rejoin_rx.take() } else { None };
+        if client == 1 {
+            opts.chaos = Some(ChaosConfig {
+                disconnect_at_frame: Some(end_frame),
+                ..ChaosConfig::passthrough(0xBAD)
+            });
+        }
+        threads.push(std::thread::spawn(move || {
+            let (mut sess, _) =
+                ClientSession::connect(&addr, client, params.clone(), opts.clone()).unwrap();
+            sess.recv_mask(total).unwrap();
+            let dl = sess.recv_round(0, Some(shape)).unwrap();
+            assert!(dl.down.participate && !dl.down.has_agg);
+            let mut rng = ChaChaRng::from_seed(300 + client, 0);
+            let upd =
+                codec.encrypt_update(&client_model(total, client, 0), &mask, &pk, &mut rng);
+            let r0 = sess.upload(0, 0.5, &upd, None);
+            if client == 1 {
+                assert!(r0.is_err(), "the injected disconnect must fail the upload");
+                // wait until the server has already broadcast round 1 into
+                // the dead socket, then rejoin with a clean link
+                rejoin_rx.unwrap().recv().unwrap();
+                opts.chaos = None;
+                let (s2, _) = ClientSession::connect(&addr, client, params, opts).unwrap();
+                sess = s2;
+                // the handshake replay carries the cached mask and the full
+                // round-1 downlink; recv_round_any skips the mask replay
+                let (round, dl) = sess.recv_round_any(Some(shape), total).unwrap();
+                assert_eq!(round, 1, "replay must deliver the missed round");
+                assert!(dl.down.has_agg && dl.agg.is_some());
+            } else {
+                r0.unwrap();
+                let dl = sess.recv_round(1, Some(shape)).unwrap();
+                assert!(dl.down.has_agg && dl.agg.is_some());
+            }
+            let mut rng = ChaChaRng::from_seed(300 + client, 1);
+            let upd =
+                codec.encrypt_update(&client_model(total, client, 1), &mask, &pk, &mut rng);
+            sess.upload(1, 0.5, &upd, None).unwrap();
+            let dl = sess.recv_round(2, Some(shape)).unwrap();
+            assert!(dl.down.fin);
+        }));
+    }
+
+    hub.wait_for_clients(2, Duration::from_secs(10)).unwrap();
+    let out = hub.broadcast_mask(&[0, 1], &mask_bytes);
+    assert!(out.failed.is_empty());
+    let plan = |alpha: f64| DownBegin {
+        alpha,
+        alpha_mass: 0.0,
+        n_cts: 0,
+        n_plain: 0,
+        total: 0,
+        participate: true,
+        has_agg: false,
+        fin: false,
+    };
+    let out = hub.broadcast_round(0, &[(0, plan(0.5)), (1, plan(0.5))], None);
+    assert!(out.failed.is_empty());
+    hub.set_next_round(1);
+    let outcome = hub.collect_round(
+        &[(0, Some(0.5)), (1, Some(0.5))],
+        shape,
+        &IntakeConfig {
+            round_id: 0,
+            expected_uploads: 2,
+            quorum: Some(1),
+            straggler_timeout: Duration::from_secs(1),
+            max_wait: Duration::from_secs(20),
+            io_timeout: Duration::from_secs(2),
+        },
+    );
+    // the severed upload is on the failure record, not silently absorbed
+    assert_eq!(outcome.arrivals.len(), 1, "failed: {:?}", outcome.failed);
+    assert_eq!(outcome.arrivals[0].client, 0);
+    assert!(outcome.failed.contains(&1), "failed: {:?}", outcome.failed);
+
+    // round 1 carries round 0's (client-0-only) aggregate; the push toward
+    // client 1 hits the dead socket — the replay cache is what bridges it
+    let agg0 = native::aggregate(&[encrypt(0, 0)], &[0.5], &codec.ctx.params);
+    let round1 = DownBegin {
+        alpha: 0.5,
+        alpha_mass: 0.5,
+        n_cts: agg0.cts.len(),
+        n_plain: agg0.plain.len(),
+        total: agg0.total,
+        participate: true,
+        has_agg: true,
+        fin: false,
+    };
+    let _ = hub.broadcast_round(1, &[(0, round1), (1, round1)], Some(&agg0));
+    hub.set_next_round(2);
+    rejoin_tx.send(()).unwrap();
+    let outcome = hub.collect_round(
+        &[(0, Some(0.5)), (1, Some(0.5))],
+        shape,
+        &IntakeConfig {
+            round_id: 1,
+            expected_uploads: 2,
+            quorum: None,
+            straggler_timeout: Duration::from_secs(5),
+            max_wait: Duration::from_secs(20),
+            io_timeout: Duration::from_secs(5),
+        },
+    );
+    assert_eq!(
+        outcome.arrivals.len(),
+        2,
+        "round 1 after the replayed rejoin failed: {:?}",
+        outcome.failed
+    );
+    // bitwise: the post-rejoin round matches the in-process oracle
+    let oracle1 =
+        native::aggregate(&[encrypt(0, 1), encrypt(1, 1)], &[0.5, 0.5], &codec.ctx.params);
+    let mut arrivals = outcome.arrivals;
+    arrivals.sort_by_key(|a| a.client);
+    let agg1 = native::aggregate(
+        &[(*arrivals[0].update).clone(), (*arrivals[1].update).clone()],
+        &[0.5, 0.5],
+        &codec.ctx.params,
+    );
+    assert_eq!(agg1.plain, oracle1.plain);
+    for (a, b) in agg1.cts.iter().zip(oracle1.cts.iter()) {
+        assert_eq!(a.c0, b.c0);
+        assert_eq!(a.c1, b.c1);
+    }
+    let fin = DownBegin {
+        alpha: 0.0,
+        alpha_mass: 0.0,
+        n_cts: 0,
+        n_plain: 0,
+        total: 0,
+        participate: false,
+        has_agg: false,
+        fin: true,
+    };
+    let out = hub.broadcast_round(2, &[(0, fin), (1, fin)], None);
+    assert!(out.failed.is_empty(), "post-rejoin fin failed: {:?}", out.failed);
+    for t in threads {
+        t.join().unwrap();
+    }
+    hub.shutdown();
 }
 
 #[test]
