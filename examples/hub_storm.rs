@@ -1,0 +1,191 @@
+//! Hub storm: the scale gate for the sharded epoll reactor backend
+//! (DESIGN.md §13). Thousands of concurrent real `ClientSession`s — 5000
+//! by default, first CLI arg overrides — join one coordinator round over
+//! loopback, each receiving the round downlink and uploading a small
+//! encrypted update, all carried by the fixed shard pool instead of one
+//! thread per connection. The collected aggregate is asserted
+//! **bitwise-identical** to the in-process oracle over the same updates,
+//! so scheduling, partial I/O, and shard interleaving provably never
+//! touch a bit of the math. CI runs it at 640 sessions as the bounded
+//! smoke gate:
+//!
+//! ```bash
+//! cargo run --release --example hub_storm          # 5000 sessions
+//! cargo run --release --example hub_storm -- 640   # CI smoke scale
+//! ```
+//!
+//! The client threads exist only to drive sockets (the reactor under test
+//! is on the server side), so they are spawned with small stacks; at 5000
+//! sessions the process holds ~10k file descriptors — raise `ulimit -n`
+//! if the default is lower.
+
+use fedml_he::ckks::CkksContext;
+use fedml_he::crypto::prng::ChaChaRng;
+use fedml_he::he_agg::{native, EncryptionMask, SelectiveCodec};
+use fedml_he::transport::{
+    ClientSession, DownBegin, IntakeConfig, ReactorHub, SessionOpts, UpdateShape,
+};
+use std::time::{Duration, Instant};
+
+fn client_model(total: usize, client: u64) -> Vec<f32> {
+    (0..total)
+        .map(|i| ((i as u64 + 131 * client) as f32 * 0.003).sin())
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args()
+        .nth(1)
+        .map(|s| s.parse().expect("session count must be a number"))
+        .unwrap_or(5000);
+    let total = 64usize;
+    let ctx = CkksContext::new(256, 3, 30)?;
+    let codec = SelectiveCodec::new(ctx.clone());
+    let mut rng = ChaChaRng::from_seed(41, 0);
+    let (pk, _sk) = codec.ctx.keygen(&mut rng);
+    let mask = EncryptionMask::full(total);
+    let shape = UpdateShape::for_round(&codec.ctx, &mask);
+    let alpha = 1.0 / n as f64;
+
+    let mut hub = ReactorHub::bind("127.0.0.1:0", ctx.params.clone(), n * 2 + 8)?;
+    let addr = hub.local_addr()?.to_string();
+    println!("session hub listening on {addr}; storming it with {n} concurrent sessions");
+
+    let start = Instant::now();
+    let mut threads = Vec::with_capacity(n);
+    for client in 0..n as u64 {
+        let addr = addr.clone();
+        let params = ctx.params.clone();
+        let codec = SelectiveCodec::new(ctx.clone());
+        let pk = pk.clone();
+        let mask = mask.clone();
+        let opts = SessionOpts {
+            connect_retry: Duration::from_secs(120),
+            round_wait: Duration::from_secs(600),
+            io_timeout: Duration::from_secs(300),
+            // 5000 sessions must cost buffers, not 5000 × 256 KiB
+            write_buffer: 8 * 1024,
+            ..SessionOpts::default()
+        };
+        threads.push(
+            std::thread::Builder::new()
+                .stack_size(512 * 1024)
+                .spawn(move || {
+                    let (mut sess, _) = ClientSession::connect(&addr, client, params, opts)
+                        .unwrap_or_else(|e| panic!("client {client}: connect failed: {e}"));
+                    let dl = sess.recv_round(0, Some(shape)).unwrap();
+                    assert!(dl.down.participate && !dl.down.has_agg);
+                    let mut rng = ChaChaRng::from_seed(1000 + client, 0);
+                    let upd = codec.encrypt_update(
+                        &client_model(total, client),
+                        &mask,
+                        &pk,
+                        &mut rng,
+                    );
+                    sess.upload(0, alpha, &upd, None)
+                        .unwrap_or_else(|e| panic!("client {client}: upload failed: {e}"));
+                    let dl = sess.recv_round(1, Some(shape)).unwrap();
+                    assert!(dl.down.fin);
+                })?,
+        );
+    }
+    let joined = hub.wait_for_clients(n, Duration::from_secs(600))?;
+    println!(
+        "{} sessions joined in {:.2?} (thread-per-connection would need {} intake threads)",
+        joined.len(),
+        start.elapsed(),
+        n
+    );
+
+    let plan = DownBegin {
+        alpha,
+        alpha_mass: 0.0,
+        n_cts: 0,
+        n_plain: 0,
+        total: 0,
+        participate: true,
+        has_agg: false,
+        fin: false,
+    };
+    let plans: Vec<(u64, DownBegin)> = (0..n as u64).map(|c| (c, plan)).collect();
+    let t = Instant::now();
+    let out = hub.broadcast_round(0, &plans, None);
+    anyhow::ensure!(out.failed.is_empty(), "round downlink failed: {:?}", out.failed);
+    println!(
+        "round 0 broadcast to {n} sessions in {:.2?} ({} bytes)",
+        t.elapsed(),
+        out.bytes_sent
+    );
+
+    hub.set_next_round(1);
+    let expected: Vec<(u64, Option<f64>)> = (0..n as u64).map(|c| (c, Some(alpha))).collect();
+    let t = Instant::now();
+    let outcome = hub.collect_round(
+        &expected,
+        shape,
+        &IntakeConfig {
+            round_id: 0,
+            expected_uploads: n,
+            quorum: None,
+            straggler_timeout: Duration::from_secs(600),
+            max_wait: Duration::from_secs(900),
+            io_timeout: Duration::from_secs(600),
+        },
+    );
+    anyhow::ensure!(
+        outcome.arrivals.len() == n,
+        "only {}/{n} uploads arrived (failed: {:?})",
+        outcome.arrivals.len(),
+        outcome.failed
+    );
+    println!("collected {n} uploads in {:.2?}", t.elapsed());
+
+    // bitwise gate: the storm's aggregate vs the in-process oracle
+    let mut arrivals = outcome.arrivals;
+    arrivals.sort_by_key(|a| a.client);
+    let updates: Vec<_> = arrivals.iter().map(|a| (*a.update).clone()).collect();
+    let alphas = vec![alpha; n];
+    let agg = native::aggregate(&updates, &alphas, &codec.ctx.params);
+    let oracle_updates: Vec<_> = (0..n as u64)
+        .map(|c| {
+            let mut rng = ChaChaRng::from_seed(1000 + c, 0);
+            codec.encrypt_update(&client_model(total, c), &mask, &pk, &mut rng)
+        })
+        .collect();
+    let oracle = native::aggregate(&oracle_updates, &alphas, &codec.ctx.params);
+    anyhow::ensure!(agg.plain == oracle.plain, "plain segment diverged from the oracle");
+    for (i, (a, b)) in agg.cts.iter().zip(oracle.cts.iter()).enumerate() {
+        anyhow::ensure!(
+            a.c0 == b.c0 && a.c1 == b.c1,
+            "ciphertext {i} diverged from the oracle"
+        );
+    }
+    println!("aggregate over the wire is bitwise-identical to the in-process oracle");
+
+    let fin = DownBegin {
+        alpha: 0.0,
+        alpha_mass: 0.0,
+        n_cts: 0,
+        n_plain: 0,
+        total: 0,
+        participate: false,
+        has_agg: false,
+        fin: true,
+    };
+    let fin_plans: Vec<(u64, DownBegin)> = (0..n as u64).map(|c| (c, fin)).collect();
+    let out = hub.broadcast_round(1, &fin_plans, None);
+    anyhow::ensure!(out.failed.is_empty(), "fin downlink failed: {:?}", out.failed);
+    for t in threads {
+        t.join().expect("client thread panicked");
+    }
+    hub.shutdown();
+
+    let snap = fedml_he::obs::metrics::snapshot();
+    for key in ["hub_sessions_peak", "hub_wakeups", "hub_partial_reads", "hub_write_queue_peak"] {
+        if let Some(v) = snap.get(key) {
+            println!("  {key}: {v}");
+        }
+    }
+    println!("PASS: {n} concurrent reactor sessions, one round, bitwise-identical aggregate");
+    Ok(())
+}

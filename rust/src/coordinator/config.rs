@@ -109,6 +109,45 @@ impl WireAuth {
     }
 }
 
+/// Which server-side session driver carries `--transport tcp` traffic
+/// (`--transport-backend {threads,hub}`, DESIGN.md §13). The default comes
+/// from the `FEDML_HE_TRANSPORT_BACKEND` environment variable when set
+/// (mirroring `FEDML_HE_WIRE_AUTH`), so CI can rerun the whole tier-1
+/// suite on the reactor hub without touching every invocation. Both
+/// backends speak the identical wire protocol and produce bitwise-identical
+/// final models; clients never see the difference.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportBackend {
+    /// Blocking sockets, one OS thread per live session (the legacy
+    /// `transport::session::SessionHub`).
+    Threads,
+    /// Sharded epoll reactor: nonblocking sockets multiplexed across a few
+    /// shard threads (`transport::hub::ReactorHub`), sized for thousands of
+    /// concurrent sessions.
+    Hub,
+}
+
+impl TransportBackend {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "threads" | "thread" | "blocking" => TransportBackend::Threads,
+            "hub" | "reactor" | "epoll" => TransportBackend::Hub,
+            other => anyhow::bail!(
+                "unknown transport backend '{other}' (expected: threads | hub)"
+            ),
+        })
+    }
+
+    /// Process-wide default: `FEDML_HE_TRANSPORT_BACKEND` when set and
+    /// valid, else [`TransportBackend::Threads`].
+    pub fn env_default() -> Self {
+        match std::env::var("FEDML_HE_TRANSPORT_BACKEND") {
+            Ok(v) => TransportBackend::parse(v.trim()).unwrap_or(TransportBackend::Threads),
+            Err(_) => TransportBackend::Threads,
+        }
+    }
+}
+
 /// Aggregation backend.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Backend {
@@ -198,6 +237,10 @@ pub struct FlConfig {
     pub round_wait: f64,
     /// Session wire-authentication mode (`--wire-auth`).
     pub wire_auth: WireAuth,
+    /// Server session driver under `--transport tcp`
+    /// (`--transport-backend`): blocking thread-per-session or the sharded
+    /// epoll reactor hub.
+    pub transport_backend: TransportBackend,
     /// Connect/rejoin attempts before a client session gives up
     /// (`--connect-retries`; 0 = fail fast on the first refusal).
     pub connect_retries: u32,
@@ -240,6 +283,7 @@ impl Default for FlConfig {
             join_wait: 120.0,
             round_wait: 300.0,
             wire_auth: WireAuth::env_default(),
+            transport_backend: TransportBackend::env_default(),
             connect_retries: 5,
             retry_base_ms: 50,
         }
@@ -303,6 +347,10 @@ impl FlConfig {
             wire_auth: match args.get("wire-auth") {
                 Some(v) => WireAuth::parse(&v)?,
                 None => d.wire_auth,
+            },
+            transport_backend: match args.get("transport-backend") {
+                Some(v) => TransportBackend::parse(&v)?,
+                None => d.transport_backend,
             },
             connect_retries: args.get_parsed_or("connect-retries", d.connect_retries),
             retry_base_ms: args.get_parsed_or("retry-base-ms", d.retry_base_ms),
@@ -394,6 +442,26 @@ mod tests {
     }
 
     #[test]
+    fn transport_backend_parses() {
+        let args = Args::parse_from(
+            "run --transport tcp --transport-backend hub"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let c = FlConfig::from_args(&args).unwrap();
+        assert_eq!(c.transport_backend, TransportBackend::Hub);
+        assert_eq!(
+            TransportBackend::parse("threads").unwrap(),
+            TransportBackend::Threads
+        );
+        assert_eq!(
+            TransportBackend::parse("reactor").unwrap(),
+            TransportBackend::Hub
+        );
+        assert!(TransportBackend::parse("iocp").is_err());
+    }
+
+    #[test]
     fn mask_granularity_parses() {
         let args = Args::parse_from(
             "run --mask-granularity layer"
@@ -444,6 +512,7 @@ mod tests {
             "run --transport udp",
             "run --intake-max-wait soon",
             "run --wire-auth hmac",
+            "run --transport-backend fancy",
             "run --connect-retries lots",
             "run --retry-base-ms soon",
         ] {

@@ -20,7 +20,9 @@ pub mod phases;
 pub mod server;
 pub mod taskkey;
 
-pub use config::{Backend, FlConfig, KeyMode, MaskGranularity, Selection, Transport};
+pub use config::{
+    Backend, FlConfig, KeyMode, MaskGranularity, Selection, Transport, TransportBackend,
+};
 pub use phases::{client_session_loop, join_task, Participant, RemoteParticipant, SimParticipant};
 pub use server::{FlReport, FlServer, RoundMetrics, ServeOptions};
 pub use taskkey::{TaskKey, TaskSpec};

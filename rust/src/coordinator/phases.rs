@@ -46,7 +46,7 @@ use crate::he_agg::{selective, EncryptedUpdate, EncryptionMask, SelectiveCodec};
 use crate::netsim::{concurrent_arrivals, SimClock};
 use crate::runtime::Runtime;
 use crate::transport::{
-    ClientSession, DownBegin, IntakeConfig, RoundDownlink, SessionHub, SessionOpts, UpdateShape,
+    ClientSession, DownBegin, IntakeConfig, RoundDownlink, SessionOpts, TransportHub, UpdateShape,
     MASK_ROUND, UNIDENTIFIED_CLIENT,
 };
 use std::collections::{HashMap, HashSet};
@@ -81,7 +81,7 @@ pub enum Uplink<'h> {
     Sim,
     /// Persistent TCP sessions: arrivals come off the hub's per-session
     /// readers, stamped with measured wall-clock times.
-    Hub(&'h SessionHub),
+    Hub(&'h TransportHub),
 }
 
 /// Context for the mask-agreement phase.
@@ -246,13 +246,13 @@ impl Participant for SimParticipant<'_> {
 /// Remote participant: a persistent-session peer. Downlinks are real
 /// frames pushed through the hub; uploads arrive via the hub's collector.
 pub struct RemoteParticipant<'h> {
-    hub: &'h SessionHub,
+    hub: &'h TransportHub,
     id: u64,
     alpha: f64,
 }
 
 impl<'h> RemoteParticipant<'h> {
-    pub fn new(hub: &'h SessionHub, id: u64, alpha: f64) -> Self {
+    pub fn new(hub: &'h TransportHub, id: u64, alpha: f64) -> Self {
         RemoteParticipant { hub, id, alpha }
     }
 }
@@ -284,7 +284,7 @@ impl Participant for RemoteParticipant<'_> {
     }
 
     /// Per-client round push. NOTE: the per-round Broadcast and Finale
-    /// phases batch the whole cohort through `SessionHub::broadcast_round`
+    /// phases batch the whole cohort through `TransportHub::broadcast_round`
     /// instead (the shared aggregate is serialized once); this per-client
     /// entry exists for targeted pushes — e.g. a future mid-round downlink
     /// replay to a rejoined client.
@@ -737,7 +737,7 @@ fn phase_collect_sim(
 fn phase_collect_hub(
     srv: &FlServer,
     st: &mut RoundState,
-    hub: &SessionHub,
+    hub: &TransportHub,
     round: usize,
     plan: &BroadcastPlan,
     rm: &mut RoundMetrics,

@@ -18,7 +18,7 @@
 //!   key file (DESIGN.md §9). Same phases, same bytes, bitwise-identical
 //!   final model for the same seed.
 
-use super::config::{Backend, FlConfig, KeyMode, Transport, WireAuth};
+use super::config::{Backend, FlConfig, KeyMode, Transport, TransportBackend, WireAuth};
 use super::key_authority::KeyMaterial;
 use super::phases::{self, Participant, RemoteParticipant, SimParticipant, Uplink};
 use super::taskkey::{TaskKey, TaskSpec};
@@ -29,9 +29,35 @@ use crate::fl::{SyntheticClient, SyntheticModel, SYNTHETIC_MODEL};
 use crate::he_agg::xla::XlaAggregator;
 use crate::he_agg::{native, selective, EncryptedUpdate, EncryptionMask, SelectiveCodec};
 use crate::runtime::Runtime;
-use crate::transport::{SessionHub, SessionOpts};
+use crate::transport::{ReactorHub, SessionHub, SessionOpts, TransportHub};
 use crate::util::json::Json;
 use std::time::Duration;
+
+/// Bind the selected server-side session backend (`--transport-backend`):
+/// both serve the identical wire protocol, so everything downstream of
+/// this call is backend-agnostic.
+fn bind_transport_hub(
+    backend: TransportBackend,
+    addr: &str,
+    params: std::sync::Arc<crate::ckks::CkksParams>,
+    max_sessions: usize,
+    auth_root: Option<[u8; 32]>,
+) -> anyhow::Result<TransportHub> {
+    Ok(match backend {
+        TransportBackend::Threads => TransportHub::Threads(SessionHub::bind_with_auth(
+            addr,
+            params,
+            max_sessions,
+            auth_root,
+        )?),
+        TransportBackend::Hub => TransportHub::Reactor(ReactorHub::bind_with_auth(
+            addr,
+            params,
+            max_sessions,
+            auth_root,
+        )?),
+    })
+}
 
 /// Crypto context used by the artifact-free `synthetic` model when no
 /// `--n/--limbs` override is given: modest (fast CI smoke) but real RNS.
@@ -447,12 +473,14 @@ impl<'a> FlServer<'a> {
         let pk = pk.clone();
         let sk = sk.clone();
         let mac_root = self.draw_mac_root()?;
-        let mut hub = SessionHub::bind_with_auth(
+        let mut hub = bind_transport_hub(
+            cfg.transport_backend,
             &cfg.listen,
             self.codec.ctx.params.clone(),
             cfg.clients * 2 + 8,
             mac_root,
         )?;
+        crate::log_debug!("server", "transport backend: {}", hub.backend_name());
         let addr = match &cfg.connect {
             Some(a) => a.clone(),
             None => hub.local_addr()?.to_string(),
@@ -563,7 +591,8 @@ impl<'a> FlServer<'a> {
         // key file first, then listen: a join process that sees the file
         // can immediately dial (with connect retry) without racing the bind
         task_key.save(&opts.task_key)?;
-        let mut hub = SessionHub::bind_with_auth(
+        let mut hub = bind_transport_hub(
+            cfg.transport_backend,
             &cfg.listen,
             self.codec.ctx.params.clone(),
             cfg.clients * 2 + 8,

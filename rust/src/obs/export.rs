@@ -14,8 +14,12 @@ use std::time::Duration;
 /// (v2: NTT kernel-dispatch counters and run-aware packing slot gauges
 /// joined the metrics snapshot. v3: wire-auth and chaos counters —
 /// `auth_rejects`, `replay_rejects`, `chaos_injected` — joined the
-/// snapshot alongside the challenge/challenge_resp frame kinds.)
-pub const REPORT_SCHEMA_VERSION: u64 = 3;
+/// snapshot alongside the challenge/challenge_resp frame kinds. v4:
+/// reactor-backend hub gauges — `hub_wakeups`, `hub_partial_reads`,
+/// `hub_active_sessions`, `hub_sessions_peak`, `hub_shard_sessions`,
+/// `hub_write_queue_depth`, `hub_write_queue_peak` — joined the
+/// snapshot.)
+pub const REPORT_SCHEMA_VERSION: u64 = 4;
 
 /// Identifier stamped into the `--report-json` envelope.
 pub const REPORT_SCHEMA_NAME: &str = "fedml-he/run-report";

@@ -48,6 +48,10 @@ pub const FRAME_KIND_NAMES: [&str; N_FRAME_KINDS] = [
 /// in `[2^i, 2^{i+1})` ns, so 40 buckets span 1 ns to ~18 minutes.
 pub const HIST_BUCKETS: usize = 40;
 
+/// Most intake shards the reactor hub will run (and the fixed width of the
+/// per-shard session counters exported as `hub_shard_sessions`).
+pub const MAX_HUB_SHARDS: usize = 16;
+
 #[allow(clippy::declare_interior_mutable_const)]
 const ZERO: AtomicU64 = AtomicU64::new(0);
 
@@ -209,6 +213,11 @@ struct Registry {
     intake_offered: AtomicU64,
     intake_queue: Gauge,
     session_rtt: Histogram,
+    hub_wakeups: AtomicU64,
+    hub_partial_reads: AtomicU64,
+    hub_sessions: Gauge,
+    hub_shard_sessions: [AtomicU64; MAX_HUB_SHARDS],
+    hub_write_queue: Gauge,
 }
 
 static REGISTRY: Registry = Registry {
@@ -232,6 +241,11 @@ static REGISTRY: Registry = Registry {
     intake_offered: AtomicU64::new(0),
     intake_queue: Gauge::new(),
     session_rtt: Histogram::new(),
+    hub_wakeups: AtomicU64::new(0),
+    hub_partial_reads: AtomicU64::new(0),
+    hub_sessions: Gauge::new(),
+    hub_shard_sessions: [ZERO; MAX_HUB_SHARDS],
+    hub_write_queue: Gauge::new(),
 };
 
 /// One frame put on the wire (`kind_id` = `FrameKind as u32`).
@@ -370,6 +384,51 @@ pub fn intake_drained(n: u64) {
     REGISTRY.intake_queue.sub(n);
 }
 
+/// A parked reactor loop woken through its eventfd (command enqueued,
+/// upload settled, shutdown) rather than by socket readiness.
+#[inline]
+pub fn hub_wakeup() {
+    REGISTRY.hub_wakeups.fetch_add(1, Ordering::Relaxed);
+}
+
+/// A session frame decoder suspended mid-frame by a short read and resumed
+/// on a later readiness event (the partial-read boundary the reactor's
+/// state machines must survive; chaos leans on this path hard).
+#[inline]
+pub fn hub_partial_read() {
+    REGISTRY.hub_partial_reads.fetch_add(1, Ordering::Relaxed);
+}
+
+/// A connection adopted by reactor shard `shard` (active sessions +1).
+#[inline]
+pub fn hub_session_opened(shard: usize) {
+    REGISTRY.hub_sessions.add(1);
+    REGISTRY.hub_shard_sessions[shard.min(MAX_HUB_SHARDS - 1)]
+        .fetch_add(1, Ordering::Relaxed);
+}
+
+/// A connection closed/evicted on reactor shard `shard` (sessions −1).
+#[inline]
+pub fn hub_session_closed(shard: usize) {
+    REGISTRY.hub_sessions.sub(1);
+    let slot = &REGISTRY.hub_shard_sessions[shard.min(MAX_HUB_SHARDS - 1)];
+    let _ = slot.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+        Some(v.saturating_sub(1))
+    });
+}
+
+/// `n` bytes queued onto a shard's downlink write queue.
+#[inline]
+pub fn hub_write_enqueued(n: u64) {
+    REGISTRY.hub_write_queue.add(n);
+}
+
+/// `n` queued downlink bytes flushed to (or abandoned with) a socket.
+#[inline]
+pub fn hub_write_flushed(n: u64) {
+    REGISTRY.hub_write_queue.sub(n);
+}
+
 /// One measured session round trip (client END→ACK).
 #[inline]
 pub fn session_rtt_secs(secs: f64) {
@@ -457,6 +516,37 @@ pub fn snapshot() -> Json {
             REGISTRY.intake_queue.peak.load(Ordering::Relaxed).into(),
         ),
         ("session_rtt", REGISTRY.session_rtt.to_json()),
+        ("hub_wakeups", REGISTRY.hub_wakeups.load(Ordering::Relaxed).into()),
+        (
+            "hub_partial_reads",
+            REGISTRY.hub_partial_reads.load(Ordering::Relaxed).into(),
+        ),
+        (
+            "hub_active_sessions",
+            REGISTRY.hub_sessions.value.load(Ordering::Relaxed).into(),
+        ),
+        (
+            "hub_sessions_peak",
+            REGISTRY.hub_sessions.peak.load(Ordering::Relaxed).into(),
+        ),
+        (
+            "hub_shard_sessions",
+            Json::Arr(
+                REGISTRY
+                    .hub_shard_sessions
+                    .iter()
+                    .map(|c| c.load(Ordering::Relaxed).into())
+                    .collect(),
+            ),
+        ),
+        (
+            "hub_write_queue_depth",
+            REGISTRY.hub_write_queue.value.load(Ordering::Relaxed).into(),
+        ),
+        (
+            "hub_write_queue_peak",
+            REGISTRY.hub_write_queue.peak.load(Ordering::Relaxed).into(),
+        ),
         ("spans_recorded", spans_recorded.into()),
         ("spans_dropped", spans_dropped.into()),
     ])
@@ -508,7 +598,16 @@ pub fn reset() {
         &REGISTRY.intake_offered,
         &REGISTRY.intake_queue.value,
         &REGISTRY.intake_queue.peak,
+        &REGISTRY.hub_wakeups,
+        &REGISTRY.hub_partial_reads,
+        &REGISTRY.hub_sessions.value,
+        &REGISTRY.hub_sessions.peak,
+        &REGISTRY.hub_write_queue.value,
+        &REGISTRY.hub_write_queue.peak,
     ] {
+        c.store(0, Ordering::Relaxed);
+    }
+    for c in &REGISTRY.hub_shard_sessions {
         c.store(0, Ordering::Relaxed);
     }
     REGISTRY.session_rtt.reset();

@@ -328,8 +328,105 @@ fn read_exact_or(r: &mut impl Read, buf: &mut [u8], what: &str) -> anyhow::Resul
 
 /// Cap on consecutive auth/replay-rejected frames the reader will discard
 /// before giving up on the connection: bounds the work a flooding peer can
-/// extract while letting honest sessions ride out injected faults.
-const MAX_CONSECUTIVE_AUTH_REJECTS: usize = 4096;
+/// extract while letting honest sessions ride out injected faults. Shared
+/// with the nonblocking decoder (`transport::machine`), which enforces the
+/// same bound across `validate_wire_frame` calls.
+pub(crate) const MAX_CONSECUTIVE_AUTH_REJECTS: usize = 4096;
+
+/// Payload length a frame header declares (bytes 24..28). The caller must
+/// hand at least [`FRAME_HEADER_BYTES`]; only the length field is read —
+/// nothing else in the header is trusted until the frame validates.
+pub(crate) fn frame_declared_len(hdr: &[u8]) -> usize {
+    u32::from_le_bytes(hdr[24..28].try_into().unwrap()) as usize
+}
+
+/// Verdict of [`validate_wire_frame`] over one complete in-memory frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum WireVerdict {
+    /// Frame accepted; the payload is
+    /// `frame[FRAME_HEADER_BYTES..FRAME_HEADER_BYTES + len]`.
+    Accept { round: u64, kind: FrameKind, seq: u32 },
+    /// Authenticated frame whose MAC tag failed — counted, discard the
+    /// frame and keep the stream (framing stays aligned).
+    AuthReject,
+    /// Tag verified but the auth sequence was not strictly monotone (a
+    /// replay/duplicate) — counted, discard and keep the stream.
+    ReplayReject,
+}
+
+/// Validate one **complete** wire frame held in memory — the buffer-in
+/// twin of [`read_frame_any_round_into_with`], used by the nonblocking
+/// session hub where frames are reassembled from partial reads before
+/// validation. `frame` must span exactly header ‖ payload ‖ crc
+/// (‖ auth trailer when `auth` is armed); the decoder guarantees this by
+/// sizing the slice from the header's length field.
+///
+/// Semantics mirror the blocking reader bit for bit: the MAC is verified
+/// before any header field beyond the length is trusted, a bad tag or
+/// stale sequence is a counted soft reject (`Ok(AuthReject/ReplayReject)` —
+/// the caller discards and continues, bounding the run with
+/// [`MAX_CONSECUTIVE_AUTH_REJECTS`]), and malformed framing
+/// (magic/version/kind/crc) is a hard `Err` that kills the connection.
+pub(crate) fn validate_wire_frame(
+    frame: &[u8],
+    auth: &mut Option<RxAuth>,
+) -> anyhow::Result<WireVerdict> {
+    let reject = |msg: String| {
+        crate::obs::metrics::frame_reject();
+        anyhow::anyhow!(msg)
+    };
+    anyhow::ensure!(
+        frame.len() >= FRAME_HEADER_BYTES + FRAME_TRAILER_BYTES,
+        "truncated frame: {} bytes",
+        frame.len()
+    );
+    let hdr: &[u8; FRAME_HEADER_BYTES] = frame[..FRAME_HEADER_BYTES].try_into().unwrap();
+    let len = frame_declared_len(hdr);
+    let auth_extra = if auth.is_some() { AUTH_TRAILER_BYTES } else { 0 };
+    anyhow::ensure!(
+        frame.len() == FRAME_HEADER_BYTES + len + FRAME_TRAILER_BYTES + auth_extra,
+        "frame slice/declared-length mismatch: {} bytes for payload {len}",
+        frame.len()
+    );
+    let payload = &frame[FRAME_HEADER_BYTES..FRAME_HEADER_BYTES + len];
+    let crc_at = FRAME_HEADER_BYTES + len;
+    let crc = u32::from_le_bytes(frame[crc_at..crc_at + 4].try_into().unwrap());
+    if let Some(rx) = auth.as_mut() {
+        let trailer = &frame[crc_at + 4..];
+        let auth_seq = u32::from_le_bytes(trailer[0..4].try_into().unwrap());
+        let tag = u64::from_le_bytes(trailer[4..12].try_into().unwrap());
+        let want = crate::crypto::mac::frame_tag(&rx.key, rx.dir, auth_seq, hdr, payload, crc);
+        if tag != want {
+            crate::obs::metrics::auth_reject();
+            return Ok(WireVerdict::AuthReject);
+        }
+        if auth_seq <= rx.last {
+            crate::obs::metrics::replay_reject();
+            return Ok(WireVerdict::ReplayReject);
+        }
+        rx.last = auth_seq;
+    }
+    let magic = u32::from_le_bytes(hdr[0..4].try_into().unwrap());
+    if magic != FRAME_MAGIC {
+        return Err(reject(format!("bad frame magic {magic:#010x}")));
+    }
+    let version = u32::from_le_bytes(hdr[4..8].try_into().unwrap());
+    if version != PROTOCOL_VERSION {
+        return Err(reject(format!(
+            "protocol version skew: got {version}, expected {PROTOCOL_VERSION}"
+        )));
+    }
+    let round = u64::from_le_bytes(hdr[8..16].try_into().unwrap());
+    let kind = FrameKind::from_u32(u32::from_le_bytes(hdr[16..20].try_into().unwrap()))
+        .map_err(|e| reject(e.to_string()))?;
+    let seq = u32::from_le_bytes(hdr[20..24].try_into().unwrap());
+    if crc != crc32(payload) {
+        crate::obs::metrics::crc_reject();
+        anyhow::bail!("frame crc mismatch");
+    }
+    crate::obs::metrics::frame_received(kind as u32, frame.len() as u64);
+    Ok(WireVerdict::Accept { round, kind, seq })
+}
 
 /// Read one frame of **any** round into a caller-pooled buffer, returning
 /// `(round, kind, seq)` — the round-flexible core used by the mid-round
@@ -828,6 +925,56 @@ mod tests {
         let (c, t) = decode_challenge_resp(&encode_challenge_resp(7, 0xdead_beef_cafe)).unwrap();
         assert_eq!((c, t), (7, 0xdead_beef_cafe));
         assert!(decode_challenge_resp(&[0u8; 17]).is_err());
+    }
+
+    #[test]
+    fn validate_wire_frame_mirrors_the_blocking_reader() {
+        // accept path: the buffer-in validator agrees with the stream reader
+        let (mut tx, mut rx) = auth_pair();
+        let mut wire = Vec::new();
+        write_frame_with(&mut wire, 9, FrameKind::CtChunk, 4, &[7u8; 48], &mut tx).unwrap();
+        let verdict = validate_wire_frame(&wire, &mut rx).unwrap();
+        assert_eq!(
+            verdict,
+            WireVerdict::Accept { round: 9, kind: FrameKind::CtChunk, seq: 4 }
+        );
+        assert_eq!(&wire[FRAME_HEADER_BYTES..FRAME_HEADER_BYTES + 48], &[7u8; 48]);
+
+        // a replayed frame is a soft reject (stream survives)...
+        let before = crate::obs::metrics::snapshot_replay_rejects();
+        assert_eq!(
+            validate_wire_frame(&wire, &mut rx).unwrap(),
+            WireVerdict::ReplayReject
+        );
+        assert!(crate::obs::metrics::snapshot_replay_rejects() > before);
+
+        // ...as is a forged tag (every non-length byte flip)
+        let mut forged = wire.clone();
+        let last = forged.len() - 1;
+        forged[last] ^= 0x80;
+        let before = crate::obs::metrics::snapshot_auth_rejects();
+        assert_eq!(
+            validate_wire_frame(&forged, &mut rx).unwrap(),
+            WireVerdict::AuthReject
+        );
+        assert!(crate::obs::metrics::snapshot_auth_rejects() > before);
+
+        // unauthenticated path: corruption is a hard error, never a panic
+        let mut plain = Vec::new();
+        write_frame(&mut plain, 5, FrameKind::Plain, 0, &[3u8; 16]).unwrap();
+        assert!(matches!(
+            validate_wire_frame(&plain, &mut None).unwrap(),
+            WireVerdict::Accept { round: 5, kind: FrameKind::Plain, seq: 0 }
+        ));
+        let mut bad = plain.clone();
+        bad[0] ^= 0xFF; // magic
+        assert!(validate_wire_frame(&bad, &mut None).is_err());
+        let mut bad = plain.clone();
+        bad[FRAME_HEADER_BYTES] ^= 1; // payload byte → crc mismatch
+        assert!(validate_wire_frame(&bad, &mut None).is_err());
+        // truncated / inconsistent slices are hard errors too
+        assert!(validate_wire_frame(&plain[..10], &mut None).is_err());
+        assert!(validate_wire_frame(&plain[..plain.len() - 1], &mut None).is_err());
     }
 
     #[test]

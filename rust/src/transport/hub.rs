@@ -1,0 +1,1428 @@
+//! Event-driven session hub: the sharded epoll reactor backend of
+//! DESIGN.md §13.
+//!
+//! [`super::session::SessionHub`] pins one OS thread (plus a stack and a
+//! blocking frame buffer) per connected client — robust, but a 5,000-client
+//! round costs 5,000 parked threads. [`ReactorHub`] serves the identical
+//! wire protocol from a fixed pool: one accept thread plus N intake shards,
+//! each owning an epoll set, a scratch read buffer, and the nonblocking
+//! [`super::machine::SessionMachine`] state machines of the sessions it
+//! adopted. Protocol logic (handshake, `--wire-auth mac`
+//! challenge/response, chunk reassembly, auth/replay verification) lives
+//! entirely in the machines; the shards only move bytes at readiness
+//! boundaries, so partial reads and partial writes — including chaos-split
+//! frames — fall out of the same code path as clean ones.
+//!
+//! Cross-thread coordination is deliberately boring: each shard has a
+//! command queue (`Mutex<VecDeque>` + eventfd wakeup), round collection
+//! hands completed uploads to the coordinator thread over a condvar-parked
+//! event queue, and downlink broadcasts fan out as per-shard write jobs
+//! with a completion latch. The registry (client → shard seat) and the
+//! downlink replay cache sit behind one `tables` mutex shared with the
+//! facade.
+//!
+//! Backend selection is the coordinator's `--transport-backend
+//! {threads,hub}` (default `threads`); both backends produce bitwise-
+//! identical final models because aggregation is exact modular arithmetic
+//! over the same accepted-participant set — only the scheduling of socket
+//! I/O differs. [`TransportHub`] is the enum facade the coordinator drives
+//! so round phases stay backend-agnostic.
+
+use super::frame::{
+    encode_challenge, encode_welcome, frame_payload_cap, write_frame, write_frame_with, DownBegin,
+    FrameKind, TxAuth, CONTROL_ROUND, MASK_ROUND,
+};
+use super::intake::{IntakeConfig, IntakeOutcome, RoundLedger, UpdateShape, UploadFrames};
+use super::machine::{RoundCtx, SessionMachine, Step};
+use super::reactor::{Event, Poller, Wakeup};
+use super::session::{
+    encode_agg_payloads, write_replay, write_round_frames, DownlinkCache, DownlinkOutcome,
+    RoundReplay, RoundSnapshot, SessionHub,
+};
+use crate::ckks::CkksParams;
+use crate::crypto::prng::ChaChaRng;
+use crate::he_agg::EncryptedUpdate;
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::fd::AsRawFd;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Poller token of a shard's command wakeup fd (connection tokens are slot
+/// indexes, which can never reach this).
+const WAKE_TOKEN: u64 = u64::MAX;
+
+/// How many shard threads to run: `FEDML_HE_HUB_SHARDS` when set (clamped
+/// to `1..=MAX_HUB_SHARDS`), else the machine's parallelism clamped to a
+/// small default band.
+fn shard_count() -> usize {
+    if let Ok(v) = std::env::var("FEDML_HE_HUB_SHARDS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.clamp(1, crate::obs::metrics::MAX_HUB_SHARDS);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(2)
+        .clamp(2, 8)
+}
+
+/// A client's registry seat: which shard owns its connection and the
+/// connection's admission generation (a rejoin bumps the generation, so a
+/// late kill or broadcast aimed at the dead connection cannot hit the
+/// fresh one).
+#[derive(Clone, Copy)]
+struct Seat {
+    shard: usize,
+    generation: u64,
+}
+
+/// Registry + downlink replay cache, behind one lock shared by the shards
+/// (registration, teardown) and the facade (broadcast targeting, waits).
+#[derive(Default)]
+struct HubTables {
+    registry: HashMap<u64, Seat>,
+    downlink: DownlinkCache,
+}
+
+/// One shard's inbound command lane.
+struct ShardLink {
+    cmds: Mutex<VecDeque<Cmd>>,
+    wake: Wakeup,
+}
+
+/// What the facade/accept thread asks a shard to do.
+enum Cmd {
+    /// Adopt a freshly-accepted connection (nonce pre-drawn so the shard
+    /// never blocks on OS entropy).
+    Adopt {
+        stream: TcpStream,
+        nonce: [u8; 16],
+        generation: u64,
+    },
+    /// Enqueue one downlink payload to each listed resident session and
+    /// report into `job` as the bytes actually flush.
+    Broadcast {
+        job: Arc<BroadcastJob>,
+        targets: Vec<BroadcastTarget>,
+    },
+    /// Close the connection currently holding `client` **iff** it is still
+    /// the `generation` the sender observed (rejoin replacement, explicit
+    /// drops).
+    Kill { client: u64, generation: u64 },
+    /// Close every connection and exit the shard thread.
+    Shutdown,
+}
+
+struct BroadcastTarget {
+    client: u64,
+    generation: u64,
+    payload: BroadcastPayload,
+}
+
+enum BroadcastPayload {
+    /// MASK frame at [`MASK_ROUND`].
+    Mask(Arc<Vec<u8>>),
+    /// Round downlink preamble + (shared, pre-encoded) aggregate payloads.
+    Round {
+        round: u64,
+        down: DownBegin,
+        payloads: Option<(Arc<Vec<Vec<u8>>>, Arc<Vec<Vec<u8>>>)>,
+    },
+}
+
+/// Completion latch of one broadcast: every target ends as exactly one
+/// `complete` (its frames fully flushed to the socket) or one `fail`.
+struct BroadcastJob {
+    state: Mutex<JobState>,
+    done: Condvar,
+}
+
+struct JobState {
+    pending: usize,
+    bytes: u64,
+    failed: Vec<u64>,
+}
+
+impl BroadcastJob {
+    fn new(pending: usize) -> Self {
+        BroadcastJob {
+            state: Mutex::new(JobState {
+                pending,
+                bytes: 0,
+                failed: Vec::new(),
+            }),
+            done: Condvar::new(),
+        }
+    }
+
+    fn complete(&self, bytes: u64) {
+        let mut st = self.state.lock().unwrap();
+        st.pending -= 1;
+        st.bytes += bytes;
+        if st.pending == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn fail(&self, client: u64) {
+        let mut st = self.state.lock().unwrap();
+        st.pending -= 1;
+        st.failed.push(client);
+        if st.pending == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn wait(&self) -> (u64, Vec<u64>) {
+        let mut st = self.state.lock().unwrap();
+        while st.pending > 0 {
+            st = self.done.wait(st).unwrap();
+        }
+        (st.bytes, std::mem::take(&mut st.failed))
+    }
+}
+
+/// One armed collection round, shared between the facade's collector loop
+/// and every shard.
+struct RoundSpec {
+    round_id: u64,
+    shape: UpdateShape,
+    /// Expected uploader → server-assigned FedAvg weight.
+    expect: HashMap<u64, Option<f64>>,
+    /// When the round was armed — an engaged connection's idle clock
+    /// starts here, not at its (possibly much earlier) adoption.
+    opened: Instant,
+    deadline: Instant,
+    /// Per-upload inactivity bound for engaged connections.
+    io_timeout: Duration,
+    /// Mirrored from the ledger once a quorum lands: shards close
+    /// stragglers against `min(cutoff, deadline)`.
+    cutoff: Mutex<Option<Instant>>,
+    /// Clients whose upload already completed this round — their later
+    /// frames stay unparsed in kernel/decoder buffers, exactly like the
+    /// blocking collector's settled slots.
+    done: Mutex<HashSet<u64>>,
+    events: Mutex<VecDeque<RoundEvent>>,
+    bell: Condvar,
+}
+
+impl RoundSpec {
+    fn closing(&self) -> Instant {
+        let cutoff = *self.cutoff.lock().unwrap();
+        cutoff.map_or(self.deadline, |c| c.min(self.deadline))
+    }
+
+    fn push_event(&self, ev: RoundEvent) {
+        self.events.lock().unwrap().push_back(ev);
+        self.bell.notify_all();
+    }
+}
+
+enum RoundEvent {
+    /// A complete, validated upload (already ACKed on its session).
+    Upload {
+        frames: Box<UploadFrames>,
+        wire_bytes: u64,
+    },
+    /// An engaged session died before completing its upload. Transient —
+    /// the client may rejoin and still land; terminal failures are settled
+    /// against the ledger only at seal time.
+    Failed { client: u64, wire_bytes: u64 },
+}
+
+/// Pop the next round event, parking on the bell at most `timeout`.
+fn next_event(spec: &RoundSpec, timeout: Duration) -> Option<RoundEvent> {
+    let mut q = spec.events.lock().unwrap();
+    if let Some(ev) = q.pop_front() {
+        return Some(ev);
+    }
+    let (mut q, _timed_out) = spec.bell.wait_timeout(q, timeout).unwrap();
+    q.pop_front()
+}
+
+/// State shared by the accept thread, every shard, and the facade.
+struct ReactorShared {
+    listener: TcpListener,
+    params: Arc<CkksParams>,
+    auth_root: Option<[u8; 32]>,
+    /// Handshake/write-stall inactivity bound (engaged uploads use the
+    /// armed round's own `io_timeout` instead).
+    io_timeout: Duration,
+    max_sessions: usize,
+    next_round: AtomicU64,
+    stop: AtomicBool,
+    /// Monotone connection-admission counter (seat generations).
+    generations: AtomicU64,
+    /// Interrupts the accept thread's epoll park (shutdown).
+    accept_wake: Wakeup,
+    links: Vec<ShardLink>,
+    round: Mutex<Option<Arc<RoundSpec>>>,
+    tables: Mutex<HubTables>,
+    /// Signaled on every registration — `wait_for_clients` parks here with
+    /// the `tables` lock.
+    joined: Condvar,
+}
+
+fn send_to(shared: &ReactorShared, shard: usize, cmd: Cmd) {
+    shared.links[shard].cmds.lock().unwrap().push_back(cmd);
+    shared.links[shard].wake.wake();
+}
+
+/// A broadcast whose frames have been queued but not yet fully written.
+struct FlushMark {
+    /// `Conn::out` high-water mark this broadcast's frames end at.
+    end: usize,
+    /// Frame bytes this broadcast contributed (reported on completion).
+    bytes: u64,
+    client: u64,
+    job: Arc<BroadcastJob>,
+}
+
+/// One shard-owned connection.
+struct Conn {
+    stream: TcpStream,
+    /// Slot index == poller token.
+    token: u64,
+    generation: u64,
+    machine: SessionMachine,
+    /// Downlink frame authenticator, armed when the handshake proof lands.
+    tx: Option<TxAuth>,
+    /// Pending outbound bytes (`out[sent..]` still to write).
+    out: Vec<u8>,
+    sent: usize,
+    marks: VecDeque<FlushMark>,
+    idle_since: Instant,
+    /// A STATS probe: close as soon as the reply drains.
+    close_after_flush: bool,
+    /// Current epoll interest, to skip redundant `modify` calls.
+    want_read: bool,
+    want_write: bool,
+}
+
+impl Conn {
+    fn flush_pending(&self) -> bool {
+        self.sent < self.out.len()
+    }
+}
+
+/// One reactor shard: an epoll set plus the sessions it adopted.
+struct Shard {
+    idx: usize,
+    shared: Arc<ReactorShared>,
+    poller: Poller,
+    conns: Vec<Option<Conn>>,
+    free: Vec<usize>,
+    by_client: HashMap<u64, usize>,
+    /// Pooled socket read buffer (per shard, not per session).
+    scratch: Vec<u8>,
+    /// Frame payload cap under the task's params (decoder bound).
+    cap: usize,
+}
+
+impl Shard {
+    fn run(mut self) {
+        let mut events: Vec<Event> = Vec::new();
+        loop {
+            let mut cmds: VecDeque<Cmd> = {
+                let mut q = self.shared.links[self.idx].cmds.lock().unwrap();
+                q.drain(..).collect()
+            };
+            while let Some(cmd) = cmds.pop_front() {
+                if matches!(cmd, Cmd::Shutdown) {
+                    self.close_all("hub shutdown");
+                    // fail any broadcasts queued behind the shutdown so
+                    // their jobs cannot hang the facade
+                    for cmd in cmds {
+                        if let Cmd::Broadcast { job, targets } = cmd {
+                            for t in targets {
+                                job.fail(t.client);
+                            }
+                        }
+                    }
+                    return;
+                }
+                self.handle_cmd(cmd);
+            }
+            if self
+                .poller
+                .wait(&mut events, Some(Duration::from_millis(50)))
+                .is_err()
+            {
+                self.close_all("reactor poll failed");
+                return;
+            }
+            for i in 0..events.len() {
+                let ev = events[i];
+                if ev.token == WAKE_TOKEN {
+                    crate::obs::metrics::hub_wakeup();
+                    self.shared.links[self.idx].wake.drain();
+                } else {
+                    self.drive(ev.token as usize, ev.readable || ev.closed, ev.writable);
+                }
+            }
+            self.sweep();
+        }
+    }
+
+    fn current_spec(&self) -> Option<Arc<RoundSpec>> {
+        self.shared.round.lock().unwrap().clone()
+    }
+
+    fn handle_cmd(&mut self, cmd: Cmd) {
+        match cmd {
+            Cmd::Adopt {
+                stream,
+                nonce,
+                generation,
+            } => self.adopt(stream, nonce, generation),
+            Cmd::Broadcast { job, targets } => self.handle_broadcast(&job, targets),
+            Cmd::Kill { client, generation } => {
+                let slot = (0..self.conns.len()).find(|&s| {
+                    self.conns[s].as_ref().is_some_and(|c| {
+                        c.machine.client() == Some(client) && c.generation == generation
+                    })
+                });
+                if let Some(slot) = slot {
+                    let conn = self.conns[slot].take().unwrap();
+                    self.kill(conn, "replaced by a rejoin");
+                }
+            }
+            Cmd::Shutdown => unreachable!("handled in run()"),
+        }
+    }
+
+    fn adopt(&mut self, stream: TcpStream, nonce: [u8; 16], generation: u64) {
+        let slot = self.free.pop().unwrap_or_else(|| {
+            self.conns.push(None);
+            self.conns.len() - 1
+        });
+        let fd = stream.as_raw_fd();
+        let conn = Conn {
+            stream,
+            token: slot as u64,
+            generation,
+            machine: SessionMachine::new(self.cap, self.shared.auth_root, nonce),
+            tx: None,
+            out: Vec::new(),
+            sent: 0,
+            marks: VecDeque::new(),
+            idle_since: Instant::now(),
+            close_after_flush: false,
+            want_read: true,
+            want_write: false,
+        };
+        if self.poller.add(fd, slot as u64, true, false).is_err() {
+            // registration failed: drop the connection (socket closes), keep the slot
+            self.free.push(slot);
+            return;
+        }
+        self.conns[slot] = Some(conn);
+        crate::obs::metrics::hub_session_opened(self.idx);
+    }
+
+    fn handle_broadcast(&mut self, job: &Arc<BroadcastJob>, targets: Vec<BroadcastTarget>) {
+        for t in targets {
+            let Some(slot) = self.by_client.get(&t.client).copied() else {
+                job.fail(t.client);
+                continue;
+            };
+            let Some(mut conn) = self.conns.get_mut(slot).and_then(|c| c.take()) else {
+                job.fail(t.client);
+                continue;
+            };
+            if conn.generation != t.generation || conn.machine.client() != Some(t.client) {
+                self.conns[slot] = Some(conn);
+                job.fail(t.client);
+                continue;
+            }
+            match enqueue_payload(&mut conn, &t.payload) {
+                Ok(bytes) => {
+                    conn.marks.push_back(FlushMark {
+                        end: conn.out.len(),
+                        bytes,
+                        client: t.client,
+                        job: job.clone(),
+                    });
+                    crate::obs::metrics::hub_write_enqueued(bytes);
+                    match self.flush(&mut conn) {
+                        Ok(()) => self.conns[slot] = Some(conn),
+                        Err(reason) => self.kill(conn, &reason),
+                    }
+                }
+                Err(e) => {
+                    job.fail(t.client);
+                    self.kill(conn, &format!("downlink enqueue failed: {e}"));
+                }
+            }
+        }
+    }
+
+    /// Drive one connection through a readiness edge: take it out of its
+    /// slot, run the nonblocking I/O + state machine, and either put it
+    /// back or tear it down.
+    fn drive(&mut self, slot: usize, readable: bool, writable: bool) {
+        let Some(mut conn) = self.conns.get_mut(slot).and_then(|c| c.take()) else {
+            return;
+        };
+        match self.drive_inner(&mut conn, readable, writable) {
+            Ok(()) => self.conns[slot] = Some(conn),
+            Err(reason) => self.kill(conn, &reason),
+        }
+    }
+
+    fn drive_inner(&mut self, conn: &mut Conn, readable: bool, writable: bool) -> Result<(), String> {
+        let mut eof: Option<String> = None;
+        if readable {
+            // bounded read burst: fairness across the shard's sessions, and
+            // a decoder already holding > 2 frames of bytes stops pulling —
+            // the kernel buffer (and ultimately the client's send timeout)
+            // carries the backpressure
+            for _ in 0..8 {
+                if conn.machine.buffered() > self.cap * 2 {
+                    break;
+                }
+                match conn.stream.read(&mut self.scratch) {
+                    Ok(0) => {
+                        eof = Some("connection closed by peer".into());
+                        break;
+                    }
+                    Ok(n) => {
+                        conn.idle_since = Instant::now();
+                        conn.machine.push(&self.scratch[..n]);
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(e) => {
+                        eof = Some(format!("read failed: {e}"));
+                        break;
+                    }
+                }
+            }
+        }
+        // always advance: buffered bytes may have become actionable even
+        // without new socket data (e.g. a round just armed)
+        self.advance_machine(conn)?;
+        if let Some(reason) = eof {
+            return Err(reason);
+        }
+        if writable || conn.flush_pending() {
+            self.flush(conn)?;
+        }
+        Ok(())
+    }
+
+    /// Pump the session state machine until it runs out of actionable
+    /// frames, performing each emitted protocol step.
+    fn advance_machine(&mut self, conn: &mut Conn) -> Result<(), String> {
+        let params = self.shared.params.clone();
+        loop {
+            if conn.close_after_flush {
+                return Ok(());
+            }
+            let spec = self.current_spec();
+            let step = {
+                let eligible = match (&spec, conn.machine.client()) {
+                    (Some(s), Some(c)) => {
+                        s.expect.contains_key(&c) && !s.done.lock().unwrap().contains(&c)
+                    }
+                    _ => false,
+                };
+                let ctx = if eligible {
+                    let s = spec.as_ref().unwrap();
+                    let c = conn.machine.client().unwrap();
+                    Some(RoundCtx {
+                        round_id: s.round_id,
+                        shape: s.shape,
+                        expect_alpha: s.expect.get(&c).copied().flatten(),
+                        params: &params,
+                    })
+                } else {
+                    None
+                };
+                match conn.machine.poll(ctx.as_ref()) {
+                    Ok(step) => step,
+                    Err(e) => return Err(format!("protocol error: {e}")),
+                }
+            };
+            match step {
+                None => return Ok(()),
+                Some(step) => self.on_step(conn, step, spec.as_deref())?,
+            }
+        }
+    }
+
+    fn on_step(&mut self, conn: &mut Conn, step: Step, spec: Option<&RoundSpec>) -> Result<(), String> {
+        match step {
+            Step::Stats => {
+                let snap = crate::obs::metrics::snapshot().to_string();
+                let sent =
+                    write_frame(&mut conn.out, CONTROL_ROUND, FrameKind::StatsReply, 0, snap.as_bytes())
+                        .map_err(|e| format!("stats reply enqueue failed: {e}"))?;
+                crate::obs::metrics::hub_write_enqueued(sent);
+                conn.close_after_flush = true;
+                Ok(())
+            }
+            Step::Challenge { nonce } => {
+                let sent = write_frame(
+                    &mut conn.out,
+                    CONTROL_ROUND,
+                    FrameKind::Challenge,
+                    0,
+                    &encode_challenge(&nonce),
+                )
+                .map_err(|e| format!("challenge enqueue failed: {e}"))?;
+                crate::obs::metrics::hub_write_enqueued(sent);
+                Ok(())
+            }
+            Step::Register { client, tx } => self.register(conn, client, tx),
+            Step::Upload { frames } => {
+                let Some(spec) = spec else {
+                    return Err("upload step with no armed round".into());
+                };
+                // settle the client *before* the collector sees the event,
+                // so a pipelined second upload stays unparsed
+                spec.done.lock().unwrap().insert(frames.client);
+                let wire = conn.machine.take_wire_bytes();
+                let sent = write_frame_with(
+                    &mut conn.out,
+                    spec.round_id,
+                    FrameKind::Ack,
+                    0,
+                    &0u32.to_le_bytes(),
+                    &mut conn.tx,
+                )
+                .map_err(|e| format!("ack enqueue failed: {e}"))?;
+                crate::obs::metrics::hub_write_enqueued(sent);
+                spec.push_event(RoundEvent::Upload {
+                    frames,
+                    wire_bytes: wire,
+                });
+                Ok(())
+            }
+        }
+    }
+
+    /// Claim `client`'s registry seat and enqueue WELCOME plus any
+    /// mid-round downlink replay — the nonblocking twin of the blocking
+    /// hub's handshake registration, with identical replay semantics.
+    fn register(&mut self, conn: &mut Conn, client: u64, tx: Option<TxAuth>) -> Result<(), String> {
+        conn.tx = tx;
+        let (mask, round, next): (Option<Vec<u8>>, Option<RoundReplay>, u64) = {
+            let mut tables = self.shared.tables.lock().unwrap();
+            if !tables.registry.contains_key(&client)
+                && tables.registry.len() >= self.shared.max_sessions
+            {
+                return Err(format!(
+                    "session registry full ({} slots)",
+                    self.shared.max_sessions
+                ));
+            }
+            let prev = tables.registry.insert(
+                client,
+                Seat {
+                    shard: self.idx,
+                    generation: conn.generation,
+                },
+            );
+            if let Some(old) = prev {
+                crate::obs::metrics::rejoin();
+                send_to(&self.shared, old.shard, Cmd::Kill {
+                    client,
+                    generation: old.generation,
+                });
+            }
+            let (mask, round) = tables.downlink.replay_for(client);
+            (mask, round, self.shared.next_round.load(Ordering::Relaxed))
+        };
+        self.shared.joined.notify_all();
+        self.by_client.insert(client, conn.token as usize);
+        let mut sent = write_frame_with(
+            &mut conn.out,
+            CONTROL_ROUND,
+            FrameKind::Welcome,
+            0,
+            &encode_welcome(next),
+            &mut conn.tx,
+        )
+        .map_err(|e| format!("welcome enqueue failed: {e}"))?;
+        sent += write_replay(&mut conn.out, &mask, &round, &mut conn.tx)
+            .map_err(|e| format!("replay enqueue failed: {e}"))?;
+        crate::obs::metrics::hub_write_enqueued(sent);
+        Ok(())
+    }
+
+    /// Nonblocking write of whatever is queued; completes flush marks as
+    /// their bytes clear the socket.
+    fn flush(&self, conn: &mut Conn) -> Result<(), String> {
+        while conn.sent < conn.out.len() {
+            match conn.stream.write(&conn.out[conn.sent..]) {
+                Ok(0) => return Err("write stalled".into()),
+                Ok(n) => {
+                    conn.sent += n;
+                    conn.idle_since = Instant::now();
+                    crate::obs::metrics::hub_write_flushed(n as u64);
+                    while conn.marks.front().is_some_and(|m| m.end <= conn.sent) {
+                        let mark = conn.marks.pop_front().unwrap();
+                        mark.job.complete(mark.bytes);
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(format!("write failed: {e}")),
+            }
+        }
+        if conn.sent == conn.out.len() && !conn.out.is_empty() {
+            conn.out.clear();
+            conn.sent = 0;
+            if conn.close_after_flush {
+                // quiet teardown: the stats probe got its reply
+                return Err("stats reply delivered".into());
+            }
+        }
+        Ok(())
+    }
+
+    /// Deadline enforcement + epoll interest reconciliation, run once per
+    /// reactor tick.
+    fn sweep(&mut self) {
+        let spec = self.current_spec();
+        let now = Instant::now();
+        let mut stale: Vec<usize> = Vec::new();
+        for slot in 0..self.conns.len() {
+            let (reason, want_read, want_write, stale_buffer, cur_read, cur_write) = {
+                let Some(conn) = self.conns[slot].as_ref() else {
+                    continue;
+                };
+                let client = conn.machine.client();
+                let engaged = match (&spec, client) {
+                    (Some(s), Some(c)) => {
+                        s.expect.contains_key(&c) && !s.done.lock().unwrap().contains(&c)
+                    }
+                    _ => false,
+                };
+                let handshaking = client.is_none() && !conn.close_after_flush;
+                let write_pending = conn.flush_pending();
+                let reason: Option<&'static str> = if engaged {
+                    let s = spec.as_ref().unwrap();
+                    // an adopted-long-ago connection is idle relative to
+                    // the round arming, not its own (ancient) last byte
+                    let idle_ref = conn.idle_since.max(s.opened);
+                    if now.saturating_duration_since(idle_ref) >= s.io_timeout {
+                        Some("upload idle past the io timeout")
+                    } else if now >= s.closing() {
+                        Some("round closed before the upload completed")
+                    } else {
+                        None
+                    }
+                } else if (handshaking || write_pending)
+                    && now.saturating_duration_since(conn.idle_since) >= self.shared.io_timeout
+                {
+                    Some("idle past the io timeout")
+                } else if spec.is_none() && conn.machine.mid_upload() {
+                    // round torn down with this upload incomplete — the
+                    // ledger has already settled it as failed/straggler
+                    Some("mid-upload at round teardown")
+                } else {
+                    None
+                };
+                let want_read = !conn.close_after_flush && (client.is_none() || engaged);
+                (
+                    reason,
+                    want_read,
+                    write_pending,
+                    engaged && conn.machine.buffered() > 0,
+                    conn.want_read,
+                    conn.want_write,
+                )
+            };
+            if let Some(reason) = reason {
+                let conn = self.conns[slot].take().unwrap();
+                self.kill(conn, reason);
+                continue;
+            }
+            if want_read != cur_read || want_write != cur_write {
+                if let Some(conn) = self.conns[slot].as_mut() {
+                    if self
+                        .poller
+                        .modify(conn.stream.as_raw_fd(), slot as u64, want_read, want_write)
+                        .is_ok()
+                    {
+                        conn.want_read = want_read;
+                        conn.want_write = want_write;
+                    }
+                }
+            }
+            if stale_buffer {
+                stale.push(slot);
+            }
+        }
+        // frames buffered before a round armed produce no socket event —
+        // pump those machines now that they are eligible
+        for slot in stale {
+            self.drive(slot, false, false);
+        }
+    }
+
+    fn kill(&mut self, mut conn: Conn, reason: &str) {
+        let slot = conn.token as usize;
+        self.poller.delete(conn.stream.as_raw_fd()).ok();
+        let abandoned = (conn.out.len() - conn.sent) as u64;
+        if abandoned > 0 {
+            crate::obs::metrics::hub_write_flushed(abandoned);
+        }
+        while let Some(mark) = conn.marks.pop_front() {
+            mark.job.fail(mark.client);
+        }
+        if let Some(client) = conn.machine.client() {
+            crate::log_debug!("hub", "shard {} closed client {client} session: {reason}", self.idx);
+            if self.by_client.get(&client) == Some(&slot) {
+                self.by_client.remove(&client);
+            }
+            {
+                let mut tables = self.shared.tables.lock().unwrap();
+                if tables.registry.get(&client).map(|s| s.generation) == Some(conn.generation) {
+                    tables.registry.remove(&client);
+                }
+            }
+            if let Some(spec) = self.current_spec() {
+                if spec.expect.contains_key(&client) && !spec.done.lock().unwrap().contains(&client)
+                {
+                    spec.push_event(RoundEvent::Failed {
+                        client,
+                        wire_bytes: conn.machine.take_wire_bytes(),
+                    });
+                }
+            }
+        }
+        crate::obs::metrics::hub_session_closed(self.idx);
+        conn.stream.shutdown(std::net::Shutdown::Both).ok();
+        self.free.push(slot);
+    }
+
+    fn close_all(&mut self, reason: &str) {
+        for slot in 0..self.conns.len() {
+            if let Some(conn) = self.conns[slot].take() {
+                self.kill(conn, reason);
+            }
+        }
+    }
+}
+
+/// Serialize one broadcast payload into the connection's write queue.
+fn enqueue_payload(conn: &mut Conn, payload: &BroadcastPayload) -> std::io::Result<u64> {
+    match payload {
+        BroadcastPayload::Mask(bytes) => {
+            write_frame_with(&mut conn.out, MASK_ROUND, FrameKind::Mask, 0, bytes, &mut conn.tx)
+        }
+        BroadcastPayload::Round {
+            round,
+            down,
+            payloads,
+        } => {
+            let carried = payloads.as_ref().map(|(c, p)| (c.as_slice(), p.as_slice()));
+            write_round_frames(&mut conn.out, *round, down, carried, &mut conn.tx)
+        }
+    }
+}
+
+fn accept_loop(shared: Arc<ReactorShared>) {
+    let poller = Poller::new().ok();
+    if let Some(p) = &poller {
+        p.add(shared.listener.as_raw_fd(), 0, true, false).ok();
+        p.add(shared.accept_wake.as_raw_fd(), 1, true, false).ok();
+    }
+    let mut events: Vec<Event> = Vec::new();
+    let mut next_shard = 0usize;
+    while !shared.stop.load(Ordering::Relaxed) {
+        match shared.listener.accept() {
+            Ok((stream, _)) => {
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                stream.set_nodelay(true).ok();
+                // nonce drawn here so shards never block on OS entropy
+                let mut nonce = [0u8; 16];
+                if shared.auth_root.is_some() {
+                    match ChaChaRng::from_os_entropy() {
+                        Ok(mut rng) => rng.fill_bytes(&mut nonce),
+                        Err(e) => {
+                            crate::log_debug!("hub", "cannot draw a challenge nonce: {e}");
+                            continue;
+                        }
+                    }
+                }
+                let generation = shared.generations.fetch_add(1, Ordering::Relaxed);
+                let shard = next_shard % shared.links.len();
+                next_shard = next_shard.wrapping_add(1);
+                send_to(&shared, shard, Cmd::Adopt {
+                    stream,
+                    nonce,
+                    generation,
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => match &poller {
+                Some(p) => {
+                    p.wait(&mut events, Some(Duration::from_millis(500))).ok();
+                    if events.iter().any(|ev| ev.token == 1) {
+                        crate::obs::metrics::hub_wakeup();
+                        shared.accept_wake.drain();
+                    }
+                }
+                None => std::thread::sleep(Duration::from_millis(2)),
+            },
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::ConnectionAborted
+                        | std::io::ErrorKind::ConnectionReset
+                        | std::io::ErrorKind::Interrupted
+                ) => {}
+            Err(e) => {
+                if !shared.stop.load(Ordering::Relaxed) {
+                    crate::log_debug!("hub", "accept failed: {e}");
+                }
+                break;
+            }
+        }
+    }
+}
+
+/// The sharded epoll reactor session hub — a drop-in peer of
+/// [`SessionHub`] serving the identical wire protocol from a fixed thread
+/// pool (select it with `--transport-backend hub`).
+pub struct ReactorHub {
+    shared: Arc<ReactorShared>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    shards: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ReactorHub {
+    /// Bind the listen socket and start the accept thread + shard pool.
+    pub fn bind(addr: &str, params: Arc<CkksParams>, max_sessions: usize) -> anyhow::Result<Self> {
+        Self::bind_with_auth(addr, params, max_sessions, None)
+    }
+
+    /// [`Self::bind`] with an optional task MAC root (`--wire-auth mac`).
+    pub fn bind_with_auth(
+        addr: &str,
+        params: Arc<CkksParams>,
+        max_sessions: usize,
+        auth_root: Option<[u8; 32]>,
+    ) -> anyhow::Result<Self> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow::anyhow!("cannot bind session hub on {addr}: {e}"))?;
+        listener.set_nonblocking(true)?;
+        let n = shard_count();
+        let mut links = Vec::with_capacity(n);
+        for _ in 0..n {
+            links.push(ShardLink {
+                cmds: Mutex::new(VecDeque::new()),
+                wake: Wakeup::new()?,
+            });
+        }
+        let shared = Arc::new(ReactorShared {
+            listener,
+            params,
+            auth_root,
+            io_timeout: Duration::from_secs(10),
+            max_sessions: max_sessions.max(1),
+            next_round: AtomicU64::new(MASK_ROUND),
+            stop: AtomicBool::new(false),
+            generations: AtomicU64::new(0),
+            accept_wake: Wakeup::new()?,
+            links,
+            round: Mutex::new(None),
+            tables: Mutex::new(HubTables::default()),
+            joined: Condvar::new(),
+        });
+        let cap = frame_payload_cap(&shared.params);
+        let mut shards = Vec::with_capacity(n);
+        for idx in 0..n {
+            let poller = Poller::new()?;
+            poller.add(shared.links[idx].wake.as_raw_fd(), WAKE_TOKEN, true, false)?;
+            let sh = shared.clone();
+            shards.push(
+                std::thread::Builder::new()
+                    .name(format!("hub-shard-{idx}"))
+                    .spawn(move || {
+                        Shard {
+                            idx,
+                            shared: sh,
+                            poller,
+                            conns: Vec::new(),
+                            free: Vec::new(),
+                            by_client: HashMap::new(),
+                            scratch: vec![0u8; 64 * 1024],
+                            cap,
+                        }
+                        .run()
+                    })?,
+            );
+        }
+        let ash = shared.clone();
+        let accept = std::thread::Builder::new()
+            .name("hub-accept".into())
+            .spawn(move || accept_loop(ash))?;
+        Ok(ReactorHub {
+            shared,
+            accept: Some(accept),
+            shards,
+        })
+    }
+
+    /// The bound address (what clients dial).
+    pub fn local_addr(&self) -> anyhow::Result<SocketAddr> {
+        Ok(self.shared.listener.local_addr()?)
+    }
+
+    /// Advertise the next wire round (stamped into WELCOME replies).
+    pub fn set_next_round(&self, round: u64) {
+        self.shared.next_round.store(round, Ordering::Relaxed);
+    }
+
+    /// Client ids with a currently-registered session.
+    pub fn connected(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self
+            .shared
+            .tables
+            .lock()
+            .unwrap()
+            .registry
+            .keys()
+            .copied()
+            .collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Ask the owning shard to close whatever connection currently holds
+    /// `client`'s seat (removal is asynchronous).
+    pub fn drop_session(&self, client: u64) {
+        let seat = self.shared.tables.lock().unwrap().registry.get(&client).copied();
+        if let Some(seat) = seat {
+            send_to(&self.shared, seat.shard, Cmd::Kill {
+                client,
+                generation: seat.generation,
+            });
+        }
+    }
+
+    /// Block until `n` distinct clients hold sessions; errors after `wait`
+    /// with the shortfall. Parks on the registration condvar.
+    pub fn wait_for_clients(&self, n: usize, wait: Duration) -> anyhow::Result<Vec<u64>> {
+        let deadline = Instant::now() + wait;
+        let mut tables = self.shared.tables.lock().unwrap();
+        loop {
+            if tables.registry.len() >= n {
+                let mut ids: Vec<u64> = tables.registry.keys().copied().collect();
+                ids.sort_unstable();
+                return Ok(ids);
+            }
+            let now = Instant::now();
+            anyhow::ensure!(
+                now < deadline,
+                "only {}/{n} clients joined within {:.0?}",
+                tables.registry.len(),
+                wait
+            );
+            let (guard, _timed_out) = self
+                .shared
+                .joined
+                .wait_timeout(tables, deadline - now)
+                .unwrap();
+            tables = guard;
+        }
+    }
+
+    fn wake_all(&self) {
+        for link in &self.shared.links {
+            link.wake.wake();
+        }
+    }
+
+    fn run_job(&self, per_shard: Vec<Vec<BroadcastTarget>>, total: usize) -> (u64, Vec<u64>) {
+        if total == 0 {
+            return (0, Vec::new());
+        }
+        let job = Arc::new(BroadcastJob::new(total));
+        for (idx, targets) in per_shard.into_iter().enumerate() {
+            if targets.is_empty() {
+                continue;
+            }
+            send_to(&self.shared, idx, Cmd::Broadcast {
+                job: job.clone(),
+                targets,
+            });
+        }
+        job.wait()
+    }
+
+    /// Push the agreed mask to every listed client (MASK frame at
+    /// [`MASK_ROUND`]); cached first so a mid-push death can be replayed
+    /// at the client's next handshake.
+    pub fn broadcast_mask(&self, clients: &[u64], mask_bytes: &[u8]) -> DownlinkOutcome {
+        let start = Instant::now();
+        let payload = Arc::new(mask_bytes.to_vec());
+        let mut per_shard: Vec<Vec<BroadcastTarget>> =
+            (0..self.shared.links.len()).map(|_| Vec::new()).collect();
+        let mut absent: Vec<u64> = Vec::new();
+        let mut total = 0usize;
+        {
+            let mut tables = self.shared.tables.lock().unwrap();
+            tables.downlink.mask = Some(mask_bytes.to_vec());
+            for &client in clients {
+                match tables.registry.get(&client) {
+                    Some(seat) => {
+                        per_shard[seat.shard].push(BroadcastTarget {
+                            client,
+                            generation: seat.generation,
+                            payload: BroadcastPayload::Mask(payload.clone()),
+                        });
+                        total += 1;
+                    }
+                    None => {
+                        crate::log_debug!("hub", "mask downlink to {client} failed: no session");
+                        absent.push(client);
+                    }
+                }
+            }
+        }
+        let (bytes, mut job_failed) = self.run_job(per_shard, total);
+        absent.append(&mut job_failed);
+        absent.sort_unstable();
+        DownlinkOutcome {
+            bytes_sent: bytes,
+            elapsed_secs: start.elapsed().as_secs_f64(),
+            failed: absent,
+        }
+    }
+
+    /// Push one round's downlink to every planned client — the shared
+    /// aggregate's frame payloads are encoded once and Arc-shared across
+    /// all shard write queues.
+    pub fn broadcast_round(
+        &self,
+        round: u64,
+        plans: &[(u64, DownBegin)],
+        agg: Option<&EncryptedUpdate>,
+    ) -> DownlinkOutcome {
+        let start = Instant::now();
+        let (ct_payloads, plain_payloads) = match agg {
+            Some(agg) => encode_agg_payloads(agg),
+            None => (Vec::new(), Vec::new()),
+        };
+        let ct_payloads = Arc::new(ct_payloads);
+        let plain_payloads = Arc::new(plain_payloads);
+        let mut per_shard: Vec<Vec<BroadcastTarget>> =
+            (0..self.shared.links.len()).map(|_| Vec::new()).collect();
+        let mut absent: Vec<u64> = Vec::new();
+        let mut total = 0usize;
+        {
+            let mut tables = self.shared.tables.lock().unwrap();
+            tables.downlink.round = Some(RoundSnapshot {
+                round,
+                plans: plans.to_vec(),
+                has_payloads: agg.is_some(),
+                ct_payloads: ct_payloads.clone(),
+                plain_payloads: plain_payloads.clone(),
+            });
+            for &(client, down) in plans {
+                match tables.registry.get(&client) {
+                    Some(seat) => {
+                        let payloads = (down.has_agg && agg.is_some())
+                            .then(|| (ct_payloads.clone(), plain_payloads.clone()));
+                        per_shard[seat.shard].push(BroadcastTarget {
+                            client,
+                            generation: seat.generation,
+                            payload: BroadcastPayload::Round {
+                                round,
+                                down,
+                                payloads,
+                            },
+                        });
+                        total += 1;
+                    }
+                    None => {
+                        crate::log_debug!(
+                            "hub",
+                            "round {round} downlink to {client} failed: no session"
+                        );
+                        absent.push(client);
+                    }
+                }
+            }
+        }
+        let (bytes, mut job_failed) = self.run_job(per_shard, total);
+        absent.append(&mut job_failed);
+        absent.sort_unstable();
+        DownlinkOutcome {
+            bytes_sent: bytes,
+            elapsed_secs: start.elapsed().as_secs_f64(),
+            failed: absent,
+        }
+    }
+
+    /// Arm a collection round across the shards and settle it against the
+    /// shared [`RoundLedger`] — identical accounting (quorum cutoff,
+    /// straggler/rejoin windows, arrival ordering) to the blocking
+    /// collector, so both backends report the same rounds.
+    pub fn collect_round(
+        &self,
+        expected: &[(u64, Option<f64>)],
+        shape: UpdateShape,
+        cfg: &IntakeConfig,
+    ) -> IntakeOutcome {
+        let mut ledger = RoundLedger::open(cfg);
+        let spec = Arc::new(RoundSpec {
+            round_id: cfg.round_id,
+            shape,
+            expect: expected.iter().copied().collect(),
+            opened: ledger.start(),
+            deadline: ledger.deadline(),
+            io_timeout: cfg.io_timeout,
+            cutoff: Mutex::new(None),
+            done: Mutex::new(HashSet::new()),
+            events: Mutex::new(VecDeque::new()),
+            bell: Condvar::new(),
+        });
+        *self.shared.round.lock().unwrap() = Some(spec.clone());
+        self.wake_all();
+        loop {
+            if ledger.completed_count() >= expected.len() {
+                break;
+            }
+            let now = Instant::now();
+            let closing = ledger.closing_time();
+            if now >= closing {
+                break;
+            }
+            let rejoin_until = (ledger.start() + cfg.straggler_timeout).min(closing);
+            if now >= rejoin_until {
+                // past the rejoin window: once no pending uploader even
+                // holds a session, waiting longer cannot change the round
+                let tables = self.shared.tables.lock().unwrap();
+                let any_live = expected
+                    .iter()
+                    .any(|&(c, _)| !ledger.has_completed(c) && tables.registry.contains_key(&c));
+                if !any_live {
+                    break;
+                }
+            }
+            let timeout = closing
+                .saturating_duration_since(now)
+                .min(Duration::from_millis(100));
+            let Some(ev) = next_event(&spec, timeout) else {
+                continue;
+            };
+            match ev {
+                RoundEvent::Upload { frames, wire_bytes } => {
+                    ledger.add_bytes(wire_bytes);
+                    ledger.complete(*frames);
+                    *spec.cutoff.lock().unwrap() = ledger.cutoff();
+                }
+                RoundEvent::Failed { client, wire_bytes } => {
+                    ledger.add_bytes(wire_bytes);
+                    crate::log_debug!(
+                        "hub",
+                        "round {} upload from client {client} failed on the wire",
+                        cfg.round_id
+                    );
+                }
+            }
+        }
+        *self.shared.round.lock().unwrap() = None;
+        self.wake_all();
+        if ledger.completed_count() < expected.len() {
+            // drain the event queue: an upload that completed in the gap
+            // between the deadline check and the disarm still counts
+            while let Some(ev) = next_event(&spec, Duration::from_millis(60)) {
+                match ev {
+                    RoundEvent::Upload { frames, wire_bytes } => {
+                        ledger.add_bytes(wire_bytes);
+                        ledger.complete(*frames);
+                        *spec.cutoff.lock().unwrap() = ledger.cutoff();
+                    }
+                    RoundEvent::Failed { wire_bytes, .. } => ledger.add_bytes(wire_bytes),
+                }
+            }
+        }
+        for &(client, _) in expected {
+            if !ledger.has_completed(client) {
+                ledger.fail(client);
+            }
+        }
+        ledger.seal()
+    }
+
+    /// Stop the accept thread and every shard, closing all sessions.
+    pub fn shutdown(&mut self) {
+        if self.accept.is_none() && self.shards.is_empty() {
+            return;
+        }
+        self.shared.stop.store(true, Ordering::Relaxed);
+        self.shared.accept_wake.wake();
+        if let Some(a) = self.accept.take() {
+            a.join().ok();
+        }
+        for idx in 0..self.shared.links.len() {
+            send_to(&self.shared, idx, Cmd::Shutdown);
+        }
+        for h in self.shards.drain(..) {
+            h.join().ok();
+        }
+        *self.shared.round.lock().unwrap() = None;
+        self.shared.tables.lock().unwrap().registry.clear();
+    }
+}
+
+impl Drop for ReactorHub {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// The coordinator-facing hub facade: one of the two server-side session
+/// backends, selected by `--transport-backend` (env
+/// `FEDML_HE_TRANSPORT_BACKEND`). Round phases drive this enum and stay
+/// agnostic of which I/O model is underneath.
+pub enum TransportHub {
+    /// Thread-per-connection blocking backend ([`SessionHub`], default).
+    Threads(SessionHub),
+    /// Sharded epoll reactor backend ([`ReactorHub`]).
+    Reactor(ReactorHub),
+}
+
+impl TransportHub {
+    /// The selected backend's CLI name (`threads` | `hub`).
+    pub fn backend_name(&self) -> &'static str {
+        match self {
+            TransportHub::Threads(_) => "threads",
+            TransportHub::Reactor(_) => "hub",
+        }
+    }
+
+    pub fn local_addr(&self) -> anyhow::Result<SocketAddr> {
+        match self {
+            TransportHub::Threads(h) => h.local_addr(),
+            TransportHub::Reactor(h) => h.local_addr(),
+        }
+    }
+
+    pub fn set_next_round(&self, round: u64) {
+        match self {
+            TransportHub::Threads(h) => h.set_next_round(round),
+            TransportHub::Reactor(h) => h.set_next_round(round),
+        }
+    }
+
+    pub fn connected(&self) -> Vec<u64> {
+        match self {
+            TransportHub::Threads(h) => h.connected(),
+            TransportHub::Reactor(h) => h.connected(),
+        }
+    }
+
+    pub fn drop_session(&self, client: u64) {
+        match self {
+            TransportHub::Threads(h) => h.drop_session(client),
+            TransportHub::Reactor(h) => h.drop_session(client),
+        }
+    }
+
+    pub fn wait_for_clients(&self, n: usize, wait: Duration) -> anyhow::Result<Vec<u64>> {
+        match self {
+            TransportHub::Threads(h) => h.wait_for_clients(n, wait),
+            TransportHub::Reactor(h) => h.wait_for_clients(n, wait),
+        }
+    }
+
+    pub fn broadcast_mask(&self, clients: &[u64], mask_bytes: &[u8]) -> DownlinkOutcome {
+        match self {
+            TransportHub::Threads(h) => h.broadcast_mask(clients, mask_bytes),
+            TransportHub::Reactor(h) => h.broadcast_mask(clients, mask_bytes),
+        }
+    }
+
+    pub fn broadcast_round(
+        &self,
+        round: u64,
+        plans: &[(u64, DownBegin)],
+        agg: Option<&EncryptedUpdate>,
+    ) -> DownlinkOutcome {
+        match self {
+            TransportHub::Threads(h) => h.broadcast_round(round, plans, agg),
+            TransportHub::Reactor(h) => h.broadcast_round(round, plans, agg),
+        }
+    }
+
+    pub fn collect_round(
+        &self,
+        expected: &[(u64, Option<f64>)],
+        shape: UpdateShape,
+        cfg: &IntakeConfig,
+    ) -> IntakeOutcome {
+        match self {
+            TransportHub::Threads(h) => h.collect_round(expected, shape, cfg),
+            TransportHub::Reactor(h) => h.collect_round(expected, shape, cfg),
+        }
+    }
+
+    pub fn shutdown(&mut self) {
+        match self {
+            TransportHub::Threads(h) => h.shutdown(),
+            TransportHub::Reactor(h) => h.shutdown(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::frame::{encode_hello, read_frame_into};
+    use crate::transport::session::query_stats;
+    use std::io::BufReader;
+
+    fn params() -> Arc<CkksParams> {
+        Arc::new(CkksParams::new(256, 3, 30).unwrap())
+    }
+
+    #[test]
+    fn stats_probe_answers_on_reactor_backend() {
+        let mut hub = ReactorHub::bind("127.0.0.1:0", params(), 8).unwrap();
+        let addr = hub.local_addr().unwrap().to_string();
+        let snap = query_stats(&addr, Duration::from_secs(5)).unwrap();
+        assert!(snap.to_string().contains("hub_wakeups"));
+        hub.shutdown();
+    }
+
+    #[test]
+    fn handshake_registers_and_mask_broadcast_reaches_client() {
+        let mut hub = ReactorHub::bind("127.0.0.1:0", params(), 8).unwrap();
+        let addr = hub.local_addr().unwrap().to_string();
+        let stream = TcpStream::connect(&addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        stream.set_nodelay(true).ok();
+        {
+            let mut w = &stream;
+            write_frame(&mut w, CONTROL_ROUND, FrameKind::Hello, 0, &encode_hello(7)).unwrap();
+        }
+        let mut reader = BufReader::new(&stream);
+        let mut buf = Vec::new();
+        let (kind, _) = read_frame_into(&mut reader, CONTROL_ROUND, 1024, &mut buf).unwrap();
+        assert_eq!(kind, FrameKind::Welcome);
+        let ids = hub.wait_for_clients(1, Duration::from_secs(5)).unwrap();
+        assert_eq!(ids, vec![7]);
+        assert_eq!(hub.connected(), vec![7]);
+
+        let out = hub.broadcast_mask(&[7], b"mask-bytes");
+        assert!(out.failed.is_empty(), "failed: {:?}", out.failed);
+        assert!(out.bytes_sent > 0);
+        let (kind, _) = read_frame_into(&mut reader, MASK_ROUND, 1024, &mut buf).unwrap();
+        assert_eq!(kind, FrameKind::Mask);
+        assert_eq!(buf, b"mask-bytes");
+        hub.shutdown();
+    }
+}

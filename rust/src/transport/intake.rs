@@ -12,16 +12,17 @@
 //! allocate beyond one legitimate frame ([`super::frame::frame_payload_cap`]).
 
 use super::frame::{
-    decode_begin, decode_end_timing, frame_payload_cap, read_frame_into_with, write_frame_with,
-    FrameKind, RxAuth, TxAuth, AUTH_TRAILER_BYTES, BEGIN_PAYLOAD_BYTES,
+    frame_payload_cap, read_frame_into_with, write_frame_with, FrameKind, RxAuth, TxAuth,
+    AUTH_TRAILER_BYTES,
 };
 use crate::agg_engine::Arrival;
 use crate::ckks::{CkksContext, CkksParams};
 use crate::he_agg::{EncryptedUpdate, EncryptionMask};
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::os::fd::AsRawFd;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Sentinel client id for a connection that failed before its BEGIN frame
@@ -105,6 +106,146 @@ pub struct IntakeOutcome {
     pub loss_sum: f64,
 }
 
+/// Shared bookkeeping of one round's upload collection — the scaffold that
+/// the three collectors (the anonymous [`TcpIntake`], the blocking
+/// `session::SessionHub` and the reactor `hub::ReactorHub`) previously
+/// each hand-kept: arrival stamping under one lock (stamps monotone in
+/// completion order), duplicate-upload discard, failed-client recording,
+/// timing/byte sums, the quorum → straggler-cutoff transition, and the
+/// final sorted [`IntakeOutcome`]. Callers own their concurrency (worker
+/// threads, collector channels, shard events); the ledger owns the
+/// round's accounting semantics so all backends settle rounds
+/// identically.
+pub(crate) struct RoundLedger {
+    start: Instant,
+    deadline: Instant,
+    quorum: Option<usize>,
+    straggler_timeout: Duration,
+    cutoff: Option<Instant>,
+    arrivals: Vec<Arrival>,
+    failed: Vec<u64>,
+    bytes: u64,
+    train_secs: f64,
+    encrypt_secs: f64,
+    loss_sum: f64,
+}
+
+impl RoundLedger {
+    /// Open the ledger; the round clock starts now.
+    pub fn open(cfg: &IntakeConfig) -> Self {
+        let start = Instant::now();
+        RoundLedger {
+            start,
+            deadline: start + cfg.max_wait,
+            quorum: cfg.quorum,
+            straggler_timeout: cfg.straggler_timeout,
+            cutoff: None,
+            arrivals: Vec::new(),
+            failed: Vec::new(),
+            bytes: 0,
+            train_secs: 0.0,
+            encrypt_secs: 0.0,
+            loss_sum: 0.0,
+        }
+    }
+
+    pub fn start(&self) -> Instant {
+        self.start
+    }
+
+    /// Hard wall-clock bound on the whole round.
+    pub fn deadline(&self) -> Instant {
+        self.deadline
+    }
+
+    /// The straggler cutoff, armed when the quorum-th upload completed.
+    pub fn cutoff(&self) -> Option<Instant> {
+        self.cutoff
+    }
+
+    /// The earliest of deadline and armed cutoff — when the round stops
+    /// accepting new work.
+    pub fn closing_time(&self) -> Instant {
+        match self.cutoff {
+            Some(c) => c.min(self.deadline),
+            None => self.deadline,
+        }
+    }
+
+    pub fn add_bytes(&mut self, n: u64) {
+        self.bytes += n;
+    }
+
+    pub fn completed_count(&self) -> usize {
+        self.arrivals.len()
+    }
+
+    pub fn has_completed(&self, client: u64) -> bool {
+        self.arrivals.iter().any(|a| a.client == client)
+    }
+
+    pub fn has_failed(&self, client: u64) -> bool {
+        self.failed.contains(&client)
+    }
+
+    /// Record a completed upload: stamp it with seconds since the round
+    /// opened, fold in the client-reported metrics, and arm the straggler
+    /// cutoff once the quorum is reached. A duplicate completion for an
+    /// already-counted client is discarded into `failed` (aggregating it
+    /// would double that client's weight) and returns `false`.
+    pub fn complete(&mut self, frames: UploadFrames) -> bool {
+        let client = frames.client;
+        if self.has_completed(client) {
+            crate::log_debug!(
+                "transport",
+                "duplicate upload from client {client} discarded"
+            );
+            self.failed.push(client);
+            return false;
+        }
+        self.arrivals.push(Arrival {
+            client,
+            alpha: frames.alpha,
+            arrival_secs: self.start.elapsed().as_secs_f64(),
+            update: std::sync::Arc::new(frames.update),
+        });
+        self.train_secs += frames.train_secs;
+        self.encrypt_secs += frames.encrypt_secs;
+        self.loss_sum += frames.loss as f64;
+        if let Some(q) = self.quorum {
+            if self.arrivals.len() >= q.max(1) && self.cutoff.is_none() {
+                self.cutoff = Some(Instant::now() + self.straggler_timeout);
+            }
+        }
+        true
+    }
+
+    /// Record a failed upload attempt for `client`
+    /// ([`UNIDENTIFIED_CLIENT`] when the failure predates its BEGIN).
+    pub fn fail(&mut self, client: u64) {
+        self.failed.push(client);
+    }
+
+    /// Seal the round: sort arrivals by (stamp, client) and fold the sums
+    /// into the caller-facing outcome.
+    pub fn seal(mut self) -> IntakeOutcome {
+        self.arrivals.sort_by(|a, b| {
+            a.arrival_secs
+                .total_cmp(&b.arrival_secs)
+                .then(a.client.cmp(&b.client))
+        });
+        IntakeOutcome {
+            elapsed_secs: self.start.elapsed().as_secs_f64(),
+            arrivals: self.arrivals,
+            failed: self.failed,
+            bytes_received: self.bytes,
+            train_secs: self.train_secs,
+            encrypt_secs: self.encrypt_secs,
+            loss_sum: self.loss_sum,
+        }
+    }
+}
+
 /// A bound TCP intake serving one round at a time.
 pub struct TcpIntake {
     listener: TcpListener,
@@ -144,17 +285,13 @@ impl TcpIntake {
     /// included before returning. Duplicate uploads for an already-counted
     /// client id are discarded into `failed`.
     pub fn collect_round(&self, cfg: &IntakeConfig) -> anyhow::Result<IntakeOutcome> {
-        let start = Instant::now();
-        let deadline = start + cfg.max_wait;
         self.listener.set_nonblocking(true)?;
-        let completed: Mutex<Vec<Arrival>> = Mutex::new(Vec::new());
-        let failed: Mutex<Vec<u64>> = Mutex::new(Vec::new());
-        let timing_sums: Mutex<(f64, f64, f64)> = Mutex::new((0.0, 0.0, 0.0));
-        let bytes = AtomicU64::new(0);
-        // Set when the quorum-th upload completes: accept only until then +
-        // straggler_timeout (an upload already in flight still finishes and
-        // is judged by the seal-time policy).
-        let accept_cutoff: Mutex<Option<Instant>> = Mutex::new(None);
+        // All round accounting (arrivals, failures, timing sums, the quorum
+        // cutoff) lives in the ledger; stamping under its lock keeps stamps
+        // monotone in completion order.
+        let ledger = RoundLedger::open(cfg);
+        let deadline = ledger.deadline();
+        let ledger = Mutex::new(ledger);
         let params = &*self.params;
         let shape = self.shape;
 
@@ -169,38 +306,48 @@ impl TcpIntake {
         // lifetime spawn count) keeps the accept loop serving after bursts
         // of fast-failing probes: past the cap, new connections wait in the
         // listen backlog instead of each pinning a thread + frame buffer.
-        let in_flight = AtomicUsize::new(0);
+        let in_flight = Mutex::new(0usize);
+        let slot_freed = Condvar::new();
         let max_in_flight = cfg.expected_uploads.saturating_mul(2).saturating_add(32);
+
+        // Readiness parking: instead of 1 ms sleep-polling the nonblocking
+        // listener, the accept loop parks on an epoll set (listener +
+        // eventfd) and is woken by a new connection or by a worker settling
+        // a slot. The wait is still bounded so the cutoff/deadline checks
+        // re-run even when nothing is ready.
+        let poller = super::reactor::Poller::new()?;
+        let wake = super::reactor::Wakeup::new()?;
+        poller.add(self.listener.as_raw_fd(), 0, true, false)?;
+        poller.add(wake.as_raw_fd(), 1, true, false)?;
+        let mut events = Vec::new();
 
         std::thread::scope(|s| -> anyhow::Result<()> {
             loop {
                 if settled.load(Ordering::Relaxed) >= cfg.expected_uploads {
                     break;
                 }
-                let now = Instant::now();
-                if now >= deadline {
+                let closing = ledger.lock().unwrap().closing_time();
+                if Instant::now() >= closing {
                     break;
                 }
-                if let Some(cut) = *accept_cutoff.lock().unwrap() {
-                    if now >= cut {
-                        break;
+                {
+                    let guard = in_flight.lock().unwrap();
+                    if *guard >= max_in_flight {
+                        let (guard, _timed_out) = slot_freed
+                            .wait_timeout(guard, Duration::from_millis(50))
+                            .unwrap();
+                        drop(guard);
+                        continue;
                     }
-                }
-                if in_flight.load(Ordering::Relaxed) >= max_in_flight {
-                    std::thread::sleep(Duration::from_millis(1));
-                    continue;
                 }
                 match self.listener.accept() {
                     Ok((stream, _peer)) => {
-                        in_flight.fetch_add(1, Ordering::Relaxed);
-                        let completed = &completed;
-                        let failed = &failed;
-                        let bytes = &bytes;
-                        let timing_sums = &timing_sums;
-                        let accept_cutoff = &accept_cutoff;
+                        *in_flight.lock().unwrap() += 1;
+                        let ledger = &ledger;
                         let settled = &settled;
                         let in_flight = &in_flight;
-                        let cfg = cfg.clone();
+                        let slot_freed = &slot_freed;
+                        let wake = &wake;
                         s.spawn(move || {
                             let mut seen_client: Option<u64> = None;
                             let mut received = 0u64;
@@ -208,71 +355,22 @@ impl TcpIntake {
                                 stream,
                                 params,
                                 shape,
-                                &cfg,
+                                cfg,
                                 deadline,
                                 &mut seen_client,
                                 &mut received,
                             );
-                            bytes.fetch_add(received, Ordering::Relaxed);
+                            let mut led = ledger.lock().unwrap();
+                            led.add_bytes(received);
                             match result {
-                                Ok(UploadFrames {
-                                    client,
-                                    alpha,
-                                    train_secs,
-                                    encrypt_secs,
-                                    loss,
-                                    update,
-                                }) => {
-                                    let mut done = completed.lock().unwrap();
-                                    if done.iter().any(|a| a.client == client) {
-                                        // a retry after a lost ACK (or a
-                                        // forged id): the first completion
-                                        // already counts — aggregating the
-                                        // duplicate would double its weight
-                                        drop(done);
-                                        crate::log_debug!(
-                                            "transport",
-                                            "duplicate upload from client {client} discarded"
-                                        );
-                                        failed.lock().unwrap().push(client);
-                                    } else {
-                                        // stamp inside the lock → stamps
-                                        // are monotone in push order
-                                        let t = start.elapsed().as_secs_f64();
-                                        done.push(Arrival {
-                                            client,
-                                            alpha,
-                                            arrival_secs: t,
-                                            update: std::sync::Arc::new(update),
-                                        });
-                                        let n_done = done.len();
-                                        drop(done);
-                                        {
-                                            let mut t = timing_sums.lock().unwrap();
-                                            t.0 += train_secs;
-                                            t.1 += encrypt_secs;
-                                            t.2 += loss as f64;
-                                        }
-                                        // a completion after an earlier
-                                        // failed attempt reuses the slot
-                                        // that failure already settled
-                                        let failed_before =
-                                            failed.lock().unwrap().contains(&client);
-                                        if !failed_before {
-                                            settled.fetch_add(1, Ordering::Relaxed);
-                                        }
-                                        if let Some(q) = cfg.quorum {
-                                            if n_done >= q.max(1) {
-                                                let mut cut =
-                                                    accept_cutoff.lock().unwrap();
-                                                if cut.is_none() {
-                                                    *cut = Some(
-                                                        Instant::now()
-                                                            + cfg.straggler_timeout,
-                                                    );
-                                                }
-                                            }
-                                        }
+                                Ok(frames) => {
+                                    // a completion after an earlier failed
+                                    // attempt reuses the slot that failure
+                                    // already settled; a duplicate of an
+                                    // already-counted upload settles nothing
+                                    let failed_before = led.has_failed(frames.client);
+                                    if led.complete(frames) && !failed_before {
+                                        settled.fetch_add(1, Ordering::Relaxed);
                                     }
                                 }
                                 Err(e) => {
@@ -287,15 +385,9 @@ impl TcpIntake {
                                     // failing a retry after a completed
                                     // upload) must not burn the other
                                     // participants' slots
-                                    let completed_before = completed
-                                        .lock()
-                                        .unwrap()
-                                        .iter()
-                                        .any(|a| a.client == id);
-                                    let mut f = failed.lock().unwrap();
-                                    let first_failure = !f.contains(&id);
-                                    f.push(id);
-                                    drop(f);
+                                    let completed_before = led.has_completed(id);
+                                    let first_failure = !led.has_failed(id);
+                                    led.fail(id);
                                     if seen_client.is_some()
                                         && first_failure
                                         && !completed_before
@@ -304,11 +396,21 @@ impl TcpIntake {
                                     }
                                 }
                             }
-                            in_flight.fetch_sub(1, Ordering::Relaxed);
+                            drop(led);
+                            *in_flight.lock().unwrap() -= 1;
+                            slot_freed.notify_one();
+                            wake.wake();
                         });
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(Duration::from_millis(1));
+                        let timeout = closing
+                            .saturating_duration_since(Instant::now())
+                            .min(Duration::from_millis(50));
+                        poller.wait(&mut events, Some(timeout))?;
+                        if events.iter().any(|ev| ev.token == 1) {
+                            crate::obs::metrics::hub_wakeup();
+                            wake.drain();
+                        }
                     }
                     // a peer that RSTs before we accept (connection churn,
                     // port scans) kills only that connection, not the round
@@ -325,22 +427,7 @@ impl TcpIntake {
             Ok(())
         })?;
 
-        let mut arrivals = completed.into_inner().unwrap();
-        arrivals.sort_by(|a, b| {
-            a.arrival_secs
-                .total_cmp(&b.arrival_secs)
-                .then(a.client.cmp(&b.client))
-        });
-        let (train_secs, encrypt_secs, loss_sum) = timing_sums.into_inner().unwrap();
-        Ok(IntakeOutcome {
-            arrivals,
-            failed: failed.into_inner().unwrap(),
-            bytes_received: bytes.load(Ordering::Relaxed),
-            elapsed_secs: start.elapsed().as_secs_f64(),
-            train_secs,
-            encrypt_secs,
-            loss_sum,
-        })
+        Ok(ledger.into_inner().unwrap().seal())
     }
 }
 
@@ -408,7 +495,9 @@ pub(crate) fn read_upload<R: std::io::Read, F: Fn() -> Instant>(
             + auth_extra) as u64
     };
 
-    // BEGIN: identity + declared shape, checked against the round's shape.
+    // BEGIN: identity + declared shape, checked against the round's shape
+    // by the shared upload state machine (also driven, frame by decoded
+    // frame, by the reactor hub's session machine).
     arm_read(stream)?;
     let (kind, _) = read_frame_into_with(reader, round_id, cap, payload, rx)?;
     *received += frame_bytes(payload.len());
@@ -416,69 +505,29 @@ pub(crate) fn read_upload<R: std::io::Read, F: Fn() -> Instant>(
         kind == FrameKind::Begin,
         "upload must start with BEGIN, got {kind:?}"
     );
-    anyhow::ensure!(
-        payload.len() == BEGIN_PAYLOAD_BYTES,
-        "BEGIN payload length {}",
-        payload.len()
-    );
-    let (client, alpha, n_cts, n_plain, total) = decode_begin(payload)?;
-    // rejected before the connection counts as "identified": the sentinel
-    // would corrupt slot settling and straggler accounting downstream
-    anyhow::ensure!(
-        client != UNIDENTIFIED_CLIENT,
-        "client id {client} is reserved"
-    );
-    if let Some(expected) = expect_client {
-        anyhow::ensure!(
-            client == expected,
-            "session for client {expected} sent BEGIN for client {client}"
-        );
-    }
-    if let Some(expected) = expect_alpha {
-        anyhow::ensure!(
-            (alpha - expected).abs() <= 1e-9,
-            "client {client} declared FedAvg weight {alpha}, round assigned {expected}"
-        );
-    }
-    *seen_client = Some(client);
-    anyhow::ensure!(
-        n_cts == shape.n_cts && n_plain == shape.n_plain && total == shape.total,
-        "upload shape ({n_cts} cts, {n_plain} plain, {total} total) does not match \
-         the round shape ({} cts, {} plain, {} total)",
-        shape.n_cts,
-        shape.n_plain,
-        shape.total
-    );
+    let mut asm = super::reassembly::UploadAssembly::begin(
+        payload,
+        shape,
+        expect_client,
+        expect_alpha,
+        seen_client,
+    )?;
 
-    let _span = crate::obs::span_arg("transport", "read_upload", client);
-    let mut asm = super::reassembly::ChunkAssembler::new(n_cts, n_plain, total);
+    let _span = crate::obs::span_arg("transport", "read_upload", asm.client());
     let timing;
     loop {
         arm_read(stream)?;
         let (kind, seq) = read_frame_into_with(reader, round_id, cap, payload, rx)?;
         *received += frame_bytes(payload.len());
-        match kind {
-            FrameKind::CtChunk => asm.accept_ct(params, seq, payload)?,
-            FrameKind::Plain => asm.accept_plain(seq, payload)?,
-            FrameKind::End => {
-                timing = decode_end_timing(payload)?;
-                break;
-            }
-            FrameKind::Begin => anyhow::bail!("duplicate BEGIN frame"),
-            other => anyhow::bail!("unexpected {other:?} frame in an upload"),
+        if let Some(t) = asm.accept(params, kind, seq, payload)? {
+            timing = t;
+            break;
         }
     }
-    let update = asm.finish()?;
+    let frames = asm.finish(timing)?;
     let mut ack_w = ack_stream;
     write_frame_with(&mut ack_w, round_id, FrameKind::Ack, 0, &0u32.to_le_bytes(), tx)?;
-    Ok(UploadFrames {
-        client,
-        alpha,
-        train_secs: timing.0,
-        encrypt_secs: timing.1,
-        loss: timing.2,
-        update,
-    })
+    Ok(frames)
 }
 
 /// One-shot connection wrapper over [`read_upload`] (the anonymous uplink

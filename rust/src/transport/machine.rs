@@ -1,0 +1,568 @@
+//! Pure protocol state machines for the reactor session hub (DESIGN.md
+//! §13): bytes in, protocol steps out — no sockets, threads, or timers.
+//!
+//! The blocking backends drive the wire with `Read`/`Write` calls that park
+//! a thread per connection. The reactor backend cannot park, so the
+//! protocol logic is split out here into buffer-in/buffer-out machines the
+//! shard loops drive from readiness events:
+//!
+//! * [`FrameDecoder`] — reassembles complete wire frames from arbitrary
+//!   read boundaries (partial reads land mid-header or mid-payload under
+//!   chaos) and validates each one through
+//!   [`super::frame::validate_wire_frame`], preserving the blocking
+//!   reader's semantics exactly: MAC before trust, counted soft rejects
+//!   for forged/replayed frames with the stream kept aligned, hard errors
+//!   for malformed framing.
+//! * [`SessionMachine`] — the server side of one session: HELLO/WELCOME
+//!   registration, the `--wire-auth mac` CHALLENGE/CHALLENGE_RESP proof,
+//!   STATS probes, and round upload reassembly via
+//!   [`super::reassembly::UploadAssembly`]. Each [`Step`] tells the
+//!   driving shard what to enqueue (challenge, welcome, ACK) or deliver
+//!   (a completed upload); everything stateful about *when* bytes arrive
+//!   stays in the driver.
+
+use super::frame::{
+    decode_challenge_resp, decode_hello, frame_declared_len, validate_wire_frame, FrameKind,
+    RxAuth, TxAuth, WireVerdict, AUTH_DIR_DOWN, AUTH_DIR_UP, AUTH_TRAILER_BYTES, CONTROL_ROUND,
+    FRAME_HEADER_BYTES, FRAME_TRAILER_BYTES, MAX_CONSECUTIVE_AUTH_REJECTS,
+};
+use super::intake::{UpdateShape, UploadFrames, UNIDENTIFIED_CLIENT};
+use super::reassembly::UploadAssembly;
+use crate::ckks::CkksParams;
+use crate::crypto::mac::{self, MacKey};
+use std::ops::Range;
+
+/// Incremental frame reassembly over arbitrary read boundaries. Bytes are
+/// [`FrameDecoder::push`]ed as they arrive; [`FrameDecoder::next_frame`]
+/// yields one validated frame at a time. The declared payload length is
+/// the only header field read before validation, and it is capped before
+/// the frame is ever buffered whole — a hostile length can never force an
+/// unbounded allocation, mirroring the blocking reader.
+pub(crate) struct FrameDecoder {
+    cap: usize,
+    buf: Vec<u8>,
+    /// Consumed prefix of `buf` (compacted on the next push).
+    start: usize,
+    /// Consecutive auth/replay soft rejects (bounded like the blocking
+    /// reader, across `next_frame` calls).
+    rejected: usize,
+    /// A parse attempt stalled mid-frame — the next push is a partial-read
+    /// resumption.
+    mid_frame: bool,
+}
+
+impl FrameDecoder {
+    pub fn new(cap: usize) -> Self {
+        FrameDecoder {
+            cap,
+            buf: Vec::new(),
+            start: 0,
+            rejected: 0,
+            mid_frame: false,
+        }
+    }
+
+    /// Unparsed byte count currently buffered.
+    pub fn pending(&self) -> usize {
+        self.buf.len() - self.start
+    }
+
+    /// Append freshly-read bytes (any boundary — mid-header is fine).
+    pub fn push(&mut self, bytes: &[u8]) {
+        if self.mid_frame {
+            crate::obs::metrics::hub_partial_read();
+            self.mid_frame = false;
+        }
+        if self.start > 0 {
+            self.buf.drain(..self.start);
+            self.start = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Decode the next complete frame: `Some((round, kind, seq, payload))`
+    /// on accept (`payload` indexes this decoder via
+    /// [`FrameDecoder::bytes`], valid until the next push), `None` when
+    /// more bytes are needed. Auth/replay soft rejects are discarded
+    /// internally — bounded by [`MAX_CONSECUTIVE_AUTH_REJECTS`] — and
+    /// malformed framing is a hard error that kills the connection.
+    pub fn next_frame(
+        &mut self,
+        rx: &mut Option<RxAuth>,
+    ) -> anyhow::Result<Option<(u64, FrameKind, u32, Range<usize>)>> {
+        loop {
+            let pending = &self.buf[self.start..];
+            if pending.len() < FRAME_HEADER_BYTES {
+                self.mid_frame = !pending.is_empty();
+                return Ok(None);
+            }
+            let len = frame_declared_len(pending);
+            if len > self.cap {
+                crate::obs::metrics::frame_reject();
+                anyhow::bail!("declared payload length {len} exceeds cap {}", self.cap);
+            }
+            let auth_extra = if rx.is_some() { AUTH_TRAILER_BYTES } else { 0 };
+            let total = FRAME_HEADER_BYTES + len + FRAME_TRAILER_BYTES + auth_extra;
+            if pending.len() < total {
+                self.mid_frame = true;
+                return Ok(None);
+            }
+            let frame_start = self.start;
+            self.start += total;
+            match validate_wire_frame(&self.buf[frame_start..frame_start + total], rx)? {
+                WireVerdict::Accept { round, kind, seq } => {
+                    self.rejected = 0;
+                    let payload = frame_start + FRAME_HEADER_BYTES
+                        ..frame_start + FRAME_HEADER_BYTES + len;
+                    return Ok(Some((round, kind, seq, payload)));
+                }
+                WireVerdict::AuthReject | WireVerdict::ReplayReject => {
+                    self.rejected += 1;
+                    anyhow::ensure!(
+                        self.rejected <= MAX_CONSECUTIVE_AUTH_REJECTS,
+                        "too many consecutive auth-rejected frames ({})",
+                        self.rejected
+                    );
+                }
+            }
+        }
+    }
+
+    /// Resolve a payload range from [`FrameDecoder::next_frame`].
+    pub fn bytes(&self, r: Range<usize>) -> &[u8] {
+        &self.buf[r]
+    }
+}
+
+/// What the round collector expects of uploads, threaded into
+/// [`SessionMachine::poll`] while a round is armed.
+pub(crate) struct RoundCtx<'a> {
+    pub round_id: u64,
+    pub shape: UpdateShape,
+    /// Server-assigned FedAvg weight to pin the BEGIN declaration to.
+    pub expect_alpha: Option<f64>,
+    pub params: &'a CkksParams,
+}
+
+/// One actionable protocol step out of [`SessionMachine::poll`]. The
+/// driving shard performs the I/O the step names; the machine has already
+/// advanced past it.
+pub(crate) enum Step {
+    /// A STATS probe in place of HELLO: reply with a metrics snapshot and
+    /// close after the flush — no session slot is claimed.
+    Stats,
+    /// `--wire-auth mac`: send CHALLENGE carrying this session nonce.
+    Challenge { nonce: [u8; 16] },
+    /// Handshake complete: register `client` and enqueue WELCOME (plus any
+    /// mid-round downlink replay), authenticating the downlink with `tx`
+    /// when armed.
+    Register { client: u64, tx: Option<TxAuth> },
+    /// A complete validated upload for the armed round: hand it to the
+    /// collector and enqueue the ACK.
+    Upload { frames: Box<UploadFrames> },
+}
+
+#[derive(Clone, Copy)]
+enum MachineState {
+    /// Fresh connection: first frame must be HELLO (or a STATS probe).
+    AwaitHello,
+    /// CHALLENGE sent; the proof tag must verify before any registration.
+    AwaitChallengeResp { client: u64 },
+    /// Registered. Uploads parse only while the driver arms a round.
+    Ready { client: u64 },
+}
+
+/// The server side of one hub session as a pure state machine — the
+/// nonblocking twin of `session::handshake` + `intake::read_upload`,
+/// accepting and rejecting byte-for-byte the same streams.
+pub(crate) struct SessionMachine {
+    decoder: FrameDecoder,
+    /// Uplink authenticator, armed when the handshake proof verifies.
+    rx: Option<RxAuth>,
+    state: MachineState,
+    auth_root: Option<[u8; 32]>,
+    /// Session challenge nonce, drawn by the driver at accept time (the
+    /// machine itself touches no entropy source).
+    nonce: [u8; 16],
+    upload: Option<UploadAssembly>,
+    /// Wire bytes consumed by round frames since the last take (handshake
+    /// traffic is not counted, matching the blocking collectors).
+    wire_bytes: u64,
+}
+
+impl SessionMachine {
+    /// `cap` bounds any declared payload ([`super::frame::frame_payload_cap`]);
+    /// `auth_root` is the task MAC root (`None` = legacy wire); `nonce` is
+    /// this connection's fresh challenge nonce.
+    pub fn new(cap: usize, auth_root: Option<[u8; 32]>, nonce: [u8; 16]) -> Self {
+        SessionMachine {
+            decoder: FrameDecoder::new(cap),
+            rx: None,
+            state: MachineState::AwaitHello,
+            auth_root,
+            nonce,
+            upload: None,
+            wire_bytes: 0,
+        }
+    }
+
+    /// Feed freshly-read bytes.
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.decoder.push(bytes);
+    }
+
+    /// The session identity, known once a valid HELLO parsed.
+    pub fn client(&self) -> Option<u64> {
+        match self.state {
+            MachineState::AwaitHello => None,
+            MachineState::AwaitChallengeResp { client }
+            | MachineState::Ready { client } => Some(client),
+        }
+    }
+
+    /// Drain the wire-byte count of round frames consumed so far (folded
+    /// into the round ledger on completion or failure).
+    pub fn take_wire_bytes(&mut self) -> u64 {
+        std::mem::take(&mut self.wire_bytes)
+    }
+
+    /// Unparsed bytes buffered in the frame decoder — the shard read loop's
+    /// per-connection memory bound (it stops reading past a cap and lets
+    /// level-triggered readiness re-deliver the socket later).
+    pub fn buffered(&self) -> usize {
+        self.decoder.pending()
+    }
+
+    /// An upload is mid-reassembly: the stream is desynchronized if the
+    /// round ends here, so the driver must kill the connection rather than
+    /// carry the half-built state into the next round.
+    pub fn mid_upload(&self) -> bool {
+        self.upload.is_some()
+    }
+
+    /// Advance as far as the buffered bytes allow. Returns the next
+    /// actionable [`Step`], or `None` when more bytes are needed — or when
+    /// the machine is registered and `round` is `None`: buffered upload
+    /// frames stay unparsed until the driver arms a round, which is what
+    /// carries the blocking backend's TCP backpressure semantics (an
+    /// unprompted upload fills kernel buffers, not server memory) across
+    /// the refactor. Any `Err` desynchronizes the connection: kill it.
+    pub fn poll(&mut self, round: Option<&RoundCtx<'_>>) -> anyhow::Result<Option<Step>> {
+        loop {
+            match self.state {
+                MachineState::AwaitHello => {
+                    let Some((rnd, kind, _seq, pr)) = self.decoder.next_frame(&mut self.rx)?
+                    else {
+                        return Ok(None);
+                    };
+                    anyhow::ensure!(
+                        rnd == CONTROL_ROUND,
+                        "frame for round {rnd}, expected {CONTROL_ROUND}"
+                    );
+                    if kind == FrameKind::Stats {
+                        return Ok(Some(Step::Stats));
+                    }
+                    anyhow::ensure!(kind == FrameKind::Hello, "expected HELLO, got {kind:?}");
+                    let client = decode_hello(self.decoder.bytes(pr))?;
+                    anyhow::ensure!(
+                        client != UNIDENTIFIED_CLIENT,
+                        "client id {client} is reserved"
+                    );
+                    if self.auth_root.is_some() {
+                        self.state = MachineState::AwaitChallengeResp { client };
+                        return Ok(Some(Step::Challenge { nonce: self.nonce }));
+                    }
+                    self.state = MachineState::Ready { client };
+                    return Ok(Some(Step::Register { client, tx: None }));
+                }
+                MachineState::AwaitChallengeResp { client } => {
+                    let Some((rnd, kind, _seq, pr)) = self.decoder.next_frame(&mut self.rx)?
+                    else {
+                        return Ok(None);
+                    };
+                    anyhow::ensure!(
+                        rnd == CONTROL_ROUND,
+                        "frame for round {rnd}, expected {CONTROL_ROUND}"
+                    );
+                    anyhow::ensure!(
+                        kind == FrameKind::ChallengeResp,
+                        "expected CHALLENGE_RESP, got {kind:?} (client not in --wire-auth mac?)"
+                    );
+                    let (echoed, tag) = decode_challenge_resp(self.decoder.bytes(pr))?;
+                    let Some(root) = self.auth_root else {
+                        anyhow::bail!("challenge state without an auth root");
+                    };
+                    let skey =
+                        mac::derive_session_key(&mac::derive_client_key(&root, client), &self.nonce);
+                    if echoed != client || tag != mac::handshake_tag(&skey, &self.nonce, client) {
+                        crate::obs::metrics::auth_reject();
+                        anyhow::bail!("client {client} failed the handshake challenge");
+                    }
+                    self.rx = Some(RxAuth::new(MacKey(skey.0), AUTH_DIR_UP));
+                    self.state = MachineState::Ready { client };
+                    return Ok(Some(Step::Register {
+                        client,
+                        tx: Some(TxAuth::new(skey, AUTH_DIR_DOWN)),
+                    }));
+                }
+                MachineState::Ready { client } => {
+                    let Some(ctx) = round else {
+                        return Ok(None);
+                    };
+                    let auth_extra = if self.rx.is_some() { AUTH_TRAILER_BYTES } else { 0 };
+                    let Some((rnd, kind, seq, pr)) = self.decoder.next_frame(&mut self.rx)?
+                    else {
+                        return Ok(None);
+                    };
+                    anyhow::ensure!(
+                        rnd == ctx.round_id,
+                        "frame for round {rnd}, expected {}",
+                        ctx.round_id
+                    );
+                    self.wire_bytes +=
+                        (FRAME_HEADER_BYTES + pr.len() + FRAME_TRAILER_BYTES + auth_extra) as u64;
+                    let payload = self.decoder.bytes(pr);
+                    match self.upload.as_mut() {
+                        None => {
+                            anyhow::ensure!(
+                                kind == FrameKind::Begin,
+                                "upload must start with BEGIN, got {kind:?}"
+                            );
+                            let mut seen = None;
+                            self.upload = Some(UploadAssembly::begin(
+                                payload,
+                                ctx.shape,
+                                Some(client),
+                                ctx.expect_alpha,
+                                &mut seen,
+                            )?);
+                        }
+                        Some(asm) => {
+                            if let Some(timing) = asm.accept(ctx.params, kind, seq, payload)? {
+                                let Some(asm) = self.upload.take() else {
+                                    anyhow::bail!("upload assembly vanished at END");
+                                };
+                                let frames = asm.finish(timing)?;
+                                return Ok(Some(Step::Upload {
+                                    frames: Box::new(frames),
+                                }));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::serialize::ciphertext_shard_to_bytes;
+    use crate::ckks::Ciphertext;
+    use crate::transport::frame::{
+        encode_begin, encode_challenge_resp, encode_end_timing, encode_hello,
+        frame_payload_cap, write_frame, write_frame_with,
+    };
+
+    fn params() -> CkksParams {
+        CkksParams::new(256, 3, 30).unwrap()
+    }
+
+    fn frame_bytes(round: u64, kind: FrameKind, seq: u32, payload: &[u8]) -> Vec<u8> {
+        let mut b = Vec::new();
+        write_frame(&mut b, round, kind, seq, payload).unwrap();
+        b
+    }
+
+    fn shape() -> UpdateShape {
+        UpdateShape { n_cts: 1, n_plain: 1, total: 4 }
+    }
+
+    /// A full valid upload for `shape()`: BEGIN, one ct chunk, one plain
+    /// value, END — authenticated when `tx` is armed.
+    fn upload_stream(client: u64, round: u64, tx: &mut Option<TxAuth>, p: &CkksParams) -> Vec<u8> {
+        let mut b = Vec::new();
+        let begin = encode_begin(client, 0.5, 1, 1, 4);
+        write_frame_with(&mut b, round, FrameKind::Begin, 0, &begin, tx).unwrap();
+        let ct = ciphertext_shard_to_bytes(&Ciphertext::zero(p), 0, p.num_limbs());
+        write_frame_with(&mut b, round, FrameKind::CtChunk, 0, &ct, tx).unwrap();
+        write_frame_with(&mut b, round, FrameKind::Plain, 0, &7.0f32.to_le_bytes(), tx).unwrap();
+        let end = encode_end_timing(1.0, 2.0, 0.5);
+        write_frame_with(&mut b, round, FrameKind::End, 0, &end, tx).unwrap();
+        b
+    }
+
+    #[test]
+    fn plain_handshake_and_upload_survive_byte_at_a_time_reads() {
+        let p = params();
+        let mut m = SessionMachine::new(frame_payload_cap(&p), None, [0u8; 16]);
+        let mut wire = frame_bytes(CONTROL_ROUND, FrameKind::Hello, 0, &encode_hello(9));
+        let upload = upload_stream(9, 3, &mut None, &p);
+        let upload_len = upload.len() as u64;
+        wire.extend_from_slice(&upload);
+        let ctx = RoundCtx { round_id: 3, shape: shape(), expect_alpha: Some(0.5), params: &p };
+        let mut registered = None;
+        let mut uploaded = None;
+        for &byte in &wire {
+            m.push(&[byte]);
+            while let Some(step) = m.poll(Some(&ctx)).unwrap() {
+                match step {
+                    Step::Register { client, tx } => {
+                        assert!(tx.is_none(), "legacy wire must not arm a downlink MAC");
+                        registered = Some(client);
+                    }
+                    Step::Upload { frames } => uploaded = Some(frames),
+                    _ => panic!("unexpected step"),
+                }
+            }
+        }
+        assert_eq!(registered, Some(9));
+        assert_eq!(m.client(), Some(9));
+        let frames = uploaded.expect("upload must complete");
+        assert_eq!(frames.client, 9);
+        assert_eq!(frames.alpha, 0.5);
+        assert_eq!(frames.update.plain, vec![7.0]);
+        assert_eq!(frames.update.total, 4);
+        assert_eq!(frames.train_secs, 1.0);
+        assert_eq!(m.take_wire_bytes(), upload_len);
+    }
+
+    #[test]
+    fn uploads_stay_buffered_until_a_round_is_armed() {
+        let p = params();
+        let mut m = SessionMachine::new(frame_payload_cap(&p), None, [0u8; 16]);
+        m.push(&frame_bytes(CONTROL_ROUND, FrameKind::Hello, 0, &encode_hello(2)));
+        assert!(matches!(m.poll(None).unwrap(), Some(Step::Register { client: 2, .. })));
+        // the whole upload arrives before the server arms the round
+        m.push(&upload_stream(2, 0, &mut None, &p));
+        assert!(m.poll(None).unwrap().is_none());
+        assert!(m.poll(None).unwrap().is_none(), "no round armed: frames stay put");
+        let ctx = RoundCtx { round_id: 0, shape: shape(), expect_alpha: None, params: &p };
+        match m.poll(Some(&ctx)).unwrap() {
+            Some(Step::Upload { frames }) => assert_eq!(frames.client, 2),
+            _ => panic!("armed round must drain the buffered upload"),
+        }
+    }
+
+    #[test]
+    fn stats_probe_short_circuits_registration() {
+        let p = params();
+        let mut m = SessionMachine::new(frame_payload_cap(&p), None, [0u8; 16]);
+        m.push(&frame_bytes(CONTROL_ROUND, FrameKind::Stats, 0, &[]));
+        assert!(matches!(m.poll(None).unwrap(), Some(Step::Stats)));
+        assert_eq!(m.client(), None);
+    }
+
+    #[test]
+    fn mac_handshake_verifies_the_proof_and_soft_rejects_forgeries() {
+        let p = params();
+        let root = [7u8; 32];
+        let mut m = SessionMachine::new(frame_payload_cap(&p), Some(root), [3u8; 16]);
+        m.push(&frame_bytes(CONTROL_ROUND, FrameKind::Hello, 0, &encode_hello(4)));
+        let nonce = match m.poll(None).unwrap() {
+            Some(Step::Challenge { nonce }) => nonce,
+            _ => panic!("mac mode must challenge before registering"),
+        };
+        assert_eq!(nonce, [3u8; 16]);
+        assert!(m.poll(None).unwrap().is_none());
+        let skey = mac::derive_session_key(&mac::derive_client_key(&root, 4), &nonce);
+        let resp = encode_challenge_resp(4, mac::handshake_tag(&skey, &nonce, 4));
+        m.push(&frame_bytes(CONTROL_ROUND, FrameKind::ChallengeResp, 0, &resp));
+        let tx = match m.poll(None).unwrap() {
+            Some(Step::Register { client, tx }) => {
+                assert_eq!(client, 4);
+                tx
+            }
+            _ => panic!("valid proof must register"),
+        };
+        assert!(tx.is_some(), "mac mode must arm the downlink authenticator");
+
+        // a forged (untagged) frame injected ahead of the real upload is a
+        // counted soft reject; the authenticated stream stays aligned
+        let rejects_before = crate::obs::metrics::snapshot_auth_rejects();
+        let mut forged = frame_bytes(1, FrameKind::Plain, 9, &0.0f32.to_le_bytes());
+        forged.extend_from_slice(&[0u8; AUTH_TRAILER_BYTES]);
+        m.push(&forged);
+        let mut tx_up = Some(TxAuth::new(MacKey(skey.0), AUTH_DIR_UP));
+        m.push(&upload_stream(4, 1, &mut tx_up, &p));
+        let ctx = RoundCtx { round_id: 1, shape: shape(), expect_alpha: Some(0.5), params: &p };
+        match m.poll(Some(&ctx)).unwrap() {
+            Some(Step::Upload { frames }) => assert_eq!(frames.client, 4),
+            _ => panic!("upload must survive an interleaved forgery"),
+        }
+        assert!(
+            crate::obs::metrics::snapshot_auth_rejects() > rejects_before,
+            "the forgery must be counted"
+        );
+    }
+
+    #[test]
+    fn bad_handshake_proof_is_fatal_and_counted() {
+        let p = params();
+        let root = [7u8; 32];
+        let mut m = SessionMachine::new(frame_payload_cap(&p), Some(root), [3u8; 16]);
+        m.push(&frame_bytes(CONTROL_ROUND, FrameKind::Hello, 0, &encode_hello(4)));
+        assert!(matches!(m.poll(None).unwrap(), Some(Step::Challenge { .. })));
+        let rejects_before = crate::obs::metrics::snapshot_auth_rejects();
+        let resp = encode_challenge_resp(4, 0xdead_beef);
+        m.push(&frame_bytes(CONTROL_ROUND, FrameKind::ChallengeResp, 0, &resp));
+        assert!(m.poll(None).is_err());
+        assert!(crate::obs::metrics::snapshot_auth_rejects() > rejects_before);
+    }
+
+    #[test]
+    fn protocol_violations_are_hard_errors() {
+        let p = params();
+        // first frame must be HELLO (or STATS)
+        let mut m = SessionMachine::new(frame_payload_cap(&p), None, [0u8; 16]);
+        m.push(&frame_bytes(CONTROL_ROUND, FrameKind::Begin, 0, &[0u8; 32]));
+        assert!(m.poll(None).is_err());
+        // reserved sentinel id
+        let mut m = SessionMachine::new(frame_payload_cap(&p), None, [0u8; 16]);
+        m.push(&frame_bytes(
+            CONTROL_ROUND,
+            FrameKind::Hello,
+            0,
+            &encode_hello(UNIDENTIFIED_CLIENT),
+        ));
+        assert!(m.poll(None).is_err());
+        // a registered session's upload frames must carry the armed round
+        let mut m = SessionMachine::new(frame_payload_cap(&p), None, [0u8; 16]);
+        m.push(&frame_bytes(CONTROL_ROUND, FrameKind::Hello, 0, &encode_hello(5)));
+        assert!(matches!(m.poll(None).unwrap(), Some(Step::Register { .. })));
+        m.push(&upload_stream(5, 8, &mut None, &p));
+        let ctx = RoundCtx { round_id: 3, shape: shape(), expect_alpha: None, params: &p };
+        assert!(m.poll(Some(&ctx)).is_err());
+        // an upload must open with BEGIN
+        let mut m = SessionMachine::new(frame_payload_cap(&p), None, [0u8; 16]);
+        m.push(&frame_bytes(CONTROL_ROUND, FrameKind::Hello, 0, &encode_hello(5)));
+        assert!(matches!(m.poll(None).unwrap(), Some(Step::Register { .. })));
+        m.push(&frame_bytes(3, FrameKind::Plain, 0, &0.0f32.to_le_bytes()));
+        assert!(m.poll(Some(&ctx)).is_err());
+    }
+
+    #[test]
+    fn oversized_declared_length_is_rejected_from_the_header_alone() {
+        let mut d = FrameDecoder::new(1024);
+        let mut frame = frame_bytes(0, FrameKind::Plain, 0, &[0u8; 8]);
+        frame[24..28].copy_from_slice(&u32::MAX.to_le_bytes());
+        // only the header needs to arrive for the cap check to fire
+        d.push(&frame[..FRAME_HEADER_BYTES]);
+        assert!(d.next_frame(&mut None).is_err());
+    }
+
+    #[test]
+    fn decoder_resumes_across_partial_reads() {
+        let p = params();
+        let mut d = FrameDecoder::new(frame_payload_cap(&p));
+        let frame = frame_bytes(0, FrameKind::Plain, 0, &1.0f32.to_le_bytes());
+        d.push(&frame[..5]);
+        assert!(d.next_frame(&mut None).unwrap().is_none());
+        d.push(&frame[5..]);
+        let (round, kind, _seq, pr) = d.next_frame(&mut None).unwrap().unwrap();
+        assert_eq!((round, kind), (0, FrameKind::Plain));
+        assert_eq!(d.bytes(pr), &1.0f32.to_le_bytes()[..]);
+        assert_eq!(d.pending(), 0);
+    }
+}

@@ -29,6 +29,12 @@
 //!   the handshake runs a keyed challenge/response and every session
 //!   frame carries a truncated keyed-hash tag + monotone sequence number
 //!   (replay rejection).
+//! * [`hub`] — the sharded epoll reactor backend (DESIGN.md §13): the same
+//!   session protocol as [`session`], served readiness-driven from a fixed
+//!   thread pool ([`machine`] holds the per-session nonblocking state
+//!   machines, [`reactor`] the epoll/eventfd syscall surface). Selected
+//!   with `--transport-backend hub`; thousands of concurrent sessions cost
+//!   buffers, not threads.
 //! * [`chaos`] — deterministic fault injection between the frame codec and
 //!   the socket (seeded drop/corrupt/delay/duplicate/disconnect schedules)
 //!   for the adversarial transport harness in `crate::attacks`.
@@ -44,11 +50,15 @@
 pub mod chaos;
 pub mod client;
 pub mod frame;
+pub mod hub;
 pub mod intake;
+pub(crate) mod machine;
+pub(crate) mod reactor;
 pub(crate) mod reassembly;
 pub mod session;
 
 pub use chaos::{ChaosConfig, ChaosWriter};
+pub use hub::{ReactorHub, TransportHub};
 pub use client::{
     connect_with_backoff, upload_encrypt_streaming, upload_partial_then_disconnect,
     upload_update, UploadConfig, UploadReceipt,

@@ -1,0 +1,273 @@
+//! Minimal readiness reactor over raw `epoll` (DESIGN.md §13).
+//!
+//! The event-driven session hub (`transport::hub`) needs OS readiness
+//! notification without a vendored `mio`: this module hand-rolls the three
+//! `epoll` syscalls plus `eventfd` through `extern "C"` declarations (std
+//! already links the platform libc, so no new dependency is introduced —
+//! the build stays offline). The surface is deliberately tiny and
+//! level-triggered:
+//!
+//! * [`Poller`] — one `epoll` instance; sockets register with a caller
+//!   chosen `u64` token and `(readable, writable)` interest, and
+//!   [`Poller::wait`] parks the shard thread until readiness or timeout
+//!   (no busy-wait, no sleep loop).
+//! * [`Wakeup`] — a nonblocking `eventfd` registered like any socket, so
+//!   other threads (the hub façade, the accept thread, `shutdown`) can
+//!   interrupt a parked [`Poller::wait`] to deliver queued commands.
+//!
+//! Level-triggered mode keeps the state machines simple: a socket with
+//! unread bytes or writable buffer space keeps reporting ready, so a shard
+//! that stops mid-frame (frame-buffer pool exhausted, fairness cap) is
+//! re-notified on the next `wait` without edge-trigger re-arm bookkeeping.
+
+use std::fs::File;
+use std::io::{self, Read, Write};
+use std::os::fd::{AsRawFd, FromRawFd, RawFd};
+use std::time::Duration;
+
+// Raw syscall bindings (x86_64 Linux ABI). `std` links libc, so these
+// resolve at link time without adding a crate.
+extern "C" {
+    fn epoll_create1(flags: i32) -> i32;
+    fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+    fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+    fn eventfd(initval: u32, flags: i32) -> i32;
+    fn close(fd: i32) -> i32;
+}
+
+const EPOLLIN: u32 = 0x001;
+const EPOLLOUT: u32 = 0x004;
+const EPOLLERR: u32 = 0x008;
+const EPOLLHUP: u32 = 0x010;
+const EPOLLRDHUP: u32 = 0x2000;
+
+const EPOLL_CTL_ADD: i32 = 1;
+const EPOLL_CTL_DEL: i32 = 2;
+const EPOLL_CTL_MOD: i32 = 3;
+
+const EPOLL_CLOEXEC: i32 = 0o2000000;
+const EFD_CLOEXEC: i32 = 0o2000000;
+const EFD_NONBLOCK: i32 = 0o4000;
+
+/// `struct epoll_event` with the x86_64 layout (packed, 12 bytes).
+#[repr(C, packed)]
+#[derive(Clone, Copy)]
+struct EpollEvent {
+    events: u32,
+    data: u64,
+}
+
+/// One readiness notification out of [`Poller::wait`].
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct Event {
+    /// The token the fd was registered with.
+    pub token: u64,
+    /// `EPOLLIN`: bytes (or a pending accept) are available.
+    pub readable: bool,
+    /// `EPOLLOUT`: the socket send buffer has room.
+    pub writable: bool,
+    /// `EPOLLERR`/`EPOLLHUP`/`EPOLLRDHUP`: the peer closed or the socket
+    /// errored — drive the read path to observe the EOF/error.
+    pub closed: bool,
+}
+
+fn cvt(ret: i32) -> io::Result<i32> {
+    if ret < 0 {
+        Err(io::Error::last_os_error())
+    } else {
+        Ok(ret)
+    }
+}
+
+fn interest_bits(readable: bool, writable: bool) -> u32 {
+    let mut ev = EPOLLRDHUP; // always observe peer half-close
+    if readable {
+        ev |= EPOLLIN;
+    }
+    if writable {
+        ev |= EPOLLOUT;
+    }
+    ev
+}
+
+/// A level-triggered `epoll` instance owning its epoll fd.
+pub(crate) struct Poller {
+    epfd: RawFd,
+}
+
+impl Poller {
+    pub fn new() -> io::Result<Self> {
+        // Safety: no pointers involved; a negative return is mapped to errno.
+        let epfd = cvt(unsafe { epoll_create1(EPOLL_CLOEXEC) })?;
+        Ok(Poller { epfd })
+    }
+
+    fn ctl(&self, op: i32, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+        let mut ev = EpollEvent { events, data: token };
+        // Safety: `ev` outlives the call; the kernel copies it out.
+        cvt(unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) })?;
+        Ok(())
+    }
+
+    /// Register `fd` under `token` with the given interest.
+    pub fn add(&self, fd: RawFd, token: u64, readable: bool, writable: bool) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_ADD, fd, interest_bits(readable, writable), token)
+    }
+
+    /// Change the interest set of an already registered fd.
+    pub fn modify(&self, fd: RawFd, token: u64, readable: bool, writable: bool) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_MOD, fd, interest_bits(readable, writable), token)
+    }
+
+    /// Deregister an fd (must be called before the fd is closed elsewhere,
+    /// or the kernel drops it automatically on close).
+    pub fn delete(&self, fd: RawFd) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_DEL, fd, 0, 0)
+    }
+
+    /// Park until readiness or `timeout` (`None` = wait forever), appending
+    /// the ready set to `out` (which is cleared first). Returns the number
+    /// of events delivered; `0` means the timeout elapsed.
+    pub fn wait(&self, out: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<usize> {
+        out.clear();
+        let timeout_ms: i32 = match timeout {
+            None => -1,
+            // round up so a 100µs deadline doesn't turn into a spin at 0ms
+            Some(d) => d
+                .as_millis()
+                .saturating_add(u128::from(d.subsec_nanos() % 1_000_000 != 0))
+                .min(i32::MAX as u128) as i32,
+        };
+        let mut buf = [EpollEvent { events: 0, data: 0 }; 256];
+        let n = loop {
+            // Safety: `buf` is a valid, writable array of `maxevents` entries.
+            let ret = unsafe {
+                epoll_wait(self.epfd, buf.as_mut_ptr(), buf.len() as i32, timeout_ms)
+            };
+            match cvt(ret) {
+                Ok(n) => break n as usize,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        };
+        for ev in &buf[..n] {
+            let bits = ev.events;
+            out.push(Event {
+                token: ev.data,
+                readable: bits & EPOLLIN != 0,
+                writable: bits & EPOLLOUT != 0,
+                closed: bits & (EPOLLERR | EPOLLHUP | EPOLLRDHUP) != 0,
+            });
+        }
+        Ok(n)
+    }
+}
+
+impl Drop for Poller {
+    fn drop(&mut self) {
+        // Safety: epfd is owned by this Poller and closed exactly once.
+        unsafe {
+            close(self.epfd);
+        }
+    }
+}
+
+/// Cross-thread wakeup: a nonblocking `eventfd` whose read side sits in a
+/// [`Poller`] under a reserved token. [`Wakeup::wake`] is cheap, wait-free
+/// from the caller's perspective, and safe from any thread.
+pub(crate) struct Wakeup {
+    file: File,
+}
+
+impl Wakeup {
+    pub fn new() -> io::Result<Self> {
+        let fd = cvt(unsafe { eventfd(0, EFD_NONBLOCK | EFD_CLOEXEC) })?;
+        // Safety: `fd` is a fresh, owned eventfd; File takes ownership and
+        // closes it on drop.
+        Ok(Wakeup { file: unsafe { File::from_raw_fd(fd) } })
+    }
+
+    pub fn as_raw_fd(&self) -> RawFd {
+        self.file.as_raw_fd()
+    }
+
+    /// Signal the poller. A full counter (`WouldBlock`) still leaves the fd
+    /// readable, so the wakeup is never lost.
+    pub fn wake(&self) {
+        match (&self.file).write_all(&1u64.to_le_bytes()) {
+            Ok(()) => {}
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {}
+            Err(_) => {}
+        }
+    }
+
+    /// Clear the counter after a wakeup so level-triggered polling settles.
+    pub fn drain(&self) {
+        let mut buf = [0u8; 8];
+        loop {
+            match (&self.file).read(&mut buf) {
+                Ok(_) => break, // one read empties an eventfd counter
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::net::{TcpListener, TcpStream};
+
+    #[test]
+    fn wakeup_interrupts_a_parked_wait() {
+        let poller = Poller::new().unwrap();
+        let wake = Wakeup::new().unwrap();
+        poller.add(wake.as_raw_fd(), 7, true, false).unwrap();
+        let mut events = Vec::new();
+        // nothing pending: a finite wait times out with zero events
+        assert_eq!(poller.wait(&mut events, Some(Duration::from_millis(5))).unwrap(), 0);
+        wake.wake();
+        wake.wake(); // coalesces into one readable notification
+        let n = poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(events[0].token, 7);
+        assert!(events[0].readable);
+        wake.drain();
+        assert_eq!(poller.wait(&mut events, Some(Duration::from_millis(5))).unwrap(), 0);
+    }
+
+    #[test]
+    fn socket_readiness_reports_read_write_and_close() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+
+        let poller = Poller::new().unwrap();
+        poller.add(server.as_raw_fd(), 42, true, true).unwrap();
+        let mut events = Vec::new();
+
+        // a fresh socket is writable but not readable
+        poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+        let ev = events.iter().find(|e| e.token == 42).unwrap();
+        assert!(ev.writable && !ev.readable);
+
+        // narrowing interest to read-only silences the writable report
+        poller.modify(server.as_raw_fd(), 42, true, false).unwrap();
+        assert_eq!(poller.wait(&mut events, Some(Duration::from_millis(5))).unwrap(), 0);
+
+        client.write_all(b"ping").unwrap();
+        poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+        assert!(events.iter().any(|e| e.token == 42 && e.readable));
+
+        drop(client); // peer close surfaces as a closed (RDHUP) event
+        poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+        assert!(events.iter().any(|e| e.token == 42 && e.closed));
+
+        poller.delete(server.as_raw_fd()).unwrap();
+        assert_eq!(poller.wait(&mut events, Some(Duration::from_millis(5))).unwrap(), 0);
+    }
+}

@@ -7,7 +7,17 @@
 //! The validation rules are identical, so both loops feed this assembler —
 //! one instrumented, fuzz-hardened implementation instead of two
 //! hand-kept copies (ROADMAP item 1 follow-up).
+//!
+//! [`UploadAssembly`] layers the *uplink protocol* on top: the
+//! BEGIN-preamble identity/weight/shape checks and the per-frame-kind
+//! dispatch that both upload collectors — the blocking
+//! `intake::read_upload` and the nonblocking `machine::SessionMachine` —
+//! previously hand-kept as twin loops (DESIGN.md §13). Both backends now
+//! validate uploads through this one implementation, so they accept and
+//! reject byte-for-byte the same streams.
 
+use super::frame::{decode_begin, decode_end_timing, FrameKind, BEGIN_PAYLOAD_BYTES};
+use super::intake::{UpdateShape, UploadFrames, UNIDENTIFIED_CLIENT};
 use crate::ckks::serialize::ciphertext_shard_from_bytes;
 use crate::ckks::{Ciphertext, CkksParams};
 use crate::he_agg::EncryptedUpdate;
@@ -103,6 +113,117 @@ impl ChunkAssembler {
     }
 }
 
+/// End-to-end validation of one client upload: BEGIN preamble checks plus
+/// the chunk/END dispatch, over a [`ChunkAssembler`]. The protocol rules —
+/// reserved-id rejection, session identity pinning, assigned-weight
+/// pinning, exact shape match, duplicate-BEGIN and unexpected-kind
+/// rejection — live here once, shared by the blocking and reactor
+/// backends.
+pub(crate) struct UploadAssembly {
+    client: u64,
+    alpha: f64,
+    asm: ChunkAssembler,
+}
+
+impl UploadAssembly {
+    /// Validate a BEGIN payload and open the assembly. `expect_client`
+    /// pins the identity (persistent sessions know whose socket this is),
+    /// `expect_alpha` pins the server-assigned FedAvg weight, and the
+    /// declared shape must match the round's server-derived shape exactly
+    /// — a client can never size a server-side buffer. `seen_client` is
+    /// stamped as soon as the identity validates (before the shape check),
+    /// so a shape-rejected upload still settles its participant slot.
+    pub fn begin(
+        payload: &[u8],
+        shape: UpdateShape,
+        expect_client: Option<u64>,
+        expect_alpha: Option<f64>,
+        seen_client: &mut Option<u64>,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            payload.len() == BEGIN_PAYLOAD_BYTES,
+            "BEGIN payload length {}",
+            payload.len()
+        );
+        let (client, alpha, n_cts, n_plain, total) = decode_begin(payload)?;
+        // rejected before the connection counts as "identified": the
+        // sentinel would corrupt slot settling and straggler accounting
+        anyhow::ensure!(
+            client != UNIDENTIFIED_CLIENT,
+            "client id {client} is reserved"
+        );
+        if let Some(expected) = expect_client {
+            anyhow::ensure!(
+                client == expected,
+                "session for client {expected} sent BEGIN for client {client}"
+            );
+        }
+        if let Some(expected) = expect_alpha {
+            anyhow::ensure!(
+                (alpha - expected).abs() <= 1e-9,
+                "client {client} declared FedAvg weight {alpha}, round assigned {expected}"
+            );
+        }
+        *seen_client = Some(client);
+        anyhow::ensure!(
+            n_cts == shape.n_cts && n_plain == shape.n_plain && total == shape.total,
+            "upload shape ({n_cts} cts, {n_plain} plain, {total} total) does not match \
+             the round shape ({} cts, {} plain, {} total)",
+            shape.n_cts,
+            shape.n_plain,
+            shape.total
+        );
+        Ok(UploadAssembly {
+            client,
+            alpha,
+            asm: ChunkAssembler::new(n_cts, n_plain, total),
+        })
+    }
+
+    /// The validated identity from the BEGIN preamble.
+    pub fn client(&self) -> u64 {
+        self.client
+    }
+
+    /// Feed one post-BEGIN frame. Returns `Some(train, encrypt, loss)`
+    /// when the END frame arrived (the upload is complete — call
+    /// [`UploadAssembly::finish`]), `None` for an accepted chunk.
+    pub fn accept(
+        &mut self,
+        params: &CkksParams,
+        kind: FrameKind,
+        seq: u32,
+        payload: &[u8],
+    ) -> anyhow::Result<Option<(f64, f64, f32)>> {
+        match kind {
+            FrameKind::CtChunk => {
+                self.asm.accept_ct(params, seq, payload)?;
+                Ok(None)
+            }
+            FrameKind::Plain => {
+                self.asm.accept_plain(seq, payload)?;
+                Ok(None)
+            }
+            FrameKind::End => Ok(Some(decode_end_timing(payload)?)),
+            FrameKind::Begin => anyhow::bail!("duplicate BEGIN frame"),
+            other => anyhow::bail!("unexpected {other:?} frame in an upload"),
+        }
+    }
+
+    /// Seal the upload with the END frame's timing payload.
+    pub fn finish(self, timing: (f64, f64, f32)) -> anyhow::Result<UploadFrames> {
+        let update = self.asm.finish()?;
+        Ok(UploadFrames {
+            client: self.client,
+            alpha: self.alpha,
+            train_secs: timing.0,
+            encrypt_secs: timing.1,
+            loss: timing.2,
+            update,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -157,5 +278,69 @@ mod tests {
         assert!(a.finish().is_err());
         let a = ChunkAssembler::new(0, 1, 1);
         assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn upload_assembly_runs_the_full_protocol() {
+        use crate::transport::frame::{encode_begin, encode_end_timing};
+        let p = params();
+        let shape = UpdateShape { n_cts: 1, n_plain: 2, total: 10 };
+        let begin = encode_begin(5, 0.5, 1, 2, 10);
+        let mut seen = None;
+        let mut a =
+            UploadAssembly::begin(&begin, shape, Some(5), Some(0.5), &mut seen).unwrap();
+        assert_eq!(seen, Some(5));
+        assert_eq!(a.client(), 5);
+        assert!(a.accept(&p, FrameKind::CtChunk, 0, &ct_bytes(&p)).unwrap().is_none());
+        let mut two = Vec::new();
+        two.extend_from_slice(&1.0f32.to_le_bytes());
+        two.extend_from_slice(&2.0f32.to_le_bytes());
+        assert!(a.accept(&p, FrameKind::Plain, 0, &two).unwrap().is_none());
+        let timing = a
+            .accept(&p, FrameKind::End, 0, &encode_end_timing(1.0, 0.5, 0.25))
+            .unwrap()
+            .unwrap();
+        assert_eq!(timing, (1.0, 0.5, 0.25));
+        let frames = a.finish(timing).unwrap();
+        assert_eq!(frames.client, 5);
+        assert_eq!(frames.alpha, 0.5);
+        assert_eq!(frames.update.plain, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn upload_assembly_rejects_protocol_violations() {
+        use crate::transport::frame::encode_begin;
+        let p = params();
+        let shape = UpdateShape { n_cts: 1, n_plain: 2, total: 10 };
+
+        // reserved sentinel id never identifies a session
+        let mut seen = None;
+        let bad = encode_begin(UNIDENTIFIED_CLIENT, 0.5, 1, 2, 10);
+        assert!(UploadAssembly::begin(&bad, shape, None, None, &mut seen).is_err());
+        assert_eq!(seen, None);
+
+        // identity pinned to the session's handshake
+        let mut seen = None;
+        let begin = encode_begin(5, 0.5, 1, 2, 10);
+        assert!(UploadAssembly::begin(&begin, shape, Some(6), None, &mut seen).is_err());
+        assert_eq!(seen, None, "identity mismatch must not identify the slot");
+
+        // skewed declared weight rejected against the assigned one
+        let mut seen = None;
+        assert!(UploadAssembly::begin(&begin, shape, Some(5), Some(0.25), &mut seen).is_err());
+
+        // shape mismatch settles the slot (seen is stamped) but fails
+        let mut seen = None;
+        let wrong = encode_begin(5, 0.5, 2, 2, 10);
+        assert!(UploadAssembly::begin(&wrong, shape, Some(5), Some(0.5), &mut seen).is_err());
+        assert_eq!(seen, Some(5), "shape rejects happen after identification");
+
+        // duplicate BEGIN and out-of-protocol kinds are fatal
+        let mut seen = None;
+        let mut a =
+            UploadAssembly::begin(&begin, shape, None, None, &mut seen).unwrap();
+        assert!(a.accept(&p, FrameKind::Begin, 0, &begin).is_err());
+        let mut a = UploadAssembly::begin(&begin, shape, None, None, &mut seen).unwrap();
+        assert!(a.accept(&p, FrameKind::Hello, 0, &[]).is_err());
     }
 }

@@ -59,8 +59,9 @@ use crate::he_agg::{EncryptedUpdate, EncryptionMask};
 use std::collections::HashMap;
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::fd::AsRawFd;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// One server-side persistent session.
@@ -94,30 +95,113 @@ type SharedSession = Arc<Mutex<PeerSession>>;
 
 /// The most recent downlink of each stage, kept so a mid-round rejoin can
 /// be replayed what it missed (the aggregate payloads are shared with the
-/// broadcast path via `Arc` — caching copies nothing model-sized).
+/// broadcast path via `Arc` — caching copies nothing model-sized). Shared
+/// with the reactor backend (`super::hub`), which keeps the same replay
+/// semantics under its registry lock.
 #[derive(Default)]
-struct DownlinkCache {
+pub(crate) struct DownlinkCache {
     /// Serialized agreed mask (the MASK broadcast payload).
-    mask: Option<Vec<u8>>,
+    pub mask: Option<Vec<u8>>,
     /// The in-flight round's downlink: per-client preambles + the shared
     /// aggregate's pre-encoded frame payloads.
-    round: Option<RoundSnapshot>,
+    pub round: Option<RoundSnapshot>,
 }
 
-struct RoundSnapshot {
-    round: u64,
-    plans: Vec<(u64, DownBegin)>,
+pub(crate) struct RoundSnapshot {
+    pub round: u64,
+    pub plans: Vec<(u64, DownBegin)>,
     /// Whether the broadcast actually carried aggregate payloads (guards a
     /// replay against a preamble whose chunks were never encoded).
-    has_payloads: bool,
-    ct_payloads: Arc<Vec<Vec<u8>>>,
-    plain_payloads: Arc<Vec<Vec<u8>>>,
+    pub has_payloads: bool,
+    pub ct_payloads: Arc<Vec<Vec<u8>>>,
+    pub plain_payloads: Arc<Vec<Vec<u8>>>,
+}
+
+/// One client's slice of the cached round downlink (Arc-shared payloads —
+/// snapshotting copies nothing model-sized).
+pub(crate) struct RoundReplay {
+    pub round: u64,
+    pub down: DownBegin,
+    pub has_payloads: bool,
+    pub ct_payloads: Arc<Vec<Vec<u8>>>,
+    pub plain_payloads: Arc<Vec<Vec<u8>>>,
+}
+
+impl DownlinkCache {
+    /// Snapshot what a (re)joining `client` must be replayed: the agreed
+    /// mask and, when the in-flight round's broadcast addressed it, that
+    /// round's preamble + shared aggregate payloads. Callers take this
+    /// under their registry/cache lock and write the frames after.
+    pub fn replay_for(&self, client: u64) -> (Option<Vec<u8>>, Option<RoundReplay>) {
+        let round = self.round.as_ref().and_then(|snap| {
+            snap.plans
+                .iter()
+                .find(|(id, _)| *id == client)
+                .map(|(_, down)| RoundReplay {
+                    round: snap.round,
+                    down: *down,
+                    has_payloads: snap.has_payloads,
+                    ct_payloads: snap.ct_payloads.clone(),
+                    plain_payloads: snap.plain_payloads.clone(),
+                })
+        });
+        (self.mask.clone(), round)
+    }
+}
+
+/// Write a (re)join's downlink replay — the cached mask, then the cached
+/// round downlink when present — shared by the blocking handshake and the
+/// reactor shard's registration step.
+pub(crate) fn write_replay<W: Write>(
+    w: &mut W,
+    mask: &Option<Vec<u8>>,
+    round: &Option<RoundReplay>,
+    auth: &mut Option<TxAuth>,
+) -> std::io::Result<u64> {
+    let mut sent = 0u64;
+    if let Some(mask) = mask {
+        sent += write_frame_with(w, MASK_ROUND, FrameKind::Mask, 0, mask, auth)?;
+    }
+    if let Some(replay) = round {
+        let carried = (replay.down.has_agg && replay.has_payloads)
+            .then(|| (replay.ct_payloads.as_slice(), replay.plain_payloads.as_slice()));
+        sent += write_round_frames(w, replay.round, &replay.down, carried, auth)?;
+    }
+    Ok(sent)
+}
+
+/// Pre-encode a shared aggregate's downlink frame payloads **once** (per-ct
+/// shard bytes + packed plain chunks) for fan-out to every session —
+/// O(model + N·frames), not O(N·model). Shared by both hub backends.
+pub(crate) fn encode_agg_payloads(agg: &EncryptedUpdate) -> (Vec<Vec<u8>>, Vec<Vec<u8>>) {
+    let mut ct_payloads: Vec<Vec<u8>> = Vec::with_capacity(agg.cts.len());
+    for ct in &agg.cts {
+        let mut b = Vec::new();
+        ciphertext_shard_append(ct, 0, ct.c0.num_limbs(), &mut b);
+        ct_payloads.push(b);
+    }
+    let mut plain_payloads: Vec<Vec<u8>> =
+        Vec::with_capacity(agg.plain.len().div_ceil(PLAIN_CHUNK_VALUES.max(1)));
+    for chunk in agg.plain.chunks(PLAIN_CHUNK_VALUES) {
+        let mut b = Vec::with_capacity(chunk.len() * 4);
+        for &v in chunk {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        plain_payloads.push(b);
+    }
+    (ct_payloads, plain_payloads)
 }
 
 struct HubShared {
     listener: TcpListener,
     params: Arc<CkksParams>,
     sessions: Mutex<HashMap<u64, SharedSession>>,
+    /// Signaled (with the `sessions` lock) whenever a handshake registers a
+    /// session — [`SessionHub::wait_for_clients`] parks here instead of
+    /// sleep-polling the registry.
+    joined: Condvar,
+    /// Interrupts the accept loop's epoll park (shutdown).
+    accept_wake: super::reactor::Wakeup,
     /// Advertised in WELCOME: the next wire round this server will serve
     /// ([`MASK_ROUND`] until the mask broadcast happens).
     next_round: AtomicU64,
@@ -172,6 +256,8 @@ impl SessionHub {
             listener,
             params,
             sessions: Mutex::new(HashMap::new()),
+            joined: Condvar::new(),
+            accept_wake: super::reactor::Wakeup::new()?,
             next_round: AtomicU64::new(MASK_ROUND),
             stop: AtomicBool::new(false),
             max_sessions: max_sessions.max(1),
@@ -247,21 +333,31 @@ impl SessionHub {
     }
 
     /// Block until `n` distinct clients hold sessions (the serve-side
-    /// handshake barrier). Errors after `wait` with the shortfall.
+    /// handshake barrier). Errors after `wait` with the shortfall. Parks on
+    /// the registry condvar — each registering handshake wakes it — rather
+    /// than sleep-polling the session map.
     pub fn wait_for_clients(&self, n: usize, wait: Duration) -> anyhow::Result<Vec<u64>> {
         let deadline = Instant::now() + wait;
+        let mut map = self.shared.sessions.lock().unwrap();
         loop {
-            let ids = self.connected();
-            if ids.len() >= n {
+            if map.len() >= n {
+                let mut ids: Vec<u64> = map.keys().copied().collect();
+                ids.sort_unstable();
                 return Ok(ids);
             }
+            let now = Instant::now();
             anyhow::ensure!(
-                Instant::now() < deadline,
+                now < deadline,
                 "only {}/{n} clients joined within {:.0?}",
-                ids.len(),
+                map.len(),
                 wait
             );
-            std::thread::sleep(Duration::from_millis(5));
+            let (guard, _timed_out) = self
+                .shared
+                .joined
+                .wait_timeout(map, deadline - now)
+                .unwrap();
+            map = guard;
         }
     }
 
@@ -310,22 +406,10 @@ impl SessionHub {
     ) -> DownlinkOutcome {
         let start = Instant::now();
         // pre-encode the shared aggregate's frame payloads once
-        let mut ct_payloads: Vec<Vec<u8>> = Vec::new();
-        let mut plain_payloads: Vec<Vec<u8>> = Vec::new();
-        if let Some(agg) = agg {
-            for ct in &agg.cts {
-                let mut b = Vec::new();
-                ciphertext_shard_append(ct, 0, ct.c0.num_limbs(), &mut b);
-                ct_payloads.push(b);
-            }
-            for chunk in agg.plain.chunks(PLAIN_CHUNK_VALUES) {
-                let mut b = Vec::with_capacity(chunk.len() * 4);
-                for &v in chunk {
-                    b.extend_from_slice(&v.to_le_bytes());
-                }
-                plain_payloads.push(b);
-            }
-        }
+        let (ct_payloads, plain_payloads) = match agg {
+            Some(agg) => encode_agg_payloads(agg),
+            None => (Vec::new(), Vec::new()),
+        };
         let ct_payloads = Arc::new(ct_payloads);
         let plain_payloads = Arc::new(plain_payloads);
         // cache before pushing (Arc-shared payloads — no copy): a client
@@ -579,6 +663,7 @@ impl SessionHub {
     /// Stop accepting, close every session, and join the accept thread.
     pub fn shutdown(&mut self) {
         self.shared.stop.store(true, Ordering::Relaxed);
+        self.shared.accept_wake.wake();
         let sessions: Vec<SharedSession> = {
             let mut map = self.shared.sessions.lock().unwrap();
             map.drain().map(|(_, s)| s).collect()
@@ -610,6 +695,16 @@ const MAX_HANDSHAKES: usize = 32;
 /// on its own (bounded, detached) thread so a connected-but-silent peer
 /// cannot stall other joins or mid-task rejoins behind its read timeout.
 fn accept_loop(shared: Arc<HubShared>) {
+    // Readiness parking instead of the old 2 ms sleep-poll: the nonblocking
+    // listener and the shutdown eventfd share one epoll set, so the thread
+    // wakes on the next connection (or shutdown), not on a timer. The wait
+    // stays bounded as a belt-and-braces backstop.
+    let poller = super::reactor::Poller::new().ok();
+    if let Some(p) = &poller {
+        p.add(shared.listener.as_raw_fd(), 0, true, false).ok();
+        p.add(shared.accept_wake.as_raw_fd(), 1, true, false).ok();
+    }
+    let mut events = Vec::new();
     while !shared.stop.load(Ordering::Relaxed) {
         match shared.listener.accept() {
             Ok((stream, _peer)) => {
@@ -626,9 +721,16 @@ fn accept_loop(shared: Arc<HubShared>) {
                     sh.handshakes.fetch_sub(1, Ordering::Relaxed);
                 });
             }
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(Duration::from_millis(2));
-            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => match &poller {
+                Some(p) => {
+                    p.wait(&mut events, Some(Duration::from_millis(500))).ok();
+                    if events.iter().any(|ev| ev.token == 1) {
+                        crate::obs::metrics::hub_wakeup();
+                        shared.accept_wake.drain();
+                    }
+                }
+                None => std::thread::sleep(Duration::from_millis(2)),
+            },
             Err(e)
                 if matches!(
                     e.kind(),
@@ -717,22 +819,7 @@ fn handshake(shared: &HubShared, stream: TcpStream) -> anyhow::Result<()> {
     }
     // Snapshot the replay state up front (Arc-shared payloads, no copy) so
     // the downlink lock is never held while writing to a socket.
-    let (replay_mask, replay_round) = {
-        let cache = shared.downlink.lock().unwrap();
-        let mask = cache.mask.clone();
-        let snap = cache.round.as_ref().and_then(|snap| {
-            snap.plans.iter().find(|(id, _)| *id == client).map(|(_, down)| {
-                (
-                    snap.round,
-                    *down,
-                    snap.has_payloads,
-                    snap.ct_payloads.clone(),
-                    snap.plain_payloads.clone(),
-                )
-            })
-        });
-        (mask, snap)
-    };
+    let (replay_mask, replay_round) = shared.downlink.lock().unwrap().replay_for(client);
     // Publish-then-welcome, with the session mutex held across both: the
     // registry entry must exist before the client sees WELCOME (so its
     // immediate upload lands in the slot), but a coordinator broadcast
@@ -750,6 +837,7 @@ fn handshake(shared: &HubShared, stream: TcpStream) -> anyhow::Result<()> {
         );
         map.insert(client, arc.clone())
     };
+    shared.joined.notify_all();
     // rejoin: the replaced (dead) session's socket is shut down, outside
     // the map lock so a reader still draining it cannot stall accepts
     if let Some(old) = replaced {
@@ -776,14 +864,7 @@ fn handshake(shared: &HubShared, stream: TcpStream) -> anyhow::Result<()> {
         // round's preamble/aggregate. A fresh pre-broadcast join sees an
         // empty cache and gets only the WELCOME; the client side discards
         // downlinks it has already processed.
-        if let Some(mask) = &replay_mask {
-            write_frame_with(&mut w, MASK_ROUND, FrameKind::Mask, 0, mask, &mut sess.tx)?;
-        }
-        if let Some((round, down, has_payloads, cts, plains)) = &replay_round {
-            let carried = (down.has_agg && *has_payloads)
-                .then(|| (cts.as_slice(), plains.as_slice()));
-            write_round_frames(&mut w, *round, down, carried, &mut sess.tx)?;
-        }
+        write_replay(&mut w, &replay_mask, &replay_round, &mut sess.tx)?;
         w.flush()?;
     }
     drop(guard);
@@ -835,9 +916,10 @@ fn push_round(
 }
 
 /// The round-downlink frame sequence (preamble, carried payloads, DOWN_END)
-/// against an arbitrary writer — shared by the broadcast path and the
-/// handshake's mid-round rejoin replay.
-fn write_round_frames<W: Write>(
+/// against an arbitrary writer — shared by the broadcast path, the
+/// handshake's mid-round rejoin replay, and the reactor shards' write
+/// queues.
+pub(crate) fn write_round_frames<W: Write>(
     w: &mut W,
     round: u64,
     down: &DownBegin,

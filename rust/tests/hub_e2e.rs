@@ -1,0 +1,408 @@
+//! Acceptance gates for the sharded epoll reactor backend (DESIGN.md §13):
+//! the session-e2e matrix rerun against [`ReactorHub`], plus the scale
+//! gate the thread-per-connection backend cannot express. Everything here
+//! runs on the artifact-free synthetic workload, so these are tier-1
+//! tests on any machine:
+//!
+//! * a full multi-round `--transport tcp --transport-backend hub` run is
+//!   **bitwise identical** to the same-seed `--transport sim` run — with
+//!   and without `--wire-auth mac`;
+//! * a chaos-injected mid-upload disconnect is accounted as a failed
+//!   upload (not absorbed, not a panic), the dead-socket round downlink is
+//!   bridged by the handshake replay cache on rejoin, and the post-rejoin
+//!   round seals bitwise-identical to the in-process oracle;
+//! * 512 concurrent sessions complete one round on the fixed shard pool,
+//!   and the collected aggregate is bitwise-identical to the oracle.
+
+use fedml_he::coordinator::config::WireAuth;
+use fedml_he::coordinator::{FlConfig, FlServer, Selection, Transport, TransportBackend};
+use fedml_he::crypto::prng::ChaChaRng;
+use fedml_he::he_agg::{native, EncryptionMask, SelectiveCodec};
+use fedml_he::transport::{
+    ChaosConfig, ClientSession, DownBegin, IntakeConfig, ReactorHub, SessionOpts, UpdateShape,
+};
+use std::sync::mpsc;
+use std::time::Duration;
+
+/// Deterministic per-(client, round) model — a plain fn so spawned client
+/// threads can call it without borrows.
+fn client_model(total: usize, client: u64, round: u64) -> Vec<f32> {
+    (0..total)
+        .map(|i| ((i as u64 + 131 * client + 7 * round) as f32 * 0.003).sin())
+        .collect()
+}
+
+fn synthetic_cfg() -> FlConfig {
+    FlConfig {
+        model: "synthetic".into(),
+        synthetic_dim: 2048,
+        clients: 3,
+        rounds: 3,
+        local_steps: 2,
+        lr: 0.2,
+        ratio: 0.1,
+        selection: Selection::TopP,
+        dropout: 0.0,
+        eval_every: 3,
+        seed: 17,
+        engine: fedml_he::agg_engine::Engine::Pipeline,
+        shards: 2,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn hub_backend_tcp_run_bitwise_matches_sim_run() {
+    // The tentpole acceptance gate of ISSUE 9: the identical phase machine
+    // over the reactor backend must produce a bitwise-identical final
+    // model to the in-process simulator for the same seed — only the
+    // server's I/O scheduling differs.
+    let sim_cfg = synthetic_cfg();
+    let mut hub_cfg = synthetic_cfg();
+    hub_cfg.transport = Transport::Tcp;
+    hub_cfg.transport_backend = TransportBackend::Hub;
+    let (ra, ga) = FlServer::standalone(sim_cfg).unwrap().run().unwrap();
+    let (rb, gb) = FlServer::standalone(hub_cfg).unwrap().run().unwrap();
+    assert_eq!(ga.len(), gb.len());
+    for (i, (a, b)) in ga.iter().zip(gb.iter()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "param {i}: {a} != {b}");
+    }
+    assert_eq!(ra.timing_source, "simulated");
+    assert_eq!(rb.timing_source, "measured");
+    // real frames in both directions on the reactor too
+    assert!(rb.mask_downlink_bytes > 0);
+    assert!(rb.rounds[1].download_bytes > 0);
+    assert!(rb.fin_downlink_bytes > 0);
+    assert!(rb.rounds.iter().all(|r| r.upload_bytes > 0));
+    assert!(rb.rounds.iter().all(|r| r.stragglers_dropped == 0));
+    for (a, b) in ra.evals.iter().zip(rb.evals.iter()) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+    }
+}
+
+#[test]
+fn hub_backend_authenticated_run_bitwise_matches_sim_run() {
+    // --wire-auth mac on the reactor backend: the challenge/response
+    // handshake and per-frame MAC trailers must stay bitwise-transparent
+    // to the aggregate, exactly as on the blocking backend.
+    let sim_cfg = synthetic_cfg();
+    let mut hub_cfg = synthetic_cfg();
+    hub_cfg.transport = Transport::Tcp;
+    hub_cfg.transport_backend = TransportBackend::Hub;
+    hub_cfg.wire_auth = WireAuth::Mac;
+    let (_, ga) = FlServer::standalone(sim_cfg).unwrap().run().unwrap();
+    let (rb, gb) = FlServer::standalone(hub_cfg).unwrap().run().unwrap();
+    for (i, (a, b)) in ga.iter().zip(gb.iter()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "param {i}: {a} != {b}");
+    }
+    assert_eq!(rb.timing_source, "measured");
+    assert!(rb.rounds.iter().all(|r| r.upload_bytes > 0));
+}
+
+#[test]
+fn chaos_disconnect_is_bridged_by_the_rejoin_replay_on_the_reactor() {
+    // The session-e2e chaos gate rerun against ReactorHub: a
+    // chaos-injected disconnect severs client 1 while its round-0 END
+    // frame is on the wire, so the shard fails its upload (straggler
+    // accounting: failed, not absorbed) AND the round-1 broadcast goes out
+    // against the dead socket. The rejoining client must recover the whole
+    // round-1 downlink purely from the handshake replay cache, and round 1
+    // must then seal bitwise identical to the oracle.
+    let ctx = fedml_he::ckks::CkksContext::new(256, 3, 30).unwrap();
+    let codec = SelectiveCodec::new(ctx.clone());
+    let mut rng = ChaChaRng::from_seed(9, 0);
+    let (pk, _sk) = codec.ctx.keygen(&mut rng);
+    let total = 700usize;
+    // full mask: the uplink is HELLO, BEGIN, n_cts CT chunks, END — which
+    // pins the injected disconnect onto the END frame deterministically
+    let mask = EncryptionMask::full(total);
+    let shape = UpdateShape::for_round(&codec.ctx, &mask);
+    let end_frame = (2 + shape.n_cts + 1) as u64;
+    let mut hub = ReactorHub::bind("127.0.0.1:0", ctx.params.clone(), 8).unwrap();
+    let addr = hub.local_addr().unwrap().to_string();
+    let opts = SessionOpts {
+        connect_retry: Duration::from_secs(5),
+        round_wait: Duration::from_secs(20),
+        io_timeout: Duration::from_secs(5),
+        ..SessionOpts::default()
+    };
+    let encrypt = |client: u64, round: u64| {
+        let mut rng = ChaChaRng::from_seed(300 + client, round);
+        codec.encrypt_update(&client_model(total, client, round), &mask, &pk, &mut rng)
+    };
+    let mask_bytes = mask.to_bytes();
+
+    let (rejoin_tx, rejoin_rx) = mpsc::channel::<()>();
+    let mut rejoin_rx = Some(rejoin_rx);
+    let mut threads = Vec::new();
+    for client in 0..2u64 {
+        let addr = addr.clone();
+        let params = ctx.params.clone();
+        let mut opts = opts.clone();
+        let codec = SelectiveCodec::new(ctx.clone());
+        let pk = pk.clone();
+        let mask = mask.clone();
+        let rejoin_rx = if client == 1 { rejoin_rx.take() } else { None };
+        if client == 1 {
+            opts.chaos = Some(ChaosConfig {
+                disconnect_at_frame: Some(end_frame),
+                ..ChaosConfig::passthrough(0xBAD)
+            });
+        }
+        threads.push(std::thread::spawn(move || {
+            let (mut sess, _) =
+                ClientSession::connect(&addr, client, params.clone(), opts.clone()).unwrap();
+            sess.recv_mask(total).unwrap();
+            let dl = sess.recv_round(0, Some(shape)).unwrap();
+            assert!(dl.down.participate && !dl.down.has_agg);
+            let mut rng = ChaChaRng::from_seed(300 + client, 0);
+            let upd =
+                codec.encrypt_update(&client_model(total, client, 0), &mask, &pk, &mut rng);
+            let r0 = sess.upload(0, 0.5, &upd, None);
+            if client == 1 {
+                assert!(r0.is_err(), "the injected disconnect must fail the upload");
+                // wait until the server has already broadcast round 1 into
+                // the dead socket, then rejoin with a clean link
+                rejoin_rx.unwrap().recv().unwrap();
+                opts.chaos = None;
+                let (s2, _) = ClientSession::connect(&addr, client, params, opts).unwrap();
+                sess = s2;
+                // the handshake replay carries the cached mask and the full
+                // round-1 downlink; recv_round_any skips the mask replay
+                let (round, dl) = sess.recv_round_any(Some(shape), total).unwrap();
+                assert_eq!(round, 1, "replay must deliver the missed round");
+                assert!(dl.down.has_agg && dl.agg.is_some());
+            } else {
+                r0.unwrap();
+                let dl = sess.recv_round(1, Some(shape)).unwrap();
+                assert!(dl.down.has_agg && dl.agg.is_some());
+            }
+            let mut rng = ChaChaRng::from_seed(300 + client, 1);
+            let upd =
+                codec.encrypt_update(&client_model(total, client, 1), &mask, &pk, &mut rng);
+            sess.upload(1, 0.5, &upd, None).unwrap();
+            let dl = sess.recv_round(2, Some(shape)).unwrap();
+            assert!(dl.down.fin);
+        }));
+    }
+
+    hub.wait_for_clients(2, Duration::from_secs(10)).unwrap();
+    let out = hub.broadcast_mask(&[0, 1], &mask_bytes);
+    assert!(out.failed.is_empty());
+    let plan = |alpha: f64| DownBegin {
+        alpha,
+        alpha_mass: 0.0,
+        n_cts: 0,
+        n_plain: 0,
+        total: 0,
+        participate: true,
+        has_agg: false,
+        fin: false,
+    };
+    let out = hub.broadcast_round(0, &[(0, plan(0.5)), (1, plan(0.5))], None);
+    assert!(out.failed.is_empty());
+    hub.set_next_round(1);
+    let outcome = hub.collect_round(
+        &[(0, Some(0.5)), (1, Some(0.5))],
+        shape,
+        &IntakeConfig {
+            round_id: 0,
+            expected_uploads: 2,
+            quorum: Some(1),
+            straggler_timeout: Duration::from_secs(1),
+            max_wait: Duration::from_secs(20),
+            io_timeout: Duration::from_secs(2),
+        },
+    );
+    // the severed upload is on the failure record, not silently absorbed
+    assert_eq!(outcome.arrivals.len(), 1, "failed: {:?}", outcome.failed);
+    assert_eq!(outcome.arrivals[0].client, 0);
+    assert!(outcome.failed.contains(&1), "failed: {:?}", outcome.failed);
+
+    // round 1 carries round 0's (client-0-only) aggregate; the push toward
+    // client 1 hits the dead slot — the replay cache is what bridges it
+    let agg0 = native::aggregate(&[encrypt(0, 0)], &[0.5], &codec.ctx.params);
+    let round1 = DownBegin {
+        alpha: 0.5,
+        alpha_mass: 0.5,
+        n_cts: agg0.cts.len(),
+        n_plain: agg0.plain.len(),
+        total: agg0.total,
+        participate: true,
+        has_agg: true,
+        fin: false,
+    };
+    let _ = hub.broadcast_round(1, &[(0, round1), (1, round1)], Some(&agg0));
+    hub.set_next_round(2);
+    rejoin_tx.send(()).unwrap();
+    let outcome = hub.collect_round(
+        &[(0, Some(0.5)), (1, Some(0.5))],
+        shape,
+        &IntakeConfig {
+            round_id: 1,
+            expected_uploads: 2,
+            quorum: None,
+            straggler_timeout: Duration::from_secs(5),
+            max_wait: Duration::from_secs(20),
+            io_timeout: Duration::from_secs(5),
+        },
+    );
+    assert_eq!(
+        outcome.arrivals.len(),
+        2,
+        "round 1 after the replayed rejoin failed: {:?}",
+        outcome.failed
+    );
+    // bitwise: the post-rejoin round matches the in-process oracle
+    let oracle1 =
+        native::aggregate(&[encrypt(0, 1), encrypt(1, 1)], &[0.5, 0.5], &codec.ctx.params);
+    let mut arrivals = outcome.arrivals;
+    arrivals.sort_by_key(|a| a.client);
+    let agg1 = native::aggregate(
+        &[(*arrivals[0].update).clone(), (*arrivals[1].update).clone()],
+        &[0.5, 0.5],
+        &codec.ctx.params,
+    );
+    assert_eq!(agg1.plain, oracle1.plain);
+    for (a, b) in agg1.cts.iter().zip(oracle1.cts.iter()) {
+        assert_eq!(a.c0, b.c0);
+        assert_eq!(a.c1, b.c1);
+    }
+    let fin = DownBegin {
+        alpha: 0.0,
+        alpha_mass: 0.0,
+        n_cts: 0,
+        n_plain: 0,
+        total: 0,
+        participate: false,
+        has_agg: false,
+        fin: true,
+    };
+    let out = hub.broadcast_round(2, &[(0, fin), (1, fin)], None);
+    assert!(out.failed.is_empty(), "post-rejoin fin failed: {:?}", out.failed);
+    for t in threads {
+        t.join().unwrap();
+    }
+    hub.shutdown();
+}
+
+#[test]
+fn reactor_hub_carries_512_concurrent_sessions_in_one_round() {
+    // The scale half of the tentpole: 512 concurrent sessions — each a
+    // real ClientSession over loopback — join, receive the round downlink,
+    // and upload, all carried by the fixed shard pool. The collected
+    // aggregate must be bitwise-identical to the in-process oracle over
+    // the same updates (hub_storm drives the same gate at 5000).
+    let ctx = fedml_he::ckks::CkksContext::new(256, 3, 30).unwrap();
+    let codec = SelectiveCodec::new(ctx.clone());
+    let mut rng = ChaChaRng::from_seed(41, 0);
+    let (pk, _sk) = codec.ctx.keygen(&mut rng);
+    let total = 64usize;
+    let mask = EncryptionMask::full(total);
+    let shape = UpdateShape::for_round(&codec.ctx, &mask);
+    const N: usize = 512;
+    let alpha = 1.0 / N as f64;
+    let mut hub = ReactorHub::bind("127.0.0.1:0", ctx.params.clone(), N * 2 + 8).unwrap();
+    let addr = hub.local_addr().unwrap().to_string();
+    let mut threads = Vec::new();
+    for client in 0..N as u64 {
+        let addr = addr.clone();
+        let params = ctx.params.clone();
+        let codec = SelectiveCodec::new(ctx.clone());
+        let pk = pk.clone();
+        let mask = mask.clone();
+        let opts = SessionOpts {
+            connect_retry: Duration::from_secs(60),
+            round_wait: Duration::from_secs(120),
+            io_timeout: Duration::from_secs(60),
+            // small write buffer: 512 sessions must not cost 512 × 256 KiB
+            write_buffer: 8 * 1024,
+            ..SessionOpts::default()
+        };
+        threads.push(
+            std::thread::Builder::new()
+                .stack_size(512 * 1024)
+                .spawn(move || {
+                    let (mut sess, _) =
+                        ClientSession::connect(&addr, client, params, opts).unwrap();
+                    let dl = sess.recv_round(0, Some(shape)).unwrap();
+                    assert!(dl.down.participate && !dl.down.has_agg);
+                    let mut rng = ChaChaRng::from_seed(1000 + client, 0);
+                    let upd = codec.encrypt_update(
+                        &client_model(total, client, 0),
+                        &mask,
+                        &pk,
+                        &mut rng,
+                    );
+                    sess.upload(0, alpha, &upd, None).unwrap();
+                    let dl = sess.recv_round(1, Some(shape)).unwrap();
+                    assert!(dl.down.fin);
+                })
+                .unwrap(),
+        );
+    }
+    hub.wait_for_clients(N, Duration::from_secs(120)).unwrap();
+    let plan = DownBegin {
+        alpha,
+        alpha_mass: 0.0,
+        n_cts: 0,
+        n_plain: 0,
+        total: 0,
+        participate: true,
+        has_agg: false,
+        fin: false,
+    };
+    let plans: Vec<(u64, DownBegin)> = (0..N as u64).map(|c| (c, plan)).collect();
+    let out = hub.broadcast_round(0, &plans, None);
+    assert!(out.failed.is_empty(), "round-0 downlink failed: {:?}", out.failed);
+    hub.set_next_round(1);
+    let expected: Vec<(u64, Option<f64>)> = (0..N as u64).map(|c| (c, Some(alpha))).collect();
+    let outcome = hub.collect_round(
+        &expected,
+        shape,
+        &IntakeConfig {
+            round_id: 0,
+            expected_uploads: N,
+            quorum: None,
+            straggler_timeout: Duration::from_secs(120),
+            max_wait: Duration::from_secs(240),
+            io_timeout: Duration::from_secs(120),
+        },
+    );
+    assert_eq!(outcome.arrivals.len(), N, "failed: {:?}", outcome.failed);
+    assert!(outcome.failed.is_empty(), "failed: {:?}", outcome.failed);
+    let mut arrivals = outcome.arrivals;
+    arrivals.sort_by_key(|a| a.client);
+    let updates: Vec<_> = arrivals.iter().map(|a| (*a.update).clone()).collect();
+    let alphas = vec![alpha; N];
+    let agg = native::aggregate(&updates, &alphas, &codec.ctx.params);
+    let oracle_updates: Vec<_> = (0..N as u64)
+        .map(|c| {
+            let mut rng = ChaChaRng::from_seed(1000 + c, 0);
+            codec.encrypt_update(&client_model(total, c, 0), &mask, &pk, &mut rng)
+        })
+        .collect();
+    let oracle = native::aggregate(&oracle_updates, &alphas, &codec.ctx.params);
+    assert_eq!(agg.plain, oracle.plain);
+    for (a, b) in agg.cts.iter().zip(oracle.cts.iter()) {
+        assert_eq!(a.c0, b.c0);
+        assert_eq!(a.c1, b.c1);
+    }
+    let fin = DownBegin {
+        alpha: 0.0,
+        alpha_mass: 0.0,
+        n_cts: 0,
+        n_plain: 0,
+        total: 0,
+        participate: false,
+        has_agg: false,
+        fin: true,
+    };
+    let fin_plans: Vec<(u64, DownBegin)> = (0..N as u64).map(|c| (c, fin)).collect();
+    let out = hub.broadcast_round(1, &fin_plans, None);
+    assert!(out.failed.is_empty(), "fin downlink failed: {:?}", out.failed);
+    for t in threads {
+        t.join().unwrap();
+    }
+    hub.shutdown();
+}

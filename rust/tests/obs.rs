@@ -210,6 +210,13 @@ fn run_report_envelope_schema_holds() {
         "intake_queue_depth",
         "intake_queue_peak",
         "session_rtt",
+        "hub_wakeups",
+        "hub_partial_reads",
+        "hub_active_sessions",
+        "hub_sessions_peak",
+        "hub_shard_sessions",
+        "hub_write_queue_depth",
+        "hub_write_queue_peak",
         "spans_recorded",
         "spans_dropped",
     ] {
