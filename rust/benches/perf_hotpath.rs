@@ -202,7 +202,7 @@ fn run_core(smoke: bool) {
     let batch = ctx.batch();
     let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
     let mut rng = ChaChaRng::from_seed(2024, 0);
-    let (pk, _sk) = ctx.keygen(&mut rng);
+    let (pk, sk) = ctx.keygen(&mut rng);
 
     // --- primitive: reference (seed) vs lazy-reduction NTT on one limb.
     let q = params.moduli[0];
@@ -252,6 +252,82 @@ fn run_core(smoke: bool) {
     let pack_batch = 4096usize;
     let run_aware = fedml_he::he_agg::PackingPlan::run_aware(bert_mask.runs(), pack_batch);
     let chunk_aligned = fedml_he::he_agg::PackingPlan::chunk_aligned(bert_mask.runs(), pack_batch);
+
+    // --- uplink wire: dense (shard form) vs seed-expanded ciphertext
+    // serialization. Byte counts are pure layout arithmetic over the paper
+    // parameters (n = 8192, 4 limbs, batch 4096) — deterministic and
+    // identical in smoke and full mode, so CI diffs them exactly and gates
+    // the compression ratio. Timings measure one ciphertext's
+    // encrypt+serialize on the bench context and extrapolate to the model's
+    // ciphertext count.
+    let paper_n = 8192usize;
+    let paper_limbs = 4usize;
+    let paper_batch = paper_n / 2;
+    let dense_ct_bytes =
+        fedml_he::ckks::serialize::shard_header_bytes() + 2 * paper_limbs * paper_n * 4;
+    let seeded_ct_bytes =
+        fedml_he::ckks::serialize::seeded_header_bytes() + paper_limbs * paper_n * 4;
+    let wire_vals: Vec<f64> = (0..batch).map(|i| (i as f64) * 1e-4).collect();
+    let wire_pt = ctx.encoder.encode(&wire_vals);
+    let mut wire_rng = ChaChaRng::from_seed(7, 3);
+    let mut wire_sc = fedml_he::ckks::CkksScratch::new(params);
+    let mut wire_ct = fedml_he::ckks::Ciphertext::zero(params);
+    let mut wire_buf: Vec<u8> = Vec::new();
+    let wire_iters = if smoke { 4 } else { 40 };
+    let dense_ct_s = time_iters(wire_iters, || {
+        fedml_he::ckks::encrypt_into(
+            params,
+            &pk,
+            &wire_pt,
+            batch,
+            &mut wire_rng,
+            &mut wire_sc,
+            &mut wire_ct,
+        );
+        wire_buf.clear();
+        fedml_he::ckks::serialize::ciphertext_shard_append(
+            &wire_ct,
+            0,
+            params.num_limbs(),
+            &mut wire_buf,
+        );
+        std::hint::black_box(wire_buf.len());
+    });
+    let seed_ct_s = time_iters(wire_iters, || {
+        fedml_he::ckks::encrypt_sym_seeded_into(
+            params,
+            &sk,
+            &wire_pt,
+            batch,
+            &mut wire_rng,
+            &mut wire_sc,
+            &mut wire_ct,
+        );
+        wire_buf.clear();
+        fedml_he::ckks::serialize::ciphertext_seeded_append(&wire_ct, &mut wire_buf);
+        std::hint::black_box(wire_buf.len());
+    });
+    let mut uplink_models: BTreeMap<String, Json> = BTreeMap::new();
+    for (wname, total_params) in [("resnet50", 25_557_032u64), ("bert", 109_482_240u64)] {
+        let cts = (total_params as usize).div_ceil(paper_batch);
+        let dense_bytes = cts * dense_ct_bytes;
+        let seed_bytes = cts * seeded_ct_bytes;
+        uplink_models.insert(
+            wname.to_string(),
+            Json::obj(vec![
+                ("params", total_params.into()),
+                ("cts", cts.into()),
+                ("dense_bytes", dense_bytes.into()),
+                ("seed_bytes", seed_bytes.into()),
+                (
+                    "seed_to_dense_ratio",
+                    (seed_bytes as f64 / dense_bytes as f64).into(),
+                ),
+                ("dense_encrypt_serialize_s", (dense_ct_s * cts as f64).into()),
+                ("seed_encrypt_serialize_s", (seed_ct_s * cts as f64).into()),
+            ]),
+        );
+    }
 
     let pk_b = seed::VecPoly::from_rns(&pk.b_ntt);
     let pk_a = seed::VecPoly::from_rns(&pk.a_ntt);
@@ -376,6 +452,15 @@ fn run_core(smoke: bool) {
         chunk_aligned.slot_utilization(),
         chunk_aligned.n_cts() - run_aware.n_cts()
     );
+    println!(
+        "uplink wire (n={paper_n}, {paper_limbs} limbs, batch {paper_batch}): dense {} vs \
+         seeded {} per ct ({:.4}x); encrypt+serialize {} vs {} per ct",
+        fedml_he::util::human_bytes(dense_ct_bytes as u64),
+        fedml_he::util::human_bytes(seeded_ct_bytes as u64),
+        seeded_ct_bytes as f64 / dense_ct_bytes as f64,
+        fedml_he::util::human_secs(dense_ct_s),
+        fedml_he::util::human_secs(seed_ct_s),
+    );
 
     let out = Json::obj(vec![
         ("bench", "perf_hotpath".into()),
@@ -423,6 +508,17 @@ fn run_core(smoke: bool) {
                     "ct_reduction",
                     (chunk_aligned.n_cts() - run_aware.n_cts()).into(),
                 ),
+            ]),
+        ),
+        (
+            "uplink_wire",
+            Json::obj(vec![
+                ("n", paper_n.into()),
+                ("limbs", paper_limbs.into()),
+                ("batch", paper_batch.into()),
+                ("dense_ct_bytes", dense_ct_bytes.into()),
+                ("seeded_ct_bytes", seeded_ct_bytes.into()),
+                ("models", Json::Obj(uplink_models)),
             ]),
         ),
         ("models", Json::Obj(models_json)),

@@ -154,8 +154,13 @@ pub struct ShardAccumulator {
     plan: ShardPlan,
     units: Vec<(usize, usize)>,
     reducers: Vec<Barrett>,
+    moduli: Vec<u64>,
     acc_c0: Vec<Vec<u64>>,
     acc_c1: Vec<Vec<u64>>,
+    /// Pooled expansion buffer for lazily-parsed seeded ciphertexts: one
+    /// limb of the a-part is regenerated here from the ciphertext seed
+    /// before folding, so warm rounds stay allocation-free.
+    a_scratch: Vec<u64>,
     absorbed: usize,
 }
 
@@ -168,8 +173,10 @@ impl ShardAccumulator {
             plan: plan.clone(),
             // §Perf: reuse the per-limb reducers cached in `CkksParams`.
             reducers: params.barrett.clone(),
+            moduli: params.moduli.clone(),
             acc_c0: vec![vec![0u64; n]; units.len()],
             acc_c1: vec![vec![0u64; n]; units.len()],
+            a_scratch: vec![0u64; n],
             units,
             absorbed: 0,
         }
@@ -184,6 +191,12 @@ impl ShardAccumulator {
     /// client's encoded per-limb FedAvg weight (`CkksParams::encode_weight`).
     /// The per-limb accumulate runs on the runtime-dispatched vector kernel
     /// (§Perf) — bitwise identical to the scalar loop it replaced.
+    ///
+    /// A lazily-parsed seeded ciphertext (seed present, empty c1) never
+    /// materializes its a-part: each owned limb is expanded from the seed
+    /// into the pooled scratch and folded straight into the accumulator.
+    /// Each `(ct, limb)` unit is owned by exactly one shard, so every limb
+    /// is expanded exactly once per client per round.
     pub fn absorb(&mut self, upd: &EncryptedUpdate, weight: &[u64]) {
         assert_eq!(upd.cts.len(), self.plan.n_cts, "update shape drifted mid-round");
         assert_eq!(weight.len(), self.plan.n_limbs, "weight residue count");
@@ -193,7 +206,18 @@ impl ShardAccumulator {
             let w = weight[limb];
             let src = &upd.cts[ct];
             kernel.weighted_accumulate(&mut self.acc_c0[k], src.c0.limb(limb), w, br);
-            kernel.weighted_accumulate(&mut self.acc_c1[k], src.c1.limb(limb), w, br);
+            match src.a_seed {
+                Some(seed) if src.c1.num_limbs() == 0 => {
+                    crate::ckks::encrypt::expand_ct_a_limb(
+                        &seed,
+                        limb,
+                        self.moduli[limb],
+                        &mut self.a_scratch,
+                    );
+                    kernel.weighted_accumulate(&mut self.acc_c1[k], &self.a_scratch, w, br);
+                }
+                _ => kernel.weighted_accumulate(&mut self.acc_c1[k], src.c1.limb(limb), w, br),
+            }
         }
         self.absorbed += 1;
         // Lazy-accumulation guard: each term is < 2^31, so fold well before

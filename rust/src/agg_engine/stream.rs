@@ -153,8 +153,11 @@ pub struct RoundIntake<'p, 'm> {
     cfg: EngineConfig,
     mask: Option<&'m EncryptionMask>,
     arrivals: Vec<Arrival>,
-    /// `(n_cts, n_plain, total)` of the first offered update.
-    shape: Option<(usize, usize, usize)>,
+    /// `(n_cts, n_plain, total, c1_ntt)` of the first offered update. The
+    /// final flag pins the c1 domain (NTT for seed-expanded symmetric
+    /// uplinks, coefficient for dense) — mixing the two within a round
+    /// would silently add incompatible representations.
+    shape: Option<(usize, usize, usize, bool)>,
     /// Arrival stamp at which the `quorum`-th offer landed (offer order).
     quorum_reached_at: Option<f64>,
 }
@@ -164,7 +167,17 @@ impl<'p, 'm> RoundIntake<'p, 'm> {
     /// including ones the seal-time policy later drops — exactly like the
     /// batch path.
     pub fn offer(&mut self, a: Arrival) -> anyhow::Result<()> {
-        let shape = (a.update.cts.len(), a.update.plain.len(), a.update.total);
+        let c1_ntt = a.update.cts.first().is_some_and(|c| c.c1.ntt_form);
+        anyhow::ensure!(
+            a.update.cts.iter().all(|c| c.c1.ntt_form == c1_ntt),
+            "mixed c1 domains within one update"
+        );
+        let shape = (
+            a.update.cts.len(),
+            a.update.plain.len(),
+            a.update.total,
+            c1_ntt,
+        );
         match self.shape {
             None => self.shape = Some(shape),
             Some(s) => anyhow::ensure!(
@@ -223,7 +236,7 @@ impl<'p, 'm> RoundIntake<'p, 'm> {
                 .total_cmp(&b.arrival_secs)
                 .then(a.client.cmp(&b.client))
         });
-        let (n_cts, n_plain, total) = self.shape.expect("non-empty round has a shape");
+        let (n_cts, n_plain, total, c1_ntt) = self.shape.expect("non-empty round has a shape");
 
         // Quorum/straggler policy over the arrival-ordered list: the first
         // `quorum` arrivals are always accepted, later ones only within the
@@ -336,6 +349,16 @@ impl<'p, 'm> RoundIntake<'p, 'm> {
                 cts[ct].c1.limb_mut(limb).copy_from_slice(&out.sums.c1[k]);
             }
             plain[out.plain_lo..out.plain_lo + out.plain.len()].copy_from_slice(&out.plain);
+        }
+        // Seed-expanded uplinks fold NTT-domain a-parts, so the weighted
+        // sums land in NTT domain; normalize the sealed aggregate back to
+        // coefficient domain once (INTT is linear mod q, so this commutes
+        // exactly with the per-client path — sim stays bitwise equal).
+        if c1_ntt {
+            for ct in cts.iter_mut() {
+                ct.c1.ntt_form = true;
+                ct.c1.from_ntt(params);
+            }
         }
         Ok((EncryptedUpdate { cts, plain, total }, stats))
     }

@@ -34,7 +34,7 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::agg_engine::{Arrival, EngineConfig, StreamStats, StreamingAggregator};
-use crate::ckks::{CkksContext, PublicKey, SecretKey};
+use crate::ckks::{CkksContext, CtWire, PublicKey, SecretKey};
 use crate::crypto::mac::derive_client_key;
 use crate::crypto::prng::ChaChaRng;
 use crate::he_agg::{EncryptedUpdate, EncryptionMask, SelectiveCodec};
@@ -352,7 +352,7 @@ fn duplicate_hello(fx: &Fixture) -> anyhow::Result<String> {
     // adversary A: two HELLOs back-to-back, claiming the honest id
     let mut a = TcpStream::connect(&addr)?;
     a.set_nodelay(true).ok();
-    let hello = encode_hello(0);
+    let hello = encode_hello(0, CtWire::Dense);
     write_frame(&mut a, CONTROL_ROUND, FrameKind::Hello, 0, &hello)?;
     write_frame(&mut a, CONTROL_ROUND, FrameKind::Hello, 1, &hello)?;
     anyhow::ensure!(
@@ -365,7 +365,7 @@ fn duplicate_hello(fx: &Fixture) -> anyhow::Result<String> {
     let mut b = TcpStream::connect(&addr)?;
     b.set_nodelay(true).ok();
     b.set_read_timeout(Some(Duration::from_secs(2)))?;
-    write_frame(&mut b, CONTROL_ROUND, FrameKind::Hello, 0, &encode_hello(9))?;
+    write_frame(&mut b, CONTROL_ROUND, FrameKind::Hello, 0, &encode_hello(9, CtWire::Dense))?;
     let mut rd = BufReader::new(b.try_clone()?);
     let mut buf = Vec::new();
     let (kind, _) = read_frame_into(&mut rd, CONTROL_ROUND, 1 << 16, &mut buf)?;
@@ -402,6 +402,63 @@ fn duplicate_hello(fx: &Fixture) -> anyhow::Result<String> {
     );
     hub.shutdown();
     Ok(format!("both handshake adversaries refused, auth_rejects +{auth_delta}"))
+}
+
+/// An adversary (or a misconfigured client) announces the seeded
+/// ciphertext wire on a task pinned to dense. The handshake must refuse it
+/// before a slot is claimed — ciphertext framing is task-level, never
+/// negotiated per client — and the honest round still seals bitwise clean.
+fn wire_mode_confusion(fx: &Fixture) -> anyhow::Result<String> {
+    let root = [0x5Eu8; 32];
+    let mut hub =
+        SessionHub::bind_with_auth("127.0.0.1:0", fx.ctx.params.clone(), 8, Some(root))?;
+    let addr = hub.local_addr()?.to_string();
+    let honest = spawn_uploader(&addr, fx, 0, 1.0, mac_opts(&root, 0));
+    hub.wait_for_clients(1, Duration::from_secs(5))?;
+
+    // raw socket announcing the seeded wire against the dense task
+    let mut a = TcpStream::connect(&addr)?;
+    a.set_nodelay(true).ok();
+    a.set_read_timeout(Some(Duration::from_secs(2)))?;
+    write_frame(&mut a, CONTROL_ROUND, FrameKind::Hello, 0, &encode_hello(5, CtWire::Seed))?;
+    let mut rd = BufReader::new(a);
+    let mut buf = Vec::new();
+    let refused = loop {
+        match read_frame_into(&mut rd, CONTROL_ROUND, 1 << 16, &mut buf) {
+            Ok((FrameKind::Welcome, _)) => break false,
+            Ok(_) => continue,
+            Err(_) => break true,
+        }
+    };
+    anyhow::ensure!(refused, "a seed-wire HELLO on a dense task must never reach WELCOME");
+
+    // the full client stack refuses the same mismatch loudly at connect
+    let mis = ClientSession::connect(
+        &addr,
+        6,
+        fx.ctx.params.clone(),
+        SessionOpts {
+            ct_wire: CtWire::Seed,
+            connect_retries: 0,
+            ..mac_opts(&root, 6)
+        },
+    );
+    anyhow::ensure!(mis.is_err(), "a seed-configured client must fail against a dense task");
+    anyhow::ensure!(hub.connected() == [0], "honest slot must survive the mode confusion");
+
+    let outcome = hub.collect_round(&[(0, Some(1.0))], fx.shape, &collect_cfg(1, None));
+    anyhow::ensure!(join_uploader(honest)?, "honest upload must be acked");
+    anyhow::ensure!(outcome.failed.is_empty(), "honest upload must not fail");
+    let (agg, stats) = wire_agg(fx, outcome.arrivals)?;
+    let (ref_agg, ref_stats) = reference_agg(fx, &[0], 1)?;
+    anyhow::ensure!(updates_bitwise_eq(&agg, &ref_agg), "aggregate must match fault-free run");
+    anyhow::ensure!(
+        bits(&renormalized_global(fx, &agg, stats.alpha_mass))
+            == bits(&renormalized_global(fx, &ref_agg, ref_stats.alpha_mass)),
+        "decrypted global must be bitwise identical"
+    );
+    hub.shutdown();
+    Ok("seed-wire HELLO refused pre-slot, honest round sealed bitwise clean".to_string())
 }
 
 /// Three of five clients vanish mid-upload. The round seals on the
@@ -651,10 +708,11 @@ fn chaos_round(fx: &Fixture) -> anyhow::Result<String> {
 /// panics) into reports instead of aborting the sweep.
 pub fn run_all() -> Vec<ScenarioReport> {
     type Scenario = fn(&Fixture) -> anyhow::Result<String>;
-    let scenarios: [(&'static str, Scenario); 6] = [
+    let scenarios: [(&'static str, Scenario); 7] = [
         ("forged_identity", forged_identity),
         ("replayed_upload", replayed_upload),
         ("duplicate_hello", duplicate_hello),
+        ("wire_mode_confusion", wire_mode_confusion),
         ("disconnect_storm", disconnect_storm),
         ("cherry_picking_server", cherry_picking_server),
         ("chaos_round", chaos_round),
@@ -698,5 +756,10 @@ mod tests {
     #[test]
     fn cherry_picking_server_cannot_hide_the_deficit() {
         cherry_picking_server(&fixture()).unwrap();
+    }
+
+    #[test]
+    fn wire_mode_confusion_is_refused_pre_slot() {
+        wire_mode_confusion(&fixture()).unwrap();
     }
 }

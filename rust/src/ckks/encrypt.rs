@@ -1,26 +1,41 @@
-//! RLWE encryption / decryption.
+//! RLWE encryption / decryption — the public-key path and the seed-expanded
+//! symmetric path.
 //!
-//! `Enc(pk, m)`: sample ephemeral ternary `u` and errors `e0, e1`;
-//! `ct = (c0, c1) = (b·u + e0 + m, a·u + e1)`.
-//! `Dec(sk, ct)`: `m ≈ c0 + c1·s` (error ≈ e·u + e0 + e1·s, a few bits —
-//! negligible against Δ·Δ_w).
+//! **Public-key** (`Enc(pk, m)`, [`encrypt_into`]): sample ephemeral ternary
+//! `u` and errors `e0, e1`; `ct = (c0, c1) = (b·u + e0 + m, a·u + e1)`.
 //!
-//! Ciphertext polynomials are kept in **coefficient domain**: the
+//! **Symmetric seeded** (`Enc(sk, m)`, [`encrypt_sym_seeded_into`]): draw a
+//! fresh 32-byte seed, expand the uniform a-part from it **directly in flat
+//! limb-major NTT domain** (`a = expand(seed)`, one ChaCha sub-stream per
+//! limb — no NTT on the client), and set `ct = (m + e − a·s, a)` with
+//! `c1 = a` carried in NTT form and `a_seed` recording the seed. Decryption
+//! is the same `m ≈ c0 + c1·s` for both forms — the decryptor (including the
+//! threshold share-escrow path) only needs `c1` in NTT form at the
+//! key-product step, which a seeded ciphertext already is. The wire form of
+//! a seeded ciphertext is `seed ‖ c0_limbs` (DESIGN.md §14): half the dense
+//! size, because the receiver re-expands `a` from the seed on demand
+//! ([`Ciphertext::expand_a`], lazily per limb in the aggregation shards).
+//!
+//! Ciphertext polynomials otherwise live in **coefficient domain**: the
 //! aggregation pipeline only adds and scalar-multiplies, which are
 //! domain-agnostic, and the serialization/kernels operate on raw limbs.
+//! `RnsPoly::ntt_form` tracks the one deliberate exception — the NTT-domain
+//! c1 of seeded ciphertexts, converted back exactly once when an aggregate
+//! is sealed.
 //!
-//! §Perf: the hot entry points are [`encrypt_into`]/[`decrypt_into`] — they
-//! write into a caller-owned ciphertext/plaintext and stage everything in a
-//! pooled [`CkksScratch`], so the steady state performs **zero heap
-//! allocations** (proved by `tests/zero_alloc.rs`). The seed path
-//! materialized ~7 temporary polynomials per ciphertext; here `b·u + e0 + m`
-//! is accumulated in place (pointwise product into the output limb, inverse
-//! NTT in place, then one fused error+message sweep) and the error samples
-//! never exist as a separate polynomial — they are drawn once into a single
-//! pooled limb and re-lifted per modulus on the fly.
+//! §Perf: the hot entry points are the `_into` variants — they write into a
+//! caller-owned ciphertext/plaintext and stage everything in a pooled
+//! [`CkksScratch`], so the steady state performs **zero heap allocations**
+//! (proved by `tests/zero_alloc.rs`). The seed path materialized ~7
+//! temporary polynomials per ciphertext; here `b·u + e0 + m` is accumulated
+//! in place (pointwise product into the output limb, inverse NTT in place,
+//! then one fused error+message sweep) and the error samples never exist as
+//! a separate polynomial — they are drawn once into a single pooled limb and
+//! re-lifted per modulus on the fly. The symmetric path is cheaper still:
+//! no ephemeral `u`, no forward NTTs, a single error polynomial.
 
 use super::keys::{PublicKey, SecretKey};
-use super::modarith::{add_mod, center, lift_signed};
+use super::modarith::{add_mod, center, lift_signed, sub_mod};
 use super::params::CkksParams;
 use super::poly::{sample_cbd_limb0, sample_ternary_into, CkksScratch, RnsPoly};
 use crate::crypto::prng::ChaChaRng;
@@ -35,6 +50,12 @@ pub struct Ciphertext {
     pub n_values: usize,
     /// Aggregate scale (Δ fresh; Δ·Δ_w after weighting).
     pub scale: f64,
+    /// For symmetric seeded ciphertexts: the 32-byte seed that the
+    /// NTT-domain a-part (`c1`) expands from. A lazily-parsed compressed
+    /// ciphertext may carry the seed with an *empty* (0-limb) `c1`; the
+    /// aggregation shards expand limbs on demand, or
+    /// [`Ciphertext::expand_a`] materializes all of them.
+    pub a_seed: Option<[u8; 32]>,
 }
 
 impl Ciphertext {
@@ -47,8 +68,72 @@ impl Ciphertext {
             c1: RnsPoly::zero(params),
             n_values: 0,
             scale: 0.0,
+            a_seed: None,
         }
     }
+
+    /// Materialize the a-part of a lazily-parsed seeded ciphertext: if
+    /// `c1` is the empty 0-limb placeholder and a seed is present, expand
+    /// every limb from the seed (NTT domain). No-op when `c1` already has
+    /// its limbs (fresh client-side seeded cts, or dense cts).
+    pub fn expand_a(&mut self, params: &CkksParams) {
+        let Some(seed) = self.a_seed else { return };
+        if self.c1.num_limbs() != 0 {
+            return;
+        }
+        let n = params.n;
+        let num_limbs = params.num_limbs();
+        let mut data = vec![0u64; num_limbs * n];
+        for (l, limb) in data.chunks_exact_mut(n).enumerate() {
+            expand_ct_a_limb(&seed, l, params.moduli[l], limb);
+        }
+        self.c1 = RnsPoly::from_flat(n, num_limbs, data, true);
+    }
+}
+
+/// Key material for one encrypt call: the public-key path (dense ct wire)
+/// or the seed-expanded symmetric path (`CtWire::Seed`; requires every
+/// client to hold the single secret key).
+#[derive(Clone, Copy)]
+pub enum EncKey<'a> {
+    Public(&'a PublicKey),
+    SymSeeded(&'a SecretKey),
+}
+
+impl EncKey<'_> {
+    /// Dispatch to [`encrypt_into`] or [`encrypt_sym_seeded_into`].
+    pub fn encrypt_into(
+        &self,
+        params: &CkksParams,
+        pt: &RnsPoly,
+        n_values: usize,
+        rng: &mut ChaChaRng,
+        scratch: &mut CkksScratch,
+        out: &mut Ciphertext,
+    ) {
+        match self {
+            EncKey::Public(pk) => encrypt_into(params, pk, pt, n_values, rng, scratch, out),
+            EncKey::SymSeeded(sk) => {
+                encrypt_sym_seeded_into(params, sk, pt, n_values, rng, scratch, out)
+            }
+        }
+    }
+}
+
+/// Expand limb `l` of a seeded ciphertext's a-part: a fresh ChaCha stream
+/// keyed by the ciphertext seed with the limb index as nonce, sampled
+/// uniformly below `q` straight into NTT domain. Per-limb sub-streams (not
+/// one long stream) are required for lazy random access: rejection
+/// sampling makes stream positions data-dependent, so limb `l` must not
+/// depend on how many words limbs `0..l` consumed.
+pub fn expand_ct_a_limb(seed: &[u8; 32], limb: usize, q: u64, out: &mut [u64]) {
+    let mut nonce = [0u8; 12];
+    nonce[..8].copy_from_slice(&(limb as u64).to_le_bytes());
+    let mut rng = ChaChaRng::new(seed, &nonce);
+    for o in out.iter_mut() {
+        *o = rng.uniform_u64(q);
+    }
+    crate::obs::metrics::ct_seed_expansion();
 }
 
 /// Encrypt a coefficient-domain plaintext polynomial (allocating
@@ -136,6 +221,83 @@ pub fn encrypt_into(
 
     out.n_values = n_values;
     out.scale = params.delta();
+    out.a_seed = None; // recycled buffers may carry a stale seed
+}
+
+/// Symmetric seeded encrypt (allocating convenience wrapper over
+/// [`encrypt_sym_seeded_into`]).
+pub fn encrypt_sym_seeded(
+    params: &CkksParams,
+    sk: &SecretKey,
+    pt: &RnsPoly,
+    n_values: usize,
+    rng: &mut ChaChaRng,
+) -> Ciphertext {
+    let mut scratch = CkksScratch::new(params);
+    let mut out = Ciphertext::zero(params);
+    encrypt_sym_seeded_into(params, sk, pt, n_values, rng, &mut scratch, &mut out);
+    out
+}
+
+/// Symmetric seeded encrypt into a caller-owned ciphertext —
+/// allocation-free after warm-up, and cheaper than the public-key path (no
+/// ephemeral `u`, no forward NTTs, one error polynomial).
+///
+/// Draws a fresh 32-byte seed from `rng`, expands the uniform a-part from
+/// it per limb directly in NTT domain ([`expand_ct_a_limb`]), and sets
+/// `c0 = m + e − a·s` (coefficient domain), `c1 = a` (NTT domain),
+/// `a_seed = Some(seed)`. Decrypts with the same `m ≈ c0 + c1·s` as the
+/// public-key form: `c0 + a·s = m + e`. RNG consumption is pinned (seed,
+/// then e) so ciphertexts are bitwise-stable across buffer reuse and
+/// parallel codec chunking.
+pub fn encrypt_sym_seeded_into(
+    params: &CkksParams,
+    sk: &SecretKey,
+    pt: &RnsPoly,
+    n_values: usize,
+    rng: &mut ChaChaRng,
+    scratch: &mut CkksScratch,
+    out: &mut Ciphertext,
+) {
+    assert!(!pt.ntt_form, "plaintext must be in coefficient domain");
+    let n = params.n;
+    let num_limbs = params.num_limbs();
+    debug_assert_eq!(out.c0.n, n, "output ciphertext shape mismatch");
+    debug_assert_eq!(out.c0.num_limbs(), num_limbs);
+    let q0 = params.moduli[0];
+
+    let mut seed = [0u8; 32];
+    rng.fill_bytes(&mut seed);
+
+    crate::obs::metrics::scratch_pool(scratch.e.capacity() >= n);
+    scratch.e.resize(n, 0);
+    sample_cbd_limb0(params, super::params::CBD_K, rng, &mut scratch.e);
+
+    // Per limb: c1 = expand(seed) in NTT domain; c0 = m + e − INTT(c1 ∘ s).
+    if out.c1.num_limbs() == 0 {
+        // Reused lazily-parsed skeletons may carry the empty placeholder.
+        out.c1 = RnsPoly::from_flat(n, num_limbs, vec![0u64; num_limbs * n], true);
+    }
+    for l in 0..num_limbs {
+        let q = params.moduli[l];
+        let br = params.barrett[l];
+        expand_ct_a_limb(&seed, l, q, out.c1.limb_mut(l));
+        let a_l = out.c1.limb(l);
+        let dst = out.c0.limb_mut(l);
+        for ((d, &a), &s) in dst.iter_mut().zip(a_l.iter()).zip(sk.s_ntt.limb(l)) {
+            *d = br.mul(a, s);
+        }
+        params.ntt[l].inverse(dst);
+        for ((d, &e0), &m) in dst.iter_mut().zip(scratch.e.iter()).zip(pt.limb(l)) {
+            let e = if l == 0 { e0 } else { lift_signed(center(e0, q0), q) };
+            *d = sub_mod(add_mod(m, e, q), *d, q);
+        }
+    }
+    out.c0.ntt_form = false;
+    out.c1.ntt_form = true;
+    out.n_values = n_values;
+    out.scale = params.delta();
+    out.a_seed = Some(seed);
 }
 
 /// Decrypt to a coefficient-domain plaintext polynomial (allocating
@@ -156,10 +318,7 @@ pub fn decrypt_into(
     scratch: &mut CkksScratch,
     out: &mut RnsPoly,
 ) {
-    assert!(
-        !ct.c0.ntt_form && !ct.c1.ntt_form,
-        "ciphertext must be in coefficient domain"
-    );
+    assert!(!ct.c0.ntt_form, "ciphertext c0 must be in coefficient domain");
     let n = params.n;
     debug_assert_eq!(out.n, n, "output plaintext shape mismatch");
     crate::obs::metrics::scratch_pool(scratch.t.capacity() >= params.num_limbs() * n);
@@ -169,7 +328,10 @@ pub fn decrypt_into(
         let q = params.moduli[l];
         let br = params.barrett[l];
         let t_l = &mut scratch.t[l * n..(l + 1) * n];
-        params.ntt[l].forward(t_l);
+        // A seeded ciphertext's c1 is already NTT-domain — skip the lift.
+        if !ct.c1.ntt_form {
+            params.ntt[l].forward(t_l);
+        }
         let dst = out.limb_mut(l);
         for ((d, &t), &s) in dst.iter_mut().zip(t_l.iter()).zip(sk.s_ntt.limb(l)) {
             *d = br.mul(t, s);
@@ -232,6 +394,111 @@ mod tests {
         let mut dec2 = RnsPoly::zero(&params);
         decrypt_into(&params, &sk, &ct2, &mut scratch, &mut dec2);
         assert_eq!(dec1, dec2);
+    }
+
+    #[test]
+    fn sym_seeded_encrypt_decrypt_roundtrip() {
+        let (params, encoder, _pk, sk) = setup(1024, 40);
+        let mut rng = ChaChaRng::from_seed(11, 1);
+        let values: Vec<f64> = (0..512).map(|i| (i as f64) * 0.01 - 2.5).collect();
+        let pt = encoder.encode(&values);
+        let ct = encrypt_sym_seeded(&params, &sk, &pt, values.len(), &mut rng);
+        assert!(ct.a_seed.is_some());
+        assert!(ct.c1.ntt_form && !ct.c0.ntt_form);
+        let dec = encoder.decode(&decrypt(&params, &sk, &ct), ct.n_values, ct.scale);
+        for (a, b) in values.iter().zip(dec.iter()) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn sym_into_variant_matches_allocating_wrapper() {
+        // Same RNG state ⇒ bitwise-identical seeded ciphertexts across
+        // dirty buffer reuse.
+        let (params, encoder, _pk, sk) = setup(256, 30);
+        let pt = encoder.encode(&vec![0.25; 64]);
+        let mut r1 = ChaChaRng::from_seed(18, 8);
+        let mut r2 = ChaChaRng::from_seed(18, 8);
+        let ct = encrypt_sym_seeded(&params, &sk, &pt, 64, &mut r1);
+        let mut scratch = CkksScratch::new(&params);
+        let mut ct2 = Ciphertext::zero(&params);
+        let mut dirty_rng = ChaChaRng::from_seed(19, 9);
+        encrypt_sym_seeded_into(&params, &sk, &pt, 64, &mut dirty_rng, &mut scratch, &mut ct2);
+        encrypt_sym_seeded_into(&params, &sk, &pt, 64, &mut r2, &mut scratch, &mut ct2);
+        assert_eq!(ct, ct2);
+    }
+
+    #[test]
+    fn expand_a_rebuilds_identical_a_part() {
+        // Strip a seeded ciphertext down to its lazy wire shape (seed +
+        // empty c1) and re-expand: the a-part must come back bitwise.
+        let (params, encoder, _pk, sk) = setup(512, 40);
+        let mut rng = ChaChaRng::from_seed(21, 2);
+        let pt = encoder.encode(&vec![1.5; 256]);
+        let ct = encrypt_sym_seeded(&params, &sk, &pt, 256, &mut rng);
+        let mut lazy = ct.clone();
+        lazy.c1 = RnsPoly::from_flat(params.n, 0, vec![], true);
+        lazy.expand_a(&params);
+        assert_eq!(lazy, ct);
+        // And expand_a on an already-materialized ct is a no-op.
+        let mut again = lazy.clone();
+        again.expand_a(&params);
+        assert_eq!(again, lazy);
+    }
+
+    #[test]
+    fn sym_ciphertext_is_not_plaintext_and_wrong_key_fails() {
+        let (params, encoder, _pk, sk) = setup(256, 30);
+        let mut rng = ChaChaRng::from_seed(12, 2);
+        let values = vec![1.0; 128];
+        let pt = encoder.encode(&values);
+        let ct = encrypt_sym_seeded(&params, &sk, &pt, 128, &mut rng);
+        let diff_count = pt
+            .limb(0)
+            .iter()
+            .zip(ct.c0.limb(0).iter())
+            .filter(|(a, b)| a != b)
+            .count();
+        assert!(diff_count > 250, "c0 leaks plaintext structure");
+        let (_pk2, sk2) = keygen(&params, &mut rng);
+        let dec = encoder.decode(&decrypt(&params, &sk2, &ct), 128, ct.scale);
+        let max_err = values
+            .iter()
+            .zip(dec.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        assert!(max_err > 1.0, "wrong key should not decrypt (err {max_err})");
+    }
+
+    #[test]
+    fn sym_weighted_sum_decrypts_without_materializing_coeff_c1() {
+        // 16-client aggregate over seeded ciphertexts: c1 stays NTT-domain
+        // end to end and decrypt handles it directly.
+        let (params, encoder, _pk, sk) = setup(1024, 52);
+        let mut rng = ChaChaRng::from_seed(16, 6);
+        let n_clients = 16;
+        let w = params.encode_weight(1.0 / n_clients as f64);
+        let values: Vec<f64> = (0..512).map(|i| (i as f64) * 0.003 - 0.7).collect();
+        let mut agg: Option<Ciphertext> = None;
+        for _ in 0..n_clients {
+            let mut ct = encrypt_sym_seeded(&params, &sk, &encoder.encode(&values), 512, &mut rng);
+            ct.c0.mul_scalar(&w, &params);
+            ct.c1.mul_scalar(&w, &params);
+            ct.scale *= params.delta_w();
+            match &mut agg {
+                None => agg = Some(ct),
+                Some(acc) => {
+                    acc.c0.add_assign(&ct.c0, &params);
+                    acc.c1.add_assign(&ct.c1, &params);
+                }
+            }
+        }
+        let agg = agg.unwrap();
+        assert!(agg.c1.ntt_form);
+        let dec = encoder.decode(&decrypt(&params, &sk, &agg), 512, agg.scale);
+        for i in 0..512 {
+            assert!((dec[i] - values[i]).abs() < 1e-6, "{} vs {}", dec[i], values[i]);
+        }
     }
 
     #[test]

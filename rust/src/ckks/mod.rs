@@ -29,10 +29,14 @@ pub mod simd;
 pub mod threshold;
 
 pub use encoding::{EncodeScratch, Encoder};
-pub use encrypt::{decrypt, decrypt_into, encrypt, encrypt_into, Ciphertext};
+pub use encrypt::{
+    decrypt, decrypt_into, encrypt, encrypt_into, encrypt_sym_seeded, encrypt_sym_seeded_into,
+    expand_ct_a_limb, Ciphertext, EncKey,
+};
 pub use keys::{keygen, PublicKey, SecretKey};
 pub use params::CkksParams;
 pub use poly::{CkksScratch, RnsPoly};
+pub use serialize::CtWire;
 
 use crate::crypto::prng::ChaChaRng;
 use std::sync::Arc;
@@ -77,8 +81,21 @@ impl CkksContext {
         pk: &PublicKey,
         rng: &mut ChaChaRng,
     ) -> Ciphertext {
+        self.encrypt_values_keyed(values, EncKey::Public(pk), rng)
+    }
+
+    /// [`Self::encrypt_values`] under either ct-wire key mode.
+    pub fn encrypt_values_keyed(
+        &self,
+        values: &[f64],
+        key: EncKey<'_>,
+        rng: &mut ChaChaRng,
+    ) -> Ciphertext {
         let pt = self.encoder.encode(values);
-        encrypt::encrypt(&self.params, pk, &pt, values.len(), rng)
+        let mut scratch = CkksScratch::new(&self.params);
+        let mut out = Ciphertext::zero(&self.params);
+        key.encrypt_into(&self.params, &pt, values.len(), rng, &mut scratch, &mut out);
+        out
     }
 
     /// Decrypt to `ct.n_values` f64 values, undoing the aggregate scale

@@ -75,6 +75,7 @@ pub fn weighted_sum_refs_into(
     }
     out.scale = cts[0].scale * params.delta_w();
     out.n_values = cts.iter().map(|c| c.n_values).max().unwrap();
+    out.a_seed = None; // an aggregate has no single expansion seed
     // Domain-agnostic kernel: the output lives in whatever domain the inputs
     // do (the seed path inherited this via `out = cts[0].clone()`).
     out.c0.ntt_form = cts[0].c0.ntt_form;

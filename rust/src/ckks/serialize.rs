@@ -12,6 +12,12 @@
 //! reserved u32 ×2 (pad to the 32-byte header of params::serialize_header_bytes)
 //! body: c0 then c1, limb-major, each coefficient as u32 (moduli < 2^31)
 //! ```
+//!
+//! Besides the dense full format there are two uplink views (DESIGN.md §14):
+//! limb-range **shards** ("CKSH") carrying a slice of both polynomials, and
+//! the **seed-expanded compressed** form ("CKSS") for symmetric seeded
+//! ciphertexts — the same 32-byte header followed by the 32-byte a-seed and
+//! only the c0 limbs, ≈half the dense size.
 
 use super::encrypt::Ciphertext;
 use super::params::{serialize_header_bytes, CkksParams};
@@ -19,6 +25,62 @@ use super::poly::RnsPoly;
 
 const MAGIC: u32 = 0x434B_4B53;
 const VERSION: u32 = 1;
+
+/// How uplink ciphertexts travel: dense `(c0, c1)` limbs, or the
+/// seed-expanded compressed form `seed ‖ c0` for symmetric seeded
+/// ciphertexts. Negotiated in the HELLO/WELCOME handshake; both sides of a
+/// session must agree or the connection fails loudly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CtWire {
+    /// Both polynomials on the wire (public-key encryption; the default).
+    Dense,
+    /// `seed ‖ c0_limbs` — the receiver re-expands the a-part
+    /// ([`super::encrypt::expand_ct_a_limb`]). Requires single-key
+    /// symmetric encryption.
+    Seed,
+}
+
+impl CtWire {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "dense" => Some(CtWire::Dense),
+            "seed" => Some(CtWire::Seed),
+            _ => None,
+        }
+    }
+
+    /// Default mode, overridable via `FEDML_HE_CT_WIRE` (CI reruns the
+    /// whole suite with `FEDML_HE_CT_WIRE=seed`).
+    pub fn env_default() -> Self {
+        match std::env::var("FEDML_HE_CT_WIRE") {
+            Ok(v) => CtWire::parse(&v).unwrap_or(CtWire::Dense),
+            Err(_) => CtWire::Dense,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CtWire::Dense => "dense",
+            CtWire::Seed => "seed",
+        }
+    }
+
+    /// Stable u32 code carried in the HELLO/WELCOME payloads.
+    pub fn wire_code(self) -> u32 {
+        match self {
+            CtWire::Dense => 0,
+            CtWire::Seed => 1,
+        }
+    }
+
+    pub fn from_wire_code(code: u32) -> Option<Self> {
+        match code {
+            0 => Some(CtWire::Dense),
+            1 => Some(CtWire::Seed),
+            _ => None,
+        }
+    }
+}
 
 /// Serialize a ciphertext.
 pub fn ciphertext_to_bytes(ct: &Ciphertext) -> Vec<u8> {
@@ -89,6 +151,7 @@ pub fn ciphertext_from_bytes(bytes: &[u8], params: &CkksParams) -> anyhow::Resul
         c1,
         n_values,
         scale,
+        a_seed: None,
     })
 }
 
@@ -217,6 +280,124 @@ pub fn ciphertext_shard_from_bytes(
         scale,
         c0_limbs,
         c1_limbs,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Seed-expanded compressed ciphertexts (the `--ct-wire seed` uplink format):
+// the 32-byte shard-style header (limb range pinned to the full ciphertext),
+// the 32-byte a-seed, then only the c0 limbs. The receiver re-expands the
+// uniform a-part from the seed — lazily, limb by limb, inside the
+// aggregation shards — so the wire carries half the dense payload.
+
+const SEEDED_MAGIC: u32 = 0x434B_5353; // "CKSS"
+
+/// Header bytes of the compressed format: the 32-byte shard header plus the
+/// 32-byte ciphertext seed.
+pub const fn seeded_header_bytes() -> usize {
+    shard_header_bytes() + 32
+}
+
+/// Serialized size of a seed-expanded compressed ciphertext.
+pub fn seeded_wire_bytes(params: &CkksParams) -> usize {
+    seeded_header_bytes() + params.num_limbs() * params.n * 4
+}
+
+/// Append the compressed wire form of a symmetric seeded ciphertext
+/// (`seed ‖ c0_limbs`). Panics if the ciphertext carries no seed. Counts
+/// the bytes saved versus the dense full-range shard form.
+pub fn ciphertext_seeded_append(ct: &Ciphertext, out: &mut Vec<u8>) {
+    let seed = ct
+        .a_seed
+        .expect("seeded wire form requires a symmetric seeded ciphertext");
+    assert!(!ct.c0.ntt_form, "c0 must be in coefficient domain");
+    let n = ct.c0.n;
+    let limbs = ct.c0.num_limbs();
+    out.reserve(seeded_header_bytes() + limbs * n * 4);
+    let start = out.len();
+    out.extend_from_slice(&SEEDED_MAGIC.to_le_bytes());
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&(n as u32).to_le_bytes());
+    out.extend_from_slice(&0u32.to_le_bytes()); // lo: always the full range
+    out.extend_from_slice(&(limbs as u32).to_le_bytes()); // hi
+    out.extend_from_slice(&(ct.n_values as u32).to_le_bytes());
+    out.extend_from_slice(&ct.scale.to_le_bytes());
+    out.extend_from_slice(&seed);
+    debug_assert_eq!(out.len() - start, seeded_header_bytes());
+    for l in 0..limbs {
+        for &c in ct.c0.limb(l) {
+            debug_assert!(c < 1 << 31);
+            out.extend_from_slice(&(c as u32).to_le_bytes());
+        }
+    }
+    let dense = shard_header_bytes() as u64 + 2 * (limbs * n * 4) as u64;
+    crate::obs::metrics::uplink_bytes_saved(dense - (out.len() - start) as u64);
+}
+
+/// Allocating wrapper over [`ciphertext_seeded_append`].
+pub fn ciphertext_seeded_to_bytes(ct: &Ciphertext) -> Vec<u8> {
+    let mut out = Vec::with_capacity(seeded_wire_bytes_for(ct));
+    ciphertext_seeded_append(ct, &mut out);
+    out
+}
+
+fn seeded_wire_bytes_for(ct: &Ciphertext) -> usize {
+    seeded_header_bytes() + ct.c0.num_limbs() * ct.c0.n * 4
+}
+
+/// Deserialize a compressed seeded ciphertext; validates the header against
+/// `params` (strict full limb range — oversized or partial limb counts are
+/// rejected), every c0 coefficient against its modulus, and the exact body
+/// length (a truncated seed fails here too). Returns the **lazy** form: c0
+/// populated, `a_seed` set, and `c1` the empty 0-limb NTT-domain
+/// placeholder that [`Ciphertext::expand_a`] or the aggregation shards
+/// materialize on demand.
+pub fn ciphertext_seeded_from_bytes(
+    bytes: &[u8],
+    params: &CkksParams,
+) -> anyhow::Result<Ciphertext> {
+    let mut off = 0usize;
+    anyhow::ensure!(
+        read_u32(bytes, &mut off)? == SEEDED_MAGIC,
+        "bad seeded ct magic"
+    );
+    anyhow::ensure!(read_u32(bytes, &mut off)? == VERSION, "bad version");
+    let n = read_u32(bytes, &mut off)? as usize;
+    let lo = read_u32(bytes, &mut off)? as usize;
+    let hi = read_u32(bytes, &mut off)? as usize;
+    let n_values = read_u32(bytes, &mut off)? as usize;
+    anyhow::ensure!(bytes.len() >= off + 8, "truncated seeded ct header");
+    let scale = f64::from_le_bytes(bytes[off..off + 8].try_into().unwrap());
+    off += 8;
+    anyhow::ensure!(n == params.n, "ring degree mismatch");
+    anyhow::ensure!(
+        lo == 0 && hi == params.num_limbs(),
+        "seeded ct must cover the full limb range"
+    );
+    anyhow::ensure!(n_values <= n / 2, "n_values out of range");
+    anyhow::ensure!(bytes.len() >= off + 32, "truncated ciphertext seed");
+    let mut seed = [0u8; 32];
+    seed.copy_from_slice(&bytes[off..off + 32]);
+    off += 32;
+    anyhow::ensure!(
+        bytes.len() == off + hi * n * 4,
+        "bad seeded ct body length"
+    );
+    let mut data = Vec::with_capacity(hi * n);
+    for l in 0..hi {
+        let q = params.moduli[l];
+        for _ in 0..n {
+            let c = read_u32(bytes, &mut off)? as u64;
+            anyhow::ensure!(c < q, "coefficient out of range");
+            data.push(c);
+        }
+    }
+    Ok(Ciphertext {
+        c0: RnsPoly::from_flat(n, hi, data, false),
+        c1: RnsPoly::from_flat(n, 0, Vec::new(), true),
+        n_values,
+        scale,
+        a_seed: Some(seed),
     })
 }
 
@@ -386,6 +567,7 @@ mod tests {
             c1: RnsPoly::zero(&params),
             n_values: 0,
             scale: 0.0,
+            a_seed: None,
         };
         sa.scatter_into(&mut rebuilt);
         sb.scatter_into(&mut rebuilt);
@@ -426,6 +608,136 @@ mod tests {
         ciphertext_shard_append(&ct, 0, 2, &mut buf);
         assert_eq!(&buf[..7], &[0xAA; 7]);
         assert_eq!(&buf[7..], &direct[..]);
+    }
+
+    #[test]
+    fn ct_wire_parse_codes_roundtrip() {
+        for mode in [CtWire::Dense, CtWire::Seed] {
+            assert_eq!(CtWire::parse(mode.as_str()), Some(mode));
+            assert_eq!(CtWire::from_wire_code(mode.wire_code()), Some(mode));
+        }
+        assert_eq!(CtWire::parse("gzip"), None);
+        assert_eq!(CtWire::from_wire_code(7), None);
+    }
+
+    #[test]
+    fn seeded_expand_oracle_matches_dense_twin_bitwise() {
+        // The core gate: serialize a symmetric seeded ct compressed, parse
+        // it lazily, expand the a-part from the seed — the result must be
+        // bitwise-identical to the dense twin built with the same seeded a,
+        // including on the dense wire.
+        let params = Arc::new(CkksParams::new(256, 4, 40).unwrap());
+        let encoder = Encoder::new(params.clone());
+        let mut rng = ChaChaRng::from_seed(31, 0);
+        let (_pk, sk) = keygen(&params, &mut rng);
+        let m: Vec<f64> = (0..128).map(|i| i as f64 * 0.01 - 0.4).collect();
+        let ct = crate::ckks::encrypt::encrypt_sym_seeded(
+            &params,
+            &sk,
+            &encoder.encode(&m),
+            128,
+            &mut rng,
+        );
+
+        let bytes = ciphertext_seeded_to_bytes(&ct);
+        assert_eq!(bytes.len(), seeded_wire_bytes(&params));
+        let mut lazy = ciphertext_seeded_from_bytes(&bytes, &params).unwrap();
+        assert_eq!(lazy.c1.num_limbs(), 0);
+        lazy.expand_a(&params);
+        assert_eq!(lazy, ct);
+
+        // An independent limb expansion agrees with the client-side c1.
+        let mut limb = vec![0u64; params.n];
+        for l in 0..params.num_limbs() {
+            expand_ct_a_limb(&ct.a_seed.unwrap(), l, params.moduli[l], &mut limb);
+            assert_eq!(&limb[..], ct.c1.limb(l));
+        }
+
+        // And the dense shard wire of the expanded ct matches the twin's.
+        let limbs = params.num_limbs();
+        let mut d1 = lazy.clone();
+        let mut d2 = ct.clone();
+        d1.c1.from_ntt(&params);
+        d2.c1.from_ntt(&params);
+        assert_eq!(
+            ciphertext_shard_to_bytes(&d1, 0, limbs),
+            ciphertext_shard_to_bytes(&d2, 0, limbs)
+        );
+    }
+
+    #[test]
+    fn seeded_wire_is_about_half_the_dense_shard() {
+        let params = Arc::new(CkksParams::new(1024, 6, 40).unwrap());
+        let dense = shard_wire_bytes(&params, 0, params.num_limbs());
+        let seeded = seeded_wire_bytes(&params);
+        assert!(
+            (seeded as f64) < 0.55 * dense as f64,
+            "seeded {seeded} vs dense {dense}"
+        );
+    }
+
+    #[test]
+    fn seeded_corruption_and_malformed_inputs_rejected() {
+        let params = Arc::new(CkksParams::new(128, 3, 30).unwrap());
+        let encoder = Encoder::new(params.clone());
+        let mut rng = ChaChaRng::from_seed(32, 0);
+        let (_pk, sk) = keygen(&params, &mut rng);
+        let ct = crate::ckks::encrypt::encrypt_sym_seeded(
+            &params,
+            &sk,
+            &encoder.encode(&[1.0]),
+            1,
+            &mut rng,
+        );
+        let bytes = ciphertext_seeded_to_bytes(&ct);
+        assert!(ciphertext_seeded_from_bytes(&bytes, &params).is_ok());
+
+        // bad magic
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        assert!(ciphertext_seeded_from_bytes(&bad, &params).is_err());
+        // truncated inside the seed
+        assert!(
+            ciphertext_seeded_from_bytes(&bytes[..shard_header_bytes() + 16], &params).is_err()
+        );
+        // truncated body / trailing garbage
+        assert!(ciphertext_seeded_from_bytes(&bytes[..bytes.len() - 1], &params).is_err());
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(ciphertext_seeded_from_bytes(&long, &params).is_err());
+        // oversized limb count (hi beyond the parameter set)
+        let mut bad = bytes.clone();
+        bad[16..20].copy_from_slice(&(params.num_limbs() as u32 + 1).to_le_bytes());
+        assert!(ciphertext_seeded_from_bytes(&bad, &params).is_err());
+        // partial limb range is not a valid compressed ct
+        let mut bad = bytes.clone();
+        bad[12..16].copy_from_slice(&1u32.to_le_bytes());
+        assert!(ciphertext_seeded_from_bytes(&bad, &params).is_err());
+        // out-of-range coefficient
+        let mut bad = bytes.clone();
+        let hdr = seeded_header_bytes();
+        bad[hdr..hdr + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(ciphertext_seeded_from_bytes(&bad, &params).is_err());
+        // cross-format confusion: dense shard bytes are not a seeded ct
+        // and vice versa
+        let mut dense_ct = ct.clone();
+        dense_ct.c1.from_ntt(&params);
+        let shard = ciphertext_shard_to_bytes(&dense_ct, 0, params.num_limbs());
+        assert!(ciphertext_seeded_from_bytes(&shard, &params).is_err());
+        assert!(ciphertext_shard_from_bytes(&bytes, &params).is_err());
+        // single-byte corruption sweep over the header + seed region
+        for i in 0..seeded_header_bytes() {
+            let mut b = bytes.clone();
+            b[i] ^= 0x01;
+            // Either rejected, or (for n_values/scale/seed bytes) parses to
+            // a different ciphertext — never silently equal.
+            if let Ok(mut parsed) = ciphertext_seeded_from_bytes(&b, &params) {
+                parsed.expand_a(&params);
+                let mut orig = ciphertext_seeded_from_bytes(&bytes, &params).unwrap();
+                orig.expand_a(&params);
+                assert_ne!(parsed, orig, "flip at byte {i} was silently absorbed");
+            }
+        }
     }
 
     #[test]

@@ -21,11 +21,15 @@
 //! `tests/simd_ntt.rs` sweep pins this across every generated prime and
 //! ring degree on both dispatch paths.
 //!
+//! - `NeonKernel` — the aarch64 twin: two lanes per iteration from
+//!   `vmull_u32` (32×32→64) partial products, selected after
+//!   `is_aarch64_feature_detected!("neon")`. Same bitwise contract, same
+//!   exactness argument (NEON has native 64-bit add/sub/compare but no
+//!   64×64 multiply, so the decompositions mirror the AVX2 ones).
+//!
 //! Dispatch is process-global ([`active`]) with an environment override:
 //! setting `FEDML_HE_NTT_KERNEL=scalar` forces the portable kernel even on
-//! hosts with AVX2 (CI runs the whole tier-1 suite both ways). A NEON
-//! implementation slots in as a third `NttKernel` impl behind the same
-//! trait — nothing outside this module changes.
+//! hosts with AVX2/NEON (CI runs the whole tier-1 suite both ways).
 
 use std::sync::OnceLock;
 
@@ -235,6 +239,12 @@ pub fn detected_simd() -> Option<&'static dyn NttKernel> {
     {
         if std::arch::is_x86_feature_detected!("avx2") {
             return Some(&avx2::AVX2);
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Some(&neon::NEON);
         }
     }
     None
@@ -632,6 +642,395 @@ mod avx2 {
     }
 }
 
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    //! NEON lane math. Unlike AVX2, A64 NEON has native unsigned 64-bit
+    //! add/sub and compare (`cmhi` → `vcgtq_u64`), but still no 64×64→128
+    //! multiply — products are built from `vmull_u32` (32×32→64) partial
+    //! products, exact under the same crate-wide bounds as the AVX2 module:
+    //!
+    //! - Shoup operands are < 4q < 2^33, so their high 32-bit half is 0 or
+    //!   1 and the mulhi carry-save accumulator cannot overflow.
+    //! - Twiddles / weights / moduli are < 2^31, so low-64 products need
+    //!   only two `vmull_u32`.
+    //! - Barrett magics ⌊2^62/q⌋ fit 32 bits for q > 2^30; the wrappers
+    //!   verify that at runtime and fall back to scalar otherwise.
+
+    use super::{Barrett, NttKernel, ScalarKernel};
+    use std::arch::aarch64::{
+        uint32x2_t, uint64x2_t, vaddq_u64, vbicq_u64, vcgtq_u64, vdupq_n_u64, vld1q_u64,
+        vmovn_u64, vmull_u32, vorrq_u64, vshlq_n_u64, vshrq_n_u64, vst1q_u64, vsubq_u64,
+    };
+
+    pub(super) struct NeonKernel {
+        _private: (),
+    }
+
+    /// Sole instance; only reachable through `detected_simd()`, which gates
+    /// on runtime NEON detection — the soundness condition for the safe
+    /// trait methods below.
+    pub(super) static NEON: NeonKernel = NeonKernel { _private: () };
+
+    const LANES: usize = 2;
+
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn splat(x: u64) -> uint64x2_t {
+        vdupq_n_u64(x)
+    }
+
+    /// Low 32 bits of each lane as a narrowed `u32x2`.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn lo32(a: uint64x2_t) -> uint32x2_t {
+        vmovn_u64(a)
+    }
+
+    /// Low 64 bits of `a·b` per lane, exact when `b < 2^32` and `a·b < 2^64`.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn mul_lo_small(a: uint64x2_t, b: uint64x2_t) -> uint64x2_t {
+        let lo = vmull_u32(lo32(a), lo32(b));
+        let hi = vmull_u32(lo32(vshrq_n_u64::<32>(a)), lo32(b));
+        vaddq_u64(lo, vshlq_n_u64::<32>(hi))
+    }
+
+    /// High 64 bits of `a·b` per lane, exact for `a < 2^33` (so `a >> 32`
+    /// is 0 or 1 and the carry-save middle term stays below 2^64).
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn mul_hi_narrow(a: uint64x2_t, b: uint64x2_t) -> uint64x2_t {
+        let a_lo = lo32(a);
+        let a_hi = lo32(vshrq_n_u64::<32>(a));
+        let b_lo = lo32(b);
+        let b_hi = lo32(vshrq_n_u64::<32>(b));
+        let p00 = vmull_u32(a_lo, b_lo);
+        let p01 = vmull_u32(a_lo, b_hi);
+        let p10 = vmull_u32(a_hi, b_lo);
+        let p11 = vmull_u32(a_hi, b_hi);
+        let mid = vaddq_u64(vaddq_u64(p01, p10), vshrq_n_u64::<32>(p00));
+        vaddq_u64(p11, vshrq_n_u64::<32>(mid))
+    }
+
+    /// `x − b` where `x ≥ b`, else `x` (`vcgtq_u64` is a true unsigned
+    /// 64-bit compare — no signed-range caveat here).
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn csub(x: uint64x2_t, b: uint64x2_t) -> uint64x2_t {
+        let lt = vcgtq_u64(b, x);
+        vsubq_u64(x, vbicq_u64(b, lt))
+    }
+
+    /// Lazy Shoup product per lane: `a·w − ⌊a·w_shoup/2^64⌋·q ∈ [0, 2q)`
+    /// for `a < 4q < 2^33`, `w < q < 2^31` — the vector twin of
+    /// `ntt::mul_mod_shoup_lazy`, bit for bit.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn shoup_lazy(
+        a: uint64x2_t,
+        w: uint64x2_t,
+        w_shoup: uint64x2_t,
+        q: uint64x2_t,
+    ) -> uint64x2_t {
+        let hi = mul_hi_narrow(a, w_shoup);
+        let aw = mul_lo_small(a, w);
+        let hq = mul_lo_small(hi, q);
+        vsubq_u64(aw, hq)
+    }
+
+    /// Fully reduced Shoup product: lazy then one conditional subtract.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn shoup_full(
+        a: uint64x2_t,
+        w: uint64x2_t,
+        w_shoup: uint64x2_t,
+        q: uint64x2_t,
+    ) -> uint64x2_t {
+        csub(shoup_lazy(a, w, w_shoup, q), q)
+    }
+
+    /// Barrett reduction per lane: `t − ⌊t·m/2^62⌋·q` then a conditional
+    /// subtract, exact for `t < 2^62` and `m < 2^32` — the vector twin of
+    /// `Barrett::reduce`/`Barrett::mul`'s reduction half.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn barrett_reduce(t: uint64x2_t, m: uint64x2_t, q: uint64x2_t) -> uint64x2_t {
+        let t_hi = vshrq_n_u64::<32>(t);
+        let p00 = vmull_u32(lo32(t), lo32(m));
+        let p10 = vmull_u32(lo32(t_hi), lo32(m));
+        // t·m as hi64/lo64 via carry-save: full = p10·2^32 + p00.
+        let hi64 = vshrq_n_u64::<32>(vaddq_u64(p10, vshrq_n_u64::<32>(p00)));
+        let lo64 = vaddq_u64(vshlq_n_u64::<32>(p10), p00);
+        // ⌊t·m/2^62⌋ = hi64·4 | lo64»62 (< 2^32, so the low-product below
+        // is exact).
+        let quot = vorrq_u64(vshlq_n_u64::<2>(hi64), vshrq_n_u64::<62>(lo64));
+        let r = vsubq_u64(t, mul_lo_small(quot, q));
+        csub(r, q)
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn forward_stage_neon(
+        a: &mut [u64],
+        m: usize,
+        t: usize,
+        psi: &[u64],
+        psi_shoup: &[u64],
+        q: u64,
+    ) {
+        let qv = splat(q);
+        let two_qv = splat(2 * q);
+        for i in 0..m {
+            let j1 = 2 * i * t;
+            let s = splat(psi[i]);
+            let s_sh = splat(psi_shoup[i]);
+            let (lo, hi) = a[j1..j1 + 2 * t].split_at_mut(t);
+            let mut j = 0;
+            // t is a power of two ≥ 2 here: no tail.
+            while j < t {
+                let xp = lo.as_mut_ptr().add(j);
+                let yp = hi.as_mut_ptr().add(j);
+                let x = vld1q_u64(xp);
+                let y = vld1q_u64(yp);
+                let u = csub(x, two_qv);
+                let v = shoup_lazy(y, s, s_sh, qv);
+                vst1q_u64(xp, vaddq_u64(u, v));
+                vst1q_u64(yp, vaddq_u64(u, vsubq_u64(two_qv, v)));
+                j += LANES;
+            }
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn forward_finish_neon(a: &mut [u64], q: u64) {
+        let qv = splat(q);
+        let two_qv = splat(2 * q);
+        let mut chunks = a.chunks_exact_mut(LANES);
+        for c in chunks.by_ref() {
+            let p = c.as_mut_ptr();
+            let x = vld1q_u64(p);
+            vst1q_u64(p, csub(csub(x, two_qv), qv));
+        }
+        ScalarKernel.forward_finish(chunks.into_remainder(), q);
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn inverse_stage_neon(
+        a: &mut [u64],
+        h: usize,
+        t: usize,
+        psi: &[u64],
+        psi_shoup: &[u64],
+        q: u64,
+    ) {
+        let qv = splat(q);
+        let two_qv = splat(2 * q);
+        let mut j1 = 0;
+        for i in 0..h {
+            let s = splat(psi[i]);
+            let s_sh = splat(psi_shoup[i]);
+            let (lo, hi) = a[j1..j1 + 2 * t].split_at_mut(t);
+            let mut j = 0;
+            while j < t {
+                let xp = lo.as_mut_ptr().add(j);
+                let yp = hi.as_mut_ptr().add(j);
+                let u = vld1q_u64(xp);
+                let v = vld1q_u64(yp);
+                let sum = csub(vaddq_u64(u, v), two_qv);
+                let diff = vaddq_u64(u, vsubq_u64(two_qv, v));
+                vst1q_u64(xp, sum);
+                vst1q_u64(yp, shoup_lazy(diff, s, s_sh, qv));
+                j += LANES;
+            }
+            j1 += 2 * t;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn inverse_finish_neon(
+        lo: &mut [u64],
+        hi: &mut [u64],
+        n_inv: u64,
+        n_inv_shoup: u64,
+        psi_last: u64,
+        psi_last_shoup: u64,
+        q: u64,
+    ) {
+        let qv = splat(q);
+        let two_qv = splat(2 * q);
+        let ni = splat(n_inv);
+        let ni_sh = splat(n_inv_shoup);
+        let pl = splat(psi_last);
+        let pl_sh = splat(psi_last_shoup);
+        let half = lo.len();
+        let vec_end = half - half % LANES;
+        let mut j = 0;
+        while j < vec_end {
+            let xp = lo.as_mut_ptr().add(j);
+            let yp = hi.as_mut_ptr().add(j);
+            let u = vld1q_u64(xp);
+            let v = vld1q_u64(yp);
+            let sum = vaddq_u64(u, v);
+            let diff = vaddq_u64(u, vsubq_u64(two_qv, v));
+            vst1q_u64(xp, shoup_full(sum, ni, ni_sh, qv));
+            vst1q_u64(yp, shoup_full(diff, pl, pl_sh, qv));
+            j += LANES;
+        }
+        ScalarKernel.inverse_finish(
+            &mut lo[vec_end..],
+            &mut hi[vec_end..],
+            n_inv,
+            n_inv_shoup,
+            psi_last,
+            psi_last_shoup,
+            q,
+        );
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn weighted_init_neon(dst: &mut [u64], src: &[u64], w: u64, br: Barrett) {
+        let qv = splat(br.q);
+        let mv = splat(br.magic());
+        let wv = splat(w);
+        let n = dst.len();
+        let vec_end = n - n % LANES;
+        let mut j = 0;
+        while j < vec_end {
+            let sp = src.as_ptr().add(j);
+            let dp = dst.as_mut_ptr().add(j);
+            // src and w are both < q < 2^31: one vmull_u32 is the exact
+            // product.
+            let t = vmull_u32(lo32(vld1q_u64(sp)), lo32(wv));
+            vst1q_u64(dp, barrett_reduce(t, mv, qv));
+            j += LANES;
+        }
+        ScalarKernel.weighted_init(&mut dst[vec_end..], &src[vec_end..], w, br);
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn weighted_accumulate_neon(dst: &mut [u64], src: &[u64], w: u64, br: Barrett) {
+        let qv = splat(br.q);
+        let mv = splat(br.magic());
+        let wv = splat(w);
+        let n = dst.len();
+        let vec_end = n - n % LANES;
+        let mut j = 0;
+        while j < vec_end {
+            let sp = src.as_ptr().add(j);
+            let dp = dst.as_mut_ptr().add(j);
+            let t = vmull_u32(lo32(vld1q_u64(sp)), lo32(wv));
+            let prod = barrett_reduce(t, mv, qv);
+            let acc = vaddq_u64(vld1q_u64(dp), prod);
+            vst1q_u64(dp, acc);
+            j += LANES;
+        }
+        ScalarKernel.weighted_accumulate(&mut dst[vec_end..], &src[vec_end..], w, br);
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn reduce_slice_neon(dst: &mut [u64], br: Barrett) {
+        let qv = splat(br.q);
+        let mv = splat(br.magic());
+        let n = dst.len();
+        let vec_end = n - n % LANES;
+        let mut j = 0;
+        while j < vec_end {
+            let dp = dst.as_mut_ptr().add(j);
+            let t = vld1q_u64(dp);
+            vst1q_u64(dp, barrett_reduce(t, mv, qv));
+            j += LANES;
+        }
+        ScalarKernel.reduce_slice(&mut dst[vec_end..], br);
+    }
+
+    impl NttKernel for NeonKernel {
+        fn name(&self) -> &'static str {
+            "neon"
+        }
+
+        fn is_simd(&self) -> bool {
+            true
+        }
+
+        fn forward_stage(
+            &self,
+            a: &mut [u64],
+            m: usize,
+            t: usize,
+            psi: &[u64],
+            psi_shoup: &[u64],
+            q: u64,
+        ) {
+            if t >= LANES {
+                // Sound: NEON presence was verified before this handle
+                // could be obtained.
+                unsafe { forward_stage_neon(a, m, t, psi, psi_shoup, q) }
+            } else {
+                // The last stage (t = 1) interleaves wings too tightly for
+                // 2-lane loads; it is O(n) scalar work.
+                ScalarKernel.forward_stage(a, m, t, psi, psi_shoup, q);
+            }
+        }
+
+        fn forward_finish(&self, a: &mut [u64], q: u64) {
+            unsafe { forward_finish_neon(a, q) }
+        }
+
+        fn inverse_stage(
+            &self,
+            a: &mut [u64],
+            h: usize,
+            t: usize,
+            psi: &[u64],
+            psi_shoup: &[u64],
+            q: u64,
+        ) {
+            if t >= LANES {
+                unsafe { inverse_stage_neon(a, h, t, psi, psi_shoup, q) }
+            } else {
+                ScalarKernel.inverse_stage(a, h, t, psi, psi_shoup, q);
+            }
+        }
+
+        fn inverse_finish(
+            &self,
+            lo: &mut [u64],
+            hi: &mut [u64],
+            n_inv: u64,
+            n_inv_shoup: u64,
+            psi_last: u64,
+            psi_last_shoup: u64,
+            q: u64,
+        ) {
+            unsafe { inverse_finish_neon(lo, hi, n_inv, n_inv_shoup, psi_last, psi_last_shoup, q) }
+        }
+
+        fn weighted_init(&self, dst: &mut [u64], src: &[u64], w: u64, br: Barrett) {
+            if br.magic() >> 32 != 0 {
+                ScalarKernel.weighted_init(dst, src, w, br);
+            } else {
+                unsafe { weighted_init_neon(dst, src, w, br) }
+            }
+        }
+
+        fn weighted_accumulate(&self, dst: &mut [u64], src: &[u64], w: u64, br: Barrett) {
+            if br.magic() >> 32 != 0 {
+                ScalarKernel.weighted_accumulate(dst, src, w, br);
+            } else {
+                unsafe { weighted_accumulate_neon(dst, src, w, br) }
+            }
+        }
+
+        fn reduce_slice(&self, dst: &mut [u64], br: Barrett) {
+            if br.magic() >> 32 != 0 {
+                ScalarKernel.reduce_slice(dst, br);
+            } else {
+                unsafe { reduce_slice_neon(dst, br) }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -652,6 +1051,6 @@ mod tests {
     #[test]
     fn active_is_a_known_kernel() {
         let k = active();
-        assert!(k.name() == "scalar" || k.name() == "avx2");
+        assert!(k.name() == "scalar" || k.name() == "avx2" || k.name() == "neon");
     }
 }

@@ -124,7 +124,12 @@ pub fn partial_decrypt(
     rng: &mut ChaChaRng,
 ) -> RnsPoly {
     let mut c1 = ct.c1.clone();
-    c1.to_ntt(params);
+    // Symmetric seeded ciphertexts already carry c1 in NTT form (the
+    // expanded `a` is sampled directly in the NTT domain); only forward
+    // coefficient-domain inputs.
+    if !c1.ntt_form {
+        c1.to_ntt(params);
+    }
     let mut d = c1.mul_ntt(&party.s_ntt, params);
     d.from_ntt(params);
     // Smudging noise: hides s_k from whoever combines the partials.
@@ -230,6 +235,66 @@ mod tests {
             .map(|(a, b)| (a - b).abs())
             .fold(0.0f64, f64::max);
         assert!(max_err > 1.0, "partial set should not decrypt");
+    }
+
+    #[test]
+    fn seeded_symmetric_ct_threshold_roundtrip() {
+        // Property (satellite): threshold share-escrow decryption round-trips
+        // symmetric seeded ciphertexts — the NTT-form c1 produced by
+        // `encrypt_sym_seeded` (and by lazy wire expansion) feeds straight
+        // into `partial_decrypt` without a redundant forward NTT.
+        use crate::ckks::encrypt::encrypt_sym_seeded;
+        use crate::ckks::keys::SecretKey;
+        use crate::ckks::serialize::{ciphertext_seeded_from_bytes, ciphertext_seeded_to_bytes};
+
+        let params = Arc::new(CkksParams::new(512, 4, 45).unwrap());
+        let encoder = Encoder::new(params.clone());
+        let a = common_reference(&params, 31);
+        let mut rng = ChaChaRng::from_seed(41, 0);
+        let parties: Vec<ThresholdParty> = (0..3)
+            .map(|k| party_keygen(&params, k, &a, &mut rng))
+            .collect();
+        // The joint secret is the sum of the party shares; a client holding
+        // it can use the symmetric seeded encryption path directly.
+        let mut s = parties[0].s_ntt.clone();
+        for p in &parties[1..] {
+            s.add_assign(&p.s_ntt, &params);
+        }
+        let joint_sk = SecretKey { s_ntt: s };
+
+        let values: Vec<f64> = (0..200).map(|i| (i as f64 * 0.017).sin()).collect();
+        let ct = encrypt_sym_seeded(
+            &params,
+            &joint_sk,
+            &encoder.encode(&values),
+            values.len(),
+            &mut rng,
+        );
+        assert!(ct.c1.ntt_form && ct.a_seed.is_some());
+
+        // Direct threshold decryption of the fresh seeded ciphertext.
+        let mut d_rng = ChaChaRng::from_seed(42, 0);
+        let partials: Vec<RnsPoly> = parties
+            .iter()
+            .map(|p| partial_decrypt(&params, p, &ct, &mut d_rng))
+            .collect();
+        let m = combine_partials(&params, &ct, &partials);
+        let dec = encoder.decode(&m, values.len(), ct.scale);
+        for (j, (&v, &d)) in values.iter().zip(dec.iter()).enumerate() {
+            assert!((v - d).abs() < 1e-4, "slot {j}: {v} vs {d}");
+        }
+
+        // And through the compressed wire: serialize, re-expand, decrypt.
+        let bytes = ciphertext_seeded_to_bytes(&ct);
+        let mut wire_ct = ciphertext_seeded_from_bytes(&bytes, &params).unwrap();
+        wire_ct.expand_a(&params);
+        let mut d_rng = ChaChaRng::from_seed(42, 0);
+        let partials: Vec<RnsPoly> = parties
+            .iter()
+            .map(|p| partial_decrypt(&params, p, &wire_ct, &mut d_rng))
+            .collect();
+        let m2 = combine_partials(&params, &wire_ct, &partials);
+        assert_eq!(m, m2, "wire round-trip must be bitwise identical");
     }
 
     #[test]

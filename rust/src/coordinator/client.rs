@@ -111,7 +111,20 @@ impl<'a> FlClient<'a> {
         pk: &crate::ckks::PublicKey,
         dp_scale: Option<f64>,
     ) -> EncryptedUpdate {
-        let mut update = codec.encrypt_update(params, mask, pk, &mut self.rng);
+        self.encrypt_keyed(codec, params, mask, crate::ckks::EncKey::Public(pk), dp_scale)
+    }
+
+    /// [`Self::encrypt`] under either ct-wire key mode: public-key (dense
+    /// wire) or symmetric seeded (seed wire, `--ct-wire seed`).
+    pub fn encrypt_keyed(
+        &mut self,
+        codec: &SelectiveCodec,
+        params: &mut Vec<f32>,
+        mask: &EncryptionMask,
+        key: crate::ckks::EncKey<'_>,
+        dp_scale: Option<f64>,
+    ) -> EncryptedUpdate {
+        let mut update = codec.encrypt_update_keyed(params, mask, key, &mut self.rng);
         if let Some(b) = dp_scale {
             // Laplace noise on the *plaintext* part only — encrypted
             // coordinates need no noise (Theorem 3.9: ε = 0).
@@ -223,10 +236,25 @@ impl ClientCore<'_> {
         pk: &crate::ckks::PublicKey,
         dp_scale: Option<f64>,
     ) -> EncryptedUpdate {
+        self.encrypt_keyed(codec, params, mask, crate::ckks::EncKey::Public(pk), dp_scale)
+    }
+
+    /// [`Self::encrypt`] under either ct-wire key mode — the seed wire
+    /// encrypts symmetrically with the distributed secret key, consuming
+    /// the same per-client rng stream in the same order on every
+    /// transport (the bitwise sim/tcp/serve equivalence rests on this).
+    pub fn encrypt_keyed(
+        &mut self,
+        codec: &SelectiveCodec,
+        params: &mut Vec<f32>,
+        mask: &EncryptionMask,
+        key: crate::ckks::EncKey<'_>,
+        dp_scale: Option<f64>,
+    ) -> EncryptedUpdate {
         match self {
-            ClientCore::Artifact(c) => c.encrypt(codec, params, mask, pk, dp_scale),
+            ClientCore::Artifact(c) => c.encrypt_keyed(codec, params, mask, key, dp_scale),
             ClientCore::Synthetic(c) => {
-                let mut update = codec.encrypt_update(params, mask, pk, &mut c.rng);
+                let mut update = codec.encrypt_update_keyed(params, mask, key, &mut c.rng);
                 if let Some(b) = dp_scale {
                     crate::crypto::dp::add_noise(&mut c.rng, &mut update.plain, b);
                 }

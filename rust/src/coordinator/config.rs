@@ -1,6 +1,7 @@
 //! FL task configuration (the "server package" of the deployment platform).
 
 use crate::agg_engine::{Engine, EngineConfig};
+use crate::ckks::CtWire;
 use crate::util::cli::Args;
 
 /// Which parameters get encrypted.
@@ -237,6 +238,12 @@ pub struct FlConfig {
     pub round_wait: f64,
     /// Session wire-authentication mode (`--wire-auth`).
     pub wire_auth: WireAuth,
+    /// Uplink ciphertext wire format (`--ct-wire {dense,seed}`, env
+    /// `FEDML_HE_CT_WIRE`). `seed` switches clients to symmetric seeded
+    /// encryption whose a-part travels as a 32-byte seed — roughly halving
+    /// encrypted upload bytes — and the server to lazy a-expansion.
+    /// Task-level: the HELLO/WELCOME handshake refuses mismatched peers.
+    pub ct_wire: CtWire,
     /// Server session driver under `--transport tcp`
     /// (`--transport-backend`): blocking thread-per-session or the sharded
     /// epoll reactor hub.
@@ -283,6 +290,7 @@ impl Default for FlConfig {
             join_wait: 120.0,
             round_wait: 300.0,
             wire_auth: WireAuth::env_default(),
+            ct_wire: CtWire::env_default(),
             transport_backend: TransportBackend::env_default(),
             connect_retries: 5,
             retry_base_ms: 50,
@@ -347,6 +355,12 @@ impl FlConfig {
             wire_auth: match args.get("wire-auth") {
                 Some(v) => WireAuth::parse(&v)?,
                 None => d.wire_auth,
+            },
+            ct_wire: match args.get("ct-wire") {
+                Some(v) => CtWire::parse(v.trim()).ok_or_else(|| {
+                    anyhow::anyhow!("unknown ct-wire mode '{v}' (expected: dense | seed)")
+                })?,
+                None => d.ct_wire,
             },
             transport_backend: match args.get("transport-backend") {
                 Some(v) => TransportBackend::parse(&v)?,
@@ -442,6 +456,22 @@ mod tests {
     }
 
     #[test]
+    fn ct_wire_parses() {
+        let args = Args::parse_from(
+            "run --ct-wire seed".split_whitespace().map(String::from),
+        );
+        let c = FlConfig::from_args(&args).unwrap();
+        assert_eq!(c.ct_wire, CtWire::Seed);
+        let none = Args::parse_from(["run".to_string()]);
+        // no env override in tests: the default wire stays dense
+        if std::env::var("FEDML_HE_CT_WIRE").is_err() {
+            assert_eq!(FlConfig::from_args(&none).unwrap().ct_wire, CtWire::Dense);
+        }
+        assert_eq!(CtWire::parse("dense").unwrap(), CtWire::Dense);
+        assert!(CtWire::parse("sparse").is_none());
+    }
+
+    #[test]
     fn transport_backend_parses() {
         let args = Args::parse_from(
             "run --transport tcp --transport-backend hub"
@@ -512,6 +542,7 @@ mod tests {
             "run --transport udp",
             "run --intake-max-wait soon",
             "run --wire-auth hmac",
+            "run --ct-wire sparse",
             "run --transport-backend fancy",
             "run --connect-retries lots",
             "run --retry-base-ms soon",

@@ -38,7 +38,7 @@ use super::server::{
 };
 use super::taskkey::TaskKey;
 use crate::agg_engine::{Arrival, CohortScheduler, Engine, Population, StreamingAggregator};
-use crate::ckks::{CkksContext, PublicKey, SecretKey};
+use crate::ckks::{CkksContext, CtWire, EncKey, PublicKey, SecretKey};
 use crate::crypto::prng::ChaChaRng;
 use crate::fl::model_meta::layer_spans_for;
 use crate::fl::{SyntheticClient, SyntheticModel, SYNTHETIC_MODEL};
@@ -93,6 +93,10 @@ pub struct MaskStage<'s> {
     pub map_len: usize,
     pub global: &'s [f32],
     pub pk: &'s PublicKey,
+    /// `Some` under `--ct-wire seed`: sim participants then encrypt their
+    /// sensitivity maps symmetrically (seed-expanded wire), matching what a
+    /// remote client of the same task would put on the socket.
+    pub enc_sk: Option<&'s SecretKey>,
     pub codec: &'s SelectiveCodec,
 }
 
@@ -102,6 +106,8 @@ pub struct RoundLaunch<'s> {
     pub global: &'s [f32],
     pub mask: &'s EncryptionMask,
     pub pk: &'s PublicKey,
+    /// `Some` under `--ct-wire seed` (see [`MaskStage::enc_sk`]).
+    pub enc_sk: Option<&'s SecretKey>,
     pub codec: &'s SelectiveCodec,
     /// This participant's FedAvg weight normalized over the round's active
     /// set.
@@ -109,6 +115,27 @@ pub struct RoundLaunch<'s> {
     pub local_steps: usize,
     pub lr: f32,
     pub dp_scale: Option<f64>,
+}
+
+/// The secret key in-process participants encrypt with under `--ct-wire
+/// seed` (`None` in dense mode: they use the public key). Seed mode with
+/// threshold keys is rejected at server construction, so the `Threshold`
+/// arm is unreachable when `ct_wire == Seed`.
+fn seed_wire_sk(ct_wire: CtWire, keys: &KeyMaterial) -> Option<&SecretKey> {
+    match (ct_wire, keys) {
+        (CtWire::Seed, KeyMaterial::SingleKey { sk, .. }) => Some(sk),
+        _ => None,
+    }
+}
+
+/// Uplink key + wire format for one sim encrypt site: symmetric seeded
+/// when the task runs `--ct-wire seed` (sk present), else public-key
+/// dense. The wire tag feeds the simulated byte accounting.
+fn uplink_key<'k>(pk: &'k PublicKey, enc_sk: Option<&'k SecretKey>) -> (EncKey<'k>, CtWire) {
+    match enc_sk {
+        Some(sk) => (EncKey::SymSeeded(sk), CtWire::Seed),
+        None => (EncKey::Public(pk), CtWire::Dense),
+    }
 }
 
 /// What an in-process participant produced for a round (remote peers
@@ -196,13 +223,14 @@ impl Participant for SimParticipant<'_> {
             MaskGranularity::Param => self.core.sensitivity(stage.global)?,
             MaskGranularity::Layer => self.core.layer_sensitivity(stage.global, stage.spans)?,
         };
-        let cts = selective::encrypt_vector(&stage.codec.ctx, &s, stage.pk, self.core.rng_mut());
+        let (key, wire) = uplink_key(stage.pk, stage.enc_sk);
+        let cts = selective::encrypt_vector_keyed(&stage.codec.ctx, &s, key, self.core.rng_mut());
         let upd = EncryptedUpdate {
             cts,
             plain: Vec::new(),
             total: stage.map_len,
         };
-        let bytes = upd.wire_bytes(&stage.codec.ctx) as u64;
+        let bytes = upd.wire_bytes_for(&stage.codec.ctx, wire) as u64;
         Ok(Some((upd, bytes)))
     }
 
@@ -224,9 +252,10 @@ impl Participant for SimParticipant<'_> {
         let (mut local, loss) = self.core.train(l.global, l.local_steps, l.lr)?;
         let train_secs = t.elapsed().as_secs_f64();
         let t = Instant::now();
-        let update = self.core.encrypt(l.codec, &mut local, l.mask, l.pk, l.dp_scale);
+        let (key, wire) = uplink_key(l.pk, l.enc_sk);
+        let update = self.core.encrypt_keyed(l.codec, &mut local, l.mask, key, l.dp_scale);
         let encrypt_secs = t.elapsed().as_secs_f64();
-        let upload_bytes = update.wire_bytes(&l.codec.ctx) as u64;
+        let upload_bytes = update.wire_bytes_for(&l.codec.ctx, wire) as u64;
         Ok(Some(SimRoundOutput {
             client: self.wire_id,
             alpha: l.alpha_norm,
@@ -401,6 +430,7 @@ pub(crate) fn phase_mask_agreement(
                 map_len,
                 global: &st.global,
                 pk: &st.pk,
+                enc_sk: seed_wire_sk(cfg.ct_wire, &st.keys),
                 codec: &srv.codec,
             };
             let mut maps: Vec<(u64, f64, EncryptedUpdate)> = Vec::new();
@@ -417,6 +447,7 @@ pub(crate) fn phase_mask_agreement(
                     n_cts: srv.codec.ct_count(map_len),
                     n_plain: 0,
                     total: map_len,
+                    ct_wire: cfg.ct_wire,
                 };
                 let expected: Vec<(u64, Option<f64>)> = base_alpha
                     .iter()
@@ -502,7 +533,7 @@ pub(crate) fn phase_mask_agreement(
     st.report.mask_ratio = mask.ratio();
     st.report.encrypted_params = mask.encrypted_count();
     st.report.mask_runs = mask.encrypted.n_runs();
-    st.shape = Some(UpdateShape::for_round(&srv.codec.ctx, &mask));
+    st.shape = Some(UpdateShape::for_round_wire(&srv.codec.ctx, &mask, cfg.ct_wire));
     st.mask = Some(mask);
     Ok(())
 }
@@ -654,6 +685,7 @@ fn phase_collect_sim(
             global: &st.global,
             mask,
             pk: &st.pk,
+            enc_sk: seed_wire_sk(cfg.ct_wire, &st.keys),
             codec: &srv.codec,
             alpha_norm: plan.alphas[k],
             local_steps: cfg.local_steps,
@@ -1071,6 +1103,14 @@ pub fn client_session_loop(
     )?;
     let mut global = init_global;
     let total = global.len();
+    // Uplink encryption key for the task's ct-wire mode. The HELLO/WELCOME
+    // handshake already pinned the mode task-wide, so a seed-mode client
+    // encrypts symmetrically — same rng stream, same order as the sim
+    // participant it is bitwise-equivalent to.
+    let enc = match cfg.opts.ct_wire {
+        CtWire::Dense => EncKey::Public(pk),
+        CtWire::Seed => EncKey::SymSeeded(sk),
+    };
     // rejoin budget for the whole task
     let mut rejoins_left = cfg.opts.connect_retries;
 
@@ -1082,7 +1122,7 @@ pub fn client_session_loop(
             MaskGranularity::Layer => core.layer_sensitivity(&global, &spans)?,
         };
         let map_len = s.len();
-        let cts = selective::encrypt_vector(&codec.ctx, &s, pk, core.rng_mut());
+        let cts = selective::encrypt_vector_keyed(&codec.ctx, &s, enc, core.rng_mut());
         let upd = EncryptedUpdate {
             cts,
             plain: Vec::new(),
@@ -1148,7 +1188,7 @@ pub fn client_session_loop(
             let (mut local, loss) = core.train(&global, cfg.local_steps, cfg.lr)?;
             let train_secs = t.elapsed().as_secs_f64();
             let t = Instant::now();
-            let upd = core.encrypt(codec, &mut local, &mask, pk, cfg.dp_scale);
+            let upd = core.encrypt_keyed(codec, &mut local, &mask, enc, cfg.dp_scale);
             let encrypt_secs = t.elapsed().as_secs_f64();
             loop {
                 match sess.upload(
@@ -1211,6 +1251,9 @@ pub fn join_task(
             client_id,
         ));
     }
+    // ditto the ct-wire mode: every join announces the task's mode at
+    // HELLO, so a seed-mode task can't be silently downgraded to dense
+    opts.ct_wire = spec.ct_wire;
     let params = spec.params()?;
     let ctx = CkksContext {
         encoder: Arc::new(crate::ckks::Encoder::new(params.clone())),

@@ -22,7 +22,7 @@ use super::config::{Backend, FlConfig, KeyMode, Transport, TransportBackend, Wir
 use super::key_authority::KeyMaterial;
 use super::phases::{self, Participant, RemoteParticipant, SimParticipant, Uplink};
 use super::taskkey::{TaskKey, TaskSpec};
-use crate::ckks::CkksContext;
+use crate::ckks::{CkksContext, CtWire};
 use crate::coordinator::client::{ClientCore, FlClient};
 use crate::crypto::prng::ChaChaRng;
 use crate::fl::{SyntheticClient, SyntheticModel, SYNTHETIC_MODEL};
@@ -42,19 +42,22 @@ fn bind_transport_hub(
     params: std::sync::Arc<crate::ckks::CkksParams>,
     max_sessions: usize,
     auth_root: Option<[u8; 32]>,
+    ct_wire: CtWire,
 ) -> anyhow::Result<TransportHub> {
     Ok(match backend {
-        TransportBackend::Threads => TransportHub::Threads(SessionHub::bind_with_auth(
+        TransportBackend::Threads => TransportHub::Threads(SessionHub::bind_full(
             addr,
             params,
             max_sessions,
             auth_root,
+            ct_wire,
         )?),
-        TransportBackend::Hub => TransportHub::Reactor(ReactorHub::bind_with_auth(
+        TransportBackend::Hub => TransportHub::Reactor(ReactorHub::bind_full(
             addr,
             params,
             max_sessions,
             auth_root,
+            ct_wire,
         )?),
     })
 }
@@ -257,6 +260,12 @@ impl<'a> FlServer<'a> {
     }
 
     fn with_runtime(rt: Option<&'a Runtime>, mut cfg: FlConfig) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            cfg.ct_wire == CtWire::Dense || cfg.key_mode == KeyMode::SingleKey,
+            "--ct-wire seed requires --keys single: seeded ciphertexts are \
+             symmetric (secret-key) encryptions, which the threshold share \
+             holders cannot produce individually"
+        );
         let ctx = if cfg.model == SYNTHETIC_MODEL {
             // artifact-free: force the native backend (the XLA aggregation
             // path needs a runtime and buys nothing at synthetic scale)
@@ -417,6 +426,7 @@ impl<'a> FlServer<'a> {
             connect_retry: Duration::from_secs_f64(self.cfg.join_wait.max(1.0)),
             connect_retries: self.cfg.connect_retries,
             retry_base: Duration::from_millis(self.cfg.retry_base_ms.max(1)),
+            ct_wire: self.cfg.ct_wire,
             ..SessionOpts::default()
         }
     }
@@ -479,6 +489,7 @@ impl<'a> FlServer<'a> {
             self.codec.ctx.params.clone(),
             cfg.clients * 2 + 8,
             mac_root,
+            cfg.ct_wire,
         )?;
         crate::log_debug!("server", "transport backend: {}", hub.backend_name());
         let addr = match &cfg.connect {
@@ -597,6 +608,7 @@ impl<'a> FlServer<'a> {
             self.codec.ctx.params.clone(),
             cfg.clients * 2 + 8,
             mac_root,
+            cfg.ct_wire,
         )?;
         let addr = hub.local_addr()?;
         if let Some(p) = &opts.addr_file {
@@ -707,6 +719,10 @@ mod tests {
         let Some(rt) = runtime() else { return };
         let mut cfg = quick_cfg();
         cfg.key_mode = KeyMode::Threshold;
+        // threshold share holders can't produce symmetric seeded
+        // ciphertexts, so this test pins the dense wire (robust against the
+        // CI-wide FEDML_HE_CT_WIRE=seed rerun)
+        cfg.ct_wire = crate::ckks::CtWire::Dense;
         cfg.rounds = 2;
         cfg.backend = Backend::Native;
         let (report, _) = FlServer::new(&rt, cfg).unwrap().run().unwrap();

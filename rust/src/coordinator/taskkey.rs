@@ -25,12 +25,12 @@ use crate::ckks::keys::{PublicKey, SecretKey};
 use crate::ckks::serialize::{
     public_key_append, public_key_read, secret_key_append, secret_key_read,
 };
-use crate::ckks::CkksParams;
+use crate::ckks::{CkksParams, CtWire};
 use crate::transport::frame::crc32;
 use std::sync::Arc;
 
 const MAGIC: u32 = 0x4648_544B; // "FHTK"
-const VERSION: u32 = 2; // v2: wire-auth mode tag + 32-byte mac_root
+const VERSION: u32 = 3; // v2: wire-auth tag + mac_root; v3: ct-wire tag
 
 /// The task parameters every process of a multi-process run must share.
 #[derive(Debug, Clone, PartialEq)]
@@ -55,6 +55,10 @@ pub struct TaskSpec {
     /// (`join` auto-selects it from here; a mode mismatch fails loudly at
     /// the handshake).
     pub wire_auth: WireAuth,
+    /// Uplink ciphertext wire format (`--ct-wire`), pinned task-wide the
+    /// same way: `join` announces it at HELLO and the server refuses a
+    /// mismatch, so no client can be silently downgraded to the dense wire.
+    pub ct_wire: CtWire,
 }
 
 impl TaskSpec {
@@ -76,6 +80,7 @@ impl TaskSpec {
             seed: cfg.seed,
             crypto: (params.n, params.num_limbs(), params.scaling_bits),
             wire_auth: cfg.wire_auth,
+            ct_wire: cfg.ct_wire,
         }
     }
 
@@ -135,6 +140,10 @@ fn wire_auth_from_u8(v: u8) -> anyhow::Result<WireAuth> {
     })
 }
 
+fn ct_wire_from_u8(v: u8) -> anyhow::Result<CtWire> {
+    CtWire::from_wire_code(v as u32).ok_or_else(|| anyhow::anyhow!("unknown ct-wire tag {v}"))
+}
+
 /// The complete out-of-band distribution artifact: spec + key material.
 pub struct TaskKey {
     pub spec: TaskSpec,
@@ -185,6 +194,7 @@ impl TaskKey {
         out.push(granularity_to_u8(s.mask_granularity));
         out.push(u8::from(s.dp_scale.is_some()));
         out.push(wire_auth_to_u8(s.wire_auth));
+        out.push(s.ct_wire.wire_code() as u8);
         out.extend_from_slice(&s.dp_scale.unwrap_or(0.0).to_le_bytes());
         out.extend_from_slice(&(s.samples_per_client as u32).to_le_bytes());
         out.extend_from_slice(&s.skew.to_le_bytes());
@@ -222,13 +232,14 @@ impl TaskKey {
         let local_steps = read_u32(body, &mut off)? as usize;
         let lr = f32::from_bits(read_u32(body, &mut off)?);
         let ratio = read_f64(body, &mut off)?;
-        anyhow::ensure!(body.len() >= off + 4, "truncated task key");
+        anyhow::ensure!(body.len() >= off + 5, "truncated task key");
         let selection = selection_from_u8(body[off])?;
         let mask_granularity = granularity_from_u8(body[off + 1])?;
         let has_dp = body[off + 2];
         anyhow::ensure!(has_dp <= 1, "bad dp flag");
         let wire_auth = wire_auth_from_u8(body[off + 3])?;
-        off += 4;
+        let ct_wire = ct_wire_from_u8(body[off + 4])?;
+        off += 5;
         let dp_raw = read_f64(body, &mut off)?;
         let dp_scale = (has_dp == 1).then_some(dp_raw);
         let samples_per_client = read_u32(body, &mut off)? as usize;
@@ -270,6 +281,7 @@ impl TaskKey {
             seed,
             crypto: (n, limbs, scaling_bits),
             wire_auth,
+            ct_wire,
         };
         Ok((TaskKey { spec, pk, sk, mac_root }, params))
     }
@@ -307,6 +319,7 @@ mod tests {
             seed: 77,
             dp_scale: Some(0.25),
             wire_auth: WireAuth::Mac,
+            ct_wire: CtWire::Seed,
             ..Default::default()
         };
         let mut mac_root = [0u8; 32];
@@ -328,6 +341,7 @@ mod tests {
         let (back, params) = TaskKey::from_bytes(&bytes).unwrap();
         assert_eq!(back.spec, tk.spec);
         assert_eq!(back.spec.wire_auth, WireAuth::Mac);
+        assert_eq!(back.spec.ct_wire, CtWire::Seed);
         assert_eq!(back.mac_root, tk.mac_root);
         assert_eq!(params.n, 256);
         assert_eq!(back.pk.b_ntt, tk.pk.b_ntt);

@@ -41,6 +41,12 @@ pub fn aggregate(
             slice.extend(updates.iter().map(|u| &u.cts[c]));
             let mut out = Ciphertext::zero(params);
             ops::weighted_sum_refs_into(&slice, alphas, params, &mut scratch, &mut out);
+            // Seed-expanded symmetric inputs carry NTT-domain c1; normalize
+            // the aggregate back to coefficient domain (INTT is linear mod
+            // q, so this matches the sealed streaming pipeline bitwise).
+            if out.c1.ntt_form {
+                out.c1.from_ntt(params);
+            }
             out
         })
         .collect();

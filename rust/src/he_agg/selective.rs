@@ -32,7 +32,7 @@
 use super::mask::{EncryptionMask, MaskLayout, Run};
 use super::packing::PackingPlan;
 use crate::ckks::{
-    decrypt_into, encrypt_into, Ciphertext, CkksContext, CkksParams, CkksScratch, EncodeScratch,
+    decrypt_into, Ciphertext, CkksContext, CkksParams, CkksScratch, EncKey, EncodeScratch,
     PublicKey, RnsPoly, SecretKey,
 };
 use crate::crypto::prng::ChaChaRng;
@@ -53,7 +53,20 @@ impl EncryptedUpdate {
     /// Serialized size in bytes (the communication-cost model: ciphertext
     /// wire format + 4 B per plaintext value).
     pub fn wire_bytes(&self, ctx: &CkksContext) -> usize {
-        self.cts.len() * ctx.params.ciphertext_bytes() + 4 * self.plain.len()
+        self.wire_bytes_for(ctx, crate::ckks::CtWire::Dense)
+    }
+
+    /// [`Self::wire_bytes`] under an explicit ciphertext wire format: the
+    /// seeded wire replaces each dense a-part with a 32-byte seed, so a
+    /// `--ct-wire seed` upload costs roughly half the dense bytes.
+    pub fn wire_bytes_for(&self, ctx: &CkksContext, ct_wire: crate::ckks::CtWire) -> usize {
+        let per_ct = match ct_wire {
+            crate::ckks::CtWire::Dense => ctx.params.ciphertext_bytes(),
+            crate::ckks::CtWire::Seed => {
+                crate::ckks::serialize::seeded_wire_bytes(&ctx.params)
+            }
+        };
+        self.cts.len() * per_ct + 4 * self.plain.len()
     }
 
     /// Serialized size of limb range [lo, hi) of every ciphertext under the
@@ -237,7 +250,7 @@ impl SelectiveCodec {
         model: &[f32],
         plan: &PackingPlan,
         c: usize,
-        pk: &PublicKey,
+        key: EncKey<'_>,
         rng: &mut ChaChaRng,
         stage: &mut ChunkStage,
         arena: &CtArena,
@@ -249,9 +262,8 @@ impl SelectiveCodec {
         }
         self.ctx.encoder.encode_into(&stage.values, &mut stage.encode, &mut stage.pt);
         let mut ct = arena.take(&self.ctx.params);
-        encrypt_into(
+        key.encrypt_into(
             &self.ctx.params,
-            pk,
             &stage.pt,
             stage.values.len(),
             rng,
@@ -286,6 +298,26 @@ impl SelectiveCodec {
         self.encrypt_update_streamed_with_arena(params, mask, pk, rng, &CtArena::new(), consume)
     }
 
+    /// [`Self::encrypt_update_streamed`] under either ct-wire key mode
+    /// ([`EncKey::SymSeeded`] emits seed-expanded symmetric ciphertexts).
+    pub fn encrypt_update_streamed_keyed(
+        &self,
+        params: &[f32],
+        mask: &EncryptionMask,
+        key: EncKey<'_>,
+        rng: &mut ChaChaRng,
+        consume: impl FnMut(usize, Ciphertext),
+    ) -> (Vec<f32>, usize) {
+        self.encrypt_update_streamed_with_arena_keyed(
+            params,
+            mask,
+            key,
+            rng,
+            &CtArena::new(),
+            consume,
+        )
+    }
+
     /// [`Self::encrypt_update_streamed`] drawing output ciphertexts from a
     /// caller-owned [`CtArena`]: the consumer recycles each buffer once it
     /// has left for the wire, so a steady-state round allocates no
@@ -299,6 +331,30 @@ impl SelectiveCodec {
         params: &[f32],
         mask: &EncryptionMask,
         pk: &PublicKey,
+        rng: &mut ChaChaRng,
+        arena: &CtArena,
+        consume: impl FnMut(usize, Ciphertext),
+    ) -> (Vec<f32>, usize) {
+        self.encrypt_update_streamed_with_arena_keyed(
+            params,
+            mask,
+            EncKey::Public(pk),
+            rng,
+            arena,
+            consume,
+        )
+    }
+
+    /// [`Self::encrypt_update_streamed_with_arena`] under either ct-wire key
+    /// mode. The per-chunk forked RNG streams draw the ciphertext seed and
+    /// error from the chunk's own fork, so seeded output — like dense — is
+    /// bitwise identical for any worker count, arena state or consumer
+    /// speed.
+    pub fn encrypt_update_streamed_with_arena_keyed(
+        &self,
+        params: &[f32],
+        mask: &EncryptionMask,
+        key: EncKey<'_>,
         rng: &mut ChaChaRng,
         arena: &CtArena,
         mut consume: impl FnMut(usize, Ciphertext),
@@ -318,7 +374,7 @@ impl SelectiveCodec {
         if workers <= 1 {
             let mut stage = ChunkStage::new(&self.ctx.params);
             for (c, mut r) in chunk_rngs.into_iter().enumerate() {
-                let ct = self.encrypt_one_chunk(params, &plan, c, pk, &mut r, &mut stage, arena);
+                let ct = self.encrypt_one_chunk(params, &plan, c, key, &mut r, &mut stage, arena);
                 consume(c, ct);
             }
         } else {
@@ -342,7 +398,7 @@ impl SelectiveCodec {
                                 params,
                                 plan,
                                 c,
-                                pk,
+                                key,
                                 chunk_rng,
                                 &mut stage,
                                 arena,
@@ -427,9 +483,20 @@ impl SelectiveCodec {
         pk: &PublicKey,
         rng: &mut ChaChaRng,
     ) -> EncryptedUpdate {
+        self.encrypt_update_keyed(params, mask, EncKey::Public(pk), rng)
+    }
+
+    /// [`Self::encrypt_update`] under either ct-wire key mode.
+    pub fn encrypt_update_keyed(
+        &self,
+        params: &[f32],
+        mask: &EncryptionMask,
+        key: EncKey<'_>,
+        rng: &mut ChaChaRng,
+    ) -> EncryptedUpdate {
         let mut cts: Vec<Ciphertext> = Vec::with_capacity(self.ct_count(mask.encrypted_count()));
         let (plain, n_chunks) =
-            self.encrypt_update_streamed(params, mask, pk, rng, |_, ct| cts.push(ct));
+            self.encrypt_update_streamed_keyed(params, mask, key, rng, |_, ct| cts.push(ct));
         debug_assert_eq!(cts.len(), n_chunks);
         EncryptedUpdate {
             cts,
@@ -491,12 +558,24 @@ pub fn encrypt_vector(
     pk: &PublicKey,
     rng: &mut ChaChaRng,
 ) -> Vec<Ciphertext> {
+    encrypt_vector_keyed(ctx, values, EncKey::Public(pk), rng)
+}
+
+/// [`encrypt_vector`] under either ct-wire key mode — in seed mode the
+/// sensitivity-map uplink is symmetric too, so every uplink ciphertext
+/// travels compressed.
+pub fn encrypt_vector_keyed(
+    ctx: &CkksContext,
+    values: &[f32],
+    key: EncKey<'_>,
+    rng: &mut ChaChaRng,
+) -> Vec<Ciphertext> {
     let batch = ctx.batch();
     values
         .chunks(batch)
         .map(|chunk| {
             let v: Vec<f64> = chunk.iter().map(|&x| x as f64).collect();
-            ctx.encrypt_values(&v, pk, rng)
+            ctx.encrypt_values_keyed(&v, key, rng)
         })
         .collect()
 }

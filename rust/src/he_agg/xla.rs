@@ -71,6 +71,7 @@ impl<'a> XlaAggregator<'a> {
             c1,
             n_values,
             scale,
+            a_seed: None,
         }
     }
 

@@ -190,8 +190,9 @@ pub fn dispatch(args: util::cli::Args) -> Result<()> {
                 retry_base: std::time::Duration::from_millis(
                     args.get_parsed_or("retry-base-ms", 50u64).max(1),
                 ),
-                // the wire-auth mode and MAC key come from the task key
-                // itself, inside join_task — never from the socket peer
+                // the wire-auth mode, MAC key, and ct-wire mode come from
+                // the task key itself, inside join_task — never from the
+                // socket peer
                 ..Default::default()
             };
             let rt_holder;
@@ -344,7 +345,8 @@ pub fn dispatch(args: util::cli::Args) -> Result<()> {
             eprintln!("                --engine sequential|pipeline --shards S --quorum K");
             eprintln!("                --straggler-timeout SECS --population N");
             eprintln!("                --transport sim|tcp --listen ADDR --connect ADDR");
-            eprintln!("                --wire-auth none|mac --connect-retries N --retry-base-ms MS");
+            eprintln!("                --wire-auth none|mac --ct-wire dense|seed");
+            eprintln!("                --connect-retries N --retry-base-ms MS");
             eprintln!("                --intake-max-wait SECS --synthetic-params N");
             eprintln!("                --out-model PATH ...)");
             eprintln!("                (--model synthetic needs no artifacts; --transport tcp");
@@ -359,7 +361,7 @@ pub fn dispatch(args: util::cli::Args) -> Result<()> {
             eprintln!("                (--connect ADDR | --addr-file PATH) --key-wait SECS");
             eprintln!("                --connect-retry SECS --round-wait SECS --out-model PATH");
             eprintln!("                --connect-retries N --retry-base-ms MS (rejoin budget +");
-            eprintln!("                dial backoff; wire-auth mode rides the task key)");
+            eprintln!("                dial backoff; wire-auth + ct-wire modes ride the task key)");
             eprintln!("  stats         query a live coordinator's metrics over the session");
             eprintln!("                protocol (--connect ADDR | --addr-file PATH) --timeout SECS");
             eprintln!("  params        print the CKKS context (--n --limbs --scaling-bits)");

@@ -18,8 +18,9 @@ use std::time::Duration;
 /// reactor-backend hub gauges — `hub_wakeups`, `hub_partial_reads`,
 /// `hub_active_sessions`, `hub_sessions_peak`, `hub_shard_sessions`,
 /// `hub_write_queue_depth`, `hub_write_queue_peak` — joined the
-/// snapshot.)
-pub const REPORT_SCHEMA_VERSION: u64 = 4;
+/// snapshot. v5: seed-expanded ciphertext-wire counters —
+/// `ct_seed_expansions`, `uplink_bytes_saved` — joined the snapshot.)
+pub const REPORT_SCHEMA_VERSION: u64 = 5;
 
 /// Identifier stamped into the `--report-json` envelope.
 pub const REPORT_SCHEMA_NAME: &str = "fedml-he/run-report";

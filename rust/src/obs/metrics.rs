@@ -210,6 +210,8 @@ struct Registry {
     ntt_kernel_scalar: AtomicU64,
     pack_slots_used: AtomicU64,
     pack_slots_total: AtomicU64,
+    ct_seed_expansions: AtomicU64,
+    uplink_bytes_saved: AtomicU64,
     intake_offered: AtomicU64,
     intake_queue: Gauge,
     session_rtt: Histogram,
@@ -238,6 +240,8 @@ static REGISTRY: Registry = Registry {
     ntt_kernel_scalar: AtomicU64::new(0),
     pack_slots_used: AtomicU64::new(0),
     pack_slots_total: AtomicU64::new(0),
+    ct_seed_expansions: AtomicU64::new(0),
+    uplink_bytes_saved: AtomicU64::new(0),
     intake_offered: AtomicU64::new(0),
     intake_queue: Gauge::new(),
     session_rtt: Histogram::new(),
@@ -369,6 +373,20 @@ pub fn ntt_kernel(simd: bool) {
 pub fn pack_slots(used: u64, total: u64) {
     REGISTRY.pack_slots_used.fetch_add(used, Ordering::Relaxed);
     REGISTRY.pack_slots_total.fetch_add(total, Ordering::Relaxed);
+}
+
+/// One limb of a seeded ciphertext's a-part expanded from its 32-byte seed
+/// (client-side at encrypt, or lazily inside an aggregation shard).
+#[inline]
+pub fn ct_seed_expansion() {
+    REGISTRY.ct_seed_expansions.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Encrypted uplink bytes the seed-expanded ct wire saved versus shipping
+/// the same ciphertext dense (counted where compressed shards are built).
+#[inline]
+pub fn uplink_bytes_saved(n: u64) {
+    REGISTRY.uplink_bytes_saved.fetch_add(n, Ordering::Relaxed);
 }
 
 /// An arrival admitted to the streaming intake (queue depth +1).
@@ -504,6 +522,14 @@ pub fn snapshot() -> Json {
         ),
         ("pack_slot_utilization", pack_slot_utilization().into()),
         (
+            "ct_seed_expansions",
+            REGISTRY.ct_seed_expansions.load(Ordering::Relaxed).into(),
+        ),
+        (
+            "uplink_bytes_saved",
+            REGISTRY.uplink_bytes_saved.load(Ordering::Relaxed).into(),
+        ),
+        (
             "intake_offered",
             REGISTRY.intake_offered.load(Ordering::Relaxed).into(),
         ),
@@ -595,6 +621,8 @@ pub fn reset() {
         &REGISTRY.ntt_kernel_scalar,
         &REGISTRY.pack_slots_used,
         &REGISTRY.pack_slots_total,
+        &REGISTRY.ct_seed_expansions,
+        &REGISTRY.uplink_bytes_saved,
         &REGISTRY.intake_offered,
         &REGISTRY.intake_queue.value,
         &REGISTRY.intake_queue.peak,

@@ -29,8 +29,8 @@ use super::frame::{
     encode_begin, encode_end_timing, read_frame_into_with, write_frame_with, FrameKind,
     RxAuth, TxAuth, BEGIN_PAYLOAD_BYTES, PLAIN_CHUNK_VALUES,
 };
-use crate::ckks::serialize::ciphertext_shard_append;
-use crate::ckks::{Ciphertext, PublicKey};
+use crate::ckks::serialize::{ciphertext_seeded_append, ciphertext_shard_append};
+use crate::ckks::{Ciphertext, CtWire, PublicKey};
 use crate::crypto::prng::ChaChaRng;
 use crate::he_agg::{CtArena, EncryptedUpdate, EncryptionMask, SelectiveCodec};
 use std::io::{BufWriter, Read, Write};
@@ -81,6 +81,9 @@ pub(crate) struct FrameSink {
     round: u64,
     /// Outbound frame authenticator (`--wire-auth mac`); `None` = legacy.
     auth: Option<TxAuth>,
+    /// Ciphertext wire format for CT_CHUNK frames (`--ct-wire`): dense
+    /// full-limb shards, or the seed-compressed symmetric form.
+    ct_wire: CtWire,
     /// Reused payload staging buffer for ciphertext frames.
     buf: Vec<u8>,
     /// Cumulative frame bytes written over the sink's lifetime.
@@ -107,6 +110,7 @@ impl FrameSink {
             writer: BufWriter::with_capacity(write_buffer.max(1024), writer),
             round,
             auth: None,
+            ct_wire: CtWire::Dense,
             buf: Vec::new(),
             bytes_sent: 0,
             upload_base: 0,
@@ -117,6 +121,12 @@ impl FrameSink {
     /// Install (or clear) the outbound frame authenticator.
     pub(crate) fn set_auth(&mut self, auth: Option<TxAuth>) {
         self.auth = auth;
+    }
+
+    /// Select the ciphertext wire format for subsequent CT_CHUNK frames
+    /// (the session sets this to the handshake-negotiated mode).
+    pub(crate) fn set_ct_wire(&mut self, ct_wire: CtWire) {
+        self.ct_wire = ct_wire;
     }
 
     /// Dial + wrap (the one-shot path). Returns the sink and a cloned read
@@ -169,7 +179,10 @@ impl FrameSink {
     pub(crate) fn send_ct(&mut self, seq: usize, ct: &Ciphertext) -> std::io::Result<()> {
         let limbs = ct.c0.num_limbs();
         self.buf.clear();
-        ciphertext_shard_append(ct, 0, limbs, &mut self.buf);
+        match self.ct_wire {
+            CtWire::Dense => ciphertext_shard_append(ct, 0, limbs, &mut self.buf),
+            CtWire::Seed => ciphertext_seeded_append(ct, &mut self.buf),
+        }
         let payload = std::mem::take(&mut self.buf);
         let r = self.send(FrameKind::CtChunk, seq as u32, &payload);
         self.buf = payload;

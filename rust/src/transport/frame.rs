@@ -48,7 +48,7 @@
 //! the rejected frame consumed exactly its declared bytes.
 
 use crate::ckks::serialize::shard_wire_bytes;
-use crate::ckks::CkksParams;
+use crate::ckks::{CkksParams, CtWire};
 use std::io::{Read, Write};
 
 /// Frame magic: "FHTP" (FedML-HE transport protocol).
@@ -71,10 +71,15 @@ pub const BEGIN_PAYLOAD_BYTES: usize = 32;
 /// train_secs(8 f64) encrypt_secs(8 f64) loss(4 f32) pad(4). An empty END
 /// is also accepted (metrics default to zero).
 pub const END_TIMING_PAYLOAD_BYTES: usize = 24;
-/// HELLO payload: client(8).
-pub const HELLO_PAYLOAD_BYTES: usize = 8;
-/// WELCOME payload: next round the server will serve on this session (8).
-pub const WELCOME_PAYLOAD_BYTES: usize = 8;
+/// HELLO payload: client(8) + ciphertext wire mode code(4)
+/// ([`CtWire::wire_code`]) — the client announces how it will serialize
+/// ciphertext uplinks so a mode mismatch fails at the handshake, not
+/// mid-round.
+pub const HELLO_PAYLOAD_BYTES: usize = 12;
+/// WELCOME payload: next round the server will serve on this session (8) +
+/// the server's ciphertext wire mode code(4). A client whose announced mode
+/// differs from the server's is never welcomed.
+pub const WELCOME_PAYLOAD_BYTES: usize = 12;
 /// CHALLENGE payload: the server's 16-byte session nonce.
 pub const CHALLENGE_PAYLOAD_BYTES: usize = 16;
 /// CHALLENGE_RESP payload: client id echo(8) + SipHash proof tag(8).
@@ -645,35 +650,53 @@ pub fn decode_end_timing(p: &[u8]) -> anyhow::Result<(f64, f64, f32)> {
     Ok((train, encrypt, loss))
 }
 
-/// Encode a HELLO payload.
-pub fn encode_hello(client: u64) -> [u8; HELLO_PAYLOAD_BYTES] {
-    client.to_le_bytes()
+/// Encode a HELLO payload: claimed client id + announced ciphertext wire
+/// mode.
+pub fn encode_hello(client: u64, ct_wire: CtWire) -> [u8; HELLO_PAYLOAD_BYTES] {
+    let mut p = [0u8; HELLO_PAYLOAD_BYTES];
+    p[0..8].copy_from_slice(&client.to_le_bytes());
+    p[8..12].copy_from_slice(&ct_wire.wire_code().to_le_bytes());
+    p
 }
 
-/// Decode a HELLO payload into the claimed client id.
-pub fn decode_hello(p: &[u8]) -> anyhow::Result<u64> {
+/// Decode a HELLO payload into `(client, ct_wire)`. A pre-ct-wire 8-byte
+/// HELLO (or any unknown mode code) is malformed — the handshake fails
+/// loudly instead of silently disagreeing on the uplink format.
+pub fn decode_hello(p: &[u8]) -> anyhow::Result<(u64, CtWire)> {
     anyhow::ensure!(
         p.len() == HELLO_PAYLOAD_BYTES,
         "HELLO payload must be {HELLO_PAYLOAD_BYTES} bytes, got {}",
         p.len()
     );
-    Ok(u64::from_le_bytes(p.try_into().unwrap()))
+    let client = u64::from_le_bytes(p[0..8].try_into().unwrap());
+    let code = u32::from_le_bytes(p[8..12].try_into().unwrap());
+    let ct_wire = CtWire::from_wire_code(code)
+        .ok_or_else(|| anyhow::anyhow!("unknown ciphertext wire mode code {code}"))?;
+    Ok((client, ct_wire))
 }
 
-/// Encode a WELCOME payload (the next round the server will serve on this
-/// session; [`MASK_ROUND`] while the mask-agreement stage is pending).
-pub fn encode_welcome(next_round: u64) -> [u8; WELCOME_PAYLOAD_BYTES] {
-    next_round.to_le_bytes()
+/// Encode a WELCOME payload: the next round the server will serve on this
+/// session ([`MASK_ROUND`] while the mask-agreement stage is pending) plus
+/// the server's ciphertext wire mode.
+pub fn encode_welcome(next_round: u64, ct_wire: CtWire) -> [u8; WELCOME_PAYLOAD_BYTES] {
+    let mut p = [0u8; WELCOME_PAYLOAD_BYTES];
+    p[0..8].copy_from_slice(&next_round.to_le_bytes());
+    p[8..12].copy_from_slice(&ct_wire.wire_code().to_le_bytes());
+    p
 }
 
-/// Decode a WELCOME payload.
-pub fn decode_welcome(p: &[u8]) -> anyhow::Result<u64> {
+/// Decode a WELCOME payload into `(next_round, ct_wire)`.
+pub fn decode_welcome(p: &[u8]) -> anyhow::Result<(u64, CtWire)> {
     anyhow::ensure!(
         p.len() == WELCOME_PAYLOAD_BYTES,
         "WELCOME payload must be {WELCOME_PAYLOAD_BYTES} bytes, got {}",
         p.len()
     );
-    Ok(u64::from_le_bytes(p.try_into().unwrap()))
+    let round = u64::from_le_bytes(p[0..8].try_into().unwrap());
+    let code = u32::from_le_bytes(p[8..12].try_into().unwrap());
+    let ct_wire = CtWire::from_wire_code(code)
+        .ok_or_else(|| anyhow::anyhow!("unknown ciphertext wire mode code {code}"))?;
+    Ok((round, ct_wire))
 }
 
 /// Encode a CHALLENGE payload (the server's fresh session nonce).
@@ -1083,11 +1106,26 @@ mod tests {
 
     #[test]
     fn session_payload_codecs_roundtrip_and_validate() {
-        // HELLO / WELCOME
-        assert_eq!(decode_hello(&encode_hello(42)).unwrap(), 42);
+        // HELLO / WELCOME (with the ct-wire mode announcement)
+        assert_eq!(
+            decode_hello(&encode_hello(42, CtWire::Seed)).unwrap(),
+            (42, CtWire::Seed)
+        );
         assert!(decode_hello(&[0u8; 7]).is_err());
-        assert_eq!(decode_welcome(&encode_welcome(MASK_ROUND)).unwrap(), MASK_ROUND);
+        // a pre-ct-wire 8-byte HELLO is malformed, not silently dense
+        assert!(decode_hello(&42u64.to_le_bytes()).is_err());
+        // unknown mode codes are rejected
+        let mut bad = encode_hello(42, CtWire::Dense);
+        bad[8..12].copy_from_slice(&9u32.to_le_bytes());
+        assert!(decode_hello(&bad).is_err());
+        assert_eq!(
+            decode_welcome(&encode_welcome(MASK_ROUND, CtWire::Dense)).unwrap(),
+            (MASK_ROUND, CtWire::Dense)
+        );
         assert!(decode_welcome(&[0u8; 9]).is_err());
+        let mut bad = encode_welcome(3, CtWire::Seed);
+        bad[8..12].copy_from_slice(&7u32.to_le_bytes());
+        assert!(decode_welcome(&bad).is_err());
 
         // END metrics: empty is zeros, 24 bytes roundtrips, junk is rejected
         assert_eq!(decode_end_timing(&[]).unwrap(), (0.0, 0.0, 0.0));

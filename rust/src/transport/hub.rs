@@ -39,7 +39,7 @@ use super::session::{
     encode_agg_payloads, write_replay, write_round_frames, DownlinkCache, DownlinkOutcome,
     RoundReplay, RoundSnapshot, SessionHub,
 };
-use crate::ckks::CkksParams;
+use crate::ckks::{CkksParams, CtWire};
 use crate::crypto::prng::ChaChaRng;
 use crate::he_agg::EncryptedUpdate;
 use std::collections::{HashMap, HashSet, VecDeque};
@@ -248,6 +248,9 @@ struct ReactorShared {
     listener: TcpListener,
     params: Arc<CkksParams>,
     auth_root: Option<[u8; 32]>,
+    /// Ciphertext wire format this task runs (`--ct-wire`). Task-level:
+    /// every session machine gates HELLO announcements against it.
+    ct_wire: CtWire,
     /// Handshake/write-stall inactivity bound (engaged uploads use the
     /// armed round's own `io_timeout` instead).
     io_timeout: Duration,
@@ -400,11 +403,13 @@ impl Shard {
             self.conns.len() - 1
         });
         let fd = stream.as_raw_fd();
+        let machine =
+            SessionMachine::new(self.cap, self.shared.auth_root, self.shared.ct_wire, nonce);
         let conn = Conn {
             stream,
             token: slot as u64,
             generation,
-            machine: SessionMachine::new(self.cap, self.shared.auth_root, nonce),
+            machine,
             tx: None,
             out: Vec::new(),
             sent: 0,
@@ -644,7 +649,7 @@ impl Shard {
             CONTROL_ROUND,
             FrameKind::Welcome,
             0,
-            &encode_welcome(next),
+            &encode_welcome(next, self.shared.ct_wire),
             &mut conn.tx,
         )
         .map_err(|e| format!("welcome enqueue failed: {e}"))?;
@@ -912,6 +917,18 @@ impl ReactorHub {
         max_sessions: usize,
         auth_root: Option<[u8; 32]>,
     ) -> anyhow::Result<Self> {
+        Self::bind_full(addr, params, max_sessions, auth_root, CtWire::Dense)
+    }
+
+    /// [`Self::bind_with_auth`] with an explicit ciphertext wire mode —
+    /// the reactor twin of [`SessionHub::bind_full`].
+    pub fn bind_full(
+        addr: &str,
+        params: Arc<CkksParams>,
+        max_sessions: usize,
+        auth_root: Option<[u8; 32]>,
+        ct_wire: CtWire,
+    ) -> anyhow::Result<Self> {
         let listener = TcpListener::bind(addr)
             .map_err(|e| anyhow::anyhow!("cannot bind session hub on {addr}: {e}"))?;
         listener.set_nonblocking(true)?;
@@ -927,6 +944,7 @@ impl ReactorHub {
             listener,
             params,
             auth_root,
+            ct_wire,
             io_timeout: Duration::from_secs(10),
             max_sessions: max_sessions.max(1),
             next_round: AtomicU64::new(MASK_ROUND),
@@ -1407,7 +1425,8 @@ mod tests {
         stream.set_nodelay(true).ok();
         {
             let mut w = &stream;
-            write_frame(&mut w, CONTROL_ROUND, FrameKind::Hello, 0, &encode_hello(7)).unwrap();
+            let hello = encode_hello(7, CtWire::Dense);
+            write_frame(&mut w, CONTROL_ROUND, FrameKind::Hello, 0, &hello).unwrap();
         }
         let mut reader = BufReader::new(&stream);
         let mut buf = Vec::new();

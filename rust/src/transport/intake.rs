@@ -16,7 +16,7 @@ use super::frame::{
     AUTH_TRAILER_BYTES,
 };
 use crate::agg_engine::Arrival;
-use crate::ckks::{CkksContext, CkksParams};
+use crate::ckks::{CkksContext, CkksParams, CtWire};
 use crate::he_agg::{EncryptedUpdate, EncryptionMask};
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -37,16 +37,28 @@ pub struct UpdateShape {
     pub n_cts: usize,
     pub n_plain: usize,
     pub total: usize,
+    /// Ciphertext wire format every CT_CHUNK of the round must use. Not part
+    /// of the BEGIN declaration — it is pinned server-side (handshake
+    /// negotiation / task config), so a client cannot switch formats
+    /// mid-round.
+    pub ct_wire: CtWire,
 }
 
 impl UpdateShape {
-    /// Shape of a selectively-encrypted update under `mask`.
+    /// Shape of a selectively-encrypted update under `mask`, on the default
+    /// dense ciphertext wire.
     pub fn for_round(ctx: &CkksContext, mask: &EncryptionMask) -> Self {
+        Self::for_round_wire(ctx, mask, CtWire::Dense)
+    }
+
+    /// [`UpdateShape::for_round`] with an explicit ciphertext wire format.
+    pub fn for_round_wire(ctx: &CkksContext, mask: &EncryptionMask, ct_wire: CtWire) -> Self {
         let enc = mask.encrypted_count();
         UpdateShape {
             n_cts: enc.div_ceil(ctx.batch()),
             n_plain: mask.total() - enc,
             total: mask.total(),
+            ct_wire,
         }
     }
 }

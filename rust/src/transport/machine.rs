@@ -28,7 +28,7 @@ use super::frame::{
 };
 use super::intake::{UpdateShape, UploadFrames, UNIDENTIFIED_CLIENT};
 use super::reassembly::UploadAssembly;
-use crate::ckks::CkksParams;
+use crate::ckks::{CkksParams, CtWire};
 use crate::crypto::mac::{self, MacKey};
 use std::ops::Range;
 
@@ -181,6 +181,10 @@ pub(crate) struct SessionMachine {
     rx: Option<RxAuth>,
     state: MachineState,
     auth_root: Option<[u8; 32]>,
+    /// The task's ciphertext wire format: every HELLO must announce the
+    /// same mode or the handshake is a hard error (mirrors the blocking
+    /// hub).
+    ct_wire: CtWire,
     /// Session challenge nonce, drawn by the driver at accept time (the
     /// machine itself touches no entropy source).
     nonce: [u8; 16],
@@ -192,14 +196,21 @@ pub(crate) struct SessionMachine {
 
 impl SessionMachine {
     /// `cap` bounds any declared payload ([`super::frame::frame_payload_cap`]);
-    /// `auth_root` is the task MAC root (`None` = legacy wire); `nonce` is
-    /// this connection's fresh challenge nonce.
-    pub fn new(cap: usize, auth_root: Option<[u8; 32]>, nonce: [u8; 16]) -> Self {
+    /// `auth_root` is the task MAC root (`None` = legacy wire); `ct_wire`
+    /// is the task's ciphertext wire format HELLOs must announce; `nonce`
+    /// is this connection's fresh challenge nonce.
+    pub fn new(
+        cap: usize,
+        auth_root: Option<[u8; 32]>,
+        ct_wire: CtWire,
+        nonce: [u8; 16],
+    ) -> Self {
         SessionMachine {
             decoder: FrameDecoder::new(cap),
             rx: None,
             state: MachineState::AwaitHello,
             auth_root,
+            ct_wire,
             nonce,
             upload: None,
             wire_bytes: 0,
@@ -263,10 +274,16 @@ impl SessionMachine {
                         return Ok(Some(Step::Stats));
                     }
                     anyhow::ensure!(kind == FrameKind::Hello, "expected HELLO, got {kind:?}");
-                    let client = decode_hello(self.decoder.bytes(pr))?;
+                    let (client, announced) = decode_hello(self.decoder.bytes(pr))?;
                     anyhow::ensure!(
                         client != UNIDENTIFIED_CLIENT,
                         "client id {client} is reserved"
+                    );
+                    anyhow::ensure!(
+                        announced == self.ct_wire,
+                        "client {client} announced ciphertext wire mode {}, task runs {}",
+                        announced.as_str(),
+                        self.ct_wire.as_str()
                     );
                     if self.auth_root.is_some() {
                         self.state = MachineState::AwaitChallengeResp { client };
@@ -376,7 +393,12 @@ mod tests {
     }
 
     fn shape() -> UpdateShape {
-        UpdateShape { n_cts: 1, n_plain: 1, total: 4 }
+        UpdateShape {
+            n_cts: 1,
+            n_plain: 1,
+            total: 4,
+            ct_wire: CtWire::Dense,
+        }
     }
 
     /// A full valid upload for `shape()`: BEGIN, one ct chunk, one plain
@@ -396,8 +418,9 @@ mod tests {
     #[test]
     fn plain_handshake_and_upload_survive_byte_at_a_time_reads() {
         let p = params();
-        let mut m = SessionMachine::new(frame_payload_cap(&p), None, [0u8; 16]);
-        let mut wire = frame_bytes(CONTROL_ROUND, FrameKind::Hello, 0, &encode_hello(9));
+        let mut m = SessionMachine::new(frame_payload_cap(&p), None, CtWire::Dense, [0u8; 16]);
+        let hello = encode_hello(9, CtWire::Dense);
+        let mut wire = frame_bytes(CONTROL_ROUND, FrameKind::Hello, 0, &hello);
         let upload = upload_stream(9, 3, &mut None, &p);
         let upload_len = upload.len() as u64;
         wire.extend_from_slice(&upload);
@@ -431,8 +454,8 @@ mod tests {
     #[test]
     fn uploads_stay_buffered_until_a_round_is_armed() {
         let p = params();
-        let mut m = SessionMachine::new(frame_payload_cap(&p), None, [0u8; 16]);
-        m.push(&frame_bytes(CONTROL_ROUND, FrameKind::Hello, 0, &encode_hello(2)));
+        let mut m = SessionMachine::new(frame_payload_cap(&p), None, CtWire::Dense, [0u8; 16]);
+        m.push(&frame_bytes(CONTROL_ROUND, FrameKind::Hello, 0, &encode_hello(2, CtWire::Dense)));
         assert!(matches!(m.poll(None).unwrap(), Some(Step::Register { client: 2, .. })));
         // the whole upload arrives before the server arms the round
         m.push(&upload_stream(2, 0, &mut None, &p));
@@ -448,18 +471,37 @@ mod tests {
     #[test]
     fn stats_probe_short_circuits_registration() {
         let p = params();
-        let mut m = SessionMachine::new(frame_payload_cap(&p), None, [0u8; 16]);
+        let mut m = SessionMachine::new(frame_payload_cap(&p), None, CtWire::Dense, [0u8; 16]);
         m.push(&frame_bytes(CONTROL_ROUND, FrameKind::Stats, 0, &[]));
         assert!(matches!(m.poll(None).unwrap(), Some(Step::Stats)));
         assert_eq!(m.client(), None);
     }
 
     #[test]
+    fn hello_with_mismatched_ct_wire_is_fatal() {
+        let p = params();
+        // seed announcement on a dense task: hard error before registration
+        let mut m = SessionMachine::new(frame_payload_cap(&p), None, CtWire::Dense, [0u8; 16]);
+        m.push(&frame_bytes(CONTROL_ROUND, FrameKind::Hello, 0, &encode_hello(6, CtWire::Seed)));
+        assert!(m.poll(None).is_err());
+        assert_eq!(m.client(), None, "mismatch must not identify the session");
+        // dense announcement on a seed task: same, other direction
+        let mut m = SessionMachine::new(frame_payload_cap(&p), None, CtWire::Seed, [0u8; 16]);
+        m.push(&frame_bytes(CONTROL_ROUND, FrameKind::Hello, 0, &encode_hello(6, CtWire::Dense)));
+        assert!(m.poll(None).is_err());
+        // a matching seed announcement registers
+        let mut m = SessionMachine::new(frame_payload_cap(&p), None, CtWire::Seed, [0u8; 16]);
+        m.push(&frame_bytes(CONTROL_ROUND, FrameKind::Hello, 0, &encode_hello(6, CtWire::Seed)));
+        assert!(matches!(m.poll(None).unwrap(), Some(Step::Register { client: 6, .. })));
+    }
+
+    #[test]
     fn mac_handshake_verifies_the_proof_and_soft_rejects_forgeries() {
         let p = params();
         let root = [7u8; 32];
-        let mut m = SessionMachine::new(frame_payload_cap(&p), Some(root), [3u8; 16]);
-        m.push(&frame_bytes(CONTROL_ROUND, FrameKind::Hello, 0, &encode_hello(4)));
+        let mut m =
+            SessionMachine::new(frame_payload_cap(&p), Some(root), CtWire::Dense, [3u8; 16]);
+        m.push(&frame_bytes(CONTROL_ROUND, FrameKind::Hello, 0, &encode_hello(4, CtWire::Dense)));
         let nonce = match m.poll(None).unwrap() {
             Some(Step::Challenge { nonce }) => nonce,
             _ => panic!("mac mode must challenge before registering"),
@@ -501,8 +543,9 @@ mod tests {
     fn bad_handshake_proof_is_fatal_and_counted() {
         let p = params();
         let root = [7u8; 32];
-        let mut m = SessionMachine::new(frame_payload_cap(&p), Some(root), [3u8; 16]);
-        m.push(&frame_bytes(CONTROL_ROUND, FrameKind::Hello, 0, &encode_hello(4)));
+        let mut m =
+            SessionMachine::new(frame_payload_cap(&p), Some(root), CtWire::Dense, [3u8; 16]);
+        m.push(&frame_bytes(CONTROL_ROUND, FrameKind::Hello, 0, &encode_hello(4, CtWire::Dense)));
         assert!(matches!(m.poll(None).unwrap(), Some(Step::Challenge { .. })));
         let rejects_before = crate::obs::metrics::snapshot_auth_rejects();
         let resp = encode_challenge_resp(4, 0xdead_beef);
@@ -515,28 +558,28 @@ mod tests {
     fn protocol_violations_are_hard_errors() {
         let p = params();
         // first frame must be HELLO (or STATS)
-        let mut m = SessionMachine::new(frame_payload_cap(&p), None, [0u8; 16]);
+        let mut m = SessionMachine::new(frame_payload_cap(&p), None, CtWire::Dense, [0u8; 16]);
         m.push(&frame_bytes(CONTROL_ROUND, FrameKind::Begin, 0, &[0u8; 32]));
         assert!(m.poll(None).is_err());
         // reserved sentinel id
-        let mut m = SessionMachine::new(frame_payload_cap(&p), None, [0u8; 16]);
+        let mut m = SessionMachine::new(frame_payload_cap(&p), None, CtWire::Dense, [0u8; 16]);
         m.push(&frame_bytes(
             CONTROL_ROUND,
             FrameKind::Hello,
             0,
-            &encode_hello(UNIDENTIFIED_CLIENT),
+            &encode_hello(UNIDENTIFIED_CLIENT, CtWire::Dense),
         ));
         assert!(m.poll(None).is_err());
         // a registered session's upload frames must carry the armed round
-        let mut m = SessionMachine::new(frame_payload_cap(&p), None, [0u8; 16]);
-        m.push(&frame_bytes(CONTROL_ROUND, FrameKind::Hello, 0, &encode_hello(5)));
+        let mut m = SessionMachine::new(frame_payload_cap(&p), None, CtWire::Dense, [0u8; 16]);
+        m.push(&frame_bytes(CONTROL_ROUND, FrameKind::Hello, 0, &encode_hello(5, CtWire::Dense)));
         assert!(matches!(m.poll(None).unwrap(), Some(Step::Register { .. })));
         m.push(&upload_stream(5, 8, &mut None, &p));
         let ctx = RoundCtx { round_id: 3, shape: shape(), expect_alpha: None, params: &p };
         assert!(m.poll(Some(&ctx)).is_err());
         // an upload must open with BEGIN
-        let mut m = SessionMachine::new(frame_payload_cap(&p), None, [0u8; 16]);
-        m.push(&frame_bytes(CONTROL_ROUND, FrameKind::Hello, 0, &encode_hello(5)));
+        let mut m = SessionMachine::new(frame_payload_cap(&p), None, CtWire::Dense, [0u8; 16]);
+        m.push(&frame_bytes(CONTROL_ROUND, FrameKind::Hello, 0, &encode_hello(5, CtWire::Dense)));
         assert!(matches!(m.poll(None).unwrap(), Some(Step::Register { .. })));
         m.push(&frame_bytes(3, FrameKind::Plain, 0, &0.0f32.to_le_bytes()));
         assert!(m.poll(Some(&ctx)).is_err());

@@ -18,14 +18,18 @@
 
 use super::frame::{decode_begin, decode_end_timing, FrameKind, BEGIN_PAYLOAD_BYTES};
 use super::intake::{UpdateShape, UploadFrames, UNIDENTIFIED_CLIENT};
-use crate::ckks::serialize::ciphertext_shard_from_bytes;
-use crate::ckks::{Ciphertext, CkksParams};
+use crate::ckks::serialize::{ciphertext_seeded_from_bytes, ciphertext_shard_from_bytes};
+use crate::ckks::{Ciphertext, CkksParams, CtWire};
 use crate::he_agg::EncryptedUpdate;
 
 /// Incremental reassembly of one chunked update against a declared shape.
 pub(crate) struct ChunkAssembler {
     n_plain: usize,
     total: usize,
+    /// Wire format every CT_CHUNK must arrive in — pinned by the round
+    /// (handshake negotiation), never inferred from the payload: a
+    /// seed-compressed chunk on a dense round (or vice versa) is malformed.
+    ct_wire: CtWire,
     cts: Vec<Option<Ciphertext>>,
     plain: Vec<f32>,
     next_plain_seq: u32,
@@ -33,11 +37,19 @@ pub(crate) struct ChunkAssembler {
 
 impl ChunkAssembler {
     /// Start reassembly toward a declared `(n_cts, n_plain, total)` shape
-    /// (the BEGIN/DOWN_BEGIN preamble, already validated by the caller).
+    /// (the BEGIN/DOWN_BEGIN preamble, already validated by the caller),
+    /// expecting dense full-limb shard chunks.
     pub fn new(n_cts: usize, n_plain: usize, total: usize) -> Self {
+        Self::new_with_wire(n_cts, n_plain, total, CtWire::Dense)
+    }
+
+    /// [`ChunkAssembler::new`] with the round's negotiated ciphertext wire
+    /// format.
+    pub fn new_with_wire(n_cts: usize, n_plain: usize, total: usize, ct_wire: CtWire) -> Self {
         ChunkAssembler {
             n_plain,
             total,
+            ct_wire,
             cts: (0..n_cts).map(|_| None).collect(),
             plain: Vec::with_capacity(n_plain),
             next_plain_seq: 0,
@@ -45,7 +57,9 @@ impl ChunkAssembler {
     }
 
     /// Accept one CT_CHUNK payload: in-range seq, no duplicates, and the
-    /// shard must cover the full limb range.
+    /// payload must parse in the round's pinned wire format (dense shards
+    /// covering the full limb range, or seed-compressed ciphertexts —
+    /// kept lazy, their `a`-part expands inside the aggregation shards).
     pub fn accept_ct(
         &mut self,
         params: &CkksParams,
@@ -56,16 +70,23 @@ impl ChunkAssembler {
         let seq = seq as usize;
         anyhow::ensure!(seq < self.cts.len(), "ciphertext chunk {seq} out of range");
         anyhow::ensure!(self.cts[seq].is_none(), "duplicate ciphertext chunk {seq}");
-        let shard = ciphertext_shard_from_bytes(payload, params)?;
-        anyhow::ensure!(
-            shard.lo == 0 && shard.hi == params.num_limbs(),
-            "ciphertext chunk must carry the full limb range, got [{}, {})",
-            shard.lo,
-            shard.hi
-        );
-        let mut ct = Ciphertext::zero(params);
-        shard.scatter_into(&mut ct);
-        self.cts[seq] = Some(ct);
+        match self.ct_wire {
+            CtWire::Dense => {
+                let shard = ciphertext_shard_from_bytes(payload, params)?;
+                anyhow::ensure!(
+                    shard.lo == 0 && shard.hi == params.num_limbs(),
+                    "ciphertext chunk must carry the full limb range, got [{}, {})",
+                    shard.lo,
+                    shard.hi
+                );
+                let mut ct = Ciphertext::zero(params);
+                shard.scatter_into(&mut ct);
+                self.cts[seq] = Some(ct);
+            }
+            CtWire::Seed => {
+                self.cts[seq] = Some(ciphertext_seeded_from_bytes(payload, params)?);
+            }
+        }
         Ok(())
     }
 
@@ -176,7 +197,7 @@ impl UploadAssembly {
         Ok(UploadAssembly {
             client,
             alpha,
-            asm: ChunkAssembler::new(n_cts, n_plain, total),
+            asm: ChunkAssembler::new_with_wire(n_cts, n_plain, total, shape.ct_wire),
         })
     }
 
@@ -284,7 +305,12 @@ mod tests {
     fn upload_assembly_runs_the_full_protocol() {
         use crate::transport::frame::{encode_begin, encode_end_timing};
         let p = params();
-        let shape = UpdateShape { n_cts: 1, n_plain: 2, total: 10 };
+        let shape = UpdateShape {
+            n_cts: 1,
+            n_plain: 2,
+            total: 10,
+            ct_wire: CtWire::Dense,
+        };
         let begin = encode_begin(5, 0.5, 1, 2, 10);
         let mut seen = None;
         let mut a =
@@ -311,7 +337,12 @@ mod tests {
     fn upload_assembly_rejects_protocol_violations() {
         use crate::transport::frame::encode_begin;
         let p = params();
-        let shape = UpdateShape { n_cts: 1, n_plain: 2, total: 10 };
+        let shape = UpdateShape {
+            n_cts: 1,
+            n_plain: 2,
+            total: 10,
+            ct_wire: CtWire::Dense,
+        };
 
         // reserved sentinel id never identifies a session
         let mut seen = None;
@@ -342,5 +373,41 @@ mod tests {
         assert!(a.accept(&p, FrameKind::Begin, 0, &begin).is_err());
         let mut a = UploadAssembly::begin(&begin, shape, None, None, &mut seen).unwrap();
         assert!(a.accept(&p, FrameKind::Hello, 0, &[]).is_err());
+    }
+
+    #[test]
+    fn seed_wire_chunks_parse_and_modes_do_not_mix() {
+        use crate::ckks::encoding::Encoder;
+        use crate::ckks::encrypt::encrypt_sym_seeded;
+        use crate::ckks::keys::keygen;
+        use crate::ckks::serialize::ciphertext_seeded_to_bytes;
+        use crate::crypto::prng::ChaChaRng;
+        let p = std::sync::Arc::new(params());
+        let encoder = Encoder::new(p.clone());
+        let mut rng = ChaChaRng::from_seed(33, 0);
+        let (_pk, sk) = keygen(&p, &mut rng);
+        let m: Vec<f64> = (0..32).map(|i| (i as f64 * 0.01).sin()).collect();
+        let ct = encrypt_sym_seeded(&p, &sk, &encoder.encode(&m), m.len(), &mut rng);
+        let seeded = ciphertext_seeded_to_bytes(&ct);
+
+        // a seed-compressed chunk parses on the seed wire and stays lazy
+        let mut a = ChunkAssembler::new_with_wire(1, 0, 1, CtWire::Seed);
+        a.accept_ct(&p, 0, &seeded).unwrap();
+        let u = a.finish().unwrap();
+        assert!(u.cts[0].a_seed.is_some(), "seed wire keeps the ct lazy");
+
+        // the wire mode is pinned by the round: a seed-compressed chunk on
+        // a dense round is malformed, and a dense shard on a seed round is
+        // malformed — the payload never chooses its own format
+        let mut dense_round = ChunkAssembler::new(1, 0, 1);
+        assert!(dense_round.accept_ct(&p, 0, &seeded).is_err());
+        let mut seed_round = ChunkAssembler::new_with_wire(1, 0, 1, CtWire::Seed);
+        assert!(seed_round.accept_ct(&p, 0, &ct_bytes(&p)).is_err());
+
+        // a truncated seed-compressed chunk is rejected
+        let mut short = seeded.clone();
+        short.truncate(seeded.len() - 1);
+        let mut a = ChunkAssembler::new_with_wire(1, 0, 1, CtWire::Seed);
+        assert!(a.accept_ct(&p, 0, &short).is_err());
     }
 }

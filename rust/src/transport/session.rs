@@ -52,7 +52,7 @@ use super::intake::{
 };
 use crate::agg_engine::Arrival;
 use crate::ckks::serialize::ciphertext_shard_append;
-use crate::ckks::CkksParams;
+use crate::ckks::{CkksParams, CtWire};
 use crate::crypto::mac::{self, MacKey};
 use crate::crypto::prng::ChaChaRng;
 use crate::he_agg::{EncryptedUpdate, EncryptionMask};
@@ -216,6 +216,10 @@ struct HubShared {
     /// Task MAC root (`--wire-auth mac`): per-client keys derive from it;
     /// `None` = legacy unauthenticated wire.
     auth_root: Option<[u8; 32]>,
+    /// The task's ciphertext wire format (`--ct-wire`). Every HELLO must
+    /// announce the same mode or the handshake fails — a session can never
+    /// negotiate a per-client format.
+    ct_wire: CtWire,
     /// Replay state for mid-round rejoins.
     downlink: Mutex<DownlinkCache>,
 }
@@ -249,6 +253,19 @@ impl SessionHub {
         max_sessions: usize,
         auth_root: Option<[u8; 32]>,
     ) -> anyhow::Result<Self> {
+        Self::bind_full(addr, params, max_sessions, auth_root, CtWire::Dense)
+    }
+
+    /// [`Self::bind_with_auth`] with the task's ciphertext wire format
+    /// (`--ct-wire`): every joining client must announce the same mode in
+    /// its HELLO or the handshake fails.
+    pub fn bind_full(
+        addr: &str,
+        params: Arc<CkksParams>,
+        max_sessions: usize,
+        auth_root: Option<[u8; 32]>,
+        ct_wire: CtWire,
+    ) -> anyhow::Result<Self> {
         let listener = TcpListener::bind(addr)
             .map_err(|e| anyhow::anyhow!("cannot bind session hub on {addr}: {e}"))?;
         listener.set_nonblocking(true)?;
@@ -264,6 +281,7 @@ impl SessionHub {
             handshakes: AtomicUsize::new(0),
             io_timeout: Duration::from_secs(10),
             auth_root,
+            ct_wire,
             downlink: Mutex::new(DownlinkCache::default()),
         });
         let accept_shared = shared.clone();
@@ -781,8 +799,17 @@ fn handshake(shared: &HubShared, stream: TcpStream) -> anyhow::Result<()> {
         return Ok(());
     }
     anyhow::ensure!(kind == FrameKind::Hello, "expected HELLO, got {kind:?}");
-    let client = decode_hello(&sess.read_buf)?;
+    let (client, announced) = decode_hello(&sess.read_buf)?;
     anyhow::ensure!(client != UNIDENTIFIED_CLIENT, "client id {client} is reserved");
+    // the ciphertext wire format is a task-level setting, not negotiable
+    // per client: a mismatched announcement fails the handshake before any
+    // slot is touched, and the round completes from the clients that match
+    anyhow::ensure!(
+        announced == shared.ct_wire,
+        "client {client} announced ciphertext wire mode {}, task runs {}",
+        announced.as_str(),
+        shared.ct_wire.as_str()
+    );
     sess.client = client;
     // --wire-auth mac: challenge/response *before* the slot is touched. The
     // nonce is fresh OS entropy, so a recorded handshake never verifies
@@ -855,7 +882,7 @@ fn handshake(shared: &HubShared, stream: TcpStream) -> anyhow::Result<()> {
             CONTROL_ROUND,
             FrameKind::Welcome,
             0,
-            &encode_welcome(next),
+            &encode_welcome(next, shared.ct_wire),
             &mut sess.tx,
         )?;
         // Mid-round rejoin replay: still under the session guard (so a
@@ -966,6 +993,9 @@ pub struct SessionOpts {
     pub connect_retries: u32,
     /// Base backoff delay for connect retries.
     pub retry_base: Duration,
+    /// Ciphertext wire format announced in HELLO and used for uplink
+    /// CT_CHUNK frames (`--ct-wire`); must match the server's task setting.
+    pub ct_wire: CtWire,
 }
 
 impl Default for SessionOpts {
@@ -979,6 +1009,7 @@ impl Default for SessionOpts {
             chaos: None,
             connect_retries: 5,
             retry_base: Duration::from_millis(50),
+            ct_wire: CtWire::Dense,
         }
     }
 }
@@ -1070,7 +1101,9 @@ impl ClientSession {
             client,
             bytes_down: 0,
         };
-        sess.sink.send(FrameKind::Hello, 0, &encode_hello(client))?;
+        sess.sink.set_ct_wire(sess.opts.ct_wire);
+        sess.sink
+            .send(FrameKind::Hello, 0, &encode_hello(client, sess.opts.ct_wire))?;
         sess.sink.flush()?;
         if let Some(key) = sess.opts.auth.clone() {
             // server-nonce challenge/response (DESIGN.md §12): both
@@ -1093,7 +1126,13 @@ impl ClientSession {
         }
         let (kind, _) = sess.read_downlink_frame(CONTROL_ROUND, sess.opts.io_timeout)?;
         anyhow::ensure!(kind == FrameKind::Welcome, "expected WELCOME, got {kind:?}");
-        let next = decode_welcome(&sess.read_buf)?;
+        let (next, server_wire) = decode_welcome(&sess.read_buf)?;
+        anyhow::ensure!(
+            server_wire == sess.opts.ct_wire,
+            "server runs ciphertext wire mode {}, this client is configured for {}",
+            server_wire.as_str(),
+            sess.opts.ct_wire.as_str()
+        );
         Ok((sess, next))
     }
 
@@ -1575,6 +1614,130 @@ mod tests {
             .err()
             .expect("mac client must not pass a legacy handshake");
         assert!(err.to_string().contains("CHALLENGE"), "unexpected error: {err}");
+        hub.shutdown();
+    }
+
+    #[test]
+    fn ct_wire_mode_mismatch_fails_loudly() {
+        let c = ctx();
+        // dense hub, seed client: the handshake is refused before any slot
+        // is claimed
+        let mut hub = SessionHub::bind("127.0.0.1:0", c.params.clone(), 8).unwrap();
+        let addr = hub.local_addr().unwrap().to_string();
+        let opts = SessionOpts {
+            connect_retry: Duration::from_secs(2),
+            io_timeout: Duration::from_secs(2),
+            connect_retries: 0,
+            ct_wire: CtWire::Seed,
+            ..SessionOpts::default()
+        };
+        assert!(ClientSession::connect(&addr, 1, c.params.clone(), opts.clone()).is_err());
+        assert!(hub.connected().is_empty());
+        // the mismatch killed one connection, not the task: a matching
+        // client still joins
+        let (_ok, _) = ClientSession::connect(
+            &addr,
+            2,
+            c.params.clone(),
+            SessionOpts {
+                ct_wire: CtWire::Dense,
+                ..opts.clone()
+            },
+        )
+        .unwrap();
+        hub.wait_for_clients(1, Duration::from_secs(5)).unwrap();
+        assert_eq!(hub.connected(), vec![2]);
+        hub.shutdown();
+
+        // seed hub, dense client: same refusal in the other direction
+        let mut hub =
+            SessionHub::bind_full("127.0.0.1:0", c.params.clone(), 8, None, CtWire::Seed)
+                .unwrap();
+        let addr = hub.local_addr().unwrap().to_string();
+        let dense = SessionOpts {
+            ct_wire: CtWire::Dense,
+            ..opts
+        };
+        assert!(ClientSession::connect(&addr, 1, c.params.clone(), dense).is_err());
+        assert!(hub.connected().is_empty());
+        hub.shutdown();
+    }
+
+    #[test]
+    fn seed_wire_uploads_arrive_lazy_and_expand_bitwise() {
+        let c = ctx();
+        let codec = SelectiveCodec::new(c.clone());
+        let mut rng = ChaChaRng::from_seed(57, 0);
+        let (_pk, sk) = codec.ctx.keygen(&mut rng);
+        let total = 500usize;
+        let mask = EncryptionMask::full(total);
+        let shape = UpdateShape::for_round_wire(&codec.ctx, &mask, CtWire::Seed);
+        let mut hub =
+            SessionHub::bind_full("127.0.0.1:0", c.params.clone(), 8, None, CtWire::Seed)
+                .unwrap();
+        let addr = hub.local_addr().unwrap().to_string();
+        let model: Vec<f32> = (0..total).map(|i| (i as f32 * 0.003).cos()).collect();
+        let mut enc_rng = ChaChaRng::from_seed(300, 0);
+        let upd = codec.encrypt_update_keyed(
+            &model,
+            &mask,
+            crate::ckks::EncKey::SymSeeded(&sk),
+            &mut enc_rng,
+        );
+        let sent = upd.clone();
+        let client_thread = {
+            let params = c.params.clone();
+            std::thread::spawn(move || {
+                let (mut sess, _) = ClientSession::connect(
+                    &addr,
+                    0,
+                    params,
+                    SessionOpts {
+                        connect_retry: Duration::from_secs(5),
+                        ct_wire: CtWire::Seed,
+                        ..SessionOpts::default()
+                    },
+                )
+                .unwrap();
+                let receipt = sess.upload(4, 1.0, &upd, None).unwrap();
+                assert!(receipt.acked);
+                receipt.bytes_sent
+            })
+        };
+        hub.wait_for_clients(1, Duration::from_secs(5)).unwrap();
+        let outcome = hub.collect_round(
+            &[(0, Some(1.0))],
+            shape,
+            &IntakeConfig {
+                round_id: 4,
+                expected_uploads: 1,
+                quorum: None,
+                straggler_timeout: Duration::from_secs(5),
+                max_wait: Duration::from_secs(20),
+                io_timeout: Duration::from_secs(5),
+            },
+        );
+        let bytes_sent = client_thread.join().unwrap();
+        assert_eq!(outcome.arrivals.len(), 1);
+        assert!(outcome.failed.is_empty());
+        // the compressed upload is roughly half a dense one: seed + c0 vs
+        // c0 + c1 (64-byte header/seed overhead per ciphertext)
+        let dense_ct_bytes =
+            crate::ckks::serialize::shard_wire_bytes(&c.params, 0, c.params.num_limbs())
+                * sent.cts.len();
+        assert!(
+            (bytes_sent as usize) < dense_ct_bytes * 6 / 10,
+            "seed-wire upload {bytes_sent} bytes vs dense ct body {dense_ct_bytes}"
+        );
+        // server-side cts arrive lazy and expand bitwise to what was sent
+        let got = &outcome.arrivals[0].update;
+        for (g, s) in got.cts.iter().zip(sent.cts.iter()) {
+            assert!(g.a_seed.is_some(), "seed wire must deliver lazy cts");
+            let mut g = g.clone();
+            g.expand_a(&c.params);
+            assert_eq!(g.c0, s.c0);
+            assert_eq!(g.c1, s.c1);
+        }
         hub.shutdown();
     }
 }

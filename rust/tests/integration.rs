@@ -91,6 +91,9 @@ fn threshold_end_to_end() {
         rounds: 2,
         local_steps: 1,
         key_mode: KeyMode::Threshold,
+        // the seed wire needs a single decryption key; pin dense so the
+        // CI-wide FEDML_HE_CT_WIRE=seed rerun can't poison threshold mode
+        ct_wire: fedml_he::ckks::CtWire::Dense,
         backend: Backend::Native,
         selection: Selection::Random,
         ratio: 0.15,

@@ -5,7 +5,10 @@
 //! in-process `--transport sim` run with the same seed.
 //!
 //! Runs artifact-free (synthetic model); `CARGO_BIN_EXE_fedml-he` is built
-//! by cargo for integration tests.
+//! by cargo for integration tests. The same gate runs twice: once on the
+//! dense ciphertext wire and once under `--ct-wire seed`, where clients
+//! encrypt symmetrically and ship 32-byte a-part seeds the server expands
+//! lazily — the final model must not change by a single bit.
 
 use std::process::{Child, Command, Stdio};
 use std::time::{Duration, Instant};
@@ -31,9 +34,11 @@ fn wait_with_timeout(child: &mut Child, secs: u64, name: &str) -> std::process::
     }
 }
 
-#[test]
-fn serve_plus_three_join_processes_match_sim_bitwise() {
-    let dir = std::env::temp_dir().join(format!("fedml_he_mp_{}", std::process::id()));
+/// One full sim-vs-serve/join bitwise gate. `tag` keeps the scratch dirs of
+/// the dense and seed cases apart; `extra` is appended to every task
+/// invocation (same spec on both sides — the task key re-pins it anyway).
+fn run_bitwise_gate(tag: &str, extra: &[&str]) {
+    let dir = std::env::temp_dir().join(format!("fedml_he_mp_{tag}_{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
     let sim_model = dir.join("sim.bin");
     let serve_model = dir.join("serve.bin");
@@ -64,6 +69,7 @@ fn serve_plus_three_join_processes_match_sim_bitwise() {
     let status = Command::new(bin())
         .arg("run")
         .args(common)
+        .args(extra)
         .args(["--transport", "sim", "--out-model", sim_model.to_str().unwrap()])
         .stdout(Stdio::null())
         .status()
@@ -74,6 +80,7 @@ fn serve_plus_three_join_processes_match_sim_bitwise() {
     let mut serve = Command::new(bin())
         .arg("serve")
         .args(common)
+        .args(extra)
         .args([
             "--listen",
             "127.0.0.1:0",
@@ -136,4 +143,17 @@ fn serve_plus_three_join_processes_match_sim_bitwise() {
         );
     }
     std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn serve_plus_three_join_processes_match_sim_bitwise() {
+    run_bitwise_gate("dense", &[]);
+}
+
+/// Same gate on the seed-expanded wire: `join` picks the mode up from the
+/// task key, announces it at HELLO, uploads symmetric seeded ciphertexts,
+/// and the serve process expands a-parts lazily during aggregation.
+#[test]
+fn serve_plus_three_join_processes_match_sim_bitwise_seed_wire() {
+    run_bitwise_gate("seed", &["--ct-wire", "seed"]);
 }

@@ -217,6 +217,8 @@ fn run_report_envelope_schema_holds() {
         "hub_shard_sessions",
         "hub_write_queue_depth",
         "hub_write_queue_peak",
+        "ct_seed_expansions",
+        "uplink_bytes_saved",
         "spans_recorded",
         "spans_dropped",
     ] {

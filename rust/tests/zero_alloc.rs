@@ -80,6 +80,66 @@ fn hot_paths_are_allocation_free_after_warmup() {
 }
 
 #[test]
+fn seed_wire_encrypt_and_lazy_absorb_are_allocation_free_after_warmup() {
+    // Seed-expanded wire hot paths (§Perf): a warm client round of symmetric
+    // seeded encryption, and the server-side absorb of a lazily-parsed
+    // seeded ciphertext (its a-part regenerated from the 32-byte seed into
+    // the shard's pooled scratch), must both stay off the allocator.
+    use fedml_he::agg_engine::{ShardAccumulator, ShardPlan};
+    use fedml_he::ckks::encrypt_sym_seeded_into;
+    use fedml_he::ckks::serialize::{ciphertext_seeded_from_bytes, ciphertext_seeded_to_bytes};
+    let params = CkksParams::new(256, 3, 30).unwrap();
+    let mut rng = ChaChaRng::from_seed(7, 0);
+    let (_pk, sk) = keygen(&params, &mut rng);
+    let coeffs: Vec<i64> = (0..params.n).map(|i| (i as i64 % 13) - 6).collect();
+    let pt = RnsPoly::from_signed(&params, &coeffs);
+    let mut scratch = CkksScratch::new(&params);
+    let mut ct = Ciphertext::zero(&params);
+
+    // Client side: warm-up fills the pooled error buffer, then the measured
+    // seeded encrypts draw only from caller-owned storage.
+    encrypt_sym_seeded_into(&params, &sk, &pt, 128, &mut rng, &mut scratch, &mut ct);
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for _ in 0..16 {
+        encrypt_sym_seeded_into(&params, &sk, &pt, 128, &mut rng, &mut scratch, &mut ct);
+    }
+    let after = ALLOCS.load(Ordering::Relaxed);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state seeded encrypt allocated {} time(s)",
+        after - before
+    );
+
+    // Server side: round-trip through the compressed wire so the parsed twin
+    // is lazy (seed kept, empty c1) — exactly what aggregation absorbs.
+    let lazy = ciphertext_seeded_from_bytes(&ciphertext_seeded_to_bytes(&ct), &params).unwrap();
+    assert!(lazy.a_seed.is_some());
+    assert_eq!(lazy.c1.num_limbs(), 0);
+    let upd = EncryptedUpdate {
+        cts: vec![lazy],
+        plain: Vec::new(),
+        total: 128,
+    };
+    let plan = ShardPlan::new(1, 1, params.num_limbs(), 0);
+    let mut acc = ShardAccumulator::new(&plan, 0, &params);
+    let w = params.encode_weight(0.25);
+    acc.absorb(&upd, &w); // warm-up for symmetry with the client half
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for _ in 0..16 {
+        acc.absorb(&upd, &w);
+    }
+    let after = ALLOCS.load(Ordering::Relaxed);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state lazy seeded absorb allocated {} time(s)",
+        after - before
+    );
+    assert_eq!(acc.absorbed(), 17);
+}
+
+#[test]
 fn warm_arena_rounds_stop_allocating_ciphertext_buffers() {
     // Pooled-ciphertext gate (§Perf): once the arena holds one round's
     // buffers, subsequent rounds draw every output ciphertext from the pool
